@@ -1,0 +1,53 @@
+//! Quickstart: train a 4-bit fastscan index, search it, check recall.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use armpq::datasets::SyntheticDataset;
+use armpq::eval::{ground_truth, recall_at_r};
+use armpq::index::index_factory;
+use armpq::util::timer::Timer;
+
+fn main() -> armpq::Result<()> {
+    // 1. A SIFT-like dataset (synthetic stand-in for SIFT1M; see DESIGN.md).
+    let ds = SyntheticDataset::sift_like(50_000, 100, 42);
+    println!("dataset: n={} nq={} dim={}", ds.n(), ds.nq(), ds.dim);
+
+    // 2. The paper's index: 4-bit PQ (M=16, K=16) with the SIMD fastscan
+    //    kernel. The factory string mirrors faiss ("PQ16x4fs").
+    let mut index = index_factory(ds.dim, "PQ16x4fs")?;
+    let t = Timer::start();
+    index.train(&ds.train)?;
+    index.add(&ds.base)?;
+    println!("built {} in {:.1}s", index.describe(), t.elapsed_s());
+
+    // 3. Search all queries.
+    let t = Timer::start();
+    let result = index.search(&ds.queries, 10)?;
+    let ms = t.elapsed_ms() / ds.nq() as f64;
+    println!("search: {:.3} ms/query ({:.0} QPS single-thread)", ms, 1e3 / ms);
+
+    // 4. Accuracy against exact ground truth.
+    let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+    println!(
+        "recall@1 = {:.3}, recall@10 = {:.3}",
+        recall_at_r(&gt, 1, &result.labels, 10, 1),
+        recall_at_r(&gt, 1, &result.labels, 10, 10),
+    );
+
+    // 5. Compare against the naive-PQ baseline on the same codes.
+    let mut naive = index_factory(ds.dim, "PQ16x4")?;
+    naive.train(&ds.train)?;
+    naive.add(&ds.base)?;
+    let t = Timer::start();
+    let rn = naive.search(&ds.queries, 10)?;
+    let ms_naive = t.elapsed_ms() / ds.nq() as f64;
+    println!(
+        "baseline PQ16x4 (naive scan): {:.3} ms/query — fastscan speedup {:.1}x at recall {:.3}",
+        ms_naive,
+        ms_naive / ms,
+        recall_at_r(&gt, 1, &rn.labels, 10, 1),
+    );
+    Ok(())
+}

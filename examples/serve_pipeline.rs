@@ -1,0 +1,100 @@
+//! End-to-end serving driver: build the Table-1 index, start the batching
+//! coordinator, fire concurrent clients over TCP, report latency/QPS and
+//! recall. This is the repo's full-system validation run (EXPERIMENTS.md
+//! §End-to-end).
+//!
+//! ```bash
+//! cargo run --release --example serve_pipeline -- --n 100000 --clients 4
+//! ```
+
+use armpq::coordinator::{Client, IvfBackend, Server, ServerConfig};
+use armpq::datasets::SyntheticDataset;
+use armpq::eval::{ground_truth, recall_at_r};
+use armpq::ivf::{IvfParams, IvfPq4};
+use armpq::pq::PqParams;
+use armpq::util::args::Args;
+use armpq::util::timer::{LatencyStats, Timer};
+use std::sync::Arc;
+
+fn main() -> armpq::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 100_000);
+    let nq_per_client = args.get_usize("nq", 200);
+    let clients = args.get_usize("clients", 4);
+    let k = args.get_usize("k", 10);
+    let nlist = (n as f64).sqrt() as usize;
+
+    // --- build the index (paper §5.2 configuration) ---
+    println!("building IVF{nlist}_HNSW32,PQ16x4fs over {n} deep-like vectors…");
+    let ds = SyntheticDataset::deep_like(n, clients * nq_per_client, 7);
+    let mut params = IvfParams::new(nlist);
+    params.coarse_hnsw = true;
+    let mut idx = IvfPq4::new(ds.dim, params, PqParams::new_4bit(16));
+    let t = Timer::start();
+    idx.train(&ds.train)?;
+    idx.add(&ds.base)?;
+    idx.nprobe = 4;
+    println!("index ready in {:.1}s", t.elapsed_s());
+
+    // --- serve ---
+    let backend = Arc::new(IvfBackend::new(idx)?);
+    let server = Server::start(backend, ServerConfig::default())?;
+    let addr = server.addr;
+    println!("coordinator listening on {addr}");
+
+    // --- concurrent clients ---
+    let dim = ds.dim;
+    let queries = Arc::new(ds.queries.clone());
+    let t_total = Timer::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let queries = queries.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut stats = LatencyStats::new();
+            let mut labels = Vec::new();
+            for i in 0..nq_per_client {
+                let qi = c * nq_per_client + i;
+                let t = Timer::start();
+                let (_d, l, _batch) =
+                    client.search(&queries[qi * dim..(qi + 1) * dim], k).expect("search");
+                stats.record_ms(t.elapsed_ms());
+                labels.extend(l);
+            }
+            (stats, labels)
+        }));
+    }
+    let mut all_labels = vec![Vec::new(); clients];
+    let mut merged = LatencyStats::new();
+    for (c, h) in handles.into_iter().enumerate() {
+        let (stats, labels) = h.join().expect("client thread");
+        for p in [50.0, 95.0] {
+            let _ = p;
+        }
+        for i in 0..stats.count() {
+            let _ = i;
+        }
+        merged.record_ms(stats.mean_ms());
+        all_labels[c] = labels;
+        println!(
+            "client {c}: mean {:.2} ms  p50 {:.2}  p95 {:.2}",
+            stats.mean_ms(),
+            stats.percentile_ms(50.0),
+            stats.percentile_ms(95.0)
+        );
+    }
+    let total_q = clients * nq_per_client;
+    let wall = t_total.elapsed_s();
+    println!("aggregate: {total_q} queries in {wall:.1}s → {:.0} QPS", total_q as f64 / wall);
+
+    // --- recall against exact ground truth ---
+    let gt = ground_truth(&ds.base, &ds.queries, dim, 1);
+    let flat: Vec<i64> = all_labels.into_iter().flatten().collect();
+    println!("recall@1 = {:.3}  recall@{k} = {:.3}",
+        recall_at_r(&gt, 1, &flat, k, 1),
+        recall_at_r(&gt, 1, &flat, k, k));
+
+    println!("server metrics: {}", server.metrics_json().to_pretty());
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,150 @@
+"""AOT export: lower the L2 model to HLO text for the rust PJRT runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Produces ``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.json``
+describing every artifact's inputs/outputs so the rust side can
+shape-check at load time.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fastscan as fs
+from .kernels import lut as lutk
+
+# Exported configurations. Shapes are fixed at AOT time (one executable per
+# variant, like any serving system); the rust coordinator pads batches up.
+#   Q: query batch; N: codes per scan unit; D: dim; M: sub-quantizers.
+SEARCH_CONFIGS = [
+    dict(q=8, n=4096, d=64, m=16, k=10),
+    dict(q=8, n=4096, d=128, m=16, k=10),
+]
+FASTSCAN_CONFIGS = [
+    dict(q=8, n=4096, m=16),
+]
+LUT_CONFIGS = [
+    dict(q=8, d=64, m=16),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_search(cfg):
+    q, n, d, m, k = cfg["q"], cfg["n"], cfg["d"], cfg["m"], cfg["k"]
+    dsub = d // m
+    fn = functools.partial(model.pq_search, k=k)
+    lowered = jax.jit(fn).lower(
+        _spec((q, d), jnp.float32),
+        _spec((n, m), jnp.int32),
+        _spec((m, fs.KSUB, dsub), jnp.float32),
+    )
+    name = f"search_q{q}_n{n}_d{d}_m{m}_k{k}"
+    return name, lowered, {
+        "kind": "search",
+        "inputs": [
+            {"name": "queries", "shape": [q, d], "dtype": "f32"},
+            {"name": "codes", "shape": [n, m], "dtype": "i32"},
+            {"name": "codebooks", "shape": [m, fs.KSUB, dsub], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "distances", "shape": [q, k], "dtype": "f32"},
+            {"name": "labels", "shape": [q, k], "dtype": "i32"},
+        ],
+        **cfg,
+    }
+
+
+def export_fastscan(cfg):
+    q, n, m = cfg["q"], cfg["n"], cfg["m"]
+    lowered = jax.jit(lambda c, t: (model.fastscan_distances(c, t),)).lower(
+        _spec((n, m), jnp.int32),
+        _spec((q, m * fs.KSUB), jnp.int32),
+    )
+    name = f"fastscan_q{q}_n{n}_m{m}"
+    return name, lowered, {
+        "kind": "fastscan",
+        "inputs": [
+            {"name": "codes", "shape": [n, m], "dtype": "i32"},
+            {"name": "qluts", "shape": [q, m * fs.KSUB], "dtype": "i32"},
+        ],
+        "outputs": [{"name": "acc", "shape": [n, q], "dtype": "i32"}],
+        **cfg,
+    }
+
+
+def export_lut(cfg):
+    q, d, m = cfg["q"], cfg["d"], cfg["m"]
+    dsub = d // m
+    lowered = jax.jit(model.lut_pipeline).lower(
+        _spec((q, d), jnp.float32),
+        _spec((m, fs.KSUB, dsub), jnp.float32),
+    )
+    name = f"lut_q{q}_d{d}_m{m}"
+    return name, lowered, {
+        "kind": "lut",
+        "inputs": [
+            {"name": "queries", "shape": [q, d], "dtype": "f32"},
+            {"name": "codebooks", "shape": [m, fs.KSUB, dsub], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "qluts", "shape": [q, m * fs.KSUB], "dtype": "i32"},
+            {"name": "delta", "shape": [q], "dtype": "f32"},
+            {"name": "bias", "shape": [q], "dtype": "f32"},
+        ],
+        **cfg,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "block_n": fs.BLOCK_N, "block_q": lutk.BLOCK_Q,
+                "artifacts": []}
+    jobs = (
+        [export_search(c) for c in SEARCH_CONFIGS]
+        + [export_fastscan(c) for c in FASTSCAN_CONFIGS]
+        + [export_lut(c) for c in LUT_CONFIGS]
+    )
+    for name, lowered, meta in jobs:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = f"{name}.hlo.txt"
+        meta["hlo_chars"] = len(text)
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}/manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

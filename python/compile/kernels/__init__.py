@@ -1,0 +1,11 @@
+"""L1 Pallas kernels: the paper's compute hot-spot on TPU-shaped hardware.
+
+`fastscan.py` is the 4-bit-PQ lookup kernel re-thought for the MXU (see
+DESIGN.md par. Hardware-Adaptation); `lut.py` builds the per-query distance
+tables; `ref.py` is the pure-jnp oracle both are tested against.
+
+All kernels are lowered with ``interpret=True`` -- the CPU PJRT plugin used
+by the rust runtime cannot execute Mosaic custom-calls.
+"""
+
+from . import fastscan, lut, ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""Pallas fastscan kernel: 4-bit-PQ lookup re-thought for the TPU MXU.
+
+Hardware adaptation of the paper's §3 (see DESIGN.md §Hardware-Adaptation):
+
+* The paper keeps the 16-entry u8 tables **register-resident** and turns
+  the table lookup into an in-register parallel shuffle (two ``vqtbl1q_u8``
+  = one virtual 256-bit ``_mm256_shuffle_epi8``).
+* A TPU has no byte shuffle, but the same locality insight maps to VMEM +
+  MXU: the quantized tables stay **VMEM-resident across all grid steps**
+  (``BlockSpec`` index map pins them), and the 16-way lookup becomes a
+  **one-hot × table matmul**, the MXU's native parallel primitive.
+* Where the paper fuses *two* sub-quantizer tables per 256-bit shuffle,
+  the MXU contraction fuses **all M tables at once**: the one-hot code
+  matrix is reshaped to ``(block_n, M·16)`` and contracted against the
+  flattened tables in one ``dot`` — the natural widening of the paper's
+  pair-bundling to a 128×128 systolic array.
+* Batching Q queries turns the scan into a dense
+  ``(block_n, M·16) × (M·16, Q)`` matmul — the register trick becomes a
+  roofline-friendly GEMM.
+
+Accumulation is int32 (MXU-native), which cannot saturate for any
+``M ≤ 256`` (max Σ = 256·255 ≪ 2³¹), so no clamping is needed — this is
+checked against the NEON u16 semantics in the rust tests by keeping
+M·255 < 65 536 in exported configurations.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Codes processed per grid step. 512 × (M·16) one-hot bytes ≈ 128 KiB at
+# M=16 — comfortably inside a 16 MiB VMEM budget together with the tables.
+BLOCK_N = 512
+
+KSUB = 16  # 4-bit codes: the paper's K
+
+
+def _fastscan_block_kernel(codes_ref, luts_ref, out_ref, *, m: int):
+    """One grid step: (block_n, m) codes × (q, m·16) tables → (block_n, q).
+
+    codes_ref : i32[block_n, m]   — VMEM block of unpacked 4-bit codes
+    luts_ref  : i32[q, m·16]      — u8-valued tables, VMEM-resident
+    out_ref   : i32[block_n, q]
+    """
+    codes = codes_ref[...]  # (bn, m)
+    bn = codes.shape[0]
+    # one-hot over the 16 codewords; (bn, m, 16)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, m, KSUB), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)
+    # fuse all m tables into one contraction (paper: 2 per shuffle)
+    onehot2 = onehot.reshape(bn, m * KSUB)
+    luts = luts_ref[...].astype(jnp.float32)  # (q, m·16)
+    acc = jnp.dot(onehot2, luts.T)  # MXU: (bn, q)
+    out_ref[...] = acc.astype(jnp.int32)
+
+
+def fastscan(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """Quantized ADC accumulation for all codes against all query tables.
+
+    codes : i32[N, M] with values in [0, 16); N must be a multiple of
+            ``BLOCK_N`` (the L2 model pads).
+    luts  : i32[Q, M·16] with values in [0, 256) (u8 tables widened).
+    Returns i32[N, Q].
+    """
+    n, m = codes.shape
+    q, mk = luts.shape
+    assert mk == m * KSUB, (mk, m)
+    assert n % BLOCK_N == 0, f"N={n} must be a multiple of {BLOCK_N}"
+    grid = (n // BLOCK_N,)
+    kernel = functools.partial(_fastscan_block_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, m), lambda i: (i, 0)),  # stream codes
+            pl.BlockSpec((q, mk), lambda i: (0, 0)),  # tables pinned in VMEM
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, q), jnp.int32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(codes, luts)
+
+
+def vmem_bytes_estimate(m: int, q: int) -> int:
+    """Static VMEM footprint of one grid step (for DESIGN.md §Perf).
+
+    one-hot f32 + codes i32 + tables f32 + out i32.
+    """
+    onehot = BLOCK_N * m * KSUB * 4
+    codes = BLOCK_N * m * 4
+    luts = q * m * KSUB * 4
+    out = BLOCK_N * q * 4
+    return onehot + codes + luts + out

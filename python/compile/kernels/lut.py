@@ -1,0 +1,57 @@
+"""Pallas LUT-construction kernel: per-query ADC distance tables.
+
+Paper Eq. 2 (extended from VQ to PQ): ``T[q, m, k] = ||q_m − c_{m,k}||²``.
+Built once per query batch, then scalar-quantized by the L2 model into the
+u8 tables the fastscan kernel consumes.
+
+Blocked over the query batch; the codebooks (M×16×dsub, a few KiB) are
+pinned in VMEM across grid steps, mirroring how the scan kernel pins the
+quantized tables.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fastscan import KSUB
+
+# Queries per grid step.
+BLOCK_Q = 8
+
+
+def _lut_block_kernel(q_ref, cb_ref, out_ref, *, m: int, dsub: int):
+    """q_ref: f32[bq, m·dsub]; cb_ref: f32[m, 16·dsub]; out: f32[bq, m·16]."""
+    bq = q_ref.shape[0]
+    q = q_ref[...].reshape(bq, m, 1, dsub)
+    cb = cb_ref[...].reshape(1, m, KSUB, dsub)
+    diff = q - cb  # (bq, m, 16, dsub)
+    out_ref[...] = jnp.sum(diff * diff, axis=-1).reshape(bq, m * KSUB)
+
+
+def build_luts(queries: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """f32 ADC tables for a query batch.
+
+    queries   : f32[Q, D] with Q a multiple of ``BLOCK_Q`` (model pads)
+    codebooks : f32[M, 16, dsub] with M·dsub == D
+    Returns f32[Q, M·16].
+    """
+    nq, d = queries.shape
+    m, ksub, dsub = codebooks.shape
+    assert ksub == KSUB
+    assert m * dsub == d, (m, dsub, d)
+    assert nq % BLOCK_Q == 0, f"Q={nq} must be a multiple of {BLOCK_Q}"
+    cb_flat = codebooks.reshape(m, ksub * dsub)
+    kernel = functools.partial(_lut_block_kernel, m=m, dsub=dsub)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq // BLOCK_Q,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_Q, d), lambda i: (i, 0)),  # stream queries
+            pl.BlockSpec((m, ksub * dsub), lambda i: (0, 0)),  # codebooks pinned
+        ],
+        out_specs=pl.BlockSpec((BLOCK_Q, m * KSUB), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, m * KSUB), jnp.float32),
+        interpret=True,
+    )(queries, cb_flat)

@@ -1,0 +1,75 @@
+"""L2: the JAX compute graph for the batched 4-bit PQ search.
+
+Composes the L1 Pallas kernels into the full per-query-batch pipeline the
+rust coordinator executes through PJRT:
+
+    queries ──► build_luts (L1) ──► quantize (Eq. 4) ──► fastscan (L1)
+            ──► decode ──► top-k
+
+Everything here runs only at ``make artifacts`` time; ``aot.py`` lowers
+these functions to HLO text which ``rust/src/runtime`` loads and executes.
+The quantization scheme matches ``rust/src/pq/lut.rs`` exactly so both
+hot paths produce the same integer accumulations.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fastscan as fs
+from .kernels import lut as lutk
+
+
+def quantize_luts(luts: jax.Array):
+    """Scalar-quantize f32 tables to u8-valued i32 (paper Eq. 4).
+
+    luts: f32[Q, M·16]. Per query: per-table bias (min entry), one global
+    scale Δ = max table range / 255. Returns (qluts i32[Q, M·16],
+    delta f32[Q], bias f32[Q]). Matches ``rust/src/pq/lut.rs``.
+    """
+    nq, mk = luts.shape
+    m = mk // fs.KSUB
+    t = luts.reshape(nq, m, fs.KSUB)
+    mins = jnp.min(t, axis=2, keepdims=True)  # (Q, M, 1)
+    ranges = jnp.max(t - mins, axis=(1, 2))  # (Q,)
+    delta = jnp.where(ranges > 0, ranges / 255.0, 1.0)
+    q = jnp.round((t - mins) / delta[:, None, None])
+    qluts = jnp.clip(q, 0, 255).astype(jnp.int32).reshape(nq, mk)
+    bias = jnp.sum(mins, axis=(1, 2))
+    return qluts, delta, bias
+
+
+def pq_search(queries: jax.Array, codes: jax.Array, codebooks: jax.Array, k: int):
+    """Batched 4-bit PQ search (quantized scan + top-k + affine decode).
+
+    queries   : f32[Q, D]      (Q multiple of BLOCK_Q)
+    codes     : i32[N, M]      (N multiple of BLOCK_N, values < 16)
+    codebooks : f32[M, 16, dsub]
+    Returns (dists f32[Q, k], labels i32[Q, k]).
+
+    Top-k is taken on the quantized distances (like the rust reservoir with
+    rerank disabled); distances are decoded with the affine (Δ, bias).
+    """
+    luts = lutk.build_luts(queries, codebooks)  # (Q, M·16) f32
+    qluts, delta, bias = quantize_luts(luts)
+    acc = fs.fastscan(codes, qluts)  # (N, Q) i32
+    dec = acc.T.astype(jnp.float32) * delta[:, None] + bias[:, None]  # (Q, N)
+    # top-k via full sort rather than lax.top_k: the TopK HLO op carries a
+    # `largest=` attribute that xla_extension 0.5.1's text parser rejects,
+    # while sort round-trips cleanly through the HLO-text bridge.
+    idx = jnp.argsort(dec, axis=1)[:, :k]
+    d = jnp.take_along_axis(dec, idx, axis=1)
+    return d, idx.astype(jnp.int32)
+
+
+def fastscan_distances(codes: jax.Array, qluts: jax.Array):
+    """Bare quantized scan (the L1 kernel as an exported unit): i32[N, Q]."""
+    return fs.fastscan(codes, qluts)
+
+
+def lut_pipeline(queries: jax.Array, codebooks: jax.Array):
+    """LUT build + quantization as an exported unit.
+
+    Returns (qluts i32[Q, M·16], delta f32[Q], bias f32[Q]).
+    """
+    luts = lutk.build_luts(queries, codebooks)
+    return quantize_luts(luts)

@@ -1,0 +1,156 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-numpy oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fastscan as fs
+from compile.kernels import lut as lutk
+from compile.kernels import ref
+
+
+def _random_problem(rng, n, m, q, d_sub=4):
+    codes = rng.integers(0, fs.KSUB, size=(n, m), dtype=np.int32)
+    qluts = rng.integers(0, 256, size=(q, m * fs.KSUB), dtype=np.int32)
+    return codes, qluts
+
+
+class TestFastScanKernel:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        codes, qluts = _random_problem(rng, n=fs.BLOCK_N * 2, m=16, q=8)
+        got = np.asarray(fs.fastscan(jnp.asarray(codes), jnp.asarray(qluts)))
+        expect = ref.ref_fastscan(codes, qluts.reshape(8, 16, fs.KSUB).astype(np.uint8))
+        np.testing.assert_array_equal(got, expect)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(2)
+        codes, qluts = _random_problem(rng, n=fs.BLOCK_N, m=4, q=1)
+        got = np.asarray(fs.fastscan(jnp.asarray(codes), jnp.asarray(qluts)))
+        expect = ref.ref_fastscan(codes, qluts.reshape(1, 4, fs.KSUB).astype(np.uint8))
+        np.testing.assert_array_equal(got, expect)
+
+    def test_rejects_unaligned_n(self):
+        rng = np.random.default_rng(3)
+        codes, qluts = _random_problem(rng, n=100, m=4, q=1)
+        with pytest.raises(AssertionError):
+            fs.fastscan(jnp.asarray(codes), jnp.asarray(qluts))
+
+    def test_extreme_values(self):
+        # all codes point at the max table entry: acc = m * 255
+        m, q = 8, 2
+        codes = np.full((fs.BLOCK_N, m), 7, dtype=np.int32)
+        qluts = np.zeros((q, m * fs.KSUB), dtype=np.int32)
+        qluts[:, 7::fs.KSUB] = 255
+        got = np.asarray(fs.fastscan(jnp.asarray(codes), jnp.asarray(qluts)))
+        assert (got == m * 255).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=32),
+        q=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_shapes(self, m, q, seed):
+        rng = np.random.default_rng(seed)
+        codes, qluts = _random_problem(rng, n=fs.BLOCK_N, m=m, q=q)
+        got = np.asarray(fs.fastscan(jnp.asarray(codes), jnp.asarray(qluts)))
+        expect = ref.ref_fastscan(codes, qluts.reshape(q, m, fs.KSUB).astype(np.uint8))
+        np.testing.assert_array_equal(got, expect)
+
+    def test_vmem_estimate_within_budget(self):
+        # structural perf check recorded in DESIGN.md §Perf
+        assert fs.vmem_bytes_estimate(m=16, q=8) < 16 * 2**20
+
+
+class TestLutKernel:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(4)
+        q, m, dsub = lutk.BLOCK_Q, 8, 4
+        queries = rng.normal(size=(q, m * dsub)).astype(np.float32)
+        codebooks = rng.normal(size=(m, fs.KSUB, dsub)).astype(np.float32)
+        got = np.asarray(lutk.build_luts(jnp.asarray(queries), jnp.asarray(codebooks)))
+        expect = ref.ref_luts(queries, codebooks).reshape(q, m * fs.KSUB)
+        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+    def test_multi_block(self):
+        rng = np.random.default_rng(5)
+        q, m, dsub = lutk.BLOCK_Q * 3, 4, 8
+        queries = rng.normal(size=(q, m * dsub)).astype(np.float32)
+        codebooks = rng.normal(size=(m, fs.KSUB, dsub)).astype(np.float32)
+        got = np.asarray(lutk.build_luts(jnp.asarray(queries), jnp.asarray(codebooks)))
+        expect = ref.ref_luts(queries, codebooks).reshape(q, m * fs.KSUB)
+        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+    def test_zero_distance_at_codeword(self):
+        # a query equal to codeword (m, k) must have T[m, k] == 0
+        rng = np.random.default_rng(6)
+        m, dsub = 4, 4
+        codebooks = rng.normal(size=(m, fs.KSUB, dsub)).astype(np.float32)
+        query = codebooks[:, 3, :].reshape(1, m * dsub)  # pick k=3 from each m
+        queries = np.repeat(query, lutk.BLOCK_Q, axis=0).astype(np.float32)
+        luts = np.asarray(
+            lutk.build_luts(jnp.asarray(queries), jnp.asarray(codebooks))
+        ).reshape(lutk.BLOCK_Q, m, fs.KSUB)
+        np.testing.assert_allclose(luts[:, np.arange(m), 3], 0.0, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([1, 2, 4, 8, 16]),
+        dsub=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_shapes(self, m, dsub, seed):
+        rng = np.random.default_rng(seed)
+        queries = rng.normal(size=(lutk.BLOCK_Q, m * dsub)).astype(np.float32)
+        codebooks = rng.normal(size=(m, fs.KSUB, dsub)).astype(np.float32)
+        got = np.asarray(lutk.build_luts(jnp.asarray(queries), jnp.asarray(codebooks)))
+        expect = ref.ref_luts(queries, codebooks).reshape(lutk.BLOCK_Q, m * fs.KSUB)
+        np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-4)
+
+
+class TestRefInternalConsistency:
+    """The oracle itself must satisfy the analytic identities."""
+
+    def test_quantize_bounds(self):
+        rng = np.random.default_rng(7)
+        luts = rng.uniform(1.0, 9.0, size=(3, 8, fs.KSUB)).astype(np.float32)
+        qluts, delta, bias = ref.ref_quantize(luts)
+        assert qluts.dtype == np.uint8
+        # per-row min is 0; global max is 255
+        assert (qluts.min(axis=2) == 0).all()
+        assert qluts.max() == 255
+        # decode error bounded by M * delta / 2 per accumulation
+        codes = rng.integers(0, fs.KSUB, size=(50, 8))
+        acc = ref.ref_fastscan(codes, qluts)
+        dec = ref.ref_decode(acc, delta, bias)
+        exact = ref.ref_adc_exact(codes, luts)
+        bound = 0.5 * delta * 8 + 1e-4
+        assert (np.abs(dec - exact) <= bound[None, :] + 1e-3).all()
+
+    def test_adc_exact_equals_norm(self):
+        rng = np.random.default_rng(8)
+        m, dsub = 4, 4
+        codebooks = rng.normal(size=(m, fs.KSUB, dsub)).astype(np.float32)
+        queries = rng.normal(size=(2, m * dsub)).astype(np.float32)
+        codes = rng.integers(0, fs.KSUB, size=(10, m))
+        luts = ref.ref_luts(queries, codebooks)
+        d = ref.ref_adc_exact(codes, luts)
+        # reconstruct and verify
+        for n in range(10):
+            rec = np.concatenate([codebooks[mm, codes[n, mm]] for mm in range(m)])
+            for q in range(2):
+                direct = np.sum((queries[q] - rec) ** 2)
+                np.testing.assert_allclose(d[n, q], direct, rtol=1e-4)
+
+    def test_search_returns_sorted(self):
+        rng = np.random.default_rng(9)
+        m, dsub = 4, 4
+        codebooks = rng.normal(size=(m, fs.KSUB, dsub)).astype(np.float32)
+        queries = rng.normal(size=(4, m * dsub)).astype(np.float32)
+        codes = rng.integers(0, fs.KSUB, size=(128, m))
+        d, idx = ref.ref_search(queries, codes, codebooks, k=5)
+        assert d.shape == (4, 5) and idx.shape == (4, 5)
+        assert (np.diff(d, axis=1) >= -1e-6).all()
+        assert ((idx >= 0) & (idx < 128)).all()

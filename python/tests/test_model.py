@@ -1,0 +1,135 @@
+"""L2 model correctness: the composed pipeline vs the oracle, plus the
+AOT lowering path (HLO text generation) on a small variant."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import fastscan as fs
+from compile.kernels import lut as lutk
+from compile.kernels import ref
+
+
+def _problem(seed, q=lutk.BLOCK_Q, n=fs.BLOCK_N, m=8, dsub=4):
+    rng = np.random.default_rng(seed)
+    queries = rng.normal(size=(q, m * dsub)).astype(np.float32)
+    codebooks = rng.normal(size=(m, fs.KSUB, dsub)).astype(np.float32)
+    codes = rng.integers(0, fs.KSUB, size=(n, m), dtype=np.int32)
+    return queries, codes, codebooks
+
+
+class TestQuantizeLuts:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(11)
+        luts = rng.uniform(0.5, 7.0, size=(4, 8 * fs.KSUB)).astype(np.float32)
+        q_got, d_got, b_got = model.quantize_luts(jnp.asarray(luts))
+        q_exp, d_exp, b_exp = ref.ref_quantize(luts.reshape(4, 8, fs.KSUB))
+        np.testing.assert_array_equal(
+            np.asarray(q_got).reshape(4, 8, fs.KSUB), q_exp.astype(np.int32)
+        )
+        np.testing.assert_allclose(np.asarray(d_got), d_exp, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(b_got), b_exp, rtol=1e-5, atol=1e-5)
+
+    def test_constant_tables(self):
+        luts = np.full((2, 4 * fs.KSUB), 3.0, dtype=np.float32)
+        q, d, b = model.quantize_luts(jnp.asarray(luts))
+        assert (np.asarray(q) == 0).all()
+        np.testing.assert_allclose(np.asarray(d), 1.0)
+        np.testing.assert_allclose(np.asarray(b), 12.0)  # 4 tables × 3.0
+
+
+class TestPqSearch:
+    def test_pipeline_matches_oracle(self):
+        queries, codes, codebooks = _problem(12)
+        d_got, i_got = model.pq_search(
+            jnp.asarray(queries), jnp.asarray(codes), jnp.asarray(codebooks), k=10
+        )
+        # oracle: quantized top-k, then compare *quantized decode* ordering
+        luts = ref.ref_luts(queries, codebooks)
+        qluts, delta, bias = ref.ref_quantize(luts)
+        acc = ref.ref_fastscan(codes, qluts)
+        dec = ref.ref_decode(acc, delta, bias).T  # (Q, N)
+        i_got = np.asarray(i_got)
+        d_got = np.asarray(d_got)
+        for q in range(queries.shape[0]):
+            kth = np.sort(dec[q])[9]
+            # every returned candidate is within the quantized top-k set
+            assert (dec[q][i_got[q]] <= kth + 1e-4).all()
+            # decoded distances match the oracle's decode for those ids
+            np.testing.assert_allclose(d_got[q], dec[q][i_got[q]], rtol=1e-5, atol=1e-4)
+
+    def test_self_query_found(self):
+        # a query equal to the reconstruction of code row 7 must rank it first
+        queries, codes, codebooks = _problem(13, m=4, dsub=8)
+        rec = np.concatenate([codebooks[m, codes[7, m]] for m in range(4)])
+        queries[0] = rec
+        d, i = model.pq_search(
+            jnp.asarray(queries), jnp.asarray(codes), jnp.asarray(codebooks), k=5
+        )
+        i = np.asarray(i)
+        d = np.asarray(d)
+        # row 7 (or an identical-code row) at distance ~0
+        assert d[0, 0] < 1e-3, d[0]
+        got_codes = codes[i[0, 0]]
+        np.testing.assert_array_equal(got_codes, codes[7])
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        m=st.sampled_from([2, 4, 8, 16]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_pipeline_decode_error(self, m, seed):
+        # decoded top-1 distance within quantization bound of exact ADC best
+        queries, codes, codebooks = _problem(seed, m=m, dsub=2)
+        d, i = model.pq_search(
+            jnp.asarray(queries), jnp.asarray(codes), jnp.asarray(codebooks), k=1
+        )
+        luts = ref.ref_luts(queries, codebooks)
+        exact = ref.ref_adc_exact(codes, luts).T  # (Q, N)
+        _, delta, _ = ref.ref_quantize(luts)
+        bound = delta * m + 1e-3  # decode err (M·Δ/2) + selection err (M·Δ/2)
+        best = exact.min(axis=1)
+        assert (np.asarray(d)[:, 0] <= best + bound).all()
+
+
+class TestAotLowering:
+    """The HLO-text bridge must lower cleanly (small variant, in-process)."""
+
+    def test_search_lowering_produces_hlo_text(self):
+        from compile import aot
+
+        cfg = dict(q=lutk.BLOCK_Q, n=fs.BLOCK_N, d=32, m=8, k=5)
+        name, lowered, meta = aot.export_search(cfg)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert name == f"search_q{cfg['q']}_n{cfg['n']}_d32_m8_k5"
+        assert meta["outputs"][0]["shape"] == [cfg["q"], 5]
+
+    def test_fastscan_lowering(self):
+        from compile import aot
+
+        name, lowered, meta = aot.export_fastscan(dict(q=2, n=fs.BLOCK_N, m=4))
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert meta["kind"] == "fastscan"
+
+    def test_lowered_module_executes_like_eager(self):
+        # compile the lowered module in-process and compare to eager
+        queries, codes, codebooks = _problem(14, m=4, dsub=8)
+        fn = jax.jit(lambda a, b, c: model.pq_search(a, b, c, k=3))
+        lowered = fn.lower(
+            jax.ShapeDtypeStruct(queries.shape, jnp.float32),
+            jax.ShapeDtypeStruct(codes.shape, jnp.int32),
+            jax.ShapeDtypeStruct(codebooks.shape, jnp.float32),
+        )
+        compiled = lowered.compile()
+        d1, i1 = compiled(
+            jnp.asarray(queries), jnp.asarray(codes), jnp.asarray(codebooks)
+        )
+        d2, i2 = model.pq_search(
+            jnp.asarray(queries), jnp.asarray(codes), jnp.asarray(codebooks), k=3
+        )
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

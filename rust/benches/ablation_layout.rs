@@ -1,0 +1,11 @@
+//! Ablation: interleaved block layout + SIMD vs flat 4-bit codes + scalar
+//! gather ("we must carefully maintain the code layout", paper §3).
+use armpq::experiments::run_ablation_layout;
+
+fn main() {
+    for m in [8, 16, 32] {
+        let t = run_ablation_layout(320_000, m, 20220505);
+        t.print();
+        t.save().expect("save");
+    }
+}

@@ -1,0 +1,11 @@
+//! Ablation: u8 LUT quantization (paper Eq. 4) vs exact f32 tables.
+use armpq::experiments::run_ablation_lut;
+
+fn main() {
+    let n: usize = std::env::var("ARMPQ_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(50_000);
+    for (ds, m) in [("sift", 16), ("deep", 16)] {
+        let t = run_ablation_lut(ds, n, 100, m, 20220504).expect("ablation");
+        t.print();
+        t.save().expect("save");
+    }
+}

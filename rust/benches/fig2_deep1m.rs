@@ -1,0 +1,11 @@
+//! Paper Fig. 2b: PQ vs 4-bit PQ on Deep1M(-like), recall@1 vs QPS, M sweep.
+use armpq::experiments::run_fig2;
+
+fn main() {
+    let n: usize = std::env::var("ARMPQ_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100_000);
+    let nq: usize = std::env::var("ARMPQ_BENCH_NQ").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    // Deep features are 96-D: M ∈ {8, 16, 32, 48} divide 96 (paper sweeps M similarly)
+    let t = run_fig2("deep", n, nq, &[8, 16, 32, 48], 5, 20220502).expect("fig2b");
+    t.print();
+    t.save().expect("save");
+}

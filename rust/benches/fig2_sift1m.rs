@@ -1,0 +1,11 @@
+//! Paper Fig. 2a: PQ vs 4-bit PQ on SIFT1M(-like), recall@1 vs QPS, M sweep.
+//! Scale with ARMPQ_BENCH_N (default 100k; paper used 1M).
+use armpq::experiments::run_fig2;
+
+fn main() {
+    let n: usize = std::env::var("ARMPQ_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100_000);
+    let nq: usize = std::env::var("ARMPQ_BENCH_NQ").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    let t = run_fig2("sift", n, nq, &[8, 16, 32, 64], 5, 20220501).expect("fig2a");
+    t.print();
+    t.save().expect("save");
+}

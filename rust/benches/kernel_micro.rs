@@ -1,0 +1,11 @@
+//! Paper Fig. 1 concept: per-lookup-op cost — memory LUT vs dual-lane
+//! shuffle (portable NEON model) vs real SIMD (SSSE3), per 32-code block.
+use armpq::experiments::run_kernel_micro;
+
+fn main() {
+    for m in [8, 16, 32, 64] {
+        let t = run_kernel_micro(m);
+        t.print();
+        t.save().expect("save");
+    }
+}

@@ -1,0 +1,15 @@
+//! Three-layer end-to-end: PJRT search artifact (L1 pallas + L2 jax, AOT)
+//! driven from rust vs the in-process rust kernel. Needs `make artifacts`.
+use armpq::experiments::run_pjrt_e2e;
+
+fn main() {
+    match run_pjrt_e2e(std::path::Path::new("artifacts"), 5) {
+        Ok(t) => {
+            t.print();
+            t.save().expect("save");
+        }
+        Err(e) => {
+            eprintln!("skipped: {e} (run `make artifacts`)");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Configuration system: layered `key = value` files + CLI overrides.
+//!
+//! Benches, examples and the serving coordinator all read an
+//! [`ExperimentConfig`]; precedence is *defaults < config file < CLI*.
+//! The file format is a flat INI-subset (comments with `#`, sections
+//! ignored into key prefixes: `[server]` + `port = 1` → `server.port`).
+
+use crate::util::args::Args;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed configuration: flat string map with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key = value` text (INI-subset).
+    pub fn from_str(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(section) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                prefix = format!("{}.", section.trim());
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value, got {raw:?}", lineno + 1))
+            })?;
+            values.insert(format!("{prefix}{}", k.trim()), v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {}: {e}", path.display())))?;
+        Self::from_str(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Overlay another config (its values win).
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| Error::Config(format!("{key} expects integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| Error::Config(format!("{key} expects number, got {v:?}")))
+            }
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(Error::Config(format!("{key} expects bool, got {v:?}"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// The shared experiment configuration used by benches and examples.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// "sift" or "deep".
+    pub dataset: String,
+    pub n: usize,
+    pub nq: usize,
+    pub seed: u64,
+    /// Index factory string.
+    pub factory: String,
+    pub k: usize,
+    pub nprobe: usize,
+    /// Timed trials per measurement (paper: 5).
+    pub trials: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "sift".into(),
+            n: 100_000,
+            nq: 100,
+            seed: 20_220_501, // paper's arXiv month, for flavor
+            factory: "PQ16x4fs".into(),
+            k: 10,
+            nprobe: 4,
+            trials: 5,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// defaults < optional `--config <file>` < CLI flags.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut cfg = Config::new();
+        if let Some(path) = args.get_opt("config") {
+            cfg.merge(&Config::from_file(std::path::Path::new(&path))?);
+        }
+        let d = ExperimentConfig::default();
+        Ok(Self {
+            dataset: args.get_str("dataset", &cfg.get_str("dataset", &d.dataset)),
+            n: args.get_usize("n", cfg.get_usize("n", d.n)?),
+            nq: args.get_usize("nq", cfg.get_usize("nq", d.nq)?),
+            seed: args.get_u64("seed", cfg.get_usize("seed", d.seed as usize)? as u64),
+            factory: args.get_str("factory", &cfg.get_str("factory", &d.factory)),
+            k: args.get_usize("k", cfg.get_usize("k", d.k)?),
+            nprobe: args.get_usize("nprobe", cfg.get_usize("nprobe", d.nprobe)?),
+            trials: args.get_usize("trials", cfg.get_usize("trials", d.trials)?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_ini_subset() {
+        let cfg = Config::from_str(
+            "# comment\n\
+             n = 1000\n\
+             dataset = deep  # trailing comment\n\
+             [server]\n\
+             port = 7070\n\
+             batch = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_usize("n", 0).unwrap(), 1000);
+        assert_eq!(cfg.get_str("dataset", ""), "deep");
+        assert_eq!(cfg.get_usize("server.port", 0).unwrap(), 7070);
+        assert!(cfg.get_bool("server.batch", false).unwrap());
+    }
+
+    #[test]
+    fn rejects_bad_lines_and_types() {
+        assert!(Config::from_str("no equals sign").is_err());
+        let cfg = Config::from_str("x = abc").unwrap();
+        assert!(cfg.get_usize("x", 0).is_err());
+        assert!(cfg.get_bool("x", false).is_err());
+        assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn merge_precedence() {
+        let mut a = Config::from_str("n = 1\nk = 2").unwrap();
+        let b = Config::from_str("n = 10").unwrap();
+        a.merge(&b);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 10);
+        assert_eq!(a.get_usize("k", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn experiment_from_cli() {
+        let args = Args::parse(
+            ["--n", "5000", "--factory", "IVF10,PQ8x4fs"].iter().map(|s| s.to_string()),
+        );
+        let e = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(e.n, 5000);
+        assert_eq!(e.factory, "IVF10,PQ8x4fs");
+        assert_eq!(e.nq, 100); // default preserved
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let cfg = Config::from_str("n = 1_000_000").unwrap();
+        assert_eq!(cfg.get_usize("n", 0).unwrap(), 1_000_000);
+    }
+}

@@ -1,0 +1,317 @@
+//! Dynamic batcher: collects concurrent queries into windows and runs them
+//! through a [`SearchBackend`] as one batched call.
+//!
+//! Policy (vLLM-style continuous batching, simplified to stateless search):
+//! the worker blocks for the first request, then drains the queue up to
+//! `max_batch` or until `max_wait` elapses, groups by `k`, executes, and
+//! routes each response to its reply channel. Batching amortizes per-query
+//! fixed costs — above all LUT construction, the serving-layer analog of
+//! the paper keeping tables register-resident.
+
+use super::metrics::Metrics;
+use super::service::SearchBackend;
+use crate::Result;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One in-flight query.
+pub struct QueryRequest {
+    pub vector: Vec<f32>,
+    pub k: usize,
+    pub enqueued: Instant,
+    pub reply: SyncSender<Result<QueryResponse>>,
+}
+
+/// The answer routed back to the submitting client.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    pub distances: Vec<f32>,
+    pub labels: Vec<i64>,
+    /// Time spent waiting for batch formation.
+    pub queue_us: u64,
+    /// Backend execution time of the whole batch.
+    pub service_us: u64,
+    /// How many queries shared the batch.
+    pub batch_size: usize,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Worker threads draining the shared queue.
+    pub workers: usize,
+    /// Bounded queue depth (backpressure: submit blocks when full).
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            workers: 1,
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// Handle to a running batcher.
+pub struct Batcher {
+    tx: SyncSender<QueryRequest>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the worker threads.
+    pub fn start(backend: Arc<dyn SearchBackend>, cfg: BatcherConfig) -> Batcher {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<QueryRequest>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(rx, backend, metrics, cfg);
+            }));
+        }
+        Batcher { tx, metrics, workers }
+    }
+
+    /// Enqueue a query; returns the reply receiver.
+    pub fn submit(
+        &self,
+        vector: Vec<f32>,
+        k: usize,
+    ) -> std::sync::mpsc::Receiver<Result<QueryResponse>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.metrics.requests_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let req = QueryRequest { vector, k, enqueued: Instant::now(), reply: reply_tx };
+        // A send error means shutdown; the caller sees a disconnected reply.
+        let _ = self.tx.send(req);
+        reply_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn search(&self, vector: Vec<f32>, k: usize) -> Result<QueryResponse> {
+        self.submit(vector, k)
+            .recv()
+            .map_err(|_| crate::Error::Serve("batcher shut down".into()))?
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<QueryRequest>>>,
+    backend: Arc<dyn SearchBackend>,
+    metrics: Arc<Metrics>,
+    cfg: BatcherConfig,
+) {
+    loop {
+        // Block for the first request of a window.
+        let first = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(r) => r,
+                Err(_) => return, // channel closed
+            }
+        };
+        let window_start = Instant::now();
+        let mut batch = vec![first];
+        // Drain until the window closes.
+        while batch.len() < cfg.max_batch {
+            let remaining = cfg.max_wait.saturating_sub(window_start.elapsed());
+            let next = {
+                let guard = rx.lock().unwrap();
+                if remaining.is_zero() {
+                    match guard.try_recv() {
+                        Ok(r) => Some(r),
+                        Err(_) => None,
+                    }
+                } else {
+                    match guard.recv_timeout(remaining) {
+                        Ok(r) => Some(r),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => None,
+                    }
+                }
+            };
+            match next {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        execute_batch(&*backend, &metrics, batch);
+    }
+}
+
+fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<QueryRequest>) {
+    metrics.record_batch(batch.len());
+    let batch_size = batch.len();
+    // group indices by k to keep one backend call per k value
+    let mut by_k: std::collections::BTreeMap<usize, Vec<QueryRequest>> = Default::default();
+    for r in batch {
+        by_k.entry(r.k).or_default().push(r);
+    }
+    for (k, group) in by_k {
+        let mut queries = Vec::with_capacity(group.len() * backend.dim());
+        for r in &group {
+            queries.extend_from_slice(&r.vector);
+        }
+        let t0 = Instant::now();
+        let result = backend.search_batch(&queries, k);
+        let service_us = t0.elapsed().as_micros() as u64;
+        metrics.service_us.record(service_us.max(1));
+        match result {
+            Ok((d, l)) => {
+                for (i, r) in group.into_iter().enumerate() {
+                    let queue_us = (t0 - r.enqueued).as_micros() as u64;
+                    metrics.queue_us.record(queue_us.max(1));
+                    metrics.e2e_us.record((queue_us + service_us).max(1));
+                    let resp = QueryResponse {
+                        distances: d[i * k..(i + 1) * k].to_vec(),
+                        labels: l[i * k..(i + 1) * k].to_vec(),
+                        queue_us,
+                        service_us,
+                        batch_size,
+                    };
+                    let _ = r.reply.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                metrics.errors_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let msg = e.to_string();
+                for r in group {
+                    let _ = r.reply.send(Err(crate::Error::Serve(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic toy backend: distance = |k|, label = floor(v[0]).
+    struct EchoBackend {
+        dim: usize,
+        delay: Duration,
+    }
+
+    impl SearchBackend for EchoBackend {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+            std::thread::sleep(self.delay);
+            let nq = queries.len() / self.dim;
+            let mut d = Vec::new();
+            let mut l = Vec::new();
+            for qi in 0..nq {
+                for r in 0..k {
+                    d.push(r as f32);
+                    l.push(queries[qi * self.dim] as i64);
+                }
+            }
+            Ok((d, l))
+        }
+        fn describe(&self) -> String {
+            "echo".into()
+        }
+    }
+
+    #[test]
+    fn routes_responses_to_correct_clients() {
+        let be = Arc::new(EchoBackend { dim: 2, delay: Duration::ZERO });
+        let b = Batcher::start(be, BatcherConfig::default());
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            rxs.push((i, b.submit(vec![i as f32, 0.0], 3)));
+        }
+        for (i, rx) in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.labels, vec![i as i64; 3]);
+            assert_eq!(resp.distances, vec![0.0, 1.0, 2.0]);
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_concurrency() {
+        // slow backend + concurrent submitters → batches larger than 1
+        let be = Arc::new(EchoBackend { dim: 1, delay: Duration::from_millis(3) });
+        let b = Arc::new(Batcher::start(
+            be,
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2), ..Default::default() },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..32 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                b.search(vec![i as f32], 1).unwrap()
+            }));
+        }
+        let responses: Vec<QueryResponse> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(max_batch > 1, "no batching happened (max={max_batch})");
+        assert_eq!(b.metrics.requests_total.load(std::sync::atomic::Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn mixed_k_in_one_window() {
+        let be = Arc::new(EchoBackend { dim: 1, delay: Duration::ZERO });
+        let b = Batcher::start(be, BatcherConfig::default());
+        let r1 = b.submit(vec![1.0], 2);
+        let r2 = b.submit(vec![2.0], 5);
+        assert_eq!(r1.recv().unwrap().unwrap().distances.len(), 2);
+        assert_eq!(r2.recv().unwrap().unwrap().distances.len(), 5);
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let be = Arc::new(EchoBackend { dim: 1, delay: Duration::ZERO });
+        let b = Batcher::start(be, BatcherConfig { workers: 2, ..Default::default() });
+        let resp = b.search(vec![5.0], 1).unwrap();
+        assert_eq!(resp.labels, vec![5]);
+        b.shutdown(); // must not hang
+    }
+
+    /// Failure injection: backend errors propagate to every waiter.
+    struct FailBackend;
+    impl SearchBackend for FailBackend {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn search_batch(&self, _q: &[f32], _k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+            Err(crate::Error::Serve("injected".into()))
+        }
+        fn describe(&self) -> String {
+            "fail".into()
+        }
+    }
+
+    #[test]
+    fn backend_errors_propagate() {
+        let b = Batcher::start(Arc::new(FailBackend), BatcherConfig::default());
+        let err = b.search(vec![0.0], 1).unwrap_err();
+        assert!(err.to_string().contains("injected"));
+        assert_eq!(b.metrics.errors_total.load(std::sync::atomic::Ordering::Relaxed), 1);
+        b.shutdown();
+    }
+}

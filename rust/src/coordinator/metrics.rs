@@ -1,0 +1,158 @@
+//! Serving metrics: lock-free counters + latency histograms, JSON export.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed-bucket microsecond histogram (powers of two from 1 µs to ~8 s).
+#[derive(Debug, Default)]
+pub struct UsHistogram {
+    buckets: [AtomicU64; 24],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl UsHistogram {
+    pub fn record(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(23);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate percentile from bucket upper bounds.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64; // bucket upper bound
+            }
+        }
+        (1u64 << 24) as f64
+    }
+}
+
+/// Coordinator-wide metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub batches_total: AtomicU64,
+    pub batched_queries_total: AtomicU64,
+    pub errors_total: AtomicU64,
+    /// time from enqueue to batch formation
+    pub queue_us: UsHistogram,
+    /// backend search time per batch
+    pub service_us: UsHistogram,
+    /// end-to-end per request
+    pub e2e_us: UsHistogram,
+    /// recent batch sizes (bounded ring, for mean occupancy)
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches_total.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries_total.fetch_add(size as u64, Ordering::Relaxed);
+        let mut v = self.batch_sizes.lock().unwrap();
+        if v.len() >= 4096 {
+            v.drain(..2048);
+        }
+        v.push(size);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches_total.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_queries_total.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Export as JSON (served by the `stats` command of the TCP protocol).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("requests_total", Json::Num(self.requests_total.load(Ordering::Relaxed) as f64))
+            .set("batches_total", Json::Num(self.batches_total.load(Ordering::Relaxed) as f64))
+            .set("errors_total", Json::Num(self.errors_total.load(Ordering::Relaxed) as f64))
+            .set("mean_batch_size", Json::Num(self.mean_batch_size()))
+            .set("queue_mean_us", Json::Num(self.queue_us.mean_us()))
+            .set("service_mean_us", Json::Num(self.service_us.mean_us()))
+            .set("e2e_mean_us", Json::Num(self.e2e_us.mean_us()))
+            .set("e2e_p50_us", Json::Num(self.e2e_us.percentile_us(50.0)))
+            .set("e2e_p95_us", Json::Num(self.e2e_us.percentile_us(95.0)))
+            .set("e2e_p99_us", Json::Num(self.e2e_us.percentile_us(99.0)));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_percentiles() {
+        let h = UsHistogram::default();
+        for us in [10u64, 20, 30, 40, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 220.0).abs() < 1e-9);
+        // p50 falls in the bucket containing 20-30 µs → upper bound 32 or 64
+        let p50 = h.percentile_us(50.0);
+        assert!(p50 >= 16.0 && p50 <= 64.0, "p50 {p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!(p99 >= 1000.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = UsHistogram::default();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0.0);
+    }
+
+    #[test]
+    fn batch_stats() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+        let j = m.to_json();
+        assert_eq!(j.get("batches_total").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn json_has_expected_keys() {
+        let m = Metrics::new();
+        m.requests_total.fetch_add(3, Ordering::Relaxed);
+        m.e2e_us.record(500);
+        let j = m.to_json();
+        for key in ["requests_total", "e2e_p95_us", "service_mean_us"] {
+            assert!(j.get(key).is_some(), "{key}");
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! L3 serving coordinator: dynamic batching, backend routing, TCP serving
+//! and metrics — the layer that turns the 4-bit-PQ library into a service.
+//!
+//! Architecture (vLLM-router-like, scaled to this paper's scope):
+//!
+//! ```text
+//!   TCP clients ──► server (thread per conn, line-JSON protocol)
+//!                      │ QueryRequest { vector, k, reply channel }
+//!                      ▼
+//!                dynamic batcher (max_batch / max_wait window)
+//!                      │ grouped by k, concatenated
+//!                      ▼
+//!                SearchBackend (sealed IVF-PQ index, or the PJRT
+//!                pipeline from runtime/) ──► responses routed back
+//! ```
+//!
+//! Everything is std-thread + mpsc (no tokio in the vendored crate set);
+//! on the paper's workload (sub-ms searches) OS threads are not the
+//! bottleneck — the batcher exists to amortize LUT construction across
+//! queries, which is the coordinator-level counterpart of the paper's
+//! register-resident tables.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod service;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use router::ShardedBackend;
+pub use server::{Client, Server, ServerConfig};
+pub use service::{IvfBackend, SearchBackend};

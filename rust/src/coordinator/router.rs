@@ -1,0 +1,158 @@
+//! Shard router: fan a query batch out over multiple index shards and
+//! merge per-shard top-k — the horizontal-scaling layer above the batcher
+//! (how a billion-vector corpus is actually served: N_shard × IVF indexes,
+//! each like the paper's Table 1 configuration).
+
+use super::service::SearchBackend;
+use crate::util::topk::TopK;
+use crate::Result;
+use std::sync::Arc;
+
+/// A backend that routes to `shards` and merges results.
+///
+/// Shards own disjoint id spaces (each shard must already return *global*
+/// ids, e.g. via `add_with_ids`). Shard searches run on scoped threads —
+/// one per shard — and merge via a bounded heap.
+pub struct ShardedBackend {
+    shards: Vec<Arc<dyn SearchBackend>>,
+    dim: usize,
+}
+
+impl ShardedBackend {
+    pub fn new(shards: Vec<Arc<dyn SearchBackend>>) -> Result<Self> {
+        if shards.is_empty() {
+            return Err(crate::Error::Serve("no shards".into()));
+        }
+        let dim = shards[0].dim();
+        if shards.iter().any(|s| s.dim() != dim) {
+            return Err(crate::Error::Serve("shard dimension mismatch".into()));
+        }
+        Ok(Self { shards, dim })
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl SearchBackend for ShardedBackend {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        let nq = queries.len() / self.dim;
+        // fan out: one thread per shard (scoped — no 'static bounds needed)
+        let results: Vec<Result<(Vec<f32>, Vec<i64>)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|shard| {
+                    let shard = shard.clone();
+                    scope.spawn(move || shard.search_batch(queries, k))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
+        });
+
+        // merge per query
+        let mut shard_results = Vec::with_capacity(results.len());
+        for r in results {
+            shard_results.push(r?);
+        }
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for qi in 0..nq {
+            let mut heap = TopK::new(k);
+            for (d, l) in &shard_results {
+                for r in 0..k {
+                    let label = l[qi * k + r];
+                    if label >= 0 {
+                        heap.push(d[qi * k + r], label);
+                    }
+                }
+            }
+            let (d, l) = heap.into_sorted();
+            distances.extend(d);
+            labels.extend(l);
+        }
+        Ok((distances, labels))
+    }
+
+    fn describe(&self) -> String {
+        format!("sharded(x{}, {})", self.shards.len(), self.shards[0].describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::IvfBackend;
+    use crate::datasets::SyntheticDataset;
+    use crate::ivf::{IvfParams, IvfPq4};
+    use crate::pq::PqParams;
+
+    /// Build `nshards` IVF shards over disjoint halves of one dataset with
+    /// global ids, and check the router merges to the same results as one
+    /// big index.
+    #[test]
+    fn sharded_matches_monolithic() {
+        let ds = SyntheticDataset::sift_like(4_000, 25, 231);
+        let dim = ds.dim;
+        let nshards = 4;
+        let per = ds.n() / nshards;
+
+        let mut shards: Vec<Arc<dyn SearchBackend>> = Vec::new();
+        for s in 0..nshards {
+            let mut idx = IvfPq4::new(dim, IvfParams::new(8), PqParams::new_4bit(8));
+            idx.train(&ds.train).unwrap();
+            let slice = &ds.base[s * per * dim..(s + 1) * per * dim];
+            let ids: Vec<i64> = (s * per..(s + 1) * per).map(|i| i as i64).collect();
+            idx.add_with_ids(slice, &ids).unwrap();
+            idx.nprobe = 8; // all lists
+            idx.fastscan.reservoir_factor = 32;
+            shards.push(Arc::new(IvfBackend::new(idx).unwrap()));
+        }
+        let router = ShardedBackend::new(shards).unwrap();
+        assert_eq!(router.nshards(), 4);
+
+        // monolithic reference with the same training seed
+        let mut mono = IvfPq4::new(dim, IvfParams::new(8), PqParams::new_4bit(8));
+        mono.train(&ds.train).unwrap();
+        mono.add(&ds.base).unwrap();
+        mono.nprobe = 8;
+        mono.fastscan.reservoir_factor = 32;
+        let mono = IvfBackend::new(mono).unwrap();
+
+        let (d_s, _l_s) = router.search_batch(&ds.queries, 5).unwrap();
+        let (d_m, _l_m) = mono.search_batch(&ds.queries, 5).unwrap();
+        // same PQ (same seed) ⇒ same distances for the merged top-k
+        for qi in 0..25 {
+            for r in 0..5 {
+                let a = d_s[qi * 5 + r];
+                let b = d_m[qi * 5 + r];
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                    "q{qi} r{r}: sharded {a} vs mono {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_empty_and_mismatched() {
+        assert!(ShardedBackend::new(vec![]).is_err());
+        let ds16 = SyntheticDataset::gaussian(300, 2, 16, 232);
+        let ds32 = SyntheticDataset::gaussian(300, 2, 32, 233);
+        let mk = |ds: &SyntheticDatasetData, dim: usize| -> Arc<dyn SearchBackend> {
+            let mut idx = IvfPq4::new(dim, IvfParams::new(2), PqParams::new_4bit(4));
+            idx.train(&ds.base).unwrap();
+            idx.add(&ds.base).unwrap();
+            Arc::new(IvfBackend::new(idx).unwrap())
+        };
+        type SyntheticDatasetData = crate::datasets::Dataset;
+        let a = mk(&ds16, 16);
+        let b = mk(&ds32, 32);
+        assert!(ShardedBackend::new(vec![a, b]).is_err());
+    }
+}

@@ -1,0 +1,320 @@
+//! TCP serving front-end: newline-delimited JSON over a socket, one thread
+//! per connection, all requests funneled through the shared [`Batcher`].
+//!
+//! Protocol (requests and responses are single JSON lines):
+//!
+//! ```text
+//!   → {"search": {"vector": [f32…], "k": 10}}
+//!   ← {"ok": {"labels": […], "distances": […], "batch_size": n}}
+//!   → {"stats": true}
+//!   ← {"ok": { …metrics… }}
+//!   → {"ping": true}
+//!   ← {"ok": "pong"}
+//!   ← {"err": "message"}           (any failure)
+//! ```
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::service::SearchBackend;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// e.g. "127.0.0.1:0" (0 = ephemeral port).
+    pub addr: String,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() }
+    }
+}
+
+/// A running server (drop or call [`Server::stop`] to shut down).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    batcher: Arc<Batcher>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads.
+    pub fn start(backend: Arc<dyn SearchBackend>, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::Serve(format!("bind {}: {e}", cfg.addr)))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let batcher = Arc::new(Batcher::start(backend.clone(), cfg.batcher));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept_thread = {
+            let batcher = batcher.clone();
+            let stop = stop.clone();
+            let dim = backend.dim();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let batcher = batcher.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_connection(stream, batcher, dim);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        };
+        Ok(Server { addr, batcher, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn metrics_json(&self) -> Json {
+        self.batcher.metrics.to_json()
+    }
+
+    /// Signal shutdown and join the acceptor.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, dim: usize) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let response = handle_request(line.trim(), &batcher, dim);
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
+    let err = |msg: String| {
+        let mut o = Json::obj();
+        o.set("err", Json::Str(msg));
+        o
+    };
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    if req.get("ping").is_some() {
+        let mut o = Json::obj();
+        o.set("ok", Json::Str("pong".into()));
+        return o;
+    }
+    if req.get("stats").is_some() {
+        let mut o = Json::obj();
+        o.set("ok", batcher.metrics.to_json());
+        return o;
+    }
+    let Some(search) = req.get("search") else {
+        return err("expected search/stats/ping".into());
+    };
+    let Some(vector) = search.get("vector").and_then(|v| v.as_arr()) else {
+        return err("search.vector missing".into());
+    };
+    let vector: Vec<f32> = vector.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
+    if vector.len() != dim {
+        return err(format!("vector dim {} != index dim {dim}", vector.len()));
+    }
+    let k = search.get("k").and_then(|x| x.as_usize()).unwrap_or(10);
+    if k == 0 || k > 1024 {
+        return err(format!("bad k {k}"));
+    }
+    match batcher.search(vector, k) {
+        Ok(resp) => {
+            let mut body = Json::obj();
+            body.set("labels", Json::Arr(resp.labels.iter().map(|&l| Json::Num(l as f64)).collect()))
+                .set(
+                    "distances",
+                    Json::Arr(resp.distances.iter().map(|&d| Json::Num(d as f64)).collect()),
+                )
+                .set("batch_size", Json::Num(resp.batch_size as f64))
+                .set("queue_us", Json::Num(resp.queue_us as f64))
+                .set("service_us", Json::Num(resp.service_us as f64));
+            let mut o = Json::obj();
+            o.set("ok", body);
+            o
+        }
+        Err(e) => err(e.to_string()),
+    }
+}
+
+/// Line-JSON client for the server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).map_err(|e| Error::Serve(format!("connect: {e}")))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn roundtrip(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = Json::parse(line.trim()).map_err(|e| Error::Serve(format!("bad response: {e}")))?;
+        if let Some(e) = v.get("err") {
+            return Err(Error::Serve(e.as_str().unwrap_or("unknown").to_string()));
+        }
+        v.get("ok").cloned().ok_or_else(|| Error::Serve("missing ok".into()))
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let mut req = Json::obj();
+        req.set("ping", Json::Bool(true));
+        let ok = self.roundtrip(&req)?;
+        if ok.as_str() == Some("pong") {
+            Ok(())
+        } else {
+            Err(Error::Serve("bad pong".into()))
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("stats", Json::Bool(true));
+        self.roundtrip(&req)
+    }
+
+    /// Search; returns `(distances, labels, batch_size)`.
+    pub fn search(&mut self, vector: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>, usize)> {
+        let mut inner = Json::obj();
+        inner
+            .set("vector", Json::Arr(vector.iter().map(|&x| Json::Num(x as f64)).collect()))
+            .set("k", Json::Num(k as f64));
+        let mut req = Json::obj();
+        req.set("search", inner);
+        let ok = self.roundtrip(&req)?;
+        let labels = ok
+            .get("labels")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Serve("missing labels".into()))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as i64)
+            .collect();
+        let distances = ok
+            .get("distances")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Serve("missing distances".into()))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as f32)
+            .collect();
+        let batch = ok.get("batch_size").and_then(|x| x.as_usize()).unwrap_or(1);
+        Ok((distances, labels, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::IvfBackend;
+    use crate::ivf::{IvfParams, IvfPq4};
+    use crate::pq::PqParams;
+    use crate::util::rng::Rng;
+
+    fn toy_backend() -> (Arc<dyn SearchBackend>, Vec<f32>) {
+        let dim = 16;
+        let mut rng = Rng::new(131);
+        let data: Vec<f32> = (0..600 * dim).map(|_| rng.next_gaussian()).collect();
+        let mut idx = IvfPq4::new(dim, IvfParams::new(4), PqParams::new_4bit(4));
+        idx.train(&data).unwrap();
+        idx.add(&data).unwrap();
+        idx.nprobe = 4;
+        (Arc::new(IvfBackend::new(idx).unwrap()), data)
+    }
+
+    #[test]
+    fn serve_roundtrip() {
+        let (backend, data) = toy_backend();
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        client.ping().unwrap();
+        let (d, l, _batch) = client.search(&data[..16], 5).unwrap();
+        assert_eq!(d.len(), 5);
+        assert_eq!(l.len(), 5);
+        assert!(d.windows(2).all(|w| w[0] <= w[1]));
+        let stats = client.stats().unwrap();
+        assert!(stats.get("requests_total").unwrap().as_usize().unwrap() >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (backend, data) = toy_backend();
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let addr = server.addr;
+        let data = Arc::new(data);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let data = data.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for i in 0..5 {
+                    let qi = (t * 5 + i) % 30;
+                    let (d, l, _) = c.search(&data[qi * 16..(qi + 1) * 16], 3).unwrap();
+                    assert_eq!(d.len(), 3);
+                    assert!(l.iter().all(|&x| x >= 0));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(server.metrics_json().get("requests_total").unwrap().as_usize().unwrap() >= 20);
+        server.stop();
+    }
+
+    #[test]
+    fn protocol_errors() {
+        let (backend, _) = toy_backend();
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        // wrong dimension
+        let err = client.search(&[1.0, 2.0], 3).unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        // bad k
+        let err = client.search(&vec![0.0; 16], 0).unwrap_err();
+        assert!(err.to_string().contains("bad k"), "{err}");
+        // malformed json straight through the socket
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        w.write_all(b"this is not json\n").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("err"), "{line}");
+        server.stop();
+    }
+}

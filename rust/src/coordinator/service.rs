@@ -1,0 +1,194 @@
+//! Search backends the coordinator can route to.
+
+use crate::ivf::IvfPq4;
+use crate::runtime::{EngineHandle, Tensor};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// A batched search implementation behind the batcher.
+pub trait SearchBackend: Send + Sync {
+    fn dim(&self) -> usize;
+    /// Search `nq × dim` queries; returns `(distances, labels)` `nq × k`.
+    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)>;
+    fn describe(&self) -> String;
+}
+
+/// Backend over a sealed [`IvfPq4`] index (the Table 1 configuration).
+pub struct IvfBackend {
+    index: IvfPq4,
+}
+
+impl IvfBackend {
+    /// Takes a trained+filled index; seals it for immutable serving.
+    pub fn new(mut index: IvfPq4) -> Result<Self> {
+        index.seal()?;
+        Ok(Self { index })
+    }
+
+    pub fn index(&self) -> &IvfPq4 {
+        &self.index
+    }
+}
+
+impl SearchBackend for IvfBackend {
+    fn dim(&self) -> usize {
+        self.index.dim
+    }
+
+    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        self.index.search_sealed(queries, k)
+    }
+
+    fn describe(&self) -> String {
+        format!("ivf(nlist={}, nprobe={}, n={})", self.index.params.nlist, self.index.nprobe, self.index.ntotal())
+    }
+}
+
+/// Backend over the AOT-compiled PJRT search pipeline (`runtime/`):
+/// queries are padded to the artifact's fixed batch Q and the codes are the
+/// fixed-N scan unit — the three-layer path with python nowhere at runtime.
+pub struct PjrtBackend {
+    engine: Arc<EngineHandle>,
+    artifact: String,
+    q: usize,
+    n: usize,
+    d: usize,
+    m: usize,
+    k_art: usize,
+    codes: Vec<i32>,
+    codebooks: Vec<f32>,
+}
+
+impl PjrtBackend {
+    /// `codes`: `n × m` (values < 16), `codebooks`: `m × 16 × dsub` — both
+    /// must match the artifact named by (d, m) in the manifest.
+    pub fn new(
+        engine: Arc<EngineHandle>,
+        d: usize,
+        codes: Vec<i32>,
+        codebooks: Vec<f32>,
+    ) -> Result<Self> {
+        let meta = engine
+            .manifest
+            .find_by("search", &[("d", d)])
+            .ok_or_else(|| Error::Runtime(format!("no search artifact for d={d}")))?;
+        let (q, n, m, k_art) =
+            (meta.params["q"], meta.params["n"], meta.params["m"], meta.params["k"]);
+        if codes.len() != n * m {
+            return Err(Error::Runtime(format!(
+                "codes len {} != n*m = {}",
+                codes.len(),
+                n * m
+            )));
+        }
+        if codebooks.len() != m * 16 * (d / m) {
+            return Err(Error::Runtime("codebooks shape mismatch".into()));
+        }
+        Ok(Self { artifact: meta.name.clone(), engine, q, n, d, m, k_art, codes, codebooks })
+    }
+
+    pub fn scan_unit(&self) -> usize {
+        self.n
+    }
+}
+
+impl SearchBackend for PjrtBackend {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        if k > self.k_art {
+            return Err(Error::Serve(format!("k={k} exceeds artifact k={}", self.k_art)));
+        }
+        let nq = queries.len() / self.d;
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        // process in fixed-Q windows, padding the tail with zeros
+        for chunk in queries.chunks(self.q * self.d) {
+            let real = chunk.len() / self.d;
+            let mut padded = chunk.to_vec();
+            padded.resize(self.q * self.d, 0.0);
+            let out = self.engine.execute(
+                &self.artifact,
+                vec![
+                    Tensor::F32(padded, vec![self.q, self.d]),
+                    Tensor::I32(self.codes.clone(), vec![self.n, self.m]),
+                    Tensor::F32(self.codebooks.clone(), vec![self.m, 16, self.d / self.m]),
+                ],
+            )?;
+            let d_out = out[0].as_f32()?;
+            let l_out = out[1].as_i32()?;
+            for qi in 0..real {
+                distances.extend_from_slice(&d_out[qi * self.k_art..qi * self.k_art + k]);
+                labels.extend(
+                    l_out[qi * self.k_art..qi * self.k_art + k].iter().map(|&x| x as i64),
+                );
+            }
+        }
+        Ok((distances, labels))
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt({}, n={}, q={})", self.artifact, self.n, self.q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivf::IvfParams;
+    use crate::pq::PqParams;
+    use crate::util::rng::Rng;
+
+    fn toy_index() -> (IvfPq4, Vec<f32>) {
+        let dim = 16;
+        let mut rng = Rng::new(121);
+        let data: Vec<f32> = (0..800 * dim).map(|_| rng.next_gaussian()).collect();
+        let mut idx = IvfPq4::new(dim, IvfParams::new(4), PqParams::new_4bit(4));
+        idx.train(&data).unwrap();
+        idx.add(&data).unwrap();
+        idx.nprobe = 4;
+        (idx, data)
+    }
+
+    #[test]
+    fn ivf_backend_batches() {
+        let (idx, data) = toy_index();
+        let be = IvfBackend::new(idx).unwrap();
+        assert_eq!(be.dim(), 16);
+        let queries = &data[..3 * 16];
+        let (d, l) = be.search_batch(queries, 5).unwrap();
+        assert_eq!(d.len(), 15);
+        assert_eq!(l.len(), 15);
+        assert!(be.describe().contains("nlist=4"));
+    }
+
+    #[test]
+    fn pjrt_backend_padding_and_k() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts missing; skipping");
+            return;
+        }
+        let engine = Arc::new(EngineHandle::spawn(dir).unwrap());
+        let Some(meta) = engine.manifest.find_by("search", &[("d", 64)]) else { return };
+        let (n, m, d) = (meta.params["n"], meta.params["m"], meta.params["d"]);
+        let mut rng = Rng::new(122);
+        let codes: Vec<i32> = (0..n * m).map(|_| (rng.next_u32() % 16) as i32).collect();
+        let codebooks: Vec<f32> =
+            (0..m * 16 * (d / m)).map(|_| rng.next_gaussian()).collect();
+        let be = PjrtBackend::new(engine, d, codes, codebooks).unwrap();
+        // 3 queries (< Q=8) exercises the padding path
+        let queries: Vec<f32> = (0..3 * d).map(|_| rng.next_gaussian()).collect();
+        let (dist, lab) = be.search_batch(&queries, 5).unwrap();
+        assert_eq!(dist.len(), 15);
+        assert!(lab.iter().all(|&l| l >= 0 && (l as usize) < n));
+        // ascending per query
+        for qi in 0..3 {
+            let row = &dist[qi * 5..(qi + 1) * 5];
+            assert!(row.windows(2).all(|w| w[0] <= w[1]), "{row:?}");
+        }
+        assert!(be.search_batch(&queries, 100).is_err()); // k > artifact k
+    }
+}

@@ -1,0 +1,188 @@
+//! `fvecs` / `ivecs` / `bvecs` file IO — the interchange formats of the
+//! SIFT1M / Deep1B benchmark suites (corpus-texmex.irisa.fr).
+//!
+//! Format: each vector is `[d: i32 little-endian][d elements]`, where the
+//! element type is f32 (`fvecs`), i32 (`ivecs`) or u8 (`bvecs`).
+
+use crate::{Error, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read an `fvecs` file → `(dim, row-major data)`.
+pub fn read_fvecs(path: &Path) -> Result<(usize, Vec<f32>)> {
+    let raw = read_all(path)?;
+    parse_vecs::<f32, _>(&raw, 4, |chunk| {
+        f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]])
+    })
+}
+
+/// Read an `ivecs` file (ground-truth ids) → `(dim, row-major data)`.
+pub fn read_ivecs(path: &Path) -> Result<(usize, Vec<i32>)> {
+    let raw = read_all(path)?;
+    parse_vecs::<i32, _>(&raw, 4, |chunk| {
+        i32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]])
+    })
+}
+
+/// Read a `bvecs` file (byte vectors, e.g. SIFT1B) → `(dim, f32 data)`.
+pub fn read_bvecs(path: &Path) -> Result<(usize, Vec<f32>)> {
+    let raw = read_all(path)?;
+    parse_vecs::<f32, _>(&raw, 1, |chunk| chunk[0] as f32)
+}
+
+/// Write an `fvecs` file from row-major data.
+pub fn write_fvecs(path: &Path, dim: usize, data: &[f32]) -> Result<()> {
+    if dim == 0 || data.len() % dim != 0 {
+        return Err(Error::Dataset(format!("data length {} % dim {dim} != 0", data.len())));
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for row in data.chunks(dim) {
+        w.write_all(&(dim as i32).to_le_bytes())?;
+        for &v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write an `ivecs` file from row-major ids.
+pub fn write_ivecs(path: &Path, dim: usize, data: &[i32]) -> Result<()> {
+    if dim == 0 || data.len() % dim != 0 {
+        return Err(Error::Dataset(format!("data length {} % dim {dim} != 0", data.len())));
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for row in data.chunks(dim) {
+        w.write_all(&(dim as i32).to_le_bytes())?;
+        for &v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_all(path: &Path) -> Result<Vec<u8>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| Error::Dataset(format!("open {}: {e}", path.display())))?;
+    let mut r = BufReader::new(f);
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+fn parse_vecs<T, F>(raw: &[u8], elem_size: usize, decode: F) -> Result<(usize, Vec<T>)>
+where
+    F: Fn(&[u8]) -> T,
+{
+    if raw.is_empty() {
+        return Err(Error::Dataset("empty vecs file".into()));
+    }
+    let mut pos = 0usize;
+    let mut dim = 0usize;
+    let mut out = Vec::new();
+    while pos < raw.len() {
+        if pos + 4 > raw.len() {
+            return Err(Error::Dataset("truncated header".into()));
+        }
+        let d = i32::from_le_bytes([raw[pos], raw[pos + 1], raw[pos + 2], raw[pos + 3]]);
+        if d <= 0 {
+            return Err(Error::Dataset(format!("bad dimension {d}")));
+        }
+        let d = d as usize;
+        if dim == 0 {
+            dim = d;
+        } else if dim != d {
+            return Err(Error::Dataset(format!("inconsistent dims {dim} vs {d}")));
+        }
+        pos += 4;
+        let bytes = d * elem_size;
+        if pos + bytes > raw.len() {
+            return Err(Error::Dataset("truncated row".into()));
+        }
+        for e in 0..d {
+            out.push(decode(&raw[pos + e * elem_size..pos + (e + 1) * elem_size]));
+        }
+        pos += bytes;
+    }
+    Ok((dim, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("armpq_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let path = tmp("a.fvecs");
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5 - 3.0).collect();
+        write_fvecs(&path, 8, &data).unwrap();
+        let (dim, back) = read_fvecs(&path).unwrap();
+        assert_eq!(dim, 8);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let path = tmp("b.ivecs");
+        let data: Vec<i32> = (0..30).map(|i| i * 7 - 50).collect();
+        write_ivecs(&path, 10, &data).unwrap();
+        let (dim, back) = read_ivecs(&path).unwrap();
+        assert_eq!(dim, 10);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn bvecs_parse() {
+        // hand-build a 2-row bvecs file with dim 3
+        let path = tmp("c.bvecs");
+        let mut bytes = Vec::new();
+        for row in [[1u8, 2, 3], [250, 0, 7]] {
+            bytes.extend_from_slice(&3i32.to_le_bytes());
+            bytes.extend_from_slice(&row);
+        }
+        std::fs::write(&path, bytes).unwrap();
+        let (dim, data) = read_bvecs(&path).unwrap();
+        assert_eq!(dim, 3);
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 250.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let path = tmp("d.fvecs");
+        std::fs::write(&path, 4i32.to_le_bytes()).unwrap(); // header only
+        assert!(read_fvecs(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_dims() {
+        let path = tmp("e.fvecs");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&2i32.to_le_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&2.0f32.to_le_bytes());
+        bytes.extend_from_slice(&3i32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 12]);
+        std::fs::write(&path, bytes).unwrap();
+        assert!(read_fvecs(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        assert!(read_fvecs(Path::new("/nonexistent/x.fvecs")).is_err());
+    }
+
+    #[test]
+    fn write_rejects_ragged() {
+        let path = tmp("f.fvecs");
+        assert!(write_fvecs(&path, 5, &[1.0, 2.0, 3.0]).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Datasets: synthetic stand-ins for SIFT1M / Deep1M / Deep1B plus the
+//! standard `fvecs`/`ivecs`/`bvecs` readers so the real files drop in.
+//!
+//! The paper evaluates on SIFT1M (128-D local descriptors), Deep1M and
+//! Deep1B (96-D CNN descriptors). Those downloads are unavailable here, so
+//! [`synthetic`] generates deterministic datasets with the property that
+//! actually drives PQ recall curves: *cluster structure* (both real
+//! datasets are heavily clustered). See DESIGN.md §1 for the substitution
+//! argument.
+
+pub mod io;
+pub mod synthetic;
+
+pub use synthetic::SyntheticDataset;
+
+/// A dataset ready for indexing experiments.
+pub struct Dataset {
+    pub dim: usize,
+    /// `n × dim` database vectors.
+    pub base: Vec<f32>,
+    /// `nq × dim` query vectors.
+    pub queries: Vec<f32>,
+    /// `nt × dim` training vectors (disjoint from base in the synthetic
+    /// generators, like the real datasets' learn sets).
+    pub train: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.base.len() / self.dim
+    }
+
+    pub fn nq(&self) -> usize {
+        self.queries.len() / self.dim
+    }
+
+    pub fn query(&self, i: usize) -> &[f32] {
+        &self.queries[i * self.dim..(i + 1) * self.dim]
+    }
+}

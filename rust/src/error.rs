@@ -1,0 +1,71 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for all `armpq` operations.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// The index (or quantizer) must be trained before this operation.
+    #[error("index is not trained (call train() first)")]
+    NotTrained,
+
+    /// Dimension of the provided vectors does not match the index.
+    #[error("dimension mismatch: expected {expected}, got {got}")]
+    DimMismatch { expected: usize, got: usize },
+
+    /// Invalid parameter combination.
+    #[error("invalid parameter: {0}")]
+    InvalidParameter(String),
+
+    /// Failed to parse an index-factory string.
+    #[error("cannot parse factory string {0:?}: {1}")]
+    Factory(String, String),
+
+    /// Configuration file / key errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Dataset file IO and format errors.
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    /// PJRT runtime errors (artifact loading, compilation, execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / serving errors.
+    #[error("serve error: {0}")]
+    Serve(String),
+
+    /// Underlying IO error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = Error::DimMismatch { expected: 128, got: 96 };
+        assert_eq!(e.to_string(), "dimension mismatch: expected 128, got 96");
+        assert!(Error::NotTrained.to_string().contains("train"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,175 @@
+//! Evaluation harness: exact ground truth, Recall@R, and the
+//! recall-vs-QPS measurements behind the paper's Fig. 2 and Table 1.
+
+use crate::util::threads::{default_threads, parallel_map};
+use crate::util::timer::Timer;
+use crate::util::topk::TopK;
+
+/// Exact k-NN ground truth by parallel brute force.
+/// Returns labels as `nq × k` row-major (distances discarded).
+pub fn ground_truth(base: &[f32], queries: &[f32], dim: usize, k: usize) -> Vec<i64> {
+    let n = base.len() / dim;
+    let nq = queries.len() / dim;
+    let rows: Vec<Vec<i64>> = parallel_map(nq, default_threads(), |qi| {
+        let q = &queries[qi * dim..(qi + 1) * dim];
+        let mut heap = TopK::new(k);
+        for i in 0..n {
+            let d = crate::util::l2_sq(q, &base[i * dim..(i + 1) * dim]);
+            if d < heap.threshold() {
+                heap.push(d, i as i64);
+            }
+        }
+        heap.into_sorted().1
+    });
+    rows.into_iter().flatten().collect()
+}
+
+/// Recall@R as the paper uses it: the fraction of queries whose *true
+/// nearest neighbor* (`gt[qi][0]`) appears among the first `r` results.
+pub fn recall_at_r(gt: &[i64], gt_k: usize, results: &[i64], res_k: usize, r: usize) -> f64 {
+    assert!(r <= res_k, "r={r} exceeds result width {res_k}");
+    let nq = gt.len() / gt_k;
+    assert_eq!(results.len() / res_k, nq, "query count mismatch");
+    let mut hits = 0usize;
+    for qi in 0..nq {
+        let truth = gt[qi * gt_k];
+        if results[qi * res_k..qi * res_k + r].contains(&truth) {
+            hits += 1;
+        }
+    }
+    hits as f64 / nq as f64
+}
+
+/// Intersection-recall (k-recall@k): |result ∩ gt| / k averaged over
+/// queries — the stricter metric some PQ papers report.
+pub fn intersection_recall(gt: &[i64], gt_k: usize, results: &[i64], res_k: usize, k: usize) -> f64 {
+    assert!(k <= gt_k && k <= res_k);
+    let nq = gt.len() / gt_k;
+    let mut total = 0usize;
+    for qi in 0..nq {
+        let truth = &gt[qi * gt_k..qi * gt_k + k];
+        let got = &results[qi * res_k..qi * res_k + k];
+        total += got.iter().filter(|g| truth.contains(g)).count();
+    }
+    total as f64 / (nq * k) as f64
+}
+
+/// One Fig. 2-style measurement: run `search` over all queries one by one
+/// (single stream, like the paper's single-thread protocol), returning
+/// `(recall@1, mean ms/query, QPS)`.
+pub fn measure_search<F>(
+    queries: &[f32],
+    dim: usize,
+    gt: &[i64],
+    gt_k: usize,
+    k: usize,
+    trials: usize,
+    mut search: F,
+) -> SearchMeasurement
+where
+    F: FnMut(&[f32], usize) -> (Vec<f32>, Vec<i64>),
+{
+    let nq = queries.len() / dim;
+    // warm + collect labels once for recall
+    let mut all_labels = Vec::with_capacity(nq * k);
+    for qi in 0..nq {
+        let (_d, l) = search(&queries[qi * dim..(qi + 1) * dim], k);
+        all_labels.extend(l);
+    }
+    let recall = recall_at_r(gt, gt_k, &all_labels, k, 1);
+    let recall_at_k = recall_at_r(gt, gt_k, &all_labels, k, k);
+
+    // timed trials (paper: average of five)
+    let mut per_trial_ms = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let t = Timer::start();
+        for qi in 0..nq {
+            let (_d, _l) = search(&queries[qi * dim..(qi + 1) * dim], k);
+        }
+        per_trial_ms.push(t.elapsed_ms() / nq as f64);
+    }
+    per_trial_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ms_per_query = per_trial_ms[per_trial_ms.len() / 2];
+    SearchMeasurement { recall_at_1: recall, recall_at_k, ms_per_query, qps: 1e3 / ms_per_query }
+}
+
+/// Result of [`measure_search`].
+#[derive(Clone, Debug)]
+pub struct SearchMeasurement {
+    pub recall_at_1: f64,
+    pub recall_at_k: f64,
+    pub ms_per_query: f64,
+    pub qps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ground_truth_is_exact() {
+        let mut rng = Rng::new(81);
+        let dim = 8;
+        let base: Vec<f32> = (0..100 * dim).map(|_| rng.next_gaussian()).collect();
+        // queries = perturbed base rows, so the GT is known
+        let mut queries = Vec::new();
+        for i in [3usize, 42, 77] {
+            let mut row = base[i * dim..(i + 1) * dim].to_vec();
+            for v in &mut row {
+                *v += 0.001;
+            }
+            queries.extend(row);
+        }
+        let gt = ground_truth(&base, &queries, dim, 5);
+        assert_eq!(gt[0], 3);
+        assert_eq!(gt[5], 42);
+        assert_eq!(gt[10], 77);
+    }
+
+    #[test]
+    fn recall_computation() {
+        // 2 queries, gt_k=3, res_k=2
+        let gt = vec![7, 1, 2, /* q1 */ 9, 4, 5];
+        let results = vec![7, 0, /* q1 */ 8, 3];
+        assert_eq!(recall_at_r(&gt, 3, &results, 2, 1), 0.5);
+        assert_eq!(recall_at_r(&gt, 3, &results, 2, 2), 0.5);
+        let results2 = vec![0, 7, 8, 9];
+        assert_eq!(recall_at_r(&gt, 3, &results2, 2, 1), 0.0);
+        assert_eq!(recall_at_r(&gt, 3, &results2, 2, 2), 1.0);
+    }
+
+    #[test]
+    fn intersection_recall_computation() {
+        let gt = vec![1, 2, 3, 4];
+        let results = vec![2, 1, 9, 9];
+        assert_eq!(intersection_recall(&gt, 4, &results, 4, 2), 1.0);
+        assert_eq!(intersection_recall(&gt, 4, &results, 4, 4), 0.5);
+    }
+
+    #[test]
+    fn measure_search_runs() {
+        let mut rng = Rng::new(82);
+        let dim = 4;
+        let base: Vec<f32> = (0..50 * dim).map(|_| rng.next_gaussian()).collect();
+        let queries = base[..10 * dim].to_vec();
+        let gt = ground_truth(&base, &queries, dim, 1);
+        let m = measure_search(&queries, dim, &gt, 1, 1, 3, |q, k| {
+            // exact scan: recall must be 1.0
+            let mut heap = TopK::new(k);
+            for i in 0..50 {
+                heap.push(crate::util::l2_sq(q, &base[i * dim..(i + 1) * dim]), i as i64);
+            }
+            heap.into_sorted()
+        });
+        assert_eq!(m.recall_at_1, 1.0);
+        assert!(m.ms_per_query > 0.0);
+        assert!(m.qps > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn recall_rejects_r_too_large() {
+        recall_at_r(&[1], 1, &[1], 1, 2);
+    }
+}

@@ -1,0 +1,436 @@
+//! Experiment runners: one function per paper table/figure (and per
+//! ablation), shared by `cargo bench` targets and the `armpq` CLI.
+//!
+//! Mapping to the paper (see DESIGN.md §4):
+//!
+//! | runner                | paper artifact                          |
+//! |-----------------------|-----------------------------------------|
+//! | [`run_fig2`]          | Fig. 2a/2b — PQ vs 4-bit PQ, recall/QPS |
+//! | [`run_table1`]        | Table 1 — IVF+HNSW+PQ16x4fs at scale    |
+//! | [`run_kernel_micro`]  | Fig. 1 — per-lookup-op cost comparison  |
+//! | [`run_ablation_lut`]  | §2's u8 table quantization              |
+//! | [`run_ablation_layout`]| §3's "carefully maintain the layout"   |
+//! | [`run_pjrt_e2e`]      | 3-layer composition (repo-specific)     |
+
+use crate::datasets::{Dataset, SyntheticDataset};
+use crate::eval::{ground_truth, measure_search, recall_at_r};
+use crate::index::{IndexIvfPq4, IndexPq, IndexPq4FastScan, Index};
+use crate::pq::{PqParams};
+use crate::simd::{available_backends, Backend};
+use crate::util::bench::{black_box, BenchRunner, Table};
+use crate::util::timer::Timer;
+use crate::Result;
+
+/// Dataset selector for the figure runners.
+pub fn make_dataset(name: &str, n: usize, nq: usize, seed: u64) -> Dataset {
+    match name {
+        "sift" => SyntheticDataset::sift_like(n, nq, seed),
+        "deep" => SyntheticDataset::deep_like(n, nq, seed),
+        other => panic!("unknown dataset {other:?} (use sift|deep)"),
+    }
+}
+
+/// Fig. 2: recall@1 vs QPS for original PQ vs 4-bit fastscan PQ, sweeping M.
+///
+/// K = 16 for both (paper: "each vector takes 4M bits"), so the two systems
+/// share codes and accuracy; only the scan differs.
+pub fn run_fig2(
+    dataset: &str,
+    n: usize,
+    nq: usize,
+    ms: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Result<Table> {
+    let ds = make_dataset(dataset, n, nq, seed);
+    let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+    let mut table = Table::new(
+        &format!("Fig2 {dataset} n={n}"),
+        &["M", "method", "recall@1", "ms/query", "QPS", "speedup"],
+    );
+    for &m in ms {
+        if ds.dim % m != 0 {
+            eprintln!("skipping M={m}: dim {} not divisible", ds.dim);
+            continue;
+        }
+        // --- original PQ (naive in-memory LUT scan) ---
+        let mut naive = IndexPq::new(ds.dim, PqParams::new_4bit(m));
+        naive.train(&ds.train)?;
+        naive.add(&ds.base)?;
+        let m_naive = measure_search(&ds.queries, ds.dim, &gt, 1, 1, trials, |q, k| {
+            let r = naive.search(q, k).unwrap();
+            (r.distances, r.labels)
+        });
+
+        // --- 4-bit fastscan PQ ---
+        let mut fast = IndexPq4FastScan::new(ds.dim, m);
+        fast.train(&ds.train)?;
+        fast.add(&ds.base)?;
+        let m_fast = measure_search(&ds.queries, ds.dim, &gt, 1, 1, trials, |q, k| {
+            let r = fast.search(q, k).unwrap();
+            (r.distances, r.labels)
+        });
+
+        let speedup = m_naive.ms_per_query / m_fast.ms_per_query;
+        table.row(vec![
+            m.to_string(),
+            "PQ (naive)".into(),
+            format!("{:.3}", m_naive.recall_at_1),
+            format!("{:.3}", m_naive.ms_per_query),
+            format!("{:.0}", m_naive.qps),
+            "1.0".into(),
+        ]);
+        table.row(vec![
+            m.to_string(),
+            "4-bit PQ (SIMD)".into(),
+            format!("{:.3}", m_fast.recall_at_1),
+            format!("{:.3}", m_fast.ms_per_query),
+            format!("{:.0}", m_fast.qps),
+            format!("{speedup:.1}"),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 1: IVF + HNSW coarse + PQ16x4fs on a Deep1B-like dataset
+/// (scaled to `n`), sweeping nprobe ∈ {1, 2, 4}.
+pub fn run_table1(
+    n: usize,
+    nq: usize,
+    nlist: usize,
+    m: usize,
+    nprobes: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Result<Table> {
+    let ds = SyntheticDataset::deep_like(n, nq, seed);
+    let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+    let mut idx = IndexIvfPq4::new(ds.dim, nlist, m, true, 32);
+    let t_train = Timer::start();
+    idx.train(&ds.train)?;
+    let train_s = t_train.elapsed_s();
+    let t_add = Timer::start();
+    idx.add(&ds.base)?;
+    idx.inner_mut().seal()?;
+    let add_s = t_add.elapsed_s();
+    eprintln!("table1: train {train_s:.1}s, add+seal {add_s:.1}s, bits/vec {:.1}", idx.inner().code_bits_per_vector());
+
+    let mut table = Table::new(
+        &format!("Table1 deep-like n={n}"),
+        &["nlist", "nprobe", "M", "K", "recall@1", "ms/query"],
+    );
+    for &nprobe in nprobes {
+        idx.set_param("nprobe", &nprobe.to_string())?;
+        let meas = measure_search(&ds.queries, ds.dim, &gt, 1, 1, trials, |q, k| {
+            let r = idx.search(q, k).unwrap();
+            (r.distances, r.labels)
+        });
+        table.row(vec![
+            nlist.to_string(),
+            nprobe.to_string(),
+            m.to_string(),
+            "16".into(),
+            format!("{:.3}", meas.recall_at_1),
+            format!("{:.2}", meas.ms_per_query),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Fig. 1 concept micro-benchmark: cost of one ADC lookup step.
+///
+/// Compares (a) the in-memory f32 table gather (Fig. 1a), (b) the portable
+/// dual-lane NEON-emulation shuffle (Fig. 1c as the paper models it), and
+/// (c) the real-SIMD SSSE3 shuffle — per 32-code block.
+pub fn run_kernel_micro(m: usize) -> Table {
+    use crate::pq::fastscan::{accumulate_block_portable, KernelLuts};
+    use crate::pq::lut::QuantizedLuts;
+    use crate::util::rng::Rng;
+
+    let mut rng = Rng::new(0xF16);
+    let m_pad = m.div_ceil(2) * 2;
+    let block: Vec<u8> = (0..16 * m_pad).map(|_| (rng.next_u32() & 0xFF) as u8).collect();
+    let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 8.0).collect();
+    let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
+    let kluts = KernelLuts::build(&qluts, m_pad);
+    let codes: Vec<u8> = (0..32 * m).map(|_| (rng.next_u32() % 16) as u8).collect();
+
+    let runner = BenchRunner::default();
+    let mut table = Table::new(
+        &format!("Fig1 lookup micro (M={m}, per 32-code block)"),
+        &["method", "ns/block", "ns/code", "rel"],
+    );
+
+    // (a) memory-lookup baseline: 32 codes × m f32 gathers
+    let mem = runner.bench("memory LUT", || {
+        let mut total = 0.0f32;
+        for i in 0..32 {
+            let c = &codes[i * m..(i + 1) * m];
+            let mut d = 0.0f32;
+            for mi in 0..m {
+                d += luts_f32[mi * 16 + c[mi] as usize];
+            }
+            total += d;
+        }
+        black_box(total);
+    });
+
+    // (b) portable dual-lane emulation (ARMv8: 2 × 128-bit Q-registers)
+    let mut out = [0u16; 32];
+    let portable = runner.bench("portable dual-lane", || {
+        accumulate_block_portable(&block, &kluts, &mut out);
+        black_box(out[0]);
+    });
+
+    // (b') ARMv7 model: 4 × 64-bit D-registers + vtbl2 (paper §3 notes
+    // ARMv7 only has 64-bit registers — this is that fallback)
+    let armv7 = runner.bench("portable quad-64bit (ARMv7)", || {
+        crate::simd::u8x8::accumulate_block_armv7(&block, &kluts, &mut out);
+        black_box(out[0]);
+    });
+
+    // (c) real SIMD if available
+    let ssse3 = if available_backends().contains(&Backend::Ssse3) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            use crate::pq::fastscan::accumulate_block_ssse3;
+            Some(runner.bench("ssse3 dual-lane", || {
+                unsafe { accumulate_block_ssse3(&block, &kluts, &mut out) };
+                black_box(out[0]);
+            }))
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            None
+        }
+    } else {
+        None
+    };
+
+    let base = mem.ns_per_iter();
+    for meas in [Some(mem), Some(armv7), Some(portable), ssse3].into_iter().flatten() {
+        table.row(vec![
+            meas.name.clone(),
+            format!("{:.1}", meas.ns_per_iter()),
+            format!("{:.2}", meas.ns_per_iter() / 32.0),
+            format!("{:.2}x", base / meas.ns_per_iter()),
+        ]);
+    }
+    table
+}
+
+/// Ablation: u8 LUT quantization (with/without re-ranking) vs exact f32
+/// tables — quantifies the accuracy cost of Eq. 4's approximation.
+pub fn run_ablation_lut(dataset: &str, n: usize, nq: usize, m: usize, seed: u64) -> Result<Table> {
+    let ds = make_dataset(dataset, n, nq, seed);
+    let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+    let mut table = Table::new(
+        &format!("Ablation LUT quantization ({dataset}, M={m})"),
+        &["variant", "recall@1", "recall@10"],
+    );
+
+    // exact f32 scan (naive PQ — upper bound for these codes)
+    let mut naive = IndexPq::new(ds.dim, PqParams::new_4bit(m));
+    naive.train(&ds.train)?;
+    naive.add(&ds.base)?;
+    let r = naive.search(&ds.queries, 10)?;
+    table.row(vec![
+        "f32 LUT (exact ADC)".into(),
+        format!("{:.3}", recall_at_r(&gt, 1, &r.labels, 10, 1)),
+        format!("{:.3}", recall_at_r(&gt, 1, &r.labels, 10, 10)),
+    ]);
+
+    for (rerank, label) in [(true, "u8 LUT + rerank"), (false, "u8 LUT, no rerank")] {
+        let mut fast = IndexPq4FastScan::new(ds.dim, m);
+        fast.train(&ds.train)?;
+        fast.add(&ds.base)?;
+        fast.set_param("rerank", if rerank { "true" } else { "false" })?;
+        let r = fast.search(&ds.queries, 10)?;
+        table.row(vec![
+            label.into(),
+            format!("{:.3}", recall_at_r(&gt, 1, &r.labels, 10, 1)),
+            format!("{:.3}", recall_at_r(&gt, 1, &r.labels, 10, 10)),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Ablation: interleaved block layout + SIMD vs flat 4-bit codes + scalar
+/// gather — isolates how much of the speedup is the layout+shuffle combo.
+pub fn run_ablation_layout(n: usize, m: usize, seed: u64) -> Table {
+    use crate::pq::fastscan::{fastscan_distances_all, KernelLuts};
+    use crate::pq::lut::QuantizedLuts;
+    use crate::pq::PackedCodes4;
+    use crate::util::rng::Rng;
+
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
+    let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 8.0).collect();
+    let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
+    let packed = PackedCodes4::pack(&codes, m).unwrap();
+    let kluts = KernelLuts::build(&qluts, packed.m_pad);
+
+    // flat 4-bit packing (two codes per byte, no interleave)
+    let mut flat = vec![0u8; (n * m).div_ceil(2)];
+    for (i, &c) in codes.iter().enumerate() {
+        flat[i / 2] |= c << (4 * (i % 2));
+    }
+
+    let runner = BenchRunner::default();
+    let mut table = Table::new(
+        &format!("Ablation code layout (n={n}, M={m})"),
+        &["variant", "ms/scan", "codes/s", "rel"],
+    );
+
+    let backend = crate::simd::best_backend();
+    let interleaved = runner.bench("interleaved+simd", || {
+        black_box(fastscan_distances_all(&packed, &kluts, backend));
+    });
+    let flat_scan = runner.bench("flat+scalar", || {
+        let mut out = vec![0u16; n];
+        for i in 0..n {
+            let mut acc = 0u16;
+            for mi in 0..m {
+                let idx = i * m + mi;
+                let byte = flat[idx / 2];
+                let code = (byte >> (4 * (idx % 2))) & 0xF;
+                acc = acc.saturating_add(qluts.row(mi)[code as usize] as u16);
+            }
+            out[i] = acc;
+        }
+        black_box(out);
+    });
+    let base = flat_scan.sec_per_iter;
+    for meas in [flat_scan, interleaved] {
+        table.row(vec![
+            meas.name.clone(),
+            format!("{:.3}", meas.ms_per_iter()),
+            format!("{:.2e}", n as f64 * meas.per_sec()),
+            format!("{:.2}x", base / meas.sec_per_iter),
+        ]);
+    }
+    table
+}
+
+/// Three-layer end-to-end: the PJRT search artifact driven from rust,
+/// compared against the in-process rust kernel on the same data.
+pub fn run_pjrt_e2e(artifacts_dir: &std::path::Path, trials: usize) -> Result<Table> {
+    use crate::coordinator::service::{PjrtBackend, SearchBackend};
+    use crate::runtime::EngineHandle;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    let engine = Arc::new(EngineHandle::spawn(artifacts_dir.to_path_buf())?);
+    let meta = engine
+        .manifest
+        .find_by("search", &[("d", 64)])
+        .ok_or_else(|| crate::Error::Runtime("no search artifact for d=64".into()))?;
+    let (q, n, d, m, k) = (
+        meta.params["q"],
+        meta.params["n"],
+        meta.params["d"],
+        meta.params["m"],
+        meta.params["k"],
+    );
+    let name = meta.name.clone();
+    let mut rng = Rng::new(314);
+    let codes: Vec<i32> = (0..n * m).map(|_| (rng.next_u32() % 16) as i32).collect();
+    let codebooks: Vec<f32> = (0..m * 16 * (d / m)).map(|_| rng.next_gaussian()).collect();
+    let queries: Vec<f32> = (0..q * d).map(|_| rng.next_gaussian()).collect();
+
+    let backend = PjrtBackend::new(engine.clone(), d, codes.clone(), codebooks.clone())?;
+    engine.warm(&name)?;
+
+    let mut table = Table::new(
+        &format!("PJRT e2e (artifact {name})"),
+        &["path", "ms/batch", "queries/s"],
+    );
+    let runner = BenchRunner { runs: trials, ..Default::default() };
+
+    let pjrt = runner.bench("pjrt artifact", || {
+        black_box(backend.search_batch(&queries, k).unwrap());
+    });
+
+    // rust in-process equivalent on the same codes (quantized, no rerank)
+    use crate::pq::fastscan::{fastscan_distances_all, KernelLuts};
+    use crate::pq::lut::QuantizedLuts;
+    use crate::pq::PackedCodes4;
+    let codes_u8: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
+    let packed = PackedCodes4::pack(&codes_u8, m).unwrap();
+    let backend_simd = crate::simd::best_backend();
+    let dsub = d / m;
+    let rust = runner.bench("rust in-process", || {
+        for qi in 0..q {
+            let qrow = &queries[qi * d..(qi + 1) * d];
+            let mut luts = vec![0.0f32; m * 16];
+            for mi in 0..m {
+                for kk in 0..16 {
+                    let c = &codebooks[(mi * 16 + kk) * dsub..(mi * 16 + kk + 1) * dsub];
+                    luts[mi * 16 + kk] = crate::util::l2_sq(&qrow[mi * dsub..(mi + 1) * dsub], c);
+                }
+            }
+            let qluts = QuantizedLuts::from_f32(&luts, m, 16);
+            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            black_box(fastscan_distances_all(&packed, &kluts, backend_simd));
+        }
+    });
+
+    for meas in [pjrt, rust] {
+        table.row(vec![
+            meas.name.clone(),
+            format!("{:.2}", meas.ms_per_iter()),
+            format!("{:.0}", q as f64 * meas.per_sec()),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_small_smoke() {
+        std::env::set_var("ARMPQ_BENCH_FAST", "1");
+        let t = run_fig2("sift", 2000, 10, &[8], 1, 42).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        // both methods report the same-ish recall (Fig. 2 claim)
+        let rec_naive: f64 = t.rows[0][2].parse().unwrap();
+        let rec_fast: f64 = t.rows[1][2].parse().unwrap();
+        assert!((rec_naive - rec_fast).abs() <= 0.15, "{rec_naive} vs {rec_fast}");
+    }
+
+    #[test]
+    fn table1_small_smoke() {
+        let t = run_table1(3000, 10, 16, 16, &[1, 2], 1, 43).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        // nprobe=2 recall >= nprobe=1 recall (allow small noise)
+        let r1: f64 = t.rows[0][4].parse().unwrap();
+        let r2: f64 = t.rows[1][4].parse().unwrap();
+        assert!(r2 + 0.1 >= r1, "r1={r1} r2={r2}");
+    }
+
+    #[test]
+    fn kernel_micro_runs() {
+        std::env::set_var("ARMPQ_BENCH_FAST", "1");
+        let t = run_kernel_micro(16);
+        assert!(t.rows.len() >= 2);
+    }
+
+    #[test]
+    fn ablation_lut_ordering() {
+        let t = run_ablation_lut("sift", 2000, 20, 8, 44).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        let exact: f64 = t.rows[0][1].parse().unwrap();
+        let rerank: f64 = t.rows[1][1].parse().unwrap();
+        // re-ranked must track the exact ADC closely
+        assert!((exact - rerank).abs() <= 0.1, "exact {exact} rerank {rerank}");
+    }
+
+    #[test]
+    fn ablation_layout_runs() {
+        std::env::set_var("ARMPQ_BENCH_FAST", "1");
+        let t = run_ablation_layout(32 * 100, 8, 45);
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,458 @@
+//! Hierarchical Navigable Small World graphs (Malkov & Yashunin, 2020).
+//!
+//! Substrate for the paper's §4/§5.2 pipeline: *"(1) using HNSW for coarse
+//! quantization, and (2) using 4-bit PQ for distance estimation"*. The
+//! graph indexes the `nlist` IVF representative vectors (μ₁…μ_nlist), so
+//! coarse assignment of a query is a graph walk instead of a linear scan
+//! over 30 000 centroids.
+//!
+//! Implementation follows the paper's Algorithm 1–5: exponentially
+//! distributed level assignment, greedy descent on upper layers,
+//! `ef`-bounded best-first search on layer 0, and the *heuristic* neighbor
+//! selection rule (shrink by dominance, Algorithm 4) that keeps the graph
+//! navigable.
+
+use crate::util::l2_sq;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use std::collections::BinaryHeap;
+
+/// HNSW construction/search parameters.
+#[derive(Clone, Debug)]
+pub struct HnswParams {
+    /// Max out-degree per node on layers > 0 (layer 0 gets 2×).
+    pub m: usize,
+    /// Candidate-list width during construction.
+    pub ef_construction: usize,
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        // M=32 matches the factory string "HNSW32" used in the evaluation.
+        Self { m: 32, ef_construction: 64, seed: 2024 }
+    }
+}
+
+/// Ordered float wrapper for heaps.
+#[derive(PartialEq)]
+struct Cand {
+    d: f32,
+    id: u32,
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap by distance
+        self.d.partial_cmp(&other.d).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Min-heap adapter.
+struct MinCand(Cand);
+impl PartialEq for MinCand {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.d == other.0.d
+    }
+}
+impl Eq for MinCand {}
+impl PartialOrd for MinCand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MinCand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.cmp(&self.0)
+    }
+}
+
+/// One node's adjacency across its levels.
+#[derive(Clone, Debug, Default)]
+struct Node {
+    /// `neighbors[l]` = out-edges on level `l` (0 ≤ l ≤ level).
+    neighbors: Vec<Vec<u32>>,
+}
+
+/// An HNSW index over explicitly stored vectors.
+#[derive(Debug)]
+pub struct Hnsw {
+    pub dim: usize,
+    params: HnswParams,
+    /// mult = 1 / ln(M) — level sampling temperature.
+    mult: f64,
+    vectors: Vec<f32>,
+    nodes: Vec<Node>,
+    entry: u32,
+    max_level: usize,
+    rng: Rng,
+}
+
+impl Hnsw {
+    pub fn new(dim: usize, params: HnswParams) -> Self {
+        let mult = 1.0 / (params.m as f64).ln();
+        Self {
+            dim,
+            rng: Rng::new(params.seed),
+            params,
+            mult,
+            vectors: Vec::new(),
+            nodes: Vec::new(),
+            entry: 0,
+            max_level: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    #[inline]
+    fn vec_of(&self, id: u32) -> &[f32] {
+        &self.vectors[id as usize * self.dim..(id as usize + 1) * self.dim]
+    }
+
+    fn random_level(&mut self) -> usize {
+        let u = self.rng.next_f64().max(f64::MIN_POSITIVE);
+        ((-u.ln()) * self.mult).floor() as usize
+    }
+
+    /// Insert all rows of `data` (`n × dim`).
+    pub fn add_batch(&mut self, data: &[f32]) -> Result<()> {
+        if data.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: data.len() % self.dim });
+        }
+        for row in data.chunks(self.dim) {
+            self.add_one(row);
+        }
+        Ok(())
+    }
+
+    /// Insert a single vector.
+    pub fn add_one(&mut self, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        let id = self.nodes.len() as u32;
+        self.vectors.extend_from_slice(x);
+        let level = self.random_level();
+        self.nodes.push(Node { neighbors: vec![Vec::new(); level + 1] });
+
+        if id == 0 {
+            self.entry = 0;
+            self.max_level = level;
+            return;
+        }
+
+        let mut ep = self.entry;
+        // greedy descent through layers above `level`
+        let mut l = self.max_level;
+        while l > level {
+            ep = self.greedy_closest(x, ep, l);
+            if l == 0 {
+                break;
+            }
+            l -= 1;
+        }
+        // insert on layers min(level, max_level)..0
+        let top = level.min(self.max_level);
+        let mut eps = vec![ep];
+        for lc in (0..=top).rev() {
+            let cands = self.search_layer(x, &eps, self.params.ef_construction, lc);
+            let max_deg = if lc == 0 { self.params.m * 2 } else { self.params.m };
+            let selected = self.select_neighbors_heuristic(&cands, self.params.m);
+            for &(_, nb) in &selected {
+                self.link(id, nb, lc, max_deg);
+                self.link(nb, id, lc, max_deg);
+            }
+            eps = cands.iter().map(|&(_, i)| i).collect();
+            if eps.is_empty() {
+                eps = vec![ep];
+            }
+        }
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry = id;
+        }
+    }
+
+    /// Add a directed edge, shrinking with the heuristic when over degree.
+    fn link(&mut self, from: u32, to: u32, level: usize, max_deg: usize) {
+        if from == to {
+            return;
+        }
+        let nbrs = &mut self.nodes[from as usize].neighbors[level];
+        if nbrs.contains(&to) {
+            return;
+        }
+        nbrs.push(to);
+        if nbrs.len() > max_deg {
+            // re-select among current neighbors by the dominance heuristic
+            let base = self.vec_of(from).to_vec();
+            let cand: Vec<(f32, u32)> = self.nodes[from as usize].neighbors[level]
+                .iter()
+                .map(|&nb| (l2_sq(&base, self.vec_of(nb)), nb))
+                .collect();
+            let kept = self.select_neighbors_heuristic(&cand, max_deg);
+            self.nodes[from as usize].neighbors[level] = kept.iter().map(|&(_, i)| i).collect();
+        }
+    }
+
+    /// Algorithm 4: keep candidates not dominated by an already-kept
+    /// neighbor (`d(c, kept) < d(c, base)` → drop c).
+    fn select_neighbors_heuristic(&self, cands: &[(f32, u32)], m: usize) -> Vec<(f32, u32)> {
+        let mut sorted: Vec<(f32, u32)> = cands.to_vec();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut kept: Vec<(f32, u32)> = Vec::with_capacity(m);
+        for &(d, c) in &sorted {
+            if kept.len() >= m {
+                break;
+            }
+            let cv = self.vec_of(c);
+            let dominated = kept.iter().any(|&(_, k)| l2_sq(cv, self.vec_of(k)) < d);
+            if !dominated {
+                kept.push((d, c));
+            }
+        }
+        // backfill with nearest dominated candidates if underfull
+        if kept.len() < m {
+            for &(d, c) in &sorted {
+                if kept.len() >= m {
+                    break;
+                }
+                if !kept.iter().any(|&(_, k)| k == c) {
+                    kept.push((d, c));
+                }
+            }
+        }
+        kept
+    }
+
+    /// Greedy single-step descent to the local minimum on `level`.
+    fn greedy_closest(&self, x: &[f32], mut ep: u32, level: usize) -> u32 {
+        let mut best = l2_sq(x, self.vec_of(ep));
+        loop {
+            let mut improved = false;
+            for &nb in &self.nodes[ep as usize].neighbors[level] {
+                let d = l2_sq(x, self.vec_of(nb));
+                if d < best {
+                    best = d;
+                    ep = nb;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return ep;
+            }
+        }
+    }
+
+    /// Algorithm 2: ef-bounded best-first search on one layer.
+    /// Returns up to `ef` `(distance, id)` pairs, ascending.
+    fn search_layer(&self, x: &[f32], eps: &[u32], ef: usize, level: usize) -> Vec<(f32, u32)> {
+        let mut visited = vec![false; self.nodes.len()];
+        let mut top: BinaryHeap<Cand> = BinaryHeap::new(); // max-heap of results
+        let mut queue: BinaryHeap<MinCand> = BinaryHeap::new(); // min-heap frontier
+        for &ep in eps {
+            if visited[ep as usize] {
+                continue;
+            }
+            visited[ep as usize] = true;
+            let d = l2_sq(x, self.vec_of(ep));
+            top.push(Cand { d, id: ep });
+            queue.push(MinCand(Cand { d, id: ep }));
+        }
+        while let Some(MinCand(c)) = queue.pop() {
+            let worst = top.peek().map(|w| w.d).unwrap_or(f32::INFINITY);
+            if c.d > worst && top.len() >= ef {
+                break;
+            }
+            for &nb in &self.nodes[c.id as usize].neighbors[level] {
+                if visited[nb as usize] {
+                    continue;
+                }
+                visited[nb as usize] = true;
+                let d = l2_sq(x, self.vec_of(nb));
+                let worst = top.peek().map(|w| w.d).unwrap_or(f32::INFINITY);
+                if top.len() < ef || d < worst {
+                    top.push(Cand { d, id: nb });
+                    if top.len() > ef {
+                        top.pop();
+                    }
+                    queue.push(MinCand(Cand { d, id: nb }));
+                }
+            }
+        }
+        let mut out: Vec<(f32, u32)> = top.into_iter().map(|c| (c.d, c.id)).collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+
+    /// k-NN query: greedy descent to layer 0, then ef-bounded search.
+    /// Returns `(distances, ids)` ascending, padded with `(INF, -1)`.
+    pub fn search(&self, x: &[f32], k: usize, ef: usize) -> (Vec<f32>, Vec<i64>) {
+        if self.is_empty() {
+            return (vec![f32::INFINITY; k], vec![-1; k]);
+        }
+        let mut ep = self.entry;
+        for l in (1..=self.max_level).rev() {
+            ep = self.greedy_closest(x, ep, l);
+        }
+        let ef = ef.max(k);
+        let found = self.search_layer(x, &[ep], ef, 0);
+        let mut d: Vec<f32> = found.iter().take(k).map(|&(dd, _)| dd).collect();
+        let mut ids: Vec<i64> = found.iter().take(k).map(|&(_, i)| i as i64).collect();
+        while d.len() < k {
+            d.push(f32::INFINITY);
+            ids.push(-1);
+        }
+        (d, ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * dim).map(|_| rng.next_gaussian()).collect()
+    }
+
+    fn brute_knn(data: &[f32], dim: usize, q: &[f32], k: usize) -> Vec<i64> {
+        let n = data.len() / dim;
+        let mut d: Vec<(f32, i64)> =
+            (0..n).map(|i| (l2_sq(q, &data[i * dim..(i + 1) * dim]), i as i64)).collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        d.truncate(k);
+        d.into_iter().map(|(_, i)| i).collect()
+    }
+
+    #[test]
+    fn exact_on_tiny_graph() {
+        let dim = 4;
+        let data = random_data(30, dim, 41);
+        let mut h = Hnsw::new(dim, HnswParams::default());
+        h.add_batch(&data).unwrap();
+        for qi in 0..10 {
+            let q = &data[qi * dim..(qi + 1) * dim];
+            let (_d, ids) = h.search(q, 1, 32);
+            assert_eq!(ids[0], qi as i64, "self-query must find itself");
+        }
+    }
+
+    #[test]
+    fn high_recall_on_medium_graph() {
+        let dim = 16;
+        let n = 2000;
+        let data = random_data(n, dim, 42);
+        let mut h = Hnsw::new(dim, HnswParams { m: 16, ef_construction: 64, seed: 7 });
+        h.add_batch(&data).unwrap();
+        let queries = random_data(100, dim, 43);
+        let mut hits = 0;
+        for q in queries.chunks(dim) {
+            let gt = brute_knn(&data, dim, q, 1);
+            let (_d, ids) = h.search(q, 1, 64);
+            if ids[0] == gt[0] {
+                hits += 1;
+            }
+        }
+        let recall = hits as f64 / 100.0;
+        assert!(recall >= 0.95, "recall@1 = {recall}");
+    }
+
+    #[test]
+    fn recall_improves_with_ef() {
+        let dim = 8;
+        let n = 1500;
+        let data = random_data(n, dim, 44);
+        let mut h = Hnsw::new(dim, HnswParams { m: 8, ef_construction: 40, seed: 8 });
+        h.add_batch(&data).unwrap();
+        let queries = random_data(200, dim, 45);
+        let mut recall = [0usize; 2];
+        for q in queries.chunks(dim) {
+            let gt = brute_knn(&data, dim, q, 1)[0];
+            for (j, ef) in [2usize, 64].into_iter().enumerate() {
+                let (_d, ids) = h.search(q, 1, ef);
+                if ids[0] == gt {
+                    recall[j] += 1;
+                }
+            }
+        }
+        assert!(recall[1] > recall[0], "ef=64 {} !> ef=2 {}", recall[1], recall[0]);
+        assert!(recall[1] >= 190, "ef=64 recall {}", recall[1]);
+    }
+
+    #[test]
+    fn distances_sorted_and_padded() {
+        let dim = 4;
+        let data = random_data(10, dim, 46);
+        let mut h = Hnsw::new(dim, HnswParams::default());
+        h.add_batch(&data).unwrap();
+        let (d, ids) = h.search(&data[..dim], 20, 40);
+        assert_eq!(d.len(), 20);
+        for w in d.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert_eq!(ids.iter().filter(|&&i| i == -1).count(), 10);
+    }
+
+    #[test]
+    fn empty_graph_search() {
+        let h = Hnsw::new(4, HnswParams::default());
+        let (d, ids) = h.search(&[0.0; 4], 3, 10);
+        assert!(d.iter().all(|x| x.is_infinite()));
+        assert!(ids.iter().all(|&i| i == -1));
+    }
+
+    #[test]
+    fn degree_bounds_respected() {
+        let dim = 8;
+        let data = random_data(500, dim, 47);
+        let p = HnswParams { m: 6, ef_construction: 30, seed: 9 };
+        let mut h = Hnsw::new(dim, p.clone());
+        h.add_batch(&data).unwrap();
+        for node in &h.nodes {
+            for (l, nbrs) in node.neighbors.iter().enumerate() {
+                let cap = if l == 0 { p.m * 2 } else { p.m };
+                assert!(nbrs.len() <= cap, "level {l} degree {} > {cap}", nbrs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let dim = 8;
+        let data = random_data(300, dim, 48);
+        let mk = || {
+            let mut h = Hnsw::new(dim, HnswParams { m: 8, ef_construction: 32, seed: 10 });
+            h.add_batch(&data).unwrap();
+            h
+        };
+        let a = mk();
+        let b = mk();
+        let q = &data[..dim];
+        assert_eq!(a.search(q, 5, 32).1, b.search(q, 5, 32).1);
+    }
+
+    #[test]
+    fn duplicate_vectors_handled() {
+        let dim = 4;
+        let mut data = random_data(50, dim, 49);
+        let dup = data[..dim].to_vec();
+        for _ in 0..10 {
+            data.extend_from_slice(&dup); // 10 duplicates of vector 0
+        }
+        let mut h = Hnsw::new(dim, HnswParams::default());
+        h.add_batch(&data).unwrap();
+        let (d, _ids) = h.search(&dup, 5, 32);
+        assert!(d[..5].iter().all(|&x| x < 1e-9), "dups at distance 0: {d:?}");
+    }
+}

@@ -1,0 +1,134 @@
+//! faiss-style index factory strings.
+//!
+//! Grammar (subset of the faiss factory covering the paper's configs):
+//!
+//! ```text
+//!   "Flat"                      exact scan
+//!   "PQ16x4"                    naive 4-bit PQ (Fig. 2 baseline)
+//!   "PQ16x8"  /  "PQ16"         naive 8-bit PQ
+//!   "PQ16x4fs"                  4-bit fastscan (the paper's kernel)
+//!   "IVF1000,PQ16x4fs"          IVF + flat coarse + fastscan
+//!   "IVF30000_HNSW32,PQ16x4fs"  IVF + HNSW coarse + fastscan (Table 1)
+//! ```
+
+use super::pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
+use super::{flat::IndexFlat, Index};
+use crate::pq::PqParams;
+use crate::{Error, Result};
+
+/// Create an index from a factory string.
+pub fn index_factory(dim: usize, spec: &str) -> Result<Box<dyn Index>> {
+    let spec = spec.trim();
+    let err = |msg: &str| Error::Factory(spec.to_string(), msg.to_string());
+
+    if spec.eq_ignore_ascii_case("flat") {
+        return Ok(Box::new(IndexFlat::new(dim)));
+    }
+
+    let parts: Vec<&str> = spec.split(',').map(|s| s.trim()).collect();
+    match parts.as_slice() {
+        [pq_spec] => {
+            let pq = parse_pq(pq_spec).ok_or_else(|| err("expected PQ<m>[x<bits>][fs]"))?;
+            build_flat_pq(dim, pq, spec)
+        }
+        [ivf_spec, pq_spec] => {
+            let (nlist, hnsw_m) =
+                parse_ivf(ivf_spec).ok_or_else(|| err("expected IVF<nlist>[_HNSW<m>]"))?;
+            let pq = parse_pq(pq_spec).ok_or_else(|| err("expected PQ<m>x4fs after IVF"))?;
+            if !(pq.nbits == 4 && pq.fastscan) {
+                return Err(err("IVF composition requires PQ<m>x4fs"));
+            }
+            Ok(Box::new(IndexIvfPq4::new(
+                dim,
+                nlist,
+                pq.m,
+                hnsw_m.is_some(),
+                hnsw_m.unwrap_or(32),
+            )))
+        }
+        _ => Err(err("too many components")),
+    }
+}
+
+struct PqSpec {
+    m: usize,
+    nbits: usize,
+    fastscan: bool,
+}
+
+fn parse_pq(s: &str) -> Option<PqSpec> {
+    let rest = s.strip_prefix("PQ")?;
+    let (body, fastscan) = match rest.strip_suffix("fs") {
+        Some(b) => (b, true),
+        None => (rest, false),
+    };
+    let (m, nbits) = match body.split_once('x') {
+        Some((m, b)) => (m.parse().ok()?, b.parse().ok()?),
+        None => (body.parse().ok()?, 8usize),
+    };
+    if m == 0 {
+        return None;
+    }
+    Some(PqSpec { m, nbits, fastscan })
+}
+
+fn parse_ivf(s: &str) -> Option<(usize, Option<usize>)> {
+    let rest = s.strip_prefix("IVF")?;
+    match rest.split_once("_HNSW") {
+        Some((nlist, m)) => Some((nlist.parse().ok()?, Some(m.parse().ok()?))),
+        None => Some((rest.parse().ok()?, None)),
+    }
+}
+
+fn build_flat_pq(dim: usize, pq: PqSpec, spec: &str) -> Result<Box<dyn Index>> {
+    match (pq.nbits, pq.fastscan) {
+        (4, true) => Ok(Box::new(IndexPq4FastScan::new(dim, pq.m))),
+        (4, false) => Ok(Box::new(IndexPq::new(dim, PqParams::new_4bit(pq.m)))),
+        (8, false) => Ok(Box::new(IndexPq::new(dim, PqParams::new_8bit(pq.m)))),
+        (b, true) if b != 4 => {
+            Err(Error::Factory(spec.to_string(), "fastscan requires 4-bit codes".into()))
+        }
+        (b, _) => Err(Error::Factory(spec.to_string(), format!("unsupported nbits {b}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticDataset;
+
+    #[test]
+    fn parses_all_paper_configs() {
+        for spec in ["Flat", "PQ8x4", "PQ16x4fs", "PQ4", "PQ4x8", "IVF100,PQ16x4fs", "IVF100_HNSW32,PQ16x4fs"] {
+            let idx = index_factory(64, spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(idx.dim(), 64, "{spec}");
+        }
+    }
+
+    #[test]
+    fn descriptions_roundtrip_key_facts() {
+        let idx = index_factory(32, "IVF50_HNSW16,PQ8x4fs").unwrap();
+        let d = idx.describe();
+        assert!(d.contains("IVF50"), "{d}");
+        assert!(d.contains("HNSW16"), "{d}");
+        assert!(d.contains("PQ8x4fs"), "{d}");
+    }
+
+    #[test]
+    fn rejects_nonsense() {
+        for spec in ["", "IVF", "PQ0x4fs", "PQx4", "IVF10,PQ8x8", "IVF10,Flat", "A,B,C", "PQ8x6fs"] {
+            assert!(index_factory(16, spec).is_err(), "{spec:?} should fail");
+        }
+    }
+
+    #[test]
+    fn factory_index_end_to_end() {
+        let ds = SyntheticDataset::gaussian(500, 5, 16, 111);
+        let mut idx = index_factory(ds.dim, "PQ4x4fs").unwrap();
+        idx.train(&ds.base).unwrap();
+        idx.add(&ds.base).unwrap();
+        let r = idx.search(&ds.queries, 3).unwrap();
+        assert_eq!(r.nq(), 5);
+        assert!(r.labels.iter().all(|&l| l >= -1 && l < 500));
+    }
+}

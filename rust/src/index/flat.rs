@@ -1,0 +1,123 @@
+//! Exact brute-force index (ground truth / small-scale baseline).
+
+use super::{Index, SearchResult};
+use crate::util::threads::{default_threads, parallel_map};
+use crate::util::topk::TopK;
+use crate::{Error, Result};
+
+/// Uncompressed exact-L2 index.
+pub struct IndexFlat {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl IndexFlat {
+    pub fn new(dim: usize) -> Self {
+        Self { dim, data: Vec::new() }
+    }
+
+    /// Raw stored vectors (`ntotal × dim`).
+    pub fn vectors(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl Index for IndexFlat {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn ntotal(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    fn is_trained(&self) -> bool {
+        true // nothing to train
+    }
+
+    fn train(&mut self, _data: &[f32]) -> Result<()> {
+        Ok(())
+    }
+
+    fn add(&mut self, data: &[f32]) -> Result<()> {
+        if data.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: data.len() % self.dim });
+        }
+        self.data.extend_from_slice(data);
+        Ok(())
+    }
+
+    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+        if queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        }
+        let nq = queries.len() / self.dim;
+        let n = self.ntotal();
+        let dim = self.dim;
+        let data = &self.data;
+        let rows: Vec<(Vec<f32>, Vec<i64>)> = parallel_map(nq, default_threads(), |qi| {
+            let q = &queries[qi * dim..(qi + 1) * dim];
+            let mut heap = TopK::new(k);
+            for i in 0..n {
+                let d = crate::util::l2_sq(q, &data[i * dim..(i + 1) * dim]);
+                if d < heap.threshold() {
+                    heap.push(d, i as i64);
+                }
+            }
+            heap.into_sorted()
+        });
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for (d, l) in rows {
+            distances.extend(d);
+            labels.extend(l);
+        }
+        Ok(SearchResult { k, distances, labels })
+    }
+
+    fn describe(&self) -> String {
+        format!("Flat(d={}, n={})", self.dim, self.ntotal())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_search() {
+        let dim = 8;
+        let mut rng = Rng::new(91);
+        let data: Vec<f32> = (0..200 * dim).map(|_| rng.next_gaussian()).collect();
+        let mut idx = IndexFlat::new(dim);
+        idx.add(&data).unwrap();
+        assert_eq!(idx.ntotal(), 200);
+        // query = row 13 exactly
+        let r = idx.search(&data[13 * dim..14 * dim], 3).unwrap();
+        assert_eq!(r.labels[0], 13);
+        assert!(r.distances[0] < 1e-9);
+        // distances ascending
+        assert!(r.distances[0] <= r.distances[1] && r.distances[1] <= r.distances[2]);
+    }
+
+    #[test]
+    fn batch_queries() {
+        let dim = 4;
+        let data: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        let mut idx = IndexFlat::new(dim);
+        idx.add(&data).unwrap();
+        let queries = data[..2 * dim].to_vec();
+        let r = idx.search(&queries, 2).unwrap();
+        assert_eq!(r.nq(), 2);
+        assert_eq!(r.row(0)[0], 0);
+        assert_eq!(r.row(1)[0], 1);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut idx = IndexFlat::new(4);
+        assert!(idx.add(&[1.0; 3]).is_err());
+        assert!(idx.search(&[1.0; 5], 1).is_err());
+    }
+}

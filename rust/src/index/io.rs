@@ -1,0 +1,323 @@
+//! Index persistence: compact little-endian binary format with magic +
+//! version, so trained indexes are built once and served forever
+//! (the deployment story behind `armpq serve`).
+//!
+//! Layout: `ARMPQIDX` magic, u32 version, u32 kind tag, then kind-specific
+//! sections. Only fixed-width LE integers/floats — no serde dependency.
+
+use crate::index::pq_index::IndexPq4FastScan;
+use crate::ivf::{IvfParams, IvfPq4};
+use crate::pq::{PqParams, ProductQuantizer};
+use crate::{Error, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"ARMPQIDX";
+const VERSION: u32 = 1;
+const KIND_PQ4FS: u32 = 1;
+const KIND_IVFPQ4: u32 = 2;
+
+// ------------------------------------------------------------ primitives
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, x: u32) -> Result<()> {
+        self.w.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+    fn u64(&mut self, x: u64) -> Result<()> {
+        self.w.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+    fn f32s(&mut self, xs: &[f32]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn bytes(&mut self, xs: &[u8]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        self.w.write_all(xs)?;
+        Ok(())
+    }
+    fn i64s(&mut self, xs: &[i64]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn len_checked(&mut self, elem: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        // 16 GiB sanity cap against corrupt headers
+        if n.saturating_mul(elem) > 16 << 30 {
+            return Err(Error::Dataset(format!("corrupt length {n}")));
+        }
+        Ok(n)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_checked(4)?;
+        let mut out = vec![0f32; n];
+        let mut b = [0u8; 4];
+        for x in &mut out {
+            self.r.read_exact(&mut b)?;
+            *x = f32::from_le_bytes(b);
+        }
+        Ok(out)
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.len_checked(1)?;
+        let mut out = vec![0u8; n];
+        self.r.read_exact(&mut out)?;
+        Ok(out)
+    }
+    fn i64s(&mut self) -> Result<Vec<i64>> {
+        let n = self.len_checked(8)?;
+        let mut out = vec![0i64; n];
+        let mut b = [0u8; 8];
+        for x in &mut out {
+            self.r.read_exact(&mut b)?;
+            *x = i64::from_le_bytes(b);
+        }
+        Ok(out)
+    }
+}
+
+fn write_pq<W: Write>(w: &mut Writer<W>, pq: &ProductQuantizer) -> Result<()> {
+    w.u32(pq.dim as u32)?;
+    w.u32(pq.m as u32)?;
+    w.u32(pq.ksub as u32)?;
+    w.f32s(&pq.centroids)
+}
+
+fn read_pq<R: Read>(r: &mut Reader<R>) -> Result<ProductQuantizer> {
+    let dim = r.u32()? as usize;
+    let m = r.u32()? as usize;
+    let ksub = r.u32()? as usize;
+    if m == 0 || dim % m != 0 {
+        return Err(Error::Dataset("corrupt PQ header".into()));
+    }
+    let centroids = r.f32s()?;
+    if centroids.len() != m * ksub * (dim / m) {
+        return Err(Error::Dataset("PQ centroid size mismatch".into()));
+    }
+    Ok(ProductQuantizer { dim, m, ksub, dsub: dim / m, centroids })
+}
+
+// ------------------------------------------------------------ flat PQ4fs
+
+/// Save a trained+filled [`IndexPq4FastScan`].
+pub fn save_pq4fs(index: &IndexPq4FastScan, path: &Path) -> Result<()> {
+    let pq = index.pq().ok_or(Error::NotTrained)?;
+    let f = std::fs::File::create(path)?;
+    let mut w = Writer { w: BufWriter::new(f) };
+    w.w.write_all(MAGIC)?;
+    w.u32(VERSION)?;
+    w.u32(KIND_PQ4FS)?;
+    write_pq(&mut w, pq)?;
+    w.bytes(index.staging_codes())?;
+    Ok(())
+}
+
+/// Load an [`IndexPq4FastScan`].
+pub fn load_pq4fs(path: &Path) -> Result<IndexPq4FastScan> {
+    let f = std::fs::File::open(path)?;
+    let mut r = Reader { r: BufReader::new(f) };
+    check_header(&mut r, KIND_PQ4FS)?;
+    let pq = read_pq(&mut r)?;
+    let codes = r.bytes()?;
+    IndexPq4FastScan::from_parts(pq, codes)
+}
+
+// ------------------------------------------------------------ IVF-PQ4
+
+/// Save a trained+filled [`IvfPq4`] (lists are stored unpacked; packing is
+/// rebuilt lazily on first search after load).
+pub fn save_ivfpq4(index: &IvfPq4, path: &Path) -> Result<()> {
+    let pq = index.pq.as_ref().ok_or(Error::NotTrained)?;
+    let f = std::fs::File::create(path)?;
+    let mut w = Writer { w: BufWriter::new(f) };
+    w.w.write_all(MAGIC)?;
+    w.u32(VERSION)?;
+    w.u32(KIND_IVFPQ4)?;
+    w.u32(index.dim as u32)?;
+    w.u32(index.params.nlist as u32)?;
+    w.u32(if index.params.coarse_hnsw { 1 } else { 0 })?;
+    w.u32(index.params.hnsw_m as u32)?;
+    w.u64(index.params.seed)?;
+    write_pq(&mut w, pq)?;
+    w.f32s(index.centroids())?;
+    w.u32(index.params.nlist as u32)?;
+    for c in 0..index.params.nlist {
+        let (ids, codes) = index.list_contents(c);
+        w.i64s(ids)?;
+        w.bytes(codes)?;
+    }
+    Ok(())
+}
+
+/// Load an [`IvfPq4`]. The HNSW coarse graph (if any) is rebuilt from the
+/// centroids deterministically (same seed ⇒ same graph).
+pub fn load_ivfpq4(path: &Path) -> Result<IvfPq4> {
+    let f = std::fs::File::open(path)?;
+    let mut r = Reader { r: BufReader::new(f) };
+    check_header(&mut r, KIND_IVFPQ4)?;
+    let dim = r.u32()? as usize;
+    let nlist = r.u32()? as usize;
+    let coarse_hnsw = r.u32()? == 1;
+    let hnsw_m = r.u32()? as usize;
+    let seed = r.u64()?;
+    let pq = read_pq(&mut r)?;
+    let centroids = r.f32s()?;
+    if centroids.len() != nlist * dim {
+        return Err(Error::Dataset("centroid size mismatch".into()));
+    }
+    let nlist2 = r.u32()? as usize;
+    if nlist2 != nlist {
+        return Err(Error::Dataset("list count mismatch".into()));
+    }
+    let mut lists = Vec::with_capacity(nlist);
+    for _ in 0..nlist {
+        let ids = r.i64s()?;
+        let codes = r.bytes()?;
+        if codes.len() != ids.len() * pq.m {
+            return Err(Error::Dataset("list codes mismatch".into()));
+        }
+        lists.push((ids, codes));
+    }
+    let mut params = IvfParams::new(nlist);
+    params.coarse_hnsw = coarse_hnsw;
+    params.hnsw_m = hnsw_m;
+    params.seed = seed;
+    let pq_params = PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed };
+    IvfPq4::from_parts(dim, params, pq_params, pq, centroids, lists)
+}
+
+fn check_header<R: Read>(r: &mut Reader<R>, expect_kind: u32) -> Result<()> {
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Dataset("not an armpq index file".into()));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(Error::Dataset(format!("unsupported index version {version}")));
+    }
+    let kind = r.u32()?;
+    if kind != expect_kind {
+        return Err(Error::Dataset(format!("wrong index kind {kind} (expected {expect_kind})")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticDataset;
+    use crate::index::Index;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("armpq_idxio_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn pq4fs_roundtrip_identical_results() {
+        let ds = SyntheticDataset::gaussian(1_000, 10, 32, 201);
+        let mut idx = IndexPq4FastScan::new(ds.dim, 8);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        let before = idx.search(&ds.queries, 5).unwrap();
+
+        let path = tmp("flat.armpq");
+        save_pq4fs(&idx, &path).unwrap();
+        let mut loaded = load_pq4fs(&path).unwrap();
+        assert_eq!(loaded.ntotal(), 1_000);
+        let after = loaded.search(&ds.queries, 5).unwrap();
+        assert_eq!(before.labels, after.labels);
+        assert_eq!(before.distances, after.distances);
+    }
+
+    #[test]
+    fn ivfpq4_roundtrip_identical_results() {
+        let ds = SyntheticDataset::gaussian(1_500, 10, 16, 202);
+        let mut params = IvfParams::new(8);
+        params.coarse_hnsw = true;
+        params.hnsw_m = 8;
+        let mut idx = IvfPq4::new(ds.dim, params, PqParams::new_4bit(4));
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.nprobe = 8;
+        let (d0, l0) = idx.search(&ds.queries, 5).unwrap();
+
+        let path = tmp("ivf.armpq");
+        save_ivfpq4(&idx, &path).unwrap();
+        let mut loaded = load_ivfpq4(&path).unwrap();
+        loaded.nprobe = 8;
+        assert_eq!(loaded.ntotal(), 1_500);
+        let (d1, l1) = loaded.search(&ds.queries, 5).unwrap();
+        assert_eq!(l0, l1);
+        assert_eq!(d0, d1);
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_kind() {
+        let path = tmp("bad.armpq");
+        std::fs::write(&path, b"NOTANIDX0000000000000000").unwrap();
+        assert!(load_pq4fs(&path).is_err());
+
+        // valid flat index loaded as IVF must fail on the kind tag
+        let ds = SyntheticDataset::gaussian(500, 2, 16, 203);
+        let mut idx = IndexPq4FastScan::new(ds.dim, 4);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        let path2 = tmp("flat2.armpq");
+        save_pq4fs(&idx, &path2).unwrap();
+        let err = match load_ivfpq4(&path2) {
+            Err(e) => e,
+            Ok(_) => panic!("loading flat index as IVF must fail"),
+        };
+        assert!(err.to_string().contains("kind"), "{err}");
+    }
+
+    #[test]
+    fn untrained_save_fails() {
+        let idx = IndexPq4FastScan::new(16, 4);
+        assert!(save_pq4fs(&idx, &tmp("x.armpq")).is_err());
+    }
+
+    #[test]
+    fn truncated_file_fails_cleanly() {
+        let ds = SyntheticDataset::gaussian(300, 2, 16, 204);
+        let mut idx = IndexPq4FastScan::new(ds.dim, 4);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        let path = tmp("trunc.armpq");
+        save_pq4fs(&idx, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_pq4fs(&path).is_err());
+    }
+}

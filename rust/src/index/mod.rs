@@ -1,0 +1,75 @@
+//! Unified index API: the `Index` trait, the concrete index types, and the
+//! faiss-style factory strings (`"IVF1000_HNSW32,PQ16x4fs"`).
+//!
+//! This is the crate's public surface for applications: every index
+//! supports `train → add → search`, plus string-keyed runtime parameters
+//! (`nprobe`, `ef_search`, `rerank`, …) so benchmark sweeps don't need
+//! type-specific code.
+
+pub mod factory;
+pub mod flat;
+pub mod io;
+pub mod pq_index;
+pub mod refine;
+
+pub use factory::index_factory;
+pub use flat::IndexFlat;
+pub use pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
+pub use refine::IndexRefineFlat;
+
+use crate::Result;
+
+/// Search output: `nq × k` row-major distances and labels
+/// (missing results padded with `(INFINITY, -1)`).
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub k: usize,
+    pub distances: Vec<f32>,
+    pub labels: Vec<i64>,
+}
+
+impl SearchResult {
+    pub fn nq(&self) -> usize {
+        self.labels.len() / self.k
+    }
+
+    /// Labels of query `qi`.
+    pub fn row(&self, qi: usize) -> &[i64] {
+        &self.labels[qi * self.k..(qi + 1) * self.k]
+    }
+}
+
+/// The common index interface (mirrors the faiss `Index` API surface the
+/// paper's implementation plugs into).
+pub trait Index: Send {
+    /// Vector dimensionality.
+    fn dim(&self) -> usize;
+    /// Number of indexed vectors.
+    fn ntotal(&self) -> usize;
+    /// Whether codebooks/centroids have been trained.
+    fn is_trained(&self) -> bool;
+    /// Train on `n × dim` vectors.
+    fn train(&mut self, data: &[f32]) -> Result<()>;
+    /// Add `n × dim` vectors with sequential ids.
+    fn add(&mut self, data: &[f32]) -> Result<()>;
+    /// Search a batch of queries (`nq × dim`) for the `k` nearest.
+    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult>;
+    /// Set a runtime parameter (e.g. `"nprobe" = "4"`). Unknown keys error.
+    fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
+        Err(crate::Error::InvalidParameter(format!("unknown parameter {key}={value}")))
+    }
+    /// Short human-readable description.
+    fn describe(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_result_accessors() {
+        let r = SearchResult { k: 2, distances: vec![0.1, 0.2, 0.3, 0.4], labels: vec![5, 6, 7, 8] };
+        assert_eq!(r.nq(), 2);
+        assert_eq!(r.row(1), &[7, 8]);
+    }
+}

@@ -1,0 +1,410 @@
+//! PQ-backed index types: the naive-scan baseline, the 4-bit fastscan
+//! index, and the IVF(+HNSW) composition — the three systems compared in
+//! the paper's evaluation.
+
+use super::{Index, SearchResult};
+use crate::ivf::{IvfParams, IvfPq4};
+use crate::pq::fastscan::{search_fastscan_with_luts, FastScanParams};
+use crate::pq::{search_adc, PackedCodes4, PqParams, ProductQuantizer};
+use crate::simd::Backend;
+use crate::{Error, Result};
+
+/// "Original PQ" (paper Fig. 2 baseline): flat codes + in-memory f32 LUT
+/// scan. Supports both 4-bit (K=16) and 8-bit (K=256) codes.
+pub struct IndexPq {
+    dim: usize,
+    params: PqParams,
+    pq: Option<ProductQuantizer>,
+    codes: Vec<u8>,
+    ntotal: usize,
+}
+
+impl IndexPq {
+    pub fn new(dim: usize, params: PqParams) -> Self {
+        Self { dim, params, pq: None, codes: Vec::new(), ntotal: 0 }
+    }
+
+    pub fn pq(&self) -> Option<&ProductQuantizer> {
+        self.pq.as_ref()
+    }
+}
+
+impl Index for IndexPq {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn ntotal(&self) -> usize {
+        self.ntotal
+    }
+
+    fn is_trained(&self) -> bool {
+        self.pq.is_some()
+    }
+
+    fn train(&mut self, data: &[f32]) -> Result<()> {
+        self.pq = Some(ProductQuantizer::train(data, self.dim, &self.params)?);
+        Ok(())
+    }
+
+    fn add(&mut self, data: &[f32]) -> Result<()> {
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        let new_codes = pq.encode(data)?;
+        self.ntotal += data.len() / self.dim;
+        self.codes.extend(new_codes);
+        Ok(())
+    }
+
+    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        if queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        }
+        let nq = queries.len() / self.dim;
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for q in queries.chunks(self.dim) {
+            let luts = pq.compute_luts(q);
+            let (d, l) = search_adc(pq, &luts, &self.codes, None, k);
+            distances.extend(d);
+            labels.extend(l);
+        }
+        let _ = nq;
+        Ok(SearchResult { k, distances, labels })
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "PQ{}x{}(d={}, n={})",
+            self.params.m,
+            self.params.nbits(),
+            self.dim,
+            self.ntotal
+        )
+    }
+}
+
+/// The paper's contribution as a flat index: 4-bit PQ with the dual-lane
+/// SIMD fastscan kernel (faiss `IndexPQFastScan` analog).
+pub struct IndexPq4FastScan {
+    dim: usize,
+    params: PqParams,
+    pub fastscan: FastScanParams,
+    pq: Option<ProductQuantizer>,
+    /// Flat staging codes; re-packed lazily after adds.
+    staging: Vec<u8>,
+    packed: Option<PackedCodes4>,
+    ntotal: usize,
+}
+
+impl IndexPq4FastScan {
+    pub fn new(dim: usize, m: usize) -> Self {
+        Self {
+            dim,
+            params: PqParams::new_4bit(m),
+            fastscan: FastScanParams::default(),
+            pq: None,
+            staging: Vec::new(),
+            packed: None,
+            ntotal: 0,
+        }
+    }
+
+    pub fn pq(&self) -> Option<&ProductQuantizer> {
+        self.pq.as_ref()
+    }
+
+    /// Flat staging codes (`ntotal × m`, one byte per sub-quantizer) —
+    /// the persistence layer serializes these.
+    pub fn staging_codes(&self) -> &[u8] {
+        &self.staging
+    }
+
+    /// Rebuild from persisted parts (trained PQ + flat codes).
+    pub fn from_parts(pq: ProductQuantizer, codes: Vec<u8>) -> Result<Self> {
+        if codes.len() % pq.m != 0 {
+            return Err(Error::InvalidParameter("codes not divisible by m".into()));
+        }
+        let ntotal = codes.len() / pq.m;
+        Ok(Self {
+            dim: pq.dim,
+            params: PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed: 0 },
+            fastscan: FastScanParams::default(),
+            pq: Some(pq),
+            staging: codes,
+            packed: None,
+            ntotal,
+        })
+    }
+
+    fn seal(&mut self) -> Result<()> {
+        if self.packed.is_none() && !self.staging.is_empty() {
+            let m = self.pq.as_ref().ok_or(Error::NotTrained)?.m;
+            self.packed = Some(PackedCodes4::pack(&self.staging, m)?);
+        }
+        Ok(())
+    }
+}
+
+impl Index for IndexPq4FastScan {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn ntotal(&self) -> usize {
+        self.ntotal
+    }
+
+    fn is_trained(&self) -> bool {
+        self.pq.is_some()
+    }
+
+    fn train(&mut self, data: &[f32]) -> Result<()> {
+        self.pq = Some(ProductQuantizer::train(data, self.dim, &self.params)?);
+        Ok(())
+    }
+
+    fn add(&mut self, data: &[f32]) -> Result<()> {
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        let codes = pq.encode(data)?;
+        self.staging.extend(codes);
+        self.ntotal += data.len() / self.dim;
+        self.packed = None;
+        Ok(())
+    }
+
+    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+        self.seal()?;
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        if queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        }
+        let packed = match &self.packed {
+            Some(p) => p,
+            None => {
+                // empty index
+                let nq = queries.len() / self.dim;
+                return Ok(SearchResult {
+                    k,
+                    distances: vec![f32::INFINITY; nq * k],
+                    labels: vec![-1; nq * k],
+                });
+            }
+        };
+        let mut distances = Vec::new();
+        let mut labels = Vec::new();
+        for q in queries.chunks(self.dim) {
+            let luts = pq.compute_luts(q);
+            let (d, l) = search_fastscan_with_luts(pq, packed, &luts, k, &self.fastscan, None);
+            distances.extend(d);
+            labels.extend(l);
+        }
+        Ok(SearchResult { k, distances, labels })
+    }
+
+    fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "rerank" => {
+                self.fastscan.rerank = value == "true" || value == "1";
+                Ok(())
+            }
+            "reservoir_factor" => {
+                self.fastscan.reservoir_factor = value
+                    .parse()
+                    .map_err(|_| Error::InvalidParameter(format!("bad {key}={value}")))?;
+                Ok(())
+            }
+            "backend" => {
+                self.fastscan.backend = match value {
+                    "portable" => Backend::Portable,
+                    "ssse3" => Backend::Ssse3,
+                    _ => return Err(Error::InvalidParameter(format!("bad backend {value}"))),
+                };
+                Ok(())
+            }
+            _ => Err(Error::InvalidParameter(format!("unknown parameter {key}"))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("PQ{}x4fs(d={}, n={}, {:?})", self.params.m, self.dim, self.ntotal, self.fastscan.backend)
+    }
+}
+
+/// IVF + (optional HNSW coarse) + 4-bit PQ fastscan — the Table 1 system.
+pub struct IndexIvfPq4 {
+    inner: IvfPq4,
+}
+
+impl IndexIvfPq4 {
+    pub fn new(dim: usize, nlist: usize, m: usize, coarse_hnsw: bool, hnsw_m: usize) -> Self {
+        let mut params = IvfParams::new(nlist);
+        params.coarse_hnsw = coarse_hnsw;
+        params.hnsw_m = hnsw_m;
+        Self { inner: IvfPq4::new(dim, params, PqParams::new_4bit(m)) }
+    }
+
+    pub fn inner(&self) -> &IvfPq4 {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut IvfPq4 {
+        &mut self.inner
+    }
+}
+
+impl Index for IndexIvfPq4 {
+    fn dim(&self) -> usize {
+        self.inner.dim
+    }
+
+    fn ntotal(&self) -> usize {
+        self.inner.ntotal()
+    }
+
+    fn is_trained(&self) -> bool {
+        self.inner.is_trained()
+    }
+
+    fn train(&mut self, data: &[f32]) -> Result<()> {
+        self.inner.train(data)
+    }
+
+    fn add(&mut self, data: &[f32]) -> Result<()> {
+        self.inner.add(data)
+    }
+
+    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+        let (distances, labels) = self.inner.search(queries, k)?;
+        Ok(SearchResult { k, distances, labels })
+    }
+
+    fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "nprobe" => {
+                self.inner.nprobe = value
+                    .parse()
+                    .map_err(|_| Error::InvalidParameter(format!("bad nprobe {value}")))?;
+                Ok(())
+            }
+            "rerank" => {
+                self.inner.fastscan.rerank = value == "true" || value == "1";
+                Ok(())
+            }
+            "reservoir_factor" => {
+                self.inner.fastscan.reservoir_factor = value
+                    .parse()
+                    .map_err(|_| Error::InvalidParameter(format!("bad {key}={value}")))?;
+                Ok(())
+            }
+            "backend" => {
+                self.inner.fastscan.backend = match value {
+                    "portable" => Backend::Portable,
+                    "ssse3" => Backend::Ssse3,
+                    _ => return Err(Error::InvalidParameter(format!("bad backend {value}"))),
+                };
+                Ok(())
+            }
+            _ => Err(Error::InvalidParameter(format!("unknown parameter {key}"))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "IVF{}{},PQ{}x4fs(d={}, n={}, nprobe={})",
+            self.inner.params.nlist,
+            if self.inner.params.coarse_hnsw {
+                format!("_HNSW{}", self.inner.params.hnsw_m)
+            } else {
+                String::new()
+            },
+            self.inner.pq_params.m,
+            self.inner.dim,
+            self.inner.ntotal(),
+            self.inner.nprobe
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticDataset;
+    use crate::eval::{ground_truth, recall_at_r};
+
+    #[test]
+    fn pq_and_fastscan_same_accuracy() {
+        // the Fig. 2 claim at index level: identical recall for same M
+        let ds = SyntheticDataset::gaussian(800, 40, 32, 101);
+        let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+
+        let mut naive = IndexPq::new(ds.dim, PqParams::new_4bit(8));
+        naive.train(&ds.base).unwrap();
+        naive.add(&ds.base).unwrap();
+        let rn = naive.search(&ds.queries, 10).unwrap();
+
+        let mut fast = IndexPq4FastScan::new(ds.dim, 8);
+        fast.train(&ds.base).unwrap();
+        fast.add(&ds.base).unwrap();
+        let rf = fast.search(&ds.queries, 10).unwrap();
+
+        let rec_n = recall_at_r(&gt, 1, &rn.labels, 10, 10);
+        let rec_f = recall_at_r(&gt, 1, &rf.labels, 10, 10);
+        assert!(
+            (rec_n - rec_f).abs() <= 0.05,
+            "naive recall {rec_n} vs fastscan {rec_f}"
+        );
+    }
+
+    #[test]
+    fn ivf_index_trait_roundtrip() {
+        let ds = SyntheticDataset::gaussian(1200, 20, 16, 102);
+        let mut idx = IndexIvfPq4::new(ds.dim, 8, 4, false, 16);
+        assert!(!idx.is_trained());
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        assert_eq!(idx.ntotal(), 1200);
+        idx.set_param("nprobe", "8").unwrap();
+        let r = idx.search(&ds.queries, 5).unwrap();
+        assert_eq!(r.nq(), 20);
+        assert!(idx.describe().contains("nprobe=8"));
+    }
+
+    #[test]
+    fn set_param_validation() {
+        let mut idx = IndexIvfPq4::new(16, 4, 4, false, 8);
+        assert!(idx.set_param("nprobe", "abc").is_err());
+        assert!(idx.set_param("bogus", "1").is_err());
+        idx.set_param("rerank", "false").unwrap();
+        idx.set_param("backend", "portable").unwrap();
+        assert!(idx.set_param("backend", "avx512").is_err());
+    }
+
+    #[test]
+    fn empty_fastscan_index_search() {
+        let mut idx = IndexPq4FastScan::new(16, 4);
+        let ds = SyntheticDataset::gaussian(100, 2, 16, 103);
+        idx.train(&ds.base).unwrap();
+        let r = idx.search(&ds.queries, 3).unwrap();
+        assert!(r.labels.iter().all(|&l| l == -1));
+    }
+
+    #[test]
+    fn untrained_add_errors() {
+        let mut idx = IndexPq4FastScan::new(8, 2);
+        assert!(idx.add(&[0.0; 8]).is_err());
+        let mut naive = IndexPq::new(8, PqParams::new_4bit(2));
+        assert!(naive.add(&[0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn pq8_index_works() {
+        let ds = SyntheticDataset::gaussian(600, 10, 16, 104);
+        let mut idx = IndexPq::new(ds.dim, PqParams::new_8bit(4));
+        idx.train(&ds.base).unwrap();
+        idx.add(&ds.base).unwrap();
+        let r = idx.search(&ds.queries, 5).unwrap();
+        assert_eq!(r.nq(), 10);
+        assert!(idx.describe().starts_with("PQ4x8"));
+    }
+}

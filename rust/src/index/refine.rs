@@ -1,0 +1,160 @@
+//! Exact re-ranking wrapper (faiss `IndexRefineFlat` analog).
+//!
+//! The paper positions 4-bit PQ as memory-efficient but low-recall
+//! (Table 1: 0.072 vs Link&Code's 0.668 at 13× the memory). The standard
+//! way to buy recall back is a refinement stage: keep the raw vectors,
+//! let the quantized index shortlist `k × refine_factor` candidates, then
+//! re-rank the shortlist with exact distances. This wrapper makes that a
+//! first-class index type.
+
+use super::{Index, SearchResult};
+use crate::util::topk::TopK;
+use crate::{Error, Result};
+
+/// Wraps a base index with an exact-distance refinement pass.
+pub struct IndexRefineFlat {
+    base: Box<dyn Index>,
+    /// Raw vectors, indexed by the base index's sequential labels.
+    vectors: Vec<f32>,
+    /// Shortlist width multiplier (search k·factor through the base).
+    pub refine_factor: usize,
+}
+
+impl IndexRefineFlat {
+    pub fn new(base: Box<dyn Index>) -> Self {
+        Self { base, vectors: Vec::new(), refine_factor: 4 }
+    }
+}
+
+impl Index for IndexRefineFlat {
+    fn dim(&self) -> usize {
+        self.base.dim()
+    }
+
+    fn ntotal(&self) -> usize {
+        self.vectors.len() / self.base.dim().max(1)
+    }
+
+    fn is_trained(&self) -> bool {
+        self.base.is_trained()
+    }
+
+    fn train(&mut self, data: &[f32]) -> Result<()> {
+        self.base.train(data)
+    }
+
+    fn add(&mut self, data: &[f32]) -> Result<()> {
+        self.base.add(data)?;
+        self.vectors.extend_from_slice(data);
+        Ok(())
+    }
+
+    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+        let dim = self.base.dim();
+        if queries.len() % dim != 0 {
+            return Err(Error::DimMismatch { expected: dim, got: queries.len() % dim });
+        }
+        let shortlist_k = (k * self.refine_factor).max(k);
+        let coarse = self.base.search(queries, shortlist_k)?;
+        let nq = coarse.nq();
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for qi in 0..nq {
+            let q = &queries[qi * dim..(qi + 1) * dim];
+            let mut heap = TopK::new(k);
+            for &label in coarse.row(qi) {
+                if label < 0 {
+                    continue;
+                }
+                let v = &self.vectors[label as usize * dim..(label as usize + 1) * dim];
+                heap.push(crate::util::l2_sq(q, v), label);
+            }
+            let (d, l) = heap.into_sorted();
+            distances.extend(d);
+            labels.extend(l);
+        }
+        Ok(SearchResult { k, distances, labels })
+    }
+
+    fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "refine_factor" => {
+                self.refine_factor = value
+                    .parse()
+                    .map_err(|_| Error::InvalidParameter(format!("bad refine_factor {value}")))?;
+                Ok(())
+            }
+            _ => self.base.set_param(key, value),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("Refine(x{}, {})", self.refine_factor, self.base.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticDataset;
+    use crate::eval::{ground_truth, recall_at_r};
+    use crate::index::index_factory;
+
+    #[test]
+    fn refinement_recovers_recall() {
+        let ds = SyntheticDataset::sift_like(5_000, 50, 211);
+        let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+
+        let mut plain = index_factory(ds.dim, "PQ8x4fs").unwrap();
+        plain.train(&ds.train).unwrap();
+        plain.add(&ds.base).unwrap();
+        let rp = plain.search(&ds.queries, 10).unwrap();
+        let rec_plain = recall_at_r(&gt, 1, &rp.labels, 10, 1);
+
+        let mut refined = IndexRefineFlat::new(index_factory(ds.dim, "PQ8x4fs").unwrap());
+        refined.refine_factor = 16;
+        refined.train(&ds.train).unwrap();
+        refined.add(&ds.base).unwrap();
+        let rr = refined.search(&ds.queries, 10).unwrap();
+        let rec_refined = recall_at_r(&gt, 1, &rr.labels, 10, 1);
+
+        assert!(
+            rec_refined >= rec_plain + 0.1,
+            "refine {rec_refined} vs plain {rec_plain}"
+        );
+        // refined distances are exact L2 → sorted, and top-1 is exact
+        for qi in 0..50 {
+            let row = &rr.distances[qi * 10..(qi + 1) * 10];
+            assert!(row.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn exact_distances_returned() {
+        let ds = SyntheticDataset::gaussian(500, 5, 16, 212);
+        let mut refined = IndexRefineFlat::new(index_factory(ds.dim, "PQ4x4fs").unwrap());
+        refined.train(&ds.train).unwrap();
+        refined.add(&ds.base).unwrap();
+        let r = refined.search(&ds.queries, 3).unwrap();
+        for qi in 0..5 {
+            for (j, &label) in r.row(qi).iter().enumerate() {
+                if label < 0 {
+                    continue;
+                }
+                let v = &ds.base[label as usize * ds.dim..(label as usize + 1) * ds.dim];
+                let exact = crate::util::l2_sq(ds.query(qi), v);
+                assert!((exact - r.distances[qi * 3 + j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn set_param_passthrough() {
+        let mut refined = IndexRefineFlat::new(index_factory(32, "IVF8,PQ8x4fs").unwrap());
+        refined.set_param("refine_factor", "8").unwrap();
+        assert_eq!(refined.refine_factor, 8);
+        refined.set_param("nprobe", "4").unwrap(); // forwarded to base
+        assert!(refined.set_param("bogus", "1").is_err());
+        assert!(refined.describe().starts_with("Refine(x8"));
+    }
+}

@@ -1,0 +1,545 @@
+//! Inverted-file index with 4-bit PQ distance estimation (paper §4, §5.2).
+//!
+//! The dataset is partitioned into `nlist` cells by a coarse k-means
+//! quantizer; a query probes the `nprobe` nearest cells and runs the
+//! fastscan kernel over each cell's packed codes. Coarse assignment is
+//! either a linear scan over the centroids ([`CoarseQuantizer::Flat`]) or
+//! an HNSW graph walk ([`CoarseQuantizer::Hnsw`]) — the combination
+//! "inverted index + HNSW + PQ" evaluated in the paper's Table 1.
+//!
+//! Distance estimation follows faiss `IVFPQFastScan` defaults:
+//! `by_residual = false`, i.e. the PQ codes encode raw vectors and one LUT
+//! set (built once per query from the full query vector) is shared across
+//! all probed cells.
+
+use crate::hnsw::{Hnsw, HnswParams};
+use crate::kmeans::{KMeans, KMeansParams};
+use crate::pq::fastscan::{scan_into_reservoir, FastScanParams, KernelLuts};
+use crate::pq::{PackedCodes4, PqParams, ProductQuantizer, QuantizedLuts};
+use crate::util::topk::{TopK, U16Reservoir};
+use crate::{Error, Result};
+
+/// Strategy for the coarse (cell-assignment) search.
+pub enum CoarseQuantizer {
+    /// Exact linear scan over centroids.
+    Flat,
+    /// HNSW graph over the centroids (paper §5.2; ef defaults to 4×nprobe).
+    Hnsw { graph: Hnsw, ef_search: usize },
+}
+
+impl CoarseQuantizer {
+    /// `nprobe` nearest centroids, ascending by distance.
+    fn assign(&self, centroids: &[f32], nlist: usize, dim: usize, q: &[f32], nprobe: usize) -> Vec<usize> {
+        match self {
+            CoarseQuantizer::Flat => {
+                let mut heap = TopK::new(nprobe.min(nlist));
+                for c in 0..nlist {
+                    let d = crate::util::l2_sq(q, &centroids[c * dim..(c + 1) * dim]);
+                    heap.push(d, c as i64);
+                }
+                heap.into_sorted().1.into_iter().filter(|&l| l >= 0).map(|l| l as usize).collect()
+            }
+            CoarseQuantizer::Hnsw { graph, ef_search } => {
+                let ef = (*ef_search).max(4 * nprobe);
+                let (_d, ids) = graph.search(q, nprobe, ef);
+                ids.into_iter().filter(|&l| l >= 0).map(|l| l as usize).collect()
+            }
+        }
+    }
+}
+
+/// One inverted list: external ids + packed 4-bit codes.
+struct IvfList {
+    ids: Vec<i64>,
+    /// Flat codes retained during building; dropped at seal time.
+    staging: Vec<u8>,
+    packed: Option<PackedCodes4>,
+}
+
+impl IvfList {
+    fn new() -> Self {
+        Self { ids: Vec::new(), staging: Vec::new(), packed: None }
+    }
+}
+
+/// Build-time parameters for [`IvfPq4`].
+#[derive(Clone, Debug)]
+pub struct IvfParams {
+    pub nlist: usize,
+    /// Use an HNSW graph over centroids for coarse assignment.
+    pub coarse_hnsw: bool,
+    pub hnsw_m: usize,
+    pub train_iters: usize,
+    pub seed: u64,
+}
+
+impl IvfParams {
+    pub fn new(nlist: usize) -> Self {
+        Self { nlist, coarse_hnsw: false, hnsw_m: 32, train_iters: 20, seed: 99 }
+    }
+}
+
+/// IVF + 4-bit PQ fastscan index (the paper's large-scale configuration).
+pub struct IvfPq4 {
+    pub dim: usize,
+    pub params: IvfParams,
+    pub pq_params: PqParams,
+    pub pq: Option<ProductQuantizer>,
+    centroids: Vec<f32>,
+    coarse: CoarseQuantizer,
+    lists: Vec<IvfList>,
+    ntotal: usize,
+    /// Runtime search width (paper Table 1 sweeps 1, 2, 4).
+    pub nprobe: usize,
+    pub fastscan: FastScanParams,
+}
+
+impl IvfPq4 {
+    pub fn new(dim: usize, params: IvfParams, pq_params: PqParams) -> Self {
+        Self {
+            dim,
+            params,
+            pq_params,
+            pq: None,
+            centroids: Vec::new(),
+            coarse: CoarseQuantizer::Flat,
+            lists: Vec::new(),
+            ntotal: 0,
+            nprobe: 1,
+            fastscan: FastScanParams::default(),
+        }
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.pq.is_some()
+    }
+
+    pub fn ntotal(&self) -> usize {
+        self.ntotal
+    }
+
+    /// Train coarse quantizer + PQ codebooks on `n × dim` vectors.
+    pub fn train(&mut self, data: &[f32]) -> Result<()> {
+        if data.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: data.len() % self.dim });
+        }
+        let mut kp = KMeansParams::new(self.params.nlist);
+        kp.iters = self.params.train_iters;
+        kp.seed = self.params.seed;
+        let km = KMeans::train(data, self.dim, &kp)?;
+        self.centroids = km.centroids.clone();
+
+        // PQ trained on raw vectors (by_residual = false).
+        self.pq = Some(ProductQuantizer::train(data, self.dim, &self.pq_params)?);
+
+        // Coarse structure over the centroids.
+        self.coarse = if self.params.coarse_hnsw {
+            let mut graph = Hnsw::new(
+                self.dim,
+                HnswParams {
+                    m: self.params.hnsw_m,
+                    ef_construction: 2 * self.params.hnsw_m,
+                    seed: self.params.seed,
+                },
+            );
+            graph.add_batch(&self.centroids)?;
+            CoarseQuantizer::Hnsw { graph, ef_search: 0 }
+        } else {
+            CoarseQuantizer::Flat
+        };
+
+        self.lists = (0..self.params.nlist).map(|_| IvfList::new()).collect();
+        Ok(())
+    }
+
+    /// Add vectors with sequential ids.
+    pub fn add(&mut self, data: &[f32]) -> Result<()> {
+        let start = self.ntotal as i64;
+        let n = data.len() / self.dim;
+        let ids: Vec<i64> = (start..start + n as i64).collect();
+        self.add_with_ids(data, &ids)
+    }
+
+    /// Add vectors with explicit external ids.
+    pub fn add_with_ids(&mut self, data: &[f32], ids: &[i64]) -> Result<()> {
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        if data.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: data.len() % self.dim });
+        }
+        let n = data.len() / self.dim;
+        if ids.len() != n {
+            return Err(Error::InvalidParameter(format!("{} ids for {n} vectors", ids.len())));
+        }
+        // coarse-assign + encode
+        let assign: Vec<u32> = {
+            let nlist = self.params.nlist;
+            let dim = self.dim;
+            let cents = &self.centroids;
+            crate::util::threads::parallel_map(n, crate::util::threads::default_threads(), |i| {
+                crate::kmeans::nearest_centroid(&data[i * dim..(i + 1) * dim], cents, nlist, dim)
+                    .0 as u32
+            })
+        };
+        let codes = pq.encode(data)?;
+        let m = pq.m;
+        for i in 0..n {
+            let list = &mut self.lists[assign[i] as usize];
+            list.ids.push(ids[i]);
+            list.staging.extend_from_slice(&codes[i * m..(i + 1) * m]);
+            list.packed = None; // invalidate packing
+        }
+        self.ntotal += n;
+        Ok(())
+    }
+
+    /// Pack any dirty lists (idempotent; done lazily by search otherwise).
+    pub fn seal(&mut self) -> Result<()> {
+        let m = self.pq.as_ref().ok_or(Error::NotTrained)?.m;
+        for list in &mut self.lists {
+            if list.packed.is_none() && !list.ids.is_empty() {
+                list.packed = Some(PackedCodes4::pack(&list.staging, m)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Search a batch of queries (`nq × dim`), returning `(distances,
+    /// labels)` each `nq × k`. Lists must be sealed (done automatically).
+    pub fn search(&mut self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        self.seal()?;
+        self.search_sealed(queries, k)
+    }
+
+    /// Immutable search (lists must already be sealed via [`IvfPq4::seal`]).
+    pub fn search_sealed(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        if queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        }
+        let nq = queries.len() / self.dim;
+        let mut dists = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for qi in 0..nq {
+            let q = &queries[qi * self.dim..(qi + 1) * self.dim];
+            let (d, l) = self.search_one(pq, q, k);
+            dists.extend(d);
+            labels.extend(l);
+        }
+        Ok((dists, labels))
+    }
+
+    fn search_one(&self, pq: &ProductQuantizer, q: &[f32], k: usize) -> (Vec<f32>, Vec<i64>) {
+        // 1. coarse quantization (paper §4 step 1-2)
+        let probes =
+            self.coarse.assign(&self.centroids, self.params.nlist, self.dim, q, self.nprobe);
+
+        // 2. one LUT set shared across probed lists (by_residual = false)
+        let luts_f32 = pq.compute_luts(q);
+        let qluts = QuantizedLuts::from_f32(&luts_f32, pq.m, pq.ksub);
+        let m_pad = pq.m.div_ceil(2) * 2;
+        let kluts = KernelLuts::build(&qluts, m_pad);
+
+        // 3. fastscan distance estimation over each probed list
+        let mut reservoir = U16Reservoir::new(k, self.fastscan.reservoir_factor);
+        for &c in &probes {
+            let list = &self.lists[c];
+            if let Some(packed) = &list.packed {
+                scan_into_reservoir(packed, &kluts, self.fastscan.backend, Some(&list.ids), &mut reservoir);
+            }
+        }
+        let cands = reservoir.into_candidates();
+
+        // 4. re-rank with exact f32 tables
+        let mut heap = TopK::new(k);
+        if self.fastscan.rerank {
+            // locate each candidate's codes: build per-search map id -> (list, pos)
+            // (lists are small relative to ntotal; map only over probed lists)
+            let mut codes_buf = vec![0u8; pq.m];
+            let mut pos: std::collections::HashMap<i64, (usize, usize)> = Default::default();
+            for &c in &probes {
+                for (j, &id) in self.lists[c].ids.iter().enumerate() {
+                    pos.insert(id, (c, j));
+                }
+            }
+            for (_, id) in cands {
+                let (c, j) = pos[&id];
+                let packed = self.lists[c].packed.as_ref().unwrap();
+                for mi in 0..pq.m {
+                    codes_buf[mi] = packed.code_at(j, mi);
+                }
+                heap.push(pq.adc_distance(&luts_f32, &codes_buf), id);
+            }
+        } else {
+            for (d16, id) in cands {
+                heap.push(qluts.decode(d16), id);
+            }
+        }
+        heap.into_sorted()
+    }
+
+    /// Coarse centroids (`nlist × dim`) — persistence accessor.
+    pub fn centroids(&self) -> &[f32] {
+        &self.centroids
+    }
+
+    /// Ids + flat staging codes of one list — persistence accessor.
+    /// (Lists keep their flat codes alongside the packed form.)
+    pub fn list_contents(&self, c: usize) -> (&[i64], &[u8]) {
+        (&self.lists[c].ids, &self.lists[c].staging)
+    }
+
+    /// Rebuild from persisted parts. The HNSW coarse graph is rebuilt from
+    /// the centroids (deterministic for a fixed seed).
+    pub fn from_parts(
+        dim: usize,
+        params: IvfParams,
+        pq_params: PqParams,
+        pq: ProductQuantizer,
+        centroids: Vec<f32>,
+        lists: Vec<(Vec<i64>, Vec<u8>)>,
+    ) -> Result<Self> {
+        if lists.len() != params.nlist || centroids.len() != params.nlist * dim {
+            return Err(Error::InvalidParameter("IVF parts shape mismatch".into()));
+        }
+        let coarse = if params.coarse_hnsw {
+            let mut graph = Hnsw::new(
+                dim,
+                HnswParams {
+                    m: params.hnsw_m,
+                    ef_construction: 2 * params.hnsw_m,
+                    seed: params.seed,
+                },
+            );
+            graph.add_batch(&centroids)?;
+            CoarseQuantizer::Hnsw { graph, ef_search: 0 }
+        } else {
+            CoarseQuantizer::Flat
+        };
+        let ntotal = lists.iter().map(|(ids, _)| ids.len()).sum();
+        let lists = lists
+            .into_iter()
+            .map(|(ids, staging)| IvfList { ids, staging, packed: None })
+            .collect();
+        Ok(Self {
+            dim,
+            params,
+            pq_params,
+            pq: Some(pq),
+            centroids,
+            coarse,
+            lists,
+            ntotal,
+            nprobe: 1,
+            fastscan: FastScanParams::default(),
+        })
+    }
+
+    /// Occupancy histogram stats: (min, mean, max) list length.
+    pub fn list_stats(&self) -> (usize, f64, usize) {
+        let lens: Vec<usize> = self.lists.iter().map(|l| l.ids.len()).collect();
+        let min = lens.iter().cloned().min().unwrap_or(0);
+        let max = lens.iter().cloned().max().unwrap_or(0);
+        let mean = if lens.is_empty() {
+            0.0
+        } else {
+            lens.iter().sum::<usize>() as f64 / lens.len() as f64
+        };
+        (min, mean, max)
+    }
+
+    /// Memory cost of the packed codes, bits per vector (paper Table 1:
+    /// 64 bits/code at M=16).
+    pub fn code_bits_per_vector(&self) -> f64 {
+        let bytes: usize = self
+            .lists
+            .iter()
+            .filter_map(|l| l.packed.as_ref().map(|p| p.data.len()))
+            .sum();
+        if self.ntotal == 0 {
+            0.0
+        } else {
+            bytes as f64 * 8.0 / self.ntotal as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Loosely clustered data: enough structure for IVF, enough noise that
+    /// PQ codes are distinct (tight clusters would make every member share
+    /// one code and turn recall into a tie-breaking lottery).
+    fn clustered_data(n: usize, dim: usize, nclusters: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<f32> = (0..nclusters * dim).map(|_| rng.next_gaussian() * 5.0).collect();
+        let mut data = Vec::with_capacity(n * dim);
+        for i in 0..n {
+            let c = i % nclusters;
+            for j in 0..dim {
+                data.push(centers[c * dim + j] + rng.next_gaussian() * 2.0);
+            }
+        }
+        data
+    }
+
+    fn brute_nn(data: &[f32], dim: usize, q: &[f32]) -> i64 {
+        let n = data.len() / dim;
+        let mut best = (f32::INFINITY, -1i64);
+        for i in 0..n {
+            let d = crate::util::l2_sq(q, &data[i * dim..(i + 1) * dim]);
+            if d < best.0 {
+                best = (d, i as i64);
+            }
+        }
+        best.1
+    }
+
+    fn build(n: usize, dim: usize, nlist: usize, m: usize, hnsw: bool, seed: u64) -> (IvfPq4, Vec<f32>) {
+        let data = clustered_data(n, dim, 32, seed);
+        let mut params = IvfParams::new(nlist);
+        params.coarse_hnsw = hnsw;
+        let mut idx = IvfPq4::new(dim, params, PqParams::new_4bit(m));
+        idx.train(&data).unwrap();
+        idx.add(&data).unwrap();
+        (idx, data)
+    }
+
+    #[test]
+    fn recall_reasonable_flat_coarse() {
+        let (mut idx, data) = build(3000, 16, 20, 8, false, 61);
+        idx.nprobe = 8;
+        let nq = 50;
+        let mut hits = 0;
+        for qi in 0..nq {
+            let q = &data[qi * 16..(qi + 1) * 16];
+            let (_d, l) = idx.search(q, 10).unwrap();
+            let gt = brute_nn(&data, 16, q);
+            if l.contains(&gt) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 35, "recall@10 {hits}/50");
+    }
+
+    /// Probing every list with re-ranking must match the flat naive-PQ
+    /// search (same codes, full coverage) — the strongest correctness
+    /// property of the IVF composition.
+    #[test]
+    fn full_probe_matches_flat_pq() {
+        use crate::pq::search_adc;
+        let (mut idx, data) = build(1500, 16, 12, 8, false, 69);
+        idx.nprobe = 12; // all lists
+        idx.fastscan.reservoir_factor = 64; // tie-proof reservoir
+        let pq = ProductQuantizer::train(&data, 16, &PqParams::new_4bit(8)).unwrap();
+        let codes = pq.encode(&data).unwrap();
+        for qi in 0..20 {
+            let q = &data[qi * 16..(qi + 1) * 16];
+            let luts = pq.compute_luts(q);
+            let (d_flat, _) = search_adc(&pq, &luts, &codes, None, 5);
+            let (d_ivf, _) = idx.search(q, 5).unwrap();
+            for r in 0..5 {
+                assert!(
+                    (d_flat[r] - d_ivf[r]).abs() < 1e-4 * (1.0 + d_flat[r].abs()),
+                    "q{qi} rank {r}: flat {} vs ivf {}",
+                    d_flat[r],
+                    d_ivf[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hnsw_coarse_matches_flat_mostly() {
+        let (mut flat, data) = build(2000, 16, 16, 8, false, 62);
+        let (mut hnsw, _) = build(2000, 16, 16, 8, true, 62);
+        flat.nprobe = 2;
+        hnsw.nprobe = 2;
+        let mut agree = 0;
+        for qi in 0..30 {
+            let q = &data[qi * 16..(qi + 1) * 16];
+            let (_df, lf) = flat.search(q, 1).unwrap();
+            let (_dh, lh) = hnsw.search(q, 1).unwrap();
+            if lf[0] == lh[0] {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 24, "flat/hnsw agreement {agree}/30");
+    }
+
+    #[test]
+    fn nprobe_monotone_recall() {
+        let (mut idx, data) = build(4000, 16, 32, 8, false, 63);
+        let nq = 60;
+        let mut recalls = Vec::new();
+        for nprobe in [1usize, 4, 32] {
+            idx.nprobe = nprobe;
+            let mut hits = 0;
+            for qi in 0..nq {
+                let q = &data[qi * 16..(qi + 1) * 16];
+                let (_d, l) = idx.search(q, 10).unwrap();
+                if l.contains(&brute_nn(&data, 16, q)) {
+                    hits += 1;
+                }
+            }
+            recalls.push(hits);
+        }
+        assert!(
+            recalls[0] <= recalls[1] + 3 && recalls[1] <= recalls[2] + 3,
+            "roughly monotone expected: {recalls:?}"
+        );
+        assert!(recalls[2] >= 40, "nprobe=32 recall {}/60", recalls[2]);
+    }
+
+    #[test]
+    fn untrained_errors() {
+        let mut idx = IvfPq4::new(8, IvfParams::new(4), PqParams::new_4bit(2));
+        assert!(idx.add(&[0.0; 8]).is_err());
+        assert!(idx.search(&[0.0; 8], 1).is_err());
+    }
+
+    #[test]
+    fn incremental_add_after_search() {
+        let (mut idx, data) = build(1000, 16, 8, 4, false, 64);
+        let (_, _) = idx.search(&data[..16], 1).unwrap();
+        // add more, search again — repack must trigger
+        let extra = clustered_data(64, 16, 32, 65);
+        idx.add(&extra).unwrap();
+        assert_eq!(idx.ntotal(), 1064);
+        let (_d, l) = idx.search(&extra[..16], 1).unwrap();
+        assert!(l[0] >= 0);
+    }
+
+    #[test]
+    fn external_ids_respected() {
+        let data = clustered_data(500, 16, 8, 66);
+        let mut idx = IvfPq4::new(16, IvfParams::new(4), PqParams::new_4bit(4));
+        idx.train(&data).unwrap();
+        let ids: Vec<i64> = (0..500).map(|i| 10_000 + i).collect();
+        idx.add_with_ids(&data, &ids).unwrap();
+        let (_d, l) = idx.search(&data[..16], 5).unwrap();
+        assert!(l.iter().all(|&x| x >= 10_000));
+    }
+
+    #[test]
+    fn code_memory_matches_paper_formula() {
+        // M=16, K=16 → 64 bits/code (paper Table 1), modulo block padding
+        let (mut idx, _) = build(3200, 16, 4, 16, false, 67);
+        idx.seal().unwrap();
+        let bits = idx.code_bits_per_vector();
+        assert!(bits >= 64.0 && bits < 70.0, "bits/vector {bits}");
+    }
+
+    #[test]
+    fn list_stats_sane() {
+        let (mut idx, _) = build(1000, 16, 10, 4, false, 68);
+        idx.seal().unwrap();
+        let (min, mean, max) = idx.list_stats();
+        assert!(min <= mean as usize && mean as usize <= max);
+        assert_eq!(
+            (mean * 10.0).round() as usize,
+            1000
+        );
+    }
+}

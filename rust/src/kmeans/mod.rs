@@ -1,0 +1,365 @@
+//! k-means clustering (Lloyd's algorithm with k-means++ seeding).
+//!
+//! Training substrate for both the PQ sub-quantizers (K = 16 codewords per
+//! sub-space, paper §2) and the IVF coarse quantizer (nlist = √N centroids,
+//! paper §5.2). Matches the faiss `Clustering` defaults where they matter:
+//! empty clusters are re-seeded by splitting the largest cluster, training
+//! data is subsampled to a per-centroid budget, and iteration count is
+//! fixed rather than tolerance-driven.
+
+use crate::util::rng::Rng;
+use crate::util::threads::{default_threads, parallel_chunks};
+use crate::{Error, Result};
+
+/// Parameters for one k-means run.
+#[derive(Clone, Debug)]
+pub struct KMeansParams {
+    pub k: usize,
+    /// Lloyd iterations (faiss default: 25 for PQ training).
+    pub iters: usize,
+    /// Max training points per centroid (subsample above this).
+    pub max_points_per_centroid: usize,
+    pub seed: u64,
+    /// Emit per-iteration objective to stderr.
+    pub verbose: bool,
+}
+
+impl KMeansParams {
+    pub fn new(k: usize) -> Self {
+        Self { k, iters: 25, max_points_per_centroid: 256, seed: 1234, verbose: false }
+    }
+}
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub k: usize,
+    pub dim: usize,
+    /// Row-major `k × dim` centroid matrix.
+    pub centroids: Vec<f32>,
+    /// Final objective (mean squared distance to assigned centroid).
+    pub objective: f32,
+}
+
+impl KMeans {
+    /// Train on `n × dim` row-major data.
+    pub fn train(data: &[f32], dim: usize, params: &KMeansParams) -> Result<KMeans> {
+        if dim == 0 || data.len() % dim != 0 {
+            return Err(Error::InvalidParameter(format!(
+                "data length {} not divisible by dim {dim}",
+                data.len()
+            )));
+        }
+        let n = data.len() / dim;
+        if n < params.k {
+            return Err(Error::InvalidParameter(format!(
+                "need at least k={} training points, got {n}",
+                params.k
+            )));
+        }
+        let mut rng = Rng::new(params.seed);
+
+        // Subsample to the per-centroid budget (faiss behaviour).
+        let budget = params.k * params.max_points_per_centroid;
+        let (train, n_train): (Vec<f32>, usize) = if n > budget {
+            let idx = rng.sample_indices(n, budget);
+            let mut sub = Vec::with_capacity(budget * dim);
+            for &i in &idx {
+                sub.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+            }
+            (sub, budget)
+        } else {
+            (data.to_vec(), n)
+        };
+
+        let mut centroids = kmeanspp_init(&train, n_train, dim, params.k, &mut rng);
+        let mut assign = vec![0u32; n_train];
+
+        for it in 0..params.iters {
+            let objective = assign_all(&train, n_train, dim, &centroids, params.k, &mut assign);
+            update_centroids(&train, n_train, dim, params.k, &assign, &mut centroids, &mut rng);
+            if params.verbose {
+                eprintln!("kmeans iter {it}: objective {objective:.4}");
+            }
+        }
+        // Final assignment for the reported objective.
+        let objective = assign_all(&train, n_train, dim, &centroids, params.k, &mut assign);
+
+        Ok(KMeans { k: params.k, dim, centroids, objective })
+    }
+
+    /// Index of the nearest centroid to `x`.
+    pub fn assign_one(&self, x: &[f32]) -> usize {
+        nearest_centroid(x, &self.centroids, self.k, self.dim).0
+    }
+
+    /// Assign a batch (`n × dim`), parallel over rows.
+    pub fn assign_batch(&self, xs: &[f32]) -> Vec<u32> {
+        let n = xs.len() / self.dim;
+        let mut out = vec![0u32; n];
+        let dim = self.dim;
+        let k = self.k;
+        let centroids = &self.centroids;
+        let out_ptr = OutPtr(out.as_mut_ptr());
+        parallel_chunks(n, default_threads(), |s, e| {
+            let p = out_ptr;
+            for i in s..e {
+                let (c, _) = nearest_centroid(&xs[i * dim..(i + 1) * dim], centroids, k, dim);
+                unsafe {
+                    *p.0.add(i) = c as u32;
+                }
+            }
+        });
+        out
+    }
+
+    pub fn centroid(&self, i: usize) -> &[f32] {
+        &self.centroids[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+#[derive(Clone, Copy)]
+struct OutPtr(*mut u32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Nearest centroid by squared L2: returns `(index, distance)`.
+#[inline]
+pub fn nearest_centroid(x: &[f32], centroids: &[f32], k: usize, dim: usize) -> (usize, f32) {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let d = crate::util::l2_sq(x, &centroids[c * dim..(c + 1) * dim]);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+/// k-means++ seeding: D²-weighted sampling.
+fn kmeanspp_init(data: &[f32], n: usize, dim: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut centroids = Vec::with_capacity(k * dim);
+    let first = rng.below(n);
+    centroids.extend_from_slice(&data[first * dim..(first + 1) * dim]);
+
+    let mut d2 = vec![0.0f32; n];
+    for i in 0..n {
+        d2[i] = crate::util::l2_sq(&data[i * dim..(i + 1) * dim], &centroids[..dim]);
+    }
+
+    for c in 1..k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut chosen = n - 1;
+            for (i, &x) in d2.iter().enumerate() {
+                target -= x as f64;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        let new_c = &data[pick * dim..(pick + 1) * dim];
+        centroids.extend_from_slice(new_c);
+        // relax distances
+        for i in 0..n {
+            let d = crate::util::l2_sq(&data[i * dim..(i + 1) * dim], new_c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+        let _ = c;
+    }
+    centroids
+}
+
+/// Assign every point; returns the mean objective.
+fn assign_all(
+    data: &[f32],
+    n: usize,
+    dim: usize,
+    centroids: &[f32],
+    k: usize,
+    assign: &mut [u32],
+) -> f32 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let total_bits = AtomicU64::new(0);
+    let assign_ptr = OutPtr(assign.as_mut_ptr());
+    parallel_chunks(n, default_threads(), |s, e| {
+        let p = assign_ptr;
+        let mut local = 0.0f64;
+        for i in s..e {
+            let (c, d) = nearest_centroid(&data[i * dim..(i + 1) * dim], centroids, k, dim);
+            unsafe {
+                *p.0.add(i) = c as u32;
+            }
+            local += d as f64;
+        }
+        // accumulate f64 via bit-cas loop
+        let mut cur = total_bits.load(Ordering::Relaxed);
+        loop {
+            let new = f64::from_bits(cur) + local;
+            match total_bits.compare_exchange_weak(
+                cur,
+                new.to_bits(),
+                Ordering::SeqCst,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    });
+    (f64::from_bits(total_bits.load(Ordering::SeqCst)) / n as f64) as f32
+}
+
+/// Recompute centroids as assignment means; split big clusters into empties.
+fn update_centroids(
+    data: &[f32],
+    n: usize,
+    dim: usize,
+    k: usize,
+    assign: &[u32],
+    centroids: &mut Vec<f32>,
+    rng: &mut Rng,
+) {
+    let mut counts = vec![0usize; k];
+    let mut sums = vec![0.0f64; k * dim];
+    for i in 0..n {
+        let c = assign[i] as usize;
+        counts[c] += 1;
+        let row = &data[i * dim..(i + 1) * dim];
+        for (j, &v) in row.iter().enumerate() {
+            sums[c * dim + j] += v as f64;
+        }
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            for j in 0..dim {
+                centroids[c * dim + j] = (sums[c * dim + j] / counts[c] as f64) as f32;
+            }
+        }
+    }
+    // Empty-cluster handling (faiss split_clusters): clone the largest
+    // cluster's centroid with a tiny symmetric perturbation.
+    for c in 0..k {
+        if counts[c] == 0 {
+            let big = (0..k).max_by_key(|&i| counts[i]).unwrap();
+            let eps = 1.0 / 1024.0;
+            for j in 0..dim {
+                let sign = if rng.next_f32() < 0.5 { 1.0 } else { -1.0 };
+                let v = centroids[big * dim + j];
+                centroids[c * dim + j] = v * (1.0 + sign * eps);
+                centroids[big * dim + j] = v * (1.0 - sign * eps);
+            }
+            // steal half the count so repeated empties pick other clusters
+            counts[c] = counts[big] / 2;
+            let stolen = counts[c];
+            counts[big] -= stolen;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs in 8-D.
+    fn blobs(n_per: usize, seed: u64) -> (Vec<f32>, usize) {
+        let dim = 8;
+        let mut rng = Rng::new(seed);
+        let centers = [10.0f32, -10.0, 30.0];
+        let mut data = Vec::with_capacity(3 * n_per * dim);
+        for &c in &centers {
+            for _ in 0..n_per {
+                for _ in 0..dim {
+                    data.push(c + rng.next_gaussian() * 0.5);
+                }
+            }
+        }
+        (data, dim)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (data, dim) = blobs(100, 5);
+        let km = KMeans::train(&data, dim, &KMeansParams::new(3)).unwrap();
+        // each centroid must be near one of the true centers
+        let mut found = [false; 3];
+        let centers = [10.0f32, -10.0, 30.0];
+        for c in 0..3 {
+            let mean: f32 = km.centroid(c).iter().sum::<f32>() / dim as f32;
+            for (t, &tc) in centers.iter().enumerate() {
+                if (mean - tc).abs() < 1.0 {
+                    found[t] = true;
+                }
+            }
+        }
+        assert!(found.iter().all(|&f| f), "centroids {:?}", &km.centroids[..8]);
+        assert!(km.objective < 5.0, "objective {}", km.objective);
+    }
+
+    #[test]
+    fn assignment_consistent() {
+        let (data, dim) = blobs(50, 6);
+        let km = KMeans::train(&data, dim, &KMeansParams::new(3)).unwrap();
+        let batch = km.assign_batch(&data);
+        for i in 0..batch.len() {
+            assert_eq!(batch[i] as usize, km.assign_one(&data[i * dim..(i + 1) * dim]));
+        }
+        // points in the same blob share an assignment
+        for blob in 0..3 {
+            let a0 = batch[blob * 50];
+            for i in 0..50 {
+                assert_eq!(batch[blob * 50 + i], a0, "blob {blob} point {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (data, dim) = blobs(40, 7);
+        let p = KMeansParams::new(4);
+        let a = KMeans::train(&data, dim, &p).unwrap();
+        let b = KMeans::train(&data, dim, &p).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(KMeans::train(&[1.0, 2.0, 3.0], 2, &KMeansParams::new(1)).is_err());
+        assert!(KMeans::train(&[1.0, 2.0], 2, &KMeansParams::new(5)).is_err());
+    }
+
+    #[test]
+    fn handles_k_equals_n() {
+        let (data, dim) = blobs(2, 8); // 6 points
+        let km = KMeans::train(&data, dim, &KMeansParams::new(6)).unwrap();
+        assert_eq!(km.centroids.len(), 6 * dim);
+        // objective should be ~0 (every point its own centroid after splits)
+        assert!(km.objective < 2.0, "objective {}", km.objective);
+    }
+
+    #[test]
+    fn subsampling_path() {
+        let (data, dim) = blobs(400, 9); // 1200 points
+        let mut p = KMeansParams::new(3);
+        p.max_points_per_centroid = 50; // force subsample: budget 150 < 1200
+        let km = KMeans::train(&data, dim, &p).unwrap();
+        assert!(km.objective < 5.0);
+    }
+
+    #[test]
+    fn objective_decreases_with_more_k() {
+        let (data, dim) = blobs(60, 10);
+        let o2 = KMeans::train(&data, dim, &KMeansParams::new(2)).unwrap().objective;
+        let o6 = KMeans::train(&data, dim, &KMeansParams::new(6)).unwrap().objective;
+        assert!(o6 < o2, "k=6 {o6} !< k=2 {o2}");
+    }
+}

@@ -1,0 +1,47 @@
+//! # armpq — ARM 4-bit PQ: SIMD-based ANN search (paper reproduction)
+//!
+//! Reproduction of *"ARM 4-bit PQ: SIMD-based Acceleration for Approximate
+//! Nearest Neighbor Search on ARM"* (Matsui et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — bundling **two 128-bit SIMD registers into one
+//! virtual 256-bit register** so that the 4-bit-PQ lookup table stays
+//! register-resident — lives in [`simd`] (the dual-lane register model) and
+//! [`pq::fastscan`] (the scan kernel built on it). Everything the paper
+//! depends on is implemented here as well: k-means training ([`kmeans`]),
+//! product quantization ([`pq`]), inverted indexing ([`ivf`]), HNSW coarse
+//! quantization ([`hnsw`]), dataset synthesis and IO ([`datasets`]),
+//! evaluation ([`eval`]), a PJRT runtime that executes the AOT-compiled
+//! JAX/Pallas artifacts ([`runtime`]) and a batching query coordinator
+//! ([`coordinator`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use armpq::index::{Index, factory};
+//! use armpq::datasets::synthetic::SyntheticDataset;
+//!
+//! let ds = SyntheticDataset::sift_like(10_000, 100, 123);
+//! let mut index = factory::index_factory(ds.dim, "PQ16x4fs").unwrap();
+//! index.train(&ds.train).unwrap();
+//! index.add(&ds.base).unwrap();
+//! let result = index.search(&ds.queries, 10).unwrap();
+//! println!("top-1 of q0 = {}", result.labels[0]);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod error;
+pub mod eval;
+pub mod experiments;
+pub mod hnsw;
+pub mod index;
+pub mod ivf;
+pub mod kmeans;
+pub mod pq;
+pub mod runtime;
+pub mod simd;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,224 @@
+//! `armpq` CLI: the leader entrypoint of the 4-bit PQ serving stack.
+//!
+//! ```text
+//! armpq info                        host/backend/artifact report
+//! armpq gen-data  --dataset sift --n 100000 --out data/
+//! armpq search    --factory PQ16x4fs --dataset deep --n 100000 --k 10
+//! armpq serve     --factory IVF256_HNSW32,PQ16x4fs --n 200000 --addr 127.0.0.1:7878
+//! armpq client    --addr 127.0.0.1:7878 --nq 100 --k 10
+//! armpq bench-fig2   [--dataset sift|deep] [--n …] [--m 8,16,32,64]
+//! armpq bench-table1 [--n …] [--nlist …] [--nprobe 1,2,4]
+//! armpq bench-micro  [--m 16]
+//! armpq bench-pjrt   [--artifacts artifacts]
+//! ```
+
+use armpq::config::ExperimentConfig;
+use armpq::coordinator::{IvfBackend, Server, ServerConfig};
+use armpq::datasets::io::write_fvecs;
+use armpq::eval::{ground_truth, recall_at_r};
+use armpq::experiments;
+use armpq::index::index_factory;
+use armpq::ivf::{IvfParams, IvfPq4};
+use armpq::pq::PqParams;
+use armpq::util::args::Args;
+use armpq::util::timer::Timer;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+    let code = match run(&cmd, &args) {
+        Ok(()) => {
+            let unknown = args.unknown_keys();
+            if !unknown.is_empty() {
+                eprintln!("warning: unrecognized flags: {unknown:?}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
+    match cmd {
+        "info" => info(args),
+        "gen-data" => gen_data(args),
+        "search" => search(args),
+        "serve" => serve(args),
+        "client" => client(args),
+        "bench-fig2" => {
+            let cfg = ExperimentConfig::from_args(args)?;
+            let ms = args.get_usize_list("m", &[8, 16, 32, 64]);
+            let t = experiments::run_fig2(&cfg.dataset, cfg.n, cfg.nq, &ms, cfg.trials, cfg.seed)?;
+            t.print();
+            t.save()?;
+            Ok(())
+        }
+        "bench-table1" => {
+            let cfg = ExperimentConfig::from_args(args)?;
+            let nlist = args.get_usize("nlist", (cfg.n as f64).sqrt() as usize);
+            let nprobes = args.get_usize_list("nprobe", &[1, 2, 4]);
+            let m = args.get_usize("pq-m", 16);
+            let t = experiments::run_table1(cfg.n, cfg.nq, nlist, m, &nprobes, cfg.trials, cfg.seed)?;
+            t.print();
+            t.save()?;
+            Ok(())
+        }
+        "bench-micro" => {
+            let m = args.get_usize("m", 16);
+            let t = experiments::run_kernel_micro(m);
+            t.print();
+            t.save()?;
+            Ok(())
+        }
+        "bench-pjrt" => {
+            let dir = args.get_str("artifacts", "artifacts");
+            let t = experiments::run_pjrt_e2e(std::path::Path::new(&dir), 3)?;
+            t.print();
+            t.save()?;
+            Ok(())
+        }
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "armpq — ARM 4-bit PQ reproduction (SIMD ANN search)
+commands:
+  info          host/backend/artifact report
+  gen-data      write synthetic datasets as fvecs
+  search        build an index from a factory string and run queries
+  serve         start the TCP batching coordinator
+  client        drive a running server
+  bench-fig2    paper Fig. 2 (PQ vs 4-bit PQ recall/QPS sweep)
+  bench-table1  paper Table 1 (IVF+HNSW+PQ16x4fs at scale)
+  bench-micro   paper Fig. 1 lookup-op micro-benchmark
+  bench-pjrt    3-layer PJRT end-to-end comparison
+common flags: --dataset sift|deep --n <int> --nq <int> --k <int>
+              --factory <spec> --nprobe <list> --seed <int> --config <file>";
+
+fn info(args: &Args) -> armpq::Result<()> {
+    println!("armpq {} — ARM 4-bit PQ reproduction", env!("CARGO_PKG_VERSION"));
+    println!("simd backends: {:?} (best: {:?})", armpq::simd::available_backends(), armpq::simd::best_backend());
+    println!("threads: {}", armpq::util::threads::default_threads());
+    let dir = args.get_str("artifacts", "artifacts");
+    match armpq::runtime::Manifest::load(std::path::Path::new(&dir)) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir);
+            for a in &m.artifacts {
+                println!("  {:30} kind={:9} params={:?}", a.name, a.kind, a.params);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn gen_data(args: &Args) -> armpq::Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let out = args.get_str("out", "data");
+    std::fs::create_dir_all(&out)?;
+    let ds = experiments::make_dataset(&cfg.dataset, cfg.n, cfg.nq, cfg.seed);
+    let base = format!("{out}/{}_{}k", cfg.dataset, cfg.n / 1000);
+    write_fvecs(std::path::Path::new(&format!("{base}_base.fvecs")), ds.dim, &ds.base)?;
+    write_fvecs(std::path::Path::new(&format!("{base}_query.fvecs")), ds.dim, &ds.queries)?;
+    write_fvecs(std::path::Path::new(&format!("{base}_learn.fvecs")), ds.dim, &ds.train)?;
+    println!("wrote {base}_{{base,query,learn}}.fvecs (dim {})", ds.dim);
+    Ok(())
+}
+
+fn search(args: &Args) -> armpq::Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let ds = experiments::make_dataset(&cfg.dataset, cfg.n, cfg.nq, cfg.seed);
+    println!("dataset {} n={} nq={} dim={}", cfg.dataset, cfg.n, cfg.nq, ds.dim);
+    let mut idx = index_factory(ds.dim, &cfg.factory)?;
+    let t = Timer::start();
+    idx.train(&ds.train)?;
+    println!("trained {} in {:.1}s", idx.describe(), t.elapsed_s());
+    let t = Timer::start();
+    idx.add(&ds.base)?;
+    println!("added {} vectors in {:.1}s", idx.ntotal(), t.elapsed_s());
+    if cfg.nprobe > 0 {
+        let _ = idx.set_param("nprobe", &cfg.nprobe.to_string());
+    }
+    let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+    let t = Timer::start();
+    let r = idx.search(&ds.queries, cfg.k)?;
+    let ms = t.elapsed_ms() / cfg.nq as f64;
+    println!(
+        "recall@1 {:.3}  recall@{} {:.3}  {:.3} ms/query  {:.0} QPS",
+        recall_at_r(&gt, 1, &r.labels, cfg.k, 1),
+        cfg.k,
+        recall_at_r(&gt, 1, &r.labels, cfg.k, cfg.k),
+        ms,
+        1e3 / ms
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> armpq::Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let nlist = args.get_usize("nlist", (cfg.n as f64).sqrt() as usize);
+    let m = args.get_usize("pq-m", 16);
+    let ds = experiments::make_dataset(&cfg.dataset, cfg.n, cfg.nq, cfg.seed);
+
+    let mut params = IvfParams::new(nlist);
+    params.coarse_hnsw = true;
+    let mut idx = IvfPq4::new(ds.dim, params, PqParams::new_4bit(m));
+    println!("training IVF{nlist}_HNSW32,PQ{m}x4fs on {} vectors…", cfg.n);
+    idx.train(&ds.train)?;
+    idx.add(&ds.base)?;
+    idx.nprobe = cfg.nprobe.max(1);
+    let backend = Arc::new(IvfBackend::new(idx)?);
+    let server = Server::start(
+        backend,
+        ServerConfig { addr: addr.clone(), ..Default::default() },
+    )?;
+    println!("serving on {} (dim {}) — Ctrl-C to stop", server.addr, ds.dim);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!("stats: {}", server.metrics_json().to_string());
+    }
+}
+
+fn client(args: &Args) -> armpq::Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let addr: std::net::SocketAddr = args
+        .get_str("addr", "127.0.0.1:7878")
+        .parse()
+        .map_err(|e| armpq::Error::Serve(format!("bad addr: {e}")))?;
+    let mut client = armpq::coordinator::Client::connect(&addr)?;
+    client.ping()?;
+    // queries drawn from the same distribution as the served dataset
+    let ds = experiments::make_dataset(&cfg.dataset, 1, cfg.nq, cfg.seed);
+    let mut stats = armpq::util::timer::LatencyStats::new();
+    for qi in 0..cfg.nq {
+        let t = Timer::start();
+        let (_d, _l, batch) = client.search(ds.query(qi), cfg.k)?;
+        stats.record_ms(t.elapsed_ms());
+        if qi == 0 {
+            println!("first response: batch_size={batch}");
+        }
+    }
+    println!(
+        "{} queries: mean {:.2} ms  p50 {:.2}  p95 {:.2}  QPS {:.0}",
+        stats.count(),
+        stats.mean_ms(),
+        stats.percentile_ms(50.0),
+        stats.percentile_ms(95.0),
+        stats.qps()
+    );
+    println!("server stats: {}", client.stats()?.to_string());
+    Ok(())
+}

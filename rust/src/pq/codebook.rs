@@ -1,0 +1,293 @@
+//! The product quantizer itself: training, encoding, decoding, and f32
+//! ADC lookup-table construction (paper §2).
+
+use crate::kmeans::{nearest_centroid, KMeans, KMeansParams};
+use crate::util::threads::{default_threads, parallel_chunks};
+use crate::{Error, Result};
+
+/// Product-quantizer hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct PqParams {
+    /// Number of sub-quantizers M (vector is split into M sub-vectors).
+    pub m: usize,
+    /// Codewords per sub-space. 16 → 4-bit codes (the paper's setting);
+    /// 256 → classic 8-bit PQ.
+    pub ksub: usize,
+    /// k-means iterations for each sub-space.
+    pub train_iters: usize,
+    pub seed: u64,
+}
+
+impl PqParams {
+    /// The paper's 4-bit configuration: `K = 16`.
+    pub fn new_4bit(m: usize) -> Self {
+        Self { m, ksub: 16, train_iters: 25, seed: 1234 }
+    }
+
+    /// Classic 8-bit PQ (`K = 256`).
+    pub fn new_8bit(m: usize) -> Self {
+        Self { m, ksub: 256, train_iters: 25, seed: 1234 }
+    }
+
+    /// Bits per code: `log2(ksub)`.
+    pub fn nbits(&self) -> u32 {
+        self.ksub.trailing_zeros()
+    }
+}
+
+/// A trained product quantizer.
+///
+/// Codewords are stored row-major as `m × ksub × dsub`; codes produced by
+/// [`ProductQuantizer::encode`] are one byte per sub-quantizer (packing to
+/// 4 bits is the job of [`crate::pq::layout`]).
+#[derive(Clone, Debug)]
+pub struct ProductQuantizer {
+    pub dim: usize,
+    pub m: usize,
+    pub ksub: usize,
+    pub dsub: usize,
+    /// `m × ksub × dsub` codeword tensor.
+    pub centroids: Vec<f32>,
+}
+
+impl ProductQuantizer {
+    /// Train on `n × dim` row-major vectors.
+    pub fn train(data: &[f32], dim: usize, params: &PqParams) -> Result<Self> {
+        if params.m == 0 || dim % params.m != 0 {
+            return Err(Error::InvalidParameter(format!(
+                "dim {dim} not divisible by m {}",
+                params.m
+            )));
+        }
+        if !params.ksub.is_power_of_two() || params.ksub < 2 {
+            return Err(Error::InvalidParameter(format!(
+                "ksub must be a power of two >= 2, got {}",
+                params.ksub
+            )));
+        }
+        let n = data.len() / dim;
+        if n < params.ksub {
+            return Err(Error::InvalidParameter(format!(
+                "need >= ksub={} training vectors, got {n}",
+                params.ksub
+            )));
+        }
+        let dsub = dim / params.m;
+        let mut centroids = vec![0.0f32; params.m * params.ksub * dsub];
+
+        for mi in 0..params.m {
+            // slice out sub-vectors for this sub-space
+            let mut sub = vec![0.0f32; n * dsub];
+            for i in 0..n {
+                let src = &data[i * dim + mi * dsub..i * dim + (mi + 1) * dsub];
+                sub[i * dsub..(i + 1) * dsub].copy_from_slice(src);
+            }
+            let mut kp = KMeansParams::new(params.ksub);
+            kp.iters = params.train_iters;
+            kp.seed = params.seed.wrapping_add(mi as u64);
+            let km = KMeans::train(&sub, dsub, &kp)?;
+            let dst = &mut centroids[mi * params.ksub * dsub..(mi + 1) * params.ksub * dsub];
+            dst.copy_from_slice(&km.centroids);
+        }
+
+        Ok(Self { dim, m: params.m, ksub: params.ksub, dsub, centroids })
+    }
+
+    /// Codewords of sub-space `mi`: `ksub × dsub` row-major.
+    #[inline]
+    pub fn sub_centroids(&self, mi: usize) -> &[f32] {
+        let sz = self.ksub * self.dsub;
+        &self.centroids[mi * sz..(mi + 1) * sz]
+    }
+
+    /// Encode one vector → `m` code bytes.
+    pub fn encode_one(&self, x: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert!(out.len() >= self.m);
+        for mi in 0..self.m {
+            let sub = &x[mi * self.dsub..(mi + 1) * self.dsub];
+            let (k, _) = nearest_centroid(sub, self.sub_centroids(mi), self.ksub, self.dsub);
+            out[mi] = k as u8;
+        }
+    }
+
+    /// Encode a batch (`n × dim`) → `n × m` code bytes, parallel over rows.
+    pub fn encode(&self, xs: &[f32]) -> Result<Vec<u8>> {
+        if xs.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: xs.len() % self.dim });
+        }
+        let n = xs.len() / self.dim;
+        let mut codes = vec![0u8; n * self.m];
+        let codes_ptr = CodesPtr(codes.as_mut_ptr());
+        let m = self.m;
+        parallel_chunks(n, default_threads(), |s, e| {
+            let p = codes_ptr;
+            for i in s..e {
+                let row = &xs[i * self.dim..(i + 1) * self.dim];
+                // SAFETY: rows are disjoint per chunk.
+                let out = unsafe { std::slice::from_raw_parts_mut(p.0.add(i * m), m) };
+                self.encode_one(row, out);
+            }
+        });
+        Ok(codes)
+    }
+
+    /// Reconstruct (lossy) a vector from its `m` code bytes.
+    pub fn decode_one(&self, codes: &[u8], out: &mut [f32]) {
+        debug_assert!(codes.len() >= self.m);
+        debug_assert_eq!(out.len(), self.dim);
+        for mi in 0..self.m {
+            let k = codes[mi] as usize;
+            let c = &self.sub_centroids(mi)[k * self.dsub..(k + 1) * self.dsub];
+            out[mi * self.dsub..(mi + 1) * self.dsub].copy_from_slice(c);
+        }
+    }
+
+    /// Build the f32 ADC lookup table for `query`: `m × ksub`, entry
+    /// `[mi][k] = ‖q_mi − c_mi,k‖²` (paper Eq. 2, extended from VQ to PQ).
+    pub fn compute_luts(&self, query: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(query.len(), self.dim);
+        let mut luts = vec![0.0f32; self.m * self.ksub];
+        for mi in 0..self.m {
+            let qsub = &query[mi * self.dsub..(mi + 1) * self.dsub];
+            let cents = self.sub_centroids(mi);
+            for k in 0..self.ksub {
+                luts[mi * self.ksub + k] =
+                    crate::util::l2_sq(qsub, &cents[k * self.dsub..(k + 1) * self.dsub]);
+            }
+        }
+        luts
+    }
+
+    /// Exact ADC distance of a coded vector given f32 LUTs (`m × ksub`).
+    #[inline]
+    pub fn adc_distance(&self, luts: &[f32], codes: &[u8]) -> f32 {
+        let mut d = 0.0f32;
+        for mi in 0..self.m {
+            d += luts[mi * self.ksub + codes[mi] as usize];
+        }
+        d
+    }
+
+    /// Bytes per encoded vector before 4-bit packing.
+    pub fn code_size(&self) -> usize {
+        self.m
+    }
+}
+
+#[derive(Clone, Copy)]
+struct CodesPtr(*mut u8);
+unsafe impl Send for CodesPtr {}
+unsafe impl Sync for CodesPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * dim).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn train_shapes() {
+        let data = random_data(500, 32, 1);
+        let pq = ProductQuantizer::train(&data, 32, &PqParams::new_4bit(8)).unwrap();
+        assert_eq!(pq.dsub, 4);
+        assert_eq!(pq.centroids.len(), 8 * 16 * 4);
+        assert_eq!(pq.code_size(), 8);
+    }
+
+    #[test]
+    fn encode_codes_in_range() {
+        let data = random_data(300, 16, 2);
+        let pq = ProductQuantizer::train(&data, 16, &PqParams::new_4bit(4)).unwrap();
+        let codes = pq.encode(&data).unwrap();
+        assert_eq!(codes.len(), 300 * 4);
+        assert!(codes.iter().all(|&c| c < 16));
+    }
+
+    #[test]
+    fn decode_reduces_error_vs_random() {
+        // quantization error must be far below the error of a random vector
+        let data = random_data(1000, 32, 3);
+        let pq = ProductQuantizer::train(&data, 32, &PqParams::new_4bit(8)).unwrap();
+        let codes = pq.encode(&data).unwrap();
+        let mut rec = vec![0.0f32; 32];
+        let mut err = 0.0f64;
+        let mut base = 0.0f64;
+        for i in 0..1000 {
+            let x = &data[i * 32..(i + 1) * 32];
+            pq.decode_one(&codes[i * 8..(i + 1) * 8], &mut rec);
+            err += crate::util::l2_sq(x, &rec) as f64;
+            base += x.iter().map(|v| v * v).sum::<f32>() as f64; // vs zero vector
+        }
+        assert!(err < base * 0.8, "err {err} base {base}");
+    }
+
+    #[test]
+    fn adc_equals_decoded_distance() {
+        // ADC(q, code) must equal ||q - decode(code)||² exactly (paper Eq. 3)
+        let data = random_data(400, 24, 4);
+        let pq = ProductQuantizer::train(&data, 24, &PqParams::new_4bit(6)).unwrap();
+        let codes = pq.encode(&data).unwrap();
+        let query = &data[..24];
+        let luts = pq.compute_luts(query);
+        let mut rec = vec![0.0f32; 24];
+        for i in 0..50 {
+            let c = &codes[i * 6..(i + 1) * 6];
+            pq.decode_one(c, &mut rec);
+            let direct = crate::util::l2_sq(query, &rec);
+            let adc = pq.adc_distance(&luts, c);
+            assert!((direct - adc).abs() < 1e-2 * (1.0 + direct), "i={i} {direct} vs {adc}");
+        }
+    }
+
+    #[test]
+    fn eight_bit_mode() {
+        let data = random_data(600, 16, 5);
+        let pq = ProductQuantizer::train(&data, 16, &PqParams::new_8bit(2)).unwrap();
+        assert_eq!(pq.ksub, 256);
+        let codes = pq.encode(&data[..160]).unwrap();
+        assert_eq!(codes.len(), 10 * 2);
+    }
+
+    #[test]
+    fn rejects_indivisible_dim() {
+        let data = random_data(100, 30, 6);
+        assert!(ProductQuantizer::train(&data, 30, &PqParams::new_4bit(8)).is_err());
+    }
+
+    #[test]
+    fn rejects_tiny_training_set() {
+        let data = random_data(8, 16, 7);
+        assert!(ProductQuantizer::train(&data, 16, &PqParams::new_4bit(4)).is_err());
+    }
+
+    #[test]
+    fn encode_is_nearest_codeword() {
+        let data = random_data(200, 8, 8);
+        let pq = ProductQuantizer::train(&data, 8, &PqParams::new_4bit(2)).unwrap();
+        let mut codes = vec![0u8; 2];
+        for i in 0..20 {
+            let x = &data[i * 8..(i + 1) * 8];
+            pq.encode_one(x, &mut codes);
+            for mi in 0..2 {
+                let sub = &x[mi * 4..(mi + 1) * 4];
+                let cents = pq.sub_centroids(mi);
+                let chosen = crate::util::l2_sq(sub, &cents[codes[mi] as usize * 4..][..4]);
+                for k in 0..16 {
+                    let d = crate::util::l2_sq(sub, &cents[k * 4..(k + 1) * 4]);
+                    assert!(chosen <= d + 1e-5, "code {} not nearest", codes[mi]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nbits_helper() {
+        assert_eq!(PqParams::new_4bit(8).nbits(), 4);
+        assert_eq!(PqParams::new_8bit(8).nbits(), 8);
+    }
+}

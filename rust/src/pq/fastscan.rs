@@ -1,0 +1,574 @@
+//! The 4-bit PQ fastscan kernel — the paper's §3, end to end.
+//!
+//! Per 32-vector block and per sub-quantizer pair `(q, q+1)`:
+//!
+//! 1. one 32-byte load of packed codes (virtual 256-bit register),
+//! 2. nibble extraction (`& 0x0F`, `>> 4`),
+//! 3. **dual-table shuffle** — the 256-bit `_mm256_shuffle_epi8` emulated
+//!    as two 128-bit `vqtbl1q_u8`, lane-lo against `T_q`, lane-hi against
+//!    `T_{q+1}` (Fig. 1c),
+//! 4. zero-extend and saturating-accumulate into u16 lanes.
+//!
+//! After the pair loop, 32 quantized distances are compared against the
+//! current reservoir threshold with a SIMD compare + emulated `movemask`
+//! (the AVX2-only instruction the paper re-creates), and only surviving
+//! lanes touch the reservoir. Candidates are optionally re-ranked with the
+//! exact f32 tables.
+//!
+//! Two differential-tested implementations: the portable NEON-semantics
+//! model ([`crate::simd`]) and a real-SIMD SSSE3 path
+//! ([`crate::simd::x86`]).
+
+use crate::pq::codebook::ProductQuantizer;
+use crate::pq::layout::PackedCodes4;
+use crate::pq::lut::QuantizedLuts;
+use crate::pq::BLOCK_SIZE;
+use crate::simd::{best_backend, Backend, Simd256u16, Simd256u8};
+use crate::util::topk::{TopK, U16Reservoir};
+
+/// Fastscan search options.
+#[derive(Clone, Debug)]
+pub struct FastScanParams {
+    /// Which kernel implementation to run.
+    pub backend: Backend,
+    /// Re-rank reservoir candidates with exact f32 tables (default true —
+    /// recovers "same accuracy" as original PQ, paper Fig. 2).
+    pub rerank: bool,
+    /// Reservoir over-collection factor relative to k.
+    pub reservoir_factor: usize,
+}
+
+impl Default for FastScanParams {
+    fn default() -> Self {
+        Self { backend: best_backend(), rerank: true, reservoir_factor: 8 }
+    }
+}
+
+/// LUTs padded/arranged for the kernel: `m_pad × 16` bytes, so the pair
+/// `(2p, 2p+1)` is one contiguous 32-byte dual-table register.
+pub struct KernelLuts {
+    pub bytes: Vec<u8>,
+    pub m_pad: usize,
+}
+
+impl KernelLuts {
+    pub fn build(qluts: &QuantizedLuts, m_pad: usize) -> Self {
+        assert_eq!(qluts.ksub, 16, "fastscan requires ksub=16 (4-bit codes)");
+        let mut bytes = vec![0u8; m_pad * 16];
+        for mi in 0..qluts.m {
+            bytes[mi * 16..(mi + 1) * 16].copy_from_slice(qluts.row(mi));
+        }
+        // phantom sub-quantizer rows (odd-M padding) stay all-zero: they
+        // contribute nothing to any distance.
+        Self { bytes, m_pad }
+    }
+
+    #[inline]
+    pub fn pair(&self, p: usize) -> &[u8] {
+        &self.bytes[p * 32..(p + 1) * 32]
+    }
+}
+
+// ------------------------------------------------------------------ kernels
+
+/// Portable (NEON-semantics) block kernel: 32 quantized distances.
+#[inline]
+pub fn accumulate_block_portable(block: &[u8], luts: &KernelLuts, out: &mut [u16; BLOCK_SIZE]) {
+    let npairs = luts.m_pad / 2;
+    let mask = Simd256u8::splat(0x0F);
+    let mut acc_a = Simd256u16::zero(); // vectors 0..16
+    let mut acc_b = Simd256u16::zero(); // vectors 16..32
+    for p in 0..npairs {
+        let c = Simd256u8::load(&block[p * 32..(p + 1) * 32]);
+        let clo = c.and(mask); // codes of (q, q+1) for v0..v15
+        let chi = c.shr4(); // codes of (q, q+1) for v16..v31 (already < 16)
+        let tables = Simd256u8::load(luts.pair(p)); // lane-lo: T_q, lane-hi: T_{q+1}
+        let r0 = Simd256u8::shuffle_dual(tables, clo);
+        let r1 = Simd256u8::shuffle_dual(tables, chi);
+        let (w00, w01) = r0.widen(); // contrib of q / q+1 for v0..15
+        acc_a = acc_a.sat_add(w00).sat_add(w01);
+        let (w10, w11) = r1.widen();
+        acc_b = acc_b.sat_add(w10).sat_add(w11);
+    }
+    acc_a.store(&mut out[..16]);
+    acc_b.store(&mut out[16..]);
+}
+
+/// Real-SIMD SSSE3 block kernel (x86_64). Same structure, `pshufb` lanes.
+///
+/// # Safety
+/// Caller must ensure SSSE3 is available ([`best_backend`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+pub unsafe fn accumulate_block_ssse3(block: &[u8], luts: &KernelLuts, out: &mut [u16; BLOCK_SIZE]) {
+    use crate::simd::x86::{X86Simd256u16, X86Simd256u8};
+    let npairs = luts.m_pad / 2;
+    let mask = X86Simd256u8::splat(0x0F);
+    let mut acc_a = X86Simd256u16::zero();
+    let mut acc_b = X86Simd256u16::zero();
+    for p in 0..npairs {
+        let c = X86Simd256u8::load(block.as_ptr().add(p * 32));
+        let clo = c.and(mask);
+        let chi = c.shr4(); // includes the &0x0F internally
+        let tables = X86Simd256u8::load(luts.bytes.as_ptr().add(p * 32));
+        let r0 = X86Simd256u8::shuffle_dual(tables, clo);
+        let r1 = X86Simd256u8::shuffle_dual(tables, chi);
+        let (w00, w01) = r0.widen();
+        acc_a = acc_a.sat_add(w00).sat_add(w01);
+        let (w10, w11) = r1.widen();
+        acc_b = acc_b.sat_add(w10).sat_add(w11);
+    }
+    acc_a.store(out.as_mut_ptr());
+    acc_b.store(out.as_mut_ptr().add(16));
+}
+
+/// Dispatch one block through the chosen backend.
+#[inline]
+fn accumulate_block(
+    backend: Backend,
+    block: &[u8],
+    luts: &KernelLuts,
+    out: &mut [u16; BLOCK_SIZE],
+) {
+    match backend {
+        Backend::Portable => accumulate_block_portable(block, luts, out),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Ssse3 => unsafe { accumulate_block_ssse3(block, luts, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Ssse3 => accumulate_block_portable(block, luts, out),
+    }
+}
+
+/// All quantized distances (n entries) — tests, ablations, IVF internals.
+pub fn fastscan_distances_all(
+    packed: &PackedCodes4,
+    luts: &KernelLuts,
+    backend: Backend,
+) -> Vec<u16> {
+    let mut out = vec![0u16; packed.n];
+    let mut block_d = [0u16; BLOCK_SIZE];
+    let bb = packed.block_bytes();
+    for b in 0..packed.nblocks() {
+        accumulate_block(backend, &packed.data[b * bb..(b + 1) * bb], luts, &mut block_d);
+        let base = b * BLOCK_SIZE;
+        let take = BLOCK_SIZE.min(packed.n - base);
+        out[base..base + take].copy_from_slice(&block_d[..take]);
+    }
+    out
+}
+
+/// Scan all blocks into a reservoir, SIMD-pruning lanes above the current
+/// threshold via compare + emulated movemask.
+pub fn scan_into_reservoir(
+    packed: &PackedCodes4,
+    luts: &KernelLuts,
+    backend: Backend,
+    labels: Option<&[i64]>,
+    reservoir: &mut U16Reservoir,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if backend == Backend::Ssse3 {
+        // fused hot path: tables hoisted into registers, in-register
+        // threshold compare, stores only for surviving blocks
+        unsafe { scan_reservoir_ssse3(packed, luts, labels, reservoir) };
+        return;
+    }
+    scan_reservoir_portable(packed, luts, labels, reservoir);
+}
+
+fn scan_reservoir_portable(
+    packed: &PackedCodes4,
+    luts: &KernelLuts,
+    labels: Option<&[i64]>,
+    reservoir: &mut U16Reservoir,
+) {
+    let mut block_d = [0u16; BLOCK_SIZE];
+    let bb = packed.block_bytes();
+    let nblocks = packed.nblocks();
+    for b in 0..nblocks {
+        accumulate_block_portable(&packed.data[b * bb..(b + 1) * bb], luts, &mut block_d);
+        let base = b * BLOCK_SIZE;
+        let limit = BLOCK_SIZE.min(packed.n - base);
+        let thr = reservoir.threshold();
+
+        // SIMD threshold test: two Simd256u16 lane groups → 32-bit mask.
+        let thr_v = Simd256u16::splat(thr);
+        let lo = Simd256u16 {
+            lo: crate::simd::U16x8(block_d[0..8].try_into().unwrap()),
+            hi: crate::simd::U16x8(block_d[8..16].try_into().unwrap()),
+        };
+        let hi = Simd256u16 {
+            lo: crate::simd::U16x8(block_d[16..24].try_into().unwrap()),
+            hi: crate::simd::U16x8(block_d[24..32].try_into().unwrap()),
+        };
+        let mut mask = (lo.lt(thr_v).movemask() as u32) | ((hi.lt(thr_v).movemask() as u32) << 16);
+        if limit < BLOCK_SIZE {
+            mask &= (1u32 << limit) - 1; // drop phantom padding lanes
+        }
+        while mask != 0 {
+            let v = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let idx = base + v;
+            let label = labels.map(|l| l[idx]).unwrap_or(idx as i64);
+            reservoir.push(block_d[v], label);
+        }
+    }
+}
+
+/// Fused SSSE3 scan (the §Perf hot path):
+///
+/// * the `m_pad/2` dual-table registers are loaded **once** and stay in
+///   registers across all blocks (the paper's register-resident tables,
+///   taken to its limit),
+/// * the reservoir threshold test happens **in-register** on the u16
+///   accumulators (`subs_epu16` + `cmpeq` + `packs` + `movemask` — the
+///   unsigned-compare idiom, since SSE2 lacks `cmplt_epu16`),
+/// * distances are stored to memory only when some lane survives, which is
+///   rare once the threshold tightens.
+///
+/// # Safety
+/// Caller must ensure SSSE3 is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+unsafe fn scan_reservoir_ssse3(
+    packed: &PackedCodes4,
+    luts: &KernelLuts,
+    labels: Option<&[i64]>,
+    reservoir: &mut U16Reservoir,
+) {
+    #![allow(unsafe_op_in_unsafe_fn)]
+    use core::arch::x86_64::*;
+    const MAX_PAIRS: usize = 128;
+    let npairs = luts.m_pad / 2;
+    assert!(npairs <= MAX_PAIRS, "M too large for the fused kernel");
+
+    // hoist the dual-table registers out of the block loop
+    let mut tables = [unsafe { _mm_setzero_si128() }; MAX_PAIRS * 2];
+    for p in 0..npairs {
+        let ptr = luts.bytes.as_ptr().add(p * 32);
+        tables[2 * p] = _mm_loadu_si128(ptr as *const __m128i);
+        tables[2 * p + 1] = _mm_loadu_si128(ptr.add(16) as *const __m128i);
+    }
+    let nib = _mm_set1_epi8(0x0F);
+    let zero = _mm_setzero_si128();
+
+    let bb = packed.block_bytes();
+    let nblocks = packed.nblocks();
+    let data = packed.data.as_ptr();
+    let mut block_d = [0u16; BLOCK_SIZE];
+
+    for b in 0..nblocks {
+        let base_ptr = data.add(b * bb);
+        // accumulators: 4 × 8 u16 lanes covering vectors 0..32
+        let mut a0 = zero; // v0..8
+        let mut a1 = zero; // v8..16
+        let mut a2 = zero; // v16..24
+        let mut a3 = zero; // v24..32
+        for p in 0..npairs {
+            let c_lo = _mm_loadu_si128(base_ptr.add(p * 32) as *const __m128i);
+            let c_hi = _mm_loadu_si128(base_ptr.add(p * 32 + 16) as *const __m128i);
+            let t_lo = tables[2 * p];
+            let t_hi = tables[2 * p + 1];
+            // v0..16 contributions of sub-quantizers (q, q+1)
+            let r0_lo = _mm_shuffle_epi8(t_lo, _mm_and_si128(c_lo, nib));
+            let r0_hi = _mm_shuffle_epi8(t_hi, _mm_and_si128(c_hi, nib));
+            // v16..32 contributions
+            let r1_lo = _mm_shuffle_epi8(t_lo, _mm_and_si128(_mm_srli_epi16(c_lo, 4), nib));
+            let r1_hi = _mm_shuffle_epi8(t_hi, _mm_and_si128(_mm_srli_epi16(c_hi, 4), nib));
+            // widen + saturating accumulate (both lane groups feed the
+            // same vectors — the faiss "fixup" merged into the add chain)
+            a0 = _mm_adds_epu16(a0, _mm_unpacklo_epi8(r0_lo, zero));
+            a1 = _mm_adds_epu16(a1, _mm_unpackhi_epi8(r0_lo, zero));
+            a0 = _mm_adds_epu16(a0, _mm_unpacklo_epi8(r0_hi, zero));
+            a1 = _mm_adds_epu16(a1, _mm_unpackhi_epi8(r0_hi, zero));
+            a2 = _mm_adds_epu16(a2, _mm_unpacklo_epi8(r1_lo, zero));
+            a3 = _mm_adds_epu16(a3, _mm_unpackhi_epi8(r1_lo, zero));
+            a2 = _mm_adds_epu16(a2, _mm_unpacklo_epi8(r1_hi, zero));
+            a3 = _mm_adds_epu16(a3, _mm_unpackhi_epi8(r1_hi, zero));
+        }
+        // in-register threshold: acc < thr ⟺ subs_epu16(acc, thr-1) == 0
+        let thr = reservoir.threshold();
+        if thr == 0 {
+            continue;
+        }
+        let thr_m1 = _mm_set1_epi16(thr.wrapping_sub(1) as i16);
+        let c0 = _mm_cmpeq_epi16(_mm_subs_epu16(a0, thr_m1), zero);
+        let c1 = _mm_cmpeq_epi16(_mm_subs_epu16(a1, thr_m1), zero);
+        let c2 = _mm_cmpeq_epi16(_mm_subs_epu16(a2, thr_m1), zero);
+        let c3 = _mm_cmpeq_epi16(_mm_subs_epu16(a3, thr_m1), zero);
+        let mask_lo = _mm_movemask_epi8(_mm_packs_epi16(c0, c1)) as u32;
+        let mask_hi = _mm_movemask_epi8(_mm_packs_epi16(c2, c3)) as u32;
+        let mut mask = mask_lo | (mask_hi << 16);
+        if mask == 0 {
+            continue; // common case once the threshold tightens: no stores
+        }
+        let base = b * BLOCK_SIZE;
+        let limit = BLOCK_SIZE.min(packed.n - base);
+        if limit < BLOCK_SIZE {
+            mask &= (1u32 << limit) - 1;
+        }
+        _mm_storeu_si128(block_d.as_mut_ptr() as *mut __m128i, a0);
+        _mm_storeu_si128(block_d.as_mut_ptr().add(8) as *mut __m128i, a1);
+        _mm_storeu_si128(block_d.as_mut_ptr().add(16) as *mut __m128i, a2);
+        _mm_storeu_si128(block_d.as_mut_ptr().add(24) as *mut __m128i, a3);
+        while mask != 0 {
+            let v = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let idx = base + v;
+            let label = labels.map(|l| l[idx]).unwrap_or(idx as i64);
+            reservoir.push(block_d[v], label);
+        }
+    }
+}
+
+/// Full 4-bit PQ search: build LUTs from `query`, quantize, scan, re-rank.
+///
+/// `labels` maps scan position → external id (identity if `None`).
+pub fn search_fastscan(
+    pq: &ProductQuantizer,
+    packed: &PackedCodes4,
+    query: &[f32],
+    k: usize,
+    params: &FastScanParams,
+    labels: Option<&[i64]>,
+) -> (Vec<f32>, Vec<i64>) {
+    let luts_f32 = pq.compute_luts(query);
+    search_fastscan_with_luts(pq, packed, &luts_f32, k, params, labels)
+}
+
+/// Same as [`search_fastscan`] but with precomputed f32 LUTs (`m × ksub`) —
+/// the IVF path reuses one LUT set across probed lists.
+pub fn search_fastscan_with_luts(
+    pq: &ProductQuantizer,
+    packed: &PackedCodes4,
+    luts_f32: &[f32],
+    k: usize,
+    params: &FastScanParams,
+    labels: Option<&[i64]>,
+) -> (Vec<f32>, Vec<i64>) {
+    let qluts = QuantizedLuts::from_f32(luts_f32, pq.m, pq.ksub);
+    let kluts = KernelLuts::build(&qluts, packed.m_pad);
+    let mut reservoir = U16Reservoir::new(k, params.reservoir_factor);
+    scan_into_reservoir(packed, &kluts, params.backend, labels, &mut reservoir);
+    let cands = reservoir.into_candidates();
+
+    let mut heap = TopK::new(k);
+    if params.rerank {
+        // exact ADC on the survivors — needs scan positions, so build a
+        // reverse map when labels were remapped.
+        let mut codes_buf = vec![0u8; pq.m];
+        match labels {
+            None => {
+                for (_, pos) in cands {
+                    let i = pos as usize;
+                    for q in 0..pq.m {
+                        codes_buf[q] = packed.code_at(i, q);
+                    }
+                    heap.push(pq.adc_distance(luts_f32, &codes_buf), pos);
+                }
+            }
+            Some(ls) => {
+                // label -> position lookup by scanning is O(n); instead keep
+                // positions: reservoir stored external labels, so recover
+                // positions by hashing the label array once.
+                let mut pos_of = std::collections::HashMap::with_capacity(ls.len());
+                for (i, &l) in ls.iter().enumerate() {
+                    pos_of.insert(l, i);
+                }
+                for (_, label) in cands {
+                    let i = pos_of[&label];
+                    for q in 0..pq.m {
+                        codes_buf[q] = packed.code_at(i, q);
+                    }
+                    heap.push(pq.adc_distance(luts_f32, &codes_buf), label);
+                }
+            }
+        }
+    } else {
+        for (d16, label) in cands {
+            heap.push(qluts.decode(d16), label);
+        }
+    }
+    heap.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::adc::{adc_distances_all, search_adc};
+    use crate::pq::codebook::PqParams;
+    use crate::simd::available_backends;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, dim: usize, m: usize, seed: u64) -> (ProductQuantizer, Vec<f32>, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian()).collect();
+        let pq = ProductQuantizer::train(&data, dim, &PqParams::new_4bit(m)).unwrap();
+        let codes = pq.encode(&data).unwrap();
+        (pq, data, codes)
+    }
+
+    /// The central correctness property: the SIMD kernel's quantized
+    /// distances equal the scalar sum of quantized table entries, for every
+    /// backend, including odd M and partial blocks.
+    #[test]
+    fn kernel_matches_scalar_quantized_sum() {
+        let mut rng = Rng::new(31);
+        for &(n, m) in &[(32usize, 2usize), (100, 8), (33, 16), (64, 5), (7, 3), (256, 32)] {
+            let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
+            let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 9.0).collect();
+            let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
+            let packed = PackedCodes4::pack(&codes, m).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            for backend in available_backends() {
+                let got = fastscan_distances_all(&packed, &kluts, backend);
+                for i in 0..n {
+                    let expect: u16 = (0..m)
+                        .map(|q| qluts.row(q)[codes[i * m + q] as usize] as u16)
+                        .sum();
+                    assert_eq!(got[i], expect, "n={n} m={m} i={i} {backend:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backends_agree_exactly() {
+        let backends = available_backends();
+        if backends.len() < 2 {
+            eprintln!("single backend host; skipping cross-check");
+            return;
+        }
+        let mut rng = Rng::new(32);
+        for _ in 0..20 {
+            let n = 1 + rng.below(200);
+            let m = 2 * (1 + rng.below(16));
+            let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
+            let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 5.0).collect();
+            let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
+            let packed = PackedCodes4::pack(&codes, m).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let a = fastscan_distances_all(&packed, &kluts, backends[0]);
+            let b = fastscan_distances_all(&packed, &kluts, backends[1]);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn reservoir_scan_matches_full_distances() {
+        let (pq, data, codes) = setup(300, 32, 8, 33);
+        let packed = PackedCodes4::pack(&codes, 8).unwrap();
+        let luts_f32 = pq.compute_luts(&data[..32]);
+        let qluts = QuantizedLuts::from_f32(&luts_f32, 8, 16);
+        let kluts = KernelLuts::build(&qluts, packed.m_pad);
+        for backend in available_backends() {
+            let all = fastscan_distances_all(&packed, &kluts, backend);
+            let mut res = U16Reservoir::new(5, 4);
+            scan_into_reservoir(&packed, &kluts, backend, None, &mut res);
+            let cands = res.into_candidates();
+            let mut sorted = all.clone();
+            sorted.sort_unstable();
+            let kth = sorted[4];
+            for (i, &d) in all.iter().enumerate() {
+                if d < kth {
+                    assert!(
+                        cands.iter().any(|&(cd, cl)| cl == i as i64 && cd == d),
+                        "missing strict candidate {i} ({backend:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reranked_search_matches_adc_baseline() {
+        // Paper Fig. 2: 4-bit PQ achieves the *same accuracy* as original
+        // PQ (same K=16 codes). With re-ranking the results must agree on
+        // distances (labels may differ on exact ties).
+        let (pq, data, codes) = setup(500, 32, 16, 34);
+        let packed = PackedCodes4::pack(&codes, 16).unwrap();
+        for qi in 0..10 {
+            let q = &data[qi * 32..(qi + 1) * 32];
+            let luts = pq.compute_luts(q);
+            let (d_base, _l_base) = search_adc(&pq, &luts, &codes, None, 10);
+            let (d_fast, _l_fast) = search_fastscan(
+                &pq,
+                &packed,
+                q,
+                10,
+                &FastScanParams::default(),
+                None,
+            );
+            for r in 0..10 {
+                assert!(
+                    (d_base[r] - d_fast[r]).abs() < 1e-4 * (1.0 + d_base[r].abs()),
+                    "query {qi} rank {r}: {} vs {}",
+                    d_base[r],
+                    d_fast[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unreranked_search_within_quantization_error() {
+        let (pq, data, codes) = setup(400, 16, 4, 35);
+        let packed = PackedCodes4::pack(&codes, 4).unwrap();
+        let q = &data[..16];
+        let luts = pq.compute_luts(q);
+        let qluts = QuantizedLuts::from_f32(&luts, 4, 16);
+        let (d_base, _) = search_adc(&pq, &luts, &codes, None, 1);
+        let mut params = FastScanParams::default();
+        params.rerank = false;
+        let (d_fast, _) = search_fastscan(&pq, &packed, q, 1, &params, None);
+        assert!(
+            (d_base[0] - d_fast[0]).abs() <= qluts.max_abs_error() + 1e-3,
+            "{} vs {} (bound {})",
+            d_base[0],
+            d_fast[0],
+            qluts.max_abs_error()
+        );
+    }
+
+    #[test]
+    fn external_labels_roundtrip() {
+        let (pq, data, codes) = setup(100, 16, 4, 36);
+        let packed = PackedCodes4::pack(&codes, 4).unwrap();
+        let ext: Vec<i64> = (0..100).map(|i| 7000 + i as i64).collect();
+        let (_d, labels) = search_fastscan(
+            &pq,
+            &packed,
+            &data[..16],
+            5,
+            &FastScanParams::default(),
+            Some(&ext),
+        );
+        assert!(labels.iter().all(|&l| (7000..7100).contains(&l)));
+    }
+
+    #[test]
+    fn identical_distances_to_exact_adc_decoded() {
+        // fastscan + rerank distances must match exact ADC distances for
+        // the same labels.
+        let (pq, data, codes) = setup(200, 24, 6, 37);
+        let packed = PackedCodes4::pack(&codes, 6).unwrap();
+        let q = &data[5 * 24..6 * 24];
+        let luts = pq.compute_luts(q);
+        let all = adc_distances_all(&pq, &luts, &codes);
+        let (d, l) = search_fastscan(&pq, &packed, q, 8, &FastScanParams::default(), None);
+        for r in 0..8 {
+            assert!((all[l[r] as usize] - d[r]).abs() < 1e-5, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn single_vector_database() {
+        let (pq, data, codes) = setup(17, 16, 4, 38); // train needs >= 16
+        let one = &codes[..4];
+        let packed = PackedCodes4::pack(one, 4).unwrap();
+        let (d, l) = search_fastscan(&pq, &packed, &data[..16], 3, &FastScanParams::default(), None);
+        assert_eq!(l[0], 0);
+        assert_eq!(l[1], -1);
+        assert!(d[0].is_finite());
+    }
+}

@@ -1,0 +1,248 @@
+//! The 4-bit interleaved block code layout.
+//!
+//! "Note that we must carefully maintain the code layout [8, 9]" (paper §3):
+//! the shuffle kernel only works if one aligned 32-byte load yields, for a
+//! *pair* of sub-quantizers, the 4-bit codes of 32 consecutive database
+//! vectors arranged so that nibble extraction produces shuffle-ready index
+//! registers whose lanes line up with the right lookup tables.
+//!
+//! Layout used here (faiss `pq4_pack_codes` structure):
+//!
+//! * Vectors are grouped into **blocks of 32** ([`crate::pq::BLOCK_SIZE`]).
+//! * Within a block, sub-quantizers are packed in **pairs** `(q, q+1)`;
+//!   each pair owns 32 contiguous bytes:
+//!   - byte `i`      (i < 16): `code_q(v_i)      | code_q(v_{i+16})   << 4`
+//!   - byte `16 + i` (i < 16): `code_{q+1}(v_i)  | code_{q+1}(v_{i+16}) << 4`
+//!
+//! So after the 256-bit load `c`:
+//! `c & 0xF`   = lane-lo: codes of `q` for v₀..v₁₅, lane-hi: codes of `q+1`
+//! for v₀..v₁₅ — exactly the `(T¹, T²)` dual-table shuffle of Fig. 1c; and
+//! `(c >> 4) & 0xF` = the same for v₁₆..v₃₁.
+//!
+//! Odd `M` is padded with a phantom sub-quantizer whose LUT is all-zero, so
+//! it never affects distances.
+
+use crate::pq::BLOCK_SIZE;
+use crate::{Error, Result};
+
+/// Packed 4-bit codes in the interleaved block layout.
+#[derive(Clone, Debug)]
+pub struct PackedCodes4 {
+    /// Number of real (unpadded) vectors.
+    pub n: usize,
+    /// Number of real sub-quantizers (before padding to even).
+    pub m: usize,
+    /// M rounded up to even — the packed stride uses this.
+    pub m_pad: usize,
+    /// Packed bytes: `nblocks × (m_pad/2) × 32`.
+    pub data: Vec<u8>,
+}
+
+impl PackedCodes4 {
+    /// Bytes per block: `(m_pad / 2) × 32 = 16 × m_pad`.
+    #[inline]
+    pub fn block_bytes(&self) -> usize {
+        16 * self.m_pad
+    }
+
+    /// Number of 32-vector blocks (last one padded).
+    #[inline]
+    pub fn nblocks(&self) -> usize {
+        self.n.div_ceil(BLOCK_SIZE)
+    }
+
+    /// The 32-byte chunk of block `b`, sub-quantizer pair `p`.
+    #[inline]
+    pub fn pair_chunk(&self, b: usize, p: usize) -> &[u8] {
+        let off = b * self.block_bytes() + p * 32;
+        &self.data[off..off + 32]
+    }
+
+    /// Pack flat codes (`n × m`, one byte per sub-quantizer, values < 16).
+    pub fn pack(codes: &[u8], m: usize) -> Result<Self> {
+        if m == 0 || codes.len() % m != 0 {
+            return Err(Error::InvalidParameter(format!(
+                "codes length {} not divisible by m {m}",
+                codes.len()
+            )));
+        }
+        if let Some(&bad) = codes.iter().find(|&&c| c >= 16) {
+            return Err(Error::InvalidParameter(format!(
+                "4-bit packing requires codes < 16, found {bad}"
+            )));
+        }
+        let n = codes.len() / m;
+        let m_pad = m.div_ceil(2) * 2;
+        let nblocks = n.div_ceil(BLOCK_SIZE);
+        let mut data = vec![0u8; nblocks * 16 * m_pad];
+
+        for i in 0..n {
+            let b = i / BLOCK_SIZE;
+            let v = i % BLOCK_SIZE; // position within block
+            let base = b * 16 * m_pad;
+            for q in 0..m {
+                let code = codes[i * m + q];
+                let p = q / 2; // pair index
+                let within = q % 2; // 0 → bytes 0..16, 1 → bytes 16..32
+                let byte_idx = base + p * 32 + within * 16 + (v % 16);
+                if v < 16 {
+                    data[byte_idx] |= code; // low nibble: vectors 0..16
+                } else {
+                    data[byte_idx] |= code << 4; // high nibble: vectors 16..32
+                }
+            }
+        }
+        Ok(Self { n, m, m_pad, data })
+    }
+
+    /// Unpack back to flat `n × m` codes (inverse of [`PackedCodes4::pack`];
+    /// used by tests and by the re-ranking pass).
+    pub fn unpack(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.n * self.m];
+        for i in 0..self.n {
+            for q in 0..self.m {
+                out[i * self.m + q] = self.code_at(i, q);
+            }
+        }
+        out
+    }
+
+    /// Code of vector `i`, sub-quantizer `q` (slow path — scan kernels never
+    /// call this; re-ranking and tests do).
+    #[inline]
+    pub fn code_at(&self, i: usize, q: usize) -> u8 {
+        let b = i / BLOCK_SIZE;
+        let v = i % BLOCK_SIZE;
+        let p = q / 2;
+        let within = q % 2;
+        let byte = self.data[b * 16 * self.m_pad + p * 32 + within * 16 + (v % 16)];
+        if v < 16 {
+            byte & 0x0F
+        } else {
+            byte >> 4
+        }
+    }
+
+    /// Memory used per vector, in bits (the paper's "4M bits" claim).
+    pub fn bits_per_vector(&self) -> f64 {
+        (self.data.len() * 8) as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_codes(n: usize, m: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (n, m) in [(32, 8), (100, 16), (1, 2), (33, 4), (64, 6), (200, 15)] {
+            let codes = random_codes(n, m, n as u64 * 31 + m as u64);
+            let packed = PackedCodes4::pack(&codes, m).unwrap();
+            assert_eq!(packed.unpack(), codes, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn layout_matches_spec_exactly() {
+        // hand-check the byte layout formula for a full block
+        let n = 32;
+        let m = 4;
+        let codes = random_codes(n, m, 55);
+        let packed = PackedCodes4::pack(&codes, m).unwrap();
+        for q in 0..m {
+            let p = q / 2;
+            let within = q % 2;
+            for i in 0..16 {
+                let byte = packed.data[p * 32 + within * 16 + i];
+                assert_eq!(byte & 0xF, codes[i * m + q], "lo nibble q={q} i={i}");
+                assert_eq!(byte >> 4, codes[(i + 16) * m + q], "hi nibble q={q} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_extraction_feeds_correct_lanes() {
+        // End-to-end check of the §3 claim: after load + nibble mask, lane
+        // lo holds sub-quantizer q codes and lane hi holds q+1 codes.
+        use crate::simd::Simd256u8;
+        let n = 32;
+        let m = 2;
+        let codes = random_codes(n, m, 56);
+        let packed = PackedCodes4::pack(&codes, m).unwrap();
+        let c = Simd256u8::load(packed.pair_chunk(0, 0));
+        let mask = Simd256u8::splat(0x0F);
+        let clo = c.and(mask);
+        let chi = c.shr4().and(mask);
+        let mut lo_b = [0u8; 32];
+        let mut hi_b = [0u8; 32];
+        clo.store(&mut lo_b);
+        chi.store(&mut hi_b);
+        for i in 0..16 {
+            assert_eq!(lo_b[i], codes[i * m], "clo lane-lo v{i} = q0");
+            assert_eq!(lo_b[16 + i], codes[i * m + 1], "clo lane-hi v{i} = q1");
+            assert_eq!(hi_b[i], codes[(16 + i) * m], "chi lane-lo v{} = q0", 16 + i);
+            assert_eq!(hi_b[16 + i], codes[(16 + i) * m + 1], "chi lane-hi = q1");
+        }
+    }
+
+    #[test]
+    fn partial_last_block_zero_padded() {
+        let codes = random_codes(5, 4, 57);
+        let packed = PackedCodes4::pack(&codes, 4).unwrap();
+        assert_eq!(packed.nblocks(), 1);
+        // codes of phantom vectors 5..32 must read back as 0
+        for i in 5..32 {
+            for q in 0..4 {
+                // construct a fake reader past n — code_at works on layout
+                let b = 0;
+                let v = i;
+                let p = q / 2;
+                let within = q % 2;
+                let byte = packed.data[b * 16 * 4 + p * 32 + within * 16 + (v % 16)];
+                let val = if v < 16 { byte & 0xF } else { byte >> 4 };
+                assert_eq!(val, 0, "phantom vector {i} q {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn odd_m_padding() {
+        let codes = random_codes(40, 3, 58);
+        let packed = PackedCodes4::pack(&codes, 3).unwrap();
+        assert_eq!(packed.m_pad, 4);
+        assert_eq!(packed.block_bytes(), 64);
+        assert_eq!(packed.unpack(), codes);
+        // phantom sub-quantizer (q=3) codes are all zero
+        for i in 0..40 {
+            let b = i / 32;
+            let v = i % 32;
+            let byte = packed.data[b * 64 + 32 + 16 + (v % 16)];
+            let val = if v < 16 { byte & 0xF } else { byte >> 4 };
+            assert_eq!(val, 0);
+        }
+    }
+
+    #[test]
+    fn four_bits_per_code() {
+        // paper: "for a 4-bit PQ with K=16, the cost is 4M bits"
+        let codes = random_codes(32 * 100, 16, 59);
+        let packed = PackedCodes4::pack(&codes, 16).unwrap();
+        assert_eq!(packed.bits_per_vector(), 64.0); // 4 × M=16
+    }
+
+    #[test]
+    fn rejects_big_codes() {
+        assert!(PackedCodes4::pack(&[0, 16], 2).is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_input() {
+        assert!(PackedCodes4::pack(&[0, 1, 2], 2).is_err());
+    }
+}

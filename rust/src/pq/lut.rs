@@ -1,0 +1,174 @@
+//! Scalar quantization of the f32 ADC tables to u8 — producing `T_SIMD`
+//! (paper §2, Eq. 4).
+//!
+//! The 16-entry tables must fit a 128-bit register, so each f32 entry is
+//! mapped to one unsigned byte:
+//!
+//! ```text
+//!   qT[m][k] = round((T[m][k] − bias_m) / Δ)   clamped to 0..255
+//! ```
+//!
+//! with per-sub-quantizer bias `bias_m = min_k T[m][k]` (so every table
+//! starts at 0 and the u8 dynamic range is not wasted on the common offset)
+//! and one global scale `Δ` chosen so the *largest* per-table range still
+//! fits (faiss `quantize_LUT` uses the same shape). The accumulated u16
+//! distance is decoded back with `f(D) = Δ·D + Σ_m bias_m` — the paper's
+//! "reconstruction of an unsigned char to float, which is trivial".
+
+/// u8-quantized lookup tables plus the affine decode parameters.
+#[derive(Clone, Debug)]
+pub struct QuantizedLuts {
+    pub m: usize,
+    pub ksub: usize,
+    /// `m × ksub` quantized entries (row per sub-quantizer).
+    pub data: Vec<u8>,
+    /// Global scale Δ.
+    pub delta: f32,
+    /// Σ_m bias_m.
+    pub total_bias: f32,
+}
+
+impl QuantizedLuts {
+    /// Quantize f32 LUTs (`m × ksub`, from
+    /// [`crate::pq::ProductQuantizer::compute_luts`]).
+    pub fn from_f32(luts: &[f32], m: usize, ksub: usize) -> Self {
+        debug_assert_eq!(luts.len(), m * ksub);
+        let mut biases = vec![0.0f32; m];
+        let mut max_range = 0.0f32;
+        for mi in 0..m {
+            let row = &luts[mi * ksub..(mi + 1) * ksub];
+            let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            biases[mi] = lo;
+            max_range = max_range.max(hi - lo);
+        }
+        // Δ such that the widest row maps onto 0..=255. Degenerate case
+        // (all-constant tables): Δ=1 keeps decode exact.
+        let delta = if max_range > 0.0 { max_range / 255.0 } else { 1.0 };
+        let inv = 1.0 / delta;
+        let mut data = vec![0u8; m * ksub];
+        for mi in 0..m {
+            let row = &luts[mi * ksub..(mi + 1) * ksub];
+            for k in 0..ksub {
+                let q = ((row[k] - biases[mi]) * inv).round();
+                data[mi * ksub + k] = q.clamp(0.0, 255.0) as u8;
+            }
+        }
+        let total_bias = biases.iter().sum();
+        Self { m, ksub, data, delta, total_bias }
+    }
+
+    /// Quantized table row for sub-quantizer `mi` (`ksub` bytes — for
+    /// `ksub = 16` exactly one 128-bit register, the paper's `T_SIMD`).
+    #[inline]
+    pub fn row(&self, mi: usize) -> &[u8] {
+        &self.data[mi * self.ksub..(mi + 1) * self.ksub]
+    }
+
+    /// Decode an accumulated u16 distance back to (approximate) f32.
+    #[inline]
+    pub fn decode(&self, acc: u16) -> f32 {
+        self.delta * acc as f32 + self.total_bias
+    }
+
+    /// Quantize an f32 distance *bound* into the accumulator domain,
+    /// rounding down (safe for pruning: never rejects a true candidate).
+    #[inline]
+    pub fn encode_bound(&self, d: f32) -> u16 {
+        let q = (d - self.total_bias) / self.delta;
+        if q <= 0.0 {
+            0
+        } else if q >= u16::MAX as f32 {
+            u16::MAX
+        } else {
+            q.floor() as u16
+        }
+    }
+
+    /// Worst-case decode error of one accumulated distance: each of the `m`
+    /// table entries is off by at most Δ/2.
+    pub fn max_abs_error(&self) -> f32 {
+        0.5 * self.delta * self.m as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_luts(m: usize, ksub: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..m * ksub).map(|_| rng.next_f32() * scale + 3.0).collect()
+    }
+
+    #[test]
+    fn quantize_decode_error_bounded() {
+        let m = 16;
+        let ksub = 16;
+        let luts = random_luts(m, ksub, 21, 4.0);
+        let q = QuantizedLuts::from_f32(&luts, m, ksub);
+        // accumulate a random assignment of codes and compare against f32
+        let mut rng = Rng::new(22);
+        for _ in 0..200 {
+            let codes: Vec<usize> = (0..m).map(|_| rng.below(ksub)).collect();
+            let exact: f32 = (0..m).map(|mi| luts[mi * ksub + codes[mi]]).sum();
+            let acc: u16 = (0..m).map(|mi| q.row(mi)[codes[mi]] as u16).sum();
+            let approx = q.decode(acc);
+            assert!(
+                (exact - approx).abs() <= q.max_abs_error() + 1e-4,
+                "exact {exact} approx {approx} bound {}",
+                q.max_abs_error()
+            );
+        }
+    }
+
+    #[test]
+    fn min_entry_is_zero_per_row() {
+        let luts = random_luts(8, 16, 23, 10.0);
+        let q = QuantizedLuts::from_f32(&luts, 8, 16);
+        for mi in 0..8 {
+            assert_eq!(*q.row(mi).iter().min().unwrap(), 0, "row {mi}");
+        }
+    }
+
+    #[test]
+    fn widest_row_spans_255() {
+        let luts = random_luts(8, 16, 24, 6.0);
+        let q = QuantizedLuts::from_f32(&luts, 8, 16);
+        let max_entry = q.data.iter().cloned().max().unwrap();
+        assert_eq!(max_entry, 255);
+    }
+
+    #[test]
+    fn constant_tables_degenerate() {
+        let luts = vec![5.0f32; 4 * 16];
+        let q = QuantizedLuts::from_f32(&luts, 4, 16);
+        assert!(q.data.iter().all(|&b| b == 0));
+        assert_eq!(q.decode(0), 20.0); // 4 × bias 5.0
+    }
+
+    #[test]
+    fn encode_bound_is_conservative() {
+        let luts = random_luts(16, 16, 25, 8.0);
+        let q = QuantizedLuts::from_f32(&luts, 16, 16);
+        let mut rng = Rng::new(26);
+        for _ in 0..200 {
+            let codes: Vec<usize> = (0..16).map(|_| rng.below(16)).collect();
+            let acc: u16 = (0..16).map(|mi| q.row(mi)[codes[mi]] as u16).sum();
+            let d = q.decode(acc);
+            // encoding the decoded value back must not exceed acc
+            assert!(q.encode_bound(d) <= acc + 1);
+            // a bound below the bias maps to 0
+            assert_eq!(q.encode_bound(q.total_bias - 1.0), 0);
+        }
+    }
+
+    #[test]
+    fn monotonic_in_acc() {
+        let luts = random_luts(8, 16, 27, 2.0);
+        let q = QuantizedLuts::from_f32(&luts, 8, 16);
+        assert!(q.decode(10) < q.decode(11));
+        assert!(q.decode(0) >= q.total_bias - 1e-6);
+    }
+}

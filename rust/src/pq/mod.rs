@@ -1,0 +1,32 @@
+//! Product quantization: training, encoding, lookup tables, and the two
+//! scan kernels compared in the paper's Fig. 2.
+//!
+//! * [`codebook`] — `ProductQuantizer`: split vectors into `M` sub-vectors,
+//!   k-means each sub-space into `K` codewords (paper §2, Eq. 1).
+//! * [`adc`] — the **baseline**: asymmetric distance computation via an
+//!   in-memory f32 lookup table (paper Eq. 3 / Fig. 1a). This is "original
+//!   PQ" in Fig. 2.
+//! * [`lut`] — scalar quantization of the f32 table to u8 with a shared
+//!   scale/bias, producing `T_SIMD` (paper Eq. 4).
+//! * [`layout`] — the 4-bit interleaved block layout: 32 database vectors
+//!   per block, sub-quantizer pairs packed so one 32-byte load feeds the
+//!   dual-lane shuffle ("we must carefully maintain the code layout", §3).
+//! * [`fastscan`] — the **4-bit PQ kernel**: register-resident LUTs, dual
+//!   `vqtbl1q_u8` shuffle per pair, saturating u16 accumulation
+//!   (paper §3 / Fig. 1c), plus the optional exact re-ranking pass.
+
+pub mod adc;
+pub mod codebook;
+pub mod fastscan;
+pub mod layout;
+pub mod lut;
+
+pub use adc::search_adc;
+pub use codebook::{PqParams, ProductQuantizer};
+pub use fastscan::{search_fastscan, FastScanParams};
+pub use layout::PackedCodes4;
+pub use lut::QuantizedLuts;
+
+/// Number of database vectors per fastscan block ("bbs" in faiss).
+/// 32 = one virtual 256-bit register of 4-bit codes per sub-quantizer pair.
+pub const BLOCK_SIZE: usize = 32;

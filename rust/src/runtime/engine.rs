@@ -1,0 +1,321 @@
+//! PJRT execution engine: compile-once, execute-many.
+//!
+//! Wraps `xla::PjRtClient` (CPU) exactly as /opt/xla-example/load_hlo does:
+//! `HloModuleProto::from_text_file → XlaComputation::from_proto →
+//! client.compile`, with an executable cache so each artifact is compiled
+//! once per process. All artifacts are lowered with `return_tuple=True`, so
+//! results are unpacked from a single tuple literal.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "f32",
+            Tensor::I32(..) => "i32",
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => Err(Error::Runtime("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            _ => Err(Error::Runtime("expected i32 tensor".into())),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v, _) => xla::Literal::vec1(v),
+            Tensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, meta_dtype: &str) -> Result<Tensor> {
+        let shape: Vec<usize> = lit
+            .array_shape()
+            .map_err(|e| Error::Runtime(format!("output shape: {e}")))?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        match meta_dtype {
+            "f32" => Ok(Tensor::F32(lit.to_vec::<f32>()?, shape)),
+            "i32" => Ok(Tensor::I32(lit.to_vec::<i32>()?, shape)),
+            other => Err(Error::Runtime(format!("unsupported dtype {other}"))),
+        }
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape-checked inputs; returns one tensor per manifest
+    /// output.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, m) in inputs.iter().zip(&self.meta.inputs) {
+            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+                return Err(Error::Runtime(format!(
+                    "{}: input {} expects {:?} {}, got {:?} {}",
+                    self.meta.name,
+                    m.name,
+                    m.shape,
+                    m.dtype,
+                    t.shape(),
+                    t.dtype()
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // return_tuple=True → single tuple literal with one element per output
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, m)| Tensor::from_literal(lit, &m.dtype))
+            .collect()
+    }
+}
+
+/// The engine: PJRT client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact {name}")))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let arc = Arc::new(Executable { meta, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Names of all artifacts of a given kind.
+    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("artifacts missing; run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.numel(), 4);
+        assert_eq!(t.dtype(), "f32");
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn engine_loads_and_runs_fastscan_artifact() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        assert_eq!(engine.platform(), "cpu");
+        let names = engine.names_of_kind("fastscan");
+        assert!(!names.is_empty());
+        let exe = engine.executable(&names[0]).unwrap();
+        let n = exe.meta.params["n"];
+        let m = exe.meta.params["m"];
+        let q = exe.meta.params["q"];
+
+        // codes all 3; LUT entry 3 of every row = m index + 1
+        let codes = Tensor::I32(vec![3; n * m], vec![n, m]);
+        let mut luts = vec![0i32; q * m * 16];
+        for qi in 0..q {
+            for mi in 0..m {
+                luts[qi * m * 16 + mi * 16 + 3] = (mi + 1) as i32;
+            }
+        }
+        let luts = Tensor::I32(luts, vec![q, m * 16]);
+        let out = exe.execute(&[codes, luts]).unwrap();
+        assert_eq!(out.len(), 1);
+        let acc = out[0].as_i32().unwrap();
+        let expect: i32 = (1..=m as i32).sum();
+        assert_eq!(out[0].shape(), &[n, q]);
+        assert!(acc.iter().all(|&x| x == expect), "acc[0]={} expect={expect}", acc[0]);
+    }
+
+    #[test]
+    fn engine_shape_checks_inputs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        let names = engine.names_of_kind("fastscan");
+        let exe = engine.executable(&names[0]).unwrap();
+        let bad = Tensor::I32(vec![0; 8], vec![8]);
+        assert!(exe.execute(&[bad.clone(), bad]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_returns_same_instance() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        let names = engine.names_of_kind("lut");
+        let a = engine.executable(&names[0]).unwrap();
+        let b = engine.executable(&names[0]).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn search_artifact_end_to_end_vs_rust_pipeline() {
+        // The exported L2 pipeline must agree with the rust fastscan
+        // implementation on the same inputs (quantized scan, no rerank).
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        let Some(meta) = engine.manifest.find_by("search", &[("d", 64)]).map(|m| m.name.clone())
+        else {
+            return;
+        };
+        let exe = engine.executable(&meta).unwrap();
+        let (q, n, d, m) = (
+            exe.meta.params["q"],
+            exe.meta.params["n"],
+            exe.meta.params["d"],
+            exe.meta.params["m"],
+        );
+        let dsub = d / m;
+        let mut rng = crate::util::rng::Rng::new(271);
+        let queries: Vec<f32> = (0..q * d).map(|_| rng.next_gaussian()).collect();
+        let codebooks: Vec<f32> = (0..m * 16 * dsub).map(|_| rng.next_gaussian()).collect();
+        let codes: Vec<i32> = (0..n * m).map(|_| (rng.next_u32() % 16) as i32).collect();
+
+        let out = exe
+            .execute(&[
+                Tensor::F32(queries.clone(), vec![q, d]),
+                Tensor::I32(codes.clone(), vec![n, m]),
+                Tensor::F32(codebooks.clone(), vec![m, 16, dsub]),
+            ])
+            .unwrap();
+        let k = exe.meta.params["k"];
+        assert_eq!(out[0].shape(), &[q, k]);
+        let labels = out[1].as_i32().unwrap();
+        let dists = out[0].as_f32().unwrap();
+
+        // rust-side oracle: same quantized pipeline via pq modules
+        use crate::pq::fastscan::{fastscan_distances_all, KernelLuts};
+        use crate::pq::{PackedCodes4, QuantizedLuts};
+        let codes_u8: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
+        let packed = PackedCodes4::pack(&codes_u8, m).unwrap();
+        for qi in 0..q.min(3) {
+            // build f32 luts for query qi
+            let qrow = &queries[qi * d..(qi + 1) * d];
+            let mut luts = vec![0.0f32; m * 16];
+            for mi in 0..m {
+                for kk in 0..16 {
+                    let c = &codebooks[(mi * 16 + kk) * dsub..(mi * 16 + kk + 1) * dsub];
+                    luts[mi * 16 + kk] =
+                        crate::util::l2_sq(&qrow[mi * dsub..(mi + 1) * dsub], c);
+                }
+            }
+            let qluts = QuantizedLuts::from_f32(&luts, m, 16);
+            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let all = fastscan_distances_all(&packed, &kluts, crate::simd::Backend::Portable);
+            // top-1 from the artifact must match the rust argmin (decoded)
+            let best = all.iter().enumerate().min_by_key(|&(_, &v)| v).unwrap();
+            assert_eq!(labels[qi * k] as usize, best.0, "query {qi} label");
+            let decoded = qluts.decode(*best.1);
+            let got = dists[qi * k];
+            assert!(
+                (decoded - got).abs() < 1e-2 * (1.0 + decoded.abs()),
+                "query {qi}: rust {decoded} vs artifact {got}"
+            );
+        }
+    }
+}

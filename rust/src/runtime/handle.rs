@@ -1,0 +1,131 @@
+//! Thread-confined PJRT executor.
+//!
+//! The `xla` crate's client/executable types are `Rc`-based and must stay
+//! on one thread. [`EngineHandle`] owns a dedicated executor thread that
+//! hosts the [`super::Engine`]; other threads (the batcher workers, the
+//! TCP handlers) submit jobs over a channel. This mirrors how serving
+//! systems pin one executor per accelerator stream.
+
+use super::engine::{Engine, Tensor};
+use super::manifest::Manifest;
+use crate::{Error, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, SyncSender};
+
+enum Job {
+    Execute { artifact: String, inputs: Vec<Tensor>, reply: SyncSender<Result<Vec<Tensor>>> },
+    /// Pre-compile an artifact (warm the cache).
+    Warm { artifact: String, reply: SyncSender<Result<()>> },
+}
+
+/// Sendable handle to a thread-confined [`Engine`].
+pub struct EngineHandle {
+    tx: SyncSender<Job>,
+    /// Manifest parsed on the caller side (it is plain data).
+    pub manifest: Manifest,
+    _thread: std::thread::JoinHandle<()>,
+}
+
+impl EngineHandle {
+    /// Spawn the executor thread and load the engine on it.
+    pub fn spawn(artifacts_dir: PathBuf) -> Result<EngineHandle> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let (tx, rx) = sync_channel::<Job>(256);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let thread = std::thread::spawn(move || {
+            let engine = match Engine::load(&artifacts_dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Execute { artifact, inputs, reply } => {
+                        let result = engine
+                            .executable(&artifact)
+                            .and_then(|exe| exe.execute(&inputs));
+                        let _ = reply.send(result);
+                    }
+                    Job::Warm { artifact, reply } => {
+                        let _ = reply.send(engine.executable(&artifact).map(|_| ()));
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("executor thread died during init".into()))??;
+        Ok(EngineHandle { tx, manifest, _thread: thread })
+    }
+
+    /// Execute an artifact by name (blocks until the executor replies).
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Job::Execute { artifact: artifact.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| Error::Runtime("executor thread gone".into()))?;
+        reply_rx.recv().map_err(|_| Error::Runtime("executor dropped the job".into()))?
+    }
+
+    /// Compile an artifact ahead of the first query.
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Job::Warm { artifact: artifact.to_string(), reply: reply_tx })
+            .map_err(|_| Error::Runtime("executor thread gone".into()))?;
+        reply_rx.recv().map_err(|_| Error::Runtime("executor dropped the job".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("artifacts missing; run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn handle_executes_from_other_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let h = std::sync::Arc::new(EngineHandle::spawn(dir).unwrap());
+        let name = h.manifest.artifacts.iter().find(|a| a.kind == "fastscan").unwrap();
+        let (n, m, q) = (name.params["n"], name.params["m"], name.params["q"]);
+        let name = name.name.clone();
+        h.warm(&name).unwrap();
+        let mut threads = Vec::new();
+        for t in 0..3 {
+            let h = h.clone();
+            let name = name.clone();
+            threads.push(std::thread::spawn(move || {
+                let codes = Tensor::I32(vec![t as i32 % 16; n * m], vec![n, m]);
+                let luts = Tensor::I32(vec![1; q * m * 16], vec![q, m * 16]);
+                let out = h.execute(&name, vec![codes, luts]).unwrap();
+                assert_eq!(out[0].shape(), &[n, q]);
+                assert!(out[0].as_i32().unwrap().iter().all(|&x| x == m as i32));
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(dir) = artifacts_dir() else { return };
+        let h = EngineHandle::spawn(dir).unwrap();
+        assert!(h.warm("nope").is_err());
+        assert!(h.execute("nope", vec![]).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (names, files, input/output shapes and dtypes).
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| Error::Runtime("tensor missing name".into()))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Runtime(format!("tensor {name} missing shape")))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Runtime("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| Error::Runtime(format!("tensor {name} missing dtype")))?
+            .to_string();
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+/// One exported module.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// e.g. "search_q8_n4096_d64_m16_k10".
+    pub name: String,
+    /// "search" | "fastscan" | "lut".
+    pub kind: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    /// Free-form numeric parameters (q, n, d, m, k…).
+    pub params: std::collections::BTreeMap<String, usize>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block_n: usize,
+    pub block_q: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e} (run `make artifacts`)", path.display())))?;
+        let v = Json::parse(&text).map_err(|e| Error::Runtime(format!("parse manifest: {e}")))?;
+        let block_n = v.get("block_n").and_then(|x| x.as_usize()).unwrap_or(512);
+        let block_q = v.get("block_q").and_then(|x| x.as_usize()).unwrap_or(8);
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Runtime("manifest missing artifacts".into()))?
+        {
+            let file = a
+                .get("file")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::Runtime("artifact missing file".into()))?;
+            let name = file.trim_end_matches(".hlo.txt").to_string();
+            let kind = a
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::Runtime("artifact missing kind".into()))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| Error::Runtime("artifact missing inputs".into()))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| Error::Runtime("artifact missing outputs".into()))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let mut params = std::collections::BTreeMap::new();
+            for key in ["q", "n", "d", "m", "k"] {
+                if let Some(x) = a.get(key).and_then(|x| x.as_usize()) {
+                    params.insert(key.to_string(), x);
+                }
+            }
+            artifacts.push(ArtifactMeta { name, kind, file: dir.join(file), inputs, outputs, params });
+        }
+        Ok(Self { dir: dir.to_path_buf(), block_n, block_q, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find by kind + parameter equality (e.g. kind="search", d=64).
+    pub fn find_by(&self, kind: &str, params: &[(&str, usize)]) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind && params.iter().all(|(k, v)| a.params.get(*k) == Some(v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("armpq_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+          "format": "hlo-text", "block_n": 512, "block_q": 8,
+          "artifacts": [
+            {"kind": "search", "file": "search_q8_n4096_d64_m16_k10.hlo.txt",
+             "q": 8, "n": 4096, "d": 64, "m": 16, "k": 10,
+             "inputs": [
+               {"name": "queries", "shape": [8, 64], "dtype": "f32"},
+               {"name": "codes", "shape": [4096, 16], "dtype": "i32"},
+               {"name": "codebooks", "shape": [16, 16, 4], "dtype": "f32"}],
+             "outputs": [
+               {"name": "distances", "shape": [8, 10], "dtype": "f32"},
+               {"name": "labels", "shape": [8, 10], "dtype": "i32"}]}
+          ]}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = sample_manifest_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.block_n, 512);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("search_q8_n4096_d64_m16_k10").unwrap();
+        assert_eq!(a.kind, "search");
+        assert_eq!(a.inputs[1].shape, vec![4096, 16]);
+        assert_eq!(a.inputs[1].numel(), 4096 * 16);
+        assert_eq!(a.params["d"], 64);
+        assert_eq!(a.outputs[0].dtype, "f32");
+    }
+
+    #[test]
+    fn find_by_params() {
+        let dir = sample_manifest_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find_by("search", &[("d", 64), ("m", 16)]).is_some());
+        assert!(m.find_by("search", &[("d", 999)]).is_none());
+        assert!(m.find_by("lut", &[]).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the rust hot path (python never runs at request time).
+//!
+//! Flow (see /opt/xla-example/load_hlo): `artifacts/manifest.json` lists the
+//! exported modules; each `*.hlo.txt` is parsed with
+//! `HloModuleProto::from_text_file`, compiled once on the PJRT CPU client,
+//! and cached as an executable keyed by artifact name. Inputs/outputs are
+//! shape-checked against the manifest.
+
+pub mod engine;
+pub mod handle;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, Tensor};
+pub use handle::EngineHandle;
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};

@@ -1,0 +1,262 @@
+//! Virtual 256-bit registers from two 128-bit lanes — the paper's §3.
+//!
+//! [`Simd256u8`] models `uint8x16x2_t`: *"we concatenate two 128-bit SIMD
+//! registers and use them as if it is a single 256-bit register"*. The key
+//! operation is [`Simd256u8::shuffle_dual`], which reproduces AVX2
+//! `_mm256_shuffle_epi8` as two `vqtbl1q_u8` calls — lane 0 against table
+//! `T¹`, lane 1 against table `T²` (paper Fig. 1c).
+//!
+//! [`Simd256u16`] is the matching 16-lane u16 accumulator pair
+//! (`uint16x8x2_t` twice), with the saturating add used by the fastscan
+//! distance accumulation, and [`Simd256u8::movemask`] reproduces
+//! `_mm256_movemask_epi8`, the auxiliary AVX2 instruction the paper had to
+//! re-create on NEON.
+
+use super::u8x16::*;
+
+/// `uint8x16x2_t`: two 128-bit lanes handled as one 256-bit register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Simd256u8 {
+    pub lo: U8x16,
+    pub hi: U8x16,
+}
+
+impl Simd256u8 {
+    /// Load 32 bytes.
+    #[inline(always)]
+    pub fn load(p: &[u8]) -> Self {
+        Self { lo: vld1q_u8(&p[..16]), hi: vld1q_u8(&p[16..32]) }
+    }
+
+    /// Broadcast one byte to all 32 lanes.
+    #[inline(always)]
+    pub fn splat(x: u8) -> Self {
+        Self { lo: vdupq_n_u8(x), hi: vdupq_n_u8(x) }
+    }
+
+    /// Store 32 bytes.
+    #[inline(always)]
+    pub fn store(self, out: &mut [u8]) {
+        vst1q_u8(&mut out[..16], self.lo);
+        vst1q_u8(&mut out[16..32], self.hi);
+    }
+
+    /// The paper's core operation (Fig. 1c): emulate the 256-bit
+    /// `_mm256_shuffle_epi8` with two 128-bit `vqtbl1q_u8` shuffles.
+    ///
+    /// * lane `lo` (indices `k₁ … k₁₆`) is looked up in `tables.lo` (T¹)
+    /// * lane `hi` (indices `k₁₇ … k₃₂`) is looked up in `tables.hi` (T²)
+    ///
+    /// Caller guarantees indices are already masked to `0..16`; NEON (unlike
+    /// pshufb) yields 0 for out-of-range indices, which [`vqtbl1q_u8`]
+    /// models faithfully.
+    #[inline(always)]
+    pub fn shuffle_dual(tables: Simd256u8, idx: Simd256u8) -> Simd256u8 {
+        Simd256u8 {
+            lo: vqtbl1q_u8(tables.lo, idx.lo), // first 128 bits with T¹
+            hi: vqtbl1q_u8(tables.hi, idx.hi), // last 128 bits with T²
+        }
+    }
+
+    /// Lanewise AND.
+    #[inline(always)]
+    pub fn and(self, other: Simd256u8) -> Simd256u8 {
+        Simd256u8 { lo: vandq_u8(self.lo, other.lo), hi: vandq_u8(self.hi, other.hi) }
+    }
+
+    /// Lanewise logical shift right by 4 (nibble extraction).
+    #[inline(always)]
+    pub fn shr4(self) -> Simd256u8 {
+        Simd256u8 { lo: vshrq_n_u8::<4>(self.lo), hi: vshrq_n_u8::<4>(self.hi) }
+    }
+
+    /// Lanewise saturating add.
+    #[inline(always)]
+    pub fn sat_add(self, other: Simd256u8) -> Simd256u8 {
+        Simd256u8 { lo: vqaddq_u8(self.lo, other.lo), hi: vqaddq_u8(self.hi, other.hi) }
+    }
+
+    /// Lanewise unsigned `self < other` mask.
+    #[inline(always)]
+    pub fn lt(self, other: Simd256u8) -> Simd256u8 {
+        Simd256u8 { lo: vcltq_u8(self.lo, other.lo), hi: vcltq_u8(self.hi, other.hi) }
+    }
+
+    /// Emulated `_mm256_movemask_epi8`: top bit of each of the 32 byte
+    /// lanes, collected into a `u32` (lane `lo` → bits 0–15, `hi` → 16–31).
+    #[inline(always)]
+    pub fn movemask(self) -> u32 {
+        (vmovmaskq_u8(self.lo) as u32) | ((vmovmaskq_u8(self.hi) as u32) << 16)
+    }
+
+    /// Widen the 32 u8 lanes into a pair of 16-lane u16 registers:
+    /// `(lanes 0..16, lanes 16..32)`.
+    #[inline(always)]
+    pub fn widen(self) -> (Simd256u16, Simd256u16) {
+        (
+            Simd256u16 { lo: vmovl_low_u8(self.lo), hi: vmovl_high_u8(self.lo) },
+            Simd256u16 { lo: vmovl_low_u8(self.hi), hi: vmovl_high_u8(self.hi) },
+        )
+    }
+}
+
+/// Two `uint16x8_t` lanes as one 256-bit register of 16 u16 accumulators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Simd256u16 {
+    pub lo: U16x8,
+    pub hi: U16x8,
+}
+
+impl Simd256u16 {
+    #[inline(always)]
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    #[inline(always)]
+    pub fn splat(x: u16) -> Self {
+        Self { lo: vdupq_n_u16(x), hi: vdupq_n_u16(x) }
+    }
+
+    /// Saturating accumulate — the fastscan distance accumulator.
+    #[inline(always)]
+    pub fn sat_add(self, other: Simd256u16) -> Simd256u16 {
+        Simd256u16 { lo: vqaddq_u16(self.lo, other.lo), hi: vqaddq_u16(self.hi, other.hi) }
+    }
+
+    /// Lanewise min (used for pruning bound maintenance).
+    #[inline(always)]
+    pub fn min(self, other: Simd256u16) -> Simd256u16 {
+        Simd256u16 { lo: vminq_u16(self.lo, other.lo), hi: vminq_u16(self.hi, other.hi) }
+    }
+
+    /// Horizontal min across all 16 lanes.
+    #[inline(always)]
+    pub fn hmin(self) -> u16 {
+        vminvq_u16(self.lo).min(vminvq_u16(self.hi))
+    }
+
+    /// Lanewise `self < other` mask.
+    #[inline(always)]
+    pub fn lt(self, other: Simd256u16) -> Simd256u16 {
+        Simd256u16 { lo: vcltq_u16(self.lo, other.lo), hi: vcltq_u16(self.hi, other.hi) }
+    }
+
+    /// One mask bit per u16 lane (16 bits total).
+    #[inline(always)]
+    pub fn movemask(self) -> u16 {
+        (vmovmaskq_u16(self.lo) as u16) | ((vmovmaskq_u16(self.hi) as u16) << 8)
+    }
+
+    /// Store all 16 lanes.
+    #[inline(always)]
+    pub fn store(self, out: &mut [u16]) {
+        vst1q_u16(&mut out[..8], self.lo);
+        vst1q_u16(&mut out[8..16], self.hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_bytes(rng: &mut Rng, n: usize) -> Vec<u8> {
+        (0..n).map(|_| (rng.next_u32() & 0xFF) as u8).collect()
+    }
+
+    #[test]
+    fn dual_shuffle_matches_scalar_model() {
+        // Scalar model of _mm256_shuffle_epi8 with per-lane tables: this is
+        // exactly the paper's Fig. 1c semantics.
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let t1 = rand_bytes(&mut rng, 16);
+            let t2 = rand_bytes(&mut rng, 16);
+            let idx: Vec<u8> = (0..32).map(|_| (rng.next_u32() % 16) as u8).collect();
+            let tables =
+                Simd256u8 { lo: vld1q_u8(&t1), hi: vld1q_u8(&t2) };
+            let got = Simd256u8::shuffle_dual(tables, Simd256u8::load(&idx));
+            let mut out = [0u8; 32];
+            got.store(&mut out);
+            for i in 0..16 {
+                assert_eq!(out[i], t1[idx[i] as usize], "lane lo {i}");
+                assert_eq!(out[16 + i], t2[idx[16 + i] as usize], "lane hi {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_extract_256() {
+        let mut rng = Rng::new(3);
+        let packed = rand_bytes(&mut rng, 32);
+        let c = Simd256u8::load(&packed);
+        let mask = Simd256u8::splat(0x0F);
+        let lo = c.and(mask);
+        let hi = c.shr4().and(mask);
+        let mut lo_b = [0u8; 32];
+        let mut hi_b = [0u8; 32];
+        lo.store(&mut lo_b);
+        hi.store(&mut hi_b);
+        for i in 0..32 {
+            assert_eq!(lo_b[i], packed[i] & 0xF);
+            assert_eq!(hi_b[i], packed[i] >> 4);
+        }
+    }
+
+    #[test]
+    fn movemask_256() {
+        let mut b = [0u8; 32];
+        b[0] = 0x80;
+        b[15] = 0xFF;
+        b[16] = 0x80;
+        b[31] = 0xC0;
+        let m = Simd256u8::load(&b).movemask();
+        assert_eq!(m, (1 << 0) | (1 << 15) | (1 << 16) | (1u32 << 31));
+    }
+
+    #[test]
+    fn widen_is_zero_extension() {
+        let mut rng = Rng::new(4);
+        let b = rand_bytes(&mut rng, 32);
+        let (w0, w1) = Simd256u8::load(&b).widen();
+        let mut o0 = [0u16; 16];
+        let mut o1 = [0u16; 16];
+        w0.store(&mut o0);
+        w1.store(&mut o1);
+        for i in 0..16 {
+            assert_eq!(o0[i], b[i] as u16);
+            assert_eq!(o1[i], b[16 + i] as u16);
+        }
+    }
+
+    #[test]
+    fn u16_sat_accumulate() {
+        let mut acc = Simd256u16::splat(65_000);
+        acc = acc.sat_add(Simd256u16::splat(1_000));
+        let mut out = [0u16; 16];
+        acc.store(&mut out);
+        assert_eq!(out, [u16::MAX; 16]);
+    }
+
+    #[test]
+    fn u16_hmin_and_mask() {
+        let mut a = Simd256u16::splat(100);
+        a.lo.0[3] = 5;
+        a.hi.0[7] = 2;
+        assert_eq!(a.hmin(), 2);
+        let thresh = Simd256u16::splat(6);
+        let m = a.lt(thresh).movemask();
+        // lane 3 (lo) and lane 15 (hi[7]) are below 6
+        assert_eq!(m, (1 << 3) | (1 << 15));
+    }
+
+    #[test]
+    fn sat_add_u8_clamps() {
+        let a = Simd256u8::splat(250);
+        let b = Simd256u8::splat(10);
+        let mut out = [0u8; 32];
+        a.sat_add(b).store(&mut out);
+        assert_eq!(out, [255u8; 32]);
+    }
+}

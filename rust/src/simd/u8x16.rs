@@ -1,0 +1,425 @@
+//! 128-bit register model with NEON-named operations.
+//!
+//! [`U8x16`] models ARMv8 `uint8x16_t`, [`U16x8`] models `uint16x8_t`. The
+//! free functions carry the exact NEON intrinsic names used by the paper's
+//! implementation (faiss `simdlib_neon.h`) and follow the Arm ISA semantics
+//! bit-for-bit — most importantly [`vqtbl1q_u8`], whose out-of-range-index
+//! behaviour (yield 0 for index ≥ 16) differs from x86 `pshufb` (which keys
+//! off bit 7 only).
+//!
+//! All operations are `#[inline(always)]` fixed-size array loops that LLVM
+//! vectorizes on any target; they are the semantic reference the real-SIMD
+//! backend ([`crate::simd::x86`]) is differential-tested against.
+
+/// ARMv8 `uint8x16_t`: sixteen u8 lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(align(16))]
+pub struct U8x16(pub [u8; 16]);
+
+/// ARMv8 `uint16x8_t`: eight u16 lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(align(16))]
+pub struct U16x8(pub [u16; 8]);
+
+// ---------------------------------------------------------------- loads
+
+/// `vld1q_u8`: load 16 bytes.
+#[inline(always)]
+pub fn vld1q_u8(p: &[u8]) -> U8x16 {
+    let mut out = [0u8; 16];
+    out.copy_from_slice(&p[..16]);
+    U8x16(out)
+}
+
+/// `vdupq_n_u8`: broadcast a byte to all lanes.
+#[inline(always)]
+pub fn vdupq_n_u8(x: u8) -> U8x16 {
+    U8x16([x; 16])
+}
+
+/// `vdupq_n_u16`: broadcast a u16 to all lanes.
+#[inline(always)]
+pub fn vdupq_n_u16(x: u16) -> U16x8 {
+    U16x8([x; 8])
+}
+
+/// `vst1q_u8`: store 16 bytes.
+#[inline(always)]
+pub fn vst1q_u8(out: &mut [u8], v: U8x16) {
+    out[..16].copy_from_slice(&v.0);
+}
+
+// ------------------------------------------------------------- the shuffle
+
+/// `vqtbl1q_u8`: table lookup, the core instruction of the paper.
+///
+/// For each lane `i`: `out[i] = table[idx[i]]` if `idx[i] < 16` else `0`
+/// (Arm ISA: out-of-range indices produce zero — unlike x86 `pshufb`).
+#[inline(always)]
+pub fn vqtbl1q_u8(table: U8x16, idx: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        let j = idx.0[i];
+        out[i] = if j < 16 { table.0[j as usize] } else { 0 };
+    }
+    U8x16(out)
+}
+
+// ------------------------------------------------------------- bitwise
+
+/// `vandq_u8`: lanewise AND.
+#[inline(always)]
+pub fn vandq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i] & b.0[i];
+    }
+    U8x16(out)
+}
+
+/// `vorrq_u8`: lanewise OR.
+#[inline(always)]
+pub fn vorrq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i] | b.0[i];
+    }
+    U8x16(out)
+}
+
+/// `veorq_u8`: lanewise XOR.
+#[inline(always)]
+pub fn veorq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i] ^ b.0[i];
+    }
+    U8x16(out)
+}
+
+/// `vshrq_n_u8::<N>`: lanewise logical shift right by constant.
+#[inline(always)]
+pub fn vshrq_n_u8<const N: i32>(a: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i] >> N;
+    }
+    U8x16(out)
+}
+
+/// `vshlq_n_u8::<N>`: lanewise logical shift left by constant.
+#[inline(always)]
+pub fn vshlq_n_u8<const N: i32>(a: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i] << N;
+    }
+    U8x16(out)
+}
+
+// ------------------------------------------------------------- arithmetic
+
+/// `vaddq_u8`: lanewise wrapping add.
+#[inline(always)]
+pub fn vaddq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].wrapping_add(b.0[i]);
+    }
+    U8x16(out)
+}
+
+/// `vqaddq_u8`: lanewise *saturating* add.
+#[inline(always)]
+pub fn vqaddq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].saturating_add(b.0[i]);
+    }
+    U8x16(out)
+}
+
+/// `vminq_u8` / `vmaxq_u8`: lanewise min / max.
+#[inline(always)]
+pub fn vminq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].min(b.0[i]);
+    }
+    U8x16(out)
+}
+
+#[inline(always)]
+pub fn vmaxq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a.0[i].max(b.0[i]);
+    }
+    U8x16(out)
+}
+
+// ------------------------------------------------------------- compare
+
+/// `vceqq_u8`: lanewise equality → all-ones / all-zeros mask.
+#[inline(always)]
+pub fn vceqq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = if a.0[i] == b.0[i] { 0xFF } else { 0 };
+    }
+    U8x16(out)
+}
+
+/// `vcltq_u8`: lanewise unsigned `a < b` mask.
+#[inline(always)]
+pub fn vcltq_u8(a: U8x16, b: U8x16) -> U8x16 {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = if a.0[i] < b.0[i] { 0xFF } else { 0 };
+    }
+    U8x16(out)
+}
+
+/// `vcltq_u16`: lanewise unsigned `a < b` mask on u16 lanes.
+#[inline(always)]
+pub fn vcltq_u16(a: U16x8, b: U16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = if a.0[i] < b.0[i] { 0xFFFF } else { 0 };
+    }
+    U16x8(out)
+}
+
+// ------------------------------------------------------------- widening
+
+/// `vget_low_u8` + `vmovl_u8`: widen the low 8 bytes to u16 lanes.
+#[inline(always)]
+pub fn vmovl_low_u8(a: U8x16) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i] as u16;
+    }
+    U16x8(out)
+}
+
+/// `vget_high_u8` + `vmovl_u8`: widen the high 8 bytes to u16 lanes.
+#[inline(always)]
+pub fn vmovl_high_u8(a: U8x16) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i + 8] as u16;
+    }
+    U16x8(out)
+}
+
+// ------------------------------------------------------------- u16 math
+
+/// `vaddq_u16`: lanewise wrapping add.
+#[inline(always)]
+pub fn vaddq_u16(a: U16x8, b: U16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i].wrapping_add(b.0[i]);
+    }
+    U16x8(out)
+}
+
+/// `vqaddq_u16`: lanewise *saturating* add — the accumulator instruction of
+/// the fastscan kernel (distances must clamp, not wrap).
+#[inline(always)]
+pub fn vqaddq_u16(a: U16x8, b: U16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i].saturating_add(b.0[i]);
+    }
+    U16x8(out)
+}
+
+/// `vminq_u16`: lanewise min.
+#[inline(always)]
+pub fn vminq_u16(a: U16x8, b: U16x8) -> U16x8 {
+    let mut out = [0u16; 8];
+    for i in 0..8 {
+        out[i] = a.0[i].min(b.0[i]);
+    }
+    U16x8(out)
+}
+
+/// `vminvq_u16`: horizontal minimum across lanes.
+#[inline(always)]
+pub fn vminvq_u16(a: U16x8) -> u16 {
+    let mut m = a.0[0];
+    for i in 1..8 {
+        m = m.min(a.0[i]);
+    }
+    m
+}
+
+/// `vst1q_u16`: store 8 u16 lanes.
+#[inline(always)]
+pub fn vst1q_u16(out: &mut [u16], v: U16x8) {
+    out[..8].copy_from_slice(&v.0);
+}
+
+// --------------------------------------------------- movemask emulation
+
+/// Emulation of x86 `_mm_movemask_epi8` on a 128-bit lane — one of the
+/// "auxiliary instructions only present in AVX2 but not in ARM" the paper
+/// implements (§3). Collects the top bit of every byte lane into a u16.
+///
+/// NEON realization (as in faiss `simdlib_neon.h`): shift each byte right
+/// by 7, multiply-accumulate against a power-of-two weight vector via
+/// narrowing pairwise adds. Modeled here lane-by-lane.
+#[inline(always)]
+pub fn vmovmaskq_u8(a: U8x16) -> u16 {
+    let mut m = 0u16;
+    for i in 0..16 {
+        m |= (((a.0[i] >> 7) & 1) as u16) << i;
+    }
+    m
+}
+
+/// Same idea on u16 lanes: one mask bit per u16 lane (8 bits).
+#[inline(always)]
+pub fn vmovmaskq_u16(a: U16x8) -> u8 {
+    let mut m = 0u8;
+    for i in 0..8 {
+        m |= (((a.0[i] >> 15) & 1) as u8) << i;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng) -> U8x16 {
+        let mut v = [0u8; 16];
+        for b in &mut v {
+            *b = (rng.next_u32() & 0xFF) as u8;
+        }
+        U8x16(v)
+    }
+
+    #[test]
+    fn tbl_in_range() {
+        let table = U8x16([10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22, 23, 24, 25]);
+        let idx = U8x16([0, 15, 1, 14, 2, 13, 3, 12, 4, 11, 5, 10, 6, 9, 7, 8]);
+        let out = vqtbl1q_u8(table, idx);
+        for i in 0..16 {
+            assert_eq!(out.0[i], table.0[idx.0[i] as usize]);
+        }
+    }
+
+    #[test]
+    fn tbl_out_of_range_yields_zero() {
+        // NEON semantics: index >= 16 -> 0 (x86 pshufb would wrap low nibble
+        // unless bit 7 set — this difference is why the paper needed care).
+        let table = vdupq_n_u8(0xAB);
+        let idx = U8x16([16, 17, 100, 255, 0, 1, 2, 3, 31, 64, 128, 200, 15, 14, 13, 12]);
+        let out = vqtbl1q_u8(table, idx);
+        assert_eq!(out.0[..4], [0, 0, 0, 0]);
+        assert_eq!(out.0[4..8], [0xAB; 4]);
+        assert_eq!(out.0[8..12], [0, 0, 0, 0]);
+        assert_eq!(out.0[12..16], [0xAB; 4]);
+    }
+
+    #[test]
+    fn nibble_masking_pipeline() {
+        // The fastscan idiom: extract lo/hi nibbles then lookup.
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let packed = rand_vec(&mut rng);
+            let mask = vdupq_n_u8(0x0F);
+            let lo = vandq_u8(packed, mask);
+            let hi = vandq_u8(vshrq_n_u8::<4>(packed), mask);
+            for i in 0..16 {
+                assert_eq!(lo.0[i], packed.0[i] & 0xF);
+                assert_eq!(hi.0[i], packed.0[i] >> 4);
+                assert!(lo.0[i] < 16 && hi.0[i] < 16);
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_adds() {
+        let a = vdupq_n_u8(200);
+        let b = vdupq_n_u8(100);
+        assert_eq!(vqaddq_u8(a, b).0, [255u8; 16]);
+        assert_eq!(vaddq_u8(a, b).0, [44u8; 16]); // wrapping
+        let a16 = vdupq_n_u16(65_000);
+        let b16 = vdupq_n_u16(1_000);
+        assert_eq!(vqaddq_u16(a16, b16).0, [65_535u16; 8]);
+    }
+
+    #[test]
+    fn widening_splits() {
+        let a = U8x16([0, 1, 2, 3, 4, 5, 6, 7, 250, 251, 252, 253, 254, 255, 9, 8]);
+        assert_eq!(vmovl_low_u8(a).0, [0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(vmovl_high_u8(a).0, [250, 251, 252, 253, 254, 255, 9, 8]);
+    }
+
+    #[test]
+    fn movemask_bits() {
+        let mut v = [0u8; 16];
+        v[0] = 0x80;
+        v[3] = 0xFF;
+        v[15] = 0x90;
+        assert_eq!(vmovmaskq_u8(U8x16(v)), (1 << 0) | (1 << 3) | (1 << 15));
+        assert_eq!(vmovmaskq_u8(vdupq_n_u8(0)), 0);
+        assert_eq!(vmovmaskq_u8(vdupq_n_u8(0xFF)), 0xFFFF);
+    }
+
+    #[test]
+    fn movemask_u16_bits() {
+        let a = U16x8([0xFFFF, 0, 0x8000, 0x7FFF, 0, 0xFFFF, 0, 0]);
+        assert_eq!(vmovmaskq_u16(a), 0b0010_0101);
+    }
+
+    #[test]
+    fn compare_masks() {
+        let a = U8x16([1, 5, 200, 0, 7, 7, 255, 0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = vdupq_n_u8(7);
+        let lt = vcltq_u8(a, b);
+        for i in 0..16 {
+            assert_eq!(lt.0[i] == 0xFF, a.0[i] < 7);
+        }
+        let eq = vceqq_u8(a, b);
+        for i in 0..16 {
+            assert_eq!(eq.0[i] == 0xFF, a.0[i] == 7);
+        }
+    }
+
+    #[test]
+    fn min_max_horizontal() {
+        let a = U16x8([9, 3, 7, 5, 11, 3, 200, 65535]);
+        assert_eq!(vminvq_u16(a), 3);
+        let b = vdupq_n_u16(6);
+        assert_eq!(vminq_u16(a, b).0, [6, 3, 6, 5, 6, 3, 6, 6]);
+    }
+
+    #[test]
+    fn bitwise_ops_random() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let a = rand_vec(&mut rng);
+            let b = rand_vec(&mut rng);
+            for i in 0..16 {
+                assert_eq!(vandq_u8(a, b).0[i], a.0[i] & b.0[i]);
+                assert_eq!(vorrq_u8(a, b).0[i], a.0[i] | b.0[i]);
+                assert_eq!(veorq_u8(a, b).0[i], a.0[i] ^ b.0[i]);
+                assert_eq!(vshlq_n_u8::<4>(a).0[i], a.0[i] << 4);
+            }
+        }
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let bytes: Vec<u8> = (0..16).collect();
+        let v = vld1q_u8(&bytes);
+        let mut out = [0u8; 16];
+        vst1q_u8(&mut out, v);
+        assert_eq!(out.to_vec(), bytes);
+    }
+}

@@ -1,0 +1,175 @@
+//! ARMv7 64-bit register model (`uint8x8_t` D-registers).
+//!
+//! Paper §3: *"only 64- and 128-bit SIMD registers are available for ARMv7
+//! and ARMv8, respectively."* The ARMv8 path bundles two 128-bit Q-registers
+//! into a virtual 256-bit register; this module models the ARMv7 fallback —
+//! **four 64-bit D-registers** per virtual 256-bit value, with `vtbl1_u8`
+//! (the 8-lane table lookup that consults a 64-bit table) as the shuffle.
+//!
+//! Because `vtbl1_u8` can only address an 8-entry table, a 16-entry LUT
+//! needs the two-register form `vtbl2_u8` (table pair); both are modeled.
+//! The quad-lane fastscan variant built on this is benchmarked in
+//! `kernel_micro` as the ARMv7 ablation.
+
+/// ARMv7 `uint8x8_t`: eight u8 lanes (one D-register).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(align(8))]
+pub struct U8x8(pub [u8; 8]);
+
+/// `vld1_u8`: load 8 bytes.
+#[inline(always)]
+pub fn vld1_u8(p: &[u8]) -> U8x8 {
+    let mut out = [0u8; 8];
+    out.copy_from_slice(&p[..8]);
+    U8x8(out)
+}
+
+/// `vdup_n_u8`: broadcast.
+#[inline(always)]
+pub fn vdup_n_u8(x: u8) -> U8x8 {
+    U8x8([x; 8])
+}
+
+/// `vtbl1_u8`: 8-entry table lookup; indices ≥ 8 yield 0 (Arm ISA).
+#[inline(always)]
+pub fn vtbl1_u8(table: U8x8, idx: U8x8) -> U8x8 {
+    let mut out = [0u8; 8];
+    for i in 0..8 {
+        let j = idx.0[i];
+        out[i] = if j < 8 { table.0[j as usize] } else { 0 };
+    }
+    U8x8(out)
+}
+
+/// `vtbl2_u8`: 16-entry lookup over a D-register *pair* — this is how a
+/// 16-entry 4-bit-PQ table is consulted on ARMv7. Indices ≥ 16 yield 0.
+#[inline(always)]
+pub fn vtbl2_u8(table: [U8x8; 2], idx: U8x8) -> U8x8 {
+    let mut out = [0u8; 8];
+    for i in 0..8 {
+        let j = idx.0[i] as usize;
+        out[i] = if j < 8 {
+            table[0].0[j]
+        } else if j < 16 {
+            table[1].0[j - 8]
+        } else {
+            0
+        };
+    }
+    U8x8(out)
+}
+
+/// `vand_u8` / `vshr_n_u8`: nibble extraction primitives.
+#[inline(always)]
+pub fn vand_u8(a: U8x8, b: U8x8) -> U8x8 {
+    let mut out = [0u8; 8];
+    for i in 0..8 {
+        out[i] = a.0[i] & b.0[i];
+    }
+    U8x8(out)
+}
+
+#[inline(always)]
+pub fn vshr_n_u8<const N: i32>(a: U8x8) -> U8x8 {
+    let mut out = [0u8; 8];
+    for i in 0..8 {
+        out[i] = a.0[i] >> N;
+    }
+    U8x8(out)
+}
+
+/// `vaddl_u8`-style widening accumulate into 8 u16 lanes (saturating, to
+/// match the ARMv8 kernel's accumulator semantics).
+#[inline(always)]
+pub fn acc_sat_u16(acc: &mut [u16; 8], x: U8x8) {
+    for i in 0..8 {
+        acc[i] = acc[i].saturating_add(x.0[i] as u16);
+    }
+}
+
+/// ARMv7 fastscan block kernel: identical math to the ARMv8 dual-lane
+/// kernel but built from **four** 64-bit lanes per virtual 256-bit value
+/// and `vtbl2_u8` lookups. One 32-byte pair chunk = 4 D-register loads.
+pub fn accumulate_block_armv7(
+    block: &[u8],
+    luts: &crate::pq::fastscan::KernelLuts,
+    out: &mut [u16; crate::pq::BLOCK_SIZE],
+) {
+    let npairs = luts.m_pad / 2;
+    let mask = vdup_n_u8(0x0F);
+    // accumulators: 4 × 8 u16 lanes (vectors 0..32)
+    let mut acc = [[0u16; 8]; 4];
+    for p in 0..npairs {
+        let chunk = &luts.bytes[p * 32..(p + 1) * 32];
+        let t_q: [U8x8; 2] = [vld1_u8(&chunk[0..8]), vld1_u8(&chunk[8..16])];
+        let t_q1: [U8x8; 2] = [vld1_u8(&chunk[16..24]), vld1_u8(&chunk[24..32])];
+        let code_chunk = &block[p * 32..(p + 1) * 32];
+        // bytes 0..16 hold sub-quantizer q codes (lo nibble v0..15, hi v16..31)
+        // bytes 16..32 hold q+1 — each consumed as two D-registers.
+        for half in 0..2 {
+            let c = vld1_u8(&code_chunk[half * 8..half * 8 + 8]); // subq q, v(8h)..v(8h+8)
+            let c1 = vld1_u8(&code_chunk[16 + half * 8..16 + half * 8 + 8]); // subq q+1
+            let lo = vand_u8(c, mask);
+            let hi = vshr_n_u8::<4>(c);
+            let lo1 = vand_u8(c1, mask);
+            let hi1 = vshr_n_u8::<4>(c1);
+            // v(8h)..(8h+8): contributions of q and q+1
+            acc_sat_u16(&mut acc[half], vtbl2_u8(t_q, lo));
+            acc_sat_u16(&mut acc[half], vtbl2_u8(t_q1, lo1));
+            // v(16+8h)..: the high-nibble codes
+            acc_sat_u16(&mut acc[2 + half], vtbl2_u8(t_q, hi));
+            acc_sat_u16(&mut acc[2 + half], vtbl2_u8(t_q1, hi1));
+        }
+    }
+    for h in 0..4 {
+        out[h * 8..(h + 1) * 8].copy_from_slice(&acc[h]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::fastscan::{accumulate_block_portable, KernelLuts};
+    use crate::pq::lut::QuantizedLuts;
+    use crate::pq::{PackedCodes4, BLOCK_SIZE};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn vtbl1_semantics() {
+        let t = U8x8([10, 11, 12, 13, 14, 15, 16, 17]);
+        let idx = U8x8([0, 7, 3, 8, 255, 2, 1, 100]);
+        assert_eq!(vtbl1_u8(t, idx).0, [10, 17, 13, 0, 0, 12, 11, 0]);
+    }
+
+    #[test]
+    fn vtbl2_covers_16_entries() {
+        let t = [U8x8([0, 1, 2, 3, 4, 5, 6, 7]), U8x8([8, 9, 10, 11, 12, 13, 14, 15])];
+        for j in 0..16u8 {
+            let out = vtbl2_u8(t, vdup_n_u8(j));
+            assert_eq!(out.0, [j; 8]);
+        }
+        assert_eq!(vtbl2_u8(t, vdup_n_u8(16)).0, [0; 8]);
+    }
+
+    /// The ARMv7 quad-64-bit kernel must agree exactly with the ARMv8
+    /// dual-128-bit kernel — the paper's claim that the bundling trick is
+    /// register-width independent.
+    #[test]
+    fn armv7_kernel_matches_armv8_kernel() {
+        let mut rng = Rng::new(222);
+        for &m in &[2usize, 4, 8, 16, 32] {
+            let n = BLOCK_SIZE;
+            let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
+            let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 7.0).collect();
+            let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
+            let packed = PackedCodes4::pack(&codes, m).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let block = &packed.data[..packed.block_bytes()];
+            let mut v8 = [0u16; BLOCK_SIZE];
+            let mut v7 = [0u16; BLOCK_SIZE];
+            accumulate_block_portable(block, &kluts, &mut v8);
+            accumulate_block_armv7(block, &kluts, &mut v7);
+            assert_eq!(v7, v8, "m={m}");
+        }
+    }
+}

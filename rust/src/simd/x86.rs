@@ -1,0 +1,261 @@
+//! Real-SIMD backend: the dual-lane 256-bit register model implemented with
+//! SSE/SSSE3 intrinsics (x86_64 hosts).
+//!
+//! This mirrors the relationship in the paper's code between
+//! `simdlib_neon.h` (two `uint8x16_t`) and `simdlib_avx2.h` (one
+//! `__m256i`): the *same interface*, backed by whatever 128-bit shuffle
+//! hardware the host provides. Here each lane is a `__m128i` and the table
+//! lookup is `pshufb`.
+//!
+//! `pshufb` and `vqtbl1q_u8` differ on out-of-range indices (`pshufb` keys
+//! on bit 7, TBL zeroes for any index ≥ 16). Every fastscan call site masks
+//! indices to `0..16` first, where the two are identical; the differential
+//! tests below check exactly that contract.
+//!
+//! All functions are `unsafe` because of `#[target_feature]`; callers gate
+//! on [`crate::simd::best_backend`].
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+/// Dual-lane 256-bit register backed by two `__m128i`.
+#[derive(Clone, Copy)]
+pub struct X86Simd256u8 {
+    pub lo: __m128i,
+    pub hi: __m128i,
+}
+
+/// Dual-lane u16 accumulator backed by two `__m128i` (8 u16 lanes each…
+/// bundled twice → 16 lanes, matching [`crate::simd::Simd256u16`]).
+#[derive(Clone, Copy)]
+pub struct X86Simd256u16 {
+    pub lo: __m128i,
+    pub hi: __m128i,
+}
+
+impl X86Simd256u8 {
+    /// Load 32 bytes (unaligned).
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn load(p: *const u8) -> Self {
+        Self {
+            lo: _mm_loadu_si128(p as *const __m128i),
+            hi: _mm_loadu_si128(p.add(16) as *const __m128i),
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn splat(x: u8) -> Self {
+        let v = _mm_set1_epi8(x as i8);
+        Self { lo: v, hi: v }
+    }
+
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn store(self, out: *mut u8) {
+        _mm_storeu_si128(out as *mut __m128i, self.lo);
+        _mm_storeu_si128(out.add(16) as *mut __m128i, self.hi);
+    }
+
+    /// Dual-table shuffle: `pshufb(T¹, idx.lo)` / `pshufb(T², idx.hi)`.
+    /// Indices must already be masked to `0..16`.
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn shuffle_dual(tables: Self, idx: Self) -> Self {
+        Self { lo: _mm_shuffle_epi8(tables.lo, idx.lo), hi: _mm_shuffle_epi8(tables.hi, idx.hi) }
+    }
+
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn and(self, other: Self) -> Self {
+        Self { lo: _mm_and_si128(self.lo, other.lo), hi: _mm_and_si128(self.hi, other.hi) }
+    }
+
+    /// Logical shift right by 4 within each byte (via u16 shift + mask).
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn shr4(self) -> Self {
+        let m = _mm_set1_epi8(0x0F);
+        Self {
+            lo: _mm_and_si128(_mm_srli_epi16(self.lo, 4), m),
+            hi: _mm_and_si128(_mm_srli_epi16(self.hi, 4), m),
+        }
+    }
+
+    /// `_mm_movemask_epi8` on both lanes → 32-bit mask.
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn movemask(self) -> u32 {
+        (_mm_movemask_epi8(self.lo) as u32 & 0xFFFF)
+            | ((_mm_movemask_epi8(self.hi) as u32) << 16)
+    }
+
+    /// Zero-extend the 32 u8 lanes to two 16-lane u16 registers.
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn widen(self) -> (X86Simd256u16, X86Simd256u16) {
+        let z = _mm_setzero_si128();
+        (
+            X86Simd256u16 {
+                lo: _mm_unpacklo_epi8(self.lo, z),
+                hi: _mm_unpackhi_epi8(self.lo, z),
+            },
+            X86Simd256u16 {
+                lo: _mm_unpacklo_epi8(self.hi, z),
+                hi: _mm_unpackhi_epi8(self.hi, z),
+            },
+        )
+    }
+}
+
+impl X86Simd256u16 {
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn zero() -> Self {
+        let z = _mm_setzero_si128();
+        Self { lo: z, hi: z }
+    }
+
+    /// Saturating u16 accumulate (`_mm_adds_epu16`).
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn sat_add(self, other: Self) -> Self {
+        Self { lo: _mm_adds_epu16(self.lo, other.lo), hi: _mm_adds_epu16(self.hi, other.hi) }
+    }
+
+    #[inline]
+    #[target_feature(enable = "ssse3")]
+    pub unsafe fn store(self, out: *mut u16) {
+        _mm_storeu_si128(out as *mut __m128i, self.lo);
+        _mm_storeu_si128(out.add(8) as *mut __m128i, self.hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::{best_backend, Backend, Simd256u8};
+    use crate::util::rng::Rng;
+
+    fn have_ssse3() -> bool {
+        best_backend() == Backend::Ssse3
+    }
+
+    /// Differential test: the x86 backend must agree with the portable
+    /// NEON-semantics model on the masked-index domain used by fastscan.
+    #[test]
+    fn shuffle_dual_matches_portable() {
+        if !have_ssse3() {
+            eprintln!("skipping: no ssse3");
+            return;
+        }
+        let mut rng = Rng::new(77);
+        for _ in 0..500 {
+            let mut tables = [0u8; 32];
+            let mut idx = [0u8; 32];
+            for b in &mut tables {
+                *b = (rng.next_u32() & 0xFF) as u8;
+            }
+            for b in &mut idx {
+                *b = (rng.next_u32() % 16) as u8; // masked domain
+            }
+            // portable
+            let pt = Simd256u8::load(&tables);
+            let pi = Simd256u8::load(&idx);
+            let mut expect = [0u8; 32];
+            Simd256u8::shuffle_dual(pt, pi).store(&mut expect);
+            // x86
+            let mut got = [0u8; 32];
+            unsafe {
+                let xt = X86Simd256u8::load(tables.as_ptr());
+                let xi = X86Simd256u8::load(idx.as_ptr());
+                X86Simd256u8::shuffle_dual(xt, xi).store(got.as_mut_ptr());
+            }
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn nibble_and_widen_match_portable() {
+        if !have_ssse3() {
+            eprintln!("skipping: no ssse3");
+            return;
+        }
+        let mut rng = Rng::new(78);
+        for _ in 0..200 {
+            let mut packed = [0u8; 32];
+            for b in &mut packed {
+                *b = (rng.next_u32() & 0xFF) as u8;
+            }
+            // portable reference
+            let c = Simd256u8::load(&packed);
+            let mask = Simd256u8::splat(0x0F);
+            let mut lo_e = [0u8; 32];
+            let mut hi_e = [0u8; 32];
+            c.and(mask).store(&mut lo_e);
+            c.shr4().and(mask).store(&mut hi_e);
+            let (w0, w1) = c.widen();
+            let mut w0_e = [0u16; 16];
+            let mut w1_e = [0u16; 16];
+            w0.store(&mut w0_e);
+            w1.store(&mut w1_e);
+            // x86
+            unsafe {
+                let xc = X86Simd256u8::load(packed.as_ptr());
+                let xm = X86Simd256u8::splat(0x0F);
+                let mut lo_g = [0u8; 32];
+                let mut hi_g = [0u8; 32];
+                xc.and(xm).store(lo_g.as_mut_ptr());
+                xc.shr4().and(xm).store(hi_g.as_mut_ptr());
+                assert_eq!(lo_g, lo_e);
+                assert_eq!(hi_g, hi_e);
+                let (x0, x1) = xc.widen();
+                let mut w0_g = [0u16; 16];
+                let mut w1_g = [0u16; 16];
+                x0.store(w0_g.as_mut_ptr());
+                x1.store(w1_g.as_mut_ptr());
+                assert_eq!(w0_g, w0_e);
+                assert_eq!(w1_g, w1_e);
+            }
+        }
+    }
+
+    #[test]
+    fn sat_add_matches_portable() {
+        if !have_ssse3() {
+            eprintln!("skipping: no ssse3");
+            return;
+        }
+        unsafe {
+            let a = X86Simd256u16 {
+                lo: _mm_set1_epi16(-1536i16), // 64000 as u16
+                hi: _mm_set1_epi16(1000),
+            };
+            let b = X86Simd256u16 { lo: _mm_set1_epi16(5000), hi: _mm_set1_epi16(2000) };
+            let mut out = [0u16; 16];
+            a.sat_add(b).store(out.as_mut_ptr());
+            assert_eq!(out[..8], [u16::MAX; 8]); // 64000 + 5000 saturates
+            assert_eq!(out[8..], [3000u16; 8]);
+        }
+    }
+
+    #[test]
+    fn movemask_matches_portable() {
+        if !have_ssse3() {
+            eprintln!("skipping: no ssse3");
+            return;
+        }
+        let mut rng = Rng::new(79);
+        for _ in 0..200 {
+            let mut b = [0u8; 32];
+            for x in &mut b {
+                *x = (rng.next_u32() & 0xFF) as u8;
+            }
+            let expect = Simd256u8::load(&b).movemask();
+            let got = unsafe { X86Simd256u8::load(b.as_ptr()).movemask() };
+            assert_eq!(got, expect);
+        }
+    }
+}

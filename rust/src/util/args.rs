@@ -1,0 +1,190 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; typed getters with defaults; collects unknown keys so the CLI
+//! can reject typos.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.options.get(key).cloned()
+    }
+
+    /// usize option with default (panics with a clear message on bad input).
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        match self.options.get(key) {
+            None => default,
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        match self.options.get(key) {
+            None => default,
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        match self.options.get(key) {
+            None => default,
+            Some(v) => {
+                v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"))
+            }
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--m 8,16,32`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key} expects integers, got {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Keys provided by the user but never read by the command — typos.
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let seen = self.consumed.borrow();
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn basic_forms() {
+        let a = mk(&["search", "--n", "1000", "--name=deep", "--verbose", "--k", "10"]);
+        assert_eq!(a.positional, vec!["search"]);
+        assert_eq!(a.get_usize("n", 1), 1000);
+        assert_eq!(a.get_str("name", "x"), "deep");
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get_usize("k", 1), 10);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let a = mk(&["--n", "1_000_000"]);
+        assert_eq!(a.get_usize("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn lists() {
+        let a = mk(&["--m", "8,16,32"]);
+        assert_eq!(a.get_usize_list("m", &[4]), vec![8, 16, 32]);
+        assert_eq!(a.get_usize_list("x", &[4]), vec![4]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = mk(&["--fast", "--safe"]);
+        assert!(a.get_flag("fast"));
+        assert!(a.get_flag("safe"));
+    }
+
+    #[test]
+    fn bool_as_value() {
+        let a = mk(&["--rerank", "true", "--residual", "false"]);
+        assert!(a.get_flag("rerank"));
+        assert!(!a.get_flag("residual"));
+    }
+
+    #[test]
+    fn unknown_keys_detected() {
+        let a = mk(&["--good", "1", "--typo", "2"]);
+        let _ = a.get_usize("good", 0);
+        assert_eq!(a.unknown_keys(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn f64_parse() {
+        let a = mk(&["--timeout", "2.5"]);
+        assert!((a.get_f64("timeout", 0.0) - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,201 @@
+//! Micro/throughput bench harness (criterion is not in the vendored crate
+//! set). Benches under `rust/benches/` use `harness = false` and drive this.
+//!
+//! `BenchRunner` does warmup, adaptive iteration-count selection and reports
+//! median-of-runs; `Table` renders the paper-style rows to stdout and to a
+//! machine-readable JSON lines file under `bench_results/`.
+
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One measured bench result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// median seconds per iteration
+    pub sec_per_iter: f64,
+    pub iters: usize,
+    pub runs: usize,
+}
+
+impl Measurement {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.sec_per_iter * 1e9
+    }
+    pub fn ms_per_iter(&self) -> f64 {
+        self.sec_per_iter * 1e3
+    }
+    pub fn per_sec(&self) -> f64 {
+        if self.sec_per_iter > 0.0 {
+            1.0 / self.sec_per_iter
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Adaptive bench runner: picks an iteration count that makes each run last
+/// ~`target_run_s`, executes `runs` runs, reports the median.
+pub struct BenchRunner {
+    pub target_run_s: f64,
+    pub runs: usize,
+    pub warmup_s: f64,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        // ARMPQ_BENCH_FAST=1 shrinks budgets for CI smoke runs.
+        if std::env::var("ARMPQ_BENCH_FAST").as_deref() == Ok("1") {
+            Self { target_run_s: 0.05, runs: 3, warmup_s: 0.02 }
+        } else {
+            Self { target_run_s: 0.3, runs: 5, warmup_s: 0.1 }
+        }
+    }
+}
+
+impl BenchRunner {
+    /// Measure `f` (one logical iteration per call).
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // warmup + calibration
+        let mut iters = 1usize;
+        loop {
+            let t = Timer::start();
+            for _ in 0..iters {
+                f();
+            }
+            let el = t.elapsed_s();
+            if el >= self.warmup_s || el >= self.target_run_s {
+                let per = el / iters as f64;
+                iters = ((self.target_run_s / per.max(1e-12)).ceil() as usize).max(1);
+                break;
+            }
+            iters = iters.saturating_mul(4);
+        }
+        let mut samples = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t = Timer::start();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed_s() / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        Measurement { name: name.to_string(), sec_per_iter: median, iters, runs: self.runs }
+    }
+}
+
+/// Paper-style result table: aligned stdout rendering + JSONL persistence.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render aligned to stdout.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Append to `bench_results/<slug>.jsonl` for later analysis.
+    pub fn save(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_results")?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = format!("bench_results/{slug}.jsonl");
+        let mut lines = String::new();
+        for row in &self.rows {
+            let mut o = Json::obj();
+            for (h, c) in self.headers.iter().zip(row) {
+                match c.parse::<f64>() {
+                    Ok(x) => o.set(h, Json::Num(x)),
+                    Err(_) => o.set(h, Json::Str(c.clone())),
+                };
+            }
+            lines.push_str(&o.to_string());
+            lines.push('\n');
+        }
+        std::fs::write(path, lines)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = BenchRunner { target_run_s: 0.01, runs: 3, warmup_s: 0.002 };
+        let mut acc = 0u64;
+        let m = r.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(m.sec_per_iter > 0.0);
+        assert!(m.iters >= 1);
+        assert_eq!(m.runs, 3);
+        assert!(m.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn table_row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn measurement_units() {
+        let m = Measurement { name: "x".into(), sec_per_iter: 0.002, iters: 10, runs: 3 };
+        assert!((m.ms_per_iter() - 2.0).abs() < 1e-9);
+        assert!((m.ns_per_iter() - 2e6).abs() < 1.0);
+        assert!((m.per_sec() - 500.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,126 @@
+//! Scoped data-parallel helpers built on `std::thread` (rayon is not in the
+//! vendored crate set).
+//!
+//! `parallel_chunks` splits an index range into contiguous chunks and runs a
+//! worker per chunk with `std::thread::scope`; on a single-core box it
+//! degrades gracefully to a serial loop.
+
+/// Number of worker threads to use by default (`ARMPQ_THREADS` overrides).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ARMPQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`
+/// contiguous chunks. `f` must be `Sync` (shared immutable state); use
+/// interior outputs via disjoint slices or per-chunk results.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                continue;
+            }
+            let fref = &f;
+            scope.spawn(move || fref(start, end));
+        }
+    });
+}
+
+/// Map `f` over `[0, n)` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_chunks(n, threads, |start, end| {
+            // SAFETY: chunks are disjoint index ranges; each element is
+            // written exactly once by exactly one thread.
+            let p = out_ptr;
+            for i in start..end {
+                unsafe {
+                    *p.0.add(i) = f(i);
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Pointer wrapper asserting cross-thread sendability for disjoint writes.
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(1000, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+                counter.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(100, 3, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn zero_items() {
+        parallel_chunks(0, 4, |_, _| panic!("must not run with n=0 range"));
+        let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let v = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(v, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let v = parallel_map(3, 16, |i| i);
+        assert_eq!(v, vec![0, 1, 2]);
+    }
+}

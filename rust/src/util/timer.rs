@@ -1,0 +1,127 @@
+//! Wall-clock timing and latency statistics.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Online latency statistics (stores all samples; fine for bench scale).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// Percentile in [0, 100] by nearest-rank on the sorted samples.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.samples_ms.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.samples_ms.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Queries per second implied by the mean latency (single stream).
+    pub fn qps(&self) -> f64 {
+        let m = self.mean_ms();
+        if m <= 0.0 {
+            0.0
+        } else {
+            1e3 / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record_ms(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean_ms() - 50.5).abs() < 1e-9);
+        assert_eq!(s.percentile_ms(0.0), 1.0);
+        assert_eq!(s.percentile_ms(100.0), 100.0);
+        let p50 = s.percentile_ms(50.0);
+        assert!((49.0..=52.0).contains(&p50));
+        assert_eq!(s.min_ms(), 1.0);
+        assert_eq!(s.max_ms(), 100.0);
+    }
+
+    #[test]
+    fn qps_inverse_of_mean() {
+        let mut s = LatencyStats::new();
+        s.record_ms(2.0);
+        s.record_ms(2.0);
+        assert!((s.qps() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.percentile_ms(50.0), 0.0);
+        assert_eq!(s.qps(), 0.0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+        assert!(t.elapsed_us() >= t.elapsed_ms());
+    }
+}

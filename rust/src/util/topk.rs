@@ -1,0 +1,252 @@
+//! Top-k selection utilities.
+//!
+//! ANN search needs "keep the k smallest distances seen so far" in the
+//! innermost loop, so this is a bounded *max*-heap specialized for
+//! `(f32 distance, i64 label)` pairs plus a faster u16 reservoir used by the
+//! fastscan kernel before the exact re-ranking pass.
+
+/// Bounded max-heap keeping the `k` smallest `(distance, label)` pairs.
+///
+/// Push is `O(log k)` only when the candidate beats the current worst;
+/// otherwise a single comparison.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    /// Binary max-heap laid out in a plain vec: `heap[0]` is the worst kept.
+    heap: Vec<(f32, i64)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        Self { k, heap: Vec::with_capacity(k) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current admission threshold: candidates with distance >= this are
+    /// rejected. `INFINITY` until the heap is full.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// Offer a candidate.
+    #[inline]
+    pub fn push(&mut self, dist: f32, label: i64) {
+        if self.heap.len() < self.k {
+            self.heap.push((dist, label));
+            self.sift_up(self.heap.len() - 1);
+        } else if dist < self.heap[0].0 {
+            self.heap[0] = (dist, label);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 > self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut largest = i;
+            if l < n && self.heap[l].0 > self.heap[largest].0 {
+                largest = l;
+            }
+            if r < n && self.heap[r].0 > self.heap[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Drain into `(distances, labels)` sorted ascending by distance.
+    /// Pads with `(INFINITY, -1)` up to `k` if fewer were pushed.
+    pub fn into_sorted(mut self) -> (Vec<f32>, Vec<i64>) {
+        self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut d: Vec<f32> = self.heap.iter().map(|p| p.0).collect();
+        let mut l: Vec<i64> = self.heap.iter().map(|p| p.1).collect();
+        while d.len() < self.k {
+            d.push(f32::INFINITY);
+            l.push(-1);
+        }
+        (d, l)
+    }
+}
+
+/// Reservoir of candidate ids admitted by a coarse `u16` distance threshold.
+///
+/// The fastscan kernel produces quantized u16 distances; exact distances are
+/// only computed for reservoir survivors during re-ranking (the paper's
+/// implementation does the same — `HeapWithBuckets` in faiss). The reservoir
+/// over-collects by `factor` relative to the requested k.
+#[derive(Clone, Debug)]
+pub struct U16Reservoir {
+    capacity: usize,
+    pub items: Vec<(u16, i64)>,
+    /// Current coarse admission threshold.
+    threshold: u16,
+}
+
+impl U16Reservoir {
+    pub fn new(k: usize, factor: usize) -> Self {
+        let capacity = (k * factor).max(k);
+        Self { capacity, items: Vec::with_capacity(2 * capacity), threshold: u16::MAX }
+    }
+
+    #[inline]
+    pub fn threshold(&self) -> u16 {
+        self.threshold
+    }
+
+    /// Offer a candidate with coarse distance `d`.
+    #[inline]
+    pub fn push(&mut self, d: u16, label: i64) {
+        if d >= self.threshold {
+            return;
+        }
+        self.items.push((d, label));
+        if self.items.len() >= 2 * self.capacity {
+            self.shrink();
+        }
+    }
+
+    /// Median-select down to `capacity`, tightening the threshold.
+    fn shrink(&mut self) {
+        let cap = self.capacity;
+        self.items.select_nth_unstable_by_key(cap - 1, |p| p.0);
+        self.items.truncate(cap);
+        // Tighten: anything worse than the current worst kept is pointless.
+        self.threshold = self.items.iter().map(|p| p.0).max().unwrap_or(u16::MAX);
+    }
+
+    /// Final candidate set (unordered).
+    pub fn into_candidates(mut self) -> Vec<(u16, i64)> {
+        if self.items.len() > self.capacity {
+            self.shrink();
+        }
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn topk_keeps_smallest() {
+        let mut t = TopK::new(3);
+        for (d, l) in [(5.0, 0), (1.0, 1), (4.0, 2), (2.0, 3), (3.0, 4)] {
+            t.push(d, l);
+        }
+        let (d, l) = t.into_sorted();
+        assert_eq!(l, vec![1, 3, 4]);
+        assert_eq!(d, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn topk_pads_when_underfull() {
+        let mut t = TopK::new(4);
+        t.push(1.5, 7);
+        let (d, l) = t.into_sorted();
+        assert_eq!(l, vec![7, -1, -1, -1]);
+        assert_eq!(d[0], 1.5);
+        assert!(d[1].is_infinite());
+    }
+
+    #[test]
+    fn topk_threshold_tracks_worst() {
+        let mut t = TopK::new(2);
+        assert!(t.threshold().is_infinite());
+        t.push(3.0, 0);
+        t.push(1.0, 1);
+        assert_eq!(t.threshold(), 3.0);
+        t.push(2.0, 2);
+        assert_eq!(t.threshold(), 2.0);
+    }
+
+    #[test]
+    fn topk_matches_full_sort_randomized() {
+        let mut rng = Rng::new(99);
+        for trial in 0..50 {
+            let n = 1 + rng.below(500);
+            let k = 1 + rng.below(20);
+            let dists: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let mut t = TopK::new(k);
+            for (i, &d) in dists.iter().enumerate() {
+                t.push(d, i as i64);
+            }
+            let (got_d, _) = t.into_sorted();
+            let mut sorted = dists.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for i in 0..k.min(n) {
+                assert_eq!(got_d[i], sorted[i], "trial {trial} rank {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reservoir_never_drops_true_topk() {
+        // Property: the k best coarse distances always survive the reservoir.
+        let mut rng = Rng::new(7);
+        for _ in 0..30 {
+            let n = 100 + rng.below(2000);
+            let k = 1 + rng.below(10);
+            let ds: Vec<u16> = (0..n).map(|_| (rng.next_u32() & 0xFFFF) as u16).collect();
+            let mut r = U16Reservoir::new(k, 4);
+            for (i, &d) in ds.iter().enumerate() {
+                r.push(d, i as i64);
+            }
+            let cands = r.into_candidates();
+            let mut sorted = ds.clone();
+            sorted.sort_unstable();
+            let kth = sorted[k - 1];
+            // every strictly-better-than-kth element must be present
+            for (i, &d) in ds.iter().enumerate() {
+                if d < kth {
+                    assert!(
+                        cands.iter().any(|&(cd, cl)| cl == i as i64 && cd == d),
+                        "lost candidate {i} with d={d} (kth={kth})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let mut r = U16Reservoir::new(10, 2);
+        for i in 0..10_000 {
+            r.push((i % 65_535) as u16, i as i64);
+        }
+        assert!(r.into_candidates().len() <= 40);
+    }
+}
