@@ -6,7 +6,7 @@
 
 use armpq::datasets::SyntheticDataset;
 use armpq::eval::{ground_truth, recall_at_r};
-use armpq::index::index_factory;
+use armpq::index::{index_factory, Index};
 use armpq::util::timer::Timer;
 
 fn main() -> armpq::Result<()> {

@@ -5,6 +5,7 @@
 //! The file format is a flat INI-subset (comments with `#`, sections
 //! ignored into key prefixes: `[server]` + `port = 1` → `server.port`).
 
+use crate::simd::Backend;
 use crate::util::args::Args;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -113,6 +114,9 @@ pub struct ExperimentConfig {
     pub nprobe: usize,
     /// Timed trials per measurement (paper: 5).
     pub trials: usize,
+    /// Fastscan kernel backend override (`portable` / `ssse3` / `neon`);
+    /// `None` keeps the host's [`crate::simd::best_backend`].
+    pub backend: Option<Backend>,
 }
 
 impl Default for ExperimentConfig {
@@ -126,6 +130,7 @@ impl Default for ExperimentConfig {
             k: 10,
             nprobe: 4,
             trials: 5,
+            backend: None,
         }
     }
 }
@@ -138,6 +143,13 @@ impl ExperimentConfig {
             cfg.merge(&Config::from_file(std::path::Path::new(&path))?);
         }
         let d = ExperimentConfig::default();
+        let backend = match args.get_opt("backend").or_else(|| cfg.get("backend").map(String::from))
+        {
+            None => None,
+            Some(name) => Some(Backend::parse(&name).ok_or_else(|| {
+                Error::Config(format!("backend expects portable|ssse3|neon, got {name:?}"))
+            })?),
+        };
         Ok(Self {
             dataset: args.get_str("dataset", &cfg.get_str("dataset", &d.dataset)),
             n: args.get_usize("n", cfg.get_usize("n", d.n)?),
@@ -147,6 +159,7 @@ impl ExperimentConfig {
             k: args.get_usize("k", cfg.get_usize("k", d.k)?),
             nprobe: args.get_usize("nprobe", cfg.get_usize("nprobe", d.nprobe)?),
             trials: args.get_usize("trials", cfg.get_usize("trials", d.trials)?),
+            backend,
         })
     }
 }
@@ -205,5 +218,20 @@ mod tests {
     fn underscored_numbers() {
         let cfg = Config::from_str("n = 1_000_000").unwrap();
         assert_eq!(cfg.get_usize("n", 0).unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn backend_override_parsed_and_validated() {
+        let none = ExperimentConfig::from_args(&Args::parse(Vec::<String>::new())).unwrap();
+        assert_eq!(none.backend, None);
+        for (name, want) in
+            [("portable", Backend::Portable), ("ssse3", Backend::Ssse3), ("neon", Backend::Neon)]
+        {
+            let args =
+                Args::parse(["--backend", name].iter().map(|s| s.to_string()));
+            assert_eq!(ExperimentConfig::from_args(&args).unwrap().backend, Some(want));
+        }
+        let bad = Args::parse(["--backend", "avx512"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::from_args(&bad).is_err());
     }
 }

@@ -40,7 +40,13 @@ impl SearchBackend for IvfBackend {
     }
 
     fn describe(&self) -> String {
-        format!("ivf(nlist={}, nprobe={}, n={})", self.index.params.nlist, self.index.nprobe, self.index.ntotal())
+        format!(
+            "ivf(nlist={}, nprobe={}, n={}, kernel={})",
+            self.index.params.nlist,
+            self.index.nprobe,
+            self.index.ntotal(),
+            self.index.fastscan.backend
+        )
     }
 }
 

@@ -1,55 +1,79 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: `thiserror` is not in the vendored
+//! crate set, and the messages below are load-bearing (tests and callers
+//! match on their wording).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for all `armpq` operations.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// The index (or quantizer) must be trained before this operation.
-    #[error("index is not trained (call train() first)")]
     NotTrained,
 
     /// Dimension of the provided vectors does not match the index.
-    #[error("dimension mismatch: expected {expected}, got {got}")]
     DimMismatch { expected: usize, got: usize },
 
     /// Invalid parameter combination.
-    #[error("invalid parameter: {0}")]
     InvalidParameter(String),
 
     /// Failed to parse an index-factory string.
-    #[error("cannot parse factory string {0:?}: {1}")]
     Factory(String, String),
 
     /// Configuration file / key errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Dataset file IO and format errors.
-    #[error("dataset error: {0}")]
     Dataset(String),
 
     /// PJRT runtime errors (artifact loading, compilation, execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / serving errors.
-    #[error("serve error: {0}")]
     Serve(String),
 
     /// Underlying IO error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::NotTrained => write!(f, "index is not trained (call train() first)"),
+            Error::DimMismatch { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected}, got {got}")
+            }
+            Error::InvalidParameter(msg) => write!(f, "invalid parameter: {msg}"),
+            Error::Factory(spec, msg) => {
+                write!(f, "cannot parse factory string {spec:?}: {msg}")
+            }
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Dataset(msg) => write!(f, "dataset error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Serve(msg) => write!(f, "serve error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
-
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(format!("{e}"))
-    }
-}
 
 #[cfg(test)]
 mod tests {

@@ -189,7 +189,7 @@ pub fn run_kernel_micro(m: usize) -> Table {
         black_box(out[0]);
     });
 
-    // (c) real SIMD if available
+    // (c) real SIMD if available: SSSE3 on x86_64, NEON on aarch64
     let ssse3 = if available_backends().contains(&Backend::Ssse3) {
         #[cfg(target_arch = "x86_64")]
         {
@@ -206,9 +206,25 @@ pub fn run_kernel_micro(m: usize) -> Table {
     } else {
         None
     };
+    let neon = if available_backends().contains(&Backend::Neon) {
+        #[cfg(target_arch = "aarch64")]
+        {
+            use crate::pq::fastscan::accumulate_block_neon;
+            Some(runner.bench("neon dual-lane", || {
+                unsafe { accumulate_block_neon(&block, &kluts, &mut out) };
+                black_box(out[0]);
+            }))
+        }
+        #[cfg(not(target_arch = "aarch64"))]
+        {
+            None
+        }
+    } else {
+        None
+    };
 
     let base = mem.ns_per_iter();
-    for meas in [Some(mem), Some(armv7), Some(portable), ssse3].into_iter().flatten() {
+    for meas in [Some(mem), Some(armv7), Some(portable), ssse3, neon].into_iter().flatten() {
         table.row(vec![
             meas.name.clone(),
             format!("{:.1}", meas.ns_per_iter()),
@@ -282,10 +298,16 @@ pub fn run_ablation_layout(n: usize, m: usize, seed: u64) -> Table {
         &["variant", "ms/scan", "codes/s", "rel"],
     );
 
-    let backend = crate::simd::best_backend();
-    let interleaved = runner.bench("interleaved+simd", || {
-        black_box(fastscan_distances_all(&packed, &kluts, backend));
-    });
+    // one row per available backend (portable model + the host's real
+    // SIMD — SSSE3 on x86_64, NEON on aarch64), all against flat+scalar
+    let interleaved: Vec<_> = available_backends()
+        .into_iter()
+        .map(|backend| {
+            runner.bench(&format!("interleaved+{backend}"), || {
+                black_box(fastscan_distances_all(&packed, &kluts, backend));
+            })
+        })
+        .collect();
     let flat_scan = runner.bench("flat+scalar", || {
         let mut out = vec![0u16; n];
         for i in 0..n {
@@ -301,7 +323,7 @@ pub fn run_ablation_layout(n: usize, m: usize, seed: u64) -> Table {
         black_box(out);
     });
     let base = flat_scan.sec_per_iter;
-    for meas in [flat_scan, interleaved] {
+    for meas in std::iter::once(flat_scan).chain(interleaved) {
         table.row(vec![
             meas.name.clone(),
             format!("{:.3}", meas.ms_per_iter()),
@@ -431,6 +453,7 @@ mod tests {
     fn ablation_layout_runs() {
         std::env::set_var("ARMPQ_BENCH_FAST", "1");
         let t = run_ablation_layout(32 * 100, 8, 45);
-        assert_eq!(t.rows.len(), 2);
+        // flat+scalar plus one row per available backend
+        assert_eq!(t.rows.len(), 1 + crate::simd::available_backends().len());
     }
 }

@@ -215,11 +215,8 @@ impl Index for IndexPq4FastScan {
                 Ok(())
             }
             "backend" => {
-                self.fastscan.backend = match value {
-                    "portable" => Backend::Portable,
-                    "ssse3" => Backend::Ssse3,
-                    _ => return Err(Error::InvalidParameter(format!("bad backend {value}"))),
-                };
+                self.fastscan.backend = Backend::parse(value)
+                    .ok_or_else(|| Error::InvalidParameter(format!("bad backend {value}")))?;
                 Ok(())
             }
             _ => Err(Error::InvalidParameter(format!("unknown parameter {key}"))),
@@ -298,11 +295,8 @@ impl Index for IndexIvfPq4 {
                 Ok(())
             }
             "backend" => {
-                self.inner.fastscan.backend = match value {
-                    "portable" => Backend::Portable,
-                    "ssse3" => Backend::Ssse3,
-                    _ => return Err(Error::InvalidParameter(format!("bad backend {value}"))),
-                };
+                self.inner.fastscan.backend = Backend::parse(value)
+                    .ok_or_else(|| Error::InvalidParameter(format!("bad backend {value}")))?;
                 Ok(())
             }
             _ => Err(Error::InvalidParameter(format!("unknown parameter {key}"))),

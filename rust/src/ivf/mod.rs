@@ -261,13 +261,22 @@ impl IvfPq4 {
                     pos.insert(id, (c, j));
                 }
             }
-            for (_, id) in cands {
-                let (c, j) = pos[&id];
-                let packed = self.lists[c].packed.as_ref().unwrap();
-                for mi in 0..pq.m {
-                    codes_buf[mi] = packed.code_at(j, mi);
+            for (d16, id) in cands {
+                // Every candidate id comes from a probed list, so the map
+                // covers it; duplicate external ids collapse to one
+                // position, which re-ranks one representative of the
+                // duplicate set — defensible, and never a panic. Fall back
+                // to the decoded coarse distance if an id is missing.
+                match pos.get(&id) {
+                    Some(&(c, j)) => {
+                        let packed = self.lists[c].packed.as_ref().unwrap();
+                        for mi in 0..pq.m {
+                            codes_buf[mi] = packed.code_at(j, mi);
+                        }
+                        heap.push(pq.adc_distance(&luts_f32, &codes_buf), id);
+                    }
+                    None => heap.push(qluts.decode(d16), id),
                 }
-                heap.push(pq.adc_distance(&luts_f32, &codes_buf), id);
             }
         } else {
             for (d16, id) in cands {

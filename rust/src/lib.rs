@@ -6,8 +6,9 @@
 //!
 //! The paper's contribution — bundling **two 128-bit SIMD registers into one
 //! virtual 256-bit register** so that the 4-bit-PQ lookup table stays
-//! register-resident — lives in [`simd`] (the dual-lane register model) and
-//! [`pq::fastscan`] (the scan kernel built on it). Everything the paper
+//! register-resident — lives in [`simd`] (the dual-lane register model plus
+//! real SSSE3 and real ARM NEON backends) and [`pq::fastscan`] (the scan
+//! kernel built on it). Everything the paper
 //! depends on is implemented here as well: k-means training ([`kmeans`]),
 //! product quantization ([`pq`]), inverted indexing ([`ivf`]), HNSW coarse
 //! quantization ([`hnsw`]), dataset synthesis and IO ([`datasets`]),

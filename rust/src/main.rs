@@ -17,7 +17,7 @@ use armpq::coordinator::{IvfBackend, Server, ServerConfig};
 use armpq::datasets::io::write_fvecs;
 use armpq::eval::{ground_truth, recall_at_r};
 use armpq::experiments;
-use armpq::index::index_factory;
+use armpq::index::{index_factory, Index};
 use armpq::ivf::{IvfParams, IvfPq4};
 use armpq::pq::PqParams;
 use armpq::util::args::Args;
@@ -105,7 +105,8 @@ commands:
   bench-micro   paper Fig. 1 lookup-op micro-benchmark
   bench-pjrt    3-layer PJRT end-to-end comparison
 common flags: --dataset sift|deep --n <int> --nq <int> --k <int>
-              --factory <spec> --nprobe <list> --seed <int> --config <file>";
+              --factory <spec> --nprobe <list> --seed <int> --config <file>
+              --backend portable|ssse3|neon (default: best for this host)";
 
 fn info(args: &Args) -> armpq::Result<()> {
     println!("armpq {} — ARM 4-bit PQ reproduction", env!("CARGO_PKG_VERSION"));
@@ -142,6 +143,14 @@ fn search(args: &Args) -> armpq::Result<()> {
     let ds = experiments::make_dataset(&cfg.dataset, cfg.n, cfg.nq, cfg.seed);
     println!("dataset {} n={} nq={} dim={}", cfg.dataset, cfg.n, cfg.nq, ds.dim);
     let mut idx = index_factory(ds.dim, &cfg.factory)?;
+    if let Some(backend) = cfg.backend {
+        if !backend.is_available() {
+            eprintln!("warning: backend {backend} not available on this host; kernel falls back to portable semantics");
+        }
+        if let Err(e) = idx.set_param("backend", backend.name()) {
+            eprintln!("warning: --backend ignored for this index type: {e}");
+        }
+    }
     let t = Timer::start();
     idx.train(&ds.train)?;
     println!("trained {} in {:.1}s", idx.describe(), t.elapsed_s());
@@ -180,6 +189,12 @@ fn serve(args: &Args) -> armpq::Result<()> {
     idx.train(&ds.train)?;
     idx.add(&ds.base)?;
     idx.nprobe = cfg.nprobe.max(1);
+    if let Some(b) = cfg.backend {
+        if !b.is_available() {
+            eprintln!("warning: backend {b} not available on this host; kernel falls back to portable semantics");
+        }
+        idx.fastscan.backend = b;
+    }
     let backend = Arc::new(IvfBackend::new(idx)?);
     let server = Server::start(
         backend,

@@ -15,9 +15,10 @@
 //! lanes touch the reservoir. Candidates are optionally re-ranked with the
 //! exact f32 tables.
 //!
-//! Two differential-tested implementations: the portable NEON-semantics
-//! model ([`crate::simd`]) and a real-SIMD SSSE3 path
-//! ([`crate::simd::x86`]).
+//! Three differential-tested implementations: the portable NEON-semantics
+//! model ([`crate::simd`]), a real-SIMD SSSE3 path ([`crate::simd::x86`])
+//! and a real ARM NEON path ([`crate::simd::neon`]) — the paper's actual
+//! target, with the dual `vqtbl1q_u8` shuffle and `vshrn`-based movemask.
 
 use crate::pq::codebook::ProductQuantizer;
 use crate::pq::layout::PackedCodes4;
@@ -25,6 +26,12 @@ use crate::pq::lut::QuantizedLuts;
 use crate::pq::BLOCK_SIZE;
 use crate::simd::{best_backend, Backend, Simd256u16, Simd256u8};
 use crate::util::topk::{TopK, U16Reservoir};
+
+/// Register budget of the fused scans: dual-table registers are hoisted
+/// out of the block loop, so the pair count must be bounded. Larger M
+/// falls back to the per-block dispatch path (same results, reloads
+/// tables per block).
+const MAX_PAIRS: usize = 128;
 
 /// Fastscan search options.
 #[derive(Clone, Debug)]
@@ -122,7 +129,42 @@ pub unsafe fn accumulate_block_ssse3(block: &[u8], luts: &KernelLuts, out: &mut 
     acc_b.store(out.as_mut_ptr().add(16));
 }
 
-/// Dispatch one block through the chosen backend.
+/// Real ARM NEON block kernel (aarch64) — the paper's §3 on its target
+/// ISA: one 32-byte load per pair, nibble extraction, the dual
+/// `vqtbl1q_u8` shuffle, `vmovl_u8`/`vmovl_high_u8` widening and
+/// saturating u16 accumulation.
+///
+/// # Safety
+/// Caller must ensure NEON is available ([`best_backend`]) — it always is
+/// on aarch64.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub unsafe fn accumulate_block_neon(block: &[u8], luts: &KernelLuts, out: &mut [u16; BLOCK_SIZE]) {
+    use crate::simd::neon::{NeonSimd256u16, NeonSimd256u8};
+    let npairs = luts.m_pad / 2;
+    let mask = NeonSimd256u8::splat(0x0F);
+    let mut acc_a = NeonSimd256u16::zero(); // vectors 0..16
+    let mut acc_b = NeonSimd256u16::zero(); // vectors 16..32
+    for p in 0..npairs {
+        let c = NeonSimd256u8::load(block.as_ptr().add(p * 32));
+        let clo = c.and(mask); // codes of (q, q+1) for v0..v15
+        let chi = c.shr4(); // codes of (q, q+1) for v16..v31 (already < 16)
+        let tables = NeonSimd256u8::load(luts.bytes.as_ptr().add(p * 32));
+        let r0 = NeonSimd256u8::shuffle_dual(tables, clo);
+        let r1 = NeonSimd256u8::shuffle_dual(tables, chi);
+        let (w00, w01) = r0.widen();
+        acc_a = acc_a.sat_add(w00).sat_add(w01);
+        let (w10, w11) = r1.widen();
+        acc_b = acc_b.sat_add(w10).sat_add(w11);
+    }
+    acc_a.store(out.as_mut_ptr());
+    acc_b.store(out.as_mut_ptr().add(16));
+}
+
+/// Dispatch one block through the chosen backend. A real-SIMD backend
+/// requested on the wrong architecture degrades to the portable model
+/// (same results; the arms below are what keep cross-arch code paths
+/// compiling).
 #[inline]
 fn accumulate_block(
     backend: Backend,
@@ -134,8 +176,9 @@ fn accumulate_block(
         Backend::Portable => accumulate_block_portable(block, luts, out),
         #[cfg(target_arch = "x86_64")]
         Backend::Ssse3 => unsafe { accumulate_block_ssse3(block, luts, out) },
-        #[cfg(not(target_arch = "x86_64"))]
-        Backend::Ssse3 => accumulate_block_portable(block, luts, out),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { accumulate_block_neon(block, luts, out) },
+        _ => accumulate_block_portable(block, luts, out),
     }
 }
 
@@ -159,6 +202,10 @@ pub fn fastscan_distances_all(
 
 /// Scan all blocks into a reservoir, SIMD-pruning lanes above the current
 /// threshold via compare + emulated movemask.
+///
+/// While the reservoir is below capacity *every* lane is admitted — a
+/// strict `d < threshold` test alone would starve distances saturated at
+/// `u16::MAX`, returning fewer than `k` results on far-away databases.
 pub fn scan_into_reservoir(
     packed: &PackedCodes4,
     luts: &KernelLuts,
@@ -166,19 +213,32 @@ pub fn scan_into_reservoir(
     labels: Option<&[i64]>,
     reservoir: &mut U16Reservoir,
 ) {
+    // Fused hot paths: tables hoisted into registers across all blocks,
+    // in-register threshold compare, stores only for surviving blocks.
+    // They hold the whole dual-table set in registers, so they are gated
+    // on the pair-count budget; larger M uses the per-block path below.
+    let npairs = luts.m_pad / 2;
     #[cfg(target_arch = "x86_64")]
-    if backend == Backend::Ssse3 {
-        // fused hot path: tables hoisted into registers, in-register
-        // threshold compare, stores only for surviving blocks
+    if backend == Backend::Ssse3 && npairs <= MAX_PAIRS {
         unsafe { scan_reservoir_ssse3(packed, luts, labels, reservoir) };
         return;
     }
-    scan_reservoir_portable(packed, luts, labels, reservoir);
+    #[cfg(target_arch = "aarch64")]
+    if backend == Backend::Neon && npairs <= MAX_PAIRS {
+        unsafe { scan_reservoir_neon(packed, luts, labels, reservoir) };
+        return;
+    }
+    let _ = npairs;
+    scan_reservoir_blocks(packed, luts, backend, labels, reservoir);
 }
 
-fn scan_reservoir_portable(
+/// Generic reservoir scan: per-block kernel dispatch plus the portable
+/// SIMD threshold test. Used by the portable backend and as the fallback
+/// for real-SIMD backends when M exceeds the fused-kernel register budget.
+fn scan_reservoir_blocks(
     packed: &PackedCodes4,
     luts: &KernelLuts,
+    backend: Backend,
     labels: Option<&[i64]>,
     reservoir: &mut U16Reservoir,
 ) {
@@ -186,22 +246,30 @@ fn scan_reservoir_portable(
     let bb = packed.block_bytes();
     let nblocks = packed.nblocks();
     for b in 0..nblocks {
-        accumulate_block_portable(&packed.data[b * bb..(b + 1) * bb], luts, &mut block_d);
+        accumulate_block(backend, &packed.data[b * bb..(b + 1) * bb], luts, &mut block_d);
         let base = b * BLOCK_SIZE;
         let limit = BLOCK_SIZE.min(packed.n - base);
+        let prune = reservoir.is_full();
         let thr = reservoir.threshold();
+        if prune && thr == 0 {
+            continue; // nothing can beat a zero threshold
+        }
 
-        // SIMD threshold test: two Simd256u16 lane groups → 32-bit mask.
-        let thr_v = Simd256u16::splat(thr);
-        let lo = Simd256u16 {
-            lo: crate::simd::U16x8(block_d[0..8].try_into().unwrap()),
-            hi: crate::simd::U16x8(block_d[8..16].try_into().unwrap()),
+        let mut mask = if prune {
+            // SIMD threshold test: two Simd256u16 lane groups → 32-bit mask.
+            let thr_v = Simd256u16::splat(thr);
+            let lo = Simd256u16 {
+                lo: crate::simd::U16x8(block_d[0..8].try_into().unwrap()),
+                hi: crate::simd::U16x8(block_d[8..16].try_into().unwrap()),
+            };
+            let hi = Simd256u16 {
+                lo: crate::simd::U16x8(block_d[16..24].try_into().unwrap()),
+                hi: crate::simd::U16x8(block_d[24..32].try_into().unwrap()),
+            };
+            (lo.lt(thr_v).movemask() as u32) | ((hi.lt(thr_v).movemask() as u32) << 16)
+        } else {
+            u32::MAX // underfull reservoir: admit every real lane
         };
-        let hi = Simd256u16 {
-            lo: crate::simd::U16x8(block_d[16..24].try_into().unwrap()),
-            hi: crate::simd::U16x8(block_d[24..32].try_into().unwrap()),
-        };
-        let mut mask = (lo.lt(thr_v).movemask() as u32) | ((hi.lt(thr_v).movemask() as u32) << 16);
         if limit < BLOCK_SIZE {
             mask &= (1u32 << limit) - 1; // drop phantom padding lanes
         }
@@ -238,9 +306,8 @@ unsafe fn scan_reservoir_ssse3(
 ) {
     #![allow(unsafe_op_in_unsafe_fn)]
     use core::arch::x86_64::*;
-    const MAX_PAIRS: usize = 128;
     let npairs = luts.m_pad / 2;
-    assert!(npairs <= MAX_PAIRS, "M too large for the fused kernel");
+    debug_assert!(npairs <= MAX_PAIRS, "caller gates on MAX_PAIRS");
 
     // hoist the dual-table registers out of the block loop
     let mut tables = [unsafe { _mm_setzero_si128() }; MAX_PAIRS * 2];
@@ -286,19 +353,26 @@ unsafe fn scan_reservoir_ssse3(
             a2 = _mm_adds_epu16(a2, _mm_unpacklo_epi8(r1_hi, zero));
             a3 = _mm_adds_epu16(a3, _mm_unpackhi_epi8(r1_hi, zero));
         }
-        // in-register threshold: acc < thr ⟺ subs_epu16(acc, thr-1) == 0
+        // in-register threshold: acc < thr ⟺ subs_epu16(acc, thr-1) == 0.
+        // An underfull reservoir admits everything (saturated distances
+        // included), so pruning only starts once it reaches capacity.
+        let prune = reservoir.is_full();
         let thr = reservoir.threshold();
-        if thr == 0 {
+        if prune && thr == 0 {
             continue;
         }
-        let thr_m1 = _mm_set1_epi16(thr.wrapping_sub(1) as i16);
-        let c0 = _mm_cmpeq_epi16(_mm_subs_epu16(a0, thr_m1), zero);
-        let c1 = _mm_cmpeq_epi16(_mm_subs_epu16(a1, thr_m1), zero);
-        let c2 = _mm_cmpeq_epi16(_mm_subs_epu16(a2, thr_m1), zero);
-        let c3 = _mm_cmpeq_epi16(_mm_subs_epu16(a3, thr_m1), zero);
-        let mask_lo = _mm_movemask_epi8(_mm_packs_epi16(c0, c1)) as u32;
-        let mask_hi = _mm_movemask_epi8(_mm_packs_epi16(c2, c3)) as u32;
-        let mut mask = mask_lo | (mask_hi << 16);
+        let mut mask = if prune {
+            let thr_m1 = _mm_set1_epi16(thr.wrapping_sub(1) as i16);
+            let c0 = _mm_cmpeq_epi16(_mm_subs_epu16(a0, thr_m1), zero);
+            let c1 = _mm_cmpeq_epi16(_mm_subs_epu16(a1, thr_m1), zero);
+            let c2 = _mm_cmpeq_epi16(_mm_subs_epu16(a2, thr_m1), zero);
+            let c3 = _mm_cmpeq_epi16(_mm_subs_epu16(a3, thr_m1), zero);
+            let mask_lo = _mm_movemask_epi8(_mm_packs_epi16(c0, c1)) as u32;
+            let mask_hi = _mm_movemask_epi8(_mm_packs_epi16(c2, c3)) as u32;
+            mask_lo | (mask_hi << 16)
+        } else {
+            u32::MAX
+        };
         if mask == 0 {
             continue; // common case once the threshold tightens: no stores
         }
@@ -311,6 +385,120 @@ unsafe fn scan_reservoir_ssse3(
         _mm_storeu_si128(block_d.as_mut_ptr().add(8) as *mut __m128i, a1);
         _mm_storeu_si128(block_d.as_mut_ptr().add(16) as *mut __m128i, a2);
         _mm_storeu_si128(block_d.as_mut_ptr().add(24) as *mut __m128i, a3);
+        while mask != 0 {
+            let v = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let idx = base + v;
+            let label = labels.map(|l| l[idx]).unwrap_or(idx as i64);
+            reservoir.push(block_d[v], label);
+        }
+    }
+}
+
+/// Fused NEON scan — the paper's hot path on its target ISA:
+///
+/// * the `m_pad/2` dual-table registers (`uint8x16x2_t` pairs) are loaded
+///   **once** and stay in Q-registers across all blocks (the paper's
+///   register-resident tables, taken to its limit),
+/// * the reservoir threshold test happens **in-register** on the u16
+///   accumulators with the native unsigned compare `vcltq_u16`, narrowed
+///   to a byte mask with `vshrn_n_u16` and collapsed to a scalar bitmask
+///   via the `vshrn` + scalar-extract movemask idiom,
+/// * distances are stored to memory only when some lane survives, which is
+///   rare once the threshold tightens.
+///
+/// # Safety
+/// Caller must ensure NEON is available (always true on aarch64).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scan_reservoir_neon(
+    packed: &PackedCodes4,
+    luts: &KernelLuts,
+    labels: Option<&[i64]>,
+    reservoir: &mut U16Reservoir,
+) {
+    #![allow(unsafe_op_in_unsafe_fn)]
+    use crate::simd::neon::neon_movemask_u8;
+    use core::arch::aarch64::*;
+    let npairs = luts.m_pad / 2;
+    debug_assert!(npairs <= MAX_PAIRS, "caller gates on MAX_PAIRS");
+
+    // hoist the dual-table registers out of the block loop
+    let mut tables = [vdupq_n_u8(0); MAX_PAIRS * 2];
+    for p in 0..npairs {
+        let ptr = luts.bytes.as_ptr().add(p * 32);
+        tables[2 * p] = vld1q_u8(ptr);
+        tables[2 * p + 1] = vld1q_u8(ptr.add(16));
+    }
+    let nib = vdupq_n_u8(0x0F);
+    let zero16 = vdupq_n_u16(0);
+
+    let bb = packed.block_bytes();
+    let nblocks = packed.nblocks();
+    let data = packed.data.as_ptr();
+    let mut block_d = [0u16; BLOCK_SIZE];
+
+    for b in 0..nblocks {
+        let base_ptr = data.add(b * bb);
+        // accumulators: 4 × 8 u16 lanes covering vectors 0..32
+        let mut a0 = zero16; // v0..8
+        let mut a1 = zero16; // v8..16
+        let mut a2 = zero16; // v16..24
+        let mut a3 = zero16; // v24..32
+        for p in 0..npairs {
+            let c_lo = vld1q_u8(base_ptr.add(p * 32)); // sub-quantizer q codes
+            let c_hi = vld1q_u8(base_ptr.add(p * 32 + 16)); // sub-quantizer q+1 codes
+            let t_lo = tables[2 * p];
+            let t_hi = tables[2 * p + 1];
+            // v0..16 contributions of sub-quantizers (q, q+1)
+            let r0_lo = vqtbl1q_u8(t_lo, vandq_u8(c_lo, nib));
+            let r0_hi = vqtbl1q_u8(t_hi, vandq_u8(c_hi, nib));
+            // v16..32 contributions (high nibbles are already < 16)
+            let r1_lo = vqtbl1q_u8(t_lo, vshrq_n_u8::<4>(c_lo));
+            let r1_hi = vqtbl1q_u8(t_hi, vshrq_n_u8::<4>(c_hi));
+            // widen + saturating accumulate (both lane groups feed the
+            // same vectors — the faiss "fixup" merged into the add chain)
+            a0 = vqaddq_u16(a0, vmovl_u8(vget_low_u8(r0_lo)));
+            a1 = vqaddq_u16(a1, vmovl_high_u8(r0_lo));
+            a0 = vqaddq_u16(a0, vmovl_u8(vget_low_u8(r0_hi)));
+            a1 = vqaddq_u16(a1, vmovl_high_u8(r0_hi));
+            a2 = vqaddq_u16(a2, vmovl_u8(vget_low_u8(r1_lo)));
+            a3 = vqaddq_u16(a3, vmovl_high_u8(r1_lo));
+            a2 = vqaddq_u16(a2, vmovl_u8(vget_low_u8(r1_hi)));
+            a3 = vqaddq_u16(a3, vmovl_high_u8(r1_hi));
+        }
+        // in-register threshold: native unsigned compare, then the
+        // narrowing-shift movemask. Underfull reservoir admits everything.
+        let prune = reservoir.is_full();
+        let thr = reservoir.threshold();
+        if prune && thr == 0 {
+            continue;
+        }
+        let mut mask = if prune {
+            let thr_v = vdupq_n_u16(thr);
+            let c0 = vcltq_u16(a0, thr_v);
+            let c1 = vcltq_u16(a1, thr_v);
+            let c2 = vcltq_u16(a2, thr_v);
+            let c3 = vcltq_u16(a3, thr_v);
+            // narrow each 0xFFFF/0x0000 u16 lane to a 0xFF/0x00 byte
+            let m01 = vcombine_u8(vshrn_n_u16::<8>(c0), vshrn_n_u16::<8>(c1));
+            let m23 = vcombine_u8(vshrn_n_u16::<8>(c2), vshrn_n_u16::<8>(c3));
+            (neon_movemask_u8(m01) as u32) | ((neon_movemask_u8(m23) as u32) << 16)
+        } else {
+            u32::MAX
+        };
+        if mask == 0 {
+            continue; // common case once the threshold tightens: no stores
+        }
+        let base = b * BLOCK_SIZE;
+        let limit = BLOCK_SIZE.min(packed.n - base);
+        if limit < BLOCK_SIZE {
+            mask &= (1u32 << limit) - 1;
+        }
+        vst1q_u16(block_d.as_mut_ptr(), a0);
+        vst1q_u16(block_d.as_mut_ptr().add(8), a1);
+        vst1q_u16(block_d.as_mut_ptr().add(16), a2);
+        vst1q_u16(block_d.as_mut_ptr().add(24), a3);
         while mask != 0 {
             let v = mask.trailing_zeros() as usize;
             mask &= mask - 1;
@@ -346,47 +534,42 @@ pub fn search_fastscan_with_luts(
     params: &FastScanParams,
     labels: Option<&[i64]>,
 ) -> (Vec<f32>, Vec<i64>) {
+    if let Some(ls) = labels {
+        // A wrong-sized label map would silently mislabel (or panic on)
+        // results; fail loudly with the actual sizes instead.
+        assert_eq!(
+            ls.len(),
+            packed.n,
+            "labels length {} does not match packed vector count {}",
+            ls.len(),
+            packed.n
+        );
+    }
     let qluts = QuantizedLuts::from_f32(luts_f32, pq.m, pq.ksub);
     let kluts = KernelLuts::build(&qluts, packed.m_pad);
     let mut reservoir = U16Reservoir::new(k, params.reservoir_factor);
-    scan_into_reservoir(packed, &kluts, params.backend, labels, &mut reservoir);
+    // Scan with identity labels so the reservoir carries *scan positions*;
+    // external labels are applied after re-ranking. (A label→position
+    // reverse map would collapse duplicate labels and panic on unmapped
+    // ones — positions are unambiguous by construction.)
+    scan_into_reservoir(packed, &kluts, params.backend, None, &mut reservoir);
     let cands = reservoir.into_candidates();
 
+    let label_of = |pos: i64| labels.map(|l| l[pos as usize]).unwrap_or(pos);
     let mut heap = TopK::new(k);
     if params.rerank {
-        // exact ADC on the survivors — needs scan positions, so build a
-        // reverse map when labels were remapped.
+        // exact ADC on the survivors, addressed by scan position
         let mut codes_buf = vec![0u8; pq.m];
-        match labels {
-            None => {
-                for (_, pos) in cands {
-                    let i = pos as usize;
-                    for q in 0..pq.m {
-                        codes_buf[q] = packed.code_at(i, q);
-                    }
-                    heap.push(pq.adc_distance(luts_f32, &codes_buf), pos);
-                }
+        for (_, pos) in cands {
+            let i = pos as usize;
+            for q in 0..pq.m {
+                codes_buf[q] = packed.code_at(i, q);
             }
-            Some(ls) => {
-                // label -> position lookup by scanning is O(n); instead keep
-                // positions: reservoir stored external labels, so recover
-                // positions by hashing the label array once.
-                let mut pos_of = std::collections::HashMap::with_capacity(ls.len());
-                for (i, &l) in ls.iter().enumerate() {
-                    pos_of.insert(l, i);
-                }
-                for (_, label) in cands {
-                    let i = pos_of[&label];
-                    for q in 0..pq.m {
-                        codes_buf[q] = packed.code_at(i, q);
-                    }
-                    heap.push(pq.adc_distance(luts_f32, &codes_buf), label);
-                }
-            }
+            heap.push(pq.adc_distance(luts_f32, &codes_buf), label_of(pos));
         }
     } else {
-        for (d16, label) in cands {
-            heap.push(qluts.decode(d16), label);
+        for (d16, pos) in cands {
+            heap.push(qluts.decode(d16), label_of(pos));
         }
     }
     heap.into_sorted()
@@ -570,5 +753,123 @@ mod tests {
         assert_eq!(l[0], 0);
         assert_eq!(l[1], -1);
         assert!(d[0].is_finite());
+    }
+
+    /// Regression: duplicate external labels used to collapse in a
+    /// label→position HashMap during re-ranking (and a missing label
+    /// panicked via `pos_of[&label]`). Positions now flow through the
+    /// reservoir, so duplicates must re-rank each underlying vector
+    /// independently and return valid results.
+    #[test]
+    fn duplicate_external_labels_rerank_safely() {
+        let (pq, data, codes) = setup(100, 16, 4, 39);
+        let packed = PackedCodes4::pack(&codes, 4).unwrap();
+        // every pair of positions shares one label: 50 distinct labels
+        let ext: Vec<i64> = (0..100).map(|i| 5000 + (i as i64 / 2)).collect();
+        for rerank in [true, false] {
+            let mut params = FastScanParams::default();
+            params.rerank = rerank;
+            let (d, l) =
+                search_fastscan(&pq, &packed, &data[..16], 10, &params, Some(&ext));
+            assert_eq!(l.len(), 10);
+            assert!(l.iter().all(|&x| (5000..5050).contains(&x)), "labels {l:?}");
+            assert!(d.windows(2).all(|w| w[0] <= w[1]), "unsorted {d:?}");
+            assert!(d.iter().all(|x| x.is_finite()));
+        }
+        // distances must match a rerank run with identity labels position
+        // by position (same candidates, only the naming differs)
+        let (d_ext, _) = search_fastscan(
+            &pq,
+            &packed,
+            &data[..16],
+            10,
+            &FastScanParams::default(),
+            Some(&ext),
+        );
+        let (d_id, _) =
+            search_fastscan(&pq, &packed, &data[..16], 10, &FastScanParams::default(), None);
+        for r in 0..10 {
+            assert!((d_ext[r] - d_id[r]).abs() < 1e-6, "rank {r}");
+        }
+    }
+
+    /// Regression: distances saturated at `u16::MAX` must still produce k
+    /// results (the strict `d < threshold` admission starved them). Also
+    /// exercises the non-fused fallback: M exceeds the fused kernels'
+    /// register budget (`MAX_PAIRS`).
+    #[test]
+    fn saturated_distances_fill_reservoir() {
+        let m = 2 * MAX_PAIRS + 2; // 258 sub-quantizers of 255 → acc saturates
+        let n = 40;
+        let k = 8;
+        let qluts = QuantizedLuts {
+            m,
+            ksub: 16,
+            data: vec![255u8; m * 16],
+            delta: 1.0,
+            total_bias: 0.0,
+        };
+        let codes = vec![7u8; n * m];
+        let packed = PackedCodes4::pack(&codes, m).unwrap();
+        let kluts = KernelLuts::build(&qluts, packed.m_pad);
+        for backend in available_backends() {
+            let all = fastscan_distances_all(&packed, &kluts, backend);
+            assert!(all.iter().all(|&d| d == u16::MAX), "not saturated ({backend:?})");
+            let mut res = U16Reservoir::new(k, 4);
+            scan_into_reservoir(&packed, &kluts, backend, None, &mut res);
+            let cands = res.into_candidates();
+            assert!(
+                cands.len() >= k,
+                "{backend:?}: {} of {k} saturated candidates kept",
+                cands.len()
+            );
+        }
+    }
+
+    /// Property test: the fused reservoir scans (portable, SSSE3, NEON —
+    /// whichever the host offers) agree with `fastscan_distances_all` +
+    /// scalar top-k on random partial blocks (n not divisible by 32,
+    /// odd M): every strictly-better-than-kth distance must be collected.
+    #[test]
+    fn fused_reservoir_scans_match_full_distances_property() {
+        let mut rng = Rng::new(40);
+        for trial in 0..25 {
+            let n = 1 + rng.below(300); // frequently n % 32 != 0
+            let m = 1 + rng.below(20); // both odd and even M
+            let k = 1 + rng.below(8);
+            let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
+            let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 9.0).collect();
+            let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
+            let packed = PackedCodes4::pack(&codes, m).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            for backend in available_backends() {
+                let all = fastscan_distances_all(&packed, &kluts, backend);
+                // scalar reference top-k threshold
+                let mut sorted = all.clone();
+                sorted.sort_unstable();
+                let kth = sorted[(k - 1).min(n - 1)];
+                let mut res = U16Reservoir::new(k, 4);
+                scan_into_reservoir(&packed, &kluts, backend, None, &mut res);
+                let cands = res.into_candidates();
+                assert!(
+                    cands.len() >= k.min(n),
+                    "trial {trial} {backend:?}: {} results for k={k}, n={n}",
+                    cands.len()
+                );
+                for (i, &d) in all.iter().enumerate() {
+                    if d < kth {
+                        assert!(
+                            cands.iter().any(|&(cd, cl)| cl == i as i64 && cd == d),
+                            "trial {trial} {backend:?} n={n} m={m} k={k}: \
+                             lost strict candidate {i} (d={d}, kth={kth})"
+                        );
+                    }
+                }
+                // every reported candidate's distance must be exact
+                for &(cd, cl) in &cands {
+                    assert_eq!(cd, all[cl as usize], "trial {trial} {backend:?}");
+                }
+            }
+        }
     }
 }

@@ -10,6 +10,7 @@
 pub mod engine;
 pub mod handle;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use engine::{Engine, Executable, Tensor};
 pub use handle::EngineHandle;

@@ -1,0 +1,304 @@
+//! Real-SIMD backend: the dual-lane 256-bit register model implemented with
+//! genuine ARM NEON intrinsics (`core::arch::aarch64`).
+//!
+//! This is the paper's actual target: two 128-bit Q-registers
+//! (`uint8x16x2_t`) bundled into one virtual 256-bit register, the AVX2
+//! `_mm256_shuffle_epi8` table lookup emulated as **two `vqtbl1q_u8`
+//! shuffles** (paper §3, Fig. 1c), and the AVX2-only `movemask`
+//! re-created from NEON primitives via the narrowing-shift
+//! (`vshrn`) + scalar-extract idiom.
+//!
+//! The portable model ([`crate::simd::u8x16`]/[`crate::simd::simd256`])
+//! is the semantic reference; this module is differential-tested against
+//! it exactly as [`crate::simd::x86`] is on x86_64 hosts. `vqtbl1q_u8`
+//! zeroes out-of-range indices (unlike `pshufb`, which keys on bit 7);
+//! every fastscan call site masks indices to `0..16`, where the portable
+//! model, SSSE3 and NEON agree bit-for-bit.
+//!
+//! All functions are `unsafe` because of `#[target_feature]`; callers gate
+//! on [`crate::simd::best_backend`]. NEON is mandatory in AArch64, so on
+//! any aarch64 host the gate passes.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::*;
+
+/// Emulated `_mm_movemask_epi8` on one 128-bit lane — the paper's §3
+/// "auxiliary instruction only present in AVX2": collect the top bit of
+/// each byte lane into a `u16`.
+///
+/// Idiom: arithmetic-shift each byte to an all-ones/all-zeros mask, fold
+/// each byte into a nibble with the narrowing shift `vshrn_n_u16`, extract
+/// the resulting 64-bit "nibble mask" as a scalar, then compress 4 bits →
+/// 1 bit per lane with shift-or steps.
+#[inline]
+#[target_feature(enable = "neon")]
+pub unsafe fn neon_movemask_u8(v: uint8x16_t) -> u16 {
+    // 0xFF for every byte with the top bit set, 0x00 otherwise.
+    let m = vreinterpretq_u8_s8(vshrq_n_s8::<7>(vreinterpretq_s8_u8(v)));
+    // Narrowing shift: each u16 pair (b0, b1) becomes the byte
+    // (b1 & 0xF0) | (b0 >> 4) — i.e. one nibble of flag per input byte.
+    let nib = vshrn_n_u16::<4>(vreinterpretq_u16_u8(m));
+    let x = vget_lane_u64::<0>(vreinterpret_u64_u8(nib));
+    // Compress the 16 flag nibbles (bit 4i) down to 16 contiguous bits.
+    let x = x & 0x1111_1111_1111_1111;
+    let x = (x | (x >> 3)) & 0x0303_0303_0303_0303;
+    let x = (x | (x >> 6)) & 0x000F_000F_000F_000F;
+    let x = (x | (x >> 12)) & 0x0000_00FF_0000_00FF;
+    let x = (x | (x >> 24)) & 0xFFFF;
+    x as u16
+}
+
+/// Dual-lane 256-bit register backed by two `uint8x16_t` Q-registers —
+/// the paper's `uint8x16x2_t`.
+#[derive(Clone, Copy)]
+pub struct NeonSimd256u8 {
+    pub lo: uint8x16_t,
+    pub hi: uint8x16_t,
+}
+
+/// Dual-lane u16 accumulator backed by two `uint16x8_t` (8 lanes each,
+/// bundled twice → 16 lanes, matching [`crate::simd::Simd256u16`]).
+#[derive(Clone, Copy)]
+pub struct NeonSimd256u16 {
+    pub lo: uint16x8_t,
+    pub hi: uint16x8_t,
+}
+
+impl NeonSimd256u8 {
+    /// Load 32 bytes (unaligned).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn load(p: *const u8) -> Self {
+        Self { lo: vld1q_u8(p), hi: vld1q_u8(p.add(16)) }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn splat(x: u8) -> Self {
+        let v = vdupq_n_u8(x);
+        Self { lo: v, hi: v }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn store(self, out: *mut u8) {
+        vst1q_u8(out, self.lo);
+        vst1q_u8(out.add(16), self.hi);
+    }
+
+    /// The paper's core operation (Fig. 1c): the 256-bit
+    /// `_mm256_shuffle_epi8` as two `vqtbl1q_u8` — lane `lo` against table
+    /// T¹, lane `hi` against T². Indices must already be masked to `0..16`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn shuffle_dual(tables: Self, idx: Self) -> Self {
+        Self { lo: vqtbl1q_u8(tables.lo, idx.lo), hi: vqtbl1q_u8(tables.hi, idx.hi) }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn and(self, other: Self) -> Self {
+        Self { lo: vandq_u8(self.lo, other.lo), hi: vandq_u8(self.hi, other.hi) }
+    }
+
+    /// Logical shift right by 4 within each byte (nibble extraction —
+    /// native on NEON, no u16 detour like SSE needs).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn shr4(self) -> Self {
+        Self { lo: vshrq_n_u8::<4>(self.lo), hi: vshrq_n_u8::<4>(self.hi) }
+    }
+
+    /// Emulated `_mm256_movemask_epi8` on both lanes → 32-bit mask.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn movemask(self) -> u32 {
+        (neon_movemask_u8(self.lo) as u32) | ((neon_movemask_u8(self.hi) as u32) << 16)
+    }
+
+    /// Zero-extend the 32 u8 lanes to two 16-lane u16 registers
+    /// (`vmovl_u8` on the low half, `vmovl_high_u8` on the high half).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn widen(self) -> (NeonSimd256u16, NeonSimd256u16) {
+        (
+            NeonSimd256u16 { lo: vmovl_u8(vget_low_u8(self.lo)), hi: vmovl_high_u8(self.lo) },
+            NeonSimd256u16 { lo: vmovl_u8(vget_low_u8(self.hi)), hi: vmovl_high_u8(self.hi) },
+        )
+    }
+}
+
+impl NeonSimd256u16 {
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn zero() -> Self {
+        let z = vdupq_n_u16(0);
+        Self { lo: z, hi: z }
+    }
+
+    /// Saturating u16 accumulate (`vqaddq_u16` — distances clamp, not wrap).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sat_add(self, other: Self) -> Self {
+        Self { lo: vqaddq_u16(self.lo, other.lo), hi: vqaddq_u16(self.hi, other.hi) }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn store(self, out: *mut u16) {
+        vst1q_u16(out, self.lo);
+        vst1q_u16(out.add(8), self.hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::{available_backends, Backend, Simd256u8};
+    use crate::util::rng::Rng;
+
+    fn have_neon() -> bool {
+        available_backends().contains(&Backend::Neon)
+    }
+
+    /// Differential test: the NEON backend must agree with the portable
+    /// NEON-semantics model on the masked-index domain used by fastscan.
+    #[test]
+    fn shuffle_dual_matches_portable() {
+        if !have_neon() {
+            eprintln!("skipping: no neon");
+            return;
+        }
+        let mut rng = Rng::new(87);
+        for _ in 0..500 {
+            let mut tables = [0u8; 32];
+            let mut idx = [0u8; 32];
+            for b in &mut tables {
+                *b = (rng.next_u32() & 0xFF) as u8;
+            }
+            for b in &mut idx {
+                *b = (rng.next_u32() % 16) as u8; // masked domain
+            }
+            // portable
+            let pt = Simd256u8::load(&tables);
+            let pi = Simd256u8::load(&idx);
+            let mut expect = [0u8; 32];
+            Simd256u8::shuffle_dual(pt, pi).store(&mut expect);
+            // neon
+            let mut got = [0u8; 32];
+            unsafe {
+                let nt = NeonSimd256u8::load(tables.as_ptr());
+                let ni = NeonSimd256u8::load(idx.as_ptr());
+                NeonSimd256u8::shuffle_dual(nt, ni).store(got.as_mut_ptr());
+            }
+            assert_eq!(got, expect);
+        }
+    }
+
+    /// `vqtbl1q_u8` out-of-range behaviour must match the portable model
+    /// (zero, not pshufb wraparound) — this is the ISA detail the portable
+    /// model encodes and the x86 backend has to avoid by masking.
+    #[test]
+    fn tbl_out_of_range_yields_zero() {
+        if !have_neon() {
+            eprintln!("skipping: no neon");
+            return;
+        }
+        let tables = [0xABu8; 32];
+        let idx: [u8; 32] = [
+            16, 17, 100, 255, 0, 1, 2, 3, 31, 64, 128, 200, 15, 14, 13, 12, 16, 17, 100, 255, 0,
+            1, 2, 3, 31, 64, 128, 200, 15, 14, 13, 12,
+        ];
+        let pt = Simd256u8::load(&tables);
+        let pi = Simd256u8::load(&idx);
+        let mut expect = [0u8; 32];
+        Simd256u8::shuffle_dual(pt, pi).store(&mut expect);
+        let mut got = [0u8; 32];
+        unsafe {
+            let nt = NeonSimd256u8::load(tables.as_ptr());
+            let ni = NeonSimd256u8::load(idx.as_ptr());
+            NeonSimd256u8::shuffle_dual(nt, ni).store(got.as_mut_ptr());
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn nibble_and_widen_match_portable() {
+        if !have_neon() {
+            eprintln!("skipping: no neon");
+            return;
+        }
+        let mut rng = Rng::new(88);
+        for _ in 0..200 {
+            let mut packed = [0u8; 32];
+            for b in &mut packed {
+                *b = (rng.next_u32() & 0xFF) as u8;
+            }
+            // portable reference
+            let c = Simd256u8::load(&packed);
+            let mask = Simd256u8::splat(0x0F);
+            let mut lo_e = [0u8; 32];
+            let mut hi_e = [0u8; 32];
+            c.and(mask).store(&mut lo_e);
+            c.shr4().store(&mut hi_e);
+            let (w0, w1) = c.widen();
+            let mut w0_e = [0u16; 16];
+            let mut w1_e = [0u16; 16];
+            w0.store(&mut w0_e);
+            w1.store(&mut w1_e);
+            // neon
+            unsafe {
+                let nc = NeonSimd256u8::load(packed.as_ptr());
+                let nm = NeonSimd256u8::splat(0x0F);
+                let mut lo_g = [0u8; 32];
+                let mut hi_g = [0u8; 32];
+                nc.and(nm).store(lo_g.as_mut_ptr());
+                nc.shr4().store(hi_g.as_mut_ptr());
+                assert_eq!(lo_g, lo_e);
+                assert_eq!(hi_g, hi_e);
+                let (n0, n1) = nc.widen();
+                let mut w0_g = [0u16; 16];
+                let mut w1_g = [0u16; 16];
+                n0.store(w0_g.as_mut_ptr());
+                n1.store(w1_g.as_mut_ptr());
+                assert_eq!(w0_g, w0_e);
+                assert_eq!(w1_g, w1_e);
+            }
+        }
+    }
+
+    #[test]
+    fn sat_add_matches_portable() {
+        if !have_neon() {
+            eprintln!("skipping: no neon");
+            return;
+        }
+        unsafe {
+            let a = NeonSimd256u16 { lo: vdupq_n_u16(64_000), hi: vdupq_n_u16(1_000) };
+            let b = NeonSimd256u16 { lo: vdupq_n_u16(5_000), hi: vdupq_n_u16(2_000) };
+            let mut out = [0u16; 16];
+            a.sat_add(b).store(out.as_mut_ptr());
+            assert_eq!(out[..8], [u16::MAX; 8]); // 64000 + 5000 saturates
+            assert_eq!(out[8..], [3_000u16; 8]);
+        }
+    }
+
+    #[test]
+    fn movemask_matches_portable() {
+        if !have_neon() {
+            eprintln!("skipping: no neon");
+            return;
+        }
+        let mut rng = Rng::new(89);
+        for _ in 0..200 {
+            let mut b = [0u8; 32];
+            for x in &mut b {
+                *x = (rng.next_u32() & 0xFF) as u8;
+            }
+            let expect = Simd256u8::load(&b).movemask();
+            let got = unsafe { NeonSimd256u8::load(b.as_ptr()).movemask() };
+            assert_eq!(got, expect);
+        }
+    }
+}

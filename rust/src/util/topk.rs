@@ -126,10 +126,23 @@ impl U16Reservoir {
         self.threshold
     }
 
+    /// Whether the reservoir holds at least `capacity` candidates. Below
+    /// capacity every candidate is admitted — see [`U16Reservoir::push`].
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
     /// Offer a candidate with coarse distance `d`.
+    ///
+    /// Admission rule: anything goes while the reservoir is below
+    /// capacity; once full, only `d < threshold` survives. The strict
+    /// compare alone would starve distances saturated at `u16::MAX`
+    /// (threshold starts at `u16::MAX`), returning fewer than `k` results
+    /// for a database of far-away vectors even when `n >= k`.
     #[inline]
     pub fn push(&mut self, d: u16, label: i64) {
-        if d >= self.threshold {
+        if d >= self.threshold && self.items.len() >= self.capacity {
             return;
         }
         self.items.push((d, label));
@@ -248,5 +261,34 @@ mod tests {
             r.push((i % 65_535) as u16, i as i64);
         }
         assert!(r.into_candidates().len() <= 40);
+    }
+
+    /// Saturated distances (`u16::MAX`) must still fill an underfull
+    /// reservoir: a database of far-away vectors has to return k results.
+    #[test]
+    fn reservoir_admits_saturated_distances_until_capacity() {
+        let k = 8;
+        let mut r = U16Reservoir::new(k, 4);
+        assert!(!r.is_full());
+        for i in 0..100 {
+            r.push(u16::MAX, i as i64);
+        }
+        let cands = r.into_candidates();
+        assert!(cands.len() >= k, "only {} of {k} saturated candidates kept", cands.len());
+        assert!(cands.iter().all(|&(d, _)| d == u16::MAX));
+    }
+
+    #[test]
+    fn reservoir_is_full_transitions() {
+        let mut r = U16Reservoir::new(2, 2); // capacity 4
+        for i in 0..4 {
+            assert!(!r.is_full(), "full after only {i} pushes");
+            r.push(100, i as i64);
+        }
+        assert!(r.is_full());
+        // once full, worse-than-threshold candidates are rejected again
+        let before = r.items.len();
+        r.push(u16::MAX, 99);
+        assert_eq!(r.items.len(), before);
     }
 }
