@@ -7,7 +7,7 @@
 
 use armpq::datasets::SyntheticDataset;
 use armpq::eval::{ground_truth, measure_search};
-use armpq::index::{Index, IndexIvfPq4};
+use armpq::index::{Index, IndexIvfPq4, SearchParams};
 use armpq::util::args::Args;
 use armpq::util::timer::Timer;
 
@@ -29,7 +29,7 @@ fn main() -> armpq::Result<()> {
     println!("trained coarse({nlist}) + PQ in {:.1}s", t.elapsed_s());
     let t = Timer::start();
     index.add(&ds.base)?;
-    index.inner_mut().seal()?;
+    index.seal()?;
     println!("encoded+packed {} vectors in {:.1}s", index.ntotal(), t.elapsed_s());
     let (lmin, lmean, lmax) = index.inner().list_stats();
     println!(
@@ -42,9 +42,10 @@ fn main() -> armpq::Result<()> {
 
     println!("\n nlist  nprobe   M   K   Recall@1   Runtime(ms/query)");
     for nprobe in nprobes {
-        index.set_param("nprobe", &nprobe.to_string())?;
+        // nprobe travels with each request; the sealed index never changes
+        let params = SearchParams::new().with_nprobe(nprobe);
         let meas = measure_search(&ds.queries, ds.dim, &gt, 1, 10, 3, |q, k| {
-            let r = index.search(q, k).unwrap();
+            let r = index.search(q, k, Some(&params)).unwrap();
             (r.distances, r.labels)
         });
         println!(

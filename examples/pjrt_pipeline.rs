@@ -48,13 +48,13 @@ fn main() -> armpq::Result<()> {
     // warm (compile) then run a few batches
     let queries: Vec<f32> = (0..32 * d).map(|_| rng.next_gaussian()).collect();
     let t = Timer::start();
-    let (dists, labels) = backend.search_batch(&queries, k)?;
+    let (dists, labels) = backend.search_batch(&queries, k, None)?;
     println!("first batch (incl. XLA compile): {:.1} ms", t.elapsed_ms());
 
     let t = Timer::start();
     let iters = 20;
     for _ in 0..iters {
-        let _ = backend.search_batch(&queries, k)?;
+        let _ = backend.search_batch(&queries, k, None)?;
     }
     let ms = t.elapsed_ms() / iters as f64;
     println!(

@@ -20,11 +20,12 @@ fn main() -> armpq::Result<()> {
     let t = Timer::start();
     index.train(&ds.train)?;
     index.add(&ds.base)?;
+    index.seal()?; // build phase done: the index is now immutable to search
     println!("built {} in {:.1}s", index.describe(), t.elapsed_s());
 
-    // 3. Search all queries.
+    // 3. Search all queries (read-only — shareable across threads).
     let t = Timer::start();
-    let result = index.search(&ds.queries, 10)?;
+    let result = index.search(&ds.queries, 10, None)?;
     let ms = t.elapsed_ms() / ds.nq() as f64;
     println!("search: {:.3} ms/query ({:.0} QPS single-thread)", ms, 1e3 / ms);
 
@@ -40,8 +41,9 @@ fn main() -> armpq::Result<()> {
     let mut naive = index_factory(ds.dim, "PQ16x4")?;
     naive.train(&ds.train)?;
     naive.add(&ds.base)?;
+    naive.seal()?;
     let t = Timer::start();
-    let rn = naive.search(&ds.queries, 10)?;
+    let rn = naive.search(&ds.queries, 10, None)?;
     let ms_naive = t.elapsed_ms() / ds.nq() as f64;
     println!(
         "baseline PQ16x4 (naive scan): {:.3} ms/query — fastscan speedup {:.1}x at recall {:.3}",

@@ -5,6 +5,7 @@
 //! The file format is a flat INI-subset (comments with `#`, sections
 //! ignored into key prefixes: `[server]` + `port = 1` → `server.port`).
 
+use crate::index::SearchParams;
 use crate::simd::Backend;
 use crate::util::args::Args;
 use crate::{Error, Result};
@@ -112,6 +113,11 @@ pub struct ExperimentConfig {
     pub factory: String,
     pub k: usize,
     pub nprobe: usize,
+    /// Whether `nprobe` was given explicitly (CLI flag or config key)
+    /// rather than inherited from the built-in default — explicit values
+    /// become per-request overrides, implicit ones must not shadow index
+    /// defaults (e.g. a factory string's trailing `nprobe=8`).
+    pub nprobe_explicit: bool,
     /// Timed trials per measurement (paper: 5).
     pub trials: usize,
     /// Fastscan kernel backend override (`portable` / `ssse3` / `neon`);
@@ -129,6 +135,7 @@ impl Default for ExperimentConfig {
             factory: "PQ16x4fs".into(),
             k: 10,
             nprobe: 4,
+            nprobe_explicit: false,
             trials: 5,
             backend: None,
         }
@@ -136,6 +143,22 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// The typed per-request [`SearchParams`] this config implies — the
+    /// CLI `--nprobe`/`--backend` flags and config keys land in the same
+    /// struct the `set_param` shim parses into, so every surface shares
+    /// one parameter vocabulary. Only *explicitly given* values become
+    /// overrides: the built-in `nprobe` default must not shadow index
+    /// defaults such as a factory string's trailing `nprobe=8`
+    /// (`backend` is `None` unless given, so it needs no flag).
+    pub fn search_params(&self) -> SearchParams {
+        let mut p = SearchParams::new();
+        if self.nprobe_explicit && self.nprobe > 0 {
+            p.nprobe = Some(self.nprobe);
+        }
+        p.backend = self.backend;
+        p
+    }
+
     /// defaults < optional `--config <file>` < CLI flags.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut cfg = Config::new();
@@ -158,6 +181,7 @@ impl ExperimentConfig {
             factory: args.get_str("factory", &cfg.get_str("factory", &d.factory)),
             k: args.get_usize("k", cfg.get_usize("k", d.k)?),
             nprobe: args.get_usize("nprobe", cfg.get_usize("nprobe", d.nprobe)?),
+            nprobe_explicit: args.get_opt("nprobe").is_some() || cfg.get("nprobe").is_some(),
             trials: args.get_usize("trials", cfg.get_usize("trials", d.trials)?),
             backend,
         })
@@ -212,6 +236,19 @@ mod tests {
         assert_eq!(e.n, 5000);
         assert_eq!(e.factory, "IVF10,PQ8x4fs");
         assert_eq!(e.nq, 100); // default preserved
+    }
+
+    #[test]
+    fn search_params_only_from_explicit_values() {
+        // built-in default nprobe must NOT become a per-request override
+        let implicit = ExperimentConfig::from_args(&Args::parse(Vec::<String>::new())).unwrap();
+        assert!(!implicit.nprobe_explicit);
+        assert_eq!(implicit.search_params(), SearchParams::new());
+        // an explicit CLI flag does
+        let args = Args::parse(["--nprobe", "8"].iter().map(|s| s.to_string()));
+        let explicit = ExperimentConfig::from_args(&args).unwrap();
+        assert!(explicit.nprobe_explicit);
+        assert_eq!(explicit.search_params().nprobe, Some(8));
     }
 
     #[test]

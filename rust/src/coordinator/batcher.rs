@@ -3,13 +3,16 @@
 //!
 //! Policy (vLLM-style continuous batching, simplified to stateless search):
 //! the worker blocks for the first request, then drains the queue up to
-//! `max_batch` or until `max_wait` elapses, groups by `k`, executes, and
-//! routes each response to its reply channel. Batching amortizes per-query
-//! fixed costs — above all LUT construction, the serving-layer analog of
-//! the paper keeping tables register-resident.
+//! `max_batch` or until `max_wait` elapses, groups by `(k, params)`,
+//! executes, and routes each response to its reply channel. Batching
+//! amortizes per-query fixed costs — above all LUT construction, the
+//! serving-layer analog of the paper keeping tables register-resident.
+//! Per-request [`SearchParams`] are part of the grouping key, so requests
+//! carrying different overrides never share (or pollute) a backend call.
 
 use super::metrics::Metrics;
 use super::service::SearchBackend;
+use crate::index::SearchParams;
 use crate::Result;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -19,6 +22,9 @@ use std::time::{Duration, Instant};
 pub struct QueryRequest {
     pub vector: Vec<f32>,
     pub k: usize,
+    /// Per-request parameter overrides; part of the batching key, so
+    /// requests with different parameters never share a backend call.
+    pub params: Option<SearchParams>,
     pub enqueued: Instant,
     pub reply: SyncSender<Result<QueryResponse>>,
 }
@@ -89,18 +95,27 @@ impl Batcher {
         &self,
         vector: Vec<f32>,
         k: usize,
+        params: Option<SearchParams>,
     ) -> std::sync::mpsc::Receiver<Result<QueryResponse>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.metrics.requests_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req = QueryRequest { vector, k, enqueued: Instant::now(), reply: reply_tx };
+        // normalize Some(no overrides) to None so it batches with bare
+        // requests instead of forming its own (k, params) group
+        let params = params.filter(|p| !p.is_empty());
+        let req = QueryRequest { vector, k, params, enqueued: Instant::now(), reply: reply_tx };
         // A send error means shutdown; the caller sees a disconnected reply.
         let _ = self.tx.send(req);
         reply_rx
     }
 
     /// Convenience: submit and wait.
-    pub fn search(&self, vector: Vec<f32>, k: usize) -> Result<QueryResponse> {
-        self.submit(vector, k)
+    pub fn search(
+        &self,
+        vector: Vec<f32>,
+        k: usize,
+        params: Option<SearchParams>,
+    ) -> Result<QueryResponse> {
+        self.submit(vector, k, params)
             .recv()
             .map_err(|_| crate::Error::Serve("batcher shut down".into()))?
     }
@@ -161,18 +176,22 @@ fn worker_loop(
 fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<QueryRequest>) {
     metrics.record_batch(batch.len());
     let batch_size = batch.len();
-    // group indices by k to keep one backend call per k value
-    let mut by_k: std::collections::BTreeMap<usize, Vec<QueryRequest>> = Default::default();
+    // group by (k, params) so one backend call serves each combination —
+    // per-request overrides must never leak into a neighbor's search
+    let mut groups: Vec<((usize, Option<SearchParams>), Vec<QueryRequest>)> = Vec::new();
     for r in batch {
-        by_k.entry(r.k).or_default().push(r);
+        match groups.iter_mut().find(|(key, _)| key.0 == r.k && key.1 == r.params) {
+            Some((_, g)) => g.push(r),
+            None => groups.push(((r.k, r.params.clone()), vec![r])),
+        }
     }
-    for (k, group) in by_k {
+    for ((k, params), group) in groups {
         let mut queries = Vec::with_capacity(group.len() * backend.dim());
         for r in &group {
             queries.extend_from_slice(&r.vector);
         }
         let t0 = Instant::now();
-        let result = backend.search_batch(&queries, k);
+        let result = backend.search_batch(&queries, k, params.as_ref());
         let service_us = t0.elapsed().as_micros() as u64;
         metrics.service_us.record(service_us.max(1));
         match result {
@@ -216,7 +235,12 @@ mod tests {
         fn dim(&self) -> usize {
             self.dim
         }
-        fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        fn search_batch(
+            &self,
+            queries: &[f32],
+            k: usize,
+            _params: Option<&SearchParams>,
+        ) -> Result<(Vec<f32>, Vec<i64>)> {
             std::thread::sleep(self.delay);
             let nq = queries.len() / self.dim;
             let mut d = Vec::new();
@@ -240,7 +264,7 @@ mod tests {
         let b = Batcher::start(be, BatcherConfig::default());
         let mut rxs = Vec::new();
         for i in 0..20 {
-            rxs.push((i, b.submit(vec![i as f32, 0.0], 3)));
+            rxs.push((i, b.submit(vec![i as f32, 0.0], 3, None)));
         }
         for (i, rx) in rxs {
             let resp = rx.recv().unwrap().unwrap();
@@ -262,7 +286,7 @@ mod tests {
         for i in 0..32 {
             let b = b.clone();
             handles.push(std::thread::spawn(move || {
-                b.search(vec![i as f32], 1).unwrap()
+                b.search(vec![i as f32], 1, None).unwrap()
             }));
         }
         let responses: Vec<QueryResponse> =
@@ -276,8 +300,8 @@ mod tests {
     fn mixed_k_in_one_window() {
         let be = Arc::new(EchoBackend { dim: 1, delay: Duration::ZERO });
         let b = Batcher::start(be, BatcherConfig::default());
-        let r1 = b.submit(vec![1.0], 2);
-        let r2 = b.submit(vec![2.0], 5);
+        let r1 = b.submit(vec![1.0], 2, None);
+        let r2 = b.submit(vec![2.0], 5, None);
         assert_eq!(r1.recv().unwrap().unwrap().distances.len(), 2);
         assert_eq!(r2.recv().unwrap().unwrap().distances.len(), 5);
         b.shutdown();
@@ -287,7 +311,7 @@ mod tests {
     fn shutdown_joins_cleanly() {
         let be = Arc::new(EchoBackend { dim: 1, delay: Duration::ZERO });
         let b = Batcher::start(be, BatcherConfig { workers: 2, ..Default::default() });
-        let resp = b.search(vec![5.0], 1).unwrap();
+        let resp = b.search(vec![5.0], 1, None).unwrap();
         assert_eq!(resp.labels, vec![5]);
         b.shutdown(); // must not hang
     }
@@ -298,7 +322,12 @@ mod tests {
         fn dim(&self) -> usize {
             1
         }
-        fn search_batch(&self, _q: &[f32], _k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        fn search_batch(
+            &self,
+            _q: &[f32],
+            _k: usize,
+            _params: Option<&SearchParams>,
+        ) -> Result<(Vec<f32>, Vec<i64>)> {
             Err(crate::Error::Serve("injected".into()))
         }
         fn describe(&self) -> String {
@@ -306,10 +335,55 @@ mod tests {
         }
     }
 
+    /// Backend that echoes the per-request nprobe back as the label, to
+    /// prove overrides reach the backend per-group and never leak.
+    struct ParamEchoBackend;
+    impl SearchBackend for ParamEchoBackend {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn search_batch(
+            &self,
+            queries: &[f32],
+            k: usize,
+            params: Option<&SearchParams>,
+        ) -> Result<(Vec<f32>, Vec<i64>)> {
+            let nprobe = params.and_then(|p| p.nprobe).unwrap_or(0) as i64;
+            let nq = queries.len();
+            Ok((vec![0.0; nq * k], vec![nprobe; nq * k]))
+        }
+        fn describe(&self) -> String {
+            "param-echo".into()
+        }
+    }
+
+    #[test]
+    fn per_request_params_do_not_leak_across_batch() {
+        let b = Arc::new(Batcher::start(
+            Arc::new(ParamEchoBackend),
+            BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), ..Default::default() },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..24u64 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let nprobe = (i % 3) as usize; // 0 means "no params"
+                let params =
+                    (nprobe > 0).then(|| SearchParams::new().with_nprobe(nprobe));
+                let resp = b.search(vec![i as f32], 2, params).unwrap();
+                (nprobe as i64, resp)
+            }));
+        }
+        for h in handles {
+            let (nprobe, resp) = h.join().unwrap();
+            assert_eq!(resp.labels, vec![nprobe; 2], "params leaked between requests");
+        }
+    }
+
     #[test]
     fn backend_errors_propagate() {
         let b = Batcher::start(Arc::new(FailBackend), BatcherConfig::default());
-        let err = b.search(vec![0.0], 1).unwrap_err();
+        let err = b.search(vec![0.0], 1, None).unwrap_err();
         assert!(err.to_string().contains("injected"));
         assert_eq!(b.metrics.errors_total.load(std::sync::atomic::Ordering::Relaxed), 1);
         b.shutdown();

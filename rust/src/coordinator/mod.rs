@@ -5,14 +5,19 @@
 //!
 //! ```text
 //!   TCP clients ──► server (thread per conn, line-JSON protocol)
-//!                      │ QueryRequest { vector, k, reply channel }
+//!                      │ QueryRequest { vector, k, params, reply channel }
 //!                      ▼
 //!                dynamic batcher (max_batch / max_wait window)
-//!                      │ grouped by k, concatenated
+//!                      │ grouped by (k, params), concatenated
 //!                      ▼
-//!                SearchBackend (sealed IVF-PQ index, or the PJRT
-//!                pipeline from runtime/) ──► responses routed back
+//!                SearchBackend (sealed index behind Arc<dyn Index>, or
+//!                the PJRT pipeline from runtime/) ──► responses routed
 //! ```
+//!
+//! Search is read-only end to end: backends take `&self` and forward
+//! per-request [`crate::index::SearchParams`], so shards fan out across
+//! threads without a per-index mutex and concurrent requests with
+//! different parameters never interfere.
 //!
 //! Everything is std-thread + mpsc (no tokio in the vendored crate set);
 //! on the paper's workload (sub-ms searches) OS threads are not the
@@ -30,4 +35,4 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use router::ShardedBackend;
 pub use server::{Client, Server, ServerConfig};
-pub use service::{IvfBackend, SearchBackend};
+pub use service::{IndexBackend, IvfBackend, SearchBackend};

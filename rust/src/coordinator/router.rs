@@ -3,7 +3,8 @@
 //! (how a billion-vector corpus is actually served: N_shard × IVF indexes,
 //! each like the paper's Table 1 configuration).
 
-use super::service::SearchBackend;
+use super::service::{IndexBackend, SearchBackend};
+use crate::index::{Index, SearchParams};
 use crate::util::topk::TopK;
 use crate::Result;
 use std::sync::Arc;
@@ -12,7 +13,8 @@ use std::sync::Arc;
 ///
 /// Shards own disjoint id spaces (each shard must already return *global*
 /// ids, e.g. via `add_with_ids`). Shard searches run on scoped threads —
-/// one per shard — and merge via a bounded heap.
+/// one per shard, lock-free (`search_batch` is `&self`) — and merge via a
+/// bounded heap. Per-request [`SearchParams`] are forwarded to every shard.
 pub struct ShardedBackend {
     shards: Vec<Arc<dyn SearchBackend>>,
     dim: usize,
@@ -30,6 +32,15 @@ impl ShardedBackend {
         Ok(Self { shards, dim })
     }
 
+    /// Convenience: shard over sealed indexes held as `Arc<dyn Index>`.
+    pub fn from_indexes(indexes: Vec<Arc<dyn Index>>) -> Result<Self> {
+        let shards = indexes
+            .into_iter()
+            .map(|idx| Ok(Arc::new(IndexBackend::new(idx)?) as Arc<dyn SearchBackend>))
+            .collect::<Result<Vec<_>>>()?;
+        Self::new(shards)
+    }
+
     pub fn nshards(&self) -> usize {
         self.shards.len()
     }
@@ -40,8 +51,16 @@ impl SearchBackend for ShardedBackend {
         self.dim
     }
 
-    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+    fn search_batch(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
         let nq = queries.len() / self.dim;
+        if k == 0 || nq == 0 {
+            return Ok((Vec::new(), Vec::new()));
+        }
         // fan out: one thread per shard (scoped — no 'static bounds needed)
         let results: Vec<Result<(Vec<f32>, Vec<i64>)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
@@ -49,7 +68,7 @@ impl SearchBackend for ShardedBackend {
                 .iter()
                 .map(|shard| {
                     let shard = shard.clone();
-                    scope.spawn(move || shard.search_batch(queries, k))
+                    scope.spawn(move || shard.search_batch(queries, k, params))
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
@@ -124,8 +143,8 @@ mod tests {
         mono.fastscan.reservoir_factor = 32;
         let mono = IvfBackend::new(mono).unwrap();
 
-        let (d_s, _l_s) = router.search_batch(&ds.queries, 5).unwrap();
-        let (d_m, _l_m) = mono.search_batch(&ds.queries, 5).unwrap();
+        let (d_s, _l_s) = router.search_batch(&ds.queries, 5, None).unwrap();
+        let (d_m, _l_m) = mono.search_batch(&ds.queries, 5, None).unwrap();
         // same PQ (same seed) ⇒ same distances for the merged top-k
         for qi in 0..25 {
             for r in 0..5 {
@@ -137,6 +156,46 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// `from_indexes` wiring: sealed `Arc<dyn Index>` shards with global
+    /// ids merge correctly, and an unsealed shard is rejected up front by
+    /// the `IndexBackend` probe search.
+    #[test]
+    fn from_indexes_wires_dyn_shards() {
+        use crate::index::{Index, IndexIvfPq4};
+        let ds = SyntheticDataset::sift_like(1_000, 4, 234);
+        let dim = ds.dim;
+        let per = ds.n() / 2;
+        let mut shards: Vec<Arc<dyn Index>> = Vec::new();
+        for s in 0..2 {
+            let mut idx = IndexIvfPq4::new(dim, 4, 8, false, 8);
+            idx.train(&ds.train).unwrap();
+            let slice = &ds.base[s * per * dim..(s + 1) * per * dim];
+            let ids: Vec<i64> = (s * per..(s + 1) * per).map(|i| i as i64).collect();
+            idx.inner_mut().add_with_ids(slice, &ids).unwrap();
+            idx.set_param("nprobe", "4").unwrap();
+            idx.set_param("reservoir_factor", "32").unwrap();
+            idx.seal().unwrap();
+            shards.push(Arc::new(idx));
+        }
+        let router = ShardedBackend::from_indexes(shards).unwrap();
+        assert_eq!(router.nshards(), 2);
+        // a query equal to a base row of each shard must surface that
+        // shard's global id through the merge (rerank puts it on top)
+        let (da, la) = router.search_batch(&ds.base[..dim], 5, None).unwrap();
+        assert!(la.contains(&0), "{la:?}");
+        assert!(da.windows(2).all(|w| w[0] <= w[1]), "{da:?}");
+        let qb = &ds.base[per * dim..(per + 1) * dim];
+        let (_db, lb) = router.search_batch(qb, 5, None).unwrap();
+        assert!(lb.contains(&(per as i64)), "{lb:?}");
+
+        // an unsealed shard fails at construction, not at serve time
+        let mut unsealed = IndexIvfPq4::new(dim, 4, 8, false, 8);
+        unsealed.train(&ds.train).unwrap();
+        unsealed.add(&ds.base).unwrap();
+        let unsealed_shards: Vec<Arc<dyn Index>> = vec![Arc::new(unsealed)];
+        assert!(ShardedBackend::from_indexes(unsealed_shards).is_err());
     }
 
     #[test]

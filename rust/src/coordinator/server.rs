@@ -4,7 +4,8 @@
 //! Protocol (requests and responses are single JSON lines):
 //!
 //! ```text
-//!   → {"search": {"vector": [f32…], "k": 10}}
+//!   → {"search": {"vector": [f32…], "k": 10,
+//!                 "params": {"nprobe": 8, "rerank": false}}}   (params optional)
 //!   ← {"ok": {"labels": […], "distances": […], "batch_size": n}}
 //!   → {"stats": true}
 //!   ← {"ok": { …metrics… }}
@@ -15,6 +16,7 @@
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::service::SearchBackend;
+use crate::index::SearchParams;
 use crate::util::json::Json;
 use crate::{Error, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -141,7 +143,19 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
     if k == 0 || k > 1024 {
         return err(format!("bad k {k}"));
     }
-    match batcher.search(vector, k) {
+    let params = match search.get("params") {
+        None => None,
+        Some(obj) => {
+            match search_params_from_json(obj).and_then(|p| {
+                p.validate_for_request(k)?;
+                Ok(p)
+            }) {
+                Ok(p) => Some(p),
+                Err(e) => return err(e.to_string()),
+            }
+        }
+    };
+    match batcher.search(vector, k, params) {
         Ok(resp) => {
             let mut body = Json::obj();
             body.set("labels", Json::Arr(resp.labels.iter().map(|&l| Json::Num(l as f64)).collect()))
@@ -158,6 +172,29 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
         }
         Err(e) => err(e.to_string()),
     }
+}
+
+/// Parse a JSON object of per-request overrides through the shared
+/// [`SearchParams::assign`] parser (numbers, bools and strings accepted).
+fn search_params_from_json(obj: &Json) -> Result<SearchParams> {
+    let Json::Obj(map) = obj else {
+        return Err(Error::Serve("search.params must be an object".into()));
+    };
+    let mut params = SearchParams::default();
+    for (key, value) in map {
+        let text = match value {
+            Json::Str(s) => s.clone(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(x) if x.fract() == 0.0 => format!("{}", *x as i64),
+            other => other.to_string(),
+        };
+        params.assign(key, &text)?;
+    }
+    // remote clients don't get to size our buffers or pick kernels this
+    // host cannot execute (the caller additionally applies the k-aware
+    // product caps via validate_for_request)
+    params.validate_bounds()?;
+    Ok(params)
 }
 
 /// Line-JSON client for the server.
@@ -207,10 +244,27 @@ impl Client {
 
     /// Search; returns `(distances, labels, batch_size)`.
     pub fn search(&mut self, vector: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>, usize)> {
+        self.search_with(vector, k, None)
+    }
+
+    /// [`Client::search`] with per-request parameter overrides.
+    pub fn search_with(
+        &mut self,
+        vector: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>, usize)> {
         let mut inner = Json::obj();
         inner
             .set("vector", Json::Arr(vector.iter().map(|&x| Json::Num(x as f64)).collect()))
             .set("k", Json::Num(k as f64));
+        if let Some(p) = params {
+            let mut pobj = Json::obj();
+            for (key, value) in p.to_kv() {
+                pobj.set(key, Json::Str(value));
+            }
+            inner.set("params", pobj);
+        }
         let mut req = Json::obj();
         req.set("search", inner);
         let ok = self.roundtrip(&req)?;
@@ -306,6 +360,23 @@ mod tests {
         // bad k
         let err = client.search(&vec![0.0; 16], 0).unwrap_err();
         assert!(err.to_string().contains("bad k"), "{err}");
+        // good per-request params pass through
+        let (d, _l, _b) = client
+            .search_with(&vec![0.0; 16], 3, Some(&SearchParams::new().with_nprobe(4)))
+            .unwrap();
+        assert_eq!(d.len(), 3);
+        // an unknown params key is rejected by the shared parser
+        let mut pobj = Json::obj();
+        pobj.set("bogus", Json::Num(1.0));
+        let mut inner = Json::obj();
+        inner
+            .set("vector", Json::Arr(vec![Json::Num(0.0); 16]))
+            .set("k", Json::Num(3.0))
+            .set("params", pobj);
+        let mut raw = Json::obj();
+        raw.set("search", inner);
+        let err = client.roundtrip(&raw).unwrap_err();
+        assert!(err.to_string().contains("unknown parameter"), "{err}");
         // malformed json straight through the socket
         let stream = TcpStream::connect(server.addr).unwrap();
         let mut w = BufWriter::new(stream.try_clone().unwrap());

@@ -1,5 +1,10 @@
 //! Search backends the coordinator can route to.
+//!
+//! Backends are immutable once constructed: `search_batch` takes `&self`
+//! plus optional per-request [`SearchParams`], so any backend can serve
+//! concurrent batches without a lock.
 
+use crate::index::{params, Index, SearchParams};
 use crate::ivf::IvfPq4;
 use crate::runtime::{EngineHandle, Tensor};
 use crate::{Error, Result};
@@ -9,8 +14,62 @@ use std::sync::Arc;
 pub trait SearchBackend: Send + Sync {
     fn dim(&self) -> usize;
     /// Search `nq × dim` queries; returns `(distances, labels)` `nq × k`.
-    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)>;
+    /// `params` applies to this call only; backends without runtime knobs
+    /// ignore it.
+    fn search_batch(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)>;
     fn describe(&self) -> String;
+}
+
+/// Backend over any sealed index shared as `Arc<dyn Index>` — the generic
+/// adapter the shard router uses so one sealed index (or several) can be
+/// fanned out across threads lock-free.
+pub struct IndexBackend {
+    index: Arc<dyn Index>,
+}
+
+impl IndexBackend {
+    /// Wraps a trained, sealed index. Sealing is validated up front with a
+    /// one-query probe search, so a forgotten `seal()` fails here at
+    /// construction instead of on every request at serve time.
+    pub fn new(index: Arc<dyn Index>) -> Result<Self> {
+        if !index.is_trained() {
+            return Err(Error::Serve("index backend requires a trained index".into()));
+        }
+        let probe = vec![0.0f32; index.dim()];
+        if let Err(e) = index.search(&probe, 1, None) {
+            return Err(Error::Serve(format!("index backend probe search failed: {e}")));
+        }
+        Ok(Self { index })
+    }
+
+    pub fn index(&self) -> &Arc<dyn Index> {
+        &self.index
+    }
+}
+
+impl SearchBackend for IndexBackend {
+    fn dim(&self) -> usize {
+        self.index.dim()
+    }
+
+    fn search_batch(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
+        let r = self.index.search(queries, k, params)?;
+        Ok((r.distances, r.labels))
+    }
+
+    fn describe(&self) -> String {
+        self.index.describe()
+    }
 }
 
 /// Backend over a sealed [`IvfPq4`] index (the Table 1 configuration).
@@ -35,8 +94,15 @@ impl SearchBackend for IvfBackend {
         self.index.dim
     }
 
-    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
-        self.index.search_sealed(queries, k)
+    fn search_batch(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
+        let (nprobe, ef_search, fs) =
+            params::effective_ivf(params, self.index.nprobe, &self.index.fastscan);
+        self.index.search_with(queries, k, nprobe, ef_search, &fs)
     }
 
     fn describe(&self) -> String {
@@ -103,7 +169,14 @@ impl SearchBackend for PjrtBackend {
         self.d
     }
 
-    fn search_batch(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+    // the artifact's parameters are baked in at AOT-compile time, so
+    // per-request SearchParams have nothing to override here
+    fn search_batch(
+        &self,
+        queries: &[f32],
+        k: usize,
+        _params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
         if k > self.k_art {
             return Err(Error::Serve(format!("k={k} exceeds artifact k={}", self.k_art)));
         }
@@ -164,10 +237,30 @@ mod tests {
         let be = IvfBackend::new(idx).unwrap();
         assert_eq!(be.dim(), 16);
         let queries = &data[..3 * 16];
-        let (d, l) = be.search_batch(queries, 5).unwrap();
+        let (d, l) = be.search_batch(queries, 5, None).unwrap();
         assert_eq!(d.len(), 15);
         assert_eq!(l.len(), 15);
         assert!(be.describe().contains("nlist=4"));
+        // per-request override goes through without mutating the backend
+        let narrow = SearchParams::new().with_nprobe(1);
+        let (d1, _l1) = be.search_batch(queries, 5, Some(&narrow)).unwrap();
+        assert_eq!(d1.len(), 15);
+        assert_eq!(be.index().nprobe, 4);
+    }
+
+    #[test]
+    fn index_backend_over_dyn_index() {
+        use crate::index::index_factory;
+        let mut rng = Rng::new(123);
+        let data: Vec<f32> = (0..500 * 16).map(|_| rng.next_gaussian()).collect();
+        let mut idx = index_factory(16, "PQ4x4fs").unwrap();
+        idx.train(&data).unwrap();
+        idx.add(&data).unwrap();
+        idx.seal().unwrap();
+        let be = IndexBackend::new(Arc::from(idx)).unwrap();
+        let (d, l) = be.search_batch(&data[..2 * 16], 3, None).unwrap();
+        assert_eq!((d.len(), l.len()), (6, 6));
+        assert!(be.describe().contains("PQ4x4fs"));
     }
 
     #[test]
@@ -187,7 +280,7 @@ mod tests {
         let be = PjrtBackend::new(engine, d, codes, codebooks).unwrap();
         // 3 queries (< Q=8) exercises the padding path
         let queries: Vec<f32> = (0..3 * d).map(|_| rng.next_gaussian()).collect();
-        let (dist, lab) = be.search_batch(&queries, 5).unwrap();
+        let (dist, lab) = be.search_batch(&queries, 5, None).unwrap();
         assert_eq!(dist.len(), 15);
         assert!(lab.iter().all(|&l| l >= 0 && (l as usize) < n));
         // ascending per query
@@ -195,6 +288,6 @@ mod tests {
             let row = &dist[qi * 5..(qi + 1) * 5];
             assert!(row.windows(2).all(|w| w[0] <= w[1]), "{row:?}");
         }
-        assert!(be.search_batch(&queries, 100).is_err()); // k > artifact k
+        assert!(be.search_batch(&queries, 100, None).is_err()); // k > artifact k
     }
 }

@@ -12,6 +12,10 @@ pub enum Error {
     /// The index (or quantizer) must be trained before this operation.
     NotTrained,
 
+    /// The index has staged vectors that are not packed for search yet;
+    /// call `seal()` after the last `add()` before searching.
+    NotSealed,
+
     /// Dimension of the provided vectors does not match the index.
     DimMismatch { expected: usize, got: usize },
 
@@ -41,6 +45,9 @@ impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Error::NotTrained => write!(f, "index is not trained (call train() first)"),
+            Error::NotSealed => {
+                write!(f, "index is not sealed (call seal() after add() before searching)")
+            }
             Error::DimMismatch { expected, got } => {
                 write!(f, "dimension mismatch: expected {expected}, got {got}")
             }

@@ -58,7 +58,7 @@ pub fn run_fig2(
         naive.train(&ds.train)?;
         naive.add(&ds.base)?;
         let m_naive = measure_search(&ds.queries, ds.dim, &gt, 1, 1, trials, |q, k| {
-            let r = naive.search(q, k).unwrap();
+            let r = naive.search(q, k, None).unwrap();
             (r.distances, r.labels)
         });
 
@@ -66,8 +66,9 @@ pub fn run_fig2(
         let mut fast = IndexPq4FastScan::new(ds.dim, m);
         fast.train(&ds.train)?;
         fast.add(&ds.base)?;
+        fast.seal()?;
         let m_fast = measure_search(&ds.queries, ds.dim, &gt, 1, 1, trials, |q, k| {
-            let r = fast.search(q, k).unwrap();
+            let r = fast.search(q, k, None).unwrap();
             (r.distances, r.labels)
         });
 
@@ -111,7 +112,7 @@ pub fn run_table1(
     let train_s = t_train.elapsed_s();
     let t_add = Timer::start();
     idx.add(&ds.base)?;
-    idx.inner_mut().seal()?;
+    idx.seal()?;
     let add_s = t_add.elapsed_s();
     eprintln!("table1: train {train_s:.1}s, add+seal {add_s:.1}s, bits/vec {:.1}", idx.inner().code_bits_per_vector());
 
@@ -120,9 +121,10 @@ pub fn run_table1(
         &["nlist", "nprobe", "M", "K", "recall@1", "ms/query"],
     );
     for &nprobe in nprobes {
-        idx.set_param("nprobe", &nprobe.to_string())?;
+        // per-request override: the sealed index itself is never mutated
+        let params = crate::index::SearchParams::new().with_nprobe(nprobe);
         let meas = measure_search(&ds.queries, ds.dim, &gt, 1, 1, trials, |q, k| {
-            let r = idx.search(q, k).unwrap();
+            let r = idx.search(q, k, Some(&params)).unwrap();
             (r.distances, r.labels)
         });
         table.row(vec![
@@ -249,19 +251,21 @@ pub fn run_ablation_lut(dataset: &str, n: usize, nq: usize, m: usize, seed: u64)
     let mut naive = IndexPq::new(ds.dim, PqParams::new_4bit(m));
     naive.train(&ds.train)?;
     naive.add(&ds.base)?;
-    let r = naive.search(&ds.queries, 10)?;
+    let r = naive.search(&ds.queries, 10, None)?;
     table.row(vec![
         "f32 LUT (exact ADC)".into(),
         format!("{:.3}", recall_at_r(&gt, 1, &r.labels, 10, 1)),
         format!("{:.3}", recall_at_r(&gt, 1, &r.labels, 10, 10)),
     ]);
 
+    let mut fast = IndexPq4FastScan::new(ds.dim, m);
+    fast.train(&ds.train)?;
+    fast.add(&ds.base)?;
+    fast.seal()?;
     for (rerank, label) in [(true, "u8 LUT + rerank"), (false, "u8 LUT, no rerank")] {
-        let mut fast = IndexPq4FastScan::new(ds.dim, m);
-        fast.train(&ds.train)?;
-        fast.add(&ds.base)?;
-        fast.set_param("rerank", if rerank { "true" } else { "false" })?;
-        let r = fast.search(&ds.queries, 10)?;
+        // one sealed index, rerank toggled per request
+        let params = crate::index::SearchParams::new().with_rerank(rerank);
+        let r = fast.search(&ds.queries, 10, Some(&params))?;
         table.row(vec![
             label.into(),
             format!("{:.3}", recall_at_r(&gt, 1, &r.labels, 10, 1)),
@@ -370,7 +374,7 @@ pub fn run_pjrt_e2e(artifacts_dir: &std::path::Path, trials: usize) -> Result<Ta
     let runner = BenchRunner { runs: trials, ..Default::default() };
 
     let pjrt = runner.bench("pjrt artifact", || {
-        black_box(backend.search_batch(&queries, k).unwrap());
+        black_box(backend.search_batch(&queries, k, None).unwrap());
     });
 
     // rust in-process equivalent on the same codes (quantized, no rerank)

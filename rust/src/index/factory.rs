@@ -10,44 +10,106 @@
 //!   "IVF1000,PQ16x4fs"          IVF + flat coarse + fastscan
 //!   "IVF30000_HNSW32,PQ16x4fs"  IVF + HNSW coarse + fastscan (Table 1)
 //! ```
+//!
+//! Trailing `key=value` components set default [`SearchParams`] on the
+//! built index through the shared parser — the same keys `set_param` and
+//! the CLI accept:
+//!
+//! ```text
+//!   "IVF100,PQ16x4fs,nprobe=8,rerank=false"
+//! ```
 
 use super::pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
-use super::{flat::IndexFlat, Index};
+use super::{flat::IndexFlat, Index, SearchParams};
 use crate::pq::PqParams;
 use crate::{Error, Result};
 
 /// Create an index from a factory string.
 pub fn index_factory(dim: usize, spec: &str) -> Result<Box<dyn Index>> {
     let spec = spec.trim();
-    let err = |msg: &str| Error::Factory(spec.to_string(), msg.to_string());
+    let err = |msg: String| Error::Factory(spec.to_string(), msg);
 
     if spec.eq_ignore_ascii_case("flat") {
         return Ok(Box::new(IndexFlat::new(dim)));
     }
 
-    let parts: Vec<&str> = spec.split(',').map(|s| s.trim()).collect();
-    match parts.as_slice() {
+    let mut parts: Vec<&str> = spec.split(',').map(|s| s.trim()).collect();
+
+    // Peel trailing `key=value` components into default search parameters.
+    let params = peel_trailing_params(&mut parts).map_err(&err)?;
+
+    let mut index: Box<dyn Index> = match parts.as_slice() {
+        [] => return Err(err("missing index component".into())),
         [pq_spec] => {
-            let pq = parse_pq(pq_spec).ok_or_else(|| err("expected PQ<m>[x<bits>][fs]"))?;
-            build_flat_pq(dim, pq, spec)
+            let pq = parse_pq(pq_spec)
+                .ok_or_else(|| err(format!("component {pq_spec:?}: expected PQ<m>[x<bits>][fs]")))?;
+            build_flat_pq(dim, pq, spec)?
         }
         [ivf_spec, pq_spec] => {
-            let (nlist, hnsw_m) =
-                parse_ivf(ivf_spec).ok_or_else(|| err("expected IVF<nlist>[_HNSW<m>]"))?;
-            let pq = parse_pq(pq_spec).ok_or_else(|| err("expected PQ<m>x4fs after IVF"))?;
+            let (nlist, hnsw_m) = parse_ivf(ivf_spec)
+                .ok_or_else(|| err(format!("component {ivf_spec:?}: expected IVF<nlist>[_HNSW<m>]")))?;
+            let pq = parse_pq(pq_spec)
+                .ok_or_else(|| err(format!("component {pq_spec:?}: expected PQ<m>x4fs after IVF")))?;
             if !(pq.nbits == 4 && pq.fastscan) {
-                return Err(err("IVF composition requires PQ<m>x4fs"));
+                return Err(err(format!("component {pq_spec:?}: IVF composition requires PQ<m>x4fs")));
             }
-            Ok(Box::new(IndexIvfPq4::new(
-                dim,
-                nlist,
-                pq.m,
-                hnsw_m.is_some(),
-                hnsw_m.unwrap_or(32),
-            )))
+            Box::new(IndexIvfPq4::new(dim, nlist, pq.m, hnsw_m.is_some(), hnsw_m.unwrap_or(32)))
         }
-        _ => Err(err("too many components")),
+        _ => return Err(err("too many components".into())),
+    };
+
+    // Apply the trailing params as defaults; a key the built index type
+    // doesn't support is a spec error and names itself.
+    for (key, value) in params.to_kv() {
+        index
+            .set_param(key, &value)
+            .map_err(|e| err(format!("params component {key:?}: {e}")))?;
     }
+    Ok(index)
+}
+
+/// [`index_factory`] plus default [`SearchParams`] applied afterwards
+/// (e.g. from a config file). Unlike in-spec trailing components, keys the
+/// index type doesn't support are skipped — one config can drive sweeps
+/// over heterogeneous factory strings.
+pub fn index_factory_with(
+    dim: usize,
+    spec: &str,
+    defaults: &SearchParams,
+) -> Result<Box<dyn Index>> {
+    let mut index = index_factory(dim, spec)?;
+    for (key, value) in defaults.to_kv() {
+        let _ = index.set_param(key, &value);
+    }
+    Ok(index)
+}
+
+/// The default [`SearchParams`] a factory spec's trailing `key=value`
+/// components set, without building the index — lets callers (e.g. the
+/// CLI's implicit-default logic) see which keys a spec configures.
+pub fn spec_search_params(spec: &str) -> Result<SearchParams> {
+    let spec = spec.trim();
+    let mut parts: Vec<&str> = spec.split(',').map(|s| s.trim()).collect();
+    peel_trailing_params(&mut parts).map_err(|msg| Error::Factory(spec.to_string(), msg))
+}
+
+/// Pop trailing `key=value` components off `parts` and parse them into a
+/// [`SearchParams`], assigning left-to-right so duplicate keys resolve
+/// last-wins like every other config surface.
+fn peel_trailing_params(parts: &mut Vec<&str>) -> std::result::Result<SearchParams, String> {
+    let mut trailing = Vec::new();
+    while parts.last().is_some_and(|s| s.contains('=')) {
+        trailing.push(parts.pop().unwrap());
+    }
+    trailing.reverse();
+    let mut params = SearchParams::default();
+    for comp in trailing {
+        let (key, value) = comp.split_once('=').unwrap();
+        params
+            .assign(key.trim(), value.trim())
+            .map_err(|e| format!("params component {comp:?}: {e}"))?;
+    }
+    Ok(params)
 }
 
 struct PqSpec {
@@ -122,12 +184,42 @@ mod tests {
     }
 
     #[test]
+    fn trailing_params_set_defaults() {
+        let idx = index_factory(32, "IVF10,PQ8x4fs,nprobe=7,rerank=false").unwrap();
+        assert!(idx.describe().contains("nprobe=7"), "{}", idx.describe());
+        // ef_search applies to the HNSW-coarse composition
+        index_factory(32, "IVF10_HNSW8,PQ8x4fs,ef_search=64").unwrap();
+        // duplicate keys resolve last-wins like every other config surface
+        let idx = index_factory(32, "IVF10,PQ8x4fs,nprobe=8,nprobe=3").unwrap();
+        assert!(idx.describe().contains("nprobe=3"), "{}", idx.describe());
+        // unknown key, bad value, unsupported key: all name the component
+        let e = index_factory(32, "IVF10,PQ8x4fs,bogus=1").unwrap_err().to_string();
+        assert!(e.contains("bogus"), "{e}");
+        let e = index_factory(32, "IVF10,PQ8x4fs,nprobe=abc").unwrap_err().to_string();
+        assert!(e.contains("nprobe=abc"), "{e}");
+        let e = index_factory(32, "PQ8x4fs,nprobe=4").unwrap_err().to_string();
+        assert!(e.contains("nprobe"), "{e}"); // flat fastscan has no nprobe
+    }
+
+    #[test]
+    fn factory_with_skips_unsupported_defaults() {
+        let defaults = SearchParams::new().with_nprobe(9).with_rerank(false);
+        // nprobe applies to the IVF index…
+        let ivf = index_factory_with(32, "IVF10,PQ8x4fs", &defaults).unwrap();
+        assert!(ivf.describe().contains("nprobe=9"), "{}", ivf.describe());
+        // …and is silently skipped for the flat fastscan index
+        let flat = index_factory_with(32, "PQ8x4fs", &defaults).unwrap();
+        assert!(flat.describe().starts_with("PQ8x4fs"), "{}", flat.describe());
+    }
+
+    #[test]
     fn factory_index_end_to_end() {
         let ds = SyntheticDataset::gaussian(500, 5, 16, 111);
         let mut idx = index_factory(ds.dim, "PQ4x4fs").unwrap();
         idx.train(&ds.base).unwrap();
         idx.add(&ds.base).unwrap();
-        let r = idx.search(&ds.queries, 3).unwrap();
+        idx.seal().unwrap();
+        let r = idx.search(&ds.queries, 3, None).unwrap();
         assert_eq!(r.nq(), 5);
         assert!(r.labels.iter().all(|&l| l >= -1 && l < 500));
     }

@@ -1,6 +1,6 @@
 //! Exact brute-force index (ground truth / small-scale baseline).
 
-use super::{Index, SearchResult};
+use super::{Index, SearchParams, SearchResult};
 use crate::util::threads::{default_threads, parallel_map};
 use crate::util::topk::TopK;
 use crate::{Error, Result};
@@ -47,12 +47,20 @@ impl Index for IndexFlat {
         Ok(())
     }
 
-    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+    fn search(
+        &self,
+        queries: &[f32],
+        k: usize,
+        _params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
         if queries.len() % self.dim != 0 {
             return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
         }
         let nq = queries.len() / self.dim;
         let n = self.ntotal();
+        if k == 0 || nq == 0 || n == 0 {
+            return Ok(SearchResult::empty(nq, k));
+        }
         let dim = self.dim;
         let data = &self.data;
         let rows: Vec<(Vec<f32>, Vec<i64>)> = parallel_map(nq, default_threads(), |qi| {
@@ -94,7 +102,7 @@ mod tests {
         idx.add(&data).unwrap();
         assert_eq!(idx.ntotal(), 200);
         // query = row 13 exactly
-        let r = idx.search(&data[13 * dim..14 * dim], 3).unwrap();
+        let r = idx.search(&data[13 * dim..14 * dim], 3, None).unwrap();
         assert_eq!(r.labels[0], 13);
         assert!(r.distances[0] < 1e-9);
         // distances ascending
@@ -108,7 +116,7 @@ mod tests {
         let mut idx = IndexFlat::new(dim);
         idx.add(&data).unwrap();
         let queries = data[..2 * dim].to_vec();
-        let r = idx.search(&queries, 2).unwrap();
+        let r = idx.search(&queries, 2, None).unwrap();
         assert_eq!(r.nq(), 2);
         assert_eq!(r.row(0)[0], 0);
         assert_eq!(r.row(1)[0], 1);
@@ -118,6 +126,18 @@ mod tests {
     fn dim_mismatch_rejected() {
         let mut idx = IndexFlat::new(4);
         assert!(idx.add(&[1.0; 3]).is_err());
-        assert!(idx.search(&[1.0; 5], 1).is_err());
+        assert!(idx.search(&[1.0; 5], 1, None).is_err());
+    }
+
+    #[test]
+    fn degenerate_searches_well_formed() {
+        let mut idx = IndexFlat::new(4);
+        // empty index: padded result
+        let r = idx.search(&[0.0; 4], 2, None).unwrap();
+        assert_eq!(r.labels, vec![-1, -1]);
+        idx.add(&[0.0; 8]).unwrap();
+        // k == 0 and empty batch: well-formed empty results
+        assert_eq!(idx.search(&[0.0; 4], 0, None).unwrap().nq(), 0);
+        assert_eq!(idx.search(&[], 3, None).unwrap().nq(), 0);
     }
 }

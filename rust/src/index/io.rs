@@ -153,7 +153,7 @@ pub fn load_pq4fs(path: &Path) -> Result<IndexPq4FastScan> {
 // ------------------------------------------------------------ IVF-PQ4
 
 /// Save a trained+filled [`IvfPq4`] (lists are stored unpacked; packing is
-/// rebuilt lazily on first search after load).
+/// rebuilt at load time — `from_parts` returns a sealed index).
 pub fn save_ivfpq4(index: &IvfPq4, path: &Path) -> Result<()> {
     let pq = index.pq.as_ref().ok_or(Error::NotTrained)?;
     let f = std::fs::File::create(path)?;
@@ -249,13 +249,15 @@ mod tests {
         let mut idx = IndexPq4FastScan::new(ds.dim, 8);
         idx.train(&ds.train).unwrap();
         idx.add(&ds.base).unwrap();
-        let before = idx.search(&ds.queries, 5).unwrap();
+        idx.seal().unwrap();
+        let before = idx.search(&ds.queries, 5, None).unwrap();
 
         let path = tmp("flat.armpq");
         save_pq4fs(&idx, &path).unwrap();
-        let mut loaded = load_pq4fs(&path).unwrap();
+        let loaded = load_pq4fs(&path).unwrap();
         assert_eq!(loaded.ntotal(), 1_000);
-        let after = loaded.search(&ds.queries, 5).unwrap();
+        assert!(loaded.is_sealed(), "load must return a sealed index");
+        let after = loaded.search(&ds.queries, 5, None).unwrap();
         assert_eq!(before.labels, after.labels);
         assert_eq!(before.distances, after.distances);
     }
@@ -270,6 +272,7 @@ mod tests {
         idx.train(&ds.train).unwrap();
         idx.add(&ds.base).unwrap();
         idx.nprobe = 8;
+        idx.seal().unwrap();
         let (d0, l0) = idx.search(&ds.queries, 5).unwrap();
 
         let path = tmp("ivf.armpq");
@@ -277,6 +280,7 @@ mod tests {
         let mut loaded = load_ivfpq4(&path).unwrap();
         loaded.nprobe = 8;
         assert_eq!(loaded.ntotal(), 1_500);
+        assert!(loaded.is_sealed(), "load must return a sealed index");
         let (d1, l1) = loaded.search(&ds.queries, 5).unwrap();
         assert_eq!(l0, l1);
         assert_eq!(d0, d1);

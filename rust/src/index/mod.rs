@@ -1,19 +1,59 @@
 //! Unified index API: the `Index` trait, the concrete index types, and the
 //! faiss-style factory strings (`"IVF1000_HNSW32,PQ16x4fs"`).
 //!
-//! This is the crate's public surface for applications: every index
-//! supports `train → add → search`, plus string-keyed runtime parameters
-//! (`nprobe`, `ef_search`, `rerank`, …) so benchmark sweeps don't need
-//! type-specific code.
+//! # Lifecycle: a mutable build phase, then an immutable query phase
+//!
+//! Every index goes through two phases with distinct mutability:
+//!
+//! 1. **Build** (`&mut self`): [`Index::train`] fits codebooks/centroids,
+//!    [`Index::add`] stages vectors, and [`Index::seal`] packs the staged
+//!    codes into the kernel's interleaved SIMD layout. `seal` is
+//!    idempotent — call it once after the last `add`.
+//! 2. **Query** (`&self`): [`Index::search`] is read-only, so a sealed
+//!    index can be shared behind `Arc<dyn Index>` and searched from many
+//!    threads concurrently without a lock. Searching an index with
+//!    unsealed staged codes returns [`crate::Error::NotSealed`] instead of
+//!    silently repacking.
+//!
+//! Runtime knobs (`nprobe`, `ef_search`, `backend`, `rerank`, …) travel
+//! *with each request* as a typed [`SearchParams`] — unset fields fall
+//! back to the index's defaults, set fields win for that call only, and
+//! concurrent requests with different parameters never interfere.
+//!
+//! ```no_run
+//! use armpq::index::{index_factory, Index, SearchParams};
+//! # let queries = vec![0.0f32; 64];
+//! let mut index = index_factory(64, "IVF100,PQ16x4fs").unwrap();
+//! // build phase (&mut)
+//! # let data = vec![0.0f32; 64 * 1000];
+//! index.train(&data).unwrap();
+//! index.add(&data).unwrap();
+//! index.seal().unwrap();
+//! // query phase (&self) — per-request overrides, no index mutation
+//! let wide = SearchParams::new().with_nprobe(16);
+//! let result = index.search(&queries, 10, Some(&wide)).unwrap();
+//! ```
+//!
+//! # The `set_param` compatibility shim
+//!
+//! [`Index::set_param`] (string key/value, `&mut self`) survives as a thin
+//! shim for existing sweep scripts: it parses through the same
+//! [`SearchParams::assign`] parser and stores the result as the index's
+//! *defaults*. New code should prefer passing [`SearchParams`] per call —
+//! the shim mutates shared state and therefore cannot express per-request
+//! tuning; it is kept for compatibility and may be removed once callers
+//! have migrated.
 
 pub mod factory;
 pub mod flat;
 pub mod io;
+pub mod params;
 pub mod pq_index;
 pub mod refine;
 
 pub use factory::index_factory;
 pub use flat::IndexFlat;
+pub use params::{SearchParams, SearchRequest};
 pub use pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
 pub use refine::IndexRefineFlat;
 
@@ -29,8 +69,19 @@ pub struct SearchResult {
 }
 
 impl SearchResult {
+    /// A well-formed result with no hits: `nq × k` of `(INFINITY, -1)`.
+    /// This is what every index returns for `k == 0`, an empty query
+    /// batch, or an empty index.
+    pub fn empty(nq: usize, k: usize) -> Self {
+        Self { k, distances: vec![f32::INFINITY; nq * k], labels: vec![-1; nq * k] }
+    }
+
     pub fn nq(&self) -> usize {
-        self.labels.len() / self.k
+        if self.k == 0 {
+            0
+        } else {
+            self.labels.len() / self.k
+        }
     }
 
     /// Labels of query `qi`.
@@ -40,21 +91,40 @@ impl SearchResult {
 }
 
 /// The common index interface (mirrors the faiss `Index` API surface the
-/// paper's implementation plugs into).
-pub trait Index: Send {
+/// paper's implementation plugs into, with faiss' newer
+/// `SearchParameters`-per-call convention).
+///
+/// `Send + Sync` is part of the contract: a sealed index must be shareable
+/// across threads behind `Arc<dyn Index>`.
+pub trait Index: Send + Sync {
     /// Vector dimensionality.
     fn dim(&self) -> usize;
     /// Number of indexed vectors.
     fn ntotal(&self) -> usize;
     /// Whether codebooks/centroids have been trained.
     fn is_trained(&self) -> bool;
-    /// Train on `n × dim` vectors.
+    /// Train on `n × dim` vectors (build phase).
     fn train(&mut self, data: &[f32]) -> Result<()>;
-    /// Add `n × dim` vectors with sequential ids.
+    /// Add `n × dim` vectors with sequential ids (build phase).
     fn add(&mut self, data: &[f32]) -> Result<()>;
-    /// Search a batch of queries (`nq × dim`) for the `k` nearest.
-    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult>;
-    /// Set a runtime parameter (e.g. `"nprobe" = "4"`). Unknown keys error.
+    /// Finish the build phase: pack staged codes for the search kernel.
+    /// Idempotent; indexes without a packing step default to a no-op.
+    fn seal(&mut self) -> Result<()> {
+        Ok(())
+    }
+    /// Search a batch of queries (`nq × dim`) for the `k` nearest,
+    /// optionally overriding runtime parameters for this call only.
+    /// Read-only: safe to call concurrently on a sealed index.
+    fn search(&self, queries: &[f32], k: usize, params: Option<&SearchParams>)
+        -> Result<SearchResult>;
+    /// [`Index::search`] over a bundled [`SearchRequest`].
+    fn search_req(&self, req: &SearchRequest<'_>) -> Result<SearchResult> {
+        self.search(req.queries, req.k, req.params.as_ref())
+    }
+    /// Compatibility shim: set a *default* runtime parameter from strings
+    /// (e.g. `"nprobe" = "4"`). Parses through [`SearchParams::assign`];
+    /// unknown or unsupported keys error. Prefer per-request
+    /// [`SearchParams`].
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
         Err(crate::Error::InvalidParameter(format!("unknown parameter {key}={value}")))
     }
@@ -71,5 +141,17 @@ mod tests {
         let r = SearchResult { k: 2, distances: vec![0.1, 0.2, 0.3, 0.4], labels: vec![5, 6, 7, 8] };
         assert_eq!(r.nq(), 2);
         assert_eq!(r.row(1), &[7, 8]);
+    }
+
+    #[test]
+    fn empty_result_well_formed() {
+        let r = SearchResult::empty(3, 2);
+        assert_eq!(r.nq(), 3);
+        assert!(r.distances.iter().all(|d| d.is_infinite()));
+        assert!(r.labels.iter().all(|&l| l == -1));
+        // k = 0: zero-size, nq() must not divide by zero
+        let z = SearchResult::empty(5, 0);
+        assert_eq!(z.nq(), 0);
+        assert!(z.labels.is_empty() && z.distances.is_empty());
     }
 }

@@ -1,0 +1,407 @@
+//! Typed per-request search parameters.
+//!
+//! [`SearchParams`] carries every runtime search knob as an `Option`: an
+//! unset field falls back to the index's build-time default, a set field
+//! overrides it *for that call only*. Because the parameters travel with
+//! the request instead of being mutated into the index, a sealed index can
+//! be shared behind `Arc<dyn Index>` and searched from many threads with
+//! different settings concurrently — no lock, no cross-request leakage.
+//!
+//! [`SearchParams::assign`] is the single string-keyed parser: the
+//! `set_param` compatibility shim, the CLI `--nprobe`/`--backend` flags,
+//! config files, and the factory's trailing `key=value` segments all
+//! funnel through it, so every surface accepts the same keys with the
+//! same spellings.
+//!
+//! [`SearchRequest`] bundles a query batch, `k`, and optional overrides
+//! for layers (the TCP server, the batcher) that pass whole requests
+//! around.
+
+use crate::pq::fastscan::FastScanParams;
+use crate::simd::Backend;
+use crate::{Error, Result};
+
+/// Per-request search parameter overrides (all optional).
+///
+/// Unset fields inherit the index's defaults; set fields win for the one
+/// call they accompany. Not every index consumes every field — irrelevant
+/// fields are ignored (e.g. `nprobe` on a flat PQ index), mirroring faiss'
+/// `SearchParameters` downcast behavior.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SearchParams {
+    /// IVF probe width (number of inverted lists scanned).
+    pub nprobe: Option<usize>,
+    /// HNSW coarse-quantizer candidate-list width.
+    pub ef_search: Option<usize>,
+    /// Fastscan kernel implementation.
+    pub backend: Option<Backend>,
+    /// Re-rank reservoir candidates with exact f32 tables.
+    pub rerank: Option<bool>,
+    /// Reservoir over-collection factor relative to k.
+    pub reservoir_factor: Option<usize>,
+    /// Shortlist width multiplier for refinement wrappers.
+    pub refine_factor: Option<usize>,
+}
+
+impl SearchParams {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when no field is set (the request carries no overrides).
+    pub fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+
+    pub fn with_nprobe(mut self, nprobe: usize) -> Self {
+        self.nprobe = Some(nprobe);
+        self
+    }
+
+    pub fn with_ef_search(mut self, ef_search: usize) -> Self {
+        self.ef_search = Some(ef_search);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn with_rerank(mut self, rerank: bool) -> Self {
+        self.rerank = Some(rerank);
+        self
+    }
+
+    pub fn with_reservoir_factor(mut self, factor: usize) -> Self {
+        self.reservoir_factor = Some(factor);
+        self
+    }
+
+    pub fn with_refine_factor(mut self, factor: usize) -> Self {
+        self.refine_factor = Some(factor);
+        self
+    }
+
+    /// Parse one string-keyed parameter into the typed struct — THE parser
+    /// shared by the `set_param` shim, CLI flags, config files, and the
+    /// factory's trailing params segments. Unknown keys error.
+    pub fn assign(&mut self, key: &str, value: &str) -> Result<()> {
+        fn parse_usize(key: &str, value: &str) -> Result<usize> {
+            value
+                .parse()
+                .map_err(|_| Error::InvalidParameter(format!("bad {key}={value}")))
+        }
+        match key {
+            "nprobe" => self.nprobe = Some(parse_usize(key, value)?),
+            "ef_search" => self.ef_search = Some(parse_usize(key, value)?),
+            "reservoir_factor" => self.reservoir_factor = Some(parse_usize(key, value)?),
+            "refine_factor" => self.refine_factor = Some(parse_usize(key, value)?),
+            "rerank" => {
+                self.rerank = Some(match value {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    _ => return Err(Error::InvalidParameter(format!("bad rerank={value}"))),
+                })
+            }
+            "backend" => {
+                self.backend = Some(Backend::parse(value).ok_or_else(|| {
+                    Error::InvalidParameter(format!("bad backend {value}"))
+                })?)
+            }
+            _ => {
+                return Err(Error::InvalidParameter(format!("unknown parameter {key}={value}")))
+            }
+        }
+        Ok(())
+    }
+
+    /// Build from `key=value` pairs.
+    pub fn from_kv<'a>(pairs: impl IntoIterator<Item = (&'a str, &'a str)>) -> Result<Self> {
+        let mut p = Self::default();
+        for (k, v) in pairs {
+            p.assign(k, v)?;
+        }
+        Ok(p)
+    }
+
+    /// The set fields as string pairs — the inverse of [`SearchParams::assign`],
+    /// used for wire serialization and the `set_param` passthrough.
+    pub fn to_kv(&self) -> Vec<(&'static str, String)> {
+        let mut out = Vec::new();
+        if let Some(v) = self.nprobe {
+            out.push(("nprobe", v.to_string()));
+        }
+        if let Some(v) = self.ef_search {
+            out.push(("ef_search", v.to_string()));
+        }
+        if let Some(v) = self.backend {
+            out.push(("backend", v.name().to_string()));
+        }
+        if let Some(v) = self.rerank {
+            out.push(("rerank", v.to_string()));
+        }
+        if let Some(v) = self.reservoir_factor {
+            out.push(("reservoir_factor", v.to_string()));
+        }
+        if let Some(v) = self.refine_factor {
+            out.push(("refine_factor", v.to_string()));
+        }
+        out
+    }
+
+    /// Reject values no sane request carries — the serving boundary calls
+    /// this on client-supplied params so a remote override cannot trigger
+    /// huge allocations (`reservoir_factor` scales a per-query buffer by
+    /// `k × factor`), overflow, or a SIMD backend this host cannot run
+    /// (dispatching an unavailable `#[target_feature]` kernel is UB).
+    /// Trusted in-process callers may skip it.
+    pub fn validate_bounds(&self) -> Result<()> {
+        if let Some(b) = self.backend {
+            if !b.is_available() {
+                return Err(Error::InvalidParameter(format!(
+                    "backend {b} not available on this host"
+                )));
+            }
+        }
+        const MAX_NPROBE: usize = 1 << 20;
+        const MAX_EF: usize = 1 << 20;
+        const MAX_FACTOR: usize = 1 << 16;
+        for (key, value, max) in [
+            ("nprobe", self.nprobe, MAX_NPROBE),
+            ("ef_search", self.ef_search, MAX_EF),
+            ("reservoir_factor", self.reservoir_factor, MAX_FACTOR),
+            ("refine_factor", self.refine_factor, MAX_FACTOR),
+        ] {
+            if let Some(v) = value {
+                if v > max {
+                    return Err(Error::InvalidParameter(format!(
+                        "{key}={v} exceeds limit {max}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// [`SearchParams::validate_bounds`] plus request-size-aware caps: the
+    /// reservoir and refinement shortlists allocate `O(k × factor)` per
+    /// query, so the serving boundary must bound the *product*, not each
+    /// factor alone.
+    pub fn validate_for_request(&self, k: usize) -> Result<()> {
+        self.validate_bounds()?;
+        const MAX_SHORTLIST: usize = 1 << 20;
+        for (key, factor) in [
+            ("reservoir_factor", self.reservoir_factor),
+            ("refine_factor", self.refine_factor),
+        ] {
+            if let Some(f) = factor {
+                if k.saturating_mul(f) > MAX_SHORTLIST {
+                    return Err(Error::InvalidParameter(format!(
+                        "{key}={f} with k={k} exceeds shortlist limit {MAX_SHORTLIST}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Effective kernel parameters: this request's overrides applied over
+    /// the index's defaults.
+    pub fn fastscan(&self, base: &FastScanParams) -> FastScanParams {
+        FastScanParams {
+            backend: self.backend.unwrap_or(base.backend),
+            rerank: self.rerank.unwrap_or(base.rerank),
+            reservoir_factor: self.reservoir_factor.unwrap_or(base.reservoir_factor),
+        }
+    }
+}
+
+/// Resolve `Option<&SearchParams>` over a base [`FastScanParams`].
+pub fn effective_fastscan(base: &FastScanParams, params: Option<&SearchParams>) -> FastScanParams {
+    match params {
+        Some(p) => p.fastscan(base),
+        None => base.clone(),
+    }
+}
+
+/// Resolve per-request overrides against IVF defaults into the concrete
+/// `(nprobe, ef_search, FastScanParams)` triple `IvfPq4::search_with`
+/// takes — the single definition shared by the index layer
+/// (`IndexIvfPq4::search`) and the coordinator (`IvfBackend`).
+pub fn effective_ivf(
+    params: Option<&SearchParams>,
+    default_nprobe: usize,
+    base: &FastScanParams,
+) -> (usize, Option<usize>, FastScanParams) {
+    (
+        params.and_then(|p| p.nprobe).unwrap_or(default_nprobe),
+        params.and_then(|p| p.ef_search),
+        effective_fastscan(base, params),
+    )
+}
+
+/// One search call as a value: a query batch, `k`, and optional per-request
+/// parameter overrides. Built fluently:
+///
+/// ```ignore
+/// let req = SearchRequest::new(&queries, 10).nprobe(8).rerank(false);
+/// let result = index.search_req(&req)?;
+/// ```
+#[derive(Clone, Debug)]
+pub struct SearchRequest<'a> {
+    /// Row-major `nq × dim` query batch.
+    pub queries: &'a [f32],
+    pub k: usize,
+    pub params: Option<SearchParams>,
+}
+
+impl<'a> SearchRequest<'a> {
+    pub fn new(queries: &'a [f32], k: usize) -> Self {
+        Self { queries, k, params: None }
+    }
+
+    /// Replace the whole override set.
+    pub fn with_params(mut self, params: SearchParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    fn params_mut(&mut self) -> &mut SearchParams {
+        self.params.get_or_insert_with(SearchParams::default)
+    }
+
+    pub fn nprobe(mut self, v: usize) -> Self {
+        self.params_mut().nprobe = Some(v);
+        self
+    }
+
+    pub fn ef_search(mut self, v: usize) -> Self {
+        self.params_mut().ef_search = Some(v);
+        self
+    }
+
+    pub fn backend(mut self, v: Backend) -> Self {
+        self.params_mut().backend = Some(v);
+        self
+    }
+
+    pub fn rerank(mut self, v: bool) -> Self {
+        self.params_mut().rerank = Some(v);
+        self
+    }
+
+    pub fn reservoir_factor(mut self, v: usize) -> Self {
+        self.params_mut().reservoir_factor = Some(v);
+        self
+    }
+
+    pub fn refine_factor(mut self, v: usize) -> Self {
+        self.params_mut().refine_factor = Some(v);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_parses_every_key() {
+        let mut p = SearchParams::new();
+        for (k, v) in [
+            ("nprobe", "8"),
+            ("ef_search", "64"),
+            ("backend", "portable"),
+            ("rerank", "false"),
+            ("reservoir_factor", "16"),
+            ("refine_factor", "4"),
+        ] {
+            p.assign(k, v).unwrap();
+        }
+        assert_eq!(p.nprobe, Some(8));
+        assert_eq!(p.ef_search, Some(64));
+        assert_eq!(p.backend, Some(Backend::Portable));
+        assert_eq!(p.rerank, Some(false));
+        assert_eq!(p.reservoir_factor, Some(16));
+        assert_eq!(p.refine_factor, Some(4));
+    }
+
+    #[test]
+    fn assign_rejects_bad_input() {
+        let mut p = SearchParams::new();
+        assert!(p.assign("nprobe", "abc").is_err());
+        assert!(p.assign("rerank", "banana").is_err());
+        assert!(p.assign("backend", "avx512").is_err());
+        assert!(p.assign("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn bounds_reject_absurd_values() {
+        assert!(SearchParams::new().with_nprobe(64).validate_bounds().is_ok());
+        assert!(SearchParams::new()
+            .with_reservoir_factor(100_000_000_000_000)
+            .validate_bounds()
+            .is_err());
+        assert!(SearchParams::new().with_ef_search(usize::MAX).validate_bounds().is_err());
+        assert!(SearchParams::new().validate_bounds().is_ok());
+        // the portable backend is always available; a backend this host
+        // lacks must be rejected at the boundary (UB to dispatch it)
+        assert!(SearchParams::new().with_backend(Backend::Portable).validate_bounds().is_ok());
+        if let Some(missing) =
+            [Backend::Ssse3, Backend::Neon].into_iter().find(|b| !b.is_available())
+        {
+            assert!(SearchParams::new().with_backend(missing).validate_bounds().is_err());
+        }
+        // per-factor limits pass but the k × factor product is capped:
+        // reservoir/refine shortlists allocate O(k × factor) per query
+        let p = SearchParams::new().with_reservoir_factor(65_536);
+        assert!(p.validate_bounds().is_ok());
+        assert!(p.validate_for_request(10).is_ok());
+        assert!(p.validate_for_request(1024).is_err());
+        assert!(SearchParams::new()
+            .with_refine_factor(65_536)
+            .validate_for_request(1024)
+            .is_err());
+    }
+
+    #[test]
+    fn to_kv_roundtrips_through_assign() {
+        let p = SearchParams::new()
+            .with_nprobe(4)
+            .with_backend(Backend::Portable)
+            .with_rerank(true)
+            .with_reservoir_factor(32);
+        let kv = p.to_kv();
+        let q = SearchParams::from_kv(kv.iter().map(|(k, v)| (*k, v.as_str()))).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn fastscan_overrides_only_set_fields() {
+        let base = FastScanParams {
+            backend: Backend::Portable,
+            rerank: true,
+            reservoir_factor: 8,
+        };
+        let p = SearchParams::new().with_reservoir_factor(64);
+        let eff = p.fastscan(&base);
+        assert_eq!(eff.backend, Backend::Portable);
+        assert!(eff.rerank);
+        assert_eq!(eff.reservoir_factor, 64);
+        // empty params → identical to base
+        let eff2 = effective_fastscan(&base, None);
+        assert_eq!(eff2.reservoir_factor, 8);
+    }
+
+    #[test]
+    fn request_builder_collects_overrides() {
+        let q = [0.0f32; 8];
+        let req = SearchRequest::new(&q, 5).nprobe(2).rerank(false);
+        let p = req.params.as_ref().unwrap();
+        assert_eq!(p.nprobe, Some(2));
+        assert_eq!(p.rerank, Some(false));
+        assert_eq!(req.k, 5);
+        assert!(SearchRequest::new(&q, 5).params.is_none());
+    }
+}

@@ -1,12 +1,16 @@
 //! PQ-backed index types: the naive-scan baseline, the 4-bit fastscan
 //! index, and the IVF(+HNSW) composition — the three systems compared in
 //! the paper's evaluation.
+//!
+//! All three follow the build-then-query lifecycle: `train`/`add` mutate,
+//! `seal` packs staged codes, and `search(&self, …)` is read-only with
+//! per-request [`SearchParams`] overrides.
 
-use super::{Index, SearchResult};
+use super::params::{effective_fastscan, effective_ivf};
+use super::{Index, SearchParams, SearchResult};
 use crate::ivf::{IvfParams, IvfPq4};
 use crate::pq::fastscan::{search_fastscan_with_luts, FastScanParams};
 use crate::pq::{search_adc, PackedCodes4, PqParams, ProductQuantizer};
-use crate::simd::Backend;
 use crate::{Error, Result};
 
 /// "Original PQ" (paper Fig. 2 baseline): flat codes + in-memory f32 LUT
@@ -55,12 +59,20 @@ impl Index for IndexPq {
         Ok(())
     }
 
-    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+    fn search(
+        &self,
+        queries: &[f32],
+        k: usize,
+        _params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if queries.len() % self.dim != 0 {
             return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
         }
         let nq = queries.len() / self.dim;
+        if k == 0 || nq == 0 || self.ntotal == 0 {
+            return Ok(SearchResult::empty(nq, k));
+        }
         let mut distances = Vec::with_capacity(nq * k);
         let mut labels = Vec::with_capacity(nq * k);
         for q in queries.chunks(self.dim) {
@@ -69,7 +81,6 @@ impl Index for IndexPq {
             distances.extend(d);
             labels.extend(l);
         }
-        let _ = nq;
         Ok(SearchResult { k, distances, labels })
     }
 
@@ -89,9 +100,11 @@ impl Index for IndexPq {
 pub struct IndexPq4FastScan {
     dim: usize,
     params: PqParams,
+    /// Default kernel parameters (per-request [`SearchParams`] override
+    /// them without touching this).
     pub fastscan: FastScanParams,
     pq: Option<ProductQuantizer>,
-    /// Flat staging codes; re-packed lazily after adds.
+    /// Flat staging codes; packed into the SIMD layout by [`Self::seal`].
     staging: Vec<u8>,
     packed: Option<PackedCodes4>,
     ntotal: usize,
@@ -120,13 +133,14 @@ impl IndexPq4FastScan {
         &self.staging
     }
 
-    /// Rebuild from persisted parts (trained PQ + flat codes).
+    /// Rebuild from persisted parts (trained PQ + flat codes). The result
+    /// is sealed and ready to serve.
     pub fn from_parts(pq: ProductQuantizer, codes: Vec<u8>) -> Result<Self> {
         if codes.len() % pq.m != 0 {
             return Err(Error::InvalidParameter("codes not divisible by m".into()));
         }
         let ntotal = codes.len() / pq.m;
-        Ok(Self {
+        let mut index = Self {
             dim: pq.dim,
             params: PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed: 0 },
             fastscan: FastScanParams::default(),
@@ -134,15 +148,24 @@ impl IndexPq4FastScan {
             staging: codes,
             packed: None,
             ntotal,
-        })
+        };
+        index.seal()?;
+        Ok(index)
     }
 
-    fn seal(&mut self) -> Result<()> {
+    /// Pack the staged codes into the kernel's interleaved layout.
+    /// Idempotent: a second call on an already-sealed index is a no-op.
+    pub fn seal(&mut self) -> Result<()> {
         if self.packed.is_none() && !self.staging.is_empty() {
             let m = self.pq.as_ref().ok_or(Error::NotTrained)?.m;
             self.packed = Some(PackedCodes4::pack(&self.staging, m)?);
         }
         Ok(())
+    }
+
+    /// Whether all staged codes are packed (searchable without reseal).
+    pub fn is_sealed(&self) -> bool {
+        self.packed.is_some() || self.staging.is_empty()
     }
 }
 
@@ -173,29 +196,34 @@ impl Index for IndexPq4FastScan {
         Ok(())
     }
 
-    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
-        self.seal()?;
+    fn seal(&mut self) -> Result<()> {
+        IndexPq4FastScan::seal(self)
+    }
+
+    fn search(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if queries.len() % self.dim != 0 {
             return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
         }
+        let nq = queries.len() / self.dim;
+        if k == 0 || nq == 0 || self.ntotal == 0 {
+            return Ok(SearchResult::empty(nq, k));
+        }
         let packed = match &self.packed {
             Some(p) => p,
-            None => {
-                // empty index
-                let nq = queries.len() / self.dim;
-                return Ok(SearchResult {
-                    k,
-                    distances: vec![f32::INFINITY; nq * k],
-                    labels: vec![-1; nq * k],
-                });
-            }
+            None => return Err(Error::NotSealed),
         };
-        let mut distances = Vec::new();
-        let mut labels = Vec::new();
+        let fs = effective_fastscan(&self.fastscan, params);
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
         for q in queries.chunks(self.dim) {
             let luts = pq.compute_luts(q);
-            let (d, l) = search_fastscan_with_luts(pq, packed, &luts, k, &self.fastscan, None);
+            let (d, l) = search_fastscan_with_luts(pq, packed, &luts, k, &fs, None);
             distances.extend(d);
             labels.extend(l);
         }
@@ -204,19 +232,10 @@ impl Index for IndexPq4FastScan {
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
-            "rerank" => {
-                self.fastscan.rerank = value == "true" || value == "1";
-                Ok(())
-            }
-            "reservoir_factor" => {
-                self.fastscan.reservoir_factor = value
-                    .parse()
-                    .map_err(|_| Error::InvalidParameter(format!("bad {key}={value}")))?;
-                Ok(())
-            }
-            "backend" => {
-                self.fastscan.backend = Backend::parse(value)
-                    .ok_or_else(|| Error::InvalidParameter(format!("bad backend {value}")))?;
+            "rerank" | "reservoir_factor" | "backend" => {
+                let mut p = SearchParams::default();
+                p.assign(key, value)?;
+                self.fastscan = p.fastscan(&self.fastscan);
                 Ok(())
             }
             _ => Err(Error::InvalidParameter(format!("unknown parameter {key}"))),
@@ -271,36 +290,36 @@ impl Index for IndexIvfPq4 {
         self.inner.add(data)
     }
 
-    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
-        let (distances, labels) = self.inner.search(queries, k)?;
+    fn seal(&mut self) -> Result<()> {
+        self.inner.seal()
+    }
+
+    fn search(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
+        // search_with handles all degenerate cases (untrained, dim
+        // mismatch, k == 0, empty batch, empty index) with the same
+        // semantics as the other indexes
+        let (nprobe, ef_search, fs) = effective_ivf(params, self.inner.nprobe, &self.inner.fastscan);
+        let (distances, labels) = self.inner.search_with(queries, k, nprobe, ef_search, &fs)?;
         Ok(SearchResult { k, distances, labels })
     }
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
+        let mut p = SearchParams::default();
+        p.assign(key, value)?;
         match key {
-            "nprobe" => {
-                self.inner.nprobe = value
-                    .parse()
-                    .map_err(|_| Error::InvalidParameter(format!("bad nprobe {value}")))?;
-                Ok(())
+            "nprobe" => self.inner.nprobe = p.nprobe.unwrap(),
+            "ef_search" => self.inner.set_ef_search(p.ef_search.unwrap()),
+            "rerank" | "reservoir_factor" | "backend" => {
+                self.inner.fastscan = p.fastscan(&self.inner.fastscan)
             }
-            "rerank" => {
-                self.inner.fastscan.rerank = value == "true" || value == "1";
-                Ok(())
-            }
-            "reservoir_factor" => {
-                self.inner.fastscan.reservoir_factor = value
-                    .parse()
-                    .map_err(|_| Error::InvalidParameter(format!("bad {key}={value}")))?;
-                Ok(())
-            }
-            "backend" => {
-                self.inner.fastscan.backend = Backend::parse(value)
-                    .ok_or_else(|| Error::InvalidParameter(format!("bad backend {value}")))?;
-                Ok(())
-            }
-            _ => Err(Error::InvalidParameter(format!("unknown parameter {key}"))),
+            _ => return Err(Error::InvalidParameter(format!("unknown parameter {key}"))),
         }
+        Ok(())
     }
 
     fn describe(&self) -> String {
@@ -335,12 +354,13 @@ mod tests {
         let mut naive = IndexPq::new(ds.dim, PqParams::new_4bit(8));
         naive.train(&ds.base).unwrap();
         naive.add(&ds.base).unwrap();
-        let rn = naive.search(&ds.queries, 10).unwrap();
+        let rn = naive.search(&ds.queries, 10, None).unwrap();
 
         let mut fast = IndexPq4FastScan::new(ds.dim, 8);
         fast.train(&ds.base).unwrap();
         fast.add(&ds.base).unwrap();
-        let rf = fast.search(&ds.queries, 10).unwrap();
+        fast.seal().unwrap();
+        let rf = fast.search(&ds.queries, 10, None).unwrap();
 
         let rec_n = recall_at_r(&gt, 1, &rn.labels, 10, 10);
         let rec_f = recall_at_r(&gt, 1, &rf.labels, 10, 10);
@@ -357,11 +377,31 @@ mod tests {
         assert!(!idx.is_trained());
         idx.train(&ds.train).unwrap();
         idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
         assert_eq!(idx.ntotal(), 1200);
         idx.set_param("nprobe", "8").unwrap();
-        let r = idx.search(&ds.queries, 5).unwrap();
+        let r = idx.search(&ds.queries, 5, None).unwrap();
         assert_eq!(r.nq(), 20);
         assert!(idx.describe().contains("nprobe=8"));
+    }
+
+    #[test]
+    fn per_request_params_override_defaults() {
+        let ds = SyntheticDataset::gaussian(1200, 20, 16, 105);
+        let mut idx = IndexIvfPq4::new(ds.dim, 8, 4, false, 16);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        // default nprobe = 1; full-probe override must not mutate the index
+        let wide = SearchParams::new().with_nprobe(8).with_reservoir_factor(32);
+        let r_wide = idx.search(&ds.queries, 5, Some(&wide)).unwrap();
+        assert_eq!(idx.inner().nprobe, 1, "per-request params leaked into defaults");
+        // the override matches setting the same values as defaults
+        idx.set_param("nprobe", "8").unwrap();
+        idx.set_param("reservoir_factor", "32").unwrap();
+        let r_default = idx.search(&ds.queries, 5, None).unwrap();
+        assert_eq!(r_wide.labels, r_default.labels);
+        assert_eq!(r_wide.distances, r_default.distances);
     }
 
     #[test]
@@ -379,8 +419,53 @@ mod tests {
         let mut idx = IndexPq4FastScan::new(16, 4);
         let ds = SyntheticDataset::gaussian(100, 2, 16, 103);
         idx.train(&ds.base).unwrap();
-        let r = idx.search(&ds.queries, 3).unwrap();
+        let r = idx.search(&ds.queries, 3, None).unwrap();
         assert!(r.labels.iter().all(|&l| l == -1));
+    }
+
+    #[test]
+    fn unsealed_search_errors_not_silently_repacks() {
+        let ds = SyntheticDataset::gaussian(300, 5, 16, 106);
+        let mut idx = IndexPq4FastScan::new(ds.dim, 4);
+        idx.train(&ds.base).unwrap();
+        idx.add(&ds.base).unwrap();
+        assert!(!idx.is_sealed());
+        let err = idx.search(&ds.queries, 3, None).unwrap_err();
+        assert!(matches!(err, Error::NotSealed), "{err}");
+        idx.seal().unwrap();
+        assert!(idx.is_sealed());
+        idx.seal().unwrap(); // idempotent
+        let r = idx.search(&ds.queries, 3, None).unwrap();
+        assert_eq!(r.nq(), 5);
+        // adds dirty the seal again
+        idx.add(&ds.base[..ds.dim * 2]).unwrap();
+        assert!(!idx.is_sealed());
+        assert!(matches!(idx.search(&ds.queries, 3, None), Err(Error::NotSealed)));
+    }
+
+    #[test]
+    fn degenerate_searches_consistent() {
+        let ds = SyntheticDataset::gaussian(400, 4, 16, 107);
+        let mut fast = IndexPq4FastScan::new(ds.dim, 4);
+        fast.train(&ds.base).unwrap();
+        fast.add(&ds.base).unwrap();
+        fast.seal().unwrap();
+        let mut naive = IndexPq::new(ds.dim, PqParams::new_4bit(4));
+        naive.train(&ds.base).unwrap();
+        naive.add(&ds.base).unwrap();
+        let mut ivf = IndexIvfPq4::new(ds.dim, 4, 4, false, 8);
+        ivf.train(&ds.base).unwrap();
+        ivf.add(&ds.base).unwrap();
+        ivf.seal().unwrap();
+        let indexes: [&dyn Index; 3] = [&fast, &naive, &ivf];
+        for idx in indexes {
+            // k == 0 → zero-size result, no error, nq() well-defined
+            let r = idx.search(&ds.queries, 0, None).unwrap();
+            assert_eq!((r.k, r.nq(), r.labels.len()), (0, 0, 0), "{}", idx.describe());
+            // empty batch → zero-size result
+            let r = idx.search(&[], 5, None).unwrap();
+            assert_eq!((r.k, r.nq()), (5, 0), "{}", idx.describe());
+        }
     }
 
     #[test]
@@ -397,7 +482,7 @@ mod tests {
         let mut idx = IndexPq::new(ds.dim, PqParams::new_8bit(4));
         idx.train(&ds.base).unwrap();
         idx.add(&ds.base).unwrap();
-        let r = idx.search(&ds.queries, 5).unwrap();
+        let r = idx.search(&ds.queries, 5, None).unwrap();
         assert_eq!(r.nq(), 10);
         assert!(idx.describe().starts_with("PQ4x8"));
     }

@@ -7,7 +7,7 @@
 //! re-rank the shortlist with exact distances. This wrapper makes that a
 //! first-class index type.
 
-use super::{Index, SearchResult};
+use super::{Index, SearchParams, SearchResult};
 use crate::util::topk::TopK;
 use crate::{Error, Result};
 
@@ -16,7 +16,8 @@ pub struct IndexRefineFlat {
     base: Box<dyn Index>,
     /// Raw vectors, indexed by the base index's sequential labels.
     vectors: Vec<f32>,
-    /// Shortlist width multiplier (search k·factor through the base).
+    /// Default shortlist width multiplier (search k·factor through the
+    /// base); per-request `SearchParams::refine_factor` overrides it.
     pub refine_factor: usize,
 }
 
@@ -49,13 +50,28 @@ impl Index for IndexRefineFlat {
         Ok(())
     }
 
-    fn search(&mut self, queries: &[f32], k: usize) -> Result<SearchResult> {
+    fn seal(&mut self) -> Result<()> {
+        self.base.seal()
+    }
+
+    fn search(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
         let dim = self.base.dim();
         if queries.len() % dim != 0 {
             return Err(Error::DimMismatch { expected: dim, got: queries.len() % dim });
         }
-        let shortlist_k = (k * self.refine_factor).max(k);
-        let coarse = self.base.search(queries, shortlist_k)?;
+        let nq_in = queries.len() / dim;
+        if k == 0 || nq_in == 0 || self.ntotal() == 0 {
+            return Ok(SearchResult::empty(nq_in, k));
+        }
+        let refine_factor =
+            params.and_then(|p| p.refine_factor).unwrap_or(self.refine_factor);
+        let shortlist_k = (k * refine_factor).max(k);
+        let coarse = self.base.search(queries, shortlist_k, params)?;
         let nq = coarse.nq();
         let mut distances = Vec::with_capacity(nq * k);
         let mut labels = Vec::with_capacity(nq * k);
@@ -79,9 +95,9 @@ impl Index for IndexRefineFlat {
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "refine_factor" => {
-                self.refine_factor = value
-                    .parse()
-                    .map_err(|_| Error::InvalidParameter(format!("bad refine_factor {value}")))?;
+                let mut p = SearchParams::default();
+                p.assign(key, value)?;
+                self.refine_factor = p.refine_factor.unwrap();
                 Ok(())
             }
             _ => self.base.set_param(key, value),
@@ -108,14 +124,16 @@ mod tests {
         let mut plain = index_factory(ds.dim, "PQ8x4fs").unwrap();
         plain.train(&ds.train).unwrap();
         plain.add(&ds.base).unwrap();
-        let rp = plain.search(&ds.queries, 10).unwrap();
+        plain.seal().unwrap();
+        let rp = plain.search(&ds.queries, 10, None).unwrap();
         let rec_plain = recall_at_r(&gt, 1, &rp.labels, 10, 1);
 
         let mut refined = IndexRefineFlat::new(index_factory(ds.dim, "PQ8x4fs").unwrap());
         refined.refine_factor = 16;
         refined.train(&ds.train).unwrap();
         refined.add(&ds.base).unwrap();
-        let rr = refined.search(&ds.queries, 10).unwrap();
+        refined.seal().unwrap();
+        let rr = refined.search(&ds.queries, 10, None).unwrap();
         let rec_refined = recall_at_r(&gt, 1, &rr.labels, 10, 1);
 
         assert!(
@@ -135,7 +153,8 @@ mod tests {
         let mut refined = IndexRefineFlat::new(index_factory(ds.dim, "PQ4x4fs").unwrap());
         refined.train(&ds.train).unwrap();
         refined.add(&ds.base).unwrap();
-        let r = refined.search(&ds.queries, 3).unwrap();
+        refined.seal().unwrap();
+        let r = refined.search(&ds.queries, 3, None).unwrap();
         for qi in 0..5 {
             for (j, &label) in r.row(qi).iter().enumerate() {
                 if label < 0 {

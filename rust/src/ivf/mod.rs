@@ -28,8 +28,17 @@ pub enum CoarseQuantizer {
 }
 
 impl CoarseQuantizer {
-    /// `nprobe` nearest centroids, ascending by distance.
-    fn assign(&self, centroids: &[f32], nlist: usize, dim: usize, q: &[f32], nprobe: usize) -> Vec<usize> {
+    /// `nprobe` nearest centroids, ascending by distance. `ef_override`
+    /// (per-request) replaces the stored HNSW candidate-list width.
+    fn assign(
+        &self,
+        centroids: &[f32],
+        nlist: usize,
+        dim: usize,
+        q: &[f32],
+        nprobe: usize,
+        ef_override: Option<usize>,
+    ) -> Vec<usize> {
         match self {
             CoarseQuantizer::Flat => {
                 let mut heap = TopK::new(nprobe.min(nlist));
@@ -40,7 +49,10 @@ impl CoarseQuantizer {
                 heap.into_sorted().1.into_iter().filter(|&l| l >= 0).map(|l| l as usize).collect()
             }
             CoarseQuantizer::Hnsw { graph, ef_search } => {
-                let ef = (*ef_search).max(4 * nprobe);
+                // same resolution for both surfaces (stored default and
+                // per-request override): the 4×nprobe auto floor applies
+                // either way, so shim-set and per-request ef_search agree
+                let ef = ef_override.unwrap_or(*ef_search).max(4 * nprobe);
                 let (_d, ids) = graph.search(q, nprobe, ef);
                 ids.into_iter().filter(|&l| l >= 0).map(|l| l as usize).collect()
             }
@@ -89,8 +101,14 @@ pub struct IvfPq4 {
     coarse: CoarseQuantizer,
     lists: Vec<IvfList>,
     ntotal: usize,
-    /// Runtime search width (paper Table 1 sweeps 1, 2, 4).
+    /// Default search width (paper Table 1 sweeps 1, 2, 4); per-request
+    /// values passed to [`IvfPq4::search_with`] override it per call.
     pub nprobe: usize,
+    /// Default HNSW coarse candidate-list width (0 = auto: 4×nprobe).
+    /// Carried here so it survives being set before `train()` builds the
+    /// coarse graph; [`IvfPq4::set_ef_search`] keeps both in sync.
+    ef_default: usize,
+    /// Default kernel parameters (overridden per call the same way).
     pub fastscan: FastScanParams,
 }
 
@@ -106,6 +124,7 @@ impl IvfPq4 {
             lists: Vec::new(),
             ntotal: 0,
             nprobe: 1,
+            ef_default: 0,
             fastscan: FastScanParams::default(),
         }
     }
@@ -143,7 +162,7 @@ impl IvfPq4 {
                 },
             );
             graph.add_batch(&self.centroids)?;
-            CoarseQuantizer::Hnsw { graph, ef_search: 0 }
+            CoarseQuantizer::Hnsw { graph, ef_search: self.ef_default }
         } else {
             CoarseQuantizer::Flat
         };
@@ -192,7 +211,8 @@ impl IvfPq4 {
         Ok(())
     }
 
-    /// Pack any dirty lists (idempotent; done lazily by search otherwise).
+    /// Pack any dirty lists — ends the build phase. Idempotent: sealing an
+    /// already-sealed index is a no-op.
     pub fn seal(&mut self) -> Result<()> {
         let m = self.pq.as_ref().ok_or(Error::NotTrained)?.m;
         for list in &mut self.lists {
@@ -203,35 +223,80 @@ impl IvfPq4 {
         Ok(())
     }
 
-    /// Search a batch of queries (`nq × dim`), returning `(distances,
-    /// labels)` each `nq × k`. Lists must be sealed (done automatically).
-    pub fn search(&mut self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
-        self.seal()?;
-        self.search_sealed(queries, k)
+    /// Whether every non-empty list is packed (searchable without reseal).
+    pub fn is_sealed(&self) -> bool {
+        self.lists.iter().all(|l| l.packed.is_some() || l.ids.is_empty())
     }
 
-    /// Immutable search (lists must already be sealed via [`IvfPq4::seal`]).
-    pub fn search_sealed(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+    /// Set the default HNSW coarse candidate-list width (0 = auto:
+    /// 4×nprobe). Takes effect whether called before or after `train()`;
+    /// meaningless (but harmless) with a flat coarse quantizer.
+    pub fn set_ef_search(&mut self, ef: usize) {
+        self.ef_default = ef;
+        if let CoarseQuantizer::Hnsw { ef_search, .. } = &mut self.coarse {
+            *ef_search = ef;
+        }
+    }
+
+    /// Search a batch of queries (`nq × dim`) with the index's default
+    /// parameters, returning `(distances, labels)` each `nq × k`.
+    ///
+    /// Read-only: the index must be sealed ([`IvfPq4::seal`]) — searching
+    /// with unpacked staged codes returns [`Error::NotSealed`] instead of
+    /// silently repacking.
+    pub fn search(&self, queries: &[f32], k: usize) -> Result<(Vec<f32>, Vec<i64>)> {
+        self.search_with(queries, k, self.nprobe, None, &self.fastscan)
+    }
+
+    /// [`IvfPq4::search`] with explicit per-request parameters: probe
+    /// width, optional HNSW candidate-list width, and kernel parameters.
+    /// This is the kernel-layer entry the typed `SearchParams` of the
+    /// index layer resolves into.
+    pub fn search_with(
+        &self,
+        queries: &[f32],
+        k: usize,
+        nprobe: usize,
+        ef_search: Option<usize>,
+        fastscan: &FastScanParams,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if queries.len() % self.dim != 0 {
             return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
         }
         let nq = queries.len() / self.dim;
+        if k == 0 || nq == 0 {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        if self.ntotal == 0 {
+            return Ok((vec![f32::INFINITY; nq * k], vec![-1; nq * k]));
+        }
+        if !self.is_sealed() {
+            return Err(Error::NotSealed);
+        }
         let mut dists = Vec::with_capacity(nq * k);
         let mut labels = Vec::with_capacity(nq * k);
         for qi in 0..nq {
             let q = &queries[qi * self.dim..(qi + 1) * self.dim];
-            let (d, l) = self.search_one(pq, q, k);
+            let (d, l) = self.search_one(pq, q, k, nprobe.max(1), ef_search, fastscan);
             dists.extend(d);
             labels.extend(l);
         }
         Ok((dists, labels))
     }
 
-    fn search_one(&self, pq: &ProductQuantizer, q: &[f32], k: usize) -> (Vec<f32>, Vec<i64>) {
+    fn search_one(
+        &self,
+        pq: &ProductQuantizer,
+        q: &[f32],
+        k: usize,
+        nprobe: usize,
+        ef_search: Option<usize>,
+        fastscan: &FastScanParams,
+    ) -> (Vec<f32>, Vec<i64>) {
         // 1. coarse quantization (paper §4 step 1-2)
         let probes =
-            self.coarse.assign(&self.centroids, self.params.nlist, self.dim, q, self.nprobe);
+            self.coarse.assign(&self.centroids, self.params.nlist, self.dim, q, nprobe, ef_search);
 
         // 2. one LUT set shared across probed lists (by_residual = false)
         let luts_f32 = pq.compute_luts(q);
@@ -240,18 +305,18 @@ impl IvfPq4 {
         let kluts = KernelLuts::build(&qluts, m_pad);
 
         // 3. fastscan distance estimation over each probed list
-        let mut reservoir = U16Reservoir::new(k, self.fastscan.reservoir_factor);
+        let mut reservoir = U16Reservoir::new(k, fastscan.reservoir_factor);
         for &c in &probes {
             let list = &self.lists[c];
             if let Some(packed) = &list.packed {
-                scan_into_reservoir(packed, &kluts, self.fastscan.backend, Some(&list.ids), &mut reservoir);
+                scan_into_reservoir(packed, &kluts, fastscan.backend, Some(&list.ids), &mut reservoir);
             }
         }
         let cands = reservoir.into_candidates();
 
         // 4. re-rank with exact f32 tables
         let mut heap = TopK::new(k);
-        if self.fastscan.rerank {
+        if fastscan.rerank {
             // locate each candidate's codes: build per-search map id -> (list, pos)
             // (lists are small relative to ntotal; map only over probed lists)
             let mut codes_buf = vec![0u8; pq.m];
@@ -297,8 +362,9 @@ impl IvfPq4 {
         (&self.lists[c].ids, &self.lists[c].staging)
     }
 
-    /// Rebuild from persisted parts. The HNSW coarse graph is rebuilt from
-    /// the centroids (deterministic for a fixed seed).
+    /// Rebuild from persisted parts; the result is sealed and ready to
+    /// serve. The HNSW coarse graph is rebuilt from the centroids
+    /// (deterministic for a fixed seed).
     pub fn from_parts(
         dim: usize,
         params: IvfParams,
@@ -329,7 +395,7 @@ impl IvfPq4 {
             .into_iter()
             .map(|(ids, staging)| IvfList { ids, staging, packed: None })
             .collect();
-        Ok(Self {
+        let mut index = Self {
             dim,
             params,
             pq_params,
@@ -339,8 +405,11 @@ impl IvfPq4 {
             lists,
             ntotal,
             nprobe: 1,
+            ef_default: 0,
             fastscan: FastScanParams::default(),
-        })
+        };
+        index.seal()?;
+        Ok(index)
     }
 
     /// Occupancy histogram stats: (min, mean, max) list length.
@@ -412,6 +481,7 @@ mod tests {
         let mut idx = IvfPq4::new(dim, params, PqParams::new_4bit(m));
         idx.train(&data).unwrap();
         idx.add(&data).unwrap();
+        idx.seal().unwrap();
         (idx, data)
     }
 
@@ -509,15 +579,32 @@ mod tests {
     }
 
     #[test]
-    fn incremental_add_after_search() {
+    fn incremental_add_requires_reseal() {
         let (mut idx, data) = build(1000, 16, 8, 4, false, 64);
         let (_, _) = idx.search(&data[..16], 1).unwrap();
-        // add more, search again — repack must trigger
+        // add more: the index is dirty again and must refuse to search
         let extra = clustered_data(64, 16, 32, 65);
         idx.add(&extra).unwrap();
         assert_eq!(idx.ntotal(), 1064);
+        assert!(!idx.is_sealed());
+        assert!(matches!(idx.search(&extra[..16], 1), Err(crate::Error::NotSealed)));
+        idx.seal().unwrap();
         let (_d, l) = idx.search(&extra[..16], 1).unwrap();
         assert!(l[0] >= 0);
+    }
+
+    #[test]
+    fn per_request_overrides_beat_defaults() {
+        let (idx, data) = build(2000, 16, 16, 8, false, 70);
+        // defaults: nprobe=1; explicit wide probe must cover all lists
+        let wide = FastScanParams { reservoir_factor: 64, ..idx.fastscan.clone() };
+        let q = &data[..16];
+        let (_d1, _l1) = idx.search(q, 5).unwrap();
+        let (_d2, l2) = idx.search_with(q, 5, 16, None, &wide).unwrap();
+        // the wide search finds the true nearest (query = base row 0)
+        assert!(l2.contains(&0), "full probe missed exact match: {l2:?}");
+        // defaults untouched
+        assert_eq!(idx.nprobe, 1);
     }
 
     #[test]
@@ -527,6 +614,7 @@ mod tests {
         idx.train(&data).unwrap();
         let ids: Vec<i64> = (0..500).map(|i| 10_000 + i).collect();
         idx.add_with_ids(&data, &ids).unwrap();
+        idx.seal().unwrap();
         let (_d, l) = idx.search(&data[..16], 5).unwrap();
         assert!(l.iter().all(|&x| x >= 10_000));
     }

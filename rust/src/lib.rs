@@ -18,17 +18,40 @@
 //!
 //! ## Quickstart
 //!
+//! Indexes have a mutable **build** phase (`train` → `add` → `seal`) and
+//! an immutable **query** phase: `search` takes `&self` and per-request
+//! [`index::SearchParams`], so a sealed index can be shared behind
+//! `Arc<dyn Index>` and searched from many threads concurrently.
+//!
 //! ```no_run
-//! use armpq::index::{Index, factory};
+//! use armpq::index::{Index, SearchParams, factory};
 //! use armpq::datasets::synthetic::SyntheticDataset;
+//! use std::sync::Arc;
 //!
 //! let ds = SyntheticDataset::sift_like(10_000, 100, 123);
-//! let mut index = factory::index_factory(ds.dim, "PQ16x4fs").unwrap();
+//! // build phase (&mut): train, add, then seal once
+//! let mut index = factory::index_factory(ds.dim, "IVF100,PQ16x4fs").unwrap();
 //! index.train(&ds.train).unwrap();
 //! index.add(&ds.base).unwrap();
-//! let result = index.search(&ds.queries, 10).unwrap();
+//! index.seal().unwrap();
+//! // query phase (&self): read-only, tunable per request
+//! let result = index.search(&ds.queries, 10, None).unwrap();
 //! println!("top-1 of q0 = {}", result.labels[0]);
+//! let wide = SearchParams::new().with_nprobe(16);
+//! let better = index.search(&ds.queries, 10, Some(&wide)).unwrap();
+//! // share across threads lock-free
+//! let shared: Arc<dyn Index> = Arc::from(index);
+//! let handle = {
+//!     let shared = shared.clone();
+//!     let q = ds.queries.clone();
+//!     std::thread::spawn(move || shared.search(&q, 10, None).unwrap())
+//! };
+//! # let _ = (better, handle);
 //! ```
+//!
+//! The string-keyed `set_param(key, value)` API survives as a
+//! compatibility shim that parses into the same typed struct; prefer
+//! passing [`index::SearchParams`] per call.
 
 pub mod config;
 pub mod coordinator;

@@ -147,6 +147,9 @@ fn search(args: &Args) -> armpq::Result<()> {
         if !backend.is_available() {
             eprintln!("warning: backend {backend} not available on this host; kernel falls back to portable semantics");
         }
+        // capability probe: the per-request params carry the same value to
+        // the search below, so this shim call only exists to warn when the
+        // index type has no backend knob at all (the value itself agrees)
         if let Err(e) = idx.set_param("backend", backend.name()) {
             eprintln!("warning: --backend ignored for this index type: {e}");
         }
@@ -156,13 +159,23 @@ fn search(args: &Args) -> armpq::Result<()> {
     println!("trained {} in {:.1}s", idx.describe(), t.elapsed_s());
     let t = Timer::start();
     idx.add(&ds.base)?;
-    println!("added {} vectors in {:.1}s", idx.ntotal(), t.elapsed_s());
-    if cfg.nprobe > 0 {
+    idx.seal()?;
+    println!("added+sealed {} vectors in {:.1}s", idx.ntotal(), t.elapsed_s());
+    // Explicitly-given knobs (CLI or config file) become per-request
+    // overrides; implicit defaults never shadow factory-string defaults
+    // like "IVF100,PQ16x4fs,nprobe=8". The historical implicit default
+    // (nprobe=4, matching `armpq serve`) still applies as an index
+    // default when neither the user nor the factory string set one.
+    let spec_sets_nprobe = armpq::index::factory::spec_search_params(&cfg.factory)
+        .map(|p| p.nprobe.is_some())
+        .unwrap_or(false);
+    if !cfg.nprobe_explicit && !spec_sets_nprobe && cfg.nprobe > 0 {
         let _ = idx.set_param("nprobe", &cfg.nprobe.to_string());
     }
+    let params = cfg.search_params();
     let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
     let t = Timer::start();
-    let r = idx.search(&ds.queries, cfg.k)?;
+    let r = idx.search(&ds.queries, cfg.k, Some(&params))?;
     let ms = t.elapsed_ms() / cfg.nq as f64;
     println!(
         "recall@1 {:.3}  recall@{} {:.3}  {:.3} ms/query  {:.0} QPS",
