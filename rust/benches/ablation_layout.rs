@@ -1,11 +1,16 @@
-//! Ablation: interleaved block layout + SIMD vs flat 4-bit codes + scalar
-//! gather ("we must carefully maintain the code layout", paper §3).
+//! Ablation: interleaved block layout + SIMD vs flat codes + scalar
+//! gather ("we must carefully maintain the code layout", paper §3), at
+//! every fastscan code width — the data for the Quicker-ADC trade-off
+//! curve (EXPERIMENTS.md).
 use armpq::experiments::run_ablation_layout;
+use armpq::pq::CodeWidth;
 
 fn main() {
-    for m in [8, 16, 32] {
-        let t = run_ablation_layout(320_000, m, 20220505);
-        t.print();
-        t.save().expect("save");
+    for width in CodeWidth::ALL {
+        for m in [8, 16, 32] {
+            let t = run_ablation_layout(320_000, m, width, 20220505);
+            t.print();
+            t.save().expect("save");
+        }
     }
 }

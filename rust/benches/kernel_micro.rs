@@ -1,11 +1,15 @@
 //! Paper Fig. 1 concept: per-lookup-op cost — memory LUT vs dual-lane
-//! shuffle (portable NEON model) vs real SIMD (SSSE3), per 32-code block.
+//! shuffle (portable NEON model) vs real SIMD — per 32-code block, swept
+//! over the Quicker-ADC width axis (2-/4-/8-bit codes).
 use armpq::experiments::run_kernel_micro;
+use armpq::pq::CodeWidth;
 
 fn main() {
-    for m in [8, 16, 32, 64] {
-        let t = run_kernel_micro(m);
-        t.print();
-        t.save().expect("save");
+    for width in CodeWidth::ALL {
+        for m in [8, 16, 32, 64] {
+            let t = run_kernel_micro(m, width);
+            t.print();
+            t.save().expect("save");
+        }
     }
 }

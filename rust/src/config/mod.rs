@@ -6,6 +6,7 @@
 //! ignored into key prefixes: `[server]` + `port = 1` → `server.port`).
 
 use crate::index::SearchParams;
+use crate::pq::CodeWidth;
 use crate::simd::Backend;
 use crate::util::args::Args;
 use crate::{Error, Result};
@@ -123,6 +124,15 @@ pub struct ExperimentConfig {
     /// Fastscan kernel backend override (`portable` / `ssse3` / `neon`);
     /// `None` keeps the host's [`crate::simd::best_backend`].
     pub backend: Option<Backend>,
+    /// Fastscan code width for the kernel benches (`--width 2|4|8`; first
+    /// entry when a sweep list was given). Index width selection goes
+    /// through the factory string (`PQ16x2fs`); this knob drives the
+    /// `kernel_micro`/`ablation_layout` width axis.
+    pub width: CodeWidth,
+    /// The full `--width` sweep list (`"2,4,8"`), CLI or config file —
+    /// what the bench commands iterate. Single-element when a scalar (or
+    /// nothing) was given.
+    pub widths: Vec<CodeWidth>,
 }
 
 impl Default for ExperimentConfig {
@@ -138,6 +148,8 @@ impl Default for ExperimentConfig {
             nprobe_explicit: false,
             trials: 5,
             backend: None,
+            width: CodeWidth::W4,
+            widths: vec![CodeWidth::W4],
         }
     }
 }
@@ -173,6 +185,23 @@ impl ExperimentConfig {
                 Error::Config(format!("backend expects portable|ssse3|neon, got {name:?}"))
             })?),
         };
+        // `--width` may be a sweep list for the bench commands ("2,4,8");
+        // every entry is validated here, `width` is the first, and the
+        // bench commands iterate `widths`.
+        let widths = match args.get_opt("width").or_else(|| cfg.get("width").map(String::from)) {
+            None => vec![d.width],
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    let bits: usize = part.trim().parse().map_err(|_| {
+                        Error::Config(format!("width expects 2|4|8, got {s:?}"))
+                    })?;
+                    CodeWidth::from_bits(bits)
+                        .ok_or_else(|| Error::Config(format!("width expects 2|4|8, got {bits}")))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let width = widths[0];
         Ok(Self {
             dataset: args.get_str("dataset", &cfg.get_str("dataset", &d.dataset)),
             n: args.get_usize("n", cfg.get_usize("n", d.n)?),
@@ -184,6 +213,8 @@ impl ExperimentConfig {
             nprobe_explicit: args.get_opt("nprobe").is_some() || cfg.get("nprobe").is_some(),
             trials: args.get_usize("trials", cfg.get_usize("trials", d.trials)?),
             backend,
+            width,
+            widths,
         })
     }
 }
@@ -255,6 +286,31 @@ mod tests {
     fn underscored_numbers() {
         let cfg = Config::from_str("n = 1_000_000").unwrap();
         assert_eq!(cfg.get_usize("n", 0).unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn width_parsed_and_validated() {
+        let none = ExperimentConfig::from_args(&Args::parse(Vec::<String>::new())).unwrap();
+        assert_eq!(none.width, CodeWidth::W4);
+        for (s, want) in [("2", CodeWidth::W2), ("4", CodeWidth::W4), ("8", CodeWidth::W8)] {
+            let args = Args::parse(["--width", s].iter().map(|x| x.to_string()));
+            assert_eq!(ExperimentConfig::from_args(&args).unwrap().width, want);
+        }
+        let bad = Args::parse(["--width", "3"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::from_args(&bad).is_err());
+        // a sweep list: scalar = first entry, `widths` carries the lot —
+        // from CLI and from a config file alike
+        let list = Args::parse(["--width", "2,4,8"].iter().map(|s| s.to_string()));
+        let parsed = ExperimentConfig::from_args(&list).unwrap();
+        assert_eq!(parsed.width, CodeWidth::W2);
+        assert_eq!(parsed.widths, vec![CodeWidth::W2, CodeWidth::W4, CodeWidth::W8]);
+        // every entry is validated, not just the first
+        let badlist = Args::parse(["--width", "2,5"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::from_args(&badlist).is_err());
+        // config-file key works too
+        let mut cfg = Config::new();
+        cfg.set("width", "8");
+        assert_eq!(cfg.get_usize("width", 4).unwrap(), 8);
     }
 
     #[test]

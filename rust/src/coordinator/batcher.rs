@@ -6,7 +6,11 @@
 //! `max_batch` or until `max_wait` elapses, groups by `(k, params)`,
 //! executes, and routes each response to its reply channel. Batching
 //! amortizes per-query fixed costs — above all LUT construction, the
-//! serving-layer analog of the paper keeping tables register-resident.
+//! serving-layer analog of the paper keeping tables register-resident:
+//! each `(k, params)` group becomes ONE backend call, and a sharded
+//! backend ([`crate::coordinator::ShardedBackend`]) computes the group's
+//! per-query scan LUTs once and reuses them across its whole shard
+//! fan-out instead of rebuilding per shard.
 //! Per-request [`SearchParams`] are part of the grouping key, so requests
 //! carrying different overrides never share (or pollute) a backend call.
 

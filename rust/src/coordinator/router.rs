@@ -15,9 +15,22 @@ use std::sync::Arc;
 /// ids, e.g. via `add_with_ids`). Shard searches run on scoped threads —
 /// one per shard, lock-free (`search_batch` is `&self`) — and merge via a
 /// bounded heap. Per-request [`SearchParams`] are forwarded to every shard.
+///
+/// **Batch-level LUT reuse:** when every shard reports the same
+/// [`SearchBackend::lut_signature`] (same trained quantizer — the normal
+/// deployment, where one codebook is trained once and shards split the
+/// corpus), the router computes each query's scan LUTs **once** per
+/// `search_batch` call and hands them to every shard via
+/// [`SearchBackend::search_batch_with_luts`], instead of every shard
+/// rebuilding them. Batcher windows group by `(k, params)`, so one LUT
+/// build serves the whole group's fan-out. Mismatched or absent signatures
+/// fall back to per-shard computation — never wrong, just slower.
 pub struct ShardedBackend {
     shards: Vec<Arc<dyn SearchBackend>>,
     dim: usize,
+    /// Common LUT signature of all shards, if they agree (checked once at
+    /// construction — shards are immutable after sealing).
+    shared_luts: Option<u64>,
 }
 
 impl ShardedBackend {
@@ -29,7 +42,10 @@ impl ShardedBackend {
         if shards.iter().any(|s| s.dim() != dim) {
             return Err(crate::Error::Serve("shard dimension mismatch".into()));
         }
-        Ok(Self { shards, dim })
+        let shared_luts = shards[0]
+            .lut_signature()
+            .filter(|sig| shards.iter().all(|s| s.lut_signature() == Some(*sig)));
+        Ok(Self { shards, dim, shared_luts })
     }
 
     /// Convenience: shard over sealed indexes held as `Arc<dyn Index>`.
@@ -43,6 +59,12 @@ impl ShardedBackend {
 
     pub fn nshards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Whether the shards share one quantizer and the router reuses one
+    /// LUT build across the fan-out (introspection for tests/metrics).
+    pub fn reuses_luts(&self) -> bool {
+        self.shared_luts.is_some() && self.shards.len() > 1
     }
 }
 
@@ -61,6 +83,13 @@ impl SearchBackend for ShardedBackend {
         if k == 0 || nq == 0 {
             return Ok((Vec::new(), Vec::new()));
         }
+        // batch-level LUT reuse: one build for the whole (k, params) group
+        // when every shard shares the quantizer; per-shard rebuild otherwise
+        let shared_luts: Option<Vec<f32>> = if self.reuses_luts() {
+            self.shards[0].compute_scan_luts(queries)
+        } else {
+            None
+        };
         // fan out: one thread per shard (scoped — no 'static bounds needed)
         let results: Vec<Result<(Vec<f32>, Vec<i64>)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
@@ -68,7 +97,11 @@ impl SearchBackend for ShardedBackend {
                 .iter()
                 .map(|shard| {
                     let shard = shard.clone();
-                    scope.spawn(move || shard.search_batch(queries, k, params))
+                    let luts = shared_luts.as_deref();
+                    scope.spawn(move || match luts {
+                        Some(l) => shard.search_batch_with_luts(queries, l, k, params),
+                        None => shard.search_batch(queries, k, params),
+                    })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
@@ -196,6 +229,65 @@ mod tests {
         unsealed.add(&ds.base).unwrap();
         let unsealed_shards: Vec<Arc<dyn Index>> = vec![Arc::new(unsealed)];
         assert!(ShardedBackend::from_indexes(unsealed_shards).is_err());
+    }
+
+    /// Batch-level LUT reuse: shards trained identically share one LUT
+    /// build per batch; results must be bit-identical to the per-shard
+    /// rebuild path, and shards with *different* codebooks must not share.
+    #[test]
+    fn lut_reuse_across_shards_is_transparent() {
+        let ds = SyntheticDataset::sift_like(2_000, 10, 235);
+        let dim = ds.dim;
+        let per = ds.n() / 2;
+        let mk_shard = |s: usize, seed: u64| -> Arc<dyn SearchBackend> {
+            let mut params = IvfParams::new(4);
+            params.seed = seed;
+            let mut pq_params = PqParams::new_4bit(8);
+            pq_params.seed = seed;
+            let mut idx = IvfPq4::new(dim, params, pq_params);
+            idx.train(&ds.train).unwrap();
+            let slice = &ds.base[s * per * dim..(s + 1) * per * dim];
+            let ids: Vec<i64> = (s * per..(s + 1) * per).map(|i| i as i64).collect();
+            idx.add_with_ids(slice, &ids).unwrap();
+            idx.nprobe = 4;
+            idx.fastscan.reservoir_factor = 32;
+            Arc::new(IvfBackend::new(idx).unwrap())
+        };
+
+        // same training seed on both shards → one quantizer → reuse on
+        let shared = ShardedBackend::new(vec![mk_shard(0, 7), mk_shard(1, 7)]).unwrap();
+        assert!(shared.reuses_luts(), "equal codebooks must enable LUT reuse");
+        let (d_shared, l_shared) = shared.search_batch(&ds.queries, 5, None).unwrap();
+
+        // per-shard manual fan-out (no reuse) must give identical results
+        let a = mk_shard(0, 7);
+        let b = mk_shard(1, 7);
+        let (da, la) = a.search_batch(&ds.queries, 5, None).unwrap();
+        let (db, lb) = b.search_batch(&ds.queries, 5, None).unwrap();
+        let mut d_manual = Vec::new();
+        let mut l_manual = Vec::new();
+        for qi in 0..10 {
+            let mut heap = TopK::new(5);
+            for (d, l) in [(&da, &la), (&db, &lb)] {
+                for r in 0..5 {
+                    if l[qi * 5 + r] >= 0 {
+                        heap.push(d[qi * 5 + r], l[qi * 5 + r]);
+                    }
+                }
+            }
+            let (d, l) = heap.into_sorted();
+            d_manual.extend(d);
+            l_manual.extend(l);
+        }
+        assert_eq!(d_shared, d_manual, "LUT reuse changed distances");
+        assert_eq!(l_shared, l_manual, "LUT reuse changed labels");
+
+        // different training seeds → different signatures → no reuse,
+        // still well-formed results
+        let mixed = ShardedBackend::new(vec![mk_shard(0, 7), mk_shard(1, 8)]).unwrap();
+        assert!(!mixed.reuses_luts(), "distinct codebooks must not share LUTs");
+        let (dm, lm) = mixed.search_batch(&ds.queries, 5, None).unwrap();
+        assert_eq!((dm.len(), lm.len()), (50, 50));
     }
 
     #[test]

@@ -22,6 +22,30 @@ pub trait SearchBackend: Send + Sync {
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<(Vec<f32>, Vec<i64>)>;
+    /// Fingerprint of the backend's scan-LUT construction (see
+    /// [`crate::index::Index::lut_signature`]). Backends sharing an equal
+    /// `Some` signature accept each other's [`SearchBackend::compute_scan_luts`]
+    /// output, letting the shard router build per-query LUTs once per
+    /// `(k, params)` batch group instead of once per shard.
+    fn lut_signature(&self) -> Option<u64> {
+        None
+    }
+    /// Per-query scan LUTs for signature-equal backends (`None` = no
+    /// shared-LUT fast path).
+    fn compute_scan_luts(&self, _queries: &[f32]) -> Option<Vec<f32>> {
+        None
+    }
+    /// [`SearchBackend::search_batch`] with precomputed LUTs; the default
+    /// ignores them and recomputes.
+    fn search_batch_with_luts(
+        &self,
+        queries: &[f32],
+        _luts: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
+        self.search_batch(queries, k, params)
+    }
     fn describe(&self) -> String;
 }
 
@@ -67,6 +91,25 @@ impl SearchBackend for IndexBackend {
         Ok((r.distances, r.labels))
     }
 
+    fn lut_signature(&self) -> Option<u64> {
+        self.index.lut_signature()
+    }
+
+    fn compute_scan_luts(&self, queries: &[f32]) -> Option<Vec<f32>> {
+        self.index.compute_scan_luts(queries)
+    }
+
+    fn search_batch_with_luts(
+        &self,
+        queries: &[f32],
+        luts: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
+        let r = self.index.search_with_luts(queries, luts, k, params)?;
+        Ok((r.distances, r.labels))
+    }
+
     fn describe(&self) -> String {
         self.index.describe()
     }
@@ -103,6 +146,26 @@ impl SearchBackend for IvfBackend {
         let (nprobe, ef_search, fs) =
             params::effective_ivf(params, self.index.nprobe, &self.index.fastscan);
         self.index.search_with(queries, k, nprobe, ef_search, &fs)
+    }
+
+    fn lut_signature(&self) -> Option<u64> {
+        self.index.pq.as_ref().map(|pq| pq.signature())
+    }
+
+    fn compute_scan_luts(&self, queries: &[f32]) -> Option<Vec<f32>> {
+        self.index.compute_scan_luts(queries).ok()
+    }
+
+    fn search_batch_with_luts(
+        &self,
+        queries: &[f32],
+        luts: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
+        let (nprobe, ef_search, fs) =
+            params::effective_ivf(params, self.index.nprobe, &self.index.fastscan);
+        self.index.search_with_luts(queries, luts, k, nprobe, ef_search, &fs)
     }
 
     fn describe(&self) -> String {

@@ -15,7 +15,7 @@
 use crate::datasets::{Dataset, SyntheticDataset};
 use crate::eval::{ground_truth, measure_search, recall_at_r};
 use crate::index::{IndexIvfPq4, IndexPq, IndexPq4FastScan, Index};
-use crate::pq::{PqParams};
+use crate::pq::{CodeWidth, PqParams};
 use crate::simd::{available_backends, Backend};
 use crate::util::bench::{black_box, BenchRunner, Table};
 use crate::util::timer::Timer;
@@ -139,38 +139,43 @@ pub fn run_table1(
     Ok(table)
 }
 
-/// Fig. 1 concept micro-benchmark: cost of one ADC lookup step.
+/// Fig. 1 concept micro-benchmark: cost of one ADC lookup step, per code
+/// width (the Quicker-ADC trade-off axis).
 ///
 /// Compares (a) the in-memory f32 table gather (Fig. 1a), (b) the portable
 /// dual-lane NEON-emulation shuffle (Fig. 1c as the paper models it), and
-/// (c) the real-SIMD SSSE3 shuffle — per 32-code block.
-pub fn run_kernel_micro(m: usize) -> Table {
-    use crate::pq::fastscan::{accumulate_block_portable, KernelLuts};
-    use crate::pq::lut::QuantizedLuts;
+/// (c) the real-SIMD shuffle the host offers — per 32-code block, at the
+/// given [`CodeWidth`].
+pub fn run_kernel_micro(m: usize, width: CodeWidth) -> Table {
+    use crate::pq::bitwidth::build_width_luts;
+    use crate::pq::fastscan::{accumulate_block_portable, LaneWiring};
     use crate::util::rng::Rng;
 
     let mut rng = Rng::new(0xF16);
-    let m_pad = m.div_ceil(2) * 2;
-    let block: Vec<u8> = (0..16 * m_pad).map(|_| (rng.next_u32() & 0xFF) as u8).collect();
-    let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 8.0).collect();
-    let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
-    let kluts = KernelLuts::build(&qluts, m_pad);
-    let codes: Vec<u8> = (0..32 * m).map(|_| (rng.next_u32() % 16) as u8).collect();
+    let cols = width.code_columns(m);
+    let sub_ksub = width.sub_ksub();
+    let block: Vec<u8> =
+        (0..32 * width.chunks(m)).map(|_| (rng.next_u32() & 0xFF) as u8).collect();
+    let luts_f32: Vec<f32> = (0..cols * sub_ksub).map(|_| rng.next_f32() * 8.0).collect();
+    let wl = build_width_luts(&luts_f32, m, width);
+    let kluts = wl.kernel;
+    let codes: Vec<u8> =
+        (0..32 * cols).map(|_| (rng.next_u32() as usize % sub_ksub) as u8).collect();
 
     let runner = BenchRunner::default();
     let mut table = Table::new(
-        &format!("Fig1 lookup micro (M={m}, per 32-code block)"),
+        &format!("Fig1 lookup micro (M={m}, {width}, per 32-code block)"),
         &["method", "ns/block", "ns/code", "rel"],
     );
 
-    // (a) memory-lookup baseline: 32 codes × m f32 gathers
+    // (a) memory-lookup baseline: 32 codes × cols f32 gathers
     let mem = runner.bench("memory LUT", || {
         let mut total = 0.0f32;
         for i in 0..32 {
-            let c = &codes[i * m..(i + 1) * m];
+            let c = &codes[i * cols..(i + 1) * cols];
             let mut d = 0.0f32;
-            for mi in 0..m {
-                d += luts_f32[mi * 16 + c[mi] as usize];
+            for mi in 0..cols {
+                d += luts_f32[mi * sub_ksub + c[mi] as usize];
             }
             total += d;
         }
@@ -185,10 +190,13 @@ pub fn run_kernel_micro(m: usize) -> Table {
     });
 
     // (b') ARMv7 model: 4 × 64-bit D-registers + vtbl2 (paper §3 notes
-    // ARMv7 only has 64-bit registers — this is that fallback)
-    let armv7 = runner.bench("portable quad-64bit (ARMv7)", || {
-        crate::simd::u8x8::accumulate_block_armv7(&block, &kluts, &mut out);
-        black_box(out[0]);
+    // ARMv7 only has 64-bit registers — this is that fallback). The model
+    // covers the paired wiring (2-/4-bit) only.
+    let armv7 = (kluts.wiring == LaneWiring::PairedTables).then(|| {
+        runner.bench("portable quad-64bit (ARMv7)", || {
+            crate::simd::u8x8::accumulate_block_armv7(&block, &kluts, &mut out);
+            black_box(out[0]);
+        })
     });
 
     // (c) real SIMD if available: SSSE3 on x86_64, NEON on aarch64
@@ -226,7 +234,7 @@ pub fn run_kernel_micro(m: usize) -> Table {
     };
 
     let base = mem.ns_per_iter();
-    for meas in [Some(mem), Some(armv7), Some(portable), ssse3, neon].into_iter().flatten() {
+    for meas in [Some(mem), armv7, Some(portable), ssse3, neon].into_iter().flatten() {
         table.row(vec![
             meas.name.clone(),
             format!("{:.1}", meas.ns_per_iter()),
@@ -275,30 +283,40 @@ pub fn run_ablation_lut(dataset: &str, n: usize, nq: usize, m: usize, seed: u64)
     Ok(table)
 }
 
-/// Ablation: interleaved block layout + SIMD vs flat 4-bit codes + scalar
-/// gather — isolates how much of the speedup is the layout+shuffle combo.
-pub fn run_ablation_layout(n: usize, m: usize, seed: u64) -> Table {
-    use crate::pq::fastscan::{fastscan_distances_all, KernelLuts};
+/// Ablation: interleaved block layout + SIMD vs flat codes + scalar
+/// gather — isolates how much of the speedup is the layout+shuffle combo,
+/// at any code width (the `--width` axis of the Quicker-ADC curve).
+pub fn run_ablation_layout(n: usize, m: usize, width: CodeWidth, seed: u64) -> Table {
+    use crate::pq::bitwidth::build_width_luts;
+    use crate::pq::fastscan::fastscan_distances_all;
     use crate::pq::lut::QuantizedLuts;
-    use crate::pq::PackedCodes4;
+    use crate::pq::PackedCodes;
     use crate::util::rng::Rng;
 
     let mut rng = Rng::new(seed);
-    let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
-    let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 8.0).collect();
-    let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
-    let packed = PackedCodes4::pack(&codes, m).unwrap();
-    let kluts = KernelLuts::build(&qluts, packed.m_pad);
+    let cols = width.code_columns(m);
+    let sub_ksub = width.sub_ksub();
+    let codes: Vec<u8> =
+        (0..n * cols).map(|_| (rng.next_u32() as usize % sub_ksub) as u8).collect();
+    let luts_f32: Vec<f32> = (0..cols * sub_ksub).map(|_| rng.next_f32() * 8.0).collect();
+    let wl = build_width_luts(&luts_f32, m, width);
+    let packed = PackedCodes::pack(&codes, m, width).unwrap();
+    let kluts = wl.kernel;
 
-    // flat 4-bit packing (two codes per byte, no interleave)
-    let mut flat = vec![0u8; (n * m).div_ceil(2)];
+    // flat packing at the native width (no interleave) + u8 tables for the
+    // scalar baseline — what a straightforward port would do
+    let bits = width.bits();
+    let per_byte = 8 / bits;
+    let mut flat = vec![0u8; (n * cols).div_ceil(per_byte)];
     for (i, &c) in codes.iter().enumerate() {
-        flat[i / 2] |= c << (4 * (i % 2));
+        flat[i / per_byte] |= c << (bits * (i % per_byte));
     }
+    let flat_luts = QuantizedLuts::from_f32(&luts_f32, cols, sub_ksub);
+    let code_mask: u8 = ((1u16 << bits) - 1) as u8;
 
     let runner = BenchRunner::default();
     let mut table = Table::new(
-        &format!("Ablation code layout (n={n}, M={m})"),
+        &format!("Ablation code layout (n={n}, M={m}, {width})"),
         &["variant", "ms/scan", "codes/s", "rel"],
     );
 
@@ -316,11 +334,11 @@ pub fn run_ablation_layout(n: usize, m: usize, seed: u64) -> Table {
         let mut out = vec![0u16; n];
         for i in 0..n {
             let mut acc = 0u16;
-            for mi in 0..m {
-                let idx = i * m + mi;
-                let byte = flat[idx / 2];
-                let code = (byte >> (4 * (idx % 2))) & 0xF;
-                acc = acc.saturating_add(qluts.row(mi)[code as usize] as u16);
+            for mi in 0..cols {
+                let idx = i * cols + mi;
+                let byte = flat[idx / per_byte];
+                let code = (byte >> (bits * (idx % per_byte))) & code_mask;
+                acc = acc.saturating_add(flat_luts.row(mi)[code as usize] as u16);
             }
             out[i] = acc;
         }
@@ -380,9 +398,9 @@ pub fn run_pjrt_e2e(artifacts_dir: &std::path::Path, trials: usize) -> Result<Ta
     // rust in-process equivalent on the same codes (quantized, no rerank)
     use crate::pq::fastscan::{fastscan_distances_all, KernelLuts};
     use crate::pq::lut::QuantizedLuts;
-    use crate::pq::PackedCodes4;
+    use crate::pq::PackedCodes;
     let codes_u8: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
-    let packed = PackedCodes4::pack(&codes_u8, m).unwrap();
+    let packed = PackedCodes::pack(&codes_u8, m, CodeWidth::W4).unwrap();
     let backend_simd = crate::simd::best_backend();
     let dsub = d / m;
     let rust = runner.bench("rust in-process", || {
@@ -396,7 +414,7 @@ pub fn run_pjrt_e2e(artifacts_dir: &std::path::Path, trials: usize) -> Result<Ta
                 }
             }
             let qluts = QuantizedLuts::from_f32(&luts, m, 16);
-            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let kluts = KernelLuts::build(&qluts, packed.lut_rows);
             black_box(fastscan_distances_all(&packed, &kluts, backend_simd));
         }
     });
@@ -437,10 +455,15 @@ mod tests {
     }
 
     #[test]
-    fn kernel_micro_runs() {
+    fn kernel_micro_runs_all_widths() {
         std::env::set_var("ARMPQ_BENCH_FAST", "1");
-        let t = run_kernel_micro(16);
-        assert!(t.rows.len() >= 2);
+        for width in CodeWidth::ALL {
+            let t = run_kernel_micro(16, width);
+            assert!(t.rows.len() >= 2, "{width}");
+            // the ARMv7 model only covers the paired wiring
+            let has_armv7 = t.rows.iter().any(|r| r[0].contains("ARMv7"));
+            assert_eq!(has_armv7, width != CodeWidth::W8, "{width}");
+        }
     }
 
     #[test]
@@ -454,10 +477,16 @@ mod tests {
     }
 
     #[test]
-    fn ablation_layout_runs() {
+    fn ablation_layout_runs_all_widths() {
         std::env::set_var("ARMPQ_BENCH_FAST", "1");
-        let t = run_ablation_layout(32 * 100, 8, 45);
-        // flat+scalar plus one row per available backend
-        assert_eq!(t.rows.len(), 1 + crate::simd::available_backends().len());
+        for width in CodeWidth::ALL {
+            let t = run_ablation_layout(32 * 50, 8, width, 45);
+            // flat+scalar plus one row per available backend
+            assert_eq!(
+                t.rows.len(),
+                1 + crate::simd::available_backends().len(),
+                "{width}"
+            );
+        }
     }
 }

@@ -1,13 +1,17 @@
 //! faiss-style index factory strings.
 //!
-//! Grammar (subset of the faiss factory covering the paper's configs):
+//! Grammar (subset of the faiss factory covering the paper's configs plus
+//! the Quicker-ADC width axis):
 //!
 //! ```text
 //!   "Flat"                      exact scan
 //!   "PQ16x4"                    naive 4-bit PQ (Fig. 2 baseline)
 //!   "PQ16x8"  /  "PQ16"         naive 8-bit PQ
 //!   "PQ16x4fs"                  4-bit fastscan (the paper's kernel)
+//!   "PQ16x2fs"                  2-bit fastscan (faster/coarser)
+//!   "PQ16x8fs"                  8-bit fastscan (slower/finer)
 //!   "IVF1000,PQ16x4fs"          IVF + flat coarse + fastscan
+//!   "IVF100,PQ16x2fs,nprobe=8"  any fastscan width composes with IVF
 //!   "IVF30000_HNSW32,PQ16x4fs"  IVF + HNSW coarse + fastscan (Table 1)
 //! ```
 //!
@@ -21,7 +25,7 @@
 
 use super::pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
 use super::{flat::IndexFlat, Index, SearchParams};
-use crate::pq::PqParams;
+use crate::pq::{CodeWidth, PqParams};
 use crate::{Error, Result};
 
 /// Create an index from a factory string.
@@ -49,11 +53,26 @@ pub fn index_factory(dim: usize, spec: &str) -> Result<Box<dyn Index>> {
             let (nlist, hnsw_m) = parse_ivf(ivf_spec)
                 .ok_or_else(|| err(format!("component {ivf_spec:?}: expected IVF<nlist>[_HNSW<m>]")))?;
             let pq = parse_pq(pq_spec)
-                .ok_or_else(|| err(format!("component {pq_spec:?}: expected PQ<m>x4fs after IVF")))?;
-            if !(pq.nbits == 4 && pq.fastscan) {
-                return Err(err(format!("component {pq_spec:?}: IVF composition requires PQ<m>x4fs")));
+                .ok_or_else(|| err(format!("component {pq_spec:?}: expected PQ<m>x<bits>fs after IVF")))?;
+            if !pq.fastscan {
+                return Err(err(format!(
+                    "component {pq_spec:?}: IVF composition requires a fastscan PQ (PQ<m>x{{2,4,8}}fs)"
+                )));
             }
-            Box::new(IndexIvfPq4::new(dim, nlist, pq.m, hnsw_m.is_some(), hnsw_m.unwrap_or(32)))
+            let width = CodeWidth::from_bits(pq.nbits).ok_or_else(|| {
+                err(format!(
+                    "component {pq_spec:?}: fastscan supports 2-, 4- or 8-bit codes, got {}",
+                    pq.nbits
+                ))
+            })?;
+            Box::new(IndexIvfPq4::new_width(
+                dim,
+                nlist,
+                pq.m,
+                width,
+                hnsw_m.is_some(),
+                hnsw_m.unwrap_or(32),
+            ))
         }
         _ => return Err(err("too many components".into())),
     };
@@ -143,14 +162,31 @@ fn parse_ivf(s: &str) -> Option<(usize, Option<usize>)> {
 }
 
 fn build_flat_pq(dim: usize, pq: PqSpec, spec: &str) -> Result<Box<dyn Index>> {
+    let component = format!(
+        "PQ{}x{}{}",
+        pq.m,
+        pq.nbits,
+        if pq.fastscan { "fs" } else { "" }
+    );
     match (pq.nbits, pq.fastscan) {
-        (4, true) => Ok(Box::new(IndexPq4FastScan::new(dim, pq.m))),
+        (_, true) => match CodeWidth::from_bits(pq.nbits) {
+            Some(width) => Ok(Box::new(IndexPq4FastScan::new_width(dim, pq.m, width))),
+            // unsupported widths (e.g. "PQ16x3fs") fail as a *named
+            // component*, not a generic parse error
+            None => Err(Error::Factory(
+                spec.to_string(),
+                format!(
+                    "component {component:?}: fastscan supports 2-, 4- or 8-bit codes, got {}",
+                    pq.nbits
+                ),
+            )),
+        },
         (4, false) => Ok(Box::new(IndexPq::new(dim, PqParams::new_4bit(pq.m)))),
         (8, false) => Ok(Box::new(IndexPq::new(dim, PqParams::new_8bit(pq.m)))),
-        (b, true) if b != 4 => {
-            Err(Error::Factory(spec.to_string(), "fastscan requires 4-bit codes".into()))
-        }
-        (b, _) => Err(Error::Factory(spec.to_string(), format!("unsupported nbits {b}"))),
+        (b, false) => Err(Error::Factory(
+            spec.to_string(),
+            format!("component {component:?}: unsupported nbits {b} (naive PQ takes 4 or 8)"),
+        )),
     }
 }
 
@@ -165,6 +201,35 @@ mod tests {
             let idx = index_factory(64, spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
             assert_eq!(idx.dim(), 64, "{spec}");
         }
+    }
+
+    #[test]
+    fn parses_all_fastscan_widths() {
+        for (spec, want) in [
+            ("PQ16x2fs", "PQ16x2fs"),
+            ("PQ16x4fs", "PQ16x4fs"),
+            ("PQ16x8fs", "PQ16x8fs"),
+            ("IVF100,PQ16x2fs", "PQ16x2fs"),
+            ("IVF100,PQ16x8fs,nprobe=8", "PQ16x8fs"),
+            ("IVF50_HNSW16,PQ8x2fs", "PQ8x2fs"),
+        ] {
+            let idx = index_factory(64, spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(idx.describe().contains(want), "{spec}: {}", idx.describe());
+        }
+    }
+
+    /// Satellite: unsupported widths fail as a *named component*, not a
+    /// generic parse error — the message cites the component and the
+    /// supported width set.
+    #[test]
+    fn unsupported_width_errors_name_the_component() {
+        for spec in ["PQ16x3fs", "PQ16x6fs", "PQ8x16fs"] {
+            let e = index_factory(64, spec).unwrap_err().to_string();
+            assert!(e.contains("component"), "{spec}: {e}");
+            assert!(e.contains("2-, 4- or 8-bit"), "{spec}: {e}");
+        }
+        let e = index_factory(64, "IVF10,PQ16x3fs").unwrap_err().to_string();
+        assert!(e.contains("PQ16x3fs") && e.contains("2-, 4- or 8-bit"), "{e}");
     }
 
     #[test]

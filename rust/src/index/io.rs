@@ -7,13 +7,15 @@
 
 use crate::index::pq_index::IndexPq4FastScan;
 use crate::ivf::{IvfParams, IvfPq4};
-use crate::pq::{PqParams, ProductQuantizer};
+use crate::pq::{CodeWidth, PqParams, ProductQuantizer};
 use crate::{Error, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"ARMPQIDX";
-const VERSION: u32 = 1;
+/// v1: 4-bit only. v2 appends the fastscan code width (+ user-facing M for
+/// IVF); v1 files still load as 4-bit.
+const VERSION: u32 = 2;
 const KIND_PQ4FS: u32 = 1;
 const KIND_IVFPQ4: u32 = 2;
 
@@ -127,7 +129,7 @@ fn read_pq<R: Read>(r: &mut Reader<R>) -> Result<ProductQuantizer> {
 
 // ------------------------------------------------------------ flat PQ4fs
 
-/// Save a trained+filled [`IndexPq4FastScan`].
+/// Save a trained+filled [`IndexPq4FastScan`] (any code width).
 pub fn save_pq4fs(index: &IndexPq4FastScan, path: &Path) -> Result<()> {
     let pq = index.pq().ok_or(Error::NotTrained)?;
     let f = std::fs::File::create(path)?;
@@ -135,19 +137,30 @@ pub fn save_pq4fs(index: &IndexPq4FastScan, path: &Path) -> Result<()> {
     w.w.write_all(MAGIC)?;
     w.u32(VERSION)?;
     w.u32(KIND_PQ4FS)?;
+    w.u32(index.width().bits() as u32)?;
     write_pq(&mut w, pq)?;
     w.bytes(index.staging_codes())?;
     Ok(())
 }
 
-/// Load an [`IndexPq4FastScan`].
+/// Load an [`IndexPq4FastScan`] (v1 files are 4-bit by definition).
 pub fn load_pq4fs(path: &Path) -> Result<IndexPq4FastScan> {
     let f = std::fs::File::open(path)?;
     let mut r = Reader { r: BufReader::new(f) };
-    check_header(&mut r, KIND_PQ4FS)?;
+    let version = check_header(&mut r, KIND_PQ4FS)?;
+    let width = read_width(&mut r, version)?;
     let pq = read_pq(&mut r)?;
     let codes = r.bytes()?;
-    IndexPq4FastScan::from_parts(pq, codes)
+    IndexPq4FastScan::from_parts_width(pq, codes, width)
+}
+
+fn read_width<R: Read>(r: &mut Reader<R>, version: u32) -> Result<CodeWidth> {
+    if version < 2 {
+        return Ok(CodeWidth::W4);
+    }
+    let bits = r.u32()? as usize;
+    CodeWidth::from_bits(bits)
+        .ok_or_else(|| Error::Dataset(format!("corrupt code width {bits}")))
 }
 
 // ------------------------------------------------------------ IVF-PQ4
@@ -161,6 +174,8 @@ pub fn save_ivfpq4(index: &IvfPq4, path: &Path) -> Result<()> {
     w.w.write_all(MAGIC)?;
     w.u32(VERSION)?;
     w.u32(KIND_IVFPQ4)?;
+    w.u32(index.width.bits() as u32)?;
+    w.u32(index.pq_m as u32)?;
     w.u32(index.dim as u32)?;
     w.u32(index.params.nlist as u32)?;
     w.u32(if index.params.coarse_hnsw { 1 } else { 0 })?;
@@ -182,7 +197,13 @@ pub fn save_ivfpq4(index: &IvfPq4, path: &Path) -> Result<()> {
 pub fn load_ivfpq4(path: &Path) -> Result<IvfPq4> {
     let f = std::fs::File::open(path)?;
     let mut r = Reader { r: BufReader::new(f) };
-    check_header(&mut r, KIND_IVFPQ4)?;
+    let version = check_header(&mut r, KIND_IVFPQ4)?;
+    let (width, m_stored) = if version >= 2 {
+        let w = read_width(&mut r, version)?;
+        (w, Some(r.u32()? as usize))
+    } else {
+        (CodeWidth::W4, None)
+    };
     let dim = r.u32()? as usize;
     let nlist = r.u32()? as usize;
     let coarse_hnsw = r.u32()? == 1;
@@ -211,24 +232,25 @@ pub fn load_ivfpq4(path: &Path) -> Result<IvfPq4> {
     params.hnsw_m = hnsw_m;
     params.seed = seed;
     let pq_params = PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed };
-    IvfPq4::from_parts(dim, params, pq_params, pq, centroids, lists)
+    let m = m_stored.unwrap_or(pq.m); // v1: user M == internal columns
+    IvfPq4::from_parts(dim, params, pq_params, m, width, pq, centroids, lists)
 }
 
-fn check_header<R: Read>(r: &mut Reader<R>, expect_kind: u32) -> Result<()> {
+fn check_header<R: Read>(r: &mut Reader<R>, expect_kind: u32) -> Result<u32> {
     let mut magic = [0u8; 8];
     r.r.read_exact(&mut magic)?;
     if &magic != MAGIC {
         return Err(Error::Dataset("not an armpq index file".into()));
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if !(1..=VERSION).contains(&version) {
         return Err(Error::Dataset(format!("unsupported index version {version}")));
     }
     let kind = r.u32()?;
     if kind != expect_kind {
         return Err(Error::Dataset(format!("wrong index kind {kind} (expected {expect_kind})")));
     }
-    Ok(())
+    Ok(version)
 }
 
 #[cfg(test)]
@@ -281,6 +303,43 @@ mod tests {
         loaded.nprobe = 8;
         assert_eq!(loaded.ntotal(), 1_500);
         assert!(loaded.is_sealed(), "load must return a sealed index");
+        let (d1, l1) = loaded.search(&ds.queries, 5).unwrap();
+        assert_eq!(l0, l1);
+        assert_eq!(d0, d1);
+    }
+
+    /// Every fastscan width survives the save/load cycle with identical
+    /// results (the v2 format carries the width).
+    #[test]
+    fn width_roundtrips_identically() {
+        let ds = SyntheticDataset::gaussian(800, 8, 32, 205);
+        for width in CodeWidth::ALL {
+            let mut idx = crate::index::pq_index::IndexPq4FastScan::new_width(ds.dim, 8, width);
+            idx.train(&ds.train).unwrap();
+            idx.add(&ds.base).unwrap();
+            idx.seal().unwrap();
+            let before = idx.search(&ds.queries, 5, None).unwrap();
+            let path = tmp(&format!("flat_w{}.armpq", width.bits()));
+            save_pq4fs(&idx, &path).unwrap();
+            let loaded = load_pq4fs(&path).unwrap();
+            assert_eq!(loaded.width(), width);
+            let after = loaded.search(&ds.queries, 5, None).unwrap();
+            assert_eq!(before.labels, after.labels, "{width}");
+            assert_eq!(before.distances, after.distances, "{width}");
+        }
+        // IVF at a non-default width
+        let mut idx = IvfPq4::new_width(ds.dim, IvfParams::new(4), 8, CodeWidth::W2);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.nprobe = 4;
+        idx.seal().unwrap();
+        let (d0, l0) = idx.search(&ds.queries, 5).unwrap();
+        let path = tmp("ivf_w2.armpq");
+        save_ivfpq4(&idx, &path).unwrap();
+        let mut loaded = load_ivfpq4(&path).unwrap();
+        loaded.nprobe = 4;
+        assert_eq!(loaded.width, CodeWidth::W2);
+        assert_eq!(loaded.pq_m, 8);
         let (d1, l1) = loaded.search(&ds.queries, 5).unwrap();
         assert_eq!(l0, l1);
         assert_eq!(d0, d1);

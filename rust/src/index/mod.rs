@@ -121,6 +121,34 @@ pub trait Index: Send + Sync {
     fn search_req(&self, req: &SearchRequest<'_>) -> Result<SearchResult> {
         self.search(req.queries, req.k, req.params.as_ref())
     }
+    /// Fingerprint of this index's scan-LUT construction (a hash over the
+    /// trained quantizer). Two indexes with equal `Some` signatures accept
+    /// each other's [`Index::compute_scan_luts`] output — the contract the
+    /// coordinator uses to build per-query LUTs **once** per batch group
+    /// and reuse them across a shard fan-out. `None` (the default) opts
+    /// out of sharing.
+    fn lut_signature(&self) -> Option<u64> {
+        None
+    }
+    /// Per-query scan LUTs (`nq × lut_len` f32) for
+    /// [`Index::search_with_luts`] on any index with the same
+    /// [`Index::lut_signature`]. `None` if this index has no shared-LUT
+    /// fast path.
+    fn compute_scan_luts(&self, _queries: &[f32]) -> Option<Vec<f32>> {
+        None
+    }
+    /// [`Index::search`] with precomputed LUTs from a signature-equal
+    /// index. The default ignores the LUTs and recomputes (always correct,
+    /// never faster).
+    fn search_with_luts(
+        &self,
+        queries: &[f32],
+        _luts: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
+        self.search(queries, k, params)
+    }
     /// Compatibility shim: set a *default* runtime parameter from strings
     /// (e.g. `"nprobe" = "4"`). Parses through [`SearchParams::assign`];
     /// unknown or unsupported keys error. Prefer per-request

@@ -10,7 +10,7 @@ use super::params::{effective_fastscan, effective_ivf};
 use super::{Index, SearchParams, SearchResult};
 use crate::ivf::{IvfParams, IvfPq4};
 use crate::pq::fastscan::{search_fastscan_with_luts, FastScanParams};
-use crate::pq::{search_adc, PackedCodes4, PqParams, ProductQuantizer};
+use crate::pq::{search_adc, CodeWidth, PackedCodes, PqParams, ProductQuantizer};
 use crate::{Error, Result};
 
 /// "Original PQ" (paper Fig. 2 baseline): flat codes + in-memory f32 LUT
@@ -95,26 +95,41 @@ impl Index for IndexPq {
     }
 }
 
-/// The paper's contribution as a flat index: 4-bit PQ with the dual-lane
-/// SIMD fastscan kernel (faiss `IndexPQFastScan` analog).
+/// The paper's contribution as a flat index: PQ with the dual-lane SIMD
+/// fastscan kernel (faiss `IndexPQFastScan` analog), width-parametric —
+/// 2-, 4- or 8-bit codes on the same register model ([`CodeWidth`]). The
+/// type keeps its historical `…Pq4…` name; 4-bit is the default width.
 pub struct IndexPq4FastScan {
     dim: usize,
+    /// Internal quantizer parameters (`width.pq_params(m)`).
     params: PqParams,
+    /// User-facing sub-quantizers.
+    m: usize,
+    /// Fastscan code width.
+    width: CodeWidth,
     /// Default kernel parameters (per-request [`SearchParams`] override
     /// them without touching this).
     pub fastscan: FastScanParams,
     pq: Option<ProductQuantizer>,
     /// Flat staging codes; packed into the SIMD layout by [`Self::seal`].
     staging: Vec<u8>,
-    packed: Option<PackedCodes4>,
+    packed: Option<PackedCodes>,
     ntotal: usize,
 }
 
 impl IndexPq4FastScan {
+    /// 4-bit fastscan (the paper's configuration).
     pub fn new(dim: usize, m: usize) -> Self {
+        Self::new_width(dim, m, CodeWidth::W4)
+    }
+
+    /// Width-parametric constructor: `m` sub-quantizers at `width` bits.
+    pub fn new_width(dim: usize, m: usize, width: CodeWidth) -> Self {
         Self {
             dim,
-            params: PqParams::new_4bit(m),
+            params: width.pq_params(m),
+            m,
+            width,
             fastscan: FastScanParams::default(),
             pq: None,
             staging: Vec::new(),
@@ -127,22 +142,59 @@ impl IndexPq4FastScan {
         self.pq.as_ref()
     }
 
-    /// Flat staging codes (`ntotal × m`, one byte per sub-quantizer) —
-    /// the persistence layer serializes these.
+    /// Fastscan code width of this index.
+    pub fn width(&self) -> CodeWidth {
+        self.width
+    }
+
+    /// Flat staging codes (`ntotal × width.code_columns(m)`, one byte per
+    /// internal sub-quantizer) — the persistence layer serializes these.
     pub fn staging_codes(&self) -> &[u8] {
         &self.staging
     }
 
-    /// Rebuild from persisted parts (trained PQ + flat codes). The result
-    /// is sealed and ready to serve.
+    /// Rebuild from persisted parts (trained internal PQ + flat codes) at
+    /// 4-bit width. The result is sealed and ready to serve.
     pub fn from_parts(pq: ProductQuantizer, codes: Vec<u8>) -> Result<Self> {
-        if codes.len() % pq.m != 0 {
+        Self::from_parts_width(pq, codes, CodeWidth::W4)
+    }
+
+    /// [`IndexPq4FastScan::from_parts`] at an explicit width; `pq` is the
+    /// internal quantizer (`width.code_columns(m)` columns).
+    pub fn from_parts_width(
+        pq: ProductQuantizer,
+        codes: Vec<u8>,
+        width: CodeWidth,
+    ) -> Result<Self> {
+        if pq.m == 0 || codes.len() % pq.m != 0 {
             return Err(Error::InvalidParameter("codes not divisible by m".into()));
         }
+        // a width/codebook mismatch (corrupt or hand-edited file) must
+        // fail here, not return silently wrong distances at search time
+        if pq.ksub != width.sub_ksub() {
+            return Err(Error::InvalidParameter(format!(
+                "{width} fastscan needs a K={} quantizer, file has K={}",
+                width.sub_ksub(),
+                pq.ksub
+            )));
+        }
+        let m = match width {
+            CodeWidth::W8 => {
+                if pq.m % 2 != 0 {
+                    return Err(Error::InvalidParameter(
+                        "8-bit fastscan needs an even internal column count".into(),
+                    ));
+                }
+                pq.m / 2
+            }
+            _ => pq.m,
+        };
         let ntotal = codes.len() / pq.m;
         let mut index = Self {
             dim: pq.dim,
             params: PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed: 0 },
+            m,
+            width,
             fastscan: FastScanParams::default(),
             pq: Some(pq),
             staging: codes,
@@ -157,8 +209,8 @@ impl IndexPq4FastScan {
     /// Idempotent: a second call on an already-sealed index is a no-op.
     pub fn seal(&mut self) -> Result<()> {
         if self.packed.is_none() && !self.staging.is_empty() {
-            let m = self.pq.as_ref().ok_or(Error::NotTrained)?.m;
-            self.packed = Some(PackedCodes4::pack(&self.staging, m)?);
+            self.pq.as_ref().ok_or(Error::NotTrained)?;
+            self.packed = Some(PackedCodes::pack(&self.staging, self.m, self.width)?);
         }
         Ok(())
     }
@@ -166,6 +218,53 @@ impl IndexPq4FastScan {
     /// Whether all staged codes are packed (searchable without reseal).
     pub fn is_sealed(&self) -> bool {
         self.packed.is_some() || self.staging.is_empty()
+    }
+
+    fn search_luts(
+        &self,
+        queries: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+        luts: Option<&[f32]>,
+    ) -> Result<SearchResult> {
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        if queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        }
+        let nq = queries.len() / self.dim;
+        let lut_len = pq.m * pq.ksub;
+        if let Some(ls) = luts {
+            if ls.len() != nq * lut_len {
+                return Err(Error::InvalidParameter(format!(
+                    "precomputed luts length {} != nq {nq} × {lut_len}",
+                    ls.len()
+                )));
+            }
+        }
+        if k == 0 || nq == 0 || self.ntotal == 0 {
+            return Ok(SearchResult::empty(nq, k));
+        }
+        let packed = match &self.packed {
+            Some(p) => p,
+            None => return Err(Error::NotSealed),
+        };
+        let fs = effective_fastscan(&self.fastscan, params);
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for (qi, q) in queries.chunks(self.dim).enumerate() {
+            let owned;
+            let luts_f32 = match luts {
+                Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
+                None => {
+                    owned = pq.compute_luts(q);
+                    &owned[..]
+                }
+            };
+            let (d, l) = search_fastscan_with_luts(pq, packed, luts_f32, k, &fs, None);
+            distances.extend(d);
+            labels.extend(l);
+        }
+        Ok(SearchResult { k, distances, labels })
     }
 }
 
@@ -183,6 +282,7 @@ impl Index for IndexPq4FastScan {
     }
 
     fn train(&mut self, data: &[f32]) -> Result<()> {
+        self.width.validate(self.dim, self.m)?;
         self.pq = Some(ProductQuantizer::train(data, self.dim, &self.params)?);
         Ok(())
     }
@@ -206,28 +306,29 @@ impl Index for IndexPq4FastScan {
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<SearchResult> {
-        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        self.search_luts(queries, k, params, None)
+    }
+
+    fn lut_signature(&self) -> Option<u64> {
+        self.pq.as_ref().map(|pq| pq.signature())
+    }
+
+    fn compute_scan_luts(&self, queries: &[f32]) -> Option<Vec<f32>> {
+        let pq = self.pq.as_ref()?;
         if queries.len() % self.dim != 0 {
-            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+            return None;
         }
-        let nq = queries.len() / self.dim;
-        if k == 0 || nq == 0 || self.ntotal == 0 {
-            return Ok(SearchResult::empty(nq, k));
-        }
-        let packed = match &self.packed {
-            Some(p) => p,
-            None => return Err(Error::NotSealed),
-        };
-        let fs = effective_fastscan(&self.fastscan, params);
-        let mut distances = Vec::with_capacity(nq * k);
-        let mut labels = Vec::with_capacity(nq * k);
-        for q in queries.chunks(self.dim) {
-            let luts = pq.compute_luts(q);
-            let (d, l) = search_fastscan_with_luts(pq, packed, &luts, k, &fs, None);
-            distances.extend(d);
-            labels.extend(l);
-        }
-        Ok(SearchResult { k, distances, labels })
+        Some(pq.compute_luts_batch(queries))
+    }
+
+    fn search_with_luts(
+        &self,
+        queries: &[f32],
+        luts: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
+        self.search_luts(queries, k, params, Some(luts))
     }
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
@@ -243,21 +344,41 @@ impl Index for IndexPq4FastScan {
     }
 
     fn describe(&self) -> String {
-        format!("PQ{}x4fs(d={}, n={}, {:?})", self.params.m, self.dim, self.ntotal, self.fastscan.backend)
+        format!(
+            "PQ{}x{}fs(d={}, n={}, {:?})",
+            self.m,
+            self.width.bits(),
+            self.dim,
+            self.ntotal,
+            self.fastscan.backend
+        )
     }
 }
 
-/// IVF + (optional HNSW coarse) + 4-bit PQ fastscan — the Table 1 system.
+/// IVF + (optional HNSW coarse) + PQ fastscan — the Table 1 system,
+/// width-parametric like the flat index.
 pub struct IndexIvfPq4 {
     inner: IvfPq4,
 }
 
 impl IndexIvfPq4 {
     pub fn new(dim: usize, nlist: usize, m: usize, coarse_hnsw: bool, hnsw_m: usize) -> Self {
+        Self::new_width(dim, nlist, m, CodeWidth::W4, coarse_hnsw, hnsw_m)
+    }
+
+    /// Width-parametric constructor (`IVF…,PQ{m}x{2,4,8}fs`).
+    pub fn new_width(
+        dim: usize,
+        nlist: usize,
+        m: usize,
+        width: CodeWidth,
+        coarse_hnsw: bool,
+        hnsw_m: usize,
+    ) -> Self {
         let mut params = IvfParams::new(nlist);
         params.coarse_hnsw = coarse_hnsw;
         params.hnsw_m = hnsw_m;
-        Self { inner: IvfPq4::new(dim, params, PqParams::new_4bit(m)) }
+        Self { inner: IvfPq4::new_width(dim, params, m, width) }
     }
 
     pub fn inner(&self) -> &IvfPq4 {
@@ -308,6 +429,27 @@ impl Index for IndexIvfPq4 {
         Ok(SearchResult { k, distances, labels })
     }
 
+    fn lut_signature(&self) -> Option<u64> {
+        self.inner.pq.as_ref().map(|pq| pq.signature())
+    }
+
+    fn compute_scan_luts(&self, queries: &[f32]) -> Option<Vec<f32>> {
+        self.inner.compute_scan_luts(queries).ok()
+    }
+
+    fn search_with_luts(
+        &self,
+        queries: &[f32],
+        luts: &[f32],
+        k: usize,
+        params: Option<&SearchParams>,
+    ) -> Result<SearchResult> {
+        let (nprobe, ef_search, fs) = effective_ivf(params, self.inner.nprobe, &self.inner.fastscan);
+        let (distances, labels) =
+            self.inner.search_with_luts(queries, luts, k, nprobe, ef_search, &fs)?;
+        Ok(SearchResult { k, distances, labels })
+    }
+
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
         let mut p = SearchParams::default();
         p.assign(key, value)?;
@@ -324,14 +466,15 @@ impl Index for IndexIvfPq4 {
 
     fn describe(&self) -> String {
         format!(
-            "IVF{}{},PQ{}x4fs(d={}, n={}, nprobe={})",
+            "IVF{}{},PQ{}x{}fs(d={}, n={}, nprobe={})",
             self.inner.params.nlist,
             if self.inner.params.coarse_hnsw {
                 format!("_HNSW{}", self.inner.params.hnsw_m)
             } else {
                 String::new()
             },
-            self.inner.pq_params.m,
+            self.inner.pq_m,
+            self.inner.width.bits(),
             self.inner.dim,
             self.inner.ntotal(),
             self.inner.nprobe
@@ -474,6 +617,68 @@ mod tests {
         assert!(idx.add(&[0.0; 8]).is_err());
         let mut naive = IndexPq::new(8, PqParams::new_4bit(2));
         assert!(naive.add(&[0.0; 8]).is_err());
+    }
+
+    /// Build→seal→search round-trip per width, with describe strings and
+    /// width-specific validation errors.
+    #[test]
+    fn fastscan_widths_roundtrip() {
+        let ds = SyntheticDataset::gaussian(600, 10, 32, 108);
+        for width in CodeWidth::ALL {
+            let mut idx = IndexPq4FastScan::new_width(ds.dim, 8, width);
+            assert_eq!(idx.width(), width);
+            idx.train(&ds.base).unwrap();
+            idx.add(&ds.base).unwrap();
+            idx.seal().unwrap();
+            let r = idx.search(&ds.queries, 5, None).unwrap();
+            assert_eq!(r.nq(), 10, "{width}");
+            assert!(r.labels.iter().all(|&l| (-1..600).contains(&l)), "{width}");
+            let d = idx.describe();
+            assert!(
+                d.starts_with(&format!("PQ8x{}fs", width.bits())),
+                "{width}: {d}"
+            );
+        }
+        // 8-bit needs dim % 2m == 0: dim=32, m=16 → cols=32 ok; m=12 → 24 no
+        let mut bad = IndexPq4FastScan::new_width(32, 12, CodeWidth::W8);
+        let e = bad.train(&ds.base[..32 * 40]).unwrap_err().to_string();
+        assert!(e.contains("2*m"), "{e}");
+    }
+
+    /// Recall-monotonicity property (the Quicker-ADC trade-off): at fixed
+    /// M, more bits per code must not lose recall —
+    /// recall(2-bit) ≤ recall(4-bit) ≤ recall(8-bit), modulo small noise.
+    #[test]
+    fn recall_monotone_in_width() {
+        let ds = SyntheticDataset::gaussian(2000, 50, 32, 109);
+        let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+        // rerank off: recall reflects raw code fidelity, the property
+        // under test (rerank would let the exact pass paper over it)
+        let params = SearchParams::new().with_rerank(false).with_reservoir_factor(16);
+        let mut recalls = Vec::new();
+        for width in [CodeWidth::W2, CodeWidth::W4, CodeWidth::W8] {
+            let mut idx = IndexPq4FastScan::new_width(ds.dim, 8, width);
+            idx.train(&ds.train).unwrap();
+            idx.add(&ds.base).unwrap();
+            idx.seal().unwrap();
+            let r = idx.search(&ds.queries, 10, Some(&params)).unwrap();
+            recalls.push(recall_at_r(&gt, 1, &r.labels, 10, 10));
+        }
+        assert!(
+            recalls[0] <= recalls[1] + 0.06 && recalls[1] <= recalls[2] + 0.06,
+            "recall not monotone in width: 2-bit {:.3}, 4-bit {:.3}, 8-bit {:.3}",
+            recalls[0],
+            recalls[1],
+            recalls[2]
+        );
+        // and the coarsest-to-finest gap is a real accuracy difference,
+        // not a tie: 8-bit must beat 2-bit outright
+        assert!(
+            recalls[2] > recalls[0],
+            "8-bit ({:.3}) should beat 2-bit ({:.3})",
+            recalls[2],
+            recalls[0]
+        );
     }
 
     #[test]

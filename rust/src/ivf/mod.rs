@@ -14,8 +14,9 @@
 
 use crate::hnsw::{Hnsw, HnswParams};
 use crate::kmeans::{KMeans, KMeansParams};
-use crate::pq::fastscan::{scan_into_reservoir, FastScanParams, KernelLuts};
-use crate::pq::{PackedCodes4, PqParams, ProductQuantizer, QuantizedLuts};
+use crate::pq::bitwidth::build_width_luts;
+use crate::pq::fastscan::{scan_into_reservoir, FastScanParams};
+use crate::pq::{CodeWidth, PackedCodes, PqParams, ProductQuantizer};
 use crate::util::topk::{TopK, U16Reservoir};
 use crate::{Error, Result};
 
@@ -60,12 +61,12 @@ impl CoarseQuantizer {
     }
 }
 
-/// One inverted list: external ids + packed 4-bit codes.
+/// One inverted list: external ids + packed codes (width-parametric).
 struct IvfList {
     ids: Vec<i64>,
     /// Flat codes retained during building; dropped at seal time.
     staging: Vec<u8>,
-    packed: Option<PackedCodes4>,
+    packed: Option<PackedCodes>,
 }
 
 impl IvfList {
@@ -91,11 +92,20 @@ impl IvfParams {
     }
 }
 
-/// IVF + 4-bit PQ fastscan index (the paper's large-scale configuration).
+/// IVF + PQ fastscan index (the paper's large-scale configuration),
+/// width-parametric: the fastscan kernel runs at 2-, 4- or 8-bit codes
+/// ([`CodeWidth`]). The type keeps its historical `…Pq4` name — 4-bit is
+/// the paper's (and the default) operating point.
 pub struct IvfPq4 {
     pub dim: usize,
     pub params: IvfParams,
+    /// Internal quantizer parameters (`width.pq_params(pq_m)`; for 8-bit
+    /// this trains `2 × pq_m` half-space sub-quantizers).
     pub pq_params: PqParams,
+    /// User-facing sub-quantizers per vector.
+    pub pq_m: usize,
+    /// Fastscan code width.
+    pub width: CodeWidth,
     pub pq: Option<ProductQuantizer>,
     centroids: Vec<f32>,
     coarse: CoarseQuantizer,
@@ -113,11 +123,16 @@ pub struct IvfPq4 {
 }
 
 impl IvfPq4 {
+    /// 4-bit constructor (the paper's configuration). `pq_params` must be a
+    /// `K = 16` parameter set; use [`IvfPq4::new_width`] for 2-/8-bit.
     pub fn new(dim: usize, params: IvfParams, pq_params: PqParams) -> Self {
+        let pq_m = pq_params.m;
         Self {
             dim,
             params,
             pq_params,
+            pq_m,
+            width: CodeWidth::W4,
             pq: None,
             centroids: Vec::new(),
             coarse: CoarseQuantizer::Flat,
@@ -127,6 +142,15 @@ impl IvfPq4 {
             ef_default: 0,
             fastscan: FastScanParams::default(),
         }
+    }
+
+    /// Width-parametric constructor: `m` user-facing sub-quantizers scanned
+    /// at `width` bits per code.
+    pub fn new_width(dim: usize, params: IvfParams, m: usize, width: CodeWidth) -> Self {
+        let mut index = Self::new(dim, params, width.pq_params(m));
+        index.pq_m = m;
+        index.width = width;
+        index
     }
 
     pub fn is_trained(&self) -> bool {
@@ -142,6 +166,7 @@ impl IvfPq4 {
         if data.len() % self.dim != 0 {
             return Err(Error::DimMismatch { expected: self.dim, got: data.len() % self.dim });
         }
+        self.width.validate(self.dim, self.pq_m)?;
         let mut kp = KMeansParams::new(self.params.nlist);
         kp.iters = self.params.train_iters;
         kp.seed = self.params.seed;
@@ -214,10 +239,10 @@ impl IvfPq4 {
     /// Pack any dirty lists — ends the build phase. Idempotent: sealing an
     /// already-sealed index is a no-op.
     pub fn seal(&mut self) -> Result<()> {
-        let m = self.pq.as_ref().ok_or(Error::NotTrained)?.m;
+        self.pq.as_ref().ok_or(Error::NotTrained)?;
         for list in &mut self.lists {
             if list.packed.is_none() && !list.ids.is_empty() {
-                list.packed = Some(PackedCodes4::pack(&list.staging, m)?);
+                list.packed = Some(PackedCodes::pack(&list.staging, self.pq_m, self.width)?);
             }
         }
         Ok(())
@@ -260,11 +285,58 @@ impl IvfPq4 {
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
+        self.search_impl(queries, None, k, nprobe, ef_search, fastscan)
+    }
+
+    /// [`IvfPq4::search_with`] with precomputed per-query f32 LUTs
+    /// (`nq × lut_len`, from [`IvfPq4::compute_scan_luts`] of an index with
+    /// the same trained quantizer) — the batch-level LUT-reuse entry the
+    /// coordinator uses so one LUT build serves a whole shard fan-out.
+    pub fn search_with_luts(
+        &self,
+        queries: &[f32],
+        luts: &[f32],
+        k: usize,
+        nprobe: usize,
+        ef_search: Option<usize>,
+        fastscan: &FastScanParams,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
+        self.search_impl(queries, Some(luts), k, nprobe, ef_search, fastscan)
+    }
+
+    /// Per-query f32 scan LUTs (`nq × m_codes × sub_ksub`), shareable with
+    /// any index whose trained quantizer is identical.
+    pub fn compute_scan_luts(&self, queries: &[f32]) -> Result<Vec<f32>> {
+        let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
+        if queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        }
+        Ok(pq.compute_luts_batch(queries))
+    }
+
+    fn search_impl(
+        &self,
+        queries: &[f32],
+        luts: Option<&[f32]>,
+        k: usize,
+        nprobe: usize,
+        ef_search: Option<usize>,
+        fastscan: &FastScanParams,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if queries.len() % self.dim != 0 {
             return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
         }
         let nq = queries.len() / self.dim;
+        let lut_len = pq.m * pq.ksub;
+        if let Some(ls) = luts {
+            if ls.len() != nq * lut_len {
+                return Err(Error::InvalidParameter(format!(
+                    "precomputed luts length {} != nq {nq} × {lut_len}",
+                    ls.len()
+                )));
+            }
+        }
         if k == 0 || nq == 0 {
             return Ok((Vec::new(), Vec::new()));
         }
@@ -276,19 +348,29 @@ impl IvfPq4 {
         }
         let mut dists = Vec::with_capacity(nq * k);
         let mut labels = Vec::with_capacity(nq * k);
+        let mut luts_buf = Vec::new();
         for qi in 0..nq {
             let q = &queries[qi * self.dim..(qi + 1) * self.dim];
-            let (d, l) = self.search_one(pq, q, k, nprobe.max(1), ef_search, fastscan);
+            let luts_f32 = match luts {
+                Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
+                None => {
+                    luts_buf = pq.compute_luts(q);
+                    &luts_buf[..]
+                }
+            };
+            let (d, l) = self.search_one(pq, q, luts_f32, k, nprobe.max(1), ef_search, fastscan);
             dists.extend(d);
             labels.extend(l);
         }
         Ok((dists, labels))
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn search_one(
         &self,
         pq: &ProductQuantizer,
         q: &[f32],
+        luts_f32: &[f32],
         k: usize,
         nprobe: usize,
         ef_search: Option<usize>,
@@ -298,11 +380,10 @@ impl IvfPq4 {
         let probes =
             self.coarse.assign(&self.centroids, self.params.nlist, self.dim, q, nprobe, ef_search);
 
-        // 2. one LUT set shared across probed lists (by_residual = false)
-        let luts_f32 = pq.compute_luts(q);
-        let qluts = QuantizedLuts::from_f32(&luts_f32, pq.m, pq.ksub);
-        let m_pad = pq.m.div_ceil(2) * 2;
-        let kluts = KernelLuts::build(&qluts, m_pad);
+        // 2. one LUT set shared across probed lists (by_residual = false),
+        //    quantized/fused per the index's code width
+        let wl = build_width_luts(luts_f32, self.pq_m, self.width);
+        let (qluts, kluts) = (wl.qluts, wl.kernel);
 
         // 3. fastscan distance estimation over each probed list
         let mut reservoir = U16Reservoir::new(k, fastscan.reservoir_factor);
@@ -338,7 +419,7 @@ impl IvfPq4 {
                         for mi in 0..pq.m {
                             codes_buf[mi] = packed.code_at(j, mi);
                         }
-                        heap.push(pq.adc_distance(&luts_f32, &codes_buf), id);
+                        heap.push(pq.adc_distance(luts_f32, &codes_buf), id);
                     }
                     None => heap.push(qluts.decode(d16), id),
                 }
@@ -364,15 +445,35 @@ impl IvfPq4 {
 
     /// Rebuild from persisted parts; the result is sealed and ready to
     /// serve. The HNSW coarse graph is rebuilt from the centroids
-    /// (deterministic for a fixed seed).
+    /// (deterministic for a fixed seed). `width`/`m` describe the fastscan
+    /// layout (`pq` holds `width.code_columns(m)` internal sub-quantizers).
+    #[allow(clippy::too_many_arguments)]
     pub fn from_parts(
         dim: usize,
         params: IvfParams,
         pq_params: PqParams,
+        m: usize,
+        width: CodeWidth,
         pq: ProductQuantizer,
         centroids: Vec<f32>,
         lists: Vec<(Vec<i64>, Vec<u8>)>,
     ) -> Result<Self> {
+        if width.code_columns(m) != pq.m {
+            return Err(Error::InvalidParameter(format!(
+                "{width} layout needs {} quantizer columns, PQ has {}",
+                width.code_columns(m),
+                pq.m
+            )));
+        }
+        // width/codebook mismatch (corrupt or hand-edited file) must fail
+        // loudly here, not return silently wrong distances at search time
+        if pq.ksub != width.sub_ksub() {
+            return Err(Error::InvalidParameter(format!(
+                "{width} fastscan needs a K={} quantizer, file has K={}",
+                width.sub_ksub(),
+                pq.ksub
+            )));
+        }
         if lists.len() != params.nlist || centroids.len() != params.nlist * dim {
             return Err(Error::InvalidParameter("IVF parts shape mismatch".into()));
         }
@@ -399,6 +500,8 @@ impl IvfPq4 {
             dim,
             params,
             pq_params,
+            pq_m: m,
+            width,
             pq: Some(pq),
             centroids,
             coarse,
@@ -576,6 +679,68 @@ mod tests {
         let mut idx = IvfPq4::new(8, IvfParams::new(4), PqParams::new_4bit(2));
         assert!(idx.add(&[0.0; 8]).is_err());
         assert!(idx.search(&[0.0; 8], 1).is_err());
+    }
+
+    /// Every code width composes with IVF: probing every list with
+    /// re-ranking must match the flat exact-ADC scan over the same codes
+    /// (tie-proof — both rank by the identical per-code exact distance),
+    /// and the code memory scales with the width.
+    #[test]
+    fn all_widths_compose_with_ivf() {
+        use crate::pq::search_adc;
+        let data = clustered_data(1200, 16, 32, 71);
+        for width in CodeWidth::ALL {
+            let mut idx = IvfPq4::new_width(16, IvfParams::new(6), 8, width);
+            idx.train(&data).unwrap();
+            idx.add(&data).unwrap();
+            idx.seal().unwrap();
+            idx.nprobe = 6;
+            idx.fastscan.reservoir_factor = 64;
+            // flat reference over the same internal quantizer + codes
+            let pq = idx.pq.as_ref().unwrap();
+            let codes = pq.encode(&data).unwrap();
+            for qi in 0..8 {
+                let q = &data[qi * 16..(qi + 1) * 16];
+                let luts = pq.compute_luts(q);
+                let (d_flat, _) = search_adc(pq, &luts, &codes, None, 5);
+                let (d_ivf, l) = idx.search(q, 5).unwrap();
+                assert_eq!(l.len(), 5, "{width}");
+                assert!(d_ivf.windows(2).all(|w| w[0] <= w[1]), "{width}: unsorted {d_ivf:?}");
+                for r in 0..5 {
+                    assert!(
+                        (d_flat[r] - d_ivf[r]).abs() < 1e-4 * (1.0 + d_flat[r].abs()),
+                        "{width} q{qi} rank {r}: flat {} vs ivf {}",
+                        d_flat[r],
+                        d_ivf[r]
+                    );
+                }
+            }
+            let bits = idx.code_bits_per_vector();
+            let want = (width.bits() * 8) as f64; // m = 8
+            assert!(
+                bits >= want && bits < want * 1.4,
+                "{width}: bits/vec {bits} (want ≈ {want})"
+            );
+        }
+    }
+
+    /// Precomputed-LUT search (the coordinator's batch-level reuse entry)
+    /// must return bit-identical results to the self-computing path.
+    #[test]
+    fn search_with_luts_matches_search_with() {
+        let (mut idx, data) = build(1500, 16, 10, 8, false, 72);
+        idx.nprobe = 4;
+        let queries = &data[..5 * 16];
+        let luts = idx.compute_scan_luts(queries).unwrap();
+        let (d0, l0) = idx.search_with(queries, 6, 4, None, &idx.fastscan).unwrap();
+        let (d1, l1) =
+            idx.search_with_luts(queries, &luts, 6, 4, None, &idx.fastscan).unwrap();
+        assert_eq!(l0, l1);
+        assert_eq!(d0, d1);
+        // wrong-sized LUTs are rejected, not misread
+        assert!(idx
+            .search_with_luts(queries, &luts[..luts.len() - 1], 6, 4, None, &idx.fastscan)
+            .is_err());
     }
 
     #[test]

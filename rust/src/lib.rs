@@ -52,6 +52,15 @@
 //! The string-keyed `set_param(key, value)` API survives as a
 //! compatibility shim that parses into the same typed struct; prefer
 //! passing [`index::SearchParams`] per call.
+//!
+//! ## Code widths
+//!
+//! The fastscan kernel is generalized over code width
+//! ([`pq::CodeWidth`], Quicker-ADC style): `"PQ16x2fs"` scans 2-bit codes
+//! about twice as fast as the paper's `"PQ16x4fs"` at lower recall, and
+//! `"PQ16x8fs"` spends 8 bits per sub-quantizer for higher recall at
+//! about twice the cost — all three on the same dual-lane register model
+//! and composable with IVF (`"IVF100,PQ16x2fs,nprobe=8"`).
 
 pub mod config;
 pub mod coordinator;

@@ -8,9 +8,14 @@
 //! armpq client    --addr 127.0.0.1:7878 --nq 100 --k 10
 //! armpq bench-fig2   [--dataset sift|deep] [--n …] [--m 8,16,32,64]
 //! armpq bench-table1 [--n …] [--nlist …] [--nprobe 1,2,4]
-//! armpq bench-micro  [--m 16]
+//! armpq bench-micro  [--m 16] [--width 2,4,8]
+//! armpq bench-layout [--n …] [--m 16] [--width 2,4,8]
 //! armpq bench-pjrt   [--artifacts artifacts]
 //! ```
+//!
+//! Fastscan code width is part of the factory grammar (`PQ16x2fs`,
+//! `PQ16x8fs`, `IVF100,PQ16x2fs,nprobe=8`); the bench commands sweep it
+//! with `--width`.
 
 use armpq::config::ExperimentConfig;
 use armpq::coordinator::{IvfBackend, Server, ServerConfig};
@@ -69,10 +74,26 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
             Ok(())
         }
         "bench-micro" => {
+            let cfg = ExperimentConfig::from_args(args)?;
             let m = args.get_usize("m", 16);
-            let t = experiments::run_kernel_micro(m);
-            t.print();
-            t.save()?;
+            // `--width 2,4,8` (CLI or config file) sweeps the
+            // Quicker-ADC trade-off axis in one run
+            for &width in &cfg.widths {
+                let t = experiments::run_kernel_micro(m, width);
+                t.print();
+                t.save()?;
+            }
+            Ok(())
+        }
+        "bench-layout" => {
+            let cfg = ExperimentConfig::from_args(args)?;
+            let m = args.get_usize("m", 16);
+            let n = args.get_usize("n", 320_000);
+            for &width in &cfg.widths {
+                let t = experiments::run_ablation_layout(n, m, width, cfg.seed);
+                t.print();
+                t.save()?;
+            }
             Ok(())
         }
         "bench-pjrt" => {
@@ -102,11 +123,14 @@ commands:
   client        drive a running server
   bench-fig2    paper Fig. 2 (PQ vs 4-bit PQ recall/QPS sweep)
   bench-table1  paper Table 1 (IVF+HNSW+PQ16x4fs at scale)
-  bench-micro   paper Fig. 1 lookup-op micro-benchmark
+  bench-micro   paper Fig. 1 lookup-op micro-benchmark (--width 2,4,8)
+  bench-layout  interleaved-vs-flat layout ablation (--width 2,4,8)
   bench-pjrt    3-layer PJRT end-to-end comparison
 common flags: --dataset sift|deep --n <int> --nq <int> --k <int>
               --factory <spec> --nprobe <list> --seed <int> --config <file>
-              --backend portable|ssse3|neon (default: best for this host)";
+              --backend portable|ssse3|neon (default: best for this host)
+              --width 2|4|8 (fastscan code width for kernel benches;
+              index width goes in the factory string, e.g. PQ16x2fs)";
 
 fn info(args: &Args) -> armpq::Result<()> {
     println!("armpq {} — ARM 4-bit PQ reproduction", env!("CARGO_PKG_VERSION"));

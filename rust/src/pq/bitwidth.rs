@@ -1,0 +1,329 @@
+//! The multi-bitwidth fastscan subsystem: 2-, 4- and 8-bit in-register ADC
+//! on one dual-lane register model (Quick ADC / Quicker ADC, arXiv
+//! 1704.07355 / 1812.09162, transplanted onto the paper's ARM kernel).
+//!
+//! The paper's 4-bit kernel is one point on the accuracy/speed curve. The
+//! same 16-entry dual-table shuffle supports two more operating points, as
+//! long as every width is expressed in shuffle-width (≤16-entry) tables:
+//!
+//! * **2-bit** (`K = 4`, faster/coarser): four codes fit one byte. Two
+//!   adjacent sub-quantizers are *fused* into one 16-entry sum-table
+//!   `T_fused[c₀ | c₁≪2] = T₀[c₀] + T₁[c₁]` — Quicker ADC's table-grouping
+//!   idea — so a fused pair scans exactly like one 4-bit sub-quantizer:
+//!   half the code bytes, half the shuffles of 4-bit at equal `M`.
+//! * **4-bit** (`K = 16`): the paper's kernel, unchanged.
+//! * **8-bit** (`K = 256` product-structured, slower/finer): each 8-bit
+//!   sub-quantizer is the Cartesian product of two independent 4-bit
+//!   quantizers over the two halves of its sub-space, so its 256-entry
+//!   table is *separable*: `T[c] = T_lo[c & 0xF] + T_hi[c ≫ 4]`. The scan
+//!   does paired low/high-nibble lookups against two 16-entry tables with
+//!   the existing dual `pshufb`/`vqtbl1q_u8` shuffle — twice the work of
+//!   4-bit at equal `M`, twice the code bits.
+//!
+//! Internally every width therefore reduces to a roster of 16-entry
+//! **table rows** (fused rows for 2-bit, per-sub-quantizer rows for 4-bit,
+//! lo/hi half-space rows for 8-bit) plus a [`LaneWiring`] telling the
+//! kernel how a 32-byte code chunk's nibbles map onto the row pair —
+//! see [`crate::pq::fastscan`]. [`CodeWidth`] carries that geometry;
+//! [`build_width_luts`] turns per-query f32 tables into the
+//! quantized+arranged kernel form; [`crate::pq::PackedCodes`] is the
+//! matching width-parametric code layout.
+
+use crate::pq::codebook::PqParams;
+use crate::pq::fastscan::{KernelLuts, LaneWiring};
+use crate::pq::lut::QuantizedLuts;
+use crate::{Error, Result};
+
+/// Bits per PQ code: the fastscan accuracy/speed axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CodeWidth {
+    /// 2-bit codes, `K = 4` (Quicker ADC fused pairs): fastest, coarsest.
+    W2,
+    /// 4-bit codes, `K = 16`: the paper's kernel.
+    W4,
+    /// 8-bit codes, `K = 256` product-structured (paired nibble tables):
+    /// slowest, finest.
+    W8,
+}
+
+impl CodeWidth {
+    pub const ALL: [CodeWidth; 3] = [CodeWidth::W2, CodeWidth::W4, CodeWidth::W8];
+
+    /// Bits per code (2, 4, 8).
+    #[inline]
+    pub fn bits(self) -> usize {
+        match self {
+            CodeWidth::W2 => 2,
+            CodeWidth::W4 => 4,
+            CodeWidth::W8 => 8,
+        }
+    }
+
+    /// Parse the factory-string suffix digit (`PQ16x{2,4,8}fs`).
+    pub fn from_bits(bits: usize) -> Option<CodeWidth> {
+        match bits {
+            2 => Some(CodeWidth::W2),
+            4 => Some(CodeWidth::W4),
+            8 => Some(CodeWidth::W8),
+            _ => None,
+        }
+    }
+
+    /// Codewords per (user-facing) sub-quantizer: `2^bits`.
+    #[inline]
+    pub fn ksub(self) -> usize {
+        1 << self.bits()
+    }
+
+    /// Codewords per *trained* sub-quantizer — the shuffle-width codebook
+    /// the `ProductQuantizer` actually k-means: 4 for 2-bit, 16 otherwise
+    /// (8-bit trains two 16-codeword halves per sub-quantizer).
+    #[inline]
+    pub fn sub_ksub(self) -> usize {
+        match self {
+            CodeWidth::W2 => 4,
+            CodeWidth::W4 | CodeWidth::W8 => 16,
+        }
+    }
+
+    /// Trained sub-quantizer count (= code columns [`crate::pq::PackedCodes`]
+    /// packs and re-ranking reads) for `m` user-facing sub-quantizers:
+    /// 8-bit splits each into a lo/hi half-space pair.
+    #[inline]
+    pub fn code_columns(self, m: usize) -> usize {
+        match self {
+            CodeWidth::W2 | CodeWidth::W4 => m,
+            CodeWidth::W8 => 2 * m,
+        }
+    }
+
+    /// 32-byte code chunks (= dual-table registers) per 32-vector block.
+    /// Each chunk covers two 16-entry table rows.
+    #[inline]
+    pub fn chunks(self, m: usize) -> usize {
+        match self {
+            // fused pairs, then fused rows grouped two per chunk
+            CodeWidth::W2 => m.div_ceil(2).div_ceil(2),
+            CodeWidth::W4 => m.div_ceil(2),
+            CodeWidth::W8 => m,
+        }
+    }
+
+    /// 16-entry table rows the kernel consumes (chunk count × 2, phantom
+    /// rows zero-padded).
+    #[inline]
+    pub fn lut_rows(self, m: usize) -> usize {
+        2 * self.chunks(m)
+    }
+
+    /// How a chunk's nibbles address the chunk's two table rows.
+    #[inline]
+    pub fn wiring(self) -> LaneWiring {
+        match self {
+            CodeWidth::W2 | CodeWidth::W4 => LaneWiring::PairedTables,
+            CodeWidth::W8 => LaneWiring::SplitNibble,
+        }
+    }
+
+    /// Training parameters for the internal [`crate::pq::ProductQuantizer`].
+    pub fn pq_params(self, m: usize) -> PqParams {
+        let mut p = PqParams::new_4bit(self.code_columns(m));
+        p.ksub = self.sub_ksub();
+        p
+    }
+
+    /// Check `dim`/`m` are compatible with this width before training, with
+    /// a width-specific message (8-bit needs `dim % 2m == 0` because each
+    /// sub-space is split into two quantized halves).
+    pub fn validate(self, dim: usize, m: usize) -> Result<()> {
+        let cols = self.code_columns(m);
+        if m == 0 || cols == 0 || dim % cols != 0 {
+            return Err(Error::InvalidParameter(match self {
+                CodeWidth::W8 => format!(
+                    "8-bit fastscan splits each sub-quantizer into nibble halves: \
+                     dim {dim} must be divisible by 2*m = {cols}"
+                ),
+                _ => format!("dim {dim} not divisible by m {m}"),
+            }));
+        }
+        Ok(())
+    }
+
+    /// Stable name used by CLI flags / bench tables ("2", "4", "8").
+    pub fn name(self) -> &'static str {
+        match self {
+            CodeWidth::W2 => "2",
+            CodeWidth::W4 => "4",
+            CodeWidth::W8 => "8",
+        }
+    }
+}
+
+impl std::fmt::Display for CodeWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-bit", self.bits())
+    }
+}
+
+/// A query's scan tables in both forms the search path needs: the affine
+/// decode parameters ([`QuantizedLuts`], rows already fused/split per
+/// width) and the kernel-arranged dual-table bytes ([`KernelLuts`]).
+pub struct WidthLuts {
+    pub qluts: QuantizedLuts,
+    pub kernel: KernelLuts,
+}
+
+/// Quantize + arrange per-query f32 tables for a width's kernel.
+///
+/// `luts_f32` is the internal quantizer's table, `code_columns(m) ×
+/// sub_ksub` (i.e. exactly `ProductQuantizer::compute_luts` of the PQ that
+/// [`CodeWidth::pq_params`] trained):
+///
+/// * 2-bit: adjacent 4-entry rows are fused into 16-entry sum-tables
+///   *before* u8 quantization, so the fused rows use the full byte range.
+/// * 4-bit: rows pass through (the existing path).
+/// * 8-bit: the `2m` half-space rows map one-to-one onto lo/hi table rows.
+pub fn build_width_luts(luts_f32: &[f32], m: usize, width: CodeWidth) -> WidthLuts {
+    let cols = width.code_columns(m);
+    let sub_ksub = width.sub_ksub();
+    debug_assert_eq!(luts_f32.len(), cols * sub_ksub, "luts shape vs width");
+    let qluts = match width {
+        CodeWidth::W2 => {
+            let fused = fuse_2bit_rows(luts_f32, m);
+            QuantizedLuts::from_f32(&fused, m.div_ceil(2), 16)
+        }
+        CodeWidth::W4 | CodeWidth::W8 => QuantizedLuts::from_f32(luts_f32, cols, 16),
+    };
+    let kernel = KernelLuts::build_wired(&qluts, width.lut_rows(m), width.wiring());
+    WidthLuts { qluts, kernel }
+}
+
+/// Fuse adjacent 2-bit (4-entry) f32 rows into 16-entry sum-tables:
+/// `fused[p][c₀ | c₁≪2] = row(2p)[c₀] + row(2p+1)[c₁]`. An odd trailing
+/// sub-quantizer fuses with a phantom all-zero partner (its `c₁` index is
+/// always 0 at scan time, so the duplicated entries are never addressed).
+fn fuse_2bit_rows(luts_f32: &[f32], m: usize) -> Vec<f32> {
+    let nfused = m.div_ceil(2);
+    let mut fused = vec![0.0f32; nfused * 16];
+    for p in 0..nfused {
+        let a = &luts_f32[(2 * p) * 4..(2 * p) * 4 + 4];
+        for i in 0..16 {
+            let hi = if 2 * p + 1 < m { luts_f32[(2 * p + 1) * 4 + (i >> 2)] } else { 0.0 };
+            fused[p * 16 + i] = a[i & 3] + hi;
+        }
+    }
+    fused
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn geometry_per_width() {
+        // (width, m) → (code_columns, chunks, lut_rows)
+        for (w, m, cols, chunks) in [
+            (CodeWidth::W2, 16, 16, 4),
+            (CodeWidth::W2, 5, 5, 2), // 3 fused rows → 2 chunks
+            (CodeWidth::W2, 1, 1, 1),
+            (CodeWidth::W4, 16, 16, 8),
+            (CodeWidth::W4, 3, 3, 2),
+            (CodeWidth::W8, 16, 32, 16),
+            (CodeWidth::W8, 1, 2, 1),
+        ] {
+            assert_eq!(w.code_columns(m), cols, "{w} m={m}");
+            assert_eq!(w.chunks(m), chunks, "{w} m={m}");
+            assert_eq!(w.lut_rows(m), 2 * chunks, "{w} m={m}");
+        }
+    }
+
+    #[test]
+    fn bits_name_roundtrip() {
+        for w in CodeWidth::ALL {
+            assert_eq!(CodeWidth::from_bits(w.bits()), Some(w));
+            assert_eq!(w.name(), w.bits().to_string());
+            assert_eq!(w.ksub(), 1 << w.bits());
+        }
+        assert_eq!(CodeWidth::from_bits(3), None);
+        assert_eq!(CodeWidth::from_bits(16), None);
+    }
+
+    #[test]
+    fn validate_messages() {
+        assert!(CodeWidth::W4.validate(64, 16).is_ok());
+        assert!(CodeWidth::W2.validate(64, 16).is_ok());
+        assert!(CodeWidth::W8.validate(64, 32).is_ok());
+        // dim 64 % (2*24) != 0 — the 8-bit message must name the 2m rule
+        let e = CodeWidth::W8.validate(64, 24).unwrap_err().to_string();
+        assert!(e.contains("2*m"), "{e}");
+        assert!(CodeWidth::W4.validate(10, 3).is_err());
+        assert!(CodeWidth::W4.validate(10, 0).is_err());
+    }
+
+    #[test]
+    fn fused_rows_are_exact_sums() {
+        let mut rng = Rng::new(71);
+        let m = 7; // odd: last row fuses with a phantom partner
+        let luts: Vec<f32> = (0..m * 4).map(|_| rng.next_f32() * 5.0).collect();
+        let fused = fuse_2bit_rows(&luts, m);
+        assert_eq!(fused.len(), 4 * 16);
+        for p in 0..3 {
+            for c0 in 0..4 {
+                for c1 in 0..4 {
+                    let want = luts[2 * p * 4 + c0] + luts[(2 * p + 1) * 4 + c1];
+                    assert_eq!(fused[p * 16 + (c0 | (c1 << 2))], want);
+                }
+            }
+        }
+        // phantom partner: index c1 = 0 plane equals the lone row
+        for c0 in 0..4 {
+            assert_eq!(fused[3 * 16 + c0], luts[6 * 4 + c0]);
+        }
+    }
+
+    #[test]
+    fn width_luts_decode_matches_f32_sum() {
+        // For every width: quantize random f32 tables, accumulate a random
+        // code assignment through the kernel rows, decode, and compare with
+        // the exact f32 sum within the quantization error bound.
+        let mut rng = Rng::new(72);
+        for width in CodeWidth::ALL {
+            let m = 8;
+            let cols = width.code_columns(m);
+            let sub_ksub = width.sub_ksub();
+            let luts: Vec<f32> =
+                (0..cols * sub_ksub).map(|_| rng.next_f32() * 7.0 + 1.0).collect();
+            let wl = build_width_luts(&luts, m, width);
+            for _ in 0..50 {
+                let codes: Vec<usize> = (0..cols).map(|_| rng.below(sub_ksub)).collect();
+                let exact: f32 = (0..cols).map(|c| luts[c * sub_ksub + codes[c]]).sum();
+                // accumulate via the width's table rows
+                let acc: u16 = match width {
+                    CodeWidth::W2 => (0..m.div_ceil(2))
+                        .map(|p| {
+                            let c1 = if 2 * p + 1 < m { codes[2 * p + 1] } else { 0 };
+                            wl.qluts.row(p)[codes[2 * p] | (c1 << 2)] as u16
+                        })
+                        .sum(),
+                    _ => (0..cols).map(|c| wl.qluts.row(c)[codes[c]] as u16).sum(),
+                };
+                let approx = wl.qluts.decode(acc);
+                assert!(
+                    (exact - approx).abs() <= wl.qluts.max_abs_error() + 1e-3,
+                    "{width}: exact {exact} approx {approx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_rows_padded_with_zeros() {
+        let mut rng = Rng::new(73);
+        let m = 3; // W2: 2 fused rows → 1 chunk... div_ceil(2)=2 rows, pad to 2
+        let luts: Vec<f32> = (0..m * 4).map(|_| rng.next_f32()).collect();
+        let wl = build_width_luts(&luts, m, CodeWidth::W2);
+        assert_eq!(wl.kernel.lut_rows, CodeWidth::W2.lut_rows(m));
+        assert_eq!(wl.kernel.bytes.len(), wl.kernel.lut_rows * 16);
+    }
+}

@@ -159,6 +159,18 @@ impl ProductQuantizer {
         luts
     }
 
+    /// [`ProductQuantizer::compute_luts`] for a whole query batch
+    /// (`nq × dim` → `nq × m × ksub`, row-major) — the shape the
+    /// coordinator's batch-level LUT reuse passes between indexes.
+    pub fn compute_luts_batch(&self, queries: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(queries.len() % self.dim, 0);
+        let mut out = Vec::with_capacity((queries.len() / self.dim) * self.m * self.ksub);
+        for q in queries.chunks(self.dim) {
+            out.extend(self.compute_luts(q));
+        }
+        out
+    }
+
     /// Exact ADC distance of a coded vector given f32 LUTs (`m × ksub`).
     #[inline]
     pub fn adc_distance(&self, luts: &[f32], codes: &[u8]) -> f32 {
@@ -172,6 +184,27 @@ impl ProductQuantizer {
     /// Bytes per encoded vector before 4-bit packing.
     pub fn code_size(&self) -> usize {
         self.m
+    }
+
+    /// FNV-1a fingerprint over shape + codeword bits. Two quantizers with
+    /// equal signatures produce identical `compute_luts` output for any
+    /// query, so their LUTs are interchangeable — the coordinator's
+    /// batch-level LUT-reuse contract ([`crate::index::Index::lut_signature`]).
+    pub fn signature(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        eat(&(self.dim as u64).to_le_bytes());
+        eat(&(self.m as u64).to_le_bytes());
+        eat(&(self.ksub as u64).to_le_bytes());
+        for &c in &self.centroids {
+            eat(&c.to_bits().to_le_bytes());
+        }
+        h
     }
 }
 

@@ -1,37 +1,57 @@
-//! The 4-bit PQ fastscan kernel — the paper's §3, end to end.
+//! The multi-bitwidth PQ fastscan kernel — the paper's §3, end to end,
+//! generalized over code width (see [`crate::pq::bitwidth`]).
 //!
-//! Per 32-vector block and per sub-quantizer pair `(q, q+1)`:
+//! Per 32-vector block and per 32-byte code chunk:
 //!
 //! 1. one 32-byte load of packed codes (virtual 256-bit register),
 //! 2. nibble extraction (`& 0x0F`, `>> 4`),
 //! 3. **dual-table shuffle** — the 256-bit `_mm256_shuffle_epi8` emulated
-//!    as two 128-bit `vqtbl1q_u8`, lane-lo against `T_q`, lane-hi against
-//!    `T_{q+1}` (Fig. 1c),
+//!    as two 128-bit `vqtbl1q_u8` (Fig. 1c), wired per [`LaneWiring`]:
+//!    * [`LaneWiring::PairedTables`] (2-/4-bit): lane-lo indices against
+//!      `T_q`, lane-hi against `T_{q+1}`; low nibbles are vectors 0..16,
+//!      high nibbles vectors 16..32,
+//!    * [`LaneWiring::SplitNibble`] (8-bit): each full code byte's low
+//!      nibble against `T_lo` and high nibble against `T_hi` — the paired
+//!      half-space lookups of the product-structured 8-bit tables,
 //! 4. zero-extend and saturating-accumulate into u16 lanes.
 //!
-//! After the pair loop, 32 quantized distances are compared against the
+//! After the chunk loop, 32 quantized distances are compared against the
 //! current reservoir threshold with a SIMD compare + emulated `movemask`
 //! (the AVX2-only instruction the paper re-creates), and only surviving
 //! lanes touch the reservoir. Candidates are optionally re-ranked with the
 //! exact f32 tables.
 //!
-//! Three differential-tested implementations: the portable NEON-semantics
-//! model ([`crate::simd`]), a real-SIMD SSSE3 path ([`crate::simd::x86`])
-//! and a real ARM NEON path ([`crate::simd::neon`]) — the paper's actual
-//! target, with the dual `vqtbl1q_u8` shuffle and `vshrn`-based movemask.
+//! Three differential-tested implementations per width: the portable
+//! NEON-semantics model ([`crate::simd`]), a real-SIMD SSSE3 path
+//! ([`crate::simd::x86`]) and a real ARM NEON path ([`crate::simd::neon`])
+//! — the paper's actual target, with the dual `vqtbl1q_u8` shuffle and
+//! `vshrn`-based movemask.
 
+use crate::pq::bitwidth::build_width_luts;
 use crate::pq::codebook::ProductQuantizer;
-use crate::pq::layout::PackedCodes4;
+use crate::pq::layout::PackedCodes;
 use crate::pq::lut::QuantizedLuts;
 use crate::pq::BLOCK_SIZE;
 use crate::simd::{best_backend, Backend, Simd256u16, Simd256u8};
 use crate::util::topk::{TopK, U16Reservoir};
 
 /// Register budget of the fused scans: dual-table registers are hoisted
-/// out of the block loop, so the pair count must be bounded. Larger M
+/// out of the block loop, so the chunk count must be bounded. Larger M
 /// falls back to the per-block dispatch path (same results, reloads
 /// tables per block).
-const MAX_PAIRS: usize = 128;
+const MAX_CHUNKS: usize = 128;
+
+/// How a 32-byte code chunk's nibbles address its two 16-entry table rows
+/// (the kernel-level residue of [`crate::pq::bitwidth::CodeWidth`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneWiring {
+    /// 2-/4-bit: chunk lanes are two (fused) sub-quantizers; a byte's low
+    /// nibble is the code of vectors 0..16, the high nibble vectors 16..32.
+    PairedTables,
+    /// 8-bit: chunk lanes are the code bytes of vectors 0..16 / 16..32; a
+    /// byte's low/high nibbles index the lo/hi half-space tables.
+    SplitNibble,
+}
 
 /// Fastscan search options.
 #[derive(Clone, Debug)]
@@ -51,23 +71,41 @@ impl Default for FastScanParams {
     }
 }
 
-/// LUTs padded/arranged for the kernel: `m_pad × 16` bytes, so the pair
-/// `(2p, 2p+1)` is one contiguous 32-byte dual-table register.
+/// LUTs padded/arranged for the kernel: `lut_rows × 16` bytes, so the row
+/// pair `(2p, 2p+1)` is one contiguous 32-byte dual-table register, plus
+/// the [`LaneWiring`] telling the kernel how code nibbles address the pair.
 pub struct KernelLuts {
     pub bytes: Vec<u8>,
-    pub m_pad: usize,
+    /// 16-byte table rows (chunk count × 2; for 4-bit, M padded to even).
+    pub lut_rows: usize,
+    pub wiring: LaneWiring,
 }
 
 impl KernelLuts {
-    pub fn build(qluts: &QuantizedLuts, m_pad: usize) -> Self {
-        assert_eq!(qluts.ksub, 16, "fastscan requires ksub=16 (4-bit codes)");
-        let mut bytes = vec![0u8; m_pad * 16];
+    /// 4-bit-compatible build: one row per quantized sub-quantizer table,
+    /// paired wiring. Width-aware construction (2-bit fusing, 8-bit
+    /// half-space rows) lives in [`crate::pq::bitwidth::build_width_luts`].
+    pub fn build(qluts: &QuantizedLuts, lut_rows: usize) -> Self {
+        Self::build_wired(qluts, lut_rows, LaneWiring::PairedTables)
+    }
+
+    /// Arrange quantized rows for the kernel with an explicit wiring.
+    pub fn build_wired(qluts: &QuantizedLuts, lut_rows: usize, wiring: LaneWiring) -> Self {
+        assert_eq!(qluts.ksub, 16, "kernel tables are 16-entry shuffle rows");
+        assert!(lut_rows >= qluts.m, "lut_rows must cover every quantized row");
+        let mut bytes = vec![0u8; lut_rows * 16];
         for mi in 0..qluts.m {
             bytes[mi * 16..(mi + 1) * 16].copy_from_slice(qluts.row(mi));
         }
-        // phantom sub-quantizer rows (odd-M padding) stay all-zero: they
-        // contribute nothing to any distance.
-        Self { bytes, m_pad }
+        // phantom rows (odd-M padding) stay all-zero: they contribute
+        // nothing to any distance.
+        Self { bytes, lut_rows, wiring }
+    }
+
+    /// 32-byte chunks per block this table set expects.
+    #[inline]
+    pub fn chunks(&self) -> usize {
+        self.lut_rows / 2
     }
 
     #[inline]
@@ -81,18 +119,27 @@ impl KernelLuts {
 /// Portable (NEON-semantics) block kernel: 32 quantized distances.
 #[inline]
 pub fn accumulate_block_portable(block: &[u8], luts: &KernelLuts, out: &mut [u16; BLOCK_SIZE]) {
-    let npairs = luts.m_pad / 2;
+    let nchunks = luts.chunks();
+    let split = luts.wiring == LaneWiring::SplitNibble;
     let mask = Simd256u8::splat(0x0F);
     let mut acc_a = Simd256u16::zero(); // vectors 0..16
     let mut acc_b = Simd256u16::zero(); // vectors 16..32
-    for p in 0..npairs {
+    for p in 0..nchunks {
         let c = Simd256u8::load(&block[p * 32..(p + 1) * 32]);
-        let clo = c.and(mask); // codes of (q, q+1) for v0..v15
-        let chi = c.shr4(); // codes of (q, q+1) for v16..v31 (already < 16)
-        let tables = Simd256u8::load(luts.pair(p)); // lane-lo: T_q, lane-hi: T_{q+1}
-        let r0 = Simd256u8::shuffle_dual(tables, clo);
-        let r1 = Simd256u8::shuffle_dual(tables, chi);
-        let (w00, w01) = r0.widen(); // contrib of q / q+1 for v0..15
+        // index registers feeding the two shuffles; in both wirings r0's
+        // lanes all belong to vectors 0..16 and r1's to vectors 16..32
+        let (i0, i1) = if split {
+            // 8-bit: lane-lo = low nibbles → T_lo, lane-hi = high → T_hi
+            (c.nibble_split_lo(), c.nibble_split_hi())
+        } else {
+            // 2-/4-bit: low nibbles = (fused) codes of (q, q+1) for v0..15,
+            // high nibbles the same for v16..31 (already < 16 after shr4)
+            (c.and(mask), c.shr4())
+        };
+        let tables = Simd256u8::load(luts.pair(p)); // lane-lo: T_q/T_lo, lane-hi: T_{q+1}/T_hi
+        let r0 = Simd256u8::shuffle_dual(tables, i0);
+        let r1 = Simd256u8::shuffle_dual(tables, i1);
+        let (w00, w01) = r0.widen(); // both table contributions for v0..15
         acc_a = acc_a.sat_add(w00).sat_add(w01);
         let (w10, w11) = r1.widen();
         acc_b = acc_b.sat_add(w10).sat_add(w11);
@@ -109,17 +156,28 @@ pub fn accumulate_block_portable(block: &[u8], luts: &KernelLuts, out: &mut [u16
 #[target_feature(enable = "ssse3")]
 pub unsafe fn accumulate_block_ssse3(block: &[u8], luts: &KernelLuts, out: &mut [u16; BLOCK_SIZE]) {
     use crate::simd::x86::{X86Simd256u16, X86Simd256u8};
-    let npairs = luts.m_pad / 2;
+    let nchunks = luts.chunks();
+    let split = luts.wiring == LaneWiring::SplitNibble;
     let mask = X86Simd256u8::splat(0x0F);
     let mut acc_a = X86Simd256u16::zero();
     let mut acc_b = X86Simd256u16::zero();
-    for p in 0..npairs {
+    for p in 0..nchunks {
         let c = X86Simd256u8::load(block.as_ptr().add(p * 32));
         let clo = c.and(mask);
         let chi = c.shr4(); // includes the &0x0F internally
+        // paired: lo/hi nibbles are the vector halves; split (8-bit): each
+        // lane's lo/hi nibbles address T_lo/T_hi for that lane's vectors
+        let (i0, i1) = if split {
+            (
+                X86Simd256u8 { lo: clo.lo, hi: chi.lo },
+                X86Simd256u8 { lo: clo.hi, hi: chi.hi },
+            )
+        } else {
+            (clo, chi)
+        };
         let tables = X86Simd256u8::load(luts.bytes.as_ptr().add(p * 32));
-        let r0 = X86Simd256u8::shuffle_dual(tables, clo);
-        let r1 = X86Simd256u8::shuffle_dual(tables, chi);
+        let r0 = X86Simd256u8::shuffle_dual(tables, i0);
+        let r1 = X86Simd256u8::shuffle_dual(tables, i1);
         let (w00, w01) = r0.widen();
         acc_a = acc_a.sat_add(w00).sat_add(w01);
         let (w10, w11) = r1.widen();
@@ -141,17 +199,28 @@ pub unsafe fn accumulate_block_ssse3(block: &[u8], luts: &KernelLuts, out: &mut 
 #[target_feature(enable = "neon")]
 pub unsafe fn accumulate_block_neon(block: &[u8], luts: &KernelLuts, out: &mut [u16; BLOCK_SIZE]) {
     use crate::simd::neon::{NeonSimd256u16, NeonSimd256u8};
-    let npairs = luts.m_pad / 2;
+    let nchunks = luts.chunks();
+    let split = luts.wiring == LaneWiring::SplitNibble;
     let mask = NeonSimd256u8::splat(0x0F);
     let mut acc_a = NeonSimd256u16::zero(); // vectors 0..16
     let mut acc_b = NeonSimd256u16::zero(); // vectors 16..32
-    for p in 0..npairs {
+    for p in 0..nchunks {
         let c = NeonSimd256u8::load(block.as_ptr().add(p * 32));
-        let clo = c.and(mask); // codes of (q, q+1) for v0..v15
-        let chi = c.shr4(); // codes of (q, q+1) for v16..v31 (already < 16)
+        let clo = c.and(mask);
+        let chi = c.shr4(); // already < 16
+        // paired: lo/hi nibbles are the vector halves; split (8-bit): each
+        // lane's lo/hi nibbles address T_lo/T_hi for that lane's vectors
+        let (i0, i1) = if split {
+            (
+                NeonSimd256u8 { lo: clo.lo, hi: chi.lo },
+                NeonSimd256u8 { lo: clo.hi, hi: chi.hi },
+            )
+        } else {
+            (clo, chi)
+        };
         let tables = NeonSimd256u8::load(luts.bytes.as_ptr().add(p * 32));
-        let r0 = NeonSimd256u8::shuffle_dual(tables, clo);
-        let r1 = NeonSimd256u8::shuffle_dual(tables, chi);
+        let r0 = NeonSimd256u8::shuffle_dual(tables, i0);
+        let r1 = NeonSimd256u8::shuffle_dual(tables, i1);
         let (w00, w01) = r0.widen();
         acc_a = acc_a.sat_add(w00).sat_add(w01);
         let (w10, w11) = r1.widen();
@@ -184,10 +253,15 @@ fn accumulate_block(
 
 /// All quantized distances (n entries) — tests, ablations, IVF internals.
 pub fn fastscan_distances_all(
-    packed: &PackedCodes4,
+    packed: &PackedCodes,
     luts: &KernelLuts,
     backend: Backend,
 ) -> Vec<u16> {
+    debug_assert_eq!(
+        luts.chunks(),
+        packed.chunks(),
+        "LUT chunk count must match the packed layout (same m and width)"
+    );
     let mut out = vec![0u16; packed.n];
     let mut block_d = [0u16; BLOCK_SIZE];
     let bb = packed.block_bytes();
@@ -207,28 +281,35 @@ pub fn fastscan_distances_all(
 /// strict `d < threshold` test alone would starve distances saturated at
 /// `u16::MAX`, returning fewer than `k` results on far-away databases.
 pub fn scan_into_reservoir(
-    packed: &PackedCodes4,
+    packed: &PackedCodes,
     luts: &KernelLuts,
     backend: Backend,
     labels: Option<&[i64]>,
     reservoir: &mut U16Reservoir,
 ) {
+    // A LUT set built for a different (m, width) than the packed codes
+    // would make the fused unsafe scans read past the block.
+    debug_assert_eq!(
+        luts.chunks(),
+        packed.chunks(),
+        "LUT chunk count must match the packed layout (same m and width)"
+    );
     // Fused hot paths: tables hoisted into registers across all blocks,
     // in-register threshold compare, stores only for surviving blocks.
     // They hold the whole dual-table set in registers, so they are gated
-    // on the pair-count budget; larger M uses the per-block path below.
-    let npairs = luts.m_pad / 2;
+    // on the chunk-count budget; larger M uses the per-block path below.
+    let nchunks = luts.chunks();
     #[cfg(target_arch = "x86_64")]
-    if backend == Backend::Ssse3 && npairs <= MAX_PAIRS {
+    if backend == Backend::Ssse3 && nchunks <= MAX_CHUNKS {
         unsafe { scan_reservoir_ssse3(packed, luts, labels, reservoir) };
         return;
     }
     #[cfg(target_arch = "aarch64")]
-    if backend == Backend::Neon && npairs <= MAX_PAIRS {
+    if backend == Backend::Neon && nchunks <= MAX_CHUNKS {
         unsafe { scan_reservoir_neon(packed, luts, labels, reservoir) };
         return;
     }
-    let _ = npairs;
+    let _ = nchunks;
     scan_reservoir_blocks(packed, luts, backend, labels, reservoir);
 }
 
@@ -236,7 +317,7 @@ pub fn scan_into_reservoir(
 /// SIMD threshold test. Used by the portable backend and as the fallback
 /// for real-SIMD backends when M exceeds the fused-kernel register budget.
 fn scan_reservoir_blocks(
-    packed: &PackedCodes4,
+    packed: &PackedCodes,
     luts: &KernelLuts,
     backend: Backend,
     labels: Option<&[i64]>,
@@ -285,7 +366,7 @@ fn scan_reservoir_blocks(
 
 /// Fused SSSE3 scan (the §Perf hot path):
 ///
-/// * the `m_pad/2` dual-table registers are loaded **once** and stay in
+/// * the `lut_rows/2` dual-table registers are loaded **once** and stay in
 ///   registers across all blocks (the paper's register-resident tables,
 ///   taken to its limit),
 /// * the reservoir threshold test happens **in-register** on the u16
@@ -299,19 +380,20 @@ fn scan_reservoir_blocks(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "ssse3")]
 unsafe fn scan_reservoir_ssse3(
-    packed: &PackedCodes4,
+    packed: &PackedCodes,
     luts: &KernelLuts,
     labels: Option<&[i64]>,
     reservoir: &mut U16Reservoir,
 ) {
     #![allow(unsafe_op_in_unsafe_fn)]
     use core::arch::x86_64::*;
-    let npairs = luts.m_pad / 2;
-    debug_assert!(npairs <= MAX_PAIRS, "caller gates on MAX_PAIRS");
+    let nchunks = luts.chunks();
+    let split = luts.wiring == LaneWiring::SplitNibble;
+    debug_assert!(nchunks <= MAX_CHUNKS, "caller gates on MAX_CHUNKS");
 
     // hoist the dual-table registers out of the block loop
-    let mut tables = [unsafe { _mm_setzero_si128() }; MAX_PAIRS * 2];
-    for p in 0..npairs {
+    let mut tables = [unsafe { _mm_setzero_si128() }; MAX_CHUNKS * 2];
+    for p in 0..nchunks {
         let ptr = luts.bytes.as_ptr().add(p * 32);
         tables[2 * p] = _mm_loadu_si128(ptr as *const __m128i);
         tables[2 * p + 1] = _mm_loadu_si128(ptr.add(16) as *const __m128i);
@@ -331,19 +413,28 @@ unsafe fn scan_reservoir_ssse3(
         let mut a1 = zero; // v8..16
         let mut a2 = zero; // v16..24
         let mut a3 = zero; // v24..32
-        for p in 0..npairs {
+        for p in 0..nchunks {
             let c_lo = _mm_loadu_si128(base_ptr.add(p * 32) as *const __m128i);
             let c_hi = _mm_loadu_si128(base_ptr.add(p * 32 + 16) as *const __m128i);
             let t_lo = tables[2 * p];
             let t_hi = tables[2 * p + 1];
-            // v0..16 contributions of sub-quantizers (q, q+1)
-            let r0_lo = _mm_shuffle_epi8(t_lo, _mm_and_si128(c_lo, nib));
-            let r0_hi = _mm_shuffle_epi8(t_hi, _mm_and_si128(c_hi, nib));
+            let n_lo = _mm_and_si128(c_lo, nib); // low nibbles, bytes 0..16
+            let n_hi = _mm_and_si128(c_hi, nib); // low nibbles, bytes 16..32
+            let s_lo = _mm_and_si128(_mm_srli_epi16(c_lo, 4), nib); // high nibbles
+            let s_hi = _mm_and_si128(_mm_srli_epi16(c_hi, 4), nib);
+            // wiring: which nibble register feeds which table for which
+            // vector half. paired (2-/4-bit): nibbles are vector halves;
+            // split (8-bit): nibbles are the lo/hi half-space indices of
+            // the byte's own vector half.
+            let (ia0, ia1, ib0, ib1) =
+                if split { (n_lo, s_lo, n_hi, s_hi) } else { (n_lo, n_hi, s_lo, s_hi) };
+            // v0..16 contributions (both table rows feed the same vectors
+            // — the faiss "fixup" merged into the add chain)
+            let r0_lo = _mm_shuffle_epi8(t_lo, ia0);
+            let r0_hi = _mm_shuffle_epi8(t_hi, ia1);
             // v16..32 contributions
-            let r1_lo = _mm_shuffle_epi8(t_lo, _mm_and_si128(_mm_srli_epi16(c_lo, 4), nib));
-            let r1_hi = _mm_shuffle_epi8(t_hi, _mm_and_si128(_mm_srli_epi16(c_hi, 4), nib));
-            // widen + saturating accumulate (both lane groups feed the
-            // same vectors — the faiss "fixup" merged into the add chain)
+            let r1_lo = _mm_shuffle_epi8(t_lo, ib0);
+            let r1_hi = _mm_shuffle_epi8(t_hi, ib1);
             a0 = _mm_adds_epu16(a0, _mm_unpacklo_epi8(r0_lo, zero));
             a1 = _mm_adds_epu16(a1, _mm_unpackhi_epi8(r0_lo, zero));
             a0 = _mm_adds_epu16(a0, _mm_unpacklo_epi8(r0_hi, zero));
@@ -397,7 +488,7 @@ unsafe fn scan_reservoir_ssse3(
 
 /// Fused NEON scan — the paper's hot path on its target ISA:
 ///
-/// * the `m_pad/2` dual-table registers (`uint8x16x2_t` pairs) are loaded
+/// * the `lut_rows/2` dual-table registers (`uint8x16x2_t` pairs) are loaded
 ///   **once** and stay in Q-registers across all blocks (the paper's
 ///   register-resident tables, taken to its limit),
 /// * the reservoir threshold test happens **in-register** on the u16
@@ -412,7 +503,7 @@ unsafe fn scan_reservoir_ssse3(
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn scan_reservoir_neon(
-    packed: &PackedCodes4,
+    packed: &PackedCodes,
     luts: &KernelLuts,
     labels: Option<&[i64]>,
     reservoir: &mut U16Reservoir,
@@ -420,12 +511,13 @@ unsafe fn scan_reservoir_neon(
     #![allow(unsafe_op_in_unsafe_fn)]
     use crate::simd::neon::neon_movemask_u8;
     use core::arch::aarch64::*;
-    let npairs = luts.m_pad / 2;
-    debug_assert!(npairs <= MAX_PAIRS, "caller gates on MAX_PAIRS");
+    let nchunks = luts.chunks();
+    let split = luts.wiring == LaneWiring::SplitNibble;
+    debug_assert!(nchunks <= MAX_CHUNKS, "caller gates on MAX_CHUNKS");
 
     // hoist the dual-table registers out of the block loop
-    let mut tables = [vdupq_n_u8(0); MAX_PAIRS * 2];
-    for p in 0..npairs {
+    let mut tables = [vdupq_n_u8(0); MAX_CHUNKS * 2];
+    for p in 0..nchunks {
         let ptr = luts.bytes.as_ptr().add(p * 32);
         tables[2 * p] = vld1q_u8(ptr);
         tables[2 * p + 1] = vld1q_u8(ptr.add(16));
@@ -445,19 +537,28 @@ unsafe fn scan_reservoir_neon(
         let mut a1 = zero16; // v8..16
         let mut a2 = zero16; // v16..24
         let mut a3 = zero16; // v24..32
-        for p in 0..npairs {
-            let c_lo = vld1q_u8(base_ptr.add(p * 32)); // sub-quantizer q codes
-            let c_hi = vld1q_u8(base_ptr.add(p * 32 + 16)); // sub-quantizer q+1 codes
+        for p in 0..nchunks {
+            let c_lo = vld1q_u8(base_ptr.add(p * 32)); // chunk bytes 0..16
+            let c_hi = vld1q_u8(base_ptr.add(p * 32 + 16)); // chunk bytes 16..32
             let t_lo = tables[2 * p];
             let t_hi = tables[2 * p + 1];
-            // v0..16 contributions of sub-quantizers (q, q+1)
-            let r0_lo = vqtbl1q_u8(t_lo, vandq_u8(c_lo, nib));
-            let r0_hi = vqtbl1q_u8(t_hi, vandq_u8(c_hi, nib));
-            // v16..32 contributions (high nibbles are already < 16)
-            let r1_lo = vqtbl1q_u8(t_lo, vshrq_n_u8::<4>(c_lo));
-            let r1_hi = vqtbl1q_u8(t_hi, vshrq_n_u8::<4>(c_hi));
-            // widen + saturating accumulate (both lane groups feed the
-            // same vectors — the faiss "fixup" merged into the add chain)
+            let n_lo = vandq_u8(c_lo, nib); // low nibbles, bytes 0..16
+            let n_hi = vandq_u8(c_hi, nib); // low nibbles, bytes 16..32
+            let s_lo = vshrq_n_u8::<4>(c_lo); // high nibbles (already < 16)
+            let s_hi = vshrq_n_u8::<4>(c_hi);
+            // wiring: paired (2-/4-bit) nibbles are the vector halves;
+            // split (8-bit) nibbles are the lo/hi half-space indices of
+            // the byte's own vector half.
+            let (ia0, ia1, ib0, ib1) =
+                if split { (n_lo, s_lo, n_hi, s_hi) } else { (n_lo, n_hi, s_lo, s_hi) };
+            // v0..16 contributions (both table rows feed the same vectors)
+            let r0_lo = vqtbl1q_u8(t_lo, ia0);
+            let r0_hi = vqtbl1q_u8(t_hi, ia1);
+            // v16..32 contributions
+            let r1_lo = vqtbl1q_u8(t_lo, ib0);
+            let r1_hi = vqtbl1q_u8(t_hi, ib1);
+            // widen + saturating accumulate (the faiss "fixup" merged into
+            // the add chain)
             a0 = vqaddq_u16(a0, vmovl_u8(vget_low_u8(r0_lo)));
             a1 = vqaddq_u16(a1, vmovl_high_u8(r0_lo));
             a0 = vqaddq_u16(a0, vmovl_u8(vget_low_u8(r0_hi)));
@@ -509,12 +610,15 @@ unsafe fn scan_reservoir_neon(
     }
 }
 
-/// Full 4-bit PQ search: build LUTs from `query`, quantize, scan, re-rank.
+/// Full width-generic PQ fastscan search: build LUTs from `query`,
+/// quantize/fuse per the packed width, scan, re-rank.
 ///
+/// `pq` is the *internal* quantizer (`packed.m_codes` columns of
+/// `width.sub_ksub()` codewords — what `CodeWidth::pq_params` trained).
 /// `labels` maps scan position → external id (identity if `None`).
 pub fn search_fastscan(
     pq: &ProductQuantizer,
-    packed: &PackedCodes4,
+    packed: &PackedCodes,
     query: &[f32],
     k: usize,
     params: &FastScanParams,
@@ -524,11 +628,12 @@ pub fn search_fastscan(
     search_fastscan_with_luts(pq, packed, &luts_f32, k, params, labels)
 }
 
-/// Same as [`search_fastscan`] but with precomputed f32 LUTs (`m × ksub`) —
-/// the IVF path reuses one LUT set across probed lists.
+/// Same as [`search_fastscan`] but with precomputed f32 LUTs
+/// (`m_codes × sub_ksub`) — the IVF path reuses one LUT set across probed
+/// lists, and the coordinator reuses it across shard fan-out.
 pub fn search_fastscan_with_luts(
     pq: &ProductQuantizer,
-    packed: &PackedCodes4,
+    packed: &PackedCodes,
     luts_f32: &[f32],
     k: usize,
     params: &FastScanParams,
@@ -545,8 +650,13 @@ pub fn search_fastscan_with_luts(
             packed.n
         );
     }
-    let qluts = QuantizedLuts::from_f32(luts_f32, pq.m, pq.ksub);
-    let kluts = KernelLuts::build(&qluts, packed.m_pad);
+    assert_eq!(
+        pq.m, packed.m_codes,
+        "quantizer columns {} do not match packed layout columns {} ({})",
+        pq.m, packed.m_codes, packed.width
+    );
+    let wl = build_width_luts(luts_f32, packed.m, packed.width);
+    let (qluts, kluts) = (wl.qluts, wl.kernel);
     let mut reservoir = U16Reservoir::new(k, params.reservoir_factor);
     // Scan with identity labels so the reservoir carries *scan positions*;
     // external labels are applied after re-ranking. (A label→position
@@ -579,9 +689,141 @@ pub fn search_fastscan_with_luts(
 mod tests {
     use super::*;
     use crate::pq::adc::{adc_distances_all, search_adc};
+    use crate::pq::bitwidth::CodeWidth;
     use crate::pq::codebook::PqParams;
     use crate::simd::available_backends;
     use crate::util::rng::Rng;
+
+    /// Random internal codes + f32 tables for a width, plus the scalar
+    /// reference distance of each vector computed straight from the
+    /// quantized width rows (fused rows for 2-bit).
+    fn width_fixture(
+        n: usize,
+        m: usize,
+        width: CodeWidth,
+        seed: u64,
+    ) -> (PackedCodes, crate::pq::bitwidth::WidthLuts, Vec<u16>) {
+        let mut rng = Rng::new(seed);
+        let cols = width.code_columns(m);
+        let sub_ksub = width.sub_ksub();
+        let codes: Vec<u8> =
+            (0..n * cols).map(|_| (rng.next_u32() as usize % sub_ksub) as u8).collect();
+        let luts_f32: Vec<f32> =
+            (0..cols * sub_ksub).map(|_| rng.next_f32() * 9.0).collect();
+        let packed = PackedCodes::pack(&codes, m, width).unwrap();
+        let wl = build_width_luts(&luts_f32, m, width);
+        let expect: Vec<u16> = (0..n)
+            .map(|i| {
+                let row = &codes[i * cols..(i + 1) * cols];
+                let mut acc: u16 = 0;
+                match width {
+                    CodeWidth::W2 => {
+                        for p in 0..m.div_ceil(2) {
+                            let c1 = if 2 * p + 1 < m { row[2 * p + 1] } else { 0 };
+                            let idx = (row[2 * p] | (c1 << 2)) as usize;
+                            acc = acc.saturating_add(wl.qluts.row(p)[idx] as u16);
+                        }
+                    }
+                    _ => {
+                        for (col, &c) in row.iter().enumerate() {
+                            acc = acc.saturating_add(wl.qluts.row(col)[c as usize] as u16);
+                        }
+                    }
+                }
+                acc
+            })
+            .collect();
+        (packed, wl, expect)
+    }
+
+    /// The central multi-width correctness property: for every width and
+    /// every backend, the SIMD kernel's quantized distances equal the
+    /// scalar sum over the width's table rows — including odd M and
+    /// partial blocks.
+    #[test]
+    fn kernel_matches_scalar_sum_all_widths() {
+        for width in CodeWidth::ALL {
+            for &(n, m) in &[(32usize, 2usize), (100, 8), (33, 16), (64, 5), (7, 3), (41, 1)] {
+                let (packed, wl, expect) =
+                    width_fixture(n, m, width, 300 + n as u64 * 7 + m as u64);
+                for backend in available_backends() {
+                    let got = fastscan_distances_all(&packed, &wl.kernel, backend);
+                    assert_eq!(got, expect, "{width} n={n} m={m} {backend:?}");
+                }
+            }
+        }
+    }
+
+    /// Acceptance criterion: for each width, all backends this host offers
+    /// produce *bit-identical reservoir contents* on random data (the
+    /// portable model is the semantic reference; CI runs portable-vs-SSSE3
+    /// on x86_64 and portable-vs-NEON under QEMU).
+    #[test]
+    fn reservoir_contents_bit_identical_across_backends_per_width() {
+        let backends = available_backends();
+        let mut rng = Rng::new(41);
+        for width in CodeWidth::ALL {
+            for trial in 0..8 {
+                let n = 1 + rng.below(300);
+                let m = 1 + rng.below(12);
+                let k = 1 + rng.below(8);
+                let (packed, wl, _) =
+                    width_fixture(n, m, width, 500 + trial * 17 + m as u64);
+                let mut reference: Option<Vec<(u16, i64)>> = None;
+                for &backend in &backends {
+                    let mut res = U16Reservoir::new(k, 4);
+                    scan_into_reservoir(&packed, &wl.kernel, backend, None, &mut res);
+                    let mut cands = res.into_candidates();
+                    cands.sort_unstable();
+                    match &reference {
+                        None => reference = Some(cands),
+                        Some(want) => assert_eq!(
+                            &cands, want,
+                            "{width} trial {trial} n={n} m={m} k={k} {backend:?}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// End-to-end per-width search on real trained quantizers: re-ranked
+    /// fastscan must agree with the exact ADC scan over the same internal
+    /// codes, for every width and backend.
+    #[test]
+    fn reranked_search_matches_adc_all_widths() {
+        let mut rng = Rng::new(42);
+        let dim = 32;
+        let n = 400;
+        let m = 8;
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian()).collect();
+        for width in CodeWidth::ALL {
+            let pq = ProductQuantizer::train(&data, dim, &width.pq_params(m)).unwrap();
+            let codes = pq.encode(&data).unwrap();
+            let packed = PackedCodes::pack(&codes, m, width).unwrap();
+            for backend in available_backends() {
+                let params = FastScanParams {
+                    backend,
+                    rerank: true,
+                    reservoir_factor: 16,
+                };
+                for qi in 0..5 {
+                    let q = &data[qi * dim..(qi + 1) * dim];
+                    let luts = pq.compute_luts(q);
+                    let (d_base, _) = search_adc(&pq, &luts, &codes, None, 5);
+                    let (d_fast, _) = search_fastscan(&pq, &packed, q, 5, &params, None);
+                    for r in 0..5 {
+                        assert!(
+                            (d_base[r] - d_fast[r]).abs() < 1e-4 * (1.0 + d_base[r].abs()),
+                            "{width} {backend:?} q{qi} rank {r}: {} vs {}",
+                            d_base[r],
+                            d_fast[r]
+                        );
+                    }
+                }
+            }
+        }
+    }
 
     fn setup(n: usize, dim: usize, m: usize, seed: u64) -> (ProductQuantizer, Vec<f32>, Vec<u8>) {
         let mut rng = Rng::new(seed);
@@ -601,8 +843,8 @@ mod tests {
             let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
             let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 9.0).collect();
             let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
-            let packed = PackedCodes4::pack(&codes, m).unwrap();
-            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let packed = PackedCodes::pack(&codes, m, CodeWidth::W4).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.lut_rows);
             for backend in available_backends() {
                 let got = fastscan_distances_all(&packed, &kluts, backend);
                 for i in 0..n {
@@ -629,8 +871,8 @@ mod tests {
             let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
             let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 5.0).collect();
             let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
-            let packed = PackedCodes4::pack(&codes, m).unwrap();
-            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let packed = PackedCodes::pack(&codes, m, CodeWidth::W4).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.lut_rows);
             let a = fastscan_distances_all(&packed, &kluts, backends[0]);
             let b = fastscan_distances_all(&packed, &kluts, backends[1]);
             assert_eq!(a, b);
@@ -640,10 +882,10 @@ mod tests {
     #[test]
     fn reservoir_scan_matches_full_distances() {
         let (pq, data, codes) = setup(300, 32, 8, 33);
-        let packed = PackedCodes4::pack(&codes, 8).unwrap();
+        let packed = PackedCodes::pack(&codes, 8, CodeWidth::W4).unwrap();
         let luts_f32 = pq.compute_luts(&data[..32]);
         let qluts = QuantizedLuts::from_f32(&luts_f32, 8, 16);
-        let kluts = KernelLuts::build(&qluts, packed.m_pad);
+        let kluts = KernelLuts::build(&qluts, packed.lut_rows);
         for backend in available_backends() {
             let all = fastscan_distances_all(&packed, &kluts, backend);
             let mut res = U16Reservoir::new(5, 4);
@@ -669,7 +911,7 @@ mod tests {
         // PQ (same K=16 codes). With re-ranking the results must agree on
         // distances (labels may differ on exact ties).
         let (pq, data, codes) = setup(500, 32, 16, 34);
-        let packed = PackedCodes4::pack(&codes, 16).unwrap();
+        let packed = PackedCodes::pack(&codes, 16, CodeWidth::W4).unwrap();
         for qi in 0..10 {
             let q = &data[qi * 32..(qi + 1) * 32];
             let luts = pq.compute_luts(q);
@@ -696,7 +938,7 @@ mod tests {
     #[test]
     fn unreranked_search_within_quantization_error() {
         let (pq, data, codes) = setup(400, 16, 4, 35);
-        let packed = PackedCodes4::pack(&codes, 4).unwrap();
+        let packed = PackedCodes::pack(&codes, 4, CodeWidth::W4).unwrap();
         let q = &data[..16];
         let luts = pq.compute_luts(q);
         let qluts = QuantizedLuts::from_f32(&luts, 4, 16);
@@ -716,7 +958,7 @@ mod tests {
     #[test]
     fn external_labels_roundtrip() {
         let (pq, data, codes) = setup(100, 16, 4, 36);
-        let packed = PackedCodes4::pack(&codes, 4).unwrap();
+        let packed = PackedCodes::pack(&codes, 4, CodeWidth::W4).unwrap();
         let ext: Vec<i64> = (0..100).map(|i| 7000 + i as i64).collect();
         let (_d, labels) = search_fastscan(
             &pq,
@@ -734,7 +976,7 @@ mod tests {
         // fastscan + rerank distances must match exact ADC distances for
         // the same labels.
         let (pq, data, codes) = setup(200, 24, 6, 37);
-        let packed = PackedCodes4::pack(&codes, 6).unwrap();
+        let packed = PackedCodes::pack(&codes, 6, CodeWidth::W4).unwrap();
         let q = &data[5 * 24..6 * 24];
         let luts = pq.compute_luts(q);
         let all = adc_distances_all(&pq, &luts, &codes);
@@ -748,7 +990,7 @@ mod tests {
     fn single_vector_database() {
         let (pq, data, codes) = setup(17, 16, 4, 38); // train needs >= 16
         let one = &codes[..4];
-        let packed = PackedCodes4::pack(one, 4).unwrap();
+        let packed = PackedCodes::pack(one, 4, CodeWidth::W4).unwrap();
         let (d, l) = search_fastscan(&pq, &packed, &data[..16], 3, &FastScanParams::default(), None);
         assert_eq!(l[0], 0);
         assert_eq!(l[1], -1);
@@ -763,7 +1005,7 @@ mod tests {
     #[test]
     fn duplicate_external_labels_rerank_safely() {
         let (pq, data, codes) = setup(100, 16, 4, 39);
-        let packed = PackedCodes4::pack(&codes, 4).unwrap();
+        let packed = PackedCodes::pack(&codes, 4, CodeWidth::W4).unwrap();
         // every pair of positions shares one label: 50 distinct labels
         let ext: Vec<i64> = (0..100).map(|i| 5000 + (i as i64 / 2)).collect();
         for rerank in [true, false] {
@@ -796,10 +1038,10 @@ mod tests {
     /// Regression: distances saturated at `u16::MAX` must still produce k
     /// results (the strict `d < threshold` admission starved them). Also
     /// exercises the non-fused fallback: M exceeds the fused kernels'
-    /// register budget (`MAX_PAIRS`).
+    /// register budget (`MAX_CHUNKS`).
     #[test]
     fn saturated_distances_fill_reservoir() {
-        let m = 2 * MAX_PAIRS + 2; // 258 sub-quantizers of 255 → acc saturates
+        let m = 2 * MAX_CHUNKS + 2; // 258 sub-quantizers of 255 → acc saturates
         let n = 40;
         let k = 8;
         let qluts = QuantizedLuts {
@@ -810,8 +1052,8 @@ mod tests {
             total_bias: 0.0,
         };
         let codes = vec![7u8; n * m];
-        let packed = PackedCodes4::pack(&codes, m).unwrap();
-        let kluts = KernelLuts::build(&qluts, packed.m_pad);
+        let packed = PackedCodes::pack(&codes, m, CodeWidth::W4).unwrap();
+        let kluts = KernelLuts::build(&qluts, packed.lut_rows);
         for backend in available_backends() {
             let all = fastscan_distances_all(&packed, &kluts, backend);
             assert!(all.iter().all(|&d| d == u16::MAX), "not saturated ({backend:?})");
@@ -840,8 +1082,8 @@ mod tests {
             let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
             let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 9.0).collect();
             let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
-            let packed = PackedCodes4::pack(&codes, m).unwrap();
-            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let packed = PackedCodes::pack(&codes, m, CodeWidth::W4).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.lut_rows);
             for backend in available_backends() {
                 let all = fastscan_distances_all(&packed, &kluts, backend);
                 // scalar reference top-k threshold

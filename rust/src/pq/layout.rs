@@ -1,48 +1,110 @@
-//! The 4-bit interleaved block code layout.
+//! Width-parametric interleaved block code layouts.
 //!
-//! "Note that we must carefully maintain the code layout [8, 9]" (paper §3):
-//! the shuffle kernel only works if one aligned 32-byte load yields, for a
-//! *pair* of sub-quantizers, the 4-bit codes of 32 consecutive database
-//! vectors arranged so that nibble extraction produces shuffle-ready index
-//! registers whose lanes line up with the right lookup tables.
+//! "Note that we must carefully maintain the code layout [8, 9]" (paper
+//! §3): the shuffle kernel only works if one aligned 32-byte load yields a
+//! chunk whose nibbles line up with the right 16-entry lookup tables. The
+//! layout is parametric over [`CodeWidth`]; per 32-vector block
+//! ([`crate::pq::BLOCK_SIZE`]) each width owns `CodeWidth::chunks(m)`
+//! 32-byte chunks:
 //!
-//! Layout used here (faiss `pq4_pack_codes` structure):
-//!
-//! * Vectors are grouped into **blocks of 32** ([`crate::pq::BLOCK_SIZE`]).
-//! * Within a block, sub-quantizers are packed in **pairs** `(q, q+1)`;
-//!   each pair owns 32 contiguous bytes:
+//! * **4-bit** (faiss `pq4_pack_codes` structure, the paper's layout):
+//!   chunk `p` holds sub-quantizer pair `(q, q+1) = (2p, 2p+1)`:
 //!   - byte `i`      (i < 16): `code_q(v_i)      | code_q(v_{i+16})   << 4`
 //!   - byte `16 + i` (i < 16): `code_{q+1}(v_i)  | code_{q+1}(v_{i+16}) << 4`
 //!
-//! So after the 256-bit load `c`:
-//! `c & 0xF`   = lane-lo: codes of `q` for v₀..v₁₅, lane-hi: codes of `q+1`
-//! for v₀..v₁₅ — exactly the `(T¹, T²)` dual-table shuffle of Fig. 1c; and
-//! `(c >> 4) & 0xF` = the same for v₁₆..v₃₁.
+//!   After the 256-bit load `c`: `c & 0xF` = lane-lo: codes of `q` for
+//!   v₀..v₁₅, lane-hi: codes of `q+1` for v₀..v₁₅ — exactly the `(T¹, T²)`
+//!   dual-table shuffle of Fig. 1c; `c >> 4` = the same for v₁₆..v₃₁.
 //!
-//! Odd `M` is padded with a phantom sub-quantizer whose LUT is all-zero, so
-//! it never affects distances.
+//! * **2-bit**: adjacent sub-quantizers fuse pairwise into 4-bit codes
+//!   `c_{2P} | c_{2P+1} << 2` (matching the fused sum-tables of
+//!   [`crate::pq::bitwidth`]), then the fused columns use the 4-bit layout
+//!   above — four 2-bit codes interleaved per byte, half the chunks of
+//!   4-bit at equal `M`.
+//!
+//! * **8-bit**: chunk `q` holds ONE user sub-quantizer's full code bytes
+//!   (internal nibble-half columns `2q`/`2q+1` share a byte):
+//!   - byte `i`      (i < 16): `c_{2q}(v_i)      | c_{2q+1}(v_i)      << 4`
+//!   - byte `16 + i` (i < 16): `c_{2q}(v_{i+16}) | c_{2q+1}(v_{i+16}) << 4`
+//!
+//!   so lane-lo's nibbles are the lo/hi table indices for v₀..v₁₅ and
+//!   lane-hi's for v₁₆..v₃₁ ([`crate::pq::fastscan::LaneWiring::SplitNibble`]).
+//!
+//! Phantom columns (odd `m` padding) and phantom vectors (partial last
+//! block) are all-zero and pair with all-zero table rows, so they never
+//! affect distances.
 
+use crate::pq::bitwidth::CodeWidth;
 use crate::pq::BLOCK_SIZE;
 use crate::{Error, Result};
 
-/// Packed 4-bit codes in the interleaved block layout.
+/// Packed codes in the width-parametric interleaved block layout.
 #[derive(Clone, Debug)]
-pub struct PackedCodes4 {
+pub struct PackedCodes {
+    /// Code width the layout was packed for.
+    pub width: CodeWidth,
     /// Number of real (unpadded) vectors.
     pub n: usize,
-    /// Number of real sub-quantizers (before padding to even).
+    /// User-facing sub-quantizers.
     pub m: usize,
-    /// M rounded up to even — the packed stride uses this.
-    pub m_pad: usize,
-    /// Packed bytes: `nblocks × (m_pad/2) × 32`.
+    /// Internal code columns consumed by [`PackedCodes::pack`] and returned
+    /// by [`PackedCodes::code_at`]/[`PackedCodes::unpack`]
+    /// (`width.code_columns(m)`).
+    pub m_codes: usize,
+    /// 16-entry LUT rows the matching kernel consumes
+    /// (`width.lut_rows(m)`; for 4-bit this is `m` rounded up to even).
+    pub lut_rows: usize,
+    /// Packed bytes: `nblocks × chunks × 32`.
     pub data: Vec<u8>,
 }
 
-impl PackedCodes4 {
-    /// Bytes per block: `(m_pad / 2) × 32 = 16 × m_pad`.
+/// Byte offset within a block and bit shift of internal code column `col`
+/// for block-local vector `v` — the single source of truth for the bit
+/// placement, shared by the packer and the reader so they can never
+/// drift apart.
+#[inline]
+fn locate(width: CodeWidth, col: usize, v: usize) -> (usize, usize) {
+    match width {
+        // fused 4-bit column P = col/2 uses the 4-bit placement; the
+        // 2-bit code lands at bit offset (col%2)*2 within the nibble
+        CodeWidth::W2 => {
+            let fused_col = col / 2;
+            let p = fused_col / 2;
+            let within = fused_col % 2;
+            let nib = if v < 16 { 0 } else { 4 };
+            (p * 32 + within * 16 + (v % 16), nib + 2 * (col % 2))
+        }
+        CodeWidth::W4 => {
+            let p = col / 2;
+            let within = col % 2;
+            (p * 32 + within * 16 + (v % 16), if v < 16 { 0 } else { 4 })
+        }
+        // chunk = user sub-quantizer; lo/hi nibble = lo/hi half-space code
+        CodeWidth::W8 => {
+            let p = col / 2;
+            let half = if v < 16 { 0 } else { 16 };
+            (p * 32 + half + (v % 16), 4 * (col % 2))
+        }
+    }
+}
+
+/// Read mask of one internal sub-code (2 bits for W2, a nibble otherwise).
+#[inline]
+fn sub_code_mask(width: CodeWidth) -> u8 {
+    (width.sub_ksub() - 1) as u8
+}
+
+impl PackedCodes {
+    /// 32-byte chunks per block.
+    #[inline]
+    pub fn chunks(&self) -> usize {
+        self.lut_rows / 2
+    }
+
+    /// Bytes per block: `chunks × 32`.
     #[inline]
     pub fn block_bytes(&self) -> usize {
-        16 * self.m_pad
+        self.chunks() * 32
     }
 
     /// Number of 32-vector blocks (last one padded).
@@ -51,79 +113,81 @@ impl PackedCodes4 {
         self.n.div_ceil(BLOCK_SIZE)
     }
 
-    /// The 32-byte chunk of block `b`, sub-quantizer pair `p`.
+    /// The 32-byte chunk of block `b`, chunk index `p`.
     #[inline]
     pub fn pair_chunk(&self, b: usize, p: usize) -> &[u8] {
         let off = b * self.block_bytes() + p * 32;
         &self.data[off..off + 32]
     }
 
-    /// Pack flat codes (`n × m`, one byte per sub-quantizer, values < 16).
-    pub fn pack(codes: &[u8], m: usize) -> Result<Self> {
-        if m == 0 || codes.len() % m != 0 {
+    /// Pack flat internal codes: `n × width.code_columns(m)`, one byte per
+    /// column, each value `< width.sub_ksub()`.
+    pub fn pack(codes: &[u8], m: usize, width: CodeWidth) -> Result<Self> {
+        let m_codes = width.code_columns(m);
+        if m == 0 || codes.len() % m_codes != 0 {
             return Err(Error::InvalidParameter(format!(
-                "codes length {} not divisible by m {m}",
-                codes.len()
+                "codes length {} not divisible by {} code columns (m={m}, {width})",
+                codes.len(),
+                m_codes.max(1),
             )));
         }
-        if let Some(&bad) = codes.iter().find(|&&c| c >= 16) {
+        let sub_ksub = width.sub_ksub();
+        if let Some(&bad) = codes.iter().find(|&&c| c as usize >= sub_ksub) {
             return Err(Error::InvalidParameter(format!(
-                "4-bit packing requires codes < 16, found {bad}"
+                "{width} packing requires codes < {sub_ksub}, found {bad}"
             )));
         }
-        let n = codes.len() / m;
-        let m_pad = m.div_ceil(2) * 2;
+        let n = codes.len() / m_codes;
+        let lut_rows = width.lut_rows(m);
         let nblocks = n.div_ceil(BLOCK_SIZE);
-        let mut data = vec![0u8; nblocks * 16 * m_pad];
+        let mut data = vec![0u8; nblocks * lut_rows * 16];
+        let bb = lut_rows * 16;
 
         for i in 0..n {
             let b = i / BLOCK_SIZE;
-            let v = i % BLOCK_SIZE; // position within block
-            let base = b * 16 * m_pad;
-            for q in 0..m {
-                let code = codes[i * m + q];
-                let p = q / 2; // pair index
-                let within = q % 2; // 0 → bytes 0..16, 1 → bytes 16..32
-                let byte_idx = base + p * 32 + within * 16 + (v % 16);
-                if v < 16 {
-                    data[byte_idx] |= code; // low nibble: vectors 0..16
-                } else {
-                    data[byte_idx] |= code << 4; // high nibble: vectors 16..32
-                }
+            let v = i % BLOCK_SIZE;
+            let base = b * bb;
+            for col in 0..m_codes {
+                let code = codes[i * m_codes + col];
+                let (off, shift) = locate(width, col, v);
+                data[base + off] |= code << shift;
             }
         }
-        Ok(Self { n, m, m_pad, data })
+        Ok(Self { width, n, m, m_codes, lut_rows, data })
     }
 
-    /// Unpack back to flat `n × m` codes (inverse of [`PackedCodes4::pack`];
-    /// used by tests and by the re-ranking pass).
+    /// Unpack back to flat `n × m_codes` internal codes (inverse of
+    /// [`PackedCodes::pack`]; used by tests and the re-ranking pass).
     pub fn unpack(&self) -> Vec<u8> {
-        let mut out = vec![0u8; self.n * self.m];
+        let mut out = vec![0u8; self.n * self.m_codes];
         for i in 0..self.n {
-            for q in 0..self.m {
-                out[i * self.m + q] = self.code_at(i, q);
+            for col in 0..self.m_codes {
+                out[i * self.m_codes + col] = self.code_at(i, col);
             }
         }
         out
     }
 
-    /// Code of vector `i`, sub-quantizer `q` (slow path — scan kernels never
-    /// call this; re-ranking and tests do).
+    /// Internal code of vector `i`, column `col` (slow path — scan kernels
+    /// never call this; re-ranking and tests do).
     #[inline]
-    pub fn code_at(&self, i: usize, q: usize) -> u8 {
+    pub fn code_at(&self, i: usize, col: usize) -> u8 {
         let b = i / BLOCK_SIZE;
         let v = i % BLOCK_SIZE;
-        let p = q / 2;
-        let within = q % 2;
-        let byte = self.data[b * 16 * self.m_pad + p * 32 + within * 16 + (v % 16)];
-        if v < 16 {
-            byte & 0x0F
-        } else {
-            byte >> 4
-        }
+        let base = b * self.block_bytes();
+        let (off, shift) = locate(self.width, col, v);
+        (self.data[base + off] >> shift) & sub_code_mask(self.width)
     }
 
-    /// Memory used per vector, in bits (the paper's "4M bits" claim).
+    /// Code payload per vector in bits: `width.bits() × m` exactly
+    /// (the paper's "4M bits" claim, per width).
+    pub fn code_bits_per_vector(&self) -> usize {
+        self.width.bits() * self.m
+    }
+
+    /// *Stored* bits per vector, block/column padding included — ≥
+    /// [`PackedCodes::code_bits_per_vector`], converging to it for full
+    /// blocks and even column counts.
     pub fn bits_per_vector(&self) -> f64 {
         (self.data.len() * 8) as f64 / self.n as f64
     }
@@ -134,27 +198,32 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn random_codes(n: usize, m: usize, seed: u64) -> Vec<u8> {
+    fn random_codes(n: usize, cols: usize, ksub: usize, seed: u64) -> Vec<u8> {
         let mut rng = Rng::new(seed);
-        (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect()
+        (0..n * cols).map(|_| (rng.next_u32() as usize % ksub) as u8).collect()
     }
 
     #[test]
-    fn pack_unpack_roundtrip() {
-        for (n, m) in [(32, 8), (100, 16), (1, 2), (33, 4), (64, 6), (200, 15)] {
-            let codes = random_codes(n, m, n as u64 * 31 + m as u64);
-            let packed = PackedCodes4::pack(&codes, m).unwrap();
-            assert_eq!(packed.unpack(), codes, "n={n} m={m}");
+    fn pack_unpack_roundtrip_all_widths() {
+        for width in CodeWidth::ALL {
+            for (n, m) in [(32, 8), (100, 16), (1, 2), (33, 4), (64, 6), (200, 15), (7, 1)] {
+                let cols = width.code_columns(m);
+                let codes = random_codes(n, cols, width.sub_ksub(), n as u64 * 31 + m as u64);
+                let packed = PackedCodes::pack(&codes, m, width).unwrap();
+                assert_eq!(packed.unpack(), codes, "{width} n={n} m={m}");
+                assert_eq!(packed.m_codes, cols);
+                assert_eq!(packed.code_bits_per_vector(), width.bits() * m);
+            }
         }
     }
 
     #[test]
-    fn layout_matches_spec_exactly() {
+    fn layout_matches_spec_exactly_4bit() {
         // hand-check the byte layout formula for a full block
         let n = 32;
         let m = 4;
-        let codes = random_codes(n, m, 55);
-        let packed = PackedCodes4::pack(&codes, m).unwrap();
+        let codes = random_codes(n, m, 16, 55);
+        let packed = PackedCodes::pack(&codes, m, CodeWidth::W4).unwrap();
         for q in 0..m {
             let p = q / 2;
             let within = q % 2;
@@ -167,14 +236,57 @@ mod tests {
     }
 
     #[test]
+    fn layout_matches_spec_exactly_2bit() {
+        // one byte holds FOUR 2-bit codes: fused pair (q, q+1) × vector
+        // halves (v_i, v_{i+16})
+        let n = 32;
+        let m = 4; // two fused columns → one chunk
+        let codes = random_codes(n, m, 4, 56);
+        let packed = PackedCodes::pack(&codes, m, CodeWidth::W2).unwrap();
+        assert_eq!(packed.block_bytes(), 32);
+        for i in 0..16 {
+            for (fused, base_q) in [(0usize, 0usize), (1, 2)] {
+                let byte = packed.data[fused * 16 + i];
+                let lo = byte & 0x0F;
+                let hi = byte >> 4;
+                assert_eq!(lo & 3, codes[i * m + base_q], "v{i} q{base_q}");
+                assert_eq!(lo >> 2, codes[i * m + base_q + 1], "v{i} q{}", base_q + 1);
+                assert_eq!(hi & 3, codes[(i + 16) * m + base_q], "v{} q{base_q}", i + 16);
+                assert_eq!(hi >> 2, codes[(i + 16) * m + base_q + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn layout_matches_spec_exactly_8bit() {
+        // chunk q: bytes 0..16 = full code bytes of v0..15, 16..32 = v16..31
+        let n = 32;
+        let m = 2; // cols = 4 nibble columns → two chunks
+        let cols = 4;
+        let codes = random_codes(n, cols, 16, 57);
+        let packed = PackedCodes::pack(&codes, m, CodeWidth::W8).unwrap();
+        assert_eq!(packed.block_bytes(), 64);
+        for q in 0..m {
+            for i in 0..16 {
+                let b_lo = packed.data[q * 32 + i];
+                let b_hi = packed.data[q * 32 + 16 + i];
+                assert_eq!(b_lo & 0xF, codes[i * cols + 2 * q], "v{i} chunk {q} lo");
+                assert_eq!(b_lo >> 4, codes[i * cols + 2 * q + 1], "v{i} chunk {q} hi");
+                assert_eq!(b_hi & 0xF, codes[(16 + i) * cols + 2 * q]);
+                assert_eq!(b_hi >> 4, codes[(16 + i) * cols + 2 * q + 1]);
+            }
+        }
+    }
+
+    #[test]
     fn nibble_extraction_feeds_correct_lanes() {
         // End-to-end check of the §3 claim: after load + nibble mask, lane
         // lo holds sub-quantizer q codes and lane hi holds q+1 codes.
         use crate::simd::Simd256u8;
         let n = 32;
         let m = 2;
-        let codes = random_codes(n, m, 56);
-        let packed = PackedCodes4::pack(&codes, m).unwrap();
+        let codes = random_codes(n, m, 16, 58);
+        let packed = PackedCodes::pack(&codes, m, CodeWidth::W4).unwrap();
         let c = Simd256u8::load(packed.pair_chunk(0, 0));
         let mask = Simd256u8::splat(0x0F);
         let clo = c.and(mask);
@@ -193,29 +305,28 @@ mod tests {
 
     #[test]
     fn partial_last_block_zero_padded() {
-        let codes = random_codes(5, 4, 57);
-        let packed = PackedCodes4::pack(&codes, 4).unwrap();
-        assert_eq!(packed.nblocks(), 1);
-        // codes of phantom vectors 5..32 must read back as 0
-        for i in 5..32 {
-            for q in 0..4 {
-                // construct a fake reader past n — code_at works on layout
-                let b = 0;
-                let v = i;
-                let p = q / 2;
-                let within = q % 2;
-                let byte = packed.data[b * 16 * 4 + p * 32 + within * 16 + (v % 16)];
-                let val = if v < 16 { byte & 0xF } else { byte >> 4 };
-                assert_eq!(val, 0, "phantom vector {i} q {q}");
+        for width in CodeWidth::ALL {
+            let cols = width.code_columns(4);
+            let codes = random_codes(5, cols, width.sub_ksub(), 59);
+            let packed = PackedCodes::pack(&codes, 4, width).unwrap();
+            assert_eq!(packed.nblocks(), 1);
+            // bytes belonging to phantom vectors 5..32 must read back as 0
+            // through the same extraction the kernel uses
+            let mut fake = packed.clone();
+            fake.n = 32; // widen the view over the single padded block
+            for i in 5..32 {
+                for col in 0..cols {
+                    assert_eq!(fake.code_at(i, col), 0, "{width} phantom v{i} col {col}");
+                }
             }
         }
     }
 
     #[test]
     fn odd_m_padding() {
-        let codes = random_codes(40, 3, 58);
-        let packed = PackedCodes4::pack(&codes, 3).unwrap();
-        assert_eq!(packed.m_pad, 4);
+        let codes = random_codes(40, 3, 16, 60);
+        let packed = PackedCodes::pack(&codes, 3, CodeWidth::W4).unwrap();
+        assert_eq!(packed.lut_rows, 4);
         assert_eq!(packed.block_bytes(), 64);
         assert_eq!(packed.unpack(), codes);
         // phantom sub-quantizer (q=3) codes are all zero
@@ -229,20 +340,33 @@ mod tests {
     }
 
     #[test]
-    fn four_bits_per_code() {
-        // paper: "for a 4-bit PQ with K=16, the cost is 4M bits"
-        let codes = random_codes(32 * 100, 16, 59);
-        let packed = PackedCodes4::pack(&codes, 16).unwrap();
-        assert_eq!(packed.bits_per_vector(), 64.0); // 4 × M=16
+    fn bits_per_code_match_width() {
+        // paper: "for a 4-bit PQ with K=16, the cost is 4M bits" — and the
+        // 2-/8-bit layouts halve/double it exactly (full blocks, even m)
+        for (width, want) in [(CodeWidth::W2, 32.0), (CodeWidth::W4, 64.0), (CodeWidth::W8, 128.0)]
+        {
+            let cols = width.code_columns(16);
+            let codes = random_codes(32 * 100, cols, width.sub_ksub(), 61);
+            let packed = PackedCodes::pack(&codes, 16, width).unwrap();
+            assert_eq!(packed.bits_per_vector(), want, "{width}");
+            assert_eq!(packed.code_bits_per_vector(), want as usize, "{width}");
+        }
     }
 
     #[test]
-    fn rejects_big_codes() {
-        assert!(PackedCodes4::pack(&[0, 16], 2).is_err());
+    fn rejects_big_codes_per_width() {
+        assert!(PackedCodes::pack(&[0, 16], 2, CodeWidth::W4).is_err());
+        assert!(PackedCodes::pack(&[0, 4], 2, CodeWidth::W2).is_err());
+        assert!(PackedCodes::pack(&[0, 16, 0, 0], 2, CodeWidth::W8).is_err());
+        // the error names the width and its bound
+        let e = PackedCodes::pack(&[0, 4], 2, CodeWidth::W2).unwrap_err().to_string();
+        assert!(e.contains("2-bit") && e.contains("< 4"), "{e}");
     }
 
     #[test]
     fn rejects_ragged_input() {
-        assert!(PackedCodes4::pack(&[0, 1, 2], 2).is_err());
+        assert!(PackedCodes::pack(&[0, 1, 2], 2, CodeWidth::W4).is_err());
+        assert!(PackedCodes::pack(&[0, 1, 2], 2, CodeWidth::W8).is_err());
+        assert!(PackedCodes::pack(&[], 0, CodeWidth::W4).is_err());
     }
 }

@@ -1,5 +1,26 @@
-//! Product quantization: training, encoding, lookup tables, and the two
-//! scan kernels compared in the paper's Fig. 2.
+//! Product quantization: training, encoding, lookup tables, and the
+//! multi-bitwidth fastscan subsystem.
+//!
+//! The scan stack is a **width × backend matrix**: every code width rides
+//! the same dual-lane 16-entry shuffle primitive, and every backend
+//! implements that primitive on its own hardware.
+//!
+//! | width ([`bitwidth::CodeWidth`]) | codes | table form | cost vs 4-bit | role |
+//! |------|------|------------|------|------|
+//! | `W2` | K=4, 2 bits | adjacent pairs fused into 16-entry sum-tables (Quicker ADC grouping) | ~0.5× | faster / coarser |
+//! | `W4` | K=16, 4 bits | one 16-entry table per sub-quantizer | 1× | the paper's kernel |
+//! | `W8` | K=256 product-structured, 8 bits | paired lo/hi nibble half-space tables | ~2× | slower / finer |
+//!
+//! | backend ([`crate::simd::Backend`]) | shuffle | runs on |
+//! |------|------|------|
+//! | `Portable` | scalar model of `vqtbl1q_u8` | anywhere (semantic reference) |
+//! | `Ssse3` | `pshufb` | x86_64 |
+//! | `Neon` | `vqtbl1q_u8` | aarch64 (the paper's target) |
+//!
+//! All nine combinations are differential-tested: each width's three
+//! backends must produce bit-identical reservoir contents.
+//!
+//! Modules:
 //!
 //! * [`codebook`] — `ProductQuantizer`: split vectors into `M` sub-vectors,
 //!   k-means each sub-space into `K` codewords (paper §2, Eq. 1).
@@ -8,25 +29,32 @@
 //!   PQ" in Fig. 2.
 //! * [`lut`] — scalar quantization of the f32 table to u8 with a shared
 //!   scale/bias, producing `T_SIMD` (paper Eq. 4).
-//! * [`layout`] — the 4-bit interleaved block layout: 32 database vectors
-//!   per block, sub-quantizer pairs packed so one 32-byte load feeds the
-//!   dual-lane shuffle ("we must carefully maintain the code layout", §3).
-//! * [`fastscan`] — the **4-bit PQ kernel**: register-resident LUTs, dual
-//!   `vqtbl1q_u8` shuffle per pair, saturating u16 accumulation
+//! * [`bitwidth`] — the width axis: [`bitwidth::CodeWidth`] geometry,
+//!   width-aware quantized-table construction (2-bit fusing, 8-bit
+//!   half-space rows).
+//! * [`layout`] — the width-parametric interleaved block layout: 32
+//!   database vectors per block, code chunks packed so one 32-byte load
+//!   feeds the dual-lane shuffle ("we must carefully maintain the code
+//!   layout", §3).
+//! * [`fastscan`] — the kernel matrix: register-resident LUTs, dual
+//!   `vqtbl1q_u8` shuffle per chunk wired per width
+//!   ([`fastscan::LaneWiring`]), saturating u16 accumulation
 //!   (paper §3 / Fig. 1c), plus the optional exact re-ranking pass.
 
 pub mod adc;
+pub mod bitwidth;
 pub mod codebook;
 pub mod fastscan;
 pub mod layout;
 pub mod lut;
 
 pub use adc::search_adc;
+pub use bitwidth::CodeWidth;
 pub use codebook::{PqParams, ProductQuantizer};
 pub use fastscan::{search_fastscan, FastScanParams};
-pub use layout::PackedCodes4;
+pub use layout::PackedCodes;
 pub use lut::QuantizedLuts;
 
 /// Number of database vectors per fastscan block ("bbs" in faiss).
-/// 32 = one virtual 256-bit register of 4-bit codes per sub-quantizer pair.
+/// 32 = one virtual 256-bit register of codes per chunk.
 pub const BLOCK_SIZE: usize = 32;

@@ -297,9 +297,9 @@ mod tests {
 
         // rust-side oracle: same quantized pipeline via pq modules
         use crate::pq::fastscan::{fastscan_distances_all, KernelLuts};
-        use crate::pq::{PackedCodes4, QuantizedLuts};
+        use crate::pq::{CodeWidth, PackedCodes, QuantizedLuts};
         let codes_u8: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
-        let packed = PackedCodes4::pack(&codes_u8, m).unwrap();
+        let packed = PackedCodes::pack(&codes_u8, m, CodeWidth::W4).unwrap();
         for qi in 0..q.min(3) {
             // build f32 luts for query qi
             let qrow = &queries[qi * d..(qi + 1) * d];
@@ -312,7 +312,7 @@ mod tests {
                 }
             }
             let qluts = QuantizedLuts::from_f32(&luts, m, 16);
-            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let kluts = KernelLuts::build(&qluts, packed.lut_rows);
             let all = fastscan_distances_all(&packed, &kluts, crate::simd::Backend::Portable);
             // top-1 from the artifact must match the rust argmin (decoded)
             let best = all.iter().enumerate().min_by_key(|&(_, &v)| v).unwrap();

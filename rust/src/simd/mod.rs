@@ -7,13 +7,25 @@
 //! re-creates AVX2-only auxiliary instructions (`_mm256_movemask_epi8`)
 //! from NEON primitives.
 //!
-//! ## The three-backend matrix
+//! ## The width × backend matrix
+//!
+//! The scan kernel is generalized over two independent axes. The
+//! **backend** axis picks the shuffle hardware:
 //!
 //! | backend              | hardware            | role                                     |
 //! |----------------------|---------------------|------------------------------------------|
 //! | [`Backend::Portable`]| any                 | scalar *model* of the NEON ISA; the semantic reference every real backend is differential-tested against |
 //! | [`Backend::Ssse3`]   | x86_64 with SSSE3   | real 128-bit shuffle hardware (`pshufb`), mirrors faiss `simdlib_avx2.h` vs `simdlib_neon.h` sharing one interface |
 //! | [`Backend::Neon`]    | aarch64             | the paper's actual target: real `vqtbl1q_u8` dual-table shuffle, `vshrn`-based movemask emulation |
+//!
+//! The **width** axis ([`crate::pq::CodeWidth`], Quicker-ADC style) picks
+//! how many bits each PQ code spends, all expressed in the same 16-entry
+//! dual-table shuffle: 2-bit fuses sub-quantizer pairs into one sum-table
+//! (≈½ the scan cost of 4-bit), 4-bit is the paper's kernel, 8-bit does
+//! paired low/high-nibble half-space lookups (≈2× the cost, finer codes).
+//! Every backend serves every width — the wiring difference lives in
+//! [`crate::pq::fastscan::LaneWiring`], not in this module's register
+//! model.
 //!
 //! Modules:
 //!
@@ -29,11 +41,13 @@
 //!   `core::arch::aarch64` intrinsics.
 //!
 //! The differential tests (`backends_agree_exactly`,
-//! `kernel_matches_scalar_quantized_sum` in [`crate::pq::fastscan`])
-//! exercise Portable vs whichever real backend the host offers: Portable
-//! vs Ssse3 on the x86_64 CI job, Portable vs Neon on the aarch64
-//! (cross/QEMU) CI job. On a host with neither, only the portable model
-//! runs and the cross-checks skip.
+//! `kernel_matches_scalar_sum_all_widths`,
+//! `reservoir_contents_bit_identical_across_backends_per_width` in
+//! [`crate::pq::fastscan`], plus the `width_*` integration tests run as
+//! named CI steps) exercise Portable vs whichever real backend the host
+//! offers, at every code width: Portable vs Ssse3 on the x86_64 CI job,
+//! Portable vs Neon on the aarch64 (cross/QEMU) CI job. On a host with
+//! neither, only the portable model runs and the cross-checks skip.
 
 pub mod simd256;
 pub mod u8x16;

@@ -70,6 +70,29 @@ impl Simd256u8 {
         Simd256u8 { lo: vshrq_n_u8::<4>(self.lo), hi: vshrq_n_u8::<4>(self.hi) }
     }
 
+    /// Nibble-split of the **lo** 128-bit lane across both lanes:
+    /// `{ lo: self.lo & 0xF, hi: self.lo >> 4 }`. This is the 8-bit
+    /// fastscan index register ([`crate::pq::fastscan::LaneWiring::SplitNibble`]):
+    /// each code byte's low nibble addresses the lo-half table `T_lo` and
+    /// its high nibble the hi-half table `T_hi` through one dual shuffle.
+    #[inline(always)]
+    pub fn nibble_split_lo(self) -> Simd256u8 {
+        Simd256u8 {
+            lo: vandq_u8(self.lo, vdupq_n_u8(0x0F)),
+            hi: vshrq_n_u8::<4>(self.lo),
+        }
+    }
+
+    /// Nibble-split of the **hi** 128-bit lane (vectors 16..32), same
+    /// arrangement as [`Simd256u8::nibble_split_lo`].
+    #[inline(always)]
+    pub fn nibble_split_hi(self) -> Simd256u8 {
+        Simd256u8 {
+            lo: vandq_u8(self.hi, vdupq_n_u8(0x0F)),
+            hi: vshrq_n_u8::<4>(self.hi),
+        }
+    }
+
     /// Lanewise saturating add.
     #[inline(always)]
     pub fn sat_add(self, other: Simd256u8) -> Simd256u8 {
@@ -201,6 +224,23 @@ mod tests {
         for i in 0..32 {
             assert_eq!(lo_b[i], packed[i] & 0xF);
             assert_eq!(hi_b[i], packed[i] >> 4);
+        }
+    }
+
+    #[test]
+    fn nibble_split_lanes() {
+        let mut rng = Rng::new(9);
+        let bytes = rand_bytes(&mut rng, 32);
+        let c = Simd256u8::load(&bytes);
+        let mut a = [0u8; 32];
+        let mut b = [0u8; 32];
+        c.nibble_split_lo().store(&mut a);
+        c.nibble_split_hi().store(&mut b);
+        for i in 0..16 {
+            assert_eq!(a[i], bytes[i] & 0xF, "split_lo lane-lo {i}");
+            assert_eq!(a[16 + i], bytes[i] >> 4, "split_lo lane-hi {i}");
+            assert_eq!(b[i], bytes[16 + i] & 0xF, "split_hi lane-lo {i}");
+            assert_eq!(b[16 + i], bytes[16 + i] >> 4, "split_hi lane-hi {i}");
         }
     }
 

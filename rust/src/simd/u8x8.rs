@@ -95,7 +95,12 @@ pub fn accumulate_block_armv7(
     luts: &crate::pq::fastscan::KernelLuts,
     out: &mut [u16; crate::pq::BLOCK_SIZE],
 ) {
-    let npairs = luts.m_pad / 2;
+    debug_assert_eq!(
+        luts.wiring,
+        crate::pq::fastscan::LaneWiring::PairedTables,
+        "the ARMv7 model covers the paired (2-/4-bit) wiring only"
+    );
+    let npairs = luts.chunks();
     let mask = vdup_n_u8(0x0F);
     // accumulators: 4 × 8 u16 lanes (vectors 0..32)
     let mut acc = [[0u16; 8]; 4];
@@ -131,7 +136,7 @@ mod tests {
     use super::*;
     use crate::pq::fastscan::{accumulate_block_portable, KernelLuts};
     use crate::pq::lut::QuantizedLuts;
-    use crate::pq::{PackedCodes4, BLOCK_SIZE};
+    use crate::pq::{CodeWidth, PackedCodes, BLOCK_SIZE};
     use crate::util::rng::Rng;
 
     #[test]
@@ -162,8 +167,8 @@ mod tests {
             let codes: Vec<u8> = (0..n * m).map(|_| (rng.next_u32() % 16) as u8).collect();
             let luts_f32: Vec<f32> = (0..m * 16).map(|_| rng.next_f32() * 7.0).collect();
             let qluts = QuantizedLuts::from_f32(&luts_f32, m, 16);
-            let packed = PackedCodes4::pack(&codes, m).unwrap();
-            let kluts = KernelLuts::build(&qluts, packed.m_pad);
+            let packed = PackedCodes::pack(&codes, m, CodeWidth::W4).unwrap();
+            let kluts = KernelLuts::build(&qluts, packed.lut_rows);
             let block = &packed.data[..packed.block_bytes()];
             let mut v8 = [0u16; BLOCK_SIZE];
             let mut v7 = [0u16; BLOCK_SIZE];

@@ -105,7 +105,7 @@ fn serve_stack_end_to_end() {
 fn pjrt_three_layer_stack() {
     use armpq::coordinator::service::{PjrtBackend, SearchBackend};
     use armpq::pq::fastscan::{fastscan_distances_all, KernelLuts};
-    use armpq::pq::{PackedCodes4, ProductQuantizer, QuantizedLuts};
+    use armpq::pq::{CodeWidth, PackedCodes, ProductQuantizer, QuantizedLuts};
     use armpq::runtime::EngineHandle;
     use armpq::util::rng::Rng;
 
@@ -132,11 +132,11 @@ fn pjrt_three_layer_stack() {
     let (dists, labels) = backend.search_batch(&queries, 5, None).unwrap();
 
     // rust oracle: quantized fastscan on the same codes
-    let packed = PackedCodes4::pack(&codes_u8, m).unwrap();
+    let packed = PackedCodes::pack(&codes_u8, m, CodeWidth::W4).unwrap();
     for qi in 0..4 {
         let luts = pq.compute_luts(&queries[qi * d..(qi + 1) * d]);
         let qluts = QuantizedLuts::from_f32(&luts, m, 16);
-        let kluts = KernelLuts::build(&qluts, packed.m_pad);
+        let kluts = KernelLuts::build(&qluts, packed.lut_rows);
         let all = fastscan_distances_all(&packed, &kluts, armpq::simd::Backend::Portable);
         let best = all.iter().enumerate().min_by_key(|&(_, &v)| v).unwrap();
         assert_eq!(labels[qi * 5] as usize, best.0, "query {qi}");
@@ -305,4 +305,160 @@ fn concurrent_serve_stack_params() {
         assert_eq!(&l, expect, "client {t} saw another request's nprobe");
     }
     server.stop();
+}
+
+// ---------------------------------------------------------------- widths
+
+/// Acceptance: for each width in {2, 4, 8}, every backend this host
+/// offers produces bit-identical reservoir contents on random data.
+/// CI runs this as a named step on x86_64 (Portable vs SSSE3) and under
+/// QEMU aarch64 (Portable vs NEON).
+#[test]
+fn width_differential_reservoir_contents() {
+    use armpq::pq::bitwidth::build_width_luts;
+    use armpq::pq::fastscan::scan_into_reservoir;
+    use armpq::pq::{CodeWidth, PackedCodes};
+    use armpq::simd::available_backends;
+    use armpq::util::rng::Rng;
+    use armpq::util::topk::U16Reservoir;
+
+    let backends = available_backends();
+    let mut rng = Rng::new(1100);
+    for width in CodeWidth::ALL {
+        for trial in 0..10 {
+            // partial blocks and odd M on purpose
+            let n = 1 + rng.below(400);
+            let m = 1 + rng.below(12);
+            let k = 1 + rng.below(10);
+            let cols = width.code_columns(m);
+            let sub_ksub = width.sub_ksub();
+            let codes: Vec<u8> =
+                (0..n * cols).map(|_| (rng.next_u32() as usize % sub_ksub) as u8).collect();
+            let luts_f32: Vec<f32> =
+                (0..cols * sub_ksub).map(|_| rng.next_f32() * 9.0).collect();
+            let packed = PackedCodes::pack(&codes, m, width).unwrap();
+            let wl = build_width_luts(&luts_f32, m, width);
+            let mut reference: Option<Vec<(u16, i64)>> = None;
+            for &backend in &backends {
+                let mut res = U16Reservoir::new(k, 4);
+                scan_into_reservoir(&packed, &wl.kernel, backend, None, &mut res);
+                let mut cands = res.into_candidates();
+                cands.sort_unstable();
+                match &reference {
+                    None => reference = Some(cands),
+                    Some(want) => assert_eq!(
+                        &cands, want,
+                        "{width} trial {trial} n={n} m={m} k={k} {backend:?}: \
+                         reservoir contents differ between backends"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: `index_factory("PQ16x{B}fs")` round-trips build→seal→search
+/// for every width, flat and IVF-composed, returning well-formed results.
+#[test]
+fn width_factory_build_seal_search_roundtrip() {
+    let ds = SyntheticDataset::gaussian(1_500, 15, 32, 1101);
+    for bits in [2usize, 4, 8] {
+        for spec in [
+            format!("PQ16x{bits}fs"),
+            format!("IVF8,PQ16x{bits}fs,nprobe=8"),
+        ] {
+            let mut idx = index_factory(ds.dim, &spec).unwrap();
+            idx.train(&ds.train).unwrap();
+            idx.add(&ds.base).unwrap();
+            idx.seal().unwrap();
+            assert_eq!(idx.ntotal(), 1_500, "{spec}");
+            let r = idx.search(&ds.queries, 10, None).unwrap();
+            assert_eq!(r.nq(), 15, "{spec}");
+            assert_eq!(r.labels.len(), 150, "{spec}");
+            assert!(
+                r.labels.iter().all(|&l| (-1..1_500).contains(&l)),
+                "{spec}: labels out of range"
+            );
+            for qi in 0..15 {
+                let row = &r.distances[qi * 10..(qi + 1) * 10];
+                assert!(
+                    row.windows(2).all(|w| w[0] <= w[1]),
+                    "{spec}: query {qi} distances unsorted {row:?}"
+                );
+                assert!(row.iter().all(|d| d.is_finite()), "{spec}: non-finite distance");
+            }
+            assert!(
+                idx.describe().contains(&format!("x{bits}fs")),
+                "{spec}: {}",
+                idx.describe()
+            );
+        }
+    }
+}
+
+/// Acceptance: recall is monotone in code width at fixed M —
+/// recall(2-bit) ≤ recall(4-bit) ≤ recall(8-bit) (small tolerance), and
+/// the 2→8 gap is strict: the widths are real operating points, not
+/// aliases of one another.
+#[test]
+fn width_recall_monotonic_at_fixed_m() {
+    let ds = SyntheticDataset::gaussian(2_500, 40, 32, 1102);
+    let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+    // rerank off: the property is about raw code fidelity
+    let params = SearchParams::new().with_rerank(false).with_reservoir_factor(16);
+    let mut recalls = Vec::new();
+    for bits in [2usize, 4, 8] {
+        let mut idx = index_factory(ds.dim, &format!("PQ8x{bits}fs")).unwrap();
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        let r = idx.search(&ds.queries, 10, Some(&params)).unwrap();
+        recalls.push(recall_at_r(&gt, 1, &r.labels, 10, 10));
+    }
+    assert!(
+        recalls[0] <= recalls[1] + 0.05 && recalls[1] <= recalls[2] + 0.05,
+        "recall@10 not monotone in width: {recalls:?}"
+    );
+    assert!(recalls[2] > recalls[0], "8-bit must beat 2-bit: {recalls:?}");
+}
+
+/// The serving stack accepts width-parametric indexes end to end: a
+/// sharded router over two 2-bit shards (same codebook → batch-level LUT
+/// reuse) behind the batcher returns the same results as direct search.
+#[test]
+fn width_serving_stack_with_lut_reuse() {
+    use armpq::coordinator::{Batcher, BatcherConfig, ShardedBackend};
+
+    let ds = SyntheticDataset::gaussian(1_200, 6, 32, 1103);
+    let per = 600usize;
+    let mut shards: Vec<Arc<dyn Index>> = Vec::new();
+    for s in 0..2 {
+        let mut idx = armpq::index::IndexIvfPq4::new_width(
+            ds.dim,
+            4,
+            8,
+            armpq::pq::CodeWidth::W2,
+            false,
+            8,
+        );
+        idx.train(&ds.train).unwrap();
+        let slice = &ds.base[s * per * ds.dim..(s + 1) * per * ds.dim];
+        let ids: Vec<i64> = (s * per..(s + 1) * per).map(|i| i as i64).collect();
+        idx.inner_mut().add_with_ids(slice, &ids).unwrap();
+        idx.set_param("nprobe", "4").unwrap();
+        idx.set_param("reservoir_factor", "32").unwrap();
+        idx.seal().unwrap();
+        shards.push(Arc::new(idx));
+    }
+    let router = Arc::new(ShardedBackend::from_indexes(shards).unwrap());
+    assert!(router.reuses_luts(), "same-codebook shards must share LUT builds");
+
+    use armpq::coordinator::SearchBackend;
+    let (d_direct, l_direct) = router.search_batch(&ds.queries[..ds.dim], 5, None).unwrap();
+
+    let batcher = Batcher::start(router.clone(), BatcherConfig::default());
+    let resp = batcher.search(ds.queries[..ds.dim].to_vec(), 5, None).unwrap();
+    assert_eq!(resp.labels, l_direct);
+    assert_eq!(resp.distances, d_direct);
+    batcher.shutdown();
 }
