@@ -1,8 +1,9 @@
 //! Ablation: interleaved block layout + SIMD vs flat codes + scalar
 //! gather ("we must carefully maintain the code layout", paper §3), at
 //! every fastscan code width — the data for the Quicker-ADC trade-off
-//! curve (EXPERIMENTS.md).
-use armpq::experiments::run_ablation_layout;
+//! curve (EXPERIMENTS.md) — plus the range-query mode: in-register
+//! threshold collection vs a scalar distance pass at ~1% hit rate.
+use armpq::experiments::{run_ablation_layout, run_ablation_layout_range};
 use armpq::pq::CodeWidth;
 
 fn main() {
@@ -12,5 +13,8 @@ fn main() {
             t.print();
             t.save().expect("save");
         }
+        let t = run_ablation_layout_range(320_000, 16, width, 20220728);
+        t.print();
+        t.save().expect("save");
     }
 }

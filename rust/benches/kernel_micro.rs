@@ -1,15 +1,25 @@
 //! Paper Fig. 1 concept: per-lookup-op cost — memory LUT vs dual-lane
 //! shuffle (portable NEON model) vs real SIMD — per 32-code block, swept
-//! over the Quicker-ADC width axis (2-/4-/8-bit codes).
-use armpq::experiments::run_kernel_micro;
+//! over the Quicker-ADC width axis (2-/4-/8-bit codes), plus the
+//! filter-pushdown sweep: masked scan vs scan-then-post-filter at
+//! 1/10/50/100% selectivity (`--filter-selectivity 1,10,50,100` and
+//! `--filter-n` to override).
+use armpq::experiments::{run_filter_micro, run_kernel_micro};
 use armpq::pq::CodeWidth;
+use armpq::util::args::Args;
 
 fn main() {
+    let args = Args::from_env();
+    let sels = args.get_usize_list("filter-selectivity", &[1, 10, 50, 100]);
+    let filter_n = args.get_usize("filter-n", 320_000);
     for width in CodeWidth::ALL {
         for m in [8, 16, 32, 64] {
             let t = run_kernel_micro(m, width);
             t.print();
             t.save().expect("save");
         }
+        let t = run_filter_micro(filter_n, 16, width, &sels, 20220728);
+        t.print();
+        t.save().expect("save");
     }
 }

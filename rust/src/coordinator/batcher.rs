@@ -3,41 +3,51 @@
 //!
 //! Policy (vLLM-style continuous batching, simplified to stateless search):
 //! the worker blocks for the first request, then drains the queue up to
-//! `max_batch` or until `max_wait` elapses, groups by `(k, params)`,
-//! executes, and routes each response to its reply channel. Batching
-//! amortizes per-query fixed costs — above all LUT construction, the
-//! serving-layer analog of the paper keeping tables register-resident:
-//! each `(k, params)` group becomes ONE backend call, and a sharded
-//! backend ([`crate::coordinator::ShardedBackend`]) computes the group's
-//! per-query scan LUTs once and reuses them across its whole shard
+//! `max_batch` or until `max_wait` elapses, groups by
+//! `(kind, filter, params)`, executes, and routes each response to its
+//! reply channel. Batching amortizes per-query fixed costs — above all LUT
+//! construction, the serving-layer analog of the paper keeping tables
+//! register-resident: each group becomes ONE backend [`QueryRequest`], and
+//! a sharded backend ([`crate::coordinator::ShardedBackend`]) computes the
+//! group's per-query scan LUTs once and reuses them across its whole shard
 //! fan-out instead of rebuilding per shard.
-//! Per-request [`SearchParams`] are part of the grouping key, so requests
-//! carrying different overrides never share (or pollute) a backend call.
+//!
+//! The grouping key is exact equality — kind AND filter AND params — so
+//! requests carrying different overrides, different filters, or different
+//! query kinds never share (or pollute) a backend call. Filters compare
+//! structurally (`IdSet`/`IdRange`) or by closure identity (`Predicate`);
+//! the [`crate::index::query::Filter::signature`] is for metrics only.
 
 use super::metrics::Metrics;
 use super::service::SearchBackend;
+use crate::index::query::{pad_hits, Filter, QueryKind, QueryRequest, QueryStats};
 use crate::index::SearchParams;
 use crate::Result;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// One in-flight query.
-pub struct QueryRequest {
+/// One in-flight query waiting for batch formation.
+pub struct PendingQuery {
     pub vector: Vec<f32>,
-    pub k: usize,
-    /// Per-request parameter overrides; part of the batching key, so
-    /// requests with different parameters never share a backend call.
+    pub kind: QueryKind,
+    /// Part of the batching key (exact equality), like `kind` and `params`.
+    pub filter: Option<Filter>,
     pub params: Option<SearchParams>,
     pub enqueued: Instant,
-    pub reply: SyncSender<Result<QueryResponse>>,
+    pub reply: SyncSender<Result<ServeResponse>>,
 }
 
 /// The answer routed back to the submitting client.
 #[derive(Clone, Debug)]
-pub struct QueryResponse {
+pub struct ServeResponse {
+    /// Top-k responses are padded to exactly `k` entries with
+    /// `(INFINITY, -1)` (the legacy wire shape); range responses are
+    /// variable-length and unpadded.
     pub distances: Vec<f32>,
     pub labels: Vec<i64>,
+    /// Per-query execution stats from the backend.
+    pub stats: QueryStats,
     /// Time spent waiting for batch formation.
     pub queue_us: u64,
     /// Backend execution time of the whole batch.
@@ -70,7 +80,7 @@ impl Default for BatcherConfig {
 
 /// Handle to a running batcher.
 pub struct Batcher {
-    tx: SyncSender<QueryRequest>,
+    tx: SyncSender<PendingQuery>,
     pub metrics: Arc<Metrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -79,7 +89,7 @@ impl Batcher {
     /// Spawn the worker threads.
     pub fn start(backend: Arc<dyn SearchBackend>, cfg: BatcherConfig) -> Batcher {
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<QueryRequest>(cfg.queue_depth);
+        let (tx, rx) = sync_channel::<PendingQuery>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
@@ -94,32 +104,61 @@ impl Batcher {
         Batcher { tx, metrics, workers }
     }
 
-    /// Enqueue a query; returns the reply receiver.
-    pub fn submit(
+    /// Enqueue a typed query; returns the reply receiver.
+    pub fn submit_query(
         &self,
         vector: Vec<f32>,
-        k: usize,
+        kind: QueryKind,
+        filter: Option<Filter>,
         params: Option<SearchParams>,
-    ) -> std::sync::mpsc::Receiver<Result<QueryResponse>> {
+    ) -> Receiver<Result<ServeResponse>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.metrics.requests_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         // normalize Some(no overrides) to None so it batches with bare
-        // requests instead of forming its own (k, params) group
+        // requests instead of forming its own group
         let params = params.filter(|p| !p.is_empty());
-        let req = QueryRequest { vector, k, params, enqueued: Instant::now(), reply: reply_tx };
+        let req = PendingQuery {
+            vector,
+            kind,
+            filter,
+            params,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
         // A send error means shutdown; the caller sees a disconnected reply.
         let _ = self.tx.send(req);
         reply_rx
     }
 
-    /// Convenience: submit and wait.
+    /// Enqueue an unfiltered top-k query (the legacy entry).
+    pub fn submit(
+        &self,
+        vector: Vec<f32>,
+        k: usize,
+        params: Option<SearchParams>,
+    ) -> Receiver<Result<ServeResponse>> {
+        self.submit_query(vector, QueryKind::TopK { k }, None, params)
+    }
+
+    /// Convenience: submit a top-k query and wait.
     pub fn search(
         &self,
         vector: Vec<f32>,
         k: usize,
         params: Option<SearchParams>,
-    ) -> Result<QueryResponse> {
-        self.submit(vector, k, params)
+    ) -> Result<ServeResponse> {
+        self.query(vector, QueryKind::TopK { k }, None, params)
+    }
+
+    /// Convenience: submit any typed query and wait.
+    pub fn query(
+        &self,
+        vector: Vec<f32>,
+        kind: QueryKind,
+        filter: Option<Filter>,
+        params: Option<SearchParams>,
+    ) -> Result<ServeResponse> {
+        self.submit_query(vector, kind, filter, params)
             .recv()
             .map_err(|_| crate::Error::Serve("batcher shut down".into()))?
     }
@@ -134,7 +173,7 @@ impl Batcher {
 }
 
 fn worker_loop(
-    rx: Arc<Mutex<Receiver<QueryRequest>>>,
+    rx: Arc<Mutex<Receiver<PendingQuery>>>,
     backend: Arc<dyn SearchBackend>,
     metrics: Arc<Metrics>,
     cfg: BatcherConfig,
@@ -177,41 +216,66 @@ fn worker_loop(
     }
 }
 
-fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<QueryRequest>) {
+type GroupKey = (QueryKind, Option<Filter>, Option<SearchParams>);
+
+fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<PendingQuery>) {
     metrics.record_batch(batch.len());
     let batch_size = batch.len();
-    // group by (k, params) so one backend call serves each combination —
-    // per-request overrides must never leak into a neighbor's search
-    let mut groups: Vec<((usize, Option<SearchParams>), Vec<QueryRequest>)> = Vec::new();
+    // group by (kind, filter, params) so one backend call serves each
+    // combination — per-request kinds/filters/overrides must never leak
+    // into a neighbor's query
+    let mut groups: Vec<(GroupKey, Vec<PendingQuery>)> = Vec::new();
     for r in batch {
-        match groups.iter_mut().find(|(key, _)| key.0 == r.k && key.1 == r.params) {
+        match groups
+            .iter_mut()
+            .find(|(key, _)| key.0 == r.kind && key.1 == r.filter && key.2 == r.params)
+        {
             Some((_, g)) => g.push(r),
-            None => groups.push(((r.k, r.params.clone()), vec![r])),
+            None => groups.push(((r.kind, r.filter.clone(), r.params.clone()), vec![r])),
         }
     }
-    for ((k, params), group) in groups {
+    for ((kind, filter, params), group) in groups {
         let mut queries = Vec::with_capacity(group.len() * backend.dim());
         for r in &group {
             queries.extend_from_slice(&r.vector);
         }
+        let req = QueryRequest { queries: &queries, kind, filter, params };
         let t0 = Instant::now();
-        let result = backend.search_batch(&queries, k, params.as_ref());
+        let result = backend.query_batch(&req);
         let service_us = t0.elapsed().as_micros() as u64;
         metrics.service_us.record(service_us.max(1));
         match result {
-            Ok((d, l)) => {
+            Ok(resp) => {
                 for (i, r) in group.into_iter().enumerate() {
                     let queue_us = (t0 - r.enqueued).as_micros() as u64;
                     metrics.queue_us.record(queue_us.max(1));
                     metrics.e2e_us.record((queue_us + service_us).max(1));
-                    let resp = QueryResponse {
-                        distances: d[i * k..(i + 1) * k].to_vec(),
-                        labels: l[i * k..(i + 1) * k].to_vec(),
+                    let stats = resp.stats.get(i).copied().unwrap_or_default();
+                    // legacy backends synthesize default stats
+                    // (codes_scanned 0); recording those would drag the
+                    // scan-work histograms toward zero, so only real scan
+                    // work is folded in
+                    if stats.codes_scanned > 0 {
+                        metrics.record_query_stats(&stats);
+                    }
+                    // top-k keeps the legacy padded wire shape; range hits
+                    // are inherently variable-length
+                    let (distances, labels) = match kind {
+                        QueryKind::TopK { k } => pad_hits(&resp.hits[i], k),
+                        QueryKind::Range { .. } => (
+                            resp.hits[i].iter().map(|h| h.distance).collect(),
+                            resp.hits[i].iter().map(|h| h.label).collect(),
+                        ),
+                    };
+                    let out = ServeResponse {
+                        distances,
+                        labels,
+                        stats,
                         queue_us,
                         service_us,
                         batch_size,
                     };
-                    let _ = r.reply.send(Ok(resp));
+                    let _ = r.reply.send(Ok(out));
                 }
             }
             Err(e) => {
@@ -229,7 +293,7 @@ fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<Quer
 mod tests {
     use super::*;
 
-    /// Deterministic toy backend: distance = |k|, label = floor(v[0]).
+    /// Deterministic toy backend: distance = rank, label = floor(v[0]).
     struct EchoBackend {
         dim: usize,
         delay: Duration,
@@ -293,7 +357,7 @@ mod tests {
                 b.search(vec![i as f32], 1, None).unwrap()
             }));
         }
-        let responses: Vec<QueryResponse> =
+        let responses: Vec<ServeResponse> =
             handles.into_iter().map(|h| h.join().unwrap()).collect();
         let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
         assert!(max_batch > 1, "no batching happened (max={max_batch})");
@@ -381,6 +445,66 @@ mod tests {
         for h in handles {
             let (nprobe, resp) = h.join().unwrap();
             assert_eq!(resp.labels, vec![nprobe; 2], "params leaked between requests");
+        }
+    }
+
+    /// Backend that echoes the request's filter signature (or 0) back as
+    /// the label: requests with different filters must never share a call.
+    struct FilterEchoBackend;
+    impl SearchBackend for FilterEchoBackend {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn search_batch(
+            &self,
+            queries: &[f32],
+            k: usize,
+            _params: Option<&SearchParams>,
+        ) -> Result<(Vec<f32>, Vec<i64>)> {
+            Ok((vec![0.0; queries.len() * k], vec![0; queries.len() * k]))
+        }
+        fn query_batch(
+            &self,
+            req: &crate::index::query::QueryRequest<'_>,
+        ) -> Result<crate::index::query::QueryResponse> {
+            use crate::index::query::{Hit, QueryResponse, QueryStats};
+            let tag = req.filter.as_ref().map(|f| f.signature() as i64 & 0xFFFF).unwrap_or(0);
+            let nq = req.queries.len();
+            Ok(QueryResponse {
+                hits: vec![vec![Hit { distance: 0.0, label: tag }]; nq],
+                stats: vec![QueryStats::default(); nq],
+            })
+        }
+        fn describe(&self) -> String {
+            "filter-echo".into()
+        }
+    }
+
+    #[test]
+    fn filters_partition_the_batch() {
+        use crate::index::query::Filter;
+        let b = Arc::new(Batcher::start(
+            Arc::new(FilterEchoBackend),
+            BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), ..Default::default() },
+        ));
+        let filters = [None, Some(Filter::id_range(0, 10)), Some(Filter::id_range(0, 20))];
+        let expect: Vec<i64> = filters
+            .iter()
+            .map(|f| f.as_ref().map(|f| f.signature() as i64 & 0xFFFF).unwrap_or(0))
+            .collect();
+        let mut handles = Vec::new();
+        for i in 0..18usize {
+            let b = b.clone();
+            let filter = filters[i % 3].clone();
+            handles.push(std::thread::spawn(move || {
+                let resp =
+                    b.query(vec![i as f32], QueryKind::TopK { k: 1 }, filter, None).unwrap();
+                (i % 3, resp)
+            }));
+        }
+        for h in handles {
+            let (which, resp) = h.join().unwrap();
+            assert_eq!(resp.labels, vec![expect[which]], "filter leaked between requests");
         }
     }
 

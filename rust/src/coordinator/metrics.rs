@@ -64,6 +64,12 @@ pub struct Metrics {
     pub service_us: UsHistogram,
     /// end-to-end per request
     pub e2e_us: UsHistogram,
+    /// per-request codes scanned (log2 buckets; sourced from
+    /// `QueryResponse` stats)
+    pub codes_scanned: UsHistogram,
+    /// per-request filter selectivity in permille (0–1000; 1000 =
+    /// unfiltered)
+    pub filter_selectivity_pm: UsHistogram,
     /// recent batch sizes (bounded ring, for mean occupancy)
     batch_sizes: Mutex<Vec<usize>>,
 }
@@ -71,6 +77,14 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Fold one request's [`crate::index::query::QueryStats`] into the
+    /// scan-work histograms.
+    pub fn record_query_stats(&self, stats: &crate::index::query::QueryStats) {
+        self.codes_scanned.record(stats.codes_scanned as u64);
+        let pm = (stats.filter_selectivity.clamp(0.0, 1.0) * 1000.0).round() as u64;
+        self.filter_selectivity_pm.record(pm);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -104,7 +118,18 @@ impl Metrics {
             .set("e2e_mean_us", Json::Num(self.e2e_us.mean_us()))
             .set("e2e_p50_us", Json::Num(self.e2e_us.percentile_us(50.0)))
             .set("e2e_p95_us", Json::Num(self.e2e_us.percentile_us(95.0)))
-            .set("e2e_p99_us", Json::Num(self.e2e_us.percentile_us(99.0)));
+            .set("e2e_p99_us", Json::Num(self.e2e_us.percentile_us(99.0)))
+            .set("codes_scanned_count", Json::Num(self.codes_scanned.count() as f64))
+            .set("codes_scanned_mean", Json::Num(self.codes_scanned.mean_us()))
+            .set("codes_scanned_p95", Json::Num(self.codes_scanned.percentile_us(95.0)))
+            .set(
+                "filter_selectivity_mean",
+                Json::Num(self.filter_selectivity_pm.mean_us() / 1000.0),
+            )
+            .set(
+                "filter_selectivity_p50",
+                Json::Num(self.filter_selectivity_pm.percentile_us(50.0) / 1000.0),
+            );
         o
     }
 }
@@ -151,8 +176,38 @@ mod tests {
         m.requests_total.fetch_add(3, Ordering::Relaxed);
         m.e2e_us.record(500);
         let j = m.to_json();
-        for key in ["requests_total", "e2e_p95_us", "service_mean_us"] {
+        for key in [
+            "requests_total",
+            "e2e_p95_us",
+            "service_mean_us",
+            "codes_scanned_mean",
+            "filter_selectivity_mean",
+        ] {
             assert!(j.get(key).is_some(), "{key}");
         }
+    }
+
+    /// The scan-work histograms (satellite: per-request codes_scanned /
+    /// filter_selectivity sourced from QueryResponse stats).
+    #[test]
+    fn query_stats_recorded() {
+        use crate::index::query::QueryStats;
+        let m = Metrics::new();
+        m.record_query_stats(&QueryStats {
+            codes_scanned: 4096,
+            lists_probed: 8,
+            filter_selectivity: 0.25,
+        });
+        m.record_query_stats(&QueryStats {
+            codes_scanned: 4096,
+            lists_probed: 8,
+            filter_selectivity: 0.75,
+        });
+        assert_eq!(m.codes_scanned.count(), 2);
+        assert!((m.codes_scanned.mean_us() - 4096.0).abs() < 1e-9);
+        let j = m.to_json();
+        let sel = j.get("filter_selectivity_mean").unwrap().as_f64().unwrap();
+        assert!((sel - 0.5).abs() < 1e-9, "{sel}");
+        assert_eq!(j.get("codes_scanned_count").unwrap().as_usize().unwrap(), 2);
     }
 }

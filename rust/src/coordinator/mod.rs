@@ -4,26 +4,45 @@
 //! Architecture (vLLM-router-like, scaled to this paper's scope):
 //!
 //! ```text
-//!   TCP clients ──► server (thread per conn, line-JSON protocol)
-//!                      │ QueryRequest { vector, k, params, reply channel }
+//!   TCP clients ──► server (thread per conn, line-JSON protocol:
+//!                      kind topk|range, optional id_range/id_set filter)
+//!                      │ PendingQuery { vector, kind, filter, params, reply }
 //!                      ▼
 //!                dynamic batcher (max_batch / max_wait window)
-//!                      │ grouped by (k, params), concatenated
+//!                      │ grouped by (kind, filter, params) into ONE
+//!                      │ typed QueryRequest per group
 //!                      ▼
-//!                SearchBackend (sealed index behind Arc<dyn Index>, or
-//!                the PJRT pipeline from runtime/) ──► responses routed
+//!                SearchBackend::query_batch (sealed index behind
+//!                Arc<dyn Index>, a shard fan-out, or the PJRT pipeline)
+//!                      │ QueryResponse { per-query hits + stats }
+//!                      ▼
+//!                responses routed back; stats folded into metrics
+//!                (codes_scanned / filter_selectivity histograms)
 //! ```
+//!
+//! The whole pipe speaks the typed request/response model of
+//! [`crate::index::query`]: filters ride the request into the fastscan
+//! kernels (mask pushdown — no post-hoc rescans anywhere in the serving
+//! path) and range queries return variable-length hits that
+//! [`ShardedBackend`] merges across shards, deduplicating labels that
+//! legitimately live on more than one shard.
 //!
 //! Search is read-only end to end: backends take `&self` and forward
 //! per-request [`crate::index::SearchParams`], so shards fan out across
 //! threads without a per-index mutex and concurrent requests with
 //! different parameters never interfere.
 //!
+//! **Batch-level LUT reuse:** batcher groups share one backend call, and
+//! [`ShardedBackend`] computes each group's per-query scan LUTs once
+//! (when every shard reports the same `lut_signature`) and fans them out
+//! via `query_batch_with_luts` — the serving-layer counterpart of the
+//! paper's register-resident tables. LUTs depend only on the query
+//! vectors, so the reuse applies to every kind/filter combination.
+//!
 //! Everything is std-thread + mpsc (no tokio in the vendored crate set);
 //! on the paper's workload (sub-ms searches) OS threads are not the
 //! bottleneck — the batcher exists to amortize LUT construction across
-//! queries, which is the coordinator-level counterpart of the paper's
-//! register-resident tables.
+//! queries.
 
 pub mod batcher;
 pub mod metrics;
@@ -31,7 +50,7 @@ pub mod router;
 pub mod server;
 pub mod service;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, ServeResponse};
 pub use metrics::Metrics;
 pub use router::ShardedBackend;
 pub use server::{Client, Server, ServerConfig};

@@ -4,8 +4,8 @@
 //! each like the paper's Table 1 configuration).
 
 use super::service::{IndexBackend, SearchBackend};
+use crate::index::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use crate::index::{Index, SearchParams};
-use crate::util::topk::TopK;
 use crate::Result;
 use std::sync::Arc;
 
@@ -66,6 +66,77 @@ impl ShardedBackend {
     pub fn reuses_luts(&self) -> bool {
         self.shared_luts.is_some() && self.shards.len() > 1
     }
+
+    /// Fan a typed request out to every shard (reusing one LUT build when
+    /// the codebooks agree) and collect the per-shard responses in shard
+    /// order.
+    fn fan_out(&self, req: &QueryRequest<'_>) -> Result<Vec<QueryResponse>> {
+        // batch-level LUT reuse: LUTs depend only on the query vectors, so
+        // one build serves every kind/filter combination
+        let shared_luts: Option<Vec<f32>> = if self.reuses_luts() {
+            self.shards[0].compute_scan_luts(req.queries)
+        } else {
+            None
+        };
+        // fan out: one thread per shard (scoped — no 'static bounds needed)
+        let results: Vec<Result<QueryResponse>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|shard| {
+                    let shard = shard.clone();
+                    let luts = shared_luts.as_deref();
+                    scope.spawn(move || match luts {
+                        Some(l) => shard.query_batch_with_luts(req, l),
+                        None => shard.query_batch(req),
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
+        });
+        results.into_iter().collect()
+    }
+}
+
+/// Merge one query's per-shard hit rows: ascending `(distance, label)`
+/// with duplicate external labels collapsed to their best distance.
+///
+/// Dedupe matters: the same label can legitimately live on several shards
+/// (duplicate adds during a rebalance, replicated hot ids), and a merged
+/// top-k that returns one label twice wastes result slots and breaks
+/// consumers that key on labels.
+fn merge_rows(rows: Vec<&[Hit]>, limit: Option<usize>) -> Vec<Hit> {
+    let mut all: Vec<Hit> = rows.into_iter().flatten().copied().collect();
+    all.sort_by(|a, b| {
+        a.distance
+            .partial_cmp(&b.distance)
+            .unwrap()
+            .then(a.label.cmp(&b.label))
+    });
+    let mut seen = std::collections::HashSet::with_capacity(all.len());
+    all.retain(|h| seen.insert(h.label));
+    if let Some(k) = limit {
+        all.truncate(k);
+    }
+    all
+}
+
+/// Merge per-shard stats of one query: scan work adds up, selectivity is
+/// weighted by how many codes each shard considered.
+fn merge_stats(per_shard: Vec<&QueryStats>) -> QueryStats {
+    let mut out = QueryStats { codes_scanned: 0, lists_probed: 0, filter_selectivity: 1.0 };
+    let mut weighted = 0.0f64;
+    for s in &per_shard {
+        out.codes_scanned += s.codes_scanned;
+        out.lists_probed += s.lists_probed;
+        weighted += s.filter_selectivity * s.codes_scanned as f64;
+    }
+    if out.codes_scanned > 0 {
+        out.filter_selectivity = weighted / out.codes_scanned as f64;
+    } else if let Some(first) = per_shard.first() {
+        out.filter_selectivity = first.filter_selectivity;
+    }
+    out
 }
 
 impl SearchBackend for ShardedBackend {
@@ -83,52 +154,43 @@ impl SearchBackend for ShardedBackend {
         if k == 0 || nq == 0 {
             return Ok((Vec::new(), Vec::new()));
         }
-        // batch-level LUT reuse: one build for the whole (k, params) group
-        // when every shard shares the quantizer; per-shard rebuild otherwise
-        let shared_luts: Option<Vec<f32>> = if self.reuses_luts() {
-            self.shards[0].compute_scan_luts(queries)
-        } else {
-            None
+        let req = QueryRequest {
+            queries,
+            kind: QueryKind::TopK { k },
+            filter: None,
+            params: params.cloned(),
         };
-        // fan out: one thread per shard (scoped — no 'static bounds needed)
-        let results: Vec<Result<(Vec<f32>, Vec<i64>)>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
-                .iter()
-                .map(|shard| {
-                    let shard = shard.clone();
-                    let luts = shared_luts.as_deref();
-                    scope.spawn(move || match luts {
-                        Some(l) => shard.search_batch_with_luts(queries, l, k, params),
-                        None => shard.search_batch(queries, k, params),
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
-        });
-
-        // merge per query
-        let mut shard_results = Vec::with_capacity(results.len());
-        for r in results {
-            shard_results.push(r?);
-        }
+        let resp = self.query_batch(&req)?;
         let mut distances = Vec::with_capacity(nq * k);
         let mut labels = Vec::with_capacity(nq * k);
-        for qi in 0..nq {
-            let mut heap = TopK::new(k);
-            for (d, l) in &shard_results {
-                for r in 0..k {
-                    let label = l[qi * k + r];
-                    if label >= 0 {
-                        heap.push(d[qi * k + r], label);
-                    }
-                }
-            }
-            let (d, l) = heap.into_sorted();
+        for row in resp.hits {
+            let (d, l) = crate::index::query::pad_hits(&row, k);
             distances.extend(d);
             labels.extend(l);
         }
         Ok((distances, labels))
+    }
+
+    fn query_batch(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        let nq = req.queries.len() / self.dim;
+        if nq == 0 {
+            return Ok(QueryResponse::default());
+        }
+        let shard_resps = self.fan_out(req)?;
+        let limit = match req.kind {
+            QueryKind::TopK { k } => Some(k),
+            QueryKind::Range { .. } => None,
+        };
+        let mut hits = Vec::with_capacity(nq);
+        let mut stats = Vec::with_capacity(nq);
+        for qi in 0..nq {
+            hits.push(merge_rows(
+                shard_resps.iter().map(|r| r.hits[qi].as_slice()).collect(),
+                limit,
+            ));
+            stats.push(merge_stats(shard_resps.iter().map(|r| &r.stats[qi]).collect()));
+        }
+        Ok(QueryResponse { hits, stats })
     }
 
     fn describe(&self) -> String {
@@ -143,6 +205,46 @@ mod tests {
     use crate::datasets::SyntheticDataset;
     use crate::ivf::{IvfParams, IvfPq4};
     use crate::pq::PqParams;
+    use crate::util::topk::TopK;
+
+    /// Regression (duplicate-add scenario): a label that legitimately
+    /// lives on several shards must appear at most once in the merged
+    /// top-k, at its best distance — never twice.
+    #[test]
+    fn merge_dedupes_duplicate_labels_across_shards() {
+        let ds = SyntheticDataset::sift_like(600, 5, 236);
+        let dim = ds.dim;
+        // both shards index the SAME vectors with the SAME global ids
+        let mk = || -> Arc<dyn SearchBackend> {
+            let mut idx = IvfPq4::new(dim, IvfParams::new(4), PqParams::new_4bit(8));
+            idx.train(&ds.train).unwrap();
+            let ids: Vec<i64> = (0..600).collect();
+            idx.add_with_ids(&ds.base, &ids).unwrap();
+            idx.nprobe = 4;
+            idx.fastscan.reservoir_factor = 32;
+            Arc::new(IvfBackend::new(idx).unwrap())
+        };
+        let router = ShardedBackend::new(vec![mk(), mk()]).unwrap();
+        let (d, l) = router.search_batch(&ds.queries, 5, None).unwrap();
+        for qi in 0..5 {
+            let row = &l[qi * 5..(qi + 1) * 5];
+            let mut seen = std::collections::HashSet::new();
+            for &label in row.iter().filter(|&&x| x >= 0) {
+                assert!(seen.insert(label), "q{qi}: duplicate label {label} in {row:?}");
+            }
+            // both shards hold every id, so a full top-5 must exist
+            assert!(row.iter().all(|&x| x >= 0), "q{qi}: padded row {row:?}");
+            let dr = &d[qi * 5..(qi + 1) * 5];
+            assert!(dr.windows(2).all(|w| w[0] <= w[1]), "q{qi}: unsorted {dr:?}");
+        }
+        // typed path dedupes the same way
+        let req = QueryRequest::top_k(&ds.queries, 5);
+        let resp = router.query_batch(&req).unwrap();
+        for row in &resp.hits {
+            let mut seen = std::collections::HashSet::new();
+            assert!(row.iter().all(|h| seen.insert(h.label)), "{row:?}");
+        }
+    }
 
     /// Build `nshards` IVF shards over disjoint halves of one dataset with
     /// global ids, and check the router merges to the same results as one

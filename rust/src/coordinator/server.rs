@@ -1,21 +1,35 @@
 //! TCP serving front-end: newline-delimited JSON over a socket, one thread
 //! per connection, all requests funneled through the shared [`Batcher`].
 //!
-//! Protocol (requests and responses are single JSON lines):
+//! Protocol (requests and responses are single JSON lines). The `search`
+//! verb carries the full typed query model: an optional `"kind"`
+//! (`"topk"`, the default, or `"range"` with `"radius"`) and an optional
+//! `"filter"` (`{"id_range": [start, end)}` or `{"id_set": [ids…]}`):
 //!
 //! ```text
 //!   → {"search": {"vector": [f32…], "k": 10,
-//!                 "params": {"nprobe": 8, "rerank": false}}}   (params optional)
-//!   ← {"ok": {"labels": […], "distances": […], "batch_size": n}}
+//!                 "filter": {"id_range": [0, 1000]},
+//!                 "params": {"nprobe": 8, "rerank": false}}}   (filter/params optional)
+//!   ← {"ok": {"labels": […], "distances": […], "batch_size": n,
+//!             "stats": {"codes_scanned": …, "lists_probed": …,
+//!                       "filter_selectivity": …}}}
+//!   → {"search": {"vector": [f32…], "kind": "range", "radius": 1.5,
+//!                 "filter": {"id_set": [3, 17, 99]}}}
+//!   ← {"ok": {"labels": […], "distances": […], …}}     (variable length)
 //!   → {"stats": true}
-//!   ← {"ok": { …metrics… }}
+//!   ← {"ok": { …metrics, incl. codes_scanned/filter_selectivity… }}
 //!   → {"ping": true}
 //!   ← {"ok": "pong"}
 //!   ← {"err": "message"}           (any failure)
 //! ```
+//!
+//! Predicate filters are in-process closures and cannot cross the wire.
+//! Range responses are truncated to the nearest `MAX_WIRE_RANGE_HITS`
+//! hits — the radius analog of the top-k path's `k <= 1024` cap.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::service::SearchBackend;
+use crate::index::query::{Filter, Hit, QueryKind, QueryStats};
 use crate::index::SearchParams;
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -139,15 +153,43 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
     if vector.len() != dim {
         return err(format!("vector dim {} != index dim {dim}", vector.len()));
     }
-    let k = search.get("k").and_then(|x| x.as_usize()).unwrap_or(10);
-    if k == 0 || k > 1024 {
-        return err(format!("bad k {k}"));
-    }
+    // query kind: "topk" (default, takes "k") or "range" (takes "radius")
+    let kind = match search.get("kind").and_then(|x| x.as_str()) {
+        None | Some("topk") => {
+            let k = search.get("k").and_then(|x| x.as_usize()).unwrap_or(10);
+            if k == 0 || k > 1024 {
+                return err(format!("bad k {k}"));
+            }
+            QueryKind::TopK { k }
+        }
+        Some("range") => {
+            let Some(radius) = search.get("radius").and_then(|x| x.as_f64()) else {
+                return err("range query requires a numeric radius".into());
+            };
+            if !radius.is_finite() || radius < 0.0 {
+                return err(format!("bad radius {radius}"));
+            }
+            QueryKind::Range { radius: radius as f32 }
+        }
+        Some(other) => return err(format!("bad kind {other:?} (topk|range)")),
+    };
+    let filter = match search.get("filter") {
+        None => None,
+        Some(obj) => match filter_from_json(obj) {
+            Ok(f) => Some(f),
+            Err(e) => return err(e.to_string()),
+        },
+    };
     let params = match search.get("params") {
         None => None,
         Some(obj) => {
             match search_params_from_json(obj).and_then(|p| {
-                p.validate_for_request(k)?;
+                // the shortlist product caps are k-based; range queries
+                // have no k, so they validate against the base bounds only
+                match kind {
+                    QueryKind::TopK { k } => p.validate_for_request(k)?,
+                    QueryKind::Range { .. } => p.validate_bounds()?,
+                }
                 Ok(p)
             }) {
                 Ok(p) => Some(p),
@@ -155,8 +197,22 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
             }
         }
     };
-    match batcher.search(vector, k, params) {
-        Ok(resp) => {
+    match batcher.query(vector, kind, filter, params) {
+        Ok(mut resp) => {
+            // serving boundary: a huge radius must not let one request
+            // serialize the whole corpus in a single JSON line. Hits are
+            // sorted ascending, so truncation keeps the nearest.
+            if matches!(kind, QueryKind::Range { .. })
+                && resp.labels.len() > MAX_WIRE_RANGE_HITS
+            {
+                resp.labels.truncate(MAX_WIRE_RANGE_HITS);
+                resp.distances.truncate(MAX_WIRE_RANGE_HITS);
+            }
+            let mut stats = Json::obj();
+            stats
+                .set("codes_scanned", Json::Num(resp.stats.codes_scanned as f64))
+                .set("lists_probed", Json::Num(resp.stats.lists_probed as f64))
+                .set("filter_selectivity", Json::Num(resp.stats.filter_selectivity));
             let mut body = Json::obj();
             body.set("labels", Json::Arr(resp.labels.iter().map(|&l| Json::Num(l as f64)).collect()))
                 .set(
@@ -165,13 +221,88 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
                 )
                 .set("batch_size", Json::Num(resp.batch_size as f64))
                 .set("queue_us", Json::Num(resp.queue_us as f64))
-                .set("service_us", Json::Num(resp.service_us as f64));
+                .set("service_us", Json::Num(resp.service_us as f64))
+                .set("stats", stats);
             let mut o = Json::obj();
             o.set("ok", body);
             o
         }
         Err(e) => err(e.to_string()),
     }
+}
+
+/// Largest id-set filter accepted over the wire — a remote client does not
+/// get to make the server build multi-million-entry sets per request.
+const MAX_WIRE_ID_SET: usize = 1 << 20;
+
+/// Most range hits returned per wire response (nearest kept). The top-k
+/// path caps `k` at 1024; this is the counterpart bound for radius
+/// queries, whose natural result size is corpus-dependent.
+const MAX_WIRE_RANGE_HITS: usize = 1 << 16;
+
+/// Parse a wire filter object: `{"id_range": [start, end)}` or
+/// `{"id_set": [ids…]}`.
+fn filter_from_json(obj: &Json) -> Result<Filter> {
+    // every entry must be numeric — silently narrowing a malformed filter
+    // would return wrong (quietly smaller) result sets
+    fn all_i64(arr: &[Json], what: &str) -> Result<Vec<i64>> {
+        arr.iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|v| v as i64)
+                    .ok_or_else(|| Error::Serve(format!("filter.{what} entries must be numbers")))
+            })
+            .collect()
+    }
+    if let Some(r) = obj.get("id_range") {
+        let Some(arr) = r.as_arr() else {
+            return Err(Error::Serve("filter.id_range must be [start, end]".into()));
+        };
+        let parts = all_i64(arr, "id_range")?;
+        if parts.len() != 2 {
+            return Err(Error::Serve("filter.id_range must be [start, end]".into()));
+        }
+        return Ok(Filter::id_range(parts[0], parts[1]));
+    }
+    if let Some(s) = obj.get("id_set") {
+        let Some(arr) = s.as_arr() else {
+            return Err(Error::Serve("filter.id_set must be an array of ids".into()));
+        };
+        if arr.len() > MAX_WIRE_ID_SET {
+            return Err(Error::Serve(format!(
+                "filter.id_set too large ({} > {MAX_WIRE_ID_SET})",
+                arr.len()
+            )));
+        }
+        return Ok(Filter::id_set(&all_i64(arr, "id_set")?));
+    }
+    Err(Error::Serve("filter must carry id_range or id_set".into()))
+}
+
+/// Serialize a filter for the wire (the client side of
+/// [`filter_from_json`]). Predicate filters are process-local closures.
+fn filter_to_json(filter: &Filter) -> Result<Json> {
+    let mut o = Json::obj();
+    match filter {
+        Filter::IdRange { start, end } => {
+            o.set(
+                "id_range",
+                Json::Arr(vec![Json::Num(*start as f64), Json::Num(*end as f64)]),
+            );
+        }
+        Filter::IdSet(set) => {
+            o.set(
+                "id_set",
+                Json::Arr(set.ids().iter().map(|&id| Json::Num(id as f64)).collect()),
+            );
+        }
+        Filter::Predicate(_) => {
+            return Err(Error::Serve(
+                "predicate filters cannot be serialized over the wire".into(),
+            ))
+        }
+    }
+    Ok(o)
 }
 
 /// Parse a JSON object of per-request overrides through the shared
@@ -287,6 +418,68 @@ impl Client {
         let batch = ok.get("batch_size").and_then(|x| x.as_usize()).unwrap_or(1);
         Ok((distances, labels, batch))
     }
+
+    /// The typed query entry: top-k or range, optionally filtered (`IdSet`
+    /// / `IdRange` only — predicate filters cannot cross the wire).
+    /// Returns real hits (padding stripped) plus the per-query stats.
+    pub fn query(
+        &mut self,
+        vector: &[f32],
+        kind: &QueryKind,
+        filter: Option<&Filter>,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<Hit>, QueryStats)> {
+        let mut inner = Json::obj();
+        inner.set("vector", Json::Arr(vector.iter().map(|&x| Json::Num(x as f64)).collect()));
+        match kind {
+            QueryKind::TopK { k } => {
+                inner.set("kind", Json::Str("topk".into())).set("k", Json::Num(*k as f64));
+            }
+            QueryKind::Range { radius } => {
+                inner
+                    .set("kind", Json::Str("range".into()))
+                    .set("radius", Json::Num(*radius as f64));
+            }
+        }
+        if let Some(f) = filter {
+            inner.set("filter", filter_to_json(f)?);
+        }
+        if let Some(p) = params {
+            let mut pobj = Json::obj();
+            for (key, value) in p.to_kv() {
+                pobj.set(key, Json::Str(value));
+            }
+            inner.set("params", pobj);
+        }
+        let mut req = Json::obj();
+        req.set("search", inner);
+        let ok = self.roundtrip(&req)?;
+        let labels =
+            ok.get("labels").and_then(|x| x.as_arr()).ok_or_else(|| Error::Serve("missing labels".into()))?;
+        let distances = ok
+            .get("distances")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Serve("missing distances".into()))?;
+        // parse index-aligned: top-k padding serializes as (null, -1) — a
+        // null distance or a negative label marks a pad slot, not a hit
+        let mut hits = Vec::new();
+        for (l, d) in labels.iter().zip(distances.iter()) {
+            let (Some(label), Some(distance)) = (l.as_f64(), d.as_f64()) else { continue };
+            if label < 0.0 {
+                continue;
+            }
+            hits.push(Hit { distance: distance as f32, label: label as i64 });
+        }
+        let stats = ok.get("stats").map(|s| QueryStats {
+            codes_scanned: s.get("codes_scanned").and_then(|x| x.as_usize()).unwrap_or(0),
+            lists_probed: s.get("lists_probed").and_then(|x| x.as_usize()).unwrap_or(0),
+            filter_selectivity: s
+                .get("filter_selectivity")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(1.0),
+        });
+        Ok((hits, stats.unwrap_or_default()))
+    }
 }
 
 #[cfg(test)]
@@ -346,6 +539,50 @@ mod tests {
             h.join().unwrap();
         }
         assert!(server.metrics_json().get("requests_total").unwrap().as_usize().unwrap() >= 20);
+        server.stop();
+    }
+
+    /// The typed wire surface: filtered top-k and range queries round-trip
+    /// through the line-JSON protocol with stats attached.
+    #[test]
+    fn query_verbs_roundtrip() {
+        let (backend, data) = toy_backend();
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let q = &data[..16];
+        // filtered top-k: every returned label obeys the range
+        let (hits, stats) = client
+            .query(
+                q,
+                &QueryKind::TopK { k: 5 },
+                Some(&Filter::id_range(0, 100)),
+                Some(&SearchParams::new().with_nprobe(4)),
+            )
+            .unwrap();
+        assert!(!hits.is_empty());
+        assert!(hits.iter().all(|h| (0..100).contains(&h.label)), "{hits:?}");
+        assert!(stats.codes_scanned > 0);
+        assert!(stats.filter_selectivity <= 1.0);
+        // id_set filter
+        let (hits, _stats) = client
+            .query(q, &QueryKind::TopK { k: 5 }, Some(&Filter::id_set(&[1, 2, 3])), None)
+            .unwrap();
+        assert!(hits.iter().all(|h| (1..=3).contains(&h.label)), "{hits:?}");
+        // range query: the query is base row 0, so id 0 (distance = its own
+        // quantization error, far below this radius) must be a hit
+        let (hits, _stats) =
+            client.query(q, &QueryKind::Range { radius: 100.0 }, None, None).unwrap();
+        assert!(hits.iter().any(|h| h.label == 0), "{hits:?}");
+        assert!(hits.windows(2).all(|w| w[0].distance <= w[1].distance));
+        // malformed: bad radius / bad kind / predicate filter client-side
+        let bad = client.query(q, &QueryKind::Range { radius: f32::NAN }, None, None);
+        assert!(bad.is_err());
+        let pred = Filter::predicate(|_| true);
+        assert!(client.query(q, &QueryKind::TopK { k: 3 }, Some(&pred), None).is_err());
+        // server-side stats verb now exposes the scan-work histograms
+        let stats = client.stats().unwrap();
+        assert!(stats.get("codes_scanned_mean").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stats.get("filter_selectivity_mean").is_some());
         server.stop();
     }
 

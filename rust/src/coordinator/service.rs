@@ -4,6 +4,7 @@
 //! plus optional per-request [`SearchParams`], so any backend can serve
 //! concurrent batches without a lock.
 
+use crate::index::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use crate::index::{params, Index, SearchParams};
 use crate::ivf::IvfPq4;
 use crate::runtime::{EngineHandle, Tensor};
@@ -22,6 +23,33 @@ pub trait SearchBackend: Send + Sync {
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<(Vec<f32>, Vec<i64>)>;
+    /// Answer a typed [`QueryRequest`] (top-k/range, optional filter).
+    /// The default covers unfiltered top-k via [`SearchBackend::search_batch`];
+    /// backends without filter/range support reject everything else
+    /// instead of silently mis-serving.
+    fn query_batch(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        match (&req.kind, &req.filter) {
+            (QueryKind::TopK { k: 0 }, None) => {
+                // k == 0 must still yield one (empty) hit row per query —
+                // downstream consumers index rows by query position
+                let nq = req.queries.len() / self.dim().max(1);
+                Ok(QueryResponse::empty(nq))
+            }
+            (QueryKind::TopK { k }, None) => {
+                let (d, l) = self.search_batch(req.queries, *k, req.params.as_ref())?;
+                Ok(padded_to_response(&d, &l, *k))
+            }
+            _ => Err(Error::Serve(format!(
+                "backend {} supports only unfiltered top-k queries",
+                self.describe()
+            ))),
+        }
+    }
+    /// [`SearchBackend::query_batch`] with precomputed LUTs; the default
+    /// ignores them and recomputes.
+    fn query_batch_with_luts(&self, req: &QueryRequest<'_>, _luts: &[f32]) -> Result<QueryResponse> {
+        self.query_batch(req)
+    }
     /// Fingerprint of the backend's scan-LUT construction (see
     /// [`crate::index::Index::lut_signature`]). Backends sharing an equal
     /// `Some` signature accept each other's [`SearchBackend::compute_scan_luts`]
@@ -47,6 +75,26 @@ pub trait SearchBackend: Send + Sync {
         self.search_batch(queries, k, params)
     }
     fn describe(&self) -> String;
+}
+
+/// Convert a padded `nq × k` `(distances, labels)` pair into a typed
+/// response (pad entries dropped; stats default since legacy backends
+/// report none).
+pub(crate) fn padded_to_response(d: &[f32], l: &[i64], k: usize) -> QueryResponse {
+    debug_assert!(k > 0, "k == 0 is handled by the caller (needs nq from the request)");
+    if k == 0 {
+        return QueryResponse::default();
+    }
+    let nq = l.len() / k;
+    let mut hits = Vec::with_capacity(nq);
+    for qi in 0..nq {
+        let row: Vec<Hit> = (0..k)
+            .filter(|&r| l[qi * k + r] >= 0)
+            .map(|r| Hit { distance: d[qi * k + r], label: l[qi * k + r] })
+            .collect();
+        hits.push(row);
+    }
+    QueryResponse { stats: vec![QueryStats::default(); nq], hits }
 }
 
 /// Backend over any sealed index shared as `Arc<dyn Index>` — the generic
@@ -89,6 +137,14 @@ impl SearchBackend for IndexBackend {
     ) -> Result<(Vec<f32>, Vec<i64>)> {
         let r = self.index.search(queries, k, params)?;
         Ok((r.distances, r.labels))
+    }
+
+    fn query_batch(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        self.index.query(req)
+    }
+
+    fn query_batch_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
+        self.index.query_with_luts(req, luts)
     }
 
     fn lut_signature(&self) -> Option<u64> {
@@ -146,6 +202,29 @@ impl SearchBackend for IvfBackend {
         let (nprobe, ef_search, fs) =
             params::effective_ivf(params, self.index.nprobe, &self.index.fastscan);
         self.index.search_with(queries, k, nprobe, ef_search, &fs)
+    }
+
+    fn query_batch(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        let (nprobe, ef_search, fs) =
+            params::effective_ivf(req.params.as_ref(), self.index.nprobe, &self.index.fastscan);
+        let (hits, stats) =
+            self.index.query_with(req.queries, &req.kind, req.filter.as_ref(), nprobe, ef_search, &fs)?;
+        Ok(QueryResponse { hits, stats })
+    }
+
+    fn query_batch_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
+        let (nprobe, ef_search, fs) =
+            params::effective_ivf(req.params.as_ref(), self.index.nprobe, &self.index.fastscan);
+        let (hits, stats) = self.index.query_with_luts(
+            req.queries,
+            luts,
+            &req.kind,
+            req.filter.as_ref(),
+            nprobe,
+            ef_search,
+            &fs,
+        )?;
+        Ok(QueryResponse { hits, stats })
     }
 
     fn lut_signature(&self) -> Option<u64> {

@@ -245,6 +245,137 @@ pub fn run_kernel_micro(m: usize, width: CodeWidth) -> Table {
     table
 }
 
+/// Filter-pushdown micro-benchmark: masked reservoir scan vs the naive
+/// "scan everything, post-filter the candidates" strategy, swept over the
+/// filter-selectivity axis (the `--filter-selectivity` sweep), per
+/// backend at one code width.
+///
+/// Masked scans skip all-filtered blocks and never admit filtered lanes,
+/// so at low selectivity they should win outright; at 100% they measure
+/// the pure overhead of carrying a mask.
+pub fn run_filter_micro(n: usize, m: usize, width: CodeWidth, sel_pcts: &[usize], seed: u64) -> Table {
+    use crate::pq::bitwidth::build_width_luts;
+    use crate::pq::fastscan::{scan_filtered, scan_into_reservoir, FilterMask, ScanSink};
+    use crate::pq::PackedCodes;
+    use crate::util::rng::Rng;
+    use crate::util::topk::U16Reservoir;
+
+    let mut rng = Rng::new(seed);
+    let cols = width.code_columns(m);
+    let sub_ksub = width.sub_ksub();
+    let codes: Vec<u8> =
+        (0..n * cols).map(|_| (rng.next_u32() as usize % sub_ksub) as u8).collect();
+    let luts_f32: Vec<f32> = (0..cols * sub_ksub).map(|_| rng.next_f32() * 8.0).collect();
+    let wl = build_width_luts(&luts_f32, m, width);
+    let packed = PackedCodes::pack(&codes, m, width).unwrap();
+    let kluts = wl.kernel;
+    let k = 10;
+
+    let runner = BenchRunner::default();
+    let mut table = Table::new(
+        &format!("Filter pushdown micro (n={n}, M={m}, {width})"),
+        &["backend", "selectivity", "masked ms", "postfilter ms", "masked/postfilter"],
+    );
+    for backend in available_backends() {
+        for &pct in sel_pcts {
+            // deterministic pseudo-random admission at ~pct%
+            let mask = FilterMask::from_fn(n, |pos| {
+                (pos.wrapping_mul(2654435761) >> 7) % 100 < pct
+            });
+            let masked = runner.bench(&format!("masked {backend} {pct}%"), || {
+                let mut res = U16Reservoir::new(k, 8);
+                let mut sink = ScanSink::TopK(&mut res);
+                scan_filtered(&packed, &kluts, backend, None, Some(&mask), &mut sink);
+                black_box(res.into_candidates());
+            });
+            let post = runner.bench(&format!("postfilter {backend} {pct}%"), || {
+                // naive strategy: unfiltered scan, then drop candidates the
+                // filter rejects (under-filling k — the correctness gap the
+                // pushdown removes; here we only measure its *cost*)
+                let mut res = U16Reservoir::new(k, 8);
+                scan_into_reservoir(&packed, &kluts, backend, None, &mut res);
+                let cands: Vec<(u16, i64)> = res
+                    .into_candidates()
+                    .into_iter()
+                    .filter(|&(_, l)| mask.passes(l as usize))
+                    .collect();
+                black_box(cands);
+            });
+            table.row(vec![
+                backend.to_string(),
+                format!("{pct}%"),
+                format!("{:.3}", masked.ms_per_iter()),
+                format!("{:.3}", post.ms_per_iter()),
+                format!("{:.2}x", masked.sec_per_iter / post.sec_per_iter),
+            ]);
+        }
+    }
+    table
+}
+
+/// Range-query mode of the layout ablation: in-register threshold
+/// collection (the `ScanSink::Range` path) vs a flat scalar range scan,
+/// per backend at one code width, at a radius admitting ~1% of the codes.
+pub fn run_ablation_layout_range(n: usize, m: usize, width: CodeWidth, seed: u64) -> Table {
+    use crate::pq::bitwidth::build_width_luts;
+    use crate::pq::fastscan::{fastscan_distances_all, scan_filtered, ScanSink};
+    use crate::pq::PackedCodes;
+    use crate::util::rng::Rng;
+
+    let mut rng = Rng::new(seed);
+    let cols = width.code_columns(m);
+    let sub_ksub = width.sub_ksub();
+    let codes: Vec<u8> =
+        (0..n * cols).map(|_| (rng.next_u32() as usize % sub_ksub) as u8).collect();
+    let luts_f32: Vec<f32> = (0..cols * sub_ksub).map(|_| rng.next_f32() * 8.0).collect();
+    let wl = build_width_luts(&luts_f32, m, width);
+    let packed = PackedCodes::pack(&codes, m, width).unwrap();
+    let kluts = wl.kernel;
+
+    // bound admitting ~1% of the database (computed once, portable kernel)
+    let mut all = fastscan_distances_all(&packed, &kluts, Backend::Portable);
+    all.sort_unstable();
+    let bound = all[n / 100];
+
+    let runner = BenchRunner::default();
+    let mut table = Table::new(
+        &format!("Ablation range scan (n={n}, M={m}, {width}, ~1% hit rate)"),
+        &["variant", "ms/scan", "codes/s", "rel"],
+    );
+    let interleaved: Vec<_> = available_backends()
+        .into_iter()
+        .map(|backend| {
+            runner.bench(&format!("range interleaved+{backend}"), || {
+                let mut hits: Vec<(u16, i64)> = Vec::new();
+                let mut sink = ScanSink::Range { bound, hits: &mut hits };
+                scan_filtered(&packed, &kluts, backend, None, None, &mut sink);
+                black_box(hits);
+            })
+        })
+        .collect();
+    // scalar baseline: full distance pass + compare
+    let scalar = runner.bench("range flat+scalar", || {
+        let all = fastscan_distances_all(&packed, &kluts, Backend::Portable);
+        let hits: Vec<(u16, i64)> = all
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, d)| d <= bound)
+            .map(|(i, d)| (d, i as i64))
+            .collect();
+        black_box(hits);
+    });
+    let base = scalar.sec_per_iter;
+    for meas in std::iter::once(scalar).chain(interleaved) {
+        table.row(vec![
+            meas.name.clone(),
+            format!("{:.3}", meas.ms_per_iter()),
+            format!("{:.2e}", n as f64 * meas.per_sec()),
+            format!("{:.2}x", base / meas.sec_per_iter),
+        ]);
+    }
+    table
+}
+
 /// Ablation: u8 LUT quantization (with/without re-ranking) vs exact f32
 /// tables — quantifies the accuracy cost of Eq. 4's approximation.
 pub fn run_ablation_lut(dataset: &str, n: usize, nq: usize, m: usize, seed: u64) -> Result<Table> {
@@ -474,6 +605,27 @@ mod tests {
         let rerank: f64 = t.rows[1][1].parse().unwrap();
         // re-ranked must track the exact ADC closely
         assert!((exact - rerank).abs() <= 0.1, "exact {exact} rerank {rerank}");
+    }
+
+    #[test]
+    fn filter_micro_runs() {
+        std::env::set_var("ARMPQ_BENCH_FAST", "1");
+        let t = run_filter_micro(32 * 40, 8, CodeWidth::W4, &[1, 50, 100], 46);
+        // one row per backend × selectivity
+        assert_eq!(t.rows.len(), 3 * crate::simd::available_backends().len());
+    }
+
+    #[test]
+    fn ablation_layout_range_runs_all_widths() {
+        std::env::set_var("ARMPQ_BENCH_FAST", "1");
+        for width in CodeWidth::ALL {
+            let t = run_ablation_layout_range(32 * 50, 8, width, 47);
+            assert_eq!(
+                t.rows.len(),
+                1 + crate::simd::available_backends().len(),
+                "{width}"
+            );
+        }
     }
 
     #[test]

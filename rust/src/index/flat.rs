@@ -1,6 +1,7 @@
 //! Exact brute-force index (ground truth / small-scale baseline).
 
-use super::{Index, SearchParams, SearchResult};
+use super::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
+use super::Index;
 use crate::util::threads::{default_threads, parallel_map};
 use crate::util::topk::TopK;
 use crate::{Error, Result};
@@ -47,40 +48,80 @@ impl Index for IndexFlat {
         Ok(())
     }
 
-    fn search(
-        &self,
-        queries: &[f32],
-        k: usize,
-        _params: Option<&SearchParams>,
-    ) -> Result<SearchResult> {
-        if queries.len() % self.dim != 0 {
-            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        req.kind.validate()?;
+        if req.queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch {
+                expected: self.dim,
+                got: req.queries.len() % self.dim,
+            });
         }
-        let nq = queries.len() / self.dim;
+        let nq = req.queries.len() / self.dim;
         let n = self.ntotal();
-        if k == 0 || nq == 0 || n == 0 {
-            return Ok(SearchResult::empty(nq, k));
+        let degenerate = n == 0 || matches!(req.kind, QueryKind::TopK { k: 0 });
+        if nq == 0 || degenerate {
+            return Ok(QueryResponse::empty(nq));
         }
         let dim = self.dim;
         let data = &self.data;
-        let rows: Vec<(Vec<f32>, Vec<i64>)> = parallel_map(nq, default_threads(), |qi| {
+        let queries = req.queries;
+        let kind = req.kind;
+        // admission is query-independent: evaluate the filter once per
+        // call (labels are identity positions), not once per (query, row)
+        let keep_bits: Option<Vec<bool>> = req
+            .filter
+            .as_ref()
+            .map(|f| (0..n as i64).map(|id| f.matches(id)).collect());
+        let selectivity = keep_bits
+            .as_ref()
+            .map(|b| b.iter().filter(|&&x| x).count() as f64 / n as f64)
+            .unwrap_or(1.0);
+        let keep_bits = keep_bits.as_deref();
+        let out: Vec<(Vec<Hit>, QueryStats)> = parallel_map(nq, default_threads(), |qi| {
             let q = &queries[qi * dim..(qi + 1) * dim];
-            let mut heap = TopK::new(k);
-            for i in 0..n {
-                let d = crate::util::l2_sq(q, &data[i * dim..(i + 1) * dim]);
-                if d < heap.threshold() {
-                    heap.push(d, i as i64);
+            let hits: Vec<(f32, i64)> = match kind {
+                QueryKind::TopK { k } => {
+                    let mut heap = TopK::new(k);
+                    for i in 0..n {
+                        if keep_bits.is_some_and(|b| !b[i]) {
+                            continue;
+                        }
+                        let d = crate::util::l2_sq(q, &data[i * dim..(i + 1) * dim]);
+                        if d < heap.threshold() {
+                            heap.push(d, i as i64);
+                        }
+                    }
+                    heap.into_hits()
                 }
-            }
-            heap.into_sorted()
+                QueryKind::Range { radius } => {
+                    let mut hits = Vec::new();
+                    for i in 0..n {
+                        if keep_bits.is_some_and(|b| !b[i]) {
+                            continue;
+                        }
+                        let d = crate::util::l2_sq(q, &data[i * dim..(i + 1) * dim]);
+                        if d <= radius {
+                            hits.push((d, i as i64));
+                        }
+                    }
+                    hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                    hits
+                }
+            };
+            let stats = QueryStats {
+                codes_scanned: n,
+                lists_probed: 1,
+                filter_selectivity: selectivity,
+            };
+            (hits.into_iter().map(|(distance, label)| Hit { distance, label }).collect(), stats)
         });
-        let mut distances = Vec::with_capacity(nq * k);
-        let mut labels = Vec::with_capacity(nq * k);
-        for (d, l) in rows {
-            distances.extend(d);
-            labels.extend(l);
+        let mut hits = Vec::with_capacity(nq);
+        let mut stats = Vec::with_capacity(nq);
+        for (h, s) in out {
+            hits.push(h);
+            stats.push(s);
         }
-        Ok(SearchResult { k, distances, labels })
+        Ok(QueryResponse { hits, stats })
     }
 
     fn describe(&self) -> String {
@@ -127,6 +168,30 @@ mod tests {
         let mut idx = IndexFlat::new(4);
         assert!(idx.add(&[1.0; 3]).is_err());
         assert!(idx.search(&[1.0; 5], 1, None).is_err());
+    }
+
+    #[test]
+    fn filtered_and_range_queries_exact() {
+        use crate::index::Filter;
+        let dim = 4;
+        let data: Vec<f32> = (0..80).map(|i| i as f32).collect(); // 20 vectors
+        let mut idx = IndexFlat::new(dim);
+        idx.add(&data).unwrap();
+        let q = &data[..dim]; // == row 0
+        // filtered top-k: row 0 excluded → best admitted is row 5
+        let req = QueryRequest::top_k(q, 3).with_filter(Filter::id_range(5, 10));
+        let r = idx.query(&req).unwrap();
+        assert_eq!(r.hits[0][0].label, 5);
+        assert!(r.hits[0].iter().all(|h| (5..10).contains(&h.label)));
+        assert!((r.stats[0].filter_selectivity - 0.25).abs() < 1e-9);
+        assert_eq!(r.stats[0].codes_scanned, 20);
+        // range: exact L2² boundary, row 0 at distance 0 then row 1 at 4·16
+        let r = idx.query(&QueryRequest::range(q, 64.0)).unwrap();
+        assert_eq!(
+            r.hits[0].iter().map(|h| h.label).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        assert_eq!(r.hits[0][1].distance, 64.0); // boundary inclusive
     }
 
     #[test]

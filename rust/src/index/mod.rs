@@ -9,19 +9,33 @@
 //!    [`Index::add`] stages vectors, and [`Index::seal`] packs the staged
 //!    codes into the kernel's interleaved SIMD layout. `seal` is
 //!    idempotent — call it once after the last `add`.
-//! 2. **Query** (`&self`): [`Index::search`] is read-only, so a sealed
-//!    index can be shared behind `Arc<dyn Index>` and searched from many
-//!    threads concurrently without a lock. Searching an index with
+//! 2. **Query** (`&self`): [`Index::query`] is read-only, so a sealed
+//!    index can be shared behind `Arc<dyn Index>` and queried from many
+//!    threads concurrently without a lock. Querying an index with
 //!    unsealed staged codes returns [`crate::Error::NotSealed`] instead of
 //!    silently repacking.
 //!
-//! Runtime knobs (`nprobe`, `ef_search`, `backend`, `rerank`, …) travel
-//! *with each request* as a typed [`SearchParams`] — unset fields fall
-//! back to the index's defaults, set fields win for that call only, and
-//! concurrent requests with different parameters never interfere.
+//! # One request/response pair for every query mode
+//!
+//! [`Index::query`] takes a typed [`QueryRequest`] — the query vectors
+//! plus *what to ask* ([`QueryKind::TopK`] or [`QueryKind::Range`]), *who
+//! may answer* (an optional [`Filter`]: id bitset, id range, or caller
+//! predicate) and *how to search* (the per-request [`SearchParams`]
+//! overrides) — and returns a [`QueryResponse`]: per-query
+//! variable-length hits plus typed per-query stats (codes scanned, lists
+//! probed, filter selectivity).
+//!
+//! Filters are **pushed down into the fastscan kernels**: the index
+//! compiles the `Filter` into a block-aligned bitmask
+//! ([`crate::pq::fastscan::FilterMask`]; per probed list for IVF), so a
+//! filtered-out vector costs one bit in the SIMD admission mask instead
+//! of a post-hoc rescan — and filtered results are bit-identical to
+//! post-filtering an unfiltered exhaustive scan. Range queries reuse the
+//! u16-quantized LUT threshold in-register and collect hits instead of
+//! maintaining a reservoir.
 //!
 //! ```no_run
-//! use armpq::index::{index_factory, Index, SearchParams};
+//! use armpq::index::{index_factory, Filter, Index, QueryRequest, SearchParams};
 //! # let queries = vec![0.0f32; 64];
 //! let mut index = index_factory(64, "IVF100,PQ16x4fs").unwrap();
 //! // build phase (&mut)
@@ -29,32 +43,43 @@
 //! index.train(&data).unwrap();
 //! index.add(&data).unwrap();
 //! index.seal().unwrap();
-//! // query phase (&self) — per-request overrides, no index mutation
-//! let wide = SearchParams::new().with_nprobe(16);
-//! let result = index.search(&queries, 10, Some(&wide)).unwrap();
+//! // query phase (&self): filtered top-k with per-request overrides
+//! let req = QueryRequest::top_k(&queries, 10)
+//!     .with_filter(Filter::id_range(0, 500))
+//!     .with_params(SearchParams::new().with_nprobe(16));
+//! let resp = index.query(&req).unwrap();
+//! println!("hits {:?} selectivity {}", resp.hits[0], resp.stats[0].filter_selectivity);
+//! // radius query: every id with distance <= 1.5 (L2-squared)
+//! let resp = index.query(&QueryRequest::range(&queries, 1.5)).unwrap();
+//! # let _ = resp;
 //! ```
 //!
-//! # The `set_param` compatibility shim
+//! # The `search` and `set_param` compatibility shims
 //!
-//! [`Index::set_param`] (string key/value, `&mut self`) survives as a thin
-//! shim for existing sweep scripts: it parses through the same
-//! [`SearchParams::assign`] parser and stores the result as the index's
-//! *defaults*. New code should prefer passing [`SearchParams`] per call —
-//! the shim mutates shared state and therefore cannot express per-request
-//! tuning; it is kept for compatibility and may be removed once callers
-//! have migrated.
+//! [`Index::search`] survives as a thin shim that builds a `TopK` request
+//! and flattens the response into the fixed-shape [`SearchResult`]
+//! (`nq × k`, padded with `(INFINITY, -1)`). It is a provided trait
+//! method — concrete indexes implement only `query`. Existing callers
+//! keep working unchanged; new code should prefer `query`, which can also
+//! express filters and radius search. The same deprecation path applies
+//! to [`Index::set_param`] (string key/value, `&mut self`): it parses
+//! through [`SearchParams::assign`] and stores the result as the index's
+//! *defaults* — kept for sweep scripts, superseded by per-request
+//! [`SearchParams`].
 
 pub mod factory;
 pub mod flat;
 pub mod io;
 pub mod params;
 pub mod pq_index;
+pub mod query;
 pub mod refine;
 
 pub use factory::index_factory;
 pub use flat::IndexFlat;
 pub use params::{SearchParams, SearchRequest};
 pub use pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
+pub use query::{Filter, Hit, IdSet, QueryKind, QueryRequest, QueryResponse, QueryStats};
 pub use refine::IndexRefineFlat;
 
 use crate::Result;
@@ -91,8 +116,8 @@ impl SearchResult {
 }
 
 /// The common index interface (mirrors the faiss `Index` API surface the
-/// paper's implementation plugs into, with faiss' newer
-/// `SearchParameters`-per-call convention).
+/// paper's implementation plugs into, with a typed request/response pair
+/// instead of faiss' `search`/`range_search` method family).
 ///
 /// `Send + Sync` is part of the contract: a sealed index must be shareable
 /// across threads behind `Arc<dyn Index>`.
@@ -112,11 +137,29 @@ pub trait Index: Send + Sync {
     fn seal(&mut self) -> Result<()> {
         Ok(())
     }
-    /// Search a batch of queries (`nq × dim`) for the `k` nearest,
-    /// optionally overriding runtime parameters for this call only.
+    /// THE query entry point: answer a typed [`QueryRequest`] (top-k or
+    /// range, optionally filtered, with per-request parameter overrides).
     /// Read-only: safe to call concurrently on a sealed index.
+    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse>;
+    /// [`Index::query`] with precomputed scan LUTs (`nq × lut_len` f32)
+    /// from a signature-equal index — the batch-level LUT-reuse entry the
+    /// coordinator fans out to shards. The default ignores the LUTs and
+    /// recomputes (always correct, never faster).
+    fn query_with_luts(&self, req: &QueryRequest<'_>, _luts: &[f32]) -> Result<QueryResponse> {
+        self.query(req)
+    }
+    /// Compatibility shim over [`Index::query`]: top-k, unfiltered,
+    /// flattened into a fixed-shape padded [`SearchResult`].
     fn search(&self, queries: &[f32], k: usize, params: Option<&SearchParams>)
-        -> Result<SearchResult>;
+        -> Result<SearchResult> {
+        let req = QueryRequest {
+            queries,
+            kind: QueryKind::TopK { k },
+            filter: None,
+            params: params.cloned(),
+        };
+        Ok(self.query(&req)?.into_search_result(k))
+    }
     /// [`Index::search`] over a bundled [`SearchRequest`].
     fn search_req(&self, req: &SearchRequest<'_>) -> Result<SearchResult> {
         self.search(req.queries, req.k, req.params.as_ref())
@@ -131,23 +174,28 @@ pub trait Index: Send + Sync {
         None
     }
     /// Per-query scan LUTs (`nq × lut_len` f32) for
-    /// [`Index::search_with_luts`] on any index with the same
-    /// [`Index::lut_signature`]. `None` if this index has no shared-LUT
-    /// fast path.
+    /// [`Index::query_with_luts`]/[`Index::search_with_luts`] on any index
+    /// with the same [`Index::lut_signature`]. `None` if this index has no
+    /// shared-LUT fast path.
     fn compute_scan_luts(&self, _queries: &[f32]) -> Option<Vec<f32>> {
         None
     }
     /// [`Index::search`] with precomputed LUTs from a signature-equal
-    /// index. The default ignores the LUTs and recomputes (always correct,
-    /// never faster).
+    /// index. Routed through [`Index::query_with_luts`].
     fn search_with_luts(
         &self,
         queries: &[f32],
-        _luts: &[f32],
+        luts: &[f32],
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<SearchResult> {
-        self.search(queries, k, params)
+        let req = QueryRequest {
+            queries,
+            kind: QueryKind::TopK { k },
+            filter: None,
+            params: params.cloned(),
+        };
+        Ok(self.query_with_luts(&req, luts)?.into_search_result(k))
     }
     /// Compatibility shim: set a *default* runtime parameter from strings
     /// (e.g. `"nprobe" = "4"`). Parses through [`SearchParams::assign`];

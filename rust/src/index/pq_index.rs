@@ -7,10 +7,14 @@
 //! per-request [`SearchParams`] overrides.
 
 use super::params::{effective_fastscan, effective_ivf};
-use super::{Index, SearchParams, SearchResult};
+use super::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
+use super::{Index, SearchParams};
 use crate::ivf::{IvfParams, IvfPq4};
-use crate::pq::fastscan::{search_fastscan_with_luts, FastScanParams};
-use crate::pq::{search_adc, CodeWidth, PackedCodes, PqParams, ProductQuantizer};
+use crate::pq::adc::{range_adc, topk_adc};
+use crate::pq::fastscan::{
+    range_fastscan_with_luts, topk_fastscan_with_luts, FastScanParams, FilterMask,
+};
+use crate::pq::{CodeWidth, PackedCodes, PqParams, ProductQuantizer};
 use crate::{Error, Result};
 
 /// "Original PQ" (paper Fig. 2 baseline): flat codes + in-memory f32 LUT
@@ -59,29 +63,58 @@ impl Index for IndexPq {
         Ok(())
     }
 
-    fn search(
-        &self,
-        queries: &[f32],
-        k: usize,
-        _params: Option<&SearchParams>,
-    ) -> Result<SearchResult> {
+    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        req.kind.validate()?;
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
-        if queries.len() % self.dim != 0 {
-            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        if req.queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch {
+                expected: self.dim,
+                got: req.queries.len() % self.dim,
+            });
         }
-        let nq = queries.len() / self.dim;
-        if k == 0 || nq == 0 || self.ntotal == 0 {
-            return Ok(SearchResult::empty(nq, k));
+        let nq = req.queries.len() / self.dim;
+        if nq == 0 || self.ntotal == 0 || matches!(req.kind, QueryKind::TopK { k: 0 }) {
+            return Ok(QueryResponse::empty(nq));
         }
-        let mut distances = Vec::with_capacity(nq * k);
-        let mut labels = Vec::with_capacity(nq * k);
-        for q in queries.chunks(self.dim) {
+        // exhaustive exact-ADC scan: the filter is a plain skip, which is
+        // trivially bit-identical to post-filtering the unfiltered scan.
+        // Admission is query-independent (labels are identity positions),
+        // so the filter is evaluated ONCE per call, not once per (query,
+        // row) pair.
+        let keep_bits: Option<Vec<bool>> = req
+            .filter
+            .as_ref()
+            .map(|f| (0..self.ntotal as i64).map(|id| f.matches(id)).collect());
+        let keep_closure;
+        let keep: Option<&dyn Fn(i64) -> bool> = match &keep_bits {
+            Some(bits) => {
+                keep_closure = move |id: i64| bits[id as usize];
+                Some(&keep_closure)
+            }
+            None => None,
+        };
+        let selectivity = keep_bits
+            .as_ref()
+            .map(|b| b.iter().filter(|&&x| x).count() as f64 / self.ntotal as f64)
+            .unwrap_or(1.0);
+        let mut hits = Vec::with_capacity(nq);
+        let mut stats = Vec::with_capacity(nq);
+        for q in req.queries.chunks(self.dim) {
             let luts = pq.compute_luts(q);
-            let (d, l) = search_adc(pq, &luts, &self.codes, None, k);
-            distances.extend(d);
-            labels.extend(l);
+            let (row, _kept) = match req.kind {
+                QueryKind::TopK { k } => topk_adc(pq, &luts, &self.codes, None, k, keep),
+                QueryKind::Range { radius } => {
+                    range_adc(pq, &luts, &self.codes, None, radius, keep)
+                }
+            };
+            stats.push(QueryStats {
+                codes_scanned: self.ntotal,
+                lists_probed: 1,
+                filter_selectivity: selectivity,
+            });
+            hits.push(row.into_iter().map(|(distance, label)| Hit { distance, label }).collect());
         }
-        Ok(SearchResult { k, distances, labels })
+        Ok(QueryResponse { hits, stats })
     }
 
     fn describe(&self) -> String {
@@ -220,18 +253,19 @@ impl IndexPq4FastScan {
         self.packed.is_some() || self.staging.is_empty()
     }
 
-    fn search_luts(
-        &self,
-        queries: &[f32],
-        k: usize,
-        params: Option<&SearchParams>,
-        luts: Option<&[f32]>,
-    ) -> Result<SearchResult> {
+    /// The query core shared by [`Index::query`] and the LUT-reuse entry:
+    /// compiles the filter into a position-space [`FilterMask`] once per
+    /// call, then runs the masked top-k or range kernel per query.
+    fn query_luts(&self, req: &QueryRequest<'_>, luts: Option<&[f32]>) -> Result<QueryResponse> {
+        req.kind.validate()?;
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
-        if queries.len() % self.dim != 0 {
-            return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
+        if req.queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch {
+                expected: self.dim,
+                got: req.queries.len() % self.dim,
+            });
         }
-        let nq = queries.len() / self.dim;
+        let nq = req.queries.len() / self.dim;
         let lut_len = pq.m * pq.ksub;
         if let Some(ls) = luts {
             if ls.len() != nq * lut_len {
@@ -241,17 +275,32 @@ impl IndexPq4FastScan {
                 )));
             }
         }
-        if k == 0 || nq == 0 || self.ntotal == 0 {
-            return Ok(SearchResult::empty(nq, k));
+        if nq == 0 || self.ntotal == 0 || matches!(req.kind, QueryKind::TopK { k: 0 }) {
+            return Ok(QueryResponse::empty(nq));
         }
         let packed = match &self.packed {
             Some(p) => p,
             None => return Err(Error::NotSealed),
         };
-        let fs = effective_fastscan(&self.fastscan, params);
-        let mut distances = Vec::with_capacity(nq * k);
-        let mut labels = Vec::with_capacity(nq * k);
-        for (qi, q) in queries.chunks(self.dim).enumerate() {
+        let fs = effective_fastscan(&self.fastscan, req.params.as_ref());
+        // flat fastscan uses identity labels: position == external id, so
+        // the filter compiles straight into position space, once per call
+        let mask: Option<FilterMask> =
+            req.filter.as_ref().map(|f| f.build_mask(None, self.ntotal));
+        let selectivity = mask.as_ref().map(|m| m.selectivity()).unwrap_or(1.0);
+        let all_filtered = mask.as_ref().is_some_and(|m| m.pass_count() == 0);
+        let mut hits = Vec::with_capacity(nq);
+        let mut stats = Vec::with_capacity(nq);
+        for (qi, q) in req.queries.chunks(self.dim).enumerate() {
+            if all_filtered {
+                hits.push(Vec::new());
+                stats.push(QueryStats {
+                    codes_scanned: 0,
+                    lists_probed: 0,
+                    filter_selectivity: 0.0,
+                });
+                continue;
+            }
             let owned;
             let luts_f32 = match luts {
                 Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
@@ -260,11 +309,22 @@ impl IndexPq4FastScan {
                     &owned[..]
                 }
             };
-            let (d, l) = search_fastscan_with_luts(pq, packed, luts_f32, k, &fs, None);
-            distances.extend(d);
-            labels.extend(l);
+            let row = match req.kind {
+                QueryKind::TopK { k } => {
+                    topk_fastscan_with_luts(pq, packed, luts_f32, k, &fs, None, mask.as_ref())
+                }
+                QueryKind::Range { radius } => {
+                    range_fastscan_with_luts(pq, packed, luts_f32, radius, &fs, None, mask.as_ref())
+                }
+            };
+            stats.push(QueryStats {
+                codes_scanned: self.ntotal,
+                lists_probed: 1,
+                filter_selectivity: selectivity,
+            });
+            hits.push(row.into_iter().map(|(distance, label)| Hit { distance, label }).collect());
         }
-        Ok(SearchResult { k, distances, labels })
+        Ok(QueryResponse { hits, stats })
     }
 }
 
@@ -300,13 +360,12 @@ impl Index for IndexPq4FastScan {
         IndexPq4FastScan::seal(self)
     }
 
-    fn search(
-        &self,
-        queries: &[f32],
-        k: usize,
-        params: Option<&SearchParams>,
-    ) -> Result<SearchResult> {
-        self.search_luts(queries, k, params, None)
+    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        self.query_luts(req, None)
+    }
+
+    fn query_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
+        self.query_luts(req, Some(luts))
     }
 
     fn lut_signature(&self) -> Option<u64> {
@@ -319,16 +378,6 @@ impl Index for IndexPq4FastScan {
             return None;
         }
         Some(pq.compute_luts_batch(queries))
-    }
-
-    fn search_with_luts(
-        &self,
-        queries: &[f32],
-        luts: &[f32],
-        k: usize,
-        params: Option<&SearchParams>,
-    ) -> Result<SearchResult> {
-        self.search_luts(queries, k, params, Some(luts))
     }
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
@@ -381,6 +430,12 @@ impl IndexIvfPq4 {
         Self { inner: IvfPq4::new_width(dim, params, m, width) }
     }
 
+    /// Wrap an already-built [`IvfPq4`] (e.g. one populated with
+    /// `add_with_ids` and tuned defaults) as a trait-object-ready index.
+    pub fn from_inner(inner: IvfPq4) -> Self {
+        Self { inner }
+    }
+
     pub fn inner(&self) -> &IvfPq4 {
         &self.inner
     }
@@ -415,18 +470,30 @@ impl Index for IndexIvfPq4 {
         self.inner.seal()
     }
 
-    fn search(
-        &self,
-        queries: &[f32],
-        k: usize,
-        params: Option<&SearchParams>,
-    ) -> Result<SearchResult> {
-        // search_with handles all degenerate cases (untrained, dim
+    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        // query_with handles all degenerate cases (untrained, dim
         // mismatch, k == 0, empty batch, empty index) with the same
         // semantics as the other indexes
-        let (nprobe, ef_search, fs) = effective_ivf(params, self.inner.nprobe, &self.inner.fastscan);
-        let (distances, labels) = self.inner.search_with(queries, k, nprobe, ef_search, &fs)?;
-        Ok(SearchResult { k, distances, labels })
+        let (nprobe, ef_search, fs) =
+            effective_ivf(req.params.as_ref(), self.inner.nprobe, &self.inner.fastscan);
+        let (hits, stats) =
+            self.inner.query_with(req.queries, &req.kind, req.filter.as_ref(), nprobe, ef_search, &fs)?;
+        Ok(QueryResponse { hits, stats })
+    }
+
+    fn query_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
+        let (nprobe, ef_search, fs) =
+            effective_ivf(req.params.as_ref(), self.inner.nprobe, &self.inner.fastscan);
+        let (hits, stats) = self.inner.query_with_luts(
+            req.queries,
+            luts,
+            &req.kind,
+            req.filter.as_ref(),
+            nprobe,
+            ef_search,
+            &fs,
+        )?;
+        Ok(QueryResponse { hits, stats })
     }
 
     fn lut_signature(&self) -> Option<u64> {
@@ -435,19 +502,6 @@ impl Index for IndexIvfPq4 {
 
     fn compute_scan_luts(&self, queries: &[f32]) -> Option<Vec<f32>> {
         self.inner.compute_scan_luts(queries).ok()
-    }
-
-    fn search_with_luts(
-        &self,
-        queries: &[f32],
-        luts: &[f32],
-        k: usize,
-        params: Option<&SearchParams>,
-    ) -> Result<SearchResult> {
-        let (nprobe, ef_search, fs) = effective_ivf(params, self.inner.nprobe, &self.inner.fastscan);
-        let (distances, labels) =
-            self.inner.search_with_luts(queries, luts, k, nprobe, ef_search, &fs)?;
-        Ok(SearchResult { k, distances, labels })
     }
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
@@ -679,6 +733,102 @@ mod tests {
             recalls[2],
             recalls[0]
         );
+    }
+
+    /// Filtered query ≡ unfiltered-query-then-post-filter, bit-identical,
+    /// for the flat fastscan index at every width (reservoir sized so
+    /// nothing is pruned; rerank makes distances exact).
+    #[test]
+    fn filtered_query_matches_postfilter_all_widths() {
+        use crate::index::{Filter, QueryRequest};
+        let ds = SyntheticDataset::gaussian(500, 6, 32, 110);
+        for width in CodeWidth::ALL {
+            let mut idx = IndexPq4FastScan::new_width(ds.dim, 8, width);
+            idx.train(&ds.train).unwrap();
+            idx.add(&ds.base).unwrap();
+            idx.seal().unwrap();
+            let params = SearchParams::new().with_reservoir_factor(512);
+            let filter = Filter::id_range(100, 300);
+            let filtered = idx
+                .query(
+                    &QueryRequest::top_k(&ds.queries, 10)
+                        .with_filter(filter.clone())
+                        .with_params(params.clone()),
+                )
+                .unwrap();
+            // reference: unfiltered with k = ntotal, post-filter, truncate
+            let full = idx
+                .query(&QueryRequest::top_k(&ds.queries, 500).with_params(params.clone()))
+                .unwrap();
+            for qi in 0..ds.queries.len() / ds.dim {
+                let want: Vec<_> = full.hits[qi]
+                    .iter()
+                    .filter(|h| filter.matches(h.label))
+                    .take(10)
+                    .copied()
+                    .collect();
+                assert_eq!(filtered.hits[qi], want, "{width} q{qi}");
+                assert!(
+                    (filtered.stats[qi].filter_selectivity - 0.4).abs() < 1e-9,
+                    "{width}"
+                );
+            }
+        }
+    }
+
+    /// Degenerate filters: empty → well-formed empty responses; full →
+    /// identical to unfiltered.
+    #[test]
+    fn empty_and_full_filter_edge_cases() {
+        use crate::index::{Filter, QueryRequest};
+        let ds = SyntheticDataset::gaussian(300, 4, 16, 111);
+        let mut idx = IndexPq4FastScan::new(ds.dim, 4);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        let empty = idx
+            .query(&QueryRequest::top_k(&ds.queries, 5).with_filter(Filter::id_set(&[])))
+            .unwrap();
+        assert_eq!(empty.nq(), 4);
+        assert!(empty.hits.iter().all(|row| row.is_empty()));
+        assert!(empty.stats.iter().all(|s| s.filter_selectivity == 0.0));
+        // the search shim shape stays well-formed too: padded
+        let r = empty.into_search_result(5);
+        assert!(r.labels.iter().all(|&l| l == -1));
+
+        let full = idx
+            .query(&QueryRequest::top_k(&ds.queries, 5).with_filter(Filter::id_range(0, 300)))
+            .unwrap();
+        let bare = idx.query(&QueryRequest::top_k(&ds.queries, 5)).unwrap();
+        assert_eq!(full.hits, bare.hits);
+        assert_eq!(full.stats[0].filter_selectivity, 1.0);
+    }
+
+    /// The naive-PQ baseline answers the same typed requests (exhaustive
+    /// exact ADC), so fastscan results can be differentials against it.
+    #[test]
+    fn naive_pq_filtered_and_range_queries() {
+        use crate::index::{Filter, QueryRequest};
+        let ds = SyntheticDataset::gaussian(400, 4, 16, 112);
+        let mut idx = IndexPq::new(ds.dim, PqParams::new_4bit(4));
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        let filtered = idx
+            .query(
+                &QueryRequest::top_k(&ds.queries, 8).with_filter(Filter::predicate(|id| id % 2 == 0)),
+            )
+            .unwrap();
+        assert!(filtered.hits.iter().flatten().all(|h| h.label % 2 == 0));
+        assert!((filtered.stats[0].filter_selectivity - 0.5).abs() < 1e-9);
+        // range with a radius below the best distance → empty but well-formed
+        let none = idx.query(&QueryRequest::range(&ds.queries, -1.0)).unwrap();
+        assert!(none.hits.iter().all(|row| row.is_empty()));
+        // generous radius finds hits, sorted ascending
+        let some = idx.query(&QueryRequest::range(&ds.queries, 1e6)).unwrap();
+        assert!(some.hits.iter().all(|row| row.len() == 400));
+        assert!(some.hits[0].windows(2).all(|w| w[0].distance <= w[1].distance));
+        // NaN radius rejected
+        assert!(idx.query(&QueryRequest::range(&ds.queries, f32::NAN)).is_err());
     }
 
     #[test]

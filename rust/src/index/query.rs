@@ -1,0 +1,491 @@
+//! The typed query model: one request/response pair for every query mode.
+//!
+//! [`QueryRequest`] bundles a query batch with a [`QueryKind`] (top-k or
+//! radius), an optional [`Filter`] (id bitset, id range, or caller
+//! predicate) and the per-request [`super::SearchParams`] overrides;
+//! [`QueryResponse`] returns per-query variable-length [`Hit`] lists plus
+//! typed per-query [`QueryStats`]. [`super::Index::query`] is the single
+//! entry point — `Index::search` survives as a thin shim that builds a
+//! `TopK` request.
+//!
+//! Filters are evaluated *inside* the fastscan kernels: the index layers
+//! compile a `Filter` into a block-aligned
+//! [`crate::pq::fastscan::FilterMask`] (for IVF, one slice per probed
+//! list), so a filtered position costs one bit test in the pruned-compare
+//! admission mask instead of a post-hoc rescan of the results.
+
+use super::{SearchParams, SearchResult};
+use crate::pq::fastscan::FilterMask;
+use crate::{Error, Result};
+use std::collections::HashSet;
+use std::fmt;
+use std::sync::Arc;
+
+/// What question the query asks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QueryKind {
+    /// The `k` nearest neighbors (per query), distances ascending.
+    TopK { k: usize },
+    /// Every hit with distance `<= radius` (L2-squared, the same domain as
+    /// returned distances), ascending. On quantized indexes the boundary is
+    /// exact when re-ranking is on (the default) and quantization-accurate
+    /// otherwise; on IVF indexes coverage is limited to the probed lists.
+    Range { radius: f32 },
+}
+
+impl QueryKind {
+    /// Reject values no sane request carries (a NaN/infinite radius would
+    /// poison threshold math and batch grouping).
+    pub fn validate(&self) -> Result<()> {
+        if let QueryKind::Range { radius } = self {
+            if !radius.is_finite() {
+                return Err(Error::InvalidParameter(format!(
+                    "range radius must be finite, got {radius}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over a byte stream — the same cheap stable hash the quantizer
+/// signature uses; good enough for grouping keys and metrics labels.
+fn fnv1a(seed: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = seed ^ 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Spans wider than this fall back to a hash set: a bitset over a sparse
+/// id space (say `{0, i64::MAX}`) must not allocate the span.
+const DENSE_SPAN_LIMIT: i64 = 1 << 22;
+
+#[derive(Clone, Debug, PartialEq)]
+enum SetRepr {
+    /// Bitset over `[offset, offset + 64·words.len())`.
+    Dense { offset: i64, words: Vec<u64> },
+    /// Fallback for id sets whose span exceeds [`DENSE_SPAN_LIMIT`].
+    Sparse(HashSet<i64>),
+}
+
+/// An explicit set of allowed external ids (the `IdSet` filter payload).
+///
+/// Stored as a bitset when the id span allows it (one bit test per
+/// membership check — the representation the kernels' mask build wants),
+/// with a hash-set fallback for pathologically sparse id spaces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IdSet {
+    repr: SetRepr,
+    /// Sorted, deduplicated member ids (kept for wire serialization).
+    ids: Vec<i64>,
+    signature: u64,
+}
+
+impl IdSet {
+    pub fn from_ids(ids: &[i64]) -> Self {
+        let mut sorted = ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let signature =
+            fnv1a(0x1d5e7, sorted.iter().flat_map(|id| id.to_le_bytes()));
+        let repr = match (sorted.first().copied(), sorted.last().copied()) {
+            (Some(lo), Some(hi))
+                if hi.checked_sub(lo).is_some_and(|s| s < DENSE_SPAN_LIMIT) =>
+            {
+                let span = (hi - lo) as usize + 1;
+                let mut words = vec![0u64; span.div_ceil(64)];
+                for &id in &sorted {
+                    let b = (id - lo) as usize;
+                    words[b / 64] |= 1u64 << (b % 64);
+                }
+                SetRepr::Dense { offset: lo, words }
+            }
+            (Some(_), Some(_)) => SetRepr::Sparse(sorted.iter().copied().collect()),
+            _ => SetRepr::Dense { offset: 0, words: Vec::new() },
+        };
+        Self { repr, ids: sorted, signature }
+    }
+
+    #[inline]
+    pub fn contains(&self, id: i64) -> bool {
+        match &self.repr {
+            SetRepr::Dense { offset, words } => match id.checked_sub(*offset) {
+                Some(b) if (b as usize) < words.len() * 64 => {
+                    let b = b as usize;
+                    words[b / 64] >> (b % 64) & 1 == 1
+                }
+                _ => false,
+            },
+            SetRepr::Sparse(set) => set.contains(&id),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Sorted member ids (wire serialization).
+    pub fn ids(&self) -> &[i64] {
+        &self.ids
+    }
+}
+
+/// A predicate over external labels, pushed down into the scan kernels.
+///
+/// `IdSet` and `IdRange` are data (comparable, serializable over the
+/// line-JSON protocol); `Predicate` is an arbitrary in-process closure —
+/// it batches only with clones of the same `Arc` and cannot cross the
+/// wire.
+#[derive(Clone)]
+pub enum Filter {
+    /// Only ids in the set pass.
+    IdSet(Arc<IdSet>),
+    /// Only ids in the half-open range `[start, end)` pass.
+    IdRange { start: i64, end: i64 },
+    /// Only ids the closure approves pass.
+    Predicate(Arc<dyn Fn(i64) -> bool + Send + Sync>),
+}
+
+impl Filter {
+    pub fn id_set(ids: &[i64]) -> Self {
+        Filter::IdSet(Arc::new(IdSet::from_ids(ids)))
+    }
+
+    /// Half-open `[start, end)`; an inverted range is normalized to empty.
+    pub fn id_range(start: i64, end: i64) -> Self {
+        Filter::IdRange { start, end: end.max(start) }
+    }
+
+    pub fn predicate(f: impl Fn(i64) -> bool + Send + Sync + 'static) -> Self {
+        Filter::Predicate(Arc::new(f))
+    }
+
+    #[inline]
+    pub fn matches(&self, id: i64) -> bool {
+        match self {
+            Filter::IdSet(set) => set.contains(id),
+            Filter::IdRange { start, end } => (*start..*end).contains(&id),
+            Filter::Predicate(f) => f(id),
+        }
+    }
+
+    /// Stable fingerprint for metrics and logging. Batch grouping compares
+    /// filters with `==` (exact), not by signature — a hash collision must
+    /// never merge two different filters into one backend call.
+    pub fn signature(&self) -> u64 {
+        match self {
+            Filter::IdSet(set) => fnv1a(1, set.signature.to_le_bytes()),
+            Filter::IdRange { start, end } => fnv1a(
+                2,
+                start.to_le_bytes().into_iter().chain(end.to_le_bytes()),
+            ),
+            Filter::Predicate(f) => {
+                fnv1a(3, (Arc::as_ptr(f) as *const () as usize).to_le_bytes())
+            }
+        }
+    }
+
+    /// Estimated fraction of `ntotal` ids that pass — `None` when the
+    /// filter is opaque (a predicate). Drives IVF's selectivity-aware
+    /// nprobe escalation; it is a *hint* (an `IdRange` may cover ids that
+    /// were never added), never a correctness input.
+    pub fn selectivity_hint(&self, ntotal: usize) -> Option<f64> {
+        if ntotal == 0 {
+            return Some(1.0);
+        }
+        let count = match self {
+            Filter::IdSet(set) => set.len() as f64,
+            // saturating: a wire client may send a range spanning the whole
+            // i64 domain, whose width exceeds i64
+            Filter::IdRange { start, end } => end.saturating_sub(*start) as f64,
+            Filter::Predicate(_) => return None,
+        };
+        Some((count / ntotal as f64).min(1.0))
+    }
+
+    /// Whether the filter passes no id at all, knowable without scanning.
+    pub fn is_provably_empty(&self) -> bool {
+        match self {
+            Filter::IdSet(set) => set.is_empty(),
+            Filter::IdRange { start, end } => start >= end,
+            Filter::Predicate(_) => false,
+        }
+    }
+
+    /// Compile into a block-aligned kernel mask over `n` scan positions:
+    /// bit `v` of block word `b` is set iff the external label of position
+    /// `32·b + v` passes (`labels = None` means label = position, the flat
+    /// index convention).
+    pub fn build_mask(&self, labels: Option<&[i64]>, n: usize) -> FilterMask {
+        match labels {
+            Some(ls) => FilterMask::from_fn(n, |pos| self.matches(ls[pos])),
+            None => FilterMask::from_fn(n, |pos| self.matches(pos as i64)),
+        }
+    }
+}
+
+impl fmt::Debug for Filter {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Filter::IdSet(set) => write!(f, "IdSet(len={})", set.len()),
+            Filter::IdRange { start, end } => write!(f, "IdRange({start}..{end})"),
+            Filter::Predicate(_) => write!(f, "Predicate(..)"),
+        }
+    }
+}
+
+impl PartialEq for Filter {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Filter::IdSet(a), Filter::IdSet(b)) => Arc::ptr_eq(a, b) || a == b,
+            (
+                Filter::IdRange { start: a0, end: a1 },
+                Filter::IdRange { start: b0, end: b1 },
+            ) => a0 == b0 && a1 == b1,
+            (Filter::Predicate(a), Filter::Predicate(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+/// One query call as a value: a batch of vectors, what to ask ([`QueryKind`]),
+/// who may answer ([`Filter`]), and how to search ([`SearchParams`]).
+#[derive(Clone, Debug)]
+pub struct QueryRequest<'a> {
+    /// Row-major `nq × dim` query batch.
+    pub queries: &'a [f32],
+    pub kind: QueryKind,
+    pub filter: Option<Filter>,
+    pub params: Option<SearchParams>,
+}
+
+impl<'a> QueryRequest<'a> {
+    pub fn top_k(queries: &'a [f32], k: usize) -> Self {
+        Self { queries, kind: QueryKind::TopK { k }, filter: None, params: None }
+    }
+
+    pub fn range(queries: &'a [f32], radius: f32) -> Self {
+        Self { queries, kind: QueryKind::Range { radius }, filter: None, params: None }
+    }
+
+    pub fn with_filter(mut self, filter: Filter) -> Self {
+        self.filter = Some(filter);
+        self
+    }
+
+    pub fn with_params(mut self, params: SearchParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+}
+
+/// One search hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub distance: f32,
+    pub label: i64,
+}
+
+/// Per-query execution statistics, returned with every [`QueryResponse`]
+/// and aggregated into the coordinator's metrics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueryStats {
+    /// Code positions the scan considered (probed-list sizes for IVF, the
+    /// whole packed set for flat indexes).
+    pub codes_scanned: usize,
+    /// Inverted lists probed (1 for flat indexes, 0 when nothing was
+    /// scanned).
+    pub lists_probed: usize,
+    /// Fraction of considered positions the filter admitted (1.0 when
+    /// unfiltered).
+    pub filter_selectivity: f64,
+}
+
+impl Default for QueryStats {
+    fn default() -> Self {
+        Self { codes_scanned: 0, lists_probed: 0, filter_selectivity: 1.0 }
+    }
+}
+
+/// Typed answer to a [`QueryRequest`]: per-query variable-length hits
+/// (ascending by `(distance, label)`; at most `k` for `TopK`, unbounded for
+/// `Range`) plus per-query stats.
+#[derive(Clone, Debug, Default)]
+pub struct QueryResponse {
+    pub hits: Vec<Vec<Hit>>,
+    pub stats: Vec<QueryStats>,
+}
+
+impl QueryResponse {
+    /// A well-formed response with `nq` empty hit lists.
+    pub fn empty(nq: usize) -> Self {
+        Self { hits: vec![Vec::new(); nq], stats: vec![QueryStats::default(); nq] }
+    }
+
+    pub fn nq(&self) -> usize {
+        self.hits.len()
+    }
+
+    /// Flatten into the fixed-shape [`SearchResult`] the `search` shim
+    /// returns: each row truncated/padded to exactly `k` entries with
+    /// `(INFINITY, -1)`.
+    pub fn into_search_result(self, k: usize) -> SearchResult {
+        let nq = self.hits.len();
+        let mut distances = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for row in self.hits {
+            let take = row.len().min(k);
+            for h in &row[..take] {
+                distances.push(h.distance);
+                labels.push(h.label);
+            }
+            for _ in take..k {
+                distances.push(f32::INFINITY);
+                labels.push(-1);
+            }
+        }
+        SearchResult { k, distances, labels }
+    }
+}
+
+/// Pad/truncate one hit row to exactly `k` `(distance, label)` entries —
+/// the row-level counterpart of [`QueryResponse::into_search_result`],
+/// used by serving layers that answer one query at a time.
+pub fn pad_hits(row: &[Hit], k: usize) -> (Vec<f32>, Vec<i64>) {
+    let take = row.len().min(k);
+    let mut d: Vec<f32> = row[..take].iter().map(|h| h.distance).collect();
+    let mut l: Vec<i64> = row[..take].iter().map(|h| h.label).collect();
+    while d.len() < k {
+        d.push(f32::INFINITY);
+        l.push(-1);
+    }
+    (d, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_set_dense_and_sparse() {
+        let dense = IdSet::from_ids(&[3, 1, 7, 3, 100]);
+        assert_eq!(dense.len(), 4);
+        assert!(dense.contains(1) && dense.contains(100));
+        assert!(!dense.contains(2) && !dense.contains(-5) && !dense.contains(101));
+        assert!(matches!(dense.repr, SetRepr::Dense { .. }));
+        // a span wider than the dense limit must not allocate the span
+        let sparse = IdSet::from_ids(&[0, i64::MAX - 1]);
+        assert!(matches!(sparse.repr, SetRepr::Sparse(_)));
+        assert!(sparse.contains(0) && sparse.contains(i64::MAX - 1));
+        assert!(!sparse.contains(1));
+        let empty = IdSet::from_ids(&[]);
+        assert!(empty.is_empty());
+        assert!(!empty.contains(0));
+    }
+
+    #[test]
+    fn filter_matches_and_emptiness() {
+        let set = Filter::id_set(&[2, 4, 6]);
+        assert!(set.matches(4) && !set.matches(5));
+        assert!(!set.is_provably_empty());
+        assert!(Filter::id_set(&[]).is_provably_empty());
+
+        let range = Filter::id_range(10, 20);
+        assert!(range.matches(10) && range.matches(19));
+        assert!(!range.matches(20) && !range.matches(9));
+        assert!(Filter::id_range(5, 5).is_provably_empty());
+        // inverted ranges normalize to empty instead of underflowing
+        assert!(Filter::id_range(9, 3).is_provably_empty());
+
+        let pred = Filter::predicate(|id| id % 2 == 0);
+        assert!(pred.matches(4) && !pred.matches(5));
+        assert!(!pred.is_provably_empty());
+    }
+
+    #[test]
+    fn filter_equality_and_signatures() {
+        let a = Filter::id_range(0, 10);
+        let b = Filter::id_range(0, 10);
+        let c = Filter::id_range(0, 11);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.signature(), b.signature());
+        assert_ne!(a.signature(), c.signature());
+
+        let s1 = Filter::id_set(&[1, 2, 3]);
+        let s2 = Filter::id_set(&[3, 2, 1, 1]); // order/dup insensitive
+        assert_eq!(s1, s2);
+        assert_eq!(s1.signature(), s2.signature());
+        assert_ne!(s1, a);
+
+        let p = Filter::predicate(|_| true);
+        let p2 = p.clone();
+        assert_eq!(p, p2); // same Arc
+        assert_ne!(p, Filter::predicate(|_| true)); // different closure
+    }
+
+    #[test]
+    fn selectivity_hints() {
+        assert_eq!(Filter::id_range(0, 50).selectivity_hint(100), Some(0.5));
+        assert_eq!(Filter::id_range(0, 500).selectivity_hint(100), Some(1.0));
+        assert_eq!(Filter::id_set(&[1, 2]).selectivity_hint(100), Some(0.02));
+        assert_eq!(Filter::predicate(|_| true).selectivity_hint(100), None);
+    }
+
+    #[test]
+    fn mask_build_identity_and_mapped_labels() {
+        let f = Filter::id_range(2, 5);
+        let m = f.build_mask(None, 8);
+        assert_eq!(m.pass_count(), 3);
+        assert!(!m.passes(1) && m.passes(2) && m.passes(4) && !m.passes(5));
+        // mapped labels: positions pass per their external id
+        let labels = [100i64, 3, 4, 100];
+        let m = f.build_mask(Some(&labels), 4);
+        assert_eq!(m.pass_count(), 2);
+        assert!(!m.passes(0) && m.passes(1) && m.passes(2) && !m.passes(3));
+    }
+
+    #[test]
+    fn kind_validation() {
+        assert!(QueryKind::TopK { k: 0 }.validate().is_ok());
+        assert!(QueryKind::Range { radius: 1.5 }.validate().is_ok());
+        assert!(QueryKind::Range { radius: f32::NAN }.validate().is_err());
+        assert!(QueryKind::Range { radius: f32::INFINITY }.validate().is_err());
+    }
+
+    #[test]
+    fn response_padding_roundtrip() {
+        let resp = QueryResponse {
+            hits: vec![
+                vec![Hit { distance: 1.0, label: 7 }],
+                Vec::new(),
+                vec![
+                    Hit { distance: 0.5, label: 1 },
+                    Hit { distance: 0.6, label: 2 },
+                    Hit { distance: 0.7, label: 3 },
+                ],
+            ],
+            stats: vec![QueryStats::default(); 3],
+        };
+        assert_eq!(resp.nq(), 3);
+        let r = resp.into_search_result(2);
+        assert_eq!(r.k, 2);
+        assert_eq!(r.labels, vec![7, -1, -1, -1, 1, 2]);
+        assert_eq!(r.distances[0], 1.0);
+        assert!(r.distances[1].is_infinite());
+        // row-level padding helper agrees
+        let (d, l) = pad_hits(&[Hit { distance: 2.0, label: 9 }], 3);
+        assert_eq!(l, vec![9, -1, -1]);
+        assert!(d[2].is_infinite());
+        let e = QueryResponse::empty(2);
+        assert_eq!(e.nq(), 2);
+        assert_eq!(e.stats[0].filter_selectivity, 1.0);
+    }
+}

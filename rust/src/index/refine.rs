@@ -7,7 +7,8 @@
 //! re-rank the shortlist with exact distances. This wrapper makes that a
 //! first-class index type.
 
-use super::{Index, SearchParams, SearchResult};
+use super::query::{Hit, QueryKind, QueryRequest, QueryResponse};
+use super::{Index, SearchParams};
 use crate::util::topk::TopK;
 use crate::{Error, Result};
 
@@ -54,42 +55,72 @@ impl Index for IndexRefineFlat {
         self.base.seal()
     }
 
-    fn search(
-        &self,
-        queries: &[f32],
-        k: usize,
-        params: Option<&SearchParams>,
-    ) -> Result<SearchResult> {
+    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        req.kind.validate()?;
         let dim = self.base.dim();
-        if queries.len() % dim != 0 {
-            return Err(Error::DimMismatch { expected: dim, got: queries.len() % dim });
+        if req.queries.len() % dim != 0 {
+            return Err(Error::DimMismatch { expected: dim, got: req.queries.len() % dim });
         }
-        let nq_in = queries.len() / dim;
-        if k == 0 || nq_in == 0 || self.ntotal() == 0 {
-            return Ok(SearchResult::empty(nq_in, k));
+        let nq_in = req.queries.len() / dim;
+        if nq_in == 0 || self.ntotal() == 0 || matches!(req.kind, QueryKind::TopK { k: 0 }) {
+            return Ok(QueryResponse::empty(nq_in));
         }
-        let refine_factor =
-            params.and_then(|p| p.refine_factor).unwrap_or(self.refine_factor);
-        let shortlist_k = (k * refine_factor).max(k);
-        let coarse = self.base.search(queries, shortlist_k, params)?;
-        let nq = coarse.nq();
-        let mut distances = Vec::with_capacity(nq * k);
-        let mut labels = Vec::with_capacity(nq * k);
-        for qi in 0..nq {
-            let q = &queries[qi * dim..(qi + 1) * dim];
-            let mut heap = TopK::new(k);
-            for &label in coarse.row(qi) {
-                if label < 0 {
-                    continue;
-                }
-                let v = &self.vectors[label as usize * dim..(label as usize + 1) * dim];
-                heap.push(crate::util::l2_sq(q, v), label);
+        // the base shortlists (filter pushed down into its kernels); the
+        // refinement pass re-ranks the shortlist with exact raw-vector L2
+        let base_kind = match req.kind {
+            QueryKind::TopK { k } => {
+                let refine_factor = req
+                    .params
+                    .as_ref()
+                    .and_then(|p| p.refine_factor)
+                    .unwrap_or(self.refine_factor);
+                QueryKind::TopK { k: (k * refine_factor).max(k) }
             }
-            let (d, l) = heap.into_sorted();
-            distances.extend(d);
-            labels.extend(l);
+            // the base's (possibly quantized) radius decides the shortlist;
+            // the exact pass below re-trims to the true boundary
+            QueryKind::Range { radius } => QueryKind::Range { radius },
+        };
+        let base_req = QueryRequest {
+            queries: req.queries,
+            kind: base_kind,
+            filter: req.filter.clone(),
+            params: req.params.clone(),
+        };
+        let coarse = self.base.query(&base_req)?;
+        let mut hits = Vec::with_capacity(coarse.nq());
+        for (qi, row) in coarse.hits.iter().enumerate() {
+            let q = &req.queries[qi * dim..(qi + 1) * dim];
+            let exact = |label: i64| {
+                let v = &self.vectors[label as usize * dim..(label as usize + 1) * dim];
+                crate::util::l2_sq(q, v)
+            };
+            let refined: Vec<Hit> = match req.kind {
+                QueryKind::TopK { k } => {
+                    let mut heap = TopK::new(k);
+                    for h in row {
+                        if h.label >= 0 {
+                            heap.push(exact(h.label), h.label);
+                        }
+                    }
+                    heap.into_hits()
+                        .into_iter()
+                        .map(|(distance, label)| Hit { distance, label })
+                        .collect()
+                }
+                QueryKind::Range { radius } => {
+                    let mut out: Vec<(f32, i64)> = row
+                        .iter()
+                        .filter(|h| h.label >= 0)
+                        .map(|h| (exact(h.label), h.label))
+                        .filter(|&(d, _)| d <= radius)
+                        .collect();
+                    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                    out.into_iter().map(|(distance, label)| Hit { distance, label }).collect()
+                }
+            };
+            hits.push(refined);
         }
-        Ok(SearchResult { k, distances, labels })
+        Ok(QueryResponse { hits, stats: coarse.stats })
     }
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {

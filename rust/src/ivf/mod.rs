@@ -13,12 +13,14 @@
 //! all probed cells.
 
 use crate::hnsw::{Hnsw, HnswParams};
+use crate::index::query::{Filter, Hit, QueryKind, QueryStats};
 use crate::kmeans::{KMeans, KMeansParams};
 use crate::pq::bitwidth::build_width_luts;
-use crate::pq::fastscan::{scan_into_reservoir, FastScanParams};
+use crate::pq::fastscan::{scan_filtered, FastScanParams, FilterMask, ScanSink};
 use crate::pq::{CodeWidth, PackedCodes, PqParams, ProductQuantizer};
 use crate::util::topk::{TopK, U16Reservoir};
 use crate::{Error, Result};
+use std::collections::HashMap;
 
 /// Strategy for the coarse (cell-assignment) search.
 pub enum CoarseQuantizer {
@@ -275,8 +277,8 @@ impl IvfPq4 {
 
     /// [`IvfPq4::search`] with explicit per-request parameters: probe
     /// width, optional HNSW candidate-list width, and kernel parameters.
-    /// This is the kernel-layer entry the typed `SearchParams` of the
-    /// index layer resolves into.
+    /// A flattened-and-padded wrapper over the [`IvfPq4::query_with`]
+    /// machinery (top-k, unfiltered).
     pub fn search_with(
         &self,
         queries: &[f32],
@@ -285,7 +287,16 @@ impl IvfPq4 {
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        self.search_impl(queries, None, k, nprobe, ef_search, fastscan)
+        let (rows, _stats) = self.query_impl(
+            queries,
+            None,
+            &QueryKind::TopK { k },
+            None,
+            nprobe,
+            ef_search,
+            fastscan,
+        )?;
+        Ok(Self::flatten_padded(rows, k, queries.len() / self.dim.max(1)))
     }
 
     /// [`IvfPq4::search_with`] with precomputed per-query f32 LUTs
@@ -301,7 +312,47 @@ impl IvfPq4 {
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        self.search_impl(queries, Some(luts), k, nprobe, ef_search, fastscan)
+        let (rows, _stats) = self.query_impl(
+            queries,
+            Some(luts),
+            &QueryKind::TopK { k },
+            None,
+            nprobe,
+            ef_search,
+            fastscan,
+        )?;
+        Ok(Self::flatten_padded(rows, k, queries.len() / self.dim.max(1)))
+    }
+
+    /// The typed query entry: top-k or range, optionally filtered, with
+    /// explicit runtime parameters. Returns per-query variable-length hits
+    /// plus per-query stats.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_with(
+        &self,
+        queries: &[f32],
+        kind: &QueryKind,
+        filter: Option<&Filter>,
+        nprobe: usize,
+        ef_search: Option<usize>,
+        fastscan: &FastScanParams,
+    ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>)> {
+        self.query_impl(queries, None, kind, filter, nprobe, ef_search, fastscan)
+    }
+
+    /// [`IvfPq4::query_with`] with precomputed per-query f32 LUTs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_with_luts(
+        &self,
+        queries: &[f32],
+        luts: &[f32],
+        kind: &QueryKind,
+        filter: Option<&Filter>,
+        nprobe: usize,
+        ef_search: Option<usize>,
+        fastscan: &FastScanParams,
+    ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>)> {
+        self.query_impl(queries, Some(luts), kind, filter, nprobe, ef_search, fastscan)
     }
 
     /// Per-query f32 scan LUTs (`nq × m_codes × sub_ksub`), shareable with
@@ -314,15 +365,49 @@ impl IvfPq4 {
         Ok(pq.compute_luts_batch(queries))
     }
 
-    fn search_impl(
+    fn flatten_padded(rows: Vec<Vec<Hit>>, k: usize, nq: usize) -> (Vec<f32>, Vec<i64>) {
+        if k == 0 || nq == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let mut dists = Vec::with_capacity(nq * k);
+        let mut labels = Vec::with_capacity(nq * k);
+        for row in rows {
+            let (d, l) = crate::index::query::pad_hits(&row, k);
+            dists.extend(d);
+            labels.extend(l);
+        }
+        (dists, labels)
+    }
+
+    /// Selectivity-aware probe escalation: a filter that admits a fraction
+    /// `sel` of the corpus thins every probed list by the same factor, so
+    /// the probe width scales by `1/sel` to keep the expected candidate
+    /// count — capped at 16× the requested width and at `nlist` (full
+    /// probe). Opaque filters (predicates) don't escalate: their
+    /// selectivity is unknowable without scanning.
+    fn escalated_nprobe(&self, nprobe: usize, filter: Option<&Filter>) -> usize {
+        let Some(hint) = filter.and_then(|f| f.selectivity_hint(self.ntotal)) else {
+            return nprobe;
+        };
+        if hint <= 0.0 || hint >= 1.0 {
+            return nprobe;
+        }
+        let scaled = (nprobe as f64 / hint).ceil() as usize;
+        scaled.min(nprobe.saturating_mul(16)).min(self.params.nlist).max(nprobe)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn query_impl(
         &self,
         queries: &[f32],
         luts: Option<&[f32]>,
-        k: usize,
+        kind: &QueryKind,
+        filter: Option<&Filter>,
         nprobe: usize,
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
-    ) -> Result<(Vec<f32>, Vec<i64>)> {
+    ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>)> {
+        kind.validate()?;
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if queries.len() % self.dim != 0 {
             return Err(Error::DimMismatch { expected: self.dim, got: queries.len() % self.dim });
@@ -337,17 +422,26 @@ impl IvfPq4 {
                 )));
             }
         }
-        if k == 0 || nq == 0 {
+        if nq == 0 {
             return Ok((Vec::new(), Vec::new()));
         }
-        if self.ntotal == 0 {
-            return Ok((vec![f32::INFINITY; nq * k], vec![-1; nq * k]));
+        if self.ntotal == 0 || matches!(kind, QueryKind::TopK { k: 0 }) {
+            return Ok((vec![Vec::new(); nq], vec![QueryStats::default(); nq]));
         }
         if !self.is_sealed() {
             return Err(Error::NotSealed);
         }
-        let mut dists = Vec::with_capacity(nq * k);
-        let mut labels = Vec::with_capacity(nq * k);
+        // a provably-empty filter answers without probing anything
+        if filter.is_some_and(|f| f.is_provably_empty()) {
+            let stats = QueryStats { codes_scanned: 0, lists_probed: 0, filter_selectivity: 0.0 };
+            return Ok((vec![Vec::new(); nq], vec![stats; nq]));
+        }
+        let nprobe = self.escalated_nprobe(nprobe.max(1), filter);
+        // per-list filter mask slices, built lazily once per *call* (they
+        // depend on the filter, not the query) and shared across the batch
+        let mut list_masks: HashMap<usize, FilterMask> = HashMap::new();
+        let mut hits = Vec::with_capacity(nq);
+        let mut stats = Vec::with_capacity(nq);
         let mut luts_buf = Vec::new();
         for qi in 0..nq {
             let q = &queries[qi * self.dim..(qi + 1) * self.dim];
@@ -358,24 +452,36 @@ impl IvfPq4 {
                     &luts_buf[..]
                 }
             };
-            let (d, l) = self.search_one(pq, q, luts_f32, k, nprobe.max(1), ef_search, fastscan);
-            dists.extend(d);
-            labels.extend(l);
+            let (row, st) = self.query_one(
+                pq,
+                q,
+                luts_f32,
+                kind,
+                filter,
+                &mut list_masks,
+                nprobe,
+                ef_search,
+                fastscan,
+            );
+            hits.push(row);
+            stats.push(st);
         }
-        Ok((dists, labels))
+        Ok((hits, stats))
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn search_one(
+    fn query_one(
         &self,
         pq: &ProductQuantizer,
         q: &[f32],
         luts_f32: &[f32],
-        k: usize,
+        kind: &QueryKind,
+        filter: Option<&Filter>,
+        list_masks: &mut HashMap<usize, FilterMask>,
         nprobe: usize,
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
-    ) -> (Vec<f32>, Vec<i64>) {
+    ) -> (Vec<Hit>, QueryStats) {
         // 1. coarse quantization (paper §4 step 1-2)
         let probes =
             self.coarse.assign(&self.centroids, self.params.nlist, self.dim, q, nprobe, ef_search);
@@ -385,51 +491,126 @@ impl IvfPq4 {
         let wl = build_width_luts(luts_f32, self.pq_m, self.width);
         let (qluts, kluts) = (wl.qluts, wl.kernel);
 
-        // 3. fastscan distance estimation over each probed list
-        let mut reservoir = U16Reservoir::new(k, fastscan.reservoir_factor);
-        for &c in &probes {
-            let list = &self.lists[c];
-            if let Some(packed) = &list.packed {
-                scan_into_reservoir(packed, &kluts, fastscan.backend, Some(&list.ids), &mut reservoir);
+        // 3. fastscan distance estimation over each probed list, with the
+        //    filter sliced into a per-list position mask
+        let mut considered = 0usize;
+        let mut passed = 0usize;
+        let mut scan_list = |sink: &mut ScanSink<'_>| {
+            for &c in &probes {
+                let list = &self.lists[c];
+                let Some(packed) = &list.packed else { continue };
+                considered += list.ids.len();
+                let mask: Option<&FilterMask> = match filter {
+                    Some(f) => {
+                        let m = list_masks
+                            .entry(c)
+                            .or_insert_with(|| f.build_mask(Some(&list.ids), list.ids.len()));
+                        Some(m)
+                    }
+                    None => None,
+                };
+                passed += mask.map(|m| m.pass_count()).unwrap_or(list.ids.len());
+                scan_filtered(packed, &kluts, fastscan.backend, Some(&list.ids), mask, sink);
             }
-        }
-        let cands = reservoir.into_candidates();
+        };
+        let cands: Vec<(u16, i64)> = match kind {
+            QueryKind::TopK { k } => {
+                let mut reservoir = U16Reservoir::new(*k, fastscan.reservoir_factor);
+                {
+                    let mut sink = ScanSink::TopK(&mut reservoir);
+                    scan_list(&mut sink);
+                }
+                reservoir.into_candidates()
+            }
+            QueryKind::Range { radius } => {
+                let bound = qluts.collection_bound(*radius, fastscan.rerank);
+                let mut raw = Vec::new();
+                {
+                    let mut sink = ScanSink::Range { bound, hits: &mut raw };
+                    scan_list(&mut sink);
+                }
+                raw
+            }
+        };
+        let st = QueryStats {
+            codes_scanned: considered,
+            lists_probed: probes.len(),
+            filter_selectivity: if filter.is_some() && considered > 0 {
+                passed as f64 / considered as f64
+            } else {
+                1.0
+            },
+        };
 
-        // 4. re-rank with exact f32 tables
-        let mut heap = TopK::new(k);
-        if fastscan.rerank {
-            // locate each candidate's codes: build per-search map id -> (list, pos)
-            // (lists are small relative to ntotal; map only over probed lists)
-            let mut codes_buf = vec![0u8; pq.m];
-            let mut pos: std::collections::HashMap<i64, (usize, usize)> = Default::default();
+        // 4. re-rank with exact f32 tables; candidates are addressed by
+        //    external id, located through a per-search map over probed lists
+        let exact = |pos_map: &HashMap<i64, (usize, usize)>,
+                     codes_buf: &mut [u8],
+                     d16: u16,
+                     id: i64| {
+            // Every candidate id comes from a probed list, so the map
+            // covers it; duplicate external ids collapse to one position,
+            // which re-ranks one representative of the duplicate set —
+            // defensible, and never a panic. Fall back to the decoded
+            // coarse distance if an id is missing.
+            match pos_map.get(&id) {
+                Some(&(c, j)) => {
+                    let packed = self.lists[c].packed.as_ref().unwrap();
+                    for (mi, slot) in codes_buf.iter_mut().enumerate() {
+                        *slot = packed.code_at(j, mi);
+                    }
+                    pq.adc_distance(luts_f32, codes_buf)
+                }
+                None => qluts.decode(d16),
+            }
+        };
+        let pos_map: Option<HashMap<i64, (usize, usize)>> = fastscan.rerank.then(|| {
+            let mut map = HashMap::new();
             for &c in &probes {
                 for (j, &id) in self.lists[c].ids.iter().enumerate() {
-                    pos.insert(id, (c, j));
+                    map.insert(id, (c, j));
                 }
             }
-            for (d16, id) in cands {
-                // Every candidate id comes from a probed list, so the map
-                // covers it; duplicate external ids collapse to one
-                // position, which re-ranks one representative of the
-                // duplicate set — defensible, and never a panic. Fall back
-                // to the decoded coarse distance if an id is missing.
-                match pos.get(&id) {
-                    Some(&(c, j)) => {
-                        let packed = self.lists[c].packed.as_ref().unwrap();
-                        for mi in 0..pq.m {
-                            codes_buf[mi] = packed.code_at(j, mi);
+            map
+        });
+        let row: Vec<Hit> = match kind {
+            QueryKind::TopK { k } => {
+                let mut heap = TopK::new(*k);
+                match &pos_map {
+                    Some(map) => {
+                        let mut codes_buf = vec![0u8; pq.m];
+                        for (d16, id) in cands {
+                            heap.push(exact(map, &mut codes_buf, d16, id), id);
                         }
-                        heap.push(pq.adc_distance(luts_f32, &codes_buf), id);
                     }
-                    None => heap.push(qluts.decode(d16), id),
+                    None => {
+                        for (d16, id) in cands {
+                            heap.push(qluts.decode(d16), id);
+                        }
+                    }
                 }
+                heap.into_hits()
+                    .into_iter()
+                    .map(|(distance, label)| Hit { distance, label })
+                    .collect()
             }
-        } else {
-            for (d16, id) in cands {
-                heap.push(qluts.decode(d16), id);
+            QueryKind::Range { radius } => {
+                let mut out: Vec<(f32, i64)> = match &pos_map {
+                    Some(map) => {
+                        let mut codes_buf = vec![0u8; pq.m];
+                        cands
+                            .into_iter()
+                            .map(|(d16, id)| (exact(map, &mut codes_buf, d16, id), id))
+                            .filter(|&(d, _)| d <= *radius)
+                            .collect()
+                    }
+                    None => cands.into_iter().map(|(d16, id)| (qluts.decode(d16), id)).collect(),
+                };
+                out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                out.into_iter().map(|(distance, label)| Hit { distance, label }).collect()
             }
-        }
-        heap.into_sorted()
+        };
+        (row, st)
     }
 
     /// Coarse centroids (`nlist × dim`) — persistence accessor.
@@ -741,6 +922,117 @@ mod tests {
         assert!(idx
             .search_with_luts(queries, &luts[..luts.len() - 1], 6, 4, None, &idx.fastscan)
             .is_err());
+    }
+
+    /// Full-probe filtered query ≡ unfiltered-query-then-post-filter,
+    /// bit-identical (at nprobe = nlist both paths see every list, so the
+    /// per-list mask pushdown is the only difference under test).
+    #[test]
+    fn filtered_query_full_probe_matches_postfilter() {
+        let (mut idx, data) = build(1500, 16, 10, 8, false, 75);
+        idx.fastscan.reservoir_factor = 8; // k below makes capacity >= n anyway
+        let queries = &data[..6 * 16];
+        let filter = Filter::id_range(200, 700);
+        let fs = idx.fastscan.clone();
+        // ask for the COMPLETE admitted set (k = admitted count) so the
+        // comparison is insensitive to tie-breaking at a k boundary: both
+        // sides are full sets sorted by (distance, label)
+        let (filtered, stats) = idx
+            .query_with(queries, &QueryKind::TopK { k: 500 }, Some(&filter), 10, None, &fs)
+            .unwrap();
+        let (full, _) = idx
+            .query_with(queries, &QueryKind::TopK { k: 1500 }, None, 10, None, &fs)
+            .unwrap();
+        for qi in 0..6 {
+            let want: Vec<Hit> = full[qi]
+                .iter()
+                .filter(|h| filter.matches(h.label))
+                .copied()
+                .collect();
+            assert_eq!(filtered[qi], want, "q{qi}");
+            let st = &stats[qi];
+            assert_eq!(st.lists_probed, 10, "q{qi}");
+            assert_eq!(st.codes_scanned, 1500, "q{qi}");
+            assert!((st.filter_selectivity - 500.0 / 1500.0).abs() < 1e-9, "q{qi}");
+        }
+    }
+
+    /// Selectivity-aware nprobe escalation: a 10%-selective filter widens
+    /// the probe (capped at nlist), an opaque predicate does not.
+    #[test]
+    fn selective_filters_escalate_nprobe() {
+        let (idx, _) = build(2000, 16, 16, 8, false, 76);
+        let sparse = Filter::id_range(0, 200); // 10% of 2000
+        assert_eq!(idx.escalated_nprobe(2, Some(&sparse)), 16); // 2/0.1=20 → nlist cap
+        let half = Filter::id_range(0, 1000);
+        assert_eq!(idx.escalated_nprobe(2, Some(&half)), 4);
+        let opaque = Filter::predicate(|_| true);
+        assert_eq!(idx.escalated_nprobe(2, Some(&opaque)), 2);
+        assert_eq!(idx.escalated_nprobe(2, None), 2);
+        // the 16× escalation cap binds before nlist when nprobe is tiny
+        let needle = Filter::id_set(&[3]);
+        assert_eq!(idx.escalated_nprobe(1, Some(&needle)), 16.min(idx.params.nlist));
+        // and escalation actually finds a selective needle: id 0 lives in
+        // exactly one list, but a 1-probe query for a far-away centroid
+        // must still find it once the filter narrows the target set
+        let origin = [0.0f32; 16];
+        let (hits, _) = idx
+            .query_with(
+                &origin,
+                &QueryKind::TopK { k: 1 },
+                Some(&Filter::id_set(&[7])),
+                1,
+                None,
+                &idx.fastscan,
+            )
+            .unwrap();
+        assert_eq!(hits[0].first().map(|h| h.label), Some(7));
+    }
+
+    /// Provably-empty filters answer without probing.
+    #[test]
+    fn empty_filter_short_circuits() {
+        let (idx, data) = build(800, 16, 8, 4, false, 77);
+        let (hits, stats) = idx
+            .query_with(
+                &data[..16],
+                &QueryKind::TopK { k: 5 },
+                Some(&Filter::id_range(10, 10)),
+                8,
+                None,
+                &idx.fastscan,
+            )
+            .unwrap();
+        assert!(hits[0].is_empty());
+        assert_eq!(stats[0].lists_probed, 0);
+        assert_eq!(stats[0].filter_selectivity, 0.0);
+    }
+
+    /// IVF range queries: at full probe with re-ranking, hits are exactly
+    /// the ids whose exact ADC distance is within the radius.
+    #[test]
+    fn range_query_full_probe_exact() {
+        use crate::pq::adc::adc_distances_all;
+        let (mut idx, data) = build(1000, 16, 8, 8, false, 78);
+        idx.fastscan.reservoir_factor = 64;
+        let pq = idx.pq.as_ref().unwrap();
+        let codes = pq.encode(&data).unwrap();
+        let q = &data[..16];
+        let luts = pq.compute_luts(q);
+        let all = adc_distances_all(pq, &luts, &codes);
+        let mut sorted = all.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let radius = sorted[30];
+        let (hits, stats) = idx
+            .query_with(q, &QueryKind::Range { radius }, None, 8, None, &idx.fastscan)
+            .unwrap();
+        let want = all.iter().filter(|&&d| d <= radius).count();
+        assert_eq!(hits[0].len(), want);
+        assert!(hits[0].windows(2).all(|w| w[0].distance <= w[1].distance));
+        for h in &hits[0] {
+            assert!((h.distance - all[h.label as usize]).abs() < 1e-6);
+        }
+        assert_eq!(stats[0].codes_scanned, 1000);
     }
 
     #[test]

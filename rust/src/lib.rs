@@ -19,12 +19,15 @@
 //! ## Quickstart
 //!
 //! Indexes have a mutable **build** phase (`train` → `add` → `seal`) and
-//! an immutable **query** phase: `search` takes `&self` and per-request
-//! [`index::SearchParams`], so a sealed index can be shared behind
-//! `Arc<dyn Index>` and searched from many threads concurrently.
+//! an immutable **query** phase: [`index::Index::query`] takes `&self`
+//! and a typed [`index::QueryRequest`] — top-k or radius search,
+//! optionally filtered by an id set/range/predicate (evaluated *inside*
+//! the SIMD kernels), with per-request [`index::SearchParams`] — so a
+//! sealed index can be shared behind `Arc<dyn Index>` and queried from
+//! many threads concurrently.
 //!
 //! ```no_run
-//! use armpq::index::{Index, SearchParams, factory};
+//! use armpq::index::{Filter, Index, QueryRequest, SearchParams, factory};
 //! use armpq::datasets::synthetic::SyntheticDataset;
 //! use std::sync::Arc;
 //!
@@ -34,11 +37,18 @@
 //! index.train(&ds.train).unwrap();
 //! index.add(&ds.base).unwrap();
 //! index.seal().unwrap();
-//! // query phase (&self): read-only, tunable per request
+//! // query phase (&self): read-only, tunable and filterable per request
+//! let req = QueryRequest::top_k(&ds.queries, 10)
+//!     .with_filter(Filter::id_range(0, 5_000))
+//!     .with_params(SearchParams::new().with_nprobe(16));
+//! let resp = index.query(&req).unwrap();
+//! println!("top-1 of q0 = {:?} ({} codes scanned)",
+//!     resp.hits[0].first(), resp.stats[0].codes_scanned);
+//! // radius search: every id within 1.5 (L2-squared)
+//! let near = index.query(&QueryRequest::range(&ds.queries, 1.5)).unwrap();
+//! // the legacy fixed-shape API is a thin shim over query()
 //! let result = index.search(&ds.queries, 10, None).unwrap();
 //! println!("top-1 of q0 = {}", result.labels[0]);
-//! let wide = SearchParams::new().with_nprobe(16);
-//! let better = index.search(&ds.queries, 10, Some(&wide)).unwrap();
 //! // share across threads lock-free
 //! let shared: Arc<dyn Index> = Arc::from(index);
 //! let handle = {
@@ -46,12 +56,13 @@
 //!     let q = ds.queries.clone();
 //!     std::thread::spawn(move || shared.search(&q, 10, None).unwrap())
 //! };
-//! # let _ = (better, handle);
+//! # let _ = (near, handle);
 //! ```
 //!
 //! The string-keyed `set_param(key, value)` API survives as a
 //! compatibility shim that parses into the same typed struct; prefer
-//! passing [`index::SearchParams`] per call.
+//! passing [`index::SearchParams`] per call. Likewise `search` survives
+//! as a padded-top-k shim over `query`.
 //!
 //! ## Code widths
 //!

@@ -76,12 +76,21 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
         "bench-micro" => {
             let cfg = ExperimentConfig::from_args(args)?;
             let m = args.get_usize("m", 16);
+            // `--filter-selectivity 1,10,50,100` adds the filter-pushdown
+            // sweep (masked scan vs scan-then-post-filter) per width
+            let sels = args.get_usize_list("filter-selectivity", &[]);
+            let filter_n = args.get_usize("filter-n", 320_000);
             // `--width 2,4,8` (CLI or config file) sweeps the
             // Quicker-ADC trade-off axis in one run
             for &width in &cfg.widths {
                 let t = experiments::run_kernel_micro(m, width);
                 t.print();
                 t.save()?;
+                if !sels.is_empty() {
+                    let t = experiments::run_filter_micro(filter_n, m, width, &sels, cfg.seed);
+                    t.print();
+                    t.save()?;
+                }
             }
             Ok(())
         }
@@ -89,8 +98,14 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
             let cfg = ExperimentConfig::from_args(args)?;
             let m = args.get_usize("m", 16);
             let n = args.get_usize("n", 320_000);
+            // `--range` switches to the range-query mode of the ablation
+            let range_mode = args.get_flag("range");
             for &width in &cfg.widths {
-                let t = experiments::run_ablation_layout(n, m, width, cfg.seed);
+                let t = if range_mode {
+                    experiments::run_ablation_layout_range(n, m, width, cfg.seed)
+                } else {
+                    experiments::run_ablation_layout(n, m, width, cfg.seed)
+                };
                 t.print();
                 t.save()?;
             }
@@ -123,8 +138,11 @@ commands:
   client        drive a running server
   bench-fig2    paper Fig. 2 (PQ vs 4-bit PQ recall/QPS sweep)
   bench-table1  paper Table 1 (IVF+HNSW+PQ16x4fs at scale)
-  bench-micro   paper Fig. 1 lookup-op micro-benchmark (--width 2,4,8)
-  bench-layout  interleaved-vs-flat layout ablation (--width 2,4,8)
+  bench-micro   paper Fig. 1 lookup-op micro-benchmark (--width 2,4,8;
+                --filter-selectivity 1,10,50,100 adds the filter-pushdown
+                sweep, --filter-n sets its database size)
+  bench-layout  interleaved-vs-flat layout ablation (--width 2,4,8;
+                --range benches the range-query scan instead of top-k)
   bench-pjrt    3-layer PJRT end-to-end comparison
 common flags: --dataset sift|deep --n <int> --nq <int> --k <int>
               --factory <spec> --nprobe <list> --seed <int> --config <file>

@@ -10,6 +10,33 @@
 use crate::pq::codebook::ProductQuantizer;
 use crate::util::topk::TopK;
 
+/// One code row's ADC distance — the unrolled gather loop shared by every
+/// scan below (shared so the float summation order, and therefore the
+/// exact result, is identical between the filtered and unfiltered paths).
+#[inline]
+fn row_adc(luts: &[f32], ksub: usize, m: usize, c: &[u8]) -> f32 {
+    // The inner loop is kept deliberately simple (indexed table gathers):
+    // it IS the baseline whose memory-lookup latency the paper's kernel
+    // removes. Unrolling m by 4 mirrors faiss's scalar scanner.
+    let chunks = m / 4;
+    let mut d0 = 0.0f32;
+    let mut d1 = 0.0f32;
+    let mut d2 = 0.0f32;
+    let mut d3 = 0.0f32;
+    for j in 0..chunks {
+        let mi = j * 4;
+        d0 += luts[mi * ksub + c[mi] as usize];
+        d1 += luts[(mi + 1) * ksub + c[mi + 1] as usize];
+        d2 += luts[(mi + 2) * ksub + c[mi + 2] as usize];
+        d3 += luts[(mi + 3) * ksub + c[mi + 3] as usize];
+    }
+    let mut d = d0 + d1 + d2 + d3;
+    for mi in chunks * 4..m {
+        d += luts[mi * ksub + c[mi] as usize];
+    }
+    d
+}
+
 /// Scan all `n` codes (`n × m` bytes, one byte per sub-quantizer) against
 /// f32 LUTs (`m × ksub`), returning the `k` nearest `(distances, labels)`.
 ///
@@ -25,34 +52,87 @@ pub fn search_adc(
     let ksub = pq.ksub;
     let n = codes.len() / m;
     let mut heap = TopK::new(k);
-
-    // The inner loop is kept deliberately simple (indexed table gathers):
-    // it IS the baseline whose memory-lookup latency the paper's kernel
-    // removes. Unrolling m by 4 mirrors faiss's scalar scanner.
-    let chunks = m / 4;
     for i in 0..n {
-        let c = &codes[i * m..(i + 1) * m];
-        let mut d0 = 0.0f32;
-        let mut d1 = 0.0f32;
-        let mut d2 = 0.0f32;
-        let mut d3 = 0.0f32;
-        for j in 0..chunks {
-            let mi = j * 4;
-            d0 += luts[mi * ksub + c[mi] as usize];
-            d1 += luts[(mi + 1) * ksub + c[mi + 1] as usize];
-            d2 += luts[(mi + 2) * ksub + c[mi + 2] as usize];
-            d3 += luts[(mi + 3) * ksub + c[mi + 3] as usize];
-        }
-        let mut d = d0 + d1 + d2 + d3;
-        for mi in chunks * 4..m {
-            d += luts[mi * ksub + c[mi] as usize];
-        }
+        let d = row_adc(luts, ksub, m, &codes[i * m..(i + 1) * m]);
         if d < heap.threshold() {
             let label = labels.map(|l| l[i]).unwrap_or(i as i64);
             heap.push(d, label);
         }
     }
     heap.into_sorted()
+}
+
+/// Filtered exact top-k: the `k` nearest among labels `keep` admits,
+/// unpadded ascending `(distance, label)` pairs plus the admitted count
+/// (for selectivity stats). Because the scan is exhaustive and the row sum
+/// is shared with [`search_adc`], filtered results are *bit-identical* to
+/// post-filtering an unfiltered scan.
+pub fn topk_adc(
+    pq: &ProductQuantizer,
+    luts: &[f32],
+    codes: &[u8],
+    labels: Option<&[i64]>,
+    k: usize,
+    keep: Option<&dyn Fn(i64) -> bool>,
+) -> (Vec<(f32, i64)>, usize) {
+    let m = pq.m;
+    let ksub = pq.ksub;
+    let n = codes.len() / m;
+    let mut kept = 0usize;
+    if k == 0 {
+        // still report selectivity so stats stay meaningful
+        for i in 0..n {
+            let label = labels.map(|l| l[i]).unwrap_or(i as i64);
+            if keep.map(|f| f(label)).unwrap_or(true) {
+                kept += 1;
+            }
+        }
+        return (Vec::new(), kept);
+    }
+    let mut heap = TopK::new(k);
+    for i in 0..n {
+        let label = labels.map(|l| l[i]).unwrap_or(i as i64);
+        if !keep.map(|f| f(label)).unwrap_or(true) {
+            continue;
+        }
+        kept += 1;
+        let d = row_adc(luts, ksub, m, &codes[i * m..(i + 1) * m]);
+        if d < heap.threshold() {
+            heap.push(d, label);
+        }
+    }
+    (heap.into_hits(), kept)
+}
+
+/// Exact range scan: every `(distance, label)` with distance `<= radius`
+/// among labels `keep` admits, ascending by `(distance, label)`, plus the
+/// admitted count.
+pub fn range_adc(
+    pq: &ProductQuantizer,
+    luts: &[f32],
+    codes: &[u8],
+    labels: Option<&[i64]>,
+    radius: f32,
+    keep: Option<&dyn Fn(i64) -> bool>,
+) -> (Vec<(f32, i64)>, usize) {
+    let m = pq.m;
+    let ksub = pq.ksub;
+    let n = codes.len() / m;
+    let mut kept = 0usize;
+    let mut hits = Vec::new();
+    for i in 0..n {
+        let label = labels.map(|l| l[i]).unwrap_or(i as i64);
+        if !keep.map(|f| f(label)).unwrap_or(true) {
+            continue;
+        }
+        kept += 1;
+        let d = row_adc(luts, ksub, m, &codes[i * m..(i + 1) * m]);
+        if d <= radius {
+            hits.push((d, label));
+        }
+    }
+    hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    (hits, kept)
 }
 
 /// Compute distances for *all* codes (used by tests and ground-truthing of
@@ -125,6 +205,52 @@ mod tests {
         let (d, l) = search_adc(&pq, &luts, &codes, None, 50);
         assert_eq!(d.len(), 50);
         assert_eq!(l.iter().filter(|&&x| x == -1).count(), 30);
+    }
+
+    /// Filtered top-k must equal post-filtering the full distance array —
+    /// bit-identical, since the row sum is shared.
+    #[test]
+    fn filtered_topk_matches_postfilter() {
+        let (pq, data, codes) = setup(300, 16, 4, 16);
+        let luts = pq.compute_luts(&data[..16]);
+        let keep = |id: i64| id % 3 == 0;
+        let (hits, kept) = topk_adc(&pq, &luts, &codes, None, 7, Some(&keep));
+        assert_eq!(kept, 100);
+        let all = adc_distances_all(&pq, &luts, &codes);
+        let mut reference: Vec<(f32, i64)> = all
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| keep(*i as i64))
+            .map(|(i, &d)| (d, i as i64))
+            .collect();
+        reference.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        reference.truncate(7);
+        assert_eq!(hits.len(), 7);
+        for (h, r) in hits.iter().zip(&reference) {
+            assert!((h.0 - r.0).abs() < 1e-6);
+        }
+        // k == 0 still reports selectivity
+        let (empty, kept0) = topk_adc(&pq, &luts, &codes, None, 0, Some(&keep));
+        assert!(empty.is_empty());
+        assert_eq!(kept0, 100);
+    }
+
+    #[test]
+    fn range_adc_collects_exactly_within_radius() {
+        let (pq, data, codes) = setup(250, 16, 4, 17);
+        let luts = pq.compute_luts(&data[..16]);
+        let all = adc_distances_all(&pq, &luts, &codes);
+        let mut sorted = all.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let radius = sorted[25]; // ~10% of the database
+        let (hits, kept) = range_adc(&pq, &luts, &codes, None, radius, None);
+        assert_eq!(kept, 250);
+        let want = all.iter().filter(|&&d| d <= radius).count();
+        assert_eq!(hits.len(), want);
+        assert!(hits.windows(2).all(|w| w[0].0 <= w[1].0));
+        for &(d, l) in &hits {
+            assert_eq!(d, all[l as usize]);
+        }
     }
 
     #[test]

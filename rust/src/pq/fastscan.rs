@@ -114,6 +114,116 @@ impl KernelLuts {
     }
 }
 
+/// Block-aligned filter bitmask over scan positions: bit `v` of word `b`
+/// admits position `32·b + v`. The scan kernels AND a block's word into
+/// the pruned-compare admission mask, so a filtered-out position costs
+/// nothing beyond the bit test — and an all-zero word skips the block's
+/// accumulation entirely.
+///
+/// Built from a [`crate::index::query::Filter`] by the index layers
+/// ([`crate::index::query::Filter::build_mask`]); the kernel itself knows
+/// only positions, never external labels.
+#[derive(Clone, Debug)]
+pub struct FilterMask {
+    words: Vec<u32>,
+    n: usize,
+    pass: usize,
+}
+
+impl FilterMask {
+    /// Mask over `n` positions; `keep(pos)` decides admission. Bits past
+    /// `n` in the last word stay zero (phantom lanes never pass).
+    pub fn from_fn(n: usize, keep: impl Fn(usize) -> bool) -> Self {
+        let mut words = vec![0u32; n.div_ceil(BLOCK_SIZE)];
+        let mut pass = 0usize;
+        for (pos, word) in (0..n).map(|p| (p, p / BLOCK_SIZE)) {
+            if keep(pos) {
+                words[word] |= 1u32 << (pos % BLOCK_SIZE);
+                pass += 1;
+            }
+        }
+        Self { words, n, pass }
+    }
+
+    /// Admission word of block `b` (all-ones past the mask's coverage, so
+    /// a mask may be shorter than the scan it gates — unused here, but it
+    /// keeps `word` total).
+    #[inline]
+    pub fn word(&self, b: usize) -> u32 {
+        self.words.get(b).copied().unwrap_or(u32::MAX)
+    }
+
+    #[inline]
+    pub fn passes(&self, pos: usize) -> bool {
+        pos < self.n && self.words[pos / BLOCK_SIZE] >> (pos % BLOCK_SIZE) & 1 == 1
+    }
+
+    /// Number of positions covered.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of admitted positions.
+    pub fn pass_count(&self) -> usize {
+        self.pass
+    }
+
+    /// Admitted fraction (1.0 for an empty domain).
+    pub fn selectivity(&self) -> f64 {
+        if self.n == 0 {
+            1.0
+        } else {
+            self.pass as f64 / self.n as f64
+        }
+    }
+}
+
+/// Where scanned candidates go: the top-k reservoir (threshold tightens as
+/// it fills) or a range collector (fixed quantized threshold, unbounded
+/// hits). One enum instead of a trait so the fused `#[target_feature]`
+/// kernels stay free of dynamic dispatch.
+pub enum ScanSink<'a> {
+    TopK(&'a mut U16Reservoir),
+    Range {
+        /// Admit quantized distances `<= bound`.
+        bound: u16,
+        hits: &'a mut Vec<(u16, i64)>,
+    },
+}
+
+impl ScanSink<'_> {
+    /// `(prune, threshold)` for the SIMD admission test: when `prune` is
+    /// false every real lane is admitted (underfull reservoir, or a range
+    /// bound of `u16::MAX` that a strict `<` compare could not express);
+    /// otherwise lanes pass iff `d < threshold`.
+    #[inline]
+    fn admission(&self) -> (bool, u16) {
+        match self {
+            ScanSink::TopK(res) => (res.is_full(), res.threshold()),
+            // d <= bound  ⟺  d < bound + 1 (strict SIMD compare)
+            ScanSink::Range { bound, .. } => {
+                if *bound == u16::MAX {
+                    (false, 0)
+                } else {
+                    (true, bound + 1)
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, d: u16, label: i64) {
+        match self {
+            ScanSink::TopK(res) => res.push(d, label),
+            ScanSink::Range { bound, hits } => {
+                if d <= *bound {
+                    hits.push((d, label));
+                }
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------------ kernels
 
 /// Portable (NEON-semantics) block kernel: 32 quantized distances.
@@ -287,6 +397,25 @@ pub fn scan_into_reservoir(
     labels: Option<&[i64]>,
     reservoir: &mut U16Reservoir,
 ) {
+    let mut sink = ScanSink::TopK(reservoir);
+    scan_filtered(packed, luts, backend, labels, None, &mut sink);
+}
+
+/// The filtered, sink-generic scan every query mode runs on: dispatches to
+/// the fused SSSE3/NEON hot paths or the per-block fallback, AND-ing the
+/// block-aligned [`FilterMask`] into the admission mask so filtered-out
+/// positions never touch the sink (and all-filtered blocks skip
+/// accumulation entirely). All three backends stay bit-identical — the
+/// filter word is applied to the scalar admission mask the same way on
+/// every path.
+pub fn scan_filtered(
+    packed: &PackedCodes,
+    luts: &KernelLuts,
+    backend: Backend,
+    labels: Option<&[i64]>,
+    filter: Option<&FilterMask>,
+    sink: &mut ScanSink<'_>,
+) {
     // A LUT set built for a different (m, width) than the packed codes
     // would make the fused unsafe scans read past the block.
     debug_assert_eq!(
@@ -294,6 +423,9 @@ pub fn scan_into_reservoir(
         packed.chunks(),
         "LUT chunk count must match the packed layout (same m and width)"
     );
+    if let Some(f) = filter {
+        debug_assert_eq!(f.n(), packed.n, "filter mask must cover every scan position");
+    }
     // Fused hot paths: tables hoisted into registers across all blocks,
     // in-register threshold compare, stores only for surviving blocks.
     // They hold the whole dual-table set in registers, so they are gated
@@ -301,37 +433,41 @@ pub fn scan_into_reservoir(
     let nchunks = luts.chunks();
     #[cfg(target_arch = "x86_64")]
     if backend == Backend::Ssse3 && nchunks <= MAX_CHUNKS {
-        unsafe { scan_reservoir_ssse3(packed, luts, labels, reservoir) };
+        unsafe { scan_fused_ssse3(packed, luts, labels, filter, sink) };
         return;
     }
     #[cfg(target_arch = "aarch64")]
     if backend == Backend::Neon && nchunks <= MAX_CHUNKS {
-        unsafe { scan_reservoir_neon(packed, luts, labels, reservoir) };
+        unsafe { scan_fused_neon(packed, luts, labels, filter, sink) };
         return;
     }
     let _ = nchunks;
-    scan_reservoir_blocks(packed, luts, backend, labels, reservoir);
+    scan_blocks(packed, luts, backend, labels, filter, sink);
 }
 
-/// Generic reservoir scan: per-block kernel dispatch plus the portable
-/// SIMD threshold test. Used by the portable backend and as the fallback
-/// for real-SIMD backends when M exceeds the fused-kernel register budget.
-fn scan_reservoir_blocks(
+/// Generic scan: per-block kernel dispatch plus the portable SIMD
+/// threshold test. Used by the portable backend and as the fallback for
+/// real-SIMD backends when M exceeds the fused-kernel register budget.
+fn scan_blocks(
     packed: &PackedCodes,
     luts: &KernelLuts,
     backend: Backend,
     labels: Option<&[i64]>,
-    reservoir: &mut U16Reservoir,
+    filter: Option<&FilterMask>,
+    sink: &mut ScanSink<'_>,
 ) {
     let mut block_d = [0u16; BLOCK_SIZE];
     let bb = packed.block_bytes();
     let nblocks = packed.nblocks();
     for b in 0..nblocks {
+        let fw = filter.map(|f| f.word(b)).unwrap_or(u32::MAX);
+        if fw == 0 {
+            continue; // every position filtered out: skip the block
+        }
         accumulate_block(backend, &packed.data[b * bb..(b + 1) * bb], luts, &mut block_d);
         let base = b * BLOCK_SIZE;
         let limit = BLOCK_SIZE.min(packed.n - base);
-        let prune = reservoir.is_full();
-        let thr = reservoir.threshold();
+        let (prune, thr) = sink.admission();
         if prune && thr == 0 {
             continue; // nothing can beat a zero threshold
         }
@@ -349,8 +485,9 @@ fn scan_reservoir_blocks(
             };
             (lo.lt(thr_v).movemask() as u32) | ((hi.lt(thr_v).movemask() as u32) << 16)
         } else {
-            u32::MAX // underfull reservoir: admit every real lane
+            u32::MAX // underfull reservoir / saturated range bound: admit every real lane
         };
+        mask &= fw; // filter pushdown: drop filtered positions in the admission mask
         if limit < BLOCK_SIZE {
             mask &= (1u32 << limit) - 1; // drop phantom padding lanes
         }
@@ -359,7 +496,7 @@ fn scan_reservoir_blocks(
             mask &= mask - 1;
             let idx = base + v;
             let label = labels.map(|l| l[idx]).unwrap_or(idx as i64);
-            reservoir.push(block_d[v], label);
+            sink.push(block_d[v], label);
         }
     }
 }
@@ -379,11 +516,12 @@ fn scan_reservoir_blocks(
 /// Caller must ensure SSSE3 is available.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "ssse3")]
-unsafe fn scan_reservoir_ssse3(
+unsafe fn scan_fused_ssse3(
     packed: &PackedCodes,
     luts: &KernelLuts,
     labels: Option<&[i64]>,
-    reservoir: &mut U16Reservoir,
+    filter: Option<&FilterMask>,
+    sink: &mut ScanSink<'_>,
 ) {
     #![allow(unsafe_op_in_unsafe_fn)]
     use core::arch::x86_64::*;
@@ -407,6 +545,13 @@ unsafe fn scan_reservoir_ssse3(
     let mut block_d = [0u16; BLOCK_SIZE];
 
     for b in 0..nblocks {
+        let fw = match filter {
+            Some(f) => f.word(b),
+            None => u32::MAX,
+        };
+        if fw == 0 {
+            continue; // every position filtered out: skip accumulation too
+        }
         let base_ptr = data.add(b * bb);
         // accumulators: 4 × 8 u16 lanes covering vectors 0..32
         let mut a0 = zero; // v0..8
@@ -447,8 +592,7 @@ unsafe fn scan_reservoir_ssse3(
         // in-register threshold: acc < thr ⟺ subs_epu16(acc, thr-1) == 0.
         // An underfull reservoir admits everything (saturated distances
         // included), so pruning only starts once it reaches capacity.
-        let prune = reservoir.is_full();
-        let thr = reservoir.threshold();
+        let (prune, thr) = sink.admission();
         if prune && thr == 0 {
             continue;
         }
@@ -464,6 +608,7 @@ unsafe fn scan_reservoir_ssse3(
         } else {
             u32::MAX
         };
+        mask &= fw; // filter pushdown into the admission mask
         if mask == 0 {
             continue; // common case once the threshold tightens: no stores
         }
@@ -481,7 +626,7 @@ unsafe fn scan_reservoir_ssse3(
             mask &= mask - 1;
             let idx = base + v;
             let label = labels.map(|l| l[idx]).unwrap_or(idx as i64);
-            reservoir.push(block_d[v], label);
+            sink.push(block_d[v], label);
         }
     }
 }
@@ -502,11 +647,12 @@ unsafe fn scan_reservoir_ssse3(
 /// Caller must ensure NEON is available (always true on aarch64).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
-unsafe fn scan_reservoir_neon(
+unsafe fn scan_fused_neon(
     packed: &PackedCodes,
     luts: &KernelLuts,
     labels: Option<&[i64]>,
-    reservoir: &mut U16Reservoir,
+    filter: Option<&FilterMask>,
+    sink: &mut ScanSink<'_>,
 ) {
     #![allow(unsafe_op_in_unsafe_fn)]
     use crate::simd::neon::neon_movemask_u8;
@@ -531,6 +677,13 @@ unsafe fn scan_reservoir_neon(
     let mut block_d = [0u16; BLOCK_SIZE];
 
     for b in 0..nblocks {
+        let fw = match filter {
+            Some(f) => f.word(b),
+            None => u32::MAX,
+        };
+        if fw == 0 {
+            continue; // every position filtered out: skip accumulation too
+        }
         let base_ptr = data.add(b * bb);
         // accumulators: 4 × 8 u16 lanes covering vectors 0..32
         let mut a0 = zero16; // v0..8
@@ -570,8 +723,7 @@ unsafe fn scan_reservoir_neon(
         }
         // in-register threshold: native unsigned compare, then the
         // narrowing-shift movemask. Underfull reservoir admits everything.
-        let prune = reservoir.is_full();
-        let thr = reservoir.threshold();
+        let (prune, thr) = sink.admission();
         if prune && thr == 0 {
             continue;
         }
@@ -588,6 +740,7 @@ unsafe fn scan_reservoir_neon(
         } else {
             u32::MAX
         };
+        mask &= fw; // filter pushdown into the admission mask
         if mask == 0 {
             continue; // common case once the threshold tightens: no stores
         }
@@ -605,7 +758,7 @@ unsafe fn scan_reservoir_neon(
             mask &= mask - 1;
             let idx = base + v;
             let label = labels.map(|l| l[idx]).unwrap_or(idx as i64);
-            reservoir.push(block_d[v], label);
+            sink.push(block_d[v], label);
         }
     }
 }
@@ -639,6 +792,17 @@ pub fn search_fastscan_with_luts(
     params: &FastScanParams,
     labels: Option<&[i64]>,
 ) -> (Vec<f32>, Vec<i64>) {
+    let hits = topk_fastscan_with_luts(pq, packed, luts_f32, k, params, labels, None);
+    let mut d: Vec<f32> = hits.iter().map(|&(dist, _)| dist).collect();
+    let mut l: Vec<i64> = hits.iter().map(|&(_, label)| label).collect();
+    while d.len() < k {
+        d.push(f32::INFINITY);
+        l.push(-1);
+    }
+    (d, l)
+}
+
+fn check_scan_shapes(pq: &ProductQuantizer, packed: &PackedCodes, labels: Option<&[i64]>) {
     if let Some(ls) = labels {
         // A wrong-sized label map would silently mislabel (or panic on)
         // results; fail loudly with the actual sizes instead.
@@ -655,6 +819,25 @@ pub fn search_fastscan_with_luts(
         "quantizer columns {} do not match packed layout columns {} ({})",
         pq.m, packed.m_codes, packed.width
     );
+}
+
+/// Filtered top-k over one packed code set: the `k` best `(distance,
+/// label)` pairs among positions the `filter` mask admits, ascending,
+/// unpadded (fewer than `k` when the admitted set is small). `filter` is
+/// in *position* space (see [`FilterMask`]); `labels` renames results only.
+pub fn topk_fastscan_with_luts(
+    pq: &ProductQuantizer,
+    packed: &PackedCodes,
+    luts_f32: &[f32],
+    k: usize,
+    params: &FastScanParams,
+    labels: Option<&[i64]>,
+    filter: Option<&FilterMask>,
+) -> Vec<(f32, i64)> {
+    check_scan_shapes(pq, packed, labels);
+    if k == 0 {
+        return Vec::new();
+    }
     let wl = build_width_luts(luts_f32, packed.m, packed.width);
     let (qluts, kluts) = (wl.qluts, wl.kernel);
     let mut reservoir = U16Reservoir::new(k, params.reservoir_factor);
@@ -662,7 +845,10 @@ pub fn search_fastscan_with_luts(
     // external labels are applied after re-ranking. (A label→position
     // reverse map would collapse duplicate labels and panic on unmapped
     // ones — positions are unambiguous by construction.)
-    scan_into_reservoir(packed, &kluts, params.backend, None, &mut reservoir);
+    {
+        let mut sink = ScanSink::TopK(&mut reservoir);
+        scan_filtered(packed, &kluts, params.backend, None, filter, &mut sink);
+    }
     let cands = reservoir.into_candidates();
 
     let label_of = |pos: i64| labels.map(|l| l[pos as usize]).unwrap_or(pos);
@@ -682,7 +868,56 @@ pub fn search_fastscan_with_luts(
             heap.push(qluts.decode(d16), label_of(pos));
         }
     }
-    heap.into_sorted()
+    heap.into_hits()
+}
+
+/// Range query over one packed code set: every `(distance, label)` with
+/// distance `<= radius`, ascending by `(distance, label)`.
+///
+/// The scan reuses the u16-quantized LUT threshold: candidates are
+/// collected in-register against a conservative quantized bound (the
+/// radius widened by the tables' worst-case decode error when re-ranking),
+/// then the exact pass trims to the true radius. With `rerank` off the
+/// boundary is decided on decoded quantized distances — quantization-
+/// accurate, still deterministic and backend-identical.
+pub fn range_fastscan_with_luts(
+    pq: &ProductQuantizer,
+    packed: &PackedCodes,
+    luts_f32: &[f32],
+    radius: f32,
+    params: &FastScanParams,
+    labels: Option<&[i64]>,
+    filter: Option<&FilterMask>,
+) -> Vec<(f32, i64)> {
+    check_scan_shapes(pq, packed, labels);
+    let wl = build_width_luts(luts_f32, packed.m, packed.width);
+    let (qluts, kluts) = (wl.qluts, wl.kernel);
+    let bound = qluts.collection_bound(radius, params.rerank);
+    let mut raw: Vec<(u16, i64)> = Vec::new();
+    {
+        let mut sink = ScanSink::Range { bound, hits: &mut raw };
+        scan_filtered(packed, &kluts, params.backend, None, filter, &mut sink);
+    }
+    let label_of = |pos: i64| labels.map(|l| l[pos as usize]).unwrap_or(pos);
+    let mut hits: Vec<(f32, i64)> = if params.rerank {
+        let mut codes_buf = vec![0u8; pq.m];
+        let mut out = Vec::with_capacity(raw.len());
+        for (_, pos) in raw {
+            let i = pos as usize;
+            for q in 0..pq.m {
+                codes_buf[q] = packed.code_at(i, q);
+            }
+            let d = pq.adc_distance(luts_f32, &codes_buf);
+            if d <= radius {
+                out.push((d, label_of(pos)));
+            }
+        }
+        out
+    } else {
+        raw.into_iter().map(|(d16, pos)| (qluts.decode(d16), label_of(pos))).collect()
+    };
+    hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    hits
 }
 
 #[cfg(test)]
@@ -1065,6 +1300,185 @@ mod tests {
                 "{backend:?}: {} of {k} saturated candidates kept",
                 cands.len()
             );
+        }
+    }
+
+    /// Filter pushdown property, the acceptance criterion at kernel level:
+    /// for every width × backend, over partial blocks and odd M, a masked
+    /// scan with an everything-fits reservoir returns *exactly* the
+    /// admitted positions with their exact quantized distances — i.e.
+    /// bit-identical to post-filtering `fastscan_distances_all`.
+    #[test]
+    fn filtered_scan_matches_postfilter_all_widths() {
+        let mut rng = Rng::new(90);
+        for width in CodeWidth::ALL {
+            for trial in 0..6 {
+                let n = 1 + rng.below(300); // partial blocks on purpose
+                let m = 1 + rng.below(12); // odd M on purpose
+                let (packed, wl, expect) =
+                    width_fixture(n, m, width, 900 + trial * 13 + m as u64);
+                // ~50% then ~10% admission
+                for modulus in [2usize, 10] {
+                    let mask = FilterMask::from_fn(n, |pos| pos % modulus == 0);
+                    let mut want: Vec<(u16, i64)> = expect
+                        .iter()
+                        .enumerate()
+                        .filter(|(pos, _)| pos % modulus == 0)
+                        .map(|(pos, &d)| (d, pos as i64))
+                        .collect();
+                    want.sort_unstable();
+                    for backend in available_backends() {
+                        // capacity >= n: nothing is ever pruned, so the
+                        // reservoir holds the full admitted set
+                        let mut res = U16Reservoir::new(n.max(1), 1);
+                        let mut sink = ScanSink::TopK(&mut res);
+                        scan_filtered(&packed, &wl.kernel, backend, None, Some(&mask), &mut sink);
+                        let mut got = res.into_candidates();
+                        got.sort_unstable();
+                        assert_eq!(
+                            got, want,
+                            "{width} trial {trial} n={n} m={m} mod={modulus} {backend:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Filtered reservoir pruning still never loses a strictly-better
+    /// candidate *within the admitted set*, for every width and backend.
+    #[test]
+    fn filtered_reservoir_keeps_admitted_topk() {
+        let mut rng = Rng::new(91);
+        for width in CodeWidth::ALL {
+            let n = 33 + rng.below(300);
+            let m = 1 + rng.below(10);
+            let k = 1 + rng.below(6);
+            let (packed, wl, expect) = width_fixture(n, m, width, 950 + m as u64);
+            let mask = FilterMask::from_fn(n, |pos| pos % 3 != 1);
+            let mut admitted: Vec<u16> = expect
+                .iter()
+                .enumerate()
+                .filter(|(pos, _)| mask.passes(*pos))
+                .map(|(_, &d)| d)
+                .collect();
+            admitted.sort_unstable();
+            let kth = admitted[(k - 1).min(admitted.len() - 1)];
+            for backend in available_backends() {
+                let mut res = U16Reservoir::new(k, 4);
+                let mut sink = ScanSink::TopK(&mut res);
+                scan_filtered(&packed, &wl.kernel, backend, None, Some(&mask), &mut sink);
+                let cands = res.into_candidates();
+                assert!(cands.len() >= k.min(admitted.len()), "{width} {backend:?}");
+                for (pos, &d) in expect.iter().enumerate() {
+                    if mask.passes(pos) && d < kth {
+                        assert!(
+                            cands.iter().any(|&(cd, cl)| cl == pos as i64 && cd == d),
+                            "{width} {backend:?}: lost admitted candidate {pos}"
+                        );
+                    }
+                    if !mask.passes(pos) {
+                        assert!(
+                            cands.iter().all(|&(_, cl)| cl != pos as i64),
+                            "{width} {backend:?}: filtered position {pos} leaked through"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Range sink: the scan must collect exactly the positions with
+    /// quantized distance <= bound, on every width and backend — including
+    /// the bound == u16::MAX saturation case a strict compare can't express.
+    #[test]
+    fn range_scan_collects_exact_set() {
+        let mut rng = Rng::new(92);
+        for width in CodeWidth::ALL {
+            let n = 1 + rng.below(300);
+            let m = 1 + rng.below(10);
+            let (packed, wl, expect) = width_fixture(n, m, width, 970 + m as u64);
+            let mut sorted = expect.clone();
+            sorted.sort_unstable();
+            for bound in [sorted[n / 10], sorted[n / 2], u16::MAX] {
+                let want: Vec<(u16, i64)> = {
+                    let mut v: Vec<(u16, i64)> = expect
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &d)| d <= bound)
+                        .map(|(pos, &d)| (d, pos as i64))
+                        .collect();
+                    v.sort_unstable();
+                    v
+                };
+                for backend in available_backends() {
+                    let mut hits = Vec::new();
+                    let mut sink = ScanSink::Range { bound, hits: &mut hits };
+                    scan_filtered(&packed, &wl.kernel, backend, None, None, &mut sink);
+                    hits.sort_unstable();
+                    assert_eq!(hits, want, "{width} bound={bound} {backend:?}");
+                }
+            }
+        }
+    }
+
+    /// Edge cases: an all-zero filter yields nothing (blocks skipped), an
+    /// all-ones filter is identical to no filter.
+    #[test]
+    fn empty_and_full_filters() {
+        let (packed, wl, _) = width_fixture(100, 8, CodeWidth::W4, 980);
+        let none = FilterMask::from_fn(100, |_| false);
+        let all = FilterMask::from_fn(100, |_| true);
+        assert_eq!(none.pass_count(), 0);
+        assert_eq!(all.pass_count(), 100);
+        assert_eq!(all.selectivity(), 1.0);
+        for backend in available_backends() {
+            let mut res = U16Reservoir::new(5, 4);
+            let mut sink = ScanSink::TopK(&mut res);
+            scan_filtered(&packed, &wl.kernel, backend, None, Some(&none), &mut sink);
+            assert!(res.into_candidates().is_empty(), "{backend:?}");
+
+            let mut res_all = U16Reservoir::new(5, 4);
+            let mut sink = ScanSink::TopK(&mut res_all);
+            scan_filtered(&packed, &wl.kernel, backend, None, Some(&all), &mut sink);
+            let mut with_full = res_all.into_candidates();
+            let mut res_bare = U16Reservoir::new(5, 4);
+            scan_into_reservoir(&packed, &wl.kernel, backend, None, &mut res_bare);
+            let mut without = res_bare.into_candidates();
+            with_full.sort_unstable();
+            without.sort_unstable();
+            assert_eq!(with_full, without, "{backend:?}");
+        }
+    }
+
+    /// End-to-end range search with re-ranking: exact boundary against the
+    /// exact ADC distances, filtered and unfiltered.
+    #[test]
+    fn range_search_exact_boundary_with_rerank() {
+        let (pq, data, codes) = setup(400, 32, 8, 45);
+        let packed = PackedCodes::pack(&codes, 8, CodeWidth::W4).unwrap();
+        let q = &data[..32];
+        let luts = pq.compute_luts(q);
+        let all = adc_distances_all(&pq, &luts, &codes);
+        let mut sorted = all.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let radius = sorted[40]; // ~10%
+        for backend in available_backends() {
+            let params = FastScanParams { backend, rerank: true, reservoir_factor: 8 };
+            let hits = range_fastscan_with_luts(&pq, &packed, &luts, radius, &params, None, None);
+            let want = all.iter().filter(|&&d| d <= radius).count();
+            assert_eq!(hits.len(), want, "{backend:?}");
+            assert!(hits.windows(2).all(|w| w[0].0 <= w[1].0), "{backend:?}");
+            for &(d, l) in &hits {
+                assert_eq!(d, all[l as usize], "{backend:?}");
+            }
+            // filtered range ≡ post-filtered range
+            let mask = FilterMask::from_fn(400, |pos| pos % 2 == 0);
+            let fhits =
+                range_fastscan_with_luts(&pq, &packed, &luts, radius, &params, None, Some(&mask));
+            let fwant: Vec<(f32, i64)> =
+                hits.iter().copied().filter(|&(_, l)| l % 2 == 0).collect();
+            assert_eq!(fhits, fwant, "{backend:?}");
         }
     }
 

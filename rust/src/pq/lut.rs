@@ -90,6 +90,23 @@ impl QuantizedLuts {
     pub fn max_abs_error(&self) -> f32 {
         0.5 * self.delta * self.m as f32
     }
+
+    /// Quantized collection bound for a range query with radius `radius`:
+    /// admit accumulated distances `<= bound`. With re-ranking the bound
+    /// is widened by the worst-case decode error (plus one count for
+    /// float rounding in the bound itself) so no true hit is pruned by
+    /// quantization — the exact pass trims the over-collection; without
+    /// re-ranking the decoded quantized distance IS the result, so the
+    /// bound is the radius itself. THE single definition shared by the
+    /// flat and IVF range paths, so they cannot disagree at the boundary.
+    #[inline]
+    pub fn collection_bound(&self, radius: f32, rerank: bool) -> u16 {
+        if rerank {
+            self.encode_bound(radius + self.max_abs_error()).saturating_add(1)
+        } else {
+            self.encode_bound(radius)
+        }
+    }
 }
 
 #[cfg(test)]

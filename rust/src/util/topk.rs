@@ -99,6 +99,14 @@ impl TopK {
         }
         (d, l)
     }
+
+    /// Drain into `(distance, label)` pairs sorted ascending, **without**
+    /// padding — the variable-length form the typed query API returns
+    /// (same ordering as [`TopK::into_sorted`]).
+    pub fn into_hits(mut self) -> Vec<(f32, i64)> {
+        self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap
+    }
 }
 
 /// Reservoir of candidate ids admitted by a coarse `u16` distance threshold.

@@ -3,7 +3,9 @@
 use armpq::coordinator::{Client, IvfBackend, Server, ServerConfig};
 use armpq::datasets::SyntheticDataset;
 use armpq::eval::{ground_truth, recall_at_r};
-use armpq::index::{index_factory, Index, SearchParams, SearchRequest};
+use armpq::index::{
+    index_factory, Filter, Hit, Index, QueryKind, QueryRequest, SearchParams, SearchRequest,
+};
 use armpq::ivf::{IvfParams, IvfPq4};
 use armpq::pq::PqParams;
 use std::sync::Arc;
@@ -420,6 +422,269 @@ fn width_recall_monotonic_at_fixed_m() {
         "recall@10 not monotone in width: {recalls:?}"
     );
     assert!(recalls[2] > recalls[0], "8-bit must beat 2-bit: {recalls:?}");
+}
+
+// ---------------------------------------------------------------- queries
+//
+// The query_ tests below are the acceptance suite of the typed
+// QueryRequest/QueryResponse API: filter pushdown must be bit-identical to
+// post-filtering, range queries must hit the exact boundary, and both must
+// ride the whole serving stack. CI runs them as named steps on x86_64
+// (Portable vs SSSE3) and under QEMU aarch64 (Portable vs NEON).
+
+/// Acceptance: filtered query ≡ unfiltered-query-then-post-filter,
+/// bit-identical hits, across every width and every backend this host
+/// offers. Comparison uses complete admitted sets (k = admitted count,
+/// reservoir sized past n) so it is insensitive to tie order at a k
+/// boundary; distances are exact (rerank on).
+#[test]
+fn query_filtered_matches_postfilter_widths_and_backends() {
+    let ds = SyntheticDataset::gaussian(700, 5, 32, 1200);
+    let filter = Filter::id_range(150, 450); // 300 of 700
+    for bits in [2usize, 4, 8] {
+        let mut idx = index_factory(ds.dim, &format!("PQ8x{bits}fs")).unwrap();
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        for backend in armpq::simd::available_backends() {
+            let params = SearchParams::new().with_backend(backend).with_reservoir_factor(8);
+            let filtered = idx
+                .query(
+                    &QueryRequest::top_k(&ds.queries, 300)
+                        .with_filter(filter.clone())
+                        .with_params(params.clone()),
+                )
+                .unwrap();
+            let full = idx
+                .query(&QueryRequest::top_k(&ds.queries, 700).with_params(params.clone()))
+                .unwrap();
+            for qi in 0..5 {
+                let want: Vec<Hit> = full.hits[qi]
+                    .iter()
+                    .filter(|h| filter.matches(h.label))
+                    .copied()
+                    .collect();
+                assert_eq!(
+                    filtered.hits[qi], want,
+                    "x{bits}fs {backend:?} q{qi}: filtered ≠ post-filtered"
+                );
+                let st = &filtered.stats[qi];
+                assert_eq!(st.codes_scanned, 700);
+                assert!((st.filter_selectivity - 300.0 / 700.0).abs() < 1e-9);
+            }
+        }
+    }
+}
+
+/// Acceptance: flat-fastscan range queries with re-ranking return exactly
+/// the ids whose exact ADC distance is within the radius — verified
+/// against the scalar ADC oracle, on every backend, filtered and not.
+#[test]
+fn query_range_matches_exact_adc_oracle() {
+    use armpq::index::IndexPq4FastScan;
+    use armpq::pq::adc::adc_distances_all;
+    let ds = SyntheticDataset::gaussian(600, 4, 32, 1201);
+    let mut idx = IndexPq4FastScan::new(ds.dim, 8);
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let pq = idx.pq().unwrap();
+    let codes = idx.staging_codes();
+    for backend in armpq::simd::available_backends() {
+        let params = SearchParams::new().with_backend(backend);
+        for qi in 0..4 {
+            let q = &ds.queries[qi * ds.dim..(qi + 1) * ds.dim];
+            let luts = pq.compute_luts(q);
+            let all = adc_distances_all(pq, &luts, codes);
+            let mut sorted = all.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let radius = sorted[60]; // ~10%
+            let resp = idx
+                .query(&QueryRequest::range(q, radius).with_params(params.clone()))
+                .unwrap();
+            let row = &resp.hits[0];
+            let want = all.iter().filter(|&&d| d <= radius).count();
+            assert_eq!(row.len(), want, "{backend:?} q{qi}");
+            assert!(row.windows(2).all(|w| w[0].distance <= w[1].distance));
+            for h in row {
+                assert_eq!(h.distance, all[h.label as usize], "{backend:?} q{qi}");
+            }
+            // filtered range ≡ post-filtered range, bit-identical
+            let fresp = idx
+                .query(
+                    &QueryRequest::range(q, radius)
+                        .with_filter(Filter::predicate(|id| id % 2 == 0))
+                        .with_params(params.clone()),
+                )
+                .unwrap();
+            let fwant: Vec<Hit> = row.iter().filter(|h| h.label % 2 == 0).copied().collect();
+            assert_eq!(fresp.hits[0], fwant, "{backend:?} q{qi}");
+        }
+    }
+}
+
+/// Acceptance: empty and full filters return well-formed empty/complete
+/// responses on flat and IVF indexes alike.
+#[test]
+fn query_empty_and_full_filter_edges() {
+    let ds = SyntheticDataset::gaussian(900, 4, 32, 1202);
+    for spec in ["PQ8x4fs", "IVF8,PQ8x4fs,nprobe=8"] {
+        let mut idx = index_factory(ds.dim, spec).unwrap();
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        // empty: well-formed, zero hits, zero selectivity
+        let empty = idx
+            .query(&QueryRequest::top_k(&ds.queries, 5).with_filter(Filter::id_set(&[])))
+            .unwrap();
+        assert_eq!(empty.nq(), 4, "{spec}");
+        assert!(empty.hits.iter().all(|r| r.is_empty()), "{spec}");
+        assert!(empty.stats.iter().all(|s| s.filter_selectivity == 0.0), "{spec}");
+        // full: identical to no filter at all
+        let full = idx
+            .query(
+                &QueryRequest::top_k(&ds.queries, 5)
+                    .with_filter(Filter::id_range(i64::MIN / 2, i64::MAX / 2)),
+            )
+            .unwrap();
+        let bare = idx.query(&QueryRequest::top_k(&ds.queries, 5)).unwrap();
+        assert_eq!(full.hits, bare.hits, "{spec}");
+        // range with an empty filter is empty too, not an error
+        let r = idx
+            .query(&QueryRequest::range(&ds.queries, 1e9).with_filter(Filter::id_range(5, 5)))
+            .unwrap();
+        assert!(r.hits.iter().all(|row| row.is_empty()), "{spec}");
+    }
+}
+
+/// The search shim is a thin view over query: identical results, padded.
+#[test]
+fn query_search_shim_equivalence() {
+    let ds = SyntheticDataset::gaussian(800, 6, 32, 1203);
+    for spec in ["Flat", "PQ8x4", "PQ8x4fs", "IVF8,PQ8x4fs,nprobe=4"] {
+        let mut idx = index_factory(ds.dim, spec).unwrap();
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        let via_shim = idx.search(&ds.queries, 7, None).unwrap();
+        let via_query =
+            idx.query(&QueryRequest::top_k(&ds.queries, 7)).unwrap().into_search_result(7);
+        assert_eq!(via_shim.labels, via_query.labels, "{spec}");
+        assert_eq!(via_shim.distances, via_query.distances, "{spec}");
+    }
+}
+
+/// Filtered and range queries through the sharded router: filters push
+/// down into every shard, range hits merge across shards in order, and a
+/// label living on both shards (duplicate add) appears exactly once.
+#[test]
+fn query_sharded_filter_range_and_dedupe() {
+    use armpq::coordinator::{SearchBackend, ShardedBackend};
+    let ds = SyntheticDataset::sift_like(2_000, 6, 1204);
+    let dim = ds.dim;
+    let per = 1_000usize;
+    let mut shards: Vec<Arc<dyn Index>> = Vec::new();
+    for s in 0..2 {
+        let mut idx = IvfPq4::new(dim, IvfParams::new(4), PqParams::new_4bit(8));
+        idx.train(&ds.train).unwrap();
+        let slice = &ds.base[s * per * dim..(s + 1) * per * dim];
+        // shards overlap on id 500: the duplicate-add scenario
+        let mut ids: Vec<i64> = (s * per..(s + 1) * per).map(|i| i as i64).collect();
+        if s == 1 {
+            ids[0] = 500;
+        }
+        idx.add_with_ids(slice, &ids).unwrap();
+        idx.nprobe = 4;
+        idx.fastscan.reservoir_factor = 32;
+        idx.seal().unwrap();
+        shards.push(Arc::new(armpq::index::IndexIvfPq4::from_inner(idx)));
+    }
+    let router = ShardedBackend::from_indexes(shards).unwrap();
+    // filtered top-k: labels obey the filter after the merge, no dupes
+    let req = QueryRequest::top_k(&ds.queries, 10).with_filter(Filter::id_range(0, 1_500));
+    let resp = router.query_batch(&req).unwrap();
+    for (qi, row) in resp.hits.iter().enumerate() {
+        assert!(row.iter().all(|h| (0..1_500).contains(&h.label)), "q{qi}: {row:?}");
+        let mut seen = std::collections::HashSet::new();
+        assert!(row.iter().all(|h| seen.insert(h.label)), "q{qi}: duplicate label");
+    }
+    // merged stats aggregate scan work across shards
+    assert!(resp.stats[0].codes_scanned >= 2_000);
+    // range: merged variable-length hits, ascending, deduped
+    let rreq = QueryRequest::range(&ds.queries, 150_000.0);
+    let rresp = router.query_batch(&rreq).unwrap();
+    for row in &rresp.hits {
+        assert!(row.windows(2).all(|w| w[0].distance <= w[1].distance));
+        let mut seen = std::collections::HashSet::new();
+        assert!(row.iter().all(|h| seen.insert(h.label)), "range duplicate label");
+    }
+}
+
+/// Filtered and range queries end-to-end over TCP: kernel → index →
+/// batcher → line-JSON protocol → client, with per-request stats.
+#[test]
+fn query_serving_stack_filter_and_range() {
+    let ds = SyntheticDataset::sift_like(3_000, 10, 1205);
+    let mut idx = IvfPq4::new(ds.dim, IvfParams::new(16), PqParams::new_4bit(8));
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.nprobe = 16;
+    idx.fastscan.reservoir_factor = 32;
+    let backend = Arc::new(IvfBackend::new(idx).unwrap());
+    let server = Server::start(backend, ServerConfig::default()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // filtered top-k: every hit obeys the filter; stats flow back
+    let (hits, stats) = client
+        .query(
+            ds.query(0),
+            &QueryKind::TopK { k: 10 },
+            Some(&Filter::id_range(0, 1_000)),
+            Some(&SearchParams::new().with_nprobe(16).with_reservoir_factor(64)),
+        )
+        .unwrap();
+    assert!(!hits.is_empty());
+    assert!(hits.iter().all(|h| (0..1_000).contains(&h.label)), "{hits:?}");
+    assert!(stats.codes_scanned > 0);
+    assert!(stats.filter_selectivity > 0.0 && stats.filter_selectivity <= 1.0);
+
+    // filtered ≡ post-filter through the whole stack: a full-k unfiltered
+    // query post-filtered must agree on the leading hits (distances are
+    // exact ADC and survive the JSON round-trip bit-exactly)
+    let (all_hits, _) = client
+        .query(
+            ds.query(0),
+            &QueryKind::TopK { k: 1_000 },
+            None,
+            Some(&SearchParams::new().with_nprobe(16).with_reservoir_factor(64)),
+        )
+        .unwrap();
+    let want: Vec<f32> = all_hits
+        .iter()
+        .filter(|h| (0..1_000).contains(&h.label))
+        .take(hits.len())
+        .map(|h| h.distance)
+        .collect();
+    let got: Vec<f32> = hits.iter().map(|h| h.distance).collect();
+    assert_eq!(got, want, "served filtered ≠ post-filtered");
+
+    // range query over the wire
+    let radius = all_hits[all_hits.len() / 10].distance;
+    let (rhits, _) = client
+        .query(ds.query(0), &QueryKind::Range { radius }, None, None)
+        .unwrap();
+    assert!(!rhits.is_empty());
+    assert!(rhits.iter().all(|h| h.distance <= radius));
+    assert!(rhits.windows(2).all(|w| w[0].distance <= w[1].distance));
+
+    // legacy search verb still serves unchanged alongside
+    let (d, l, _) = client.search(ds.query(1), 5).unwrap();
+    assert_eq!((d.len(), l.len()), (5, 5));
+    // and the stats verb exposes the new histograms
+    let sj = client.stats().unwrap();
+    assert!(sj.get("codes_scanned_mean").unwrap().as_f64().unwrap() > 0.0);
+    assert!(sj.get("filter_selectivity_mean").is_some());
+    server.stop();
 }
 
 /// The serving stack accepts width-parametric indexes end to end: a
