@@ -1,11 +1,28 @@
 //! Paper Fig. 2a: PQ vs 4-bit PQ on SIFT1M(-like), recall@1 vs QPS, M sweep.
-//! Scale with ARMPQ_BENCH_N (default 100k; paper used 1M).
-use armpq::experiments::run_fig2;
+//! Scale with ARMPQ_BENCH_N (default 100k; paper used 1M). The threads
+//! axis (ARMPQ_BENCH_THREADS, default `1,2,4,ncpu`) appends the executor
+//! thread-scaling curve on the same dataset.
+use armpq::experiments::{bench_env_usize, run_fig2, run_thread_scaling, thread_axis_from_env};
+use armpq::pq::CodeWidth;
 
 fn main() {
-    let n: usize = std::env::var("ARMPQ_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100_000);
-    let nq: usize = std::env::var("ARMPQ_BENCH_NQ").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    let n = bench_env_usize("ARMPQ_BENCH_N", 100_000);
+    let nq = bench_env_usize("ARMPQ_BENCH_NQ", 100);
     let t = run_fig2("sift", n, nq, &[8, 16, 32, 64], 5, 20220501).expect("fig2a");
+    t.print();
+    t.save().expect("save");
+    let t = run_thread_scaling(
+        "sift",
+        n,
+        nq,
+        (n as f64).sqrt() as usize,
+        16,
+        CodeWidth::W4,
+        &thread_axis_from_env(),
+        5,
+        20220501,
+    )
+    .expect("fig2a threads");
     t.print();
     t.save().expect("save");
 }

@@ -3,8 +3,12 @@
 //! over the Quicker-ADC width axis (2-/4-/8-bit codes), plus the
 //! filter-pushdown sweep: masked scan vs scan-then-post-filter at
 //! 1/10/50/100% selectivity (`--filter-selectivity 1,10,50,100` and
-//! `--filter-n` to override).
-use armpq::experiments::{run_filter_micro, run_kernel_micro};
+//! `--filter-n` to override), plus the executor thread-scaling curve
+//! (`--threads 1,2,4` — default `1, 2, 4, ncpu`): batch fan-out and
+//! single-query multi-list fan-out per width.
+use armpq::experiments::{
+    default_thread_axis, run_filter_micro, run_kernel_micro, run_thread_scaling,
+};
 use armpq::pq::CodeWidth;
 use armpq::util::args::Args;
 
@@ -12,6 +16,8 @@ fn main() {
     let args = Args::from_env();
     let sels = args.get_usize_list("filter-selectivity", &[1, 10, 50, 100]);
     let filter_n = args.get_usize("filter-n", 320_000);
+    let threads = default_thread_axis(&args.get_usize_list("threads", &[]));
+    let scale_n = args.get_usize("scale-n", 100_000);
     for width in CodeWidth::ALL {
         for m in [8, 16, 32, 64] {
             let t = run_kernel_micro(m, width);
@@ -19,6 +25,10 @@ fn main() {
             t.save().expect("save");
         }
         let t = run_filter_micro(filter_n, 16, width, &sels, 20220728);
+        t.print();
+        t.save().expect("save");
+        let t = run_thread_scaling("sift", scale_n, 64, 64, 16, width, &threads, 3, 20260728)
+            .expect("thread scaling");
         t.print();
         t.save().expect("save");
     }

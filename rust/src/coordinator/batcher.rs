@@ -221,6 +221,7 @@ type GroupKey = (QueryKind, Option<Filter>, Option<SearchParams>);
 fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<PendingQuery>) {
     metrics.record_batch(batch.len());
     let batch_size = batch.len();
+    let batch_t0 = Instant::now();
     // group by (kind, filter, params) so one backend call serves each
     // combination — per-request kinds/filters/overrides must never leak
     // into a neighbor's query
@@ -287,6 +288,11 @@ fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<Pend
             }
         }
     }
+    // whole-window execution latency (all groups): the wire-visible view
+    // of the executor's thread win at a given batch size
+    metrics
+        .batch_latency_us
+        .record((batch_t0.elapsed().as_micros() as u64).max(1));
 }
 
 #[cfg(test)]

@@ -62,6 +62,11 @@ pub struct Metrics {
     pub queue_us: UsHistogram,
     /// backend search time per batch
     pub service_us: UsHistogram,
+    /// whole-batch execution latency (all groups of one window, end to
+    /// end) — the histogram that makes the executor's thread win
+    /// measurable from the wire: at fixed batch size, more threads → the
+    /// distribution shifts left
+    pub batch_latency_us: UsHistogram,
     /// end-to-end per request
     pub e2e_us: UsHistogram,
     /// per-request codes scanned (log2 buckets; sourced from
@@ -70,6 +75,11 @@ pub struct Metrics {
     /// per-request filter selectivity in permille (0–1000; 1000 =
     /// unfiltered)
     pub filter_selectivity_pm: UsHistogram,
+    /// widest executor fan-out observed on any request (gauge, max)
+    pub exec_threads: AtomicU64,
+    /// executor scratch-arena high-water bytes (gauge, max) — the
+    /// steady-state working set the allocation-free scan path reuses
+    pub scratch_high_water_bytes: AtomicU64,
     /// recent batch sizes (bounded ring, for mean occupancy)
     batch_sizes: Mutex<Vec<usize>>,
 }
@@ -80,11 +90,14 @@ impl Metrics {
     }
 
     /// Fold one request's [`crate::index::query::QueryStats`] into the
-    /// scan-work histograms.
+    /// scan-work histograms and concurrency gauges.
     pub fn record_query_stats(&self, stats: &crate::index::query::QueryStats) {
         self.codes_scanned.record(stats.codes_scanned as u64);
         let pm = (stats.filter_selectivity.clamp(0.0, 1.0) * 1000.0).round() as u64;
         self.filter_selectivity_pm.record(pm);
+        self.exec_threads.fetch_max(stats.threads_used as u64, Ordering::Relaxed);
+        self.scratch_high_water_bytes
+            .fetch_max(stats.scratch_bytes as u64, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -115,6 +128,17 @@ impl Metrics {
             .set("mean_batch_size", Json::Num(self.mean_batch_size()))
             .set("queue_mean_us", Json::Num(self.queue_us.mean_us()))
             .set("service_mean_us", Json::Num(self.service_us.mean_us()))
+            .set("batch_latency_mean_us", Json::Num(self.batch_latency_us.mean_us()))
+            .set("batch_latency_p50_us", Json::Num(self.batch_latency_us.percentile_us(50.0)))
+            .set("batch_latency_p95_us", Json::Num(self.batch_latency_us.percentile_us(95.0)))
+            .set(
+                "exec_threads",
+                Json::Num(self.exec_threads.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "scratch_high_water_bytes",
+                Json::Num(self.scratch_high_water_bytes.load(Ordering::Relaxed) as f64),
+            )
             .set("e2e_mean_us", Json::Num(self.e2e_us.mean_us()))
             .set("e2e_p50_us", Json::Num(self.e2e_us.percentile_us(50.0)))
             .set("e2e_p95_us", Json::Num(self.e2e_us.percentile_us(95.0)))
@@ -182,6 +206,10 @@ mod tests {
             "service_mean_us",
             "codes_scanned_mean",
             "filter_selectivity_mean",
+            "batch_latency_p50_us",
+            "batch_latency_p95_us",
+            "exec_threads",
+            "scratch_high_water_bytes",
         ] {
             assert!(j.get(key).is_some(), "{key}");
         }
@@ -197,13 +225,20 @@ mod tests {
             codes_scanned: 4096,
             lists_probed: 8,
             filter_selectivity: 0.25,
+            threads_used: 4,
+            scratch_bytes: 1 << 16,
         });
         m.record_query_stats(&QueryStats {
             codes_scanned: 4096,
             lists_probed: 8,
             filter_selectivity: 0.75,
+            threads_used: 2,
+            scratch_bytes: 1 << 14,
         });
         assert_eq!(m.codes_scanned.count(), 2);
+        // gauges keep the maxima
+        assert_eq!(m.exec_threads.load(Ordering::Relaxed), 4);
+        assert_eq!(m.scratch_high_water_bytes.load(Ordering::Relaxed), 1 << 16);
         assert!((m.codes_scanned.mean_us() - 4096.0).abs() < 1e-9);
         let j = m.to_json();
         let sel = j.get("filter_selectivity_mean").unwrap().as_f64().unwrap();

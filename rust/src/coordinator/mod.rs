@@ -39,6 +39,15 @@
 //! paper's register-resident tables. LUTs depend only on the query
 //! vectors, so the reuse applies to every kind/filter combination.
 //!
+//! **One shared executor:** every index-backed backend carries a
+//! [`crate::exec::QueryExecutor`] (defaulting to the process-global one)
+//! and threads it through `query_batch` — batch fan-out across queries,
+//! intra-query multi-list fan-out for lone large-`nprobe` IVF queries,
+//! per-thread scratch arenas reused allocation-free in steady state. The
+//! `stats` verb exposes the resulting concurrency (`exec_threads`,
+//! `scratch_high_water_bytes`) plus a whole-window `batch_latency_us`
+//! histogram so the thread win is measurable from the wire.
+//!
 //! Everything is std-thread + mpsc (no tokio in the vendored crate set);
 //! on the paper's workload (sub-ms searches) OS threads are not the
 //! bottleneck — the batcher exists to amortize LUT construction across

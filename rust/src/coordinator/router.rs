@@ -4,6 +4,7 @@
 //! each like the paper's Table 1 configuration).
 
 use super::service::{IndexBackend, SearchBackend};
+use crate::exec::QueryExecutor;
 use crate::index::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use crate::index::{Index, SearchParams};
 use crate::Result;
@@ -48,11 +49,25 @@ impl ShardedBackend {
         Ok(Self { shards, dim, shared_luts })
     }
 
-    /// Convenience: shard over sealed indexes held as `Arc<dyn Index>`.
+    /// Convenience: shard over sealed indexes held as `Arc<dyn Index>`,
+    /// all on the process-global executor (one thread budget + scratch
+    /// pool shared across the fan-out, not one per shard).
     pub fn from_indexes(indexes: Vec<Arc<dyn Index>>) -> Result<Self> {
+        Self::from_indexes_with_executor(indexes, QueryExecutor::global().clone())
+    }
+
+    /// [`ShardedBackend::from_indexes`] on an explicit executor shared by
+    /// every shard backend.
+    pub fn from_indexes_with_executor(
+        indexes: Vec<Arc<dyn Index>>,
+        exec: QueryExecutor,
+    ) -> Result<Self> {
         let shards = indexes
             .into_iter()
-            .map(|idx| Ok(Arc::new(IndexBackend::new(idx)?) as Arc<dyn SearchBackend>))
+            .map(|idx| {
+                let backend = IndexBackend::with_executor(idx, exec.clone())?;
+                Ok(Arc::new(backend) as Arc<dyn SearchBackend>)
+            })
             .collect::<Result<Vec<_>>>()?;
         Self::new(shards)
     }
@@ -122,13 +137,23 @@ fn merge_rows(rows: Vec<&[Hit]>, limit: Option<usize>) -> Vec<Hit> {
 }
 
 /// Merge per-shard stats of one query: scan work adds up, selectivity is
-/// weighted by how many codes each shard considered.
+/// weighted by how many codes each shard considered, and the concurrency
+/// gauges (threads used, scratch high-water) take the per-shard maximum —
+/// they are capacity facts, not additive work.
 fn merge_stats(per_shard: Vec<&QueryStats>) -> QueryStats {
-    let mut out = QueryStats { codes_scanned: 0, lists_probed: 0, filter_selectivity: 1.0 };
+    let mut out = QueryStats {
+        codes_scanned: 0,
+        lists_probed: 0,
+        filter_selectivity: 1.0,
+        threads_used: 1,
+        scratch_bytes: 0,
+    };
     let mut weighted = 0.0f64;
     for s in &per_shard {
         out.codes_scanned += s.codes_scanned;
         out.lists_probed += s.lists_probed;
+        out.threads_used = out.threads_used.max(s.threads_used);
+        out.scratch_bytes = out.scratch_bytes.max(s.scratch_bytes);
         weighted += s.filter_selectivity * s.codes_scanned as f64;
     }
     if out.codes_scanned > 0 {

@@ -212,7 +212,9 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
             stats
                 .set("codes_scanned", Json::Num(resp.stats.codes_scanned as f64))
                 .set("lists_probed", Json::Num(resp.stats.lists_probed as f64))
-                .set("filter_selectivity", Json::Num(resp.stats.filter_selectivity));
+                .set("filter_selectivity", Json::Num(resp.stats.filter_selectivity))
+                .set("threads_used", Json::Num(resp.stats.threads_used as f64))
+                .set("scratch_bytes", Json::Num(resp.stats.scratch_bytes as f64));
             let mut body = Json::obj();
             body.set("labels", Json::Arr(resp.labels.iter().map(|&l| Json::Num(l as f64)).collect()))
                 .set(
@@ -477,6 +479,8 @@ impl Client {
                 .get("filter_selectivity")
                 .and_then(|x| x.as_f64())
                 .unwrap_or(1.0),
+            threads_used: s.get("threads_used").and_then(|x| x.as_usize()).unwrap_or(1),
+            scratch_bytes: s.get("scratch_bytes").and_then(|x| x.as_usize()).unwrap_or(0),
         });
         Ok((hits, stats.unwrap_or_default()))
     }

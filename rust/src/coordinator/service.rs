@@ -3,7 +3,14 @@
 //! Backends are immutable once constructed: `search_batch` takes `&self`
 //! plus optional per-request [`SearchParams`], so any backend can serve
 //! concurrent batches without a lock.
+//!
+//! Every index-backed backend carries a [`QueryExecutor`] fixed at
+//! construction (defaulting to the process-global one) and threads it
+//! through `query_batch` — the coordinator shares ONE executor (thread
+//! budget + scratch pool) across all backends and shards instead of each
+//! layer improvising its own parallelism.
 
+use crate::exec::QueryExecutor;
 use crate::index::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use crate::index::{params, Index, SearchParams};
 use crate::ivf::IvfPq4;
@@ -102,25 +109,39 @@ pub(crate) fn padded_to_response(d: &[f32], l: &[i64], k: usize) -> QueryRespons
 /// fanned out across threads lock-free.
 pub struct IndexBackend {
     index: Arc<dyn Index>,
+    exec: QueryExecutor,
 }
 
 impl IndexBackend {
-    /// Wraps a trained, sealed index. Sealing is validated up front with a
-    /// one-query probe search, so a forgotten `seal()` fails here at
-    /// construction instead of on every request at serve time.
+    /// Wraps a trained, sealed index on the process-global executor.
+    /// Sealing is validated up front with a one-query probe search, so a
+    /// forgotten `seal()` fails here at construction instead of on every
+    /// request at serve time.
     pub fn new(index: Arc<dyn Index>) -> Result<Self> {
+        Self::with_executor(index, QueryExecutor::global().clone())
+    }
+
+    /// [`IndexBackend::new`] on an explicit (typically shared) executor —
+    /// how the shard router threads one thread-budget + scratch pool
+    /// through every shard.
+    pub fn with_executor(index: Arc<dyn Index>, exec: QueryExecutor) -> Result<Self> {
         if !index.is_trained() {
             return Err(Error::Serve("index backend requires a trained index".into()));
         }
         let probe = vec![0.0f32; index.dim()];
-        if let Err(e) = index.search(&probe, 1, None) {
+        if let Err(e) = index.query_exec(&QueryRequest::top_k(&probe, 1), &exec) {
             return Err(Error::Serve(format!("index backend probe search failed: {e}")));
         }
-        Ok(Self { index })
+        Ok(Self { index, exec })
     }
 
     pub fn index(&self) -> &Arc<dyn Index> {
         &self.index
+    }
+
+    /// The executor this backend runs queries on.
+    pub fn executor(&self) -> &QueryExecutor {
+        &self.exec
     }
 }
 
@@ -135,16 +156,22 @@ impl SearchBackend for IndexBackend {
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        let r = self.index.search(queries, k, params)?;
+        let req = QueryRequest {
+            queries,
+            kind: QueryKind::TopK { k },
+            filter: None,
+            params: params.cloned(),
+        };
+        let r = self.index.query_exec(&req, &self.exec)?.into_search_result(k);
         Ok((r.distances, r.labels))
     }
 
     fn query_batch(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
-        self.index.query(req)
+        self.index.query_exec(req, &self.exec)
     }
 
     fn query_batch_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
-        self.index.query_with_luts(req, luts)
+        self.index.query_with_luts_exec(req, luts, &self.exec)
     }
 
     fn lut_signature(&self) -> Option<u64> {
@@ -162,7 +189,13 @@ impl SearchBackend for IndexBackend {
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        let r = self.index.search_with_luts(queries, luts, k, params)?;
+        let req = QueryRequest {
+            queries,
+            kind: QueryKind::TopK { k },
+            filter: None,
+            params: params.cloned(),
+        };
+        let r = self.index.query_with_luts_exec(&req, luts, &self.exec)?.into_search_result(k);
         Ok((r.distances, r.labels))
     }
 
@@ -174,13 +207,20 @@ impl SearchBackend for IndexBackend {
 /// Backend over a sealed [`IvfPq4`] index (the Table 1 configuration).
 pub struct IvfBackend {
     index: IvfPq4,
+    exec: QueryExecutor,
 }
 
 impl IvfBackend {
-    /// Takes a trained+filled index; seals it for immutable serving.
-    pub fn new(mut index: IvfPq4) -> Result<Self> {
+    /// Takes a trained+filled index; seals it for immutable serving on
+    /// the process-global executor.
+    pub fn new(index: IvfPq4) -> Result<Self> {
+        Self::with_executor(index, QueryExecutor::global().clone())
+    }
+
+    /// [`IvfBackend::new`] on an explicit (typically shared) executor.
+    pub fn with_executor(mut index: IvfPq4, exec: QueryExecutor) -> Result<Self> {
         index.seal()?;
-        Ok(Self { index })
+        Ok(Self { index, exec })
     }
 
     pub fn index(&self) -> &IvfPq4 {
@@ -199,30 +239,44 @@ impl SearchBackend for IvfBackend {
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        let (nprobe, ef_search, fs) =
-            params::effective_ivf(params, self.index.nprobe, &self.index.fastscan);
-        self.index.search_with(queries, k, nprobe, ef_search, &fs)
+        let resp = self.query_batch(&QueryRequest {
+            queries,
+            kind: QueryKind::TopK { k },
+            filter: None,
+            params: params.cloned(),
+        })?;
+        let r = resp.into_search_result(k);
+        Ok((r.distances, r.labels))
     }
 
     fn query_batch(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
         let (nprobe, ef_search, fs) =
             params::effective_ivf(req.params.as_ref(), self.index.nprobe, &self.index.fastscan);
-        let (hits, stats) =
-            self.index.query_with(req.queries, &req.kind, req.filter.as_ref(), nprobe, ef_search, &fs)?;
+        let (hits, stats) = self.index.query_exec_with(
+            req.queries,
+            None,
+            &req.kind,
+            req.filter.as_ref(),
+            nprobe,
+            ef_search,
+            &fs,
+            &self.exec,
+        )?;
         Ok(QueryResponse { hits, stats })
     }
 
     fn query_batch_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
         let (nprobe, ef_search, fs) =
             params::effective_ivf(req.params.as_ref(), self.index.nprobe, &self.index.fastscan);
-        let (hits, stats) = self.index.query_with_luts(
+        let (hits, stats) = self.index.query_exec_with(
             req.queries,
-            luts,
+            Some(luts),
             &req.kind,
             req.filter.as_ref(),
             nprobe,
             ef_search,
             &fs,
+            &self.exec,
         )?;
         Ok(QueryResponse { hits, stats })
     }
@@ -242,9 +296,17 @@ impl SearchBackend for IvfBackend {
         k: usize,
         params: Option<&SearchParams>,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        let (nprobe, ef_search, fs) =
-            params::effective_ivf(params, self.index.nprobe, &self.index.fastscan);
-        self.index.search_with_luts(queries, luts, k, nprobe, ef_search, &fs)
+        let resp = self.query_batch_with_luts(
+            &QueryRequest {
+                queries,
+                kind: QueryKind::TopK { k },
+                filter: None,
+                params: params.cloned(),
+            },
+            luts,
+        )?;
+        let r = resp.into_search_result(k);
+        Ok((r.distances, r.labels))
     }
 
     fn describe(&self) -> String {

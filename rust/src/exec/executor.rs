@@ -1,0 +1,182 @@
+//! [`QueryExecutor`]: the stateless engine that runs a
+//! [`crate::exec::QueryPlan`] across worker threads with pooled scratch.
+//!
+//! The executor owns exactly two things: a thread budget and a
+//! [`ScratchPool`]. It holds **no query state** — plans are read-only,
+//! scratch is per-worker — so one executor is safely shared by every
+//! index, shard and server connection in the process (`Arc` inside,
+//! `Clone` is cheap). [`QueryExecutor::global`] is the process-wide
+//! default, sized by `ARMPQ_THREADS` / available parallelism.
+//!
+//! # Determinism
+//!
+//! `run_batch`/`run_tasks` only distribute work; the per-item closures are
+//! pure functions of the item index (scratch is workspace, never carried
+//! state), and results land in item order. Together with the per-list IVF
+//! scan semantics (see [`crate::ivf`]) this makes query results
+//! **bit-identical for every thread count** — `ARMPQ_THREADS=1` and `=4`
+//! must (and do, see the `threads_` integration tests) return the same
+//! bytes.
+
+use super::scratch::{ScratchGuard, ScratchPool};
+use crate::index::query::QueryStats;
+use crate::util::threads::parallel_map_init;
+use std::sync::{Arc, OnceLock};
+
+#[derive(Debug)]
+struct ExecInner {
+    threads: usize,
+    pool: ScratchPool,
+}
+
+/// Shared, stateless query engine: thread budget + scratch pool.
+#[derive(Clone, Debug)]
+pub struct QueryExecutor {
+    inner: Arc<ExecInner>,
+}
+
+impl QueryExecutor {
+    /// An executor with an explicit thread budget (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            inner: Arc::new(ExecInner {
+                threads: threads.max(1),
+                pool: ScratchPool::default(),
+            }),
+        }
+    }
+
+    /// The process-wide default executor (`ARMPQ_THREADS` overrides the
+    /// host's available parallelism; resolved once at first use).
+    pub fn global() -> &'static QueryExecutor {
+        static GLOBAL: OnceLock<QueryExecutor> = OnceLock::new();
+        GLOBAL.get_or_init(|| QueryExecutor::new(crate::util::threads::default_threads()))
+    }
+
+    /// Configured thread budget.
+    pub fn threads(&self) -> usize {
+        self.inner.threads
+    }
+
+    /// Worker threads a fan-out of `n` items actually uses.
+    pub fn threads_for(&self, n: usize) -> usize {
+        self.inner.threads.min(n.max(1))
+    }
+
+    /// Scratch-arena high-water mark in bytes (see
+    /// [`ScratchPool::high_water_bytes`]).
+    pub fn scratch_high_water_bytes(&self) -> usize {
+        self.inner.pool.high_water_bytes()
+    }
+
+    /// Check one scratch arena out for serial use (e.g. a small batch that
+    /// parallelizes *inside* each query instead of across queries).
+    pub fn checkout_scratch(&self) -> ScratchGuard<'_> {
+        self.inner.pool.checkout()
+    }
+
+    /// Run `f(i, scratch)` for `i ∈ [0, n)` across the thread budget,
+    /// collecting results in item order. Each worker checks exactly one
+    /// scratch arena out of the pool for its whole chunk.
+    pub fn run_batch<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut super::ScanScratch) -> T + Sync,
+    {
+        parallel_map_init(
+            n,
+            self.threads_for(n),
+            || self.inner.pool.checkout(),
+            |i, guard| f(i, &mut **guard),
+        )
+    }
+
+    /// [`QueryExecutor::run_batch`] under its intra-query name: fan one
+    /// query's independent scan tasks (e.g. probed IVF lists) out over the
+    /// budget, results in task order.
+    pub fn run_tasks<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut super::ScanScratch) -> T + Sync,
+    {
+        self.run_batch(n, f)
+    }
+
+    /// Stamp the concurrency facts into a response's stats: `width` is the
+    /// fan-out width the call used (nq for batch fan-out, probe count for
+    /// intra-query fan-out).
+    pub fn stamp_stats(&self, stats: &mut [QueryStats], width: usize) {
+        let threads_used = self.threads_for(width);
+        let scratch_bytes = self.scratch_high_water_bytes();
+        for s in stats {
+            s.threads_used = threads_used;
+            s.scratch_bytes = scratch_bytes;
+        }
+    }
+
+    /// Diagnostic: arenas constructed over the pool's lifetime.
+    pub fn scratch_arenas_created(&self) -> usize {
+        self.inner.pool.arenas_created()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_batch_ordered_and_parallel() {
+        let exec = QueryExecutor::new(4);
+        let v = exec.run_batch(100, |i, _s| i * 3);
+        assert_eq!(v, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+        assert_eq!(exec.threads(), 4);
+        assert_eq!(exec.threads_for(2), 2);
+        assert_eq!(exec.threads_for(0), 1);
+    }
+
+    #[test]
+    fn scratch_pool_bounded_by_concurrency() {
+        let exec = QueryExecutor::new(4);
+        for _ in 0..8 {
+            let _ = exec.run_batch(64, |i, s| {
+                let mut v = s.take_items();
+                v.push((i as u16, i as i64));
+                s.put_items(v);
+                i
+            });
+        }
+        // at most one arena per worker slot, ever — reuse across calls
+        assert!(
+            exec.scratch_arenas_created() <= 4,
+            "arenas {} > thread budget",
+            exec.scratch_arenas_created()
+        );
+        assert!(exec.scratch_high_water_bytes() > 0);
+    }
+
+    #[test]
+    fn clones_share_the_pool() {
+        let a = QueryExecutor::new(2);
+        let b = a.clone();
+        let _ = a.run_batch(8, |i, _| i);
+        let before = a.scratch_arenas_created();
+        let _ = b.run_batch(8, |i, _| i);
+        assert_eq!(b.scratch_arenas_created(), before, "clone built its own arenas");
+    }
+
+    #[test]
+    fn global_is_singleton() {
+        let a = QueryExecutor::global();
+        let b = QueryExecutor::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.threads() >= 1);
+    }
+
+    #[test]
+    fn stamp_stats_fills_concurrency_fields() {
+        let exec = QueryExecutor::new(8);
+        let mut stats = vec![QueryStats::default(); 3];
+        exec.stamp_stats(&mut stats, 2);
+        assert!(stats.iter().all(|s| s.threads_used == 2));
+    }
+}

@@ -1,0 +1,55 @@
+//! The plan/execute query layer: one execution engine for every index.
+//!
+//! Before this layer, each index (and the IVF layer and the coordinator
+//! above them) improvised its own per-query buffers and its own loop over
+//! the batch — allocation-heavy and single-threaded. This module splits
+//! query execution into three pieces with sharp ownership rules:
+//!
+//! * **[`QueryPlan`] / [`MaskPlan`]** — everything resolved *once per
+//!   request*: effective parameters (per-request overrides folded over
+//!   index defaults), the filter compiled into block-aligned kernel masks
+//!   ([`MaskPlan`]: eager for flat indexes, lazy per inverted list for
+//!   IVF), and the precomputed-LUT recipe. Read-only; shared by all
+//!   workers. The flat fastscan index builds a [`QueryPlan`] wholesale;
+//!   the IVF layer resolves the same ingredients (escalated probe width +
+//!   [`MaskPlan`] + LUT slices) against its list-structured state.
+//! * **[`ScanScratch`] / [`ScratchPool`]** — everything *per worker*: f32
+//!   LUT staging, quantized kernel-table bytes, reservoir/range candidate
+//!   storage, re-rank heap + code buffers, the coarse probe list. Arenas
+//!   are pooled, grown, never shrunk: after warmup the scan path performs
+//!   **zero heap allocations** for its working set (the response rows are
+//!   the only steady-state allocation).
+//! * **[`QueryExecutor`]** — the stateless engine: a thread budget plus
+//!   the scratch pool. Query batches fan out across workers
+//!   ([`QueryExecutor::run_batch`]); a single large-`nprobe` IVF query
+//!   fans its probed lists out instead ([`QueryExecutor::run_tasks`]).
+//!   Executors are `Arc`-backed and shared — the coordinator threads one
+//!   executor through every backend, shard and connection.
+//!
+//! # Why results cannot depend on the thread count
+//!
+//! Parallel helpers only distribute work. The per-item closures are pure
+//! functions of the item index, results land in item order, and the IVF
+//! layer defines its candidate set *per probed list* (each list scanned
+//! with its own reservoir, merged in probe order through one final
+//! deterministic selection) rather than through a cross-list threshold
+//! that would depend on scan interleaving. `ARMPQ_THREADS=1` and
+//! `ARMPQ_THREADS=4` therefore return bit-identical results — enforced by
+//! the `threads_` integration tests across every backend × width × query
+//! kind × filter.
+//!
+//! This preserves the PR-2 invariant from the other side: indexes stay
+//! sealed `Arc<dyn Index>` values searched through `&self`, and the
+//! executor holds no per-query state, so the pair is lock-free end to end
+//! (the scratch pool's mutex is touched twice per worker-chunk, never per
+//! code).
+
+pub mod executor;
+pub mod plan;
+pub mod scan;
+pub mod scratch;
+
+pub use executor::QueryExecutor;
+pub use plan::{MaskPlan, QueryPlan};
+pub use scan::{range_packed, topk_packed};
+pub use scratch::{ScanScratch, ScratchGuard, ScratchPool};

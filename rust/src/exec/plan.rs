@@ -1,0 +1,149 @@
+//! [`QueryPlan`]: everything about a request that is resolved **once**,
+//! before any worker runs.
+//!
+//! A plan owns no query-dependent state: per-request parameter overrides
+//! are folded into concrete values ([`QueryPlan::fs`], [`QueryPlan::nprobe`]
+//! — already selectivity-escalated by the index), the filter is compiled
+//! into block-aligned kernel masks ([`MaskPlan`]), and precomputed batch
+//! LUTs are sliced per query. Workers read the plan immutably from any
+//! thread; everything mutable lives in their
+//! [`crate::exec::ScanScratch`] arenas.
+
+use crate::index::query::{Filter, QueryKind};
+use crate::pq::fastscan::{FastScanParams, FilterMask};
+use std::sync::OnceLock;
+
+/// The compiled filter of a plan.
+///
+/// * Flat indexes compile the filter into one position-space mask over the
+///   whole packed set, eagerly (it is shared by every query of the batch).
+/// * IVF indexes compile per-list masks lazily — only probed lists pay —
+///   through a `OnceLock` per list, so concurrent workers build each mask
+///   at most once and share it without locks on the read path.
+#[derive(Debug, Default)]
+pub enum MaskPlan {
+    /// No filter on this request.
+    #[default]
+    None,
+    /// One mask over the whole scan domain (flat indexes).
+    Flat(FilterMask),
+    /// One lazily-built mask per inverted list (IVF indexes).
+    Lists(Vec<OnceLock<FilterMask>>),
+}
+
+impl MaskPlan {
+    /// Compile a flat-domain mask (position space over `n` with optional
+    /// label mapping happening inside `Filter::build_mask`).
+    pub fn flat(filter: &Filter, n: usize) -> Self {
+        MaskPlan::Flat(filter.build_mask(None, n))
+    }
+
+    /// Lazy per-list slots for an IVF index with `nlist` lists.
+    pub fn lists(nlist: usize) -> Self {
+        MaskPlan::Lists((0..nlist).map(|_| OnceLock::new()).collect())
+    }
+
+    /// The flat mask, if this plan carries one.
+    pub fn flat_mask(&self) -> Option<&FilterMask> {
+        match self {
+            MaskPlan::Flat(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// The mask of list `c`, building it on first use (`build` runs at
+    /// most once per list across all workers).
+    pub fn list_mask(&self, c: usize, build: impl FnOnce() -> FilterMask) -> Option<&FilterMask> {
+        match self {
+            MaskPlan::Lists(slots) => Some(slots[c].get_or_init(build)),
+            MaskPlan::Flat(m) => Some(m),
+            MaskPlan::None => None,
+        }
+    }
+}
+
+/// A request resolved into an executable form: what to compute (kind),
+/// how to scan (resolved kernel parameters), who may answer (compiled
+/// filter masks), and where per-query LUTs come from.
+///
+/// Built once per `query` call by the owning index, then shared read-only
+/// across the executor's workers. The flat fastscan index builds one
+/// wholesale; the IVF layer resolves the same ingredients (escalated
+/// probe width, a lazy [`MaskPlan`], the LUT recipe) against its
+/// list-structured state and threads them through
+/// `IvfPq4::query_exec_with` directly — same plan-once discipline, no
+/// field carried that a worker does not read.
+#[derive(Debug)]
+pub struct QueryPlan<'r> {
+    /// Row-major query batch and its geometry.
+    pub queries: &'r [f32],
+    pub dim: usize,
+    pub nq: usize,
+    pub kind: QueryKind,
+    /// Kernel parameters with per-request overrides already applied.
+    pub fs: FastScanParams,
+    /// Compiled filter masks.
+    pub masks: MaskPlan,
+    /// Precomputed per-query scan LUTs (`nq × lut_len`) from a
+    /// signature-equal index, if the coordinator supplied them.
+    pub luts: Option<&'r [f32]>,
+    /// Length of one query's LUT row (`m_codes × sub_ksub`).
+    pub lut_len: usize,
+}
+
+impl<'r> QueryPlan<'r> {
+    /// Query `qi`'s precomputed LUT slice, if the plan carries batch LUTs.
+    #[inline]
+    pub fn luts_for(&self, qi: usize) -> Option<&'r [f32]> {
+        self.luts.map(|ls| &ls[qi * self.lut_len..(qi + 1) * self.lut_len])
+    }
+
+    /// Query `qi`'s vector.
+    #[inline]
+    pub fn query(&self, qi: usize) -> &'r [f32] {
+        &self.queries[qi * self.dim..(qi + 1) * self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::query::Filter;
+
+    #[test]
+    fn flat_mask_compiles_once_per_plan() {
+        let f = Filter::id_range(2, 6);
+        let plan = MaskPlan::flat(&f, 10);
+        let m = plan.flat_mask().unwrap();
+        assert_eq!(m.pass_count(), 4);
+        assert!(m.passes(2) && !m.passes(6));
+    }
+
+    #[test]
+    fn list_masks_build_lazily_and_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let plan = MaskPlan::lists(4);
+        let builds = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let m = plan
+                .list_mask(1, || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    FilterMask::from_fn(8, |p| p % 2 == 0)
+                })
+                .unwrap();
+            assert_eq!(m.pass_count(), 4);
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "mask rebuilt");
+        // untouched lists never build
+        if let MaskPlan::Lists(slots) = &plan {
+            assert!(slots[0].get().is_none());
+        }
+    }
+
+    #[test]
+    fn no_filter_means_no_masks() {
+        let plan = MaskPlan::None;
+        assert!(plan.flat_mask().is_none());
+        assert!(plan.list_mask(0, || unreachable!()).is_none());
+    }
+}

@@ -1,0 +1,229 @@
+//! Scratch-aware scan cores: the flat-index top-k and range scans,
+//! re-expressed over a [`ScanScratch`] arena so the steady-state path
+//! allocates nothing but its output row.
+//!
+//! These are drop-in equivalents of
+//! [`crate::pq::fastscan::topk_fastscan_with_luts`] /
+//! [`crate::pq::fastscan::range_fastscan_with_luts`] — same candidate
+//! admission, same re-rank order, bit-identical hits (asserted by the
+//! differential tests below); only the buffer lifetimes differ.
+
+use super::scratch::ScanScratch;
+use crate::index::query::Hit;
+use crate::pq::bitwidth::build_width_luts_with;
+use crate::pq::codebook::ProductQuantizer;
+use crate::pq::fastscan::{scan_filtered, FastScanParams, FilterMask, ScanSink};
+use crate::pq::layout::PackedCodes;
+use crate::util::topk::{TopK, U16Reservoir};
+
+/// Filtered top-k over one packed code set, allocation-free after warmup:
+/// the `k` best `(distance, label)` pairs among admitted positions,
+/// ascending, unpadded. `filter` is in position space; `labels` renames
+/// results only (identity when `None`).
+#[allow(clippy::too_many_arguments)]
+pub fn topk_packed(
+    pq: &ProductQuantizer,
+    packed: &PackedCodes,
+    luts_f32: &[f32],
+    k: usize,
+    fs: &FastScanParams,
+    labels: Option<&[i64]>,
+    filter: Option<&FilterMask>,
+    scratch: &mut ScanScratch,
+) -> Vec<Hit> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let wl = build_width_luts_with(luts_f32, packed.m, packed.width, scratch.wl_buf_mut());
+    // Scan with identity labels so the reservoir carries *scan positions*;
+    // external labels are applied after re-ranking (positions are
+    // unambiguous — duplicate external labels never collide).
+    let mut reservoir = U16Reservoir::from_storage(k, fs.reservoir_factor, scratch.take_items());
+    {
+        let mut sink = ScanSink::TopK(&mut reservoir);
+        scan_filtered(packed, &wl.kernel, fs.backend, None, filter, &mut sink);
+    }
+    let cands = reservoir.into_candidates();
+
+    let label_of = |pos: i64| labels.map(|l| l[pos as usize]).unwrap_or(pos);
+    let mut heap = TopK::from_storage(k, scratch.take_heap());
+    if fs.rerank {
+        let mut codes_buf = scratch.take_codes();
+        codes_buf.resize(pq.m, 0);
+        for &(_, pos) in &cands {
+            let i = pos as usize;
+            for (q, slot) in codes_buf.iter_mut().enumerate() {
+                *slot = packed.code_at(i, q);
+            }
+            heap.push(pq.adc_distance(luts_f32, &codes_buf), label_of(pos));
+        }
+        scratch.put_codes(codes_buf);
+    } else {
+        for &(d16, pos) in &cands {
+            heap.push(wl.qluts.decode(d16), label_of(pos));
+        }
+    }
+    let row: Vec<Hit> = heap
+        .as_sorted_hits()
+        .iter()
+        .map(|&(distance, label)| Hit { distance, label })
+        .collect();
+    scratch.put_items(cands);
+    scratch.put_heap(heap.into_storage());
+    wl.recycle(scratch.wl_buf_mut());
+    row
+}
+
+/// Filtered range query over one packed code set, allocation-free after
+/// warmup: every `(distance, label)` with distance `<= radius`, ascending
+/// by `(distance, label)`. Same quantized collection bound + exact trim
+/// semantics as [`crate::pq::fastscan::range_fastscan_with_luts`].
+#[allow(clippy::too_many_arguments)]
+pub fn range_packed(
+    pq: &ProductQuantizer,
+    packed: &PackedCodes,
+    luts_f32: &[f32],
+    radius: f32,
+    fs: &FastScanParams,
+    labels: Option<&[i64]>,
+    filter: Option<&FilterMask>,
+    scratch: &mut ScanScratch,
+) -> Vec<Hit> {
+    let wl = build_width_luts_with(luts_f32, packed.m, packed.width, scratch.wl_buf_mut());
+    let bound = wl.qluts.collection_bound(radius, fs.rerank);
+    let mut raw = scratch.take_items();
+    {
+        let mut sink = ScanSink::Range { bound, hits: &mut raw };
+        scan_filtered(packed, &wl.kernel, fs.backend, None, filter, &mut sink);
+    }
+    let label_of = |pos: i64| labels.map(|l| l[pos as usize]).unwrap_or(pos);
+    let mut hits: Vec<Hit> = if fs.rerank {
+        let mut codes_buf = scratch.take_codes();
+        codes_buf.resize(pq.m, 0);
+        let mut out = Vec::with_capacity(raw.len());
+        for &(_, pos) in &raw {
+            let i = pos as usize;
+            for (q, slot) in codes_buf.iter_mut().enumerate() {
+                *slot = packed.code_at(i, q);
+            }
+            let d = pq.adc_distance(luts_f32, &codes_buf);
+            if d <= radius {
+                out.push(Hit { distance: d, label: label_of(pos) });
+            }
+        }
+        scratch.put_codes(codes_buf);
+        out
+    } else {
+        raw.iter()
+            .map(|&(d16, pos)| Hit { distance: wl.qluts.decode(d16), label: label_of(pos) })
+            .collect()
+    };
+    hits.sort_by(|a, b| {
+        a.distance
+            .partial_cmp(&b.distance)
+            .unwrap()
+            .then(a.label.cmp(&b.label))
+    });
+    scratch.put_items(raw);
+    wl.recycle(scratch.wl_buf_mut());
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::bitwidth::CodeWidth;
+    use crate::pq::fastscan::{range_fastscan_with_luts, topk_fastscan_with_luts};
+    use crate::simd::available_backends;
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize, m: usize, width: CodeWidth, seed: u64) -> (ProductQuantizer, PackedCodes, Vec<f32>) {
+        let dim = 32;
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian()).collect();
+        let pq = ProductQuantizer::train(&data, dim, &width.pq_params(m)).unwrap();
+        let codes = pq.encode(&data).unwrap();
+        let packed = PackedCodes::pack(&codes, m, width).unwrap();
+        let luts = pq.compute_luts(&data[..dim]);
+        (pq, packed, luts)
+    }
+
+    /// The scratch cores must match the allocating kernels bit for bit —
+    /// every width, every backend, rerank on/off, filtered and not.
+    #[test]
+    fn scratch_scans_match_allocating_kernels() {
+        for width in CodeWidth::ALL {
+            let (pq, packed, luts) = fixture(300, 8, width, 900 + width.bits() as u64);
+            let mask = FilterMask::from_fn(packed.n, |p| p % 3 != 0);
+            let mut scratch = ScanScratch::default();
+            for backend in available_backends() {
+                for rerank in [true, false] {
+                    let fs = FastScanParams { backend, rerank, reservoir_factor: 6 };
+                    for filter in [None, Some(&mask)] {
+                        let want = topk_fastscan_with_luts(
+                            &pq, &packed, &luts, 7, &fs, None, filter,
+                        );
+                        let got =
+                            topk_packed(&pq, &packed, &luts, 7, &fs, None, filter, &mut scratch);
+                        let got_pairs: Vec<(f32, i64)> =
+                            got.iter().map(|h| (h.distance, h.label)).collect();
+                        assert_eq!(got_pairs, want, "{width} {backend:?} rerank={rerank}");
+
+                        let radius = want.get(3).map(|&(d, _)| d).unwrap_or(1.0);
+                        let want_r = range_fastscan_with_luts(
+                            &pq, &packed, &luts, radius, &fs, None, filter,
+                        );
+                        let got_r = range_packed(
+                            &pq, &packed, &luts, radius, &fs, None, filter, &mut scratch,
+                        );
+                        let got_pairs: Vec<(f32, i64)> =
+                            got_r.iter().map(|h| (h.distance, h.label)).collect();
+                        assert_eq!(got_pairs, want_r, "{width} {backend:?} rerank={rerank}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scratch-reuse / zero-allocation acceptance: after one warmup query
+    /// the arena's buffers never move or grow again across many queries of
+    /// the same shape — i.e. the steady-state scan path performs no heap
+    /// allocation for its working set.
+    #[test]
+    fn steady_state_scan_does_not_grow_scratch() {
+        let (pq, packed, _) = fixture(400, 8, CodeWidth::W4, 901);
+        let dim = 32;
+        let mut rng = Rng::new(902);
+        let queries: Vec<f32> = (0..20 * dim).map(|_| rng.next_gaussian()).collect();
+        let fs = FastScanParams::default();
+        let mut scratch = ScanScratch::default();
+        let mut lbuf = scratch.take_luts();
+        // warmup at the workload's maximal shape: same k, and a radius
+        // admitting the whole corpus (the range buffer's largest form)
+        pq.compute_luts_into(&queries[..dim], &mut lbuf);
+        let _ = topk_packed(&pq, &packed, &lbuf, 10, &fs, None, None, &mut scratch);
+        let _ = range_packed(&pq, &packed, &lbuf, 1e9, &fs, None, None, &mut scratch);
+        scratch.put_luts(lbuf);
+        let warm_bytes = scratch.reserved_bytes();
+        let warm_lut_ptr = {
+            let l = scratch.take_luts();
+            let p = l.as_ptr();
+            scratch.put_luts(l);
+            p
+        };
+        // steady state: same-shape queries must not grow (or move) buffers
+        for qi in 0..20 {
+            let mut lbuf = scratch.take_luts();
+            pq.compute_luts_into(&queries[qi * dim..(qi + 1) * dim], &mut lbuf);
+            assert_eq!(lbuf.as_ptr(), warm_lut_ptr, "LUT buffer reallocated");
+            let _ = topk_packed(&pq, &packed, &lbuf, 10, &fs, None, None, &mut scratch);
+            let _ = range_packed(&pq, &packed, &lbuf, 1e9, &fs, None, None, &mut scratch);
+            scratch.put_luts(lbuf);
+            assert_eq!(
+                scratch.reserved_bytes(),
+                warm_bytes,
+                "scratch grew after warmup at query {qi}"
+            );
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Per-thread scan scratch arenas.
+//!
+//! Every buffer the per-query scan path needs — the f32 LUT staging, the
+//! quantized [`crate::pq::fastscan::KernelLuts`] bytes, reservoir/range
+//! candidate storage, the re-rank heap and code-gather buffers, the coarse
+//! probe list — lives in one [`ScanScratch`] arena. Arenas are checked out
+//! of a [`ScratchPool`] (one per in-flight worker), **grown but never
+//! shrunk**, and returned on drop, so after warmup the steady-state scan
+//! path performs zero heap allocations: every `take_*` hands out a cleared
+//! buffer whose capacity survived the previous query.
+//!
+//! The take/put discipline (move the `Vec` out, use it, move it back)
+//! instead of long-lived `&mut` borrows keeps the borrow checker out of
+//! the hot path: a worker can hold the LUT buffer *and* hand the rest of
+//! the scratch to a helper at the same time.
+
+use crate::pq::bitwidth::WidthLutsBuf;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One worker's reusable scan workspace. All buffers start empty and grow
+/// to the index's working-set shape on first use.
+#[derive(Debug, Default)]
+pub struct ScanScratch {
+    /// Per-query f32 ADC table (`m_codes × sub_ksub`).
+    luts_f32: Vec<f32>,
+    /// Quantized + kernel-arranged table storage (see
+    /// [`crate::pq::bitwidth::build_width_luts_with`]).
+    wl_buf: WidthLutsBuf,
+    /// Reservoir / range-collection candidate storage.
+    items: Vec<(u16, i64)>,
+    /// IVF merged-candidate staging (per-list results, probe order).
+    merged: Vec<(u16, i64)>,
+    /// Re-rank top-k heap storage.
+    heap: Vec<(f32, i64)>,
+    /// Re-rank code gather buffer (`m_codes` bytes).
+    codes: Vec<u8>,
+    /// Coarse-quantizer probe list.
+    probes: Vec<usize>,
+}
+
+macro_rules! take_put {
+    ($take:ident, $put:ident, $field:ident, $t:ty) => {
+        #[doc = concat!("Take the `", stringify!($field), "` buffer (cleared, capacity kept).")]
+        pub fn $take(&mut self) -> $t {
+            let mut v = std::mem::take(&mut self.$field);
+            v.clear();
+            v
+        }
+        #[doc = concat!("Return the `", stringify!($field), "` buffer for reuse.")]
+        pub fn $put(&mut self, v: $t) {
+            self.$field = v;
+        }
+    };
+}
+
+impl ScanScratch {
+    take_put!(take_luts, put_luts, luts_f32, Vec<f32>);
+    take_put!(take_items, put_items, items, Vec<(u16, i64)>);
+    take_put!(take_merged, put_merged, merged, Vec<(u16, i64)>);
+    take_put!(take_heap, put_heap, heap, Vec<(f32, i64)>);
+    take_put!(take_codes, put_codes, codes, Vec<u8>);
+    take_put!(take_probes, put_probes, probes, Vec<usize>);
+
+    /// The width-LUT staging buffers (used in place, not taken: the built
+    /// [`crate::pq::bitwidth::WidthLuts`] owns them until recycled).
+    pub fn wl_buf_mut(&mut self) -> &mut WidthLutsBuf {
+        &mut self.wl_buf
+    }
+
+    /// Bytes currently reserved by this arena (capacity accounting; the
+    /// pool folds this into its high-water mark on check-in).
+    pub fn reserved_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.luts_f32.capacity() * size_of::<f32>()
+            + self.wl_buf.reserved_bytes()
+            + self.items.capacity() * size_of::<(u16, i64)>()
+            + self.merged.capacity() * size_of::<(u16, i64)>()
+            + self.heap.capacity() * size_of::<(f32, i64)>()
+            + self.codes.capacity()
+            + self.probes.capacity() * size_of::<usize>()
+    }
+}
+
+/// A pool of [`ScanScratch`] arenas, one checked out per in-flight worker.
+/// In steady state the pool holds as many arenas as the executor's peak
+/// concurrency and `checkout` never constructs a new one.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    arenas: Mutex<Vec<ScanScratch>>,
+    /// Largest `reserved_bytes` ever checked back in.
+    high_water: AtomicUsize,
+    /// Arenas constructed over the pool's lifetime (a reuse diagnostic:
+    /// stable after warmup).
+    created: AtomicUsize,
+}
+
+impl ScratchPool {
+    /// Check an arena out (reusing a pooled one when available).
+    pub fn checkout(&self) -> ScratchGuard<'_> {
+        let scratch = match self.arenas.lock().unwrap().pop() {
+            Some(s) => s,
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                ScanScratch::default()
+            }
+        };
+        ScratchGuard { pool: self, scratch: Some(scratch) }
+    }
+
+    fn restore(&self, scratch: ScanScratch) {
+        self.high_water.fetch_max(scratch.reserved_bytes(), Ordering::Relaxed);
+        self.arenas.lock().unwrap().push(scratch);
+    }
+
+    /// Largest arena footprint (bytes) observed so far — the
+    /// `scratch_bytes` figure surfaced through `QueryStats` and the
+    /// coordinator's `stats` verb.
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Total arenas ever constructed (not currently pooled — ever).
+    pub fn arenas_created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Arenas currently parked in the pool.
+    pub fn arenas_idle(&self) -> usize {
+        self.arenas.lock().unwrap().len()
+    }
+}
+
+/// RAII checkout of one [`ScanScratch`]: derefs to the arena, returns it
+/// to the pool on drop (also on unwind).
+pub struct ScratchGuard<'p> {
+    pool: &'p ScratchPool,
+    scratch: Option<ScanScratch>,
+}
+
+impl Deref for ScratchGuard<'_> {
+    type Target = ScanScratch;
+    fn deref(&self) -> &ScanScratch {
+        self.scratch.as_ref().expect("scratch present until drop")
+    }
+}
+
+impl DerefMut for ScratchGuard<'_> {
+    fn deref_mut(&mut self) -> &mut ScanScratch {
+        self.scratch.as_mut().expect("scratch present until drop")
+    }
+}
+
+impl Drop for ScratchGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.scratch.take() {
+            self.pool.restore(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_arenas() {
+        let pool = ScratchPool::default();
+        {
+            let mut g = pool.checkout();
+            let mut v = g.take_luts();
+            v.resize(1024, 0.0);
+            g.put_luts(v);
+        }
+        assert_eq!(pool.arenas_created(), 1);
+        assert_eq!(pool.arenas_idle(), 1);
+        assert!(pool.high_water_bytes() >= 1024 * 4);
+        // the second checkout reuses the grown arena: same capacity back
+        {
+            let mut g = pool.checkout();
+            let v = g.take_luts();
+            assert!(v.is_empty());
+            assert!(v.capacity() >= 1024, "capacity lost across checkouts");
+            g.put_luts(v);
+        }
+        assert_eq!(pool.arenas_created(), 1, "pool allocated a second arena");
+    }
+
+    #[test]
+    fn concurrent_checkouts_get_distinct_arenas() {
+        let pool = ScratchPool::default();
+        let a = pool.checkout();
+        let b = pool.checkout();
+        drop(a);
+        drop(b);
+        assert_eq!(pool.arenas_created(), 2);
+        assert_eq!(pool.arenas_idle(), 2);
+    }
+
+    #[test]
+    fn take_put_roundtrip_keeps_capacity() {
+        let mut s = ScanScratch::default();
+        let mut items = s.take_items();
+        items.reserve(777);
+        let cap = items.capacity();
+        s.put_items(items);
+        let again = s.take_items();
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), cap);
+    }
+}

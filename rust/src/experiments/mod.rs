@@ -139,6 +139,112 @@ pub fn run_table1(
     Ok(table)
 }
 
+/// Thread-scaling curve of the plan/execute layer (the `--threads` axis):
+/// batch throughput (queries fan out across workers) and single-query
+/// large-`nprobe` latency (probed lists fan out across workers) at each
+/// thread count, on one sealed IVF index.
+///
+/// The executor guarantees bit-identical results at every thread count,
+/// so the row-to-row comparison is pure wall-clock: `speedup` is relative
+/// to the first thread count in `threads` (conventionally 1).
+#[allow(clippy::too_many_arguments)]
+pub fn run_thread_scaling(
+    dataset: &str,
+    n: usize,
+    nq: usize,
+    nlist: usize,
+    m: usize,
+    width: CodeWidth,
+    threads: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Result<Table> {
+    use crate::exec::QueryExecutor;
+    use crate::index::{QueryRequest, SearchParams};
+
+    let ds = make_dataset(dataset, n, nq, seed);
+    let mut idx = IndexIvfPq4::new_width(ds.dim, nlist, m, width, false, 32);
+    idx.train(&ds.train)?;
+    idx.add(&ds.base)?;
+    idx.seal()?;
+    let batch_params = SearchParams::new().with_nprobe((nlist / 4).max(1));
+    // single-query mode probes every list: the intra-query multi-list
+    // fan-out is what lets one big query use the whole socket
+    let single_params = SearchParams::new().with_nprobe(nlist);
+
+    let mut table = Table::new(
+        &format!(
+            "Thread scaling ({dataset} n={n} nq={nq}, IVF{nlist},PQ{m}x{}fs)",
+            width.bits()
+        ),
+        &["threads", "mode", "ms", "QPS", "speedup"],
+    );
+    let trials = trials.max(1);
+    let mut base_ms = [f64::NAN; 2];
+    for (ti, &t) in threads.iter().enumerate() {
+        let exec = QueryExecutor::new(t);
+        let modes: [(&str, &[f32], &SearchParams, f64); 2] = [
+            ("batch", &ds.queries, &batch_params, nq as f64),
+            ("multi-list", &ds.queries[..ds.dim], &single_params, 1.0),
+        ];
+        for (mi, (mode, queries, params, queries_per_call)) in modes.into_iter().enumerate() {
+            let req = QueryRequest::top_k(queries, 10).with_params(params.clone());
+            idx.query_exec(&req, &exec)?; // warm the scratch pool
+            let mut best = f64::INFINITY;
+            for _ in 0..trials {
+                let timer = Timer::start();
+                let resp = idx.query_exec(&req, &exec)?;
+                let ms = timer.elapsed_ms();
+                black_box(resp.hits.len());
+                best = best.min(ms);
+            }
+            if ti == 0 {
+                base_ms[mi] = best;
+            }
+            table.row(vec![
+                t.to_string(),
+                mode.into(),
+                format!("{best:.3}"),
+                format!("{:.0}", queries_per_call / (best / 1e3)),
+                format!("{:.2}x", base_ms[mi] / best),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+/// A numeric bench knob from the environment (`ARMPQ_BENCH_N`-style),
+/// falling back to `default` — shared by the bench mains so every
+/// harness parses the environment the same way.
+pub fn bench_env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The bench harnesses' thread axis from `ARMPQ_BENCH_THREADS`
+/// (comma-separated), falling back to the [`default_thread_axis`] — THE
+/// single parser shared by the fig2 harnesses so every bench reads the
+/// environment the same way.
+pub fn thread_axis_from_env() -> Vec<usize> {
+    let explicit: Vec<usize> = std::env::var("ARMPQ_BENCH_THREADS")
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_default();
+    default_thread_axis(&explicit)
+}
+
+/// The `--threads` sweep list for benches: explicit values, or the
+/// default `1, 2, 4, ncpu` axis (deduplicated, sorted).
+pub fn default_thread_axis(explicit: &[usize]) -> Vec<usize> {
+    let mut axis: Vec<usize> = if explicit.is_empty() {
+        let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        vec![1, 2, 4, ncpu]
+    } else {
+        explicit.to_vec()
+    };
+    axis.sort_unstable();
+    axis.dedup();
+    axis
+}
+
 /// Fig. 1 concept micro-benchmark: cost of one ADC lookup step, per code
 /// width (the Quicker-ADC trade-off axis).
 ///
@@ -595,6 +701,20 @@ mod tests {
             let has_armv7 = t.rows.iter().any(|r| r[0].contains("ARMv7"));
             assert_eq!(has_armv7, width != CodeWidth::W8, "{width}");
         }
+    }
+
+    #[test]
+    fn thread_scaling_smoke() {
+        let t = run_thread_scaling("sift", 2_000, 8, 8, 8, CodeWidth::W4, &[1, 2], 1, 48)
+            .unwrap();
+        // two modes per thread count
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.rows.iter().all(|r| r[1] == "batch" || r[1] == "multi-list"));
+        // the threads=1 rows are their own baseline
+        assert_eq!(t.rows[0][4], "1.00x");
+        let axis = default_thread_axis(&[]);
+        assert!(axis.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(default_thread_axis(&[4, 1, 4]), vec![1, 4]);
     }
 
     #[test]

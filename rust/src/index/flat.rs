@@ -2,7 +2,7 @@
 
 use super::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use super::Index;
-use crate::util::threads::{default_threads, parallel_map};
+use crate::exec::QueryExecutor;
 use crate::util::topk::TopK;
 use crate::{Error, Result};
 
@@ -48,7 +48,7 @@ impl Index for IndexFlat {
         Ok(())
     }
 
-    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+    fn query_exec(&self, req: &QueryRequest<'_>, exec: &QueryExecutor) -> Result<QueryResponse> {
         req.kind.validate()?;
         if req.queries.len() % self.dim != 0 {
             return Err(Error::DimMismatch {
@@ -77,7 +77,7 @@ impl Index for IndexFlat {
             .map(|b| b.iter().filter(|&&x| x).count() as f64 / n as f64)
             .unwrap_or(1.0);
         let keep_bits = keep_bits.as_deref();
-        let out: Vec<(Vec<Hit>, QueryStats)> = parallel_map(nq, default_threads(), |qi| {
+        let out: Vec<(Vec<Hit>, QueryStats)> = exec.run_batch(nq, |qi, _scratch| {
             let q = &queries[qi * dim..(qi + 1) * dim];
             let hits: Vec<(f32, i64)> = match kind {
                 QueryKind::TopK { k } => {
@@ -112,6 +112,7 @@ impl Index for IndexFlat {
                 codes_scanned: n,
                 lists_probed: 1,
                 filter_selectivity: selectivity,
+                ..Default::default()
             };
             (hits.into_iter().map(|(distance, label)| Hit { distance, label }).collect(), stats)
         });
@@ -121,6 +122,7 @@ impl Index for IndexFlat {
             hits.push(h);
             stats.push(s);
         }
+        exec.stamp_stats(&mut stats, nq);
         Ok(QueryResponse { hits, stats })
     }
 

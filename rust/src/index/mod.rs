@@ -82,6 +82,7 @@ pub use pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
 pub use query::{Filter, Hit, IdSet, QueryKind, QueryRequest, QueryResponse, QueryStats};
 pub use refine::IndexRefineFlat;
 
+use crate::exec::QueryExecutor;
 use crate::Result;
 
 /// Search output: `nq × k` row-major distances and labels
@@ -137,16 +138,35 @@ pub trait Index: Send + Sync {
     fn seal(&mut self) -> Result<()> {
         Ok(())
     }
-    /// THE query entry point: answer a typed [`QueryRequest`] (top-k or
-    /// range, optionally filtered, with per-request parameter overrides).
-    /// Read-only: safe to call concurrently on a sealed index.
-    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse>;
-    /// [`Index::query`] with precomputed scan LUTs (`nq × lut_len` f32)
-    /// from a signature-equal index — the batch-level LUT-reuse entry the
-    /// coordinator fans out to shards. The default ignores the LUTs and
-    /// recomputes (always correct, never faster).
-    fn query_with_luts(&self, req: &QueryRequest<'_>, _luts: &[f32]) -> Result<QueryResponse> {
-        self.query(req)
+    /// The plan/execute core every index implements: answer a typed
+    /// [`QueryRequest`] (top-k or range, optionally filtered, with
+    /// per-request parameter overrides) on an explicit
+    /// [`crate::exec::QueryExecutor`] — the coordinator threads one shared
+    /// executor through every backend; standalone callers go through the
+    /// [`Index::query`] shim and the process-global executor. Read-only:
+    /// safe to call concurrently on a sealed index, and results are
+    /// bit-identical for every executor thread count.
+    fn query_exec(&self, req: &QueryRequest<'_>, exec: &QueryExecutor) -> Result<QueryResponse>;
+    /// THE query entry point: [`Index::query_exec`] on the process-global
+    /// executor (`ARMPQ_THREADS` wide).
+    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+        self.query_exec(req, QueryExecutor::global())
+    }
+    /// [`Index::query_exec`] with precomputed scan LUTs (`nq × lut_len`
+    /// f32) from a signature-equal index — the batch-level LUT-reuse entry
+    /// the coordinator fans out to shards. The default ignores the LUTs
+    /// and recomputes (always correct, never faster).
+    fn query_with_luts_exec(
+        &self,
+        req: &QueryRequest<'_>,
+        _luts: &[f32],
+        exec: &QueryExecutor,
+    ) -> Result<QueryResponse> {
+        self.query_exec(req, exec)
+    }
+    /// [`Index::query_with_luts_exec`] on the process-global executor.
+    fn query_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
+        self.query_with_luts_exec(req, luts, QueryExecutor::global())
     }
     /// Compatibility shim over [`Index::query`]: top-k, unfiltered,
     /// flattened into a fixed-shape padded [`SearchResult`].

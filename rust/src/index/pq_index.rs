@@ -9,11 +9,10 @@
 use super::params::{effective_fastscan, effective_ivf};
 use super::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use super::{Index, SearchParams};
+use crate::exec::{range_packed, topk_packed, MaskPlan, QueryExecutor, QueryPlan};
 use crate::ivf::{IvfParams, IvfPq4};
 use crate::pq::adc::{range_adc, topk_adc};
-use crate::pq::fastscan::{
-    range_fastscan_with_luts, topk_fastscan_with_luts, FastScanParams, FilterMask,
-};
+use crate::pq::fastscan::FastScanParams;
 use crate::pq::{CodeWidth, PackedCodes, PqParams, ProductQuantizer};
 use crate::{Error, Result};
 
@@ -63,7 +62,7 @@ impl Index for IndexPq {
         Ok(())
     }
 
-    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+    fn query_exec(&self, req: &QueryRequest<'_>, exec: &QueryExecutor) -> Result<QueryResponse> {
         req.kind.validate()?;
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if req.queries.len() % self.dim != 0 {
@@ -76,45 +75,54 @@ impl Index for IndexPq {
         if nq == 0 || self.ntotal == 0 || matches!(req.kind, QueryKind::TopK { k: 0 }) {
             return Ok(QueryResponse::empty(nq));
         }
-        // exhaustive exact-ADC scan: the filter is a plain skip, which is
+        // plan: the filter is query-independent (labels are identity
+        // positions), so it compiles ONCE per request into a keep bitmap
+        // shared read-only by every worker — a plain skip in the scan,
         // trivially bit-identical to post-filtering the unfiltered scan.
-        // Admission is query-independent (labels are identity positions),
-        // so the filter is evaluated ONCE per call, not once per (query,
-        // row) pair.
         let keep_bits: Option<Vec<bool>> = req
             .filter
             .as_ref()
             .map(|f| (0..self.ntotal as i64).map(|id| f.matches(id)).collect());
-        let keep_closure;
-        let keep: Option<&dyn Fn(i64) -> bool> = match &keep_bits {
-            Some(bits) => {
-                keep_closure = move |id: i64| bits[id as usize];
-                Some(&keep_closure)
-            }
-            None => None,
-        };
         let selectivity = keep_bits
             .as_ref()
             .map(|b| b.iter().filter(|&&x| x).count() as f64 / self.ntotal as f64)
             .unwrap_or(1.0);
-        let mut hits = Vec::with_capacity(nq);
-        let mut stats = Vec::with_capacity(nq);
-        for q in req.queries.chunks(self.dim) {
-            let luts = pq.compute_luts(q);
-            let (row, _kept) = match req.kind {
+        let keep_bits = keep_bits.as_deref();
+        let dim = self.dim;
+        let queries = req.queries;
+        let kind = req.kind;
+        let out: Vec<Vec<Hit>> = exec.run_batch(nq, |qi, scratch| {
+            let q = &queries[qi * dim..(qi + 1) * dim];
+            let keep_closure;
+            let keep: Option<&dyn Fn(i64) -> bool> = match keep_bits {
+                Some(bits) => {
+                    keep_closure = move |id: i64| bits[id as usize];
+                    Some(&keep_closure)
+                }
+                None => None,
+            };
+            let mut luts = scratch.take_luts();
+            pq.compute_luts_into(q, &mut luts);
+            let (row, _kept) = match kind {
                 QueryKind::TopK { k } => topk_adc(pq, &luts, &self.codes, None, k, keep),
                 QueryKind::Range { radius } => {
                     range_adc(pq, &luts, &self.codes, None, radius, keep)
                 }
             };
-            stats.push(QueryStats {
+            scratch.put_luts(luts);
+            row.into_iter().map(|(distance, label)| Hit { distance, label }).collect()
+        });
+        let mut stats = vec![
+            QueryStats {
                 codes_scanned: self.ntotal,
                 lists_probed: 1,
                 filter_selectivity: selectivity,
-            });
-            hits.push(row.into_iter().map(|(distance, label)| Hit { distance, label }).collect());
-        }
-        Ok(QueryResponse { hits, stats })
+                ..Default::default()
+            };
+            nq
+        ];
+        exec.stamp_stats(&mut stats, nq);
+        Ok(QueryResponse { hits: out, stats })
     }
 
     fn describe(&self) -> String {
@@ -253,10 +261,19 @@ impl IndexPq4FastScan {
         self.packed.is_some() || self.staging.is_empty()
     }
 
-    /// The query core shared by [`Index::query`] and the LUT-reuse entry:
-    /// compiles the filter into a position-space [`FilterMask`] once per
-    /// call, then runs the masked top-k or range kernel per query.
-    fn query_luts(&self, req: &QueryRequest<'_>, luts: Option<&[f32]>) -> Result<QueryResponse> {
+    /// The plan/execute core shared by [`Index::query_exec`] and the
+    /// LUT-reuse entry: builds the request's plan (resolved kernel
+    /// parameters + the filter compiled into one position-space
+    /// [`crate::pq::fastscan::FilterMask`] — flat fastscan uses identity
+    /// labels), then fans the
+    /// batch out over the executor; each worker runs the masked top-k or
+    /// range kernel on its pooled scratch arena.
+    fn query_luts_exec(
+        &self,
+        req: &QueryRequest<'_>,
+        luts: Option<&[f32]>,
+        exec: &QueryExecutor,
+    ) -> Result<QueryResponse> {
         req.kind.validate()?;
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if req.queries.len() % self.dim != 0 {
@@ -282,48 +299,65 @@ impl IndexPq4FastScan {
             Some(p) => p,
             None => return Err(Error::NotSealed),
         };
-        let fs = effective_fastscan(&self.fastscan, req.params.as_ref());
-        // flat fastscan uses identity labels: position == external id, so
-        // the filter compiles straight into position space, once per call
-        let mask: Option<FilterMask> =
-            req.filter.as_ref().map(|f| f.build_mask(None, self.ntotal));
-        let selectivity = mask.as_ref().map(|m| m.selectivity()).unwrap_or(1.0);
-        let all_filtered = mask.as_ref().is_some_and(|m| m.pass_count() == 0);
-        let mut hits = Vec::with_capacity(nq);
-        let mut stats = Vec::with_capacity(nq);
-        for (qi, q) in req.queries.chunks(self.dim).enumerate() {
-            if all_filtered {
-                hits.push(Vec::new());
-                stats.push(QueryStats {
-                    codes_scanned: 0,
-                    lists_probed: 0,
-                    filter_selectivity: 0.0,
-                });
-                continue;
-            }
-            let owned;
-            let luts_f32 = match luts {
-                Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
+        // plan: resolved kernel params + the compiled filter, once per call
+        let plan = QueryPlan {
+            queries: req.queries,
+            dim: self.dim,
+            nq,
+            kind: req.kind,
+            fs: effective_fastscan(&self.fastscan, req.params.as_ref()),
+            masks: match &req.filter {
+                Some(f) => MaskPlan::flat(f, self.ntotal),
+                None => MaskPlan::None,
+            },
+            luts,
+            lut_len,
+        };
+        let mask = plan.masks.flat_mask();
+        let selectivity = mask.map(|m| m.selectivity()).unwrap_or(1.0);
+        let all_filtered = mask.is_some_and(|m| m.pass_count() == 0);
+        if all_filtered {
+            let stats = QueryStats {
+                codes_scanned: 0,
+                lists_probed: 0,
+                filter_selectivity: 0.0,
+                ..Default::default()
+            };
+            return Ok(QueryResponse {
+                hits: vec![Vec::new(); nq],
+                stats: vec![stats; nq],
+            });
+        }
+        let hits: Vec<Vec<Hit>> = exec.run_batch(nq, |qi, scratch| {
+            let mut lbuf = scratch.take_luts();
+            let luts_f32: &[f32] = match plan.luts_for(qi) {
+                Some(ls) => ls,
                 None => {
-                    owned = pq.compute_luts(q);
-                    &owned[..]
+                    pq.compute_luts_into(plan.query(qi), &mut lbuf);
+                    &lbuf
                 }
             };
-            let row = match req.kind {
+            let row = match plan.kind {
                 QueryKind::TopK { k } => {
-                    topk_fastscan_with_luts(pq, packed, luts_f32, k, &fs, None, mask.as_ref())
+                    topk_packed(pq, packed, luts_f32, k, &plan.fs, None, mask, scratch)
                 }
                 QueryKind::Range { radius } => {
-                    range_fastscan_with_luts(pq, packed, luts_f32, radius, &fs, None, mask.as_ref())
+                    range_packed(pq, packed, luts_f32, radius, &plan.fs, None, mask, scratch)
                 }
             };
-            stats.push(QueryStats {
+            scratch.put_luts(lbuf);
+            row
+        });
+        let mut stats = vec![
+            QueryStats {
                 codes_scanned: self.ntotal,
                 lists_probed: 1,
                 filter_selectivity: selectivity,
-            });
-            hits.push(row.into_iter().map(|(distance, label)| Hit { distance, label }).collect());
-        }
+                ..Default::default()
+            };
+            nq
+        ];
+        exec.stamp_stats(&mut stats, nq);
         Ok(QueryResponse { hits, stats })
     }
 }
@@ -360,12 +394,17 @@ impl Index for IndexPq4FastScan {
         IndexPq4FastScan::seal(self)
     }
 
-    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
-        self.query_luts(req, None)
+    fn query_exec(&self, req: &QueryRequest<'_>, exec: &QueryExecutor) -> Result<QueryResponse> {
+        self.query_luts_exec(req, None, exec)
     }
 
-    fn query_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
-        self.query_luts(req, Some(luts))
+    fn query_with_luts_exec(
+        &self,
+        req: &QueryRequest<'_>,
+        luts: &[f32],
+        exec: &QueryExecutor,
+    ) -> Result<QueryResponse> {
+        self.query_luts_exec(req, Some(luts), exec)
     }
 
     fn lut_signature(&self) -> Option<u64> {
@@ -470,28 +509,42 @@ impl Index for IndexIvfPq4 {
         self.inner.seal()
     }
 
-    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
-        // query_with handles all degenerate cases (untrained, dim
+    fn query_exec(&self, req: &QueryRequest<'_>, exec: &QueryExecutor) -> Result<QueryResponse> {
+        // query_exec_with handles all degenerate cases (untrained, dim
         // mismatch, k == 0, empty batch, empty index) with the same
         // semantics as the other indexes
         let (nprobe, ef_search, fs) =
             effective_ivf(req.params.as_ref(), self.inner.nprobe, &self.inner.fastscan);
-        let (hits, stats) =
-            self.inner.query_with(req.queries, &req.kind, req.filter.as_ref(), nprobe, ef_search, &fs)?;
-        Ok(QueryResponse { hits, stats })
-    }
-
-    fn query_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
-        let (nprobe, ef_search, fs) =
-            effective_ivf(req.params.as_ref(), self.inner.nprobe, &self.inner.fastscan);
-        let (hits, stats) = self.inner.query_with_luts(
+        let (hits, stats) = self.inner.query_exec_with(
             req.queries,
-            luts,
+            None,
             &req.kind,
             req.filter.as_ref(),
             nprobe,
             ef_search,
             &fs,
+            exec,
+        )?;
+        Ok(QueryResponse { hits, stats })
+    }
+
+    fn query_with_luts_exec(
+        &self,
+        req: &QueryRequest<'_>,
+        luts: &[f32],
+        exec: &QueryExecutor,
+    ) -> Result<QueryResponse> {
+        let (nprobe, ef_search, fs) =
+            effective_ivf(req.params.as_ref(), self.inner.nprobe, &self.inner.fastscan);
+        let (hits, stats) = self.inner.query_exec_with(
+            req.queries,
+            Some(luts),
+            &req.kind,
+            req.filter.as_ref(),
+            nprobe,
+            ef_search,
+            &fs,
+            exec,
         )?;
         Ok(QueryResponse { hits, stats })
     }

@@ -306,11 +306,23 @@ pub struct QueryStats {
     /// Fraction of considered positions the filter admitted (1.0 when
     /// unfiltered).
     pub filter_selectivity: f64,
+    /// Worker threads that cooperated on the call this query rode in
+    /// (batch fan-out width, or probed-list fan-out for a lone IVF query).
+    pub threads_used: usize,
+    /// Executor scratch-arena high-water mark, in bytes, at response time
+    /// (the steady-state working set the allocation-free scan path reuses).
+    pub scratch_bytes: usize,
 }
 
 impl Default for QueryStats {
     fn default() -> Self {
-        Self { codes_scanned: 0, lists_probed: 0, filter_selectivity: 1.0 }
+        Self {
+            codes_scanned: 0,
+            lists_probed: 0,
+            filter_selectivity: 1.0,
+            threads_used: 1,
+            scratch_bytes: 0,
+        }
     }
 }
 

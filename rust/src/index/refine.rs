@@ -9,6 +9,7 @@
 
 use super::query::{Hit, QueryKind, QueryRequest, QueryResponse};
 use super::{Index, SearchParams};
+use crate::exec::QueryExecutor;
 use crate::util::topk::TopK;
 use crate::{Error, Result};
 
@@ -55,7 +56,7 @@ impl Index for IndexRefineFlat {
         self.base.seal()
     }
 
-    fn query(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
+    fn query_exec(&self, req: &QueryRequest<'_>, exec: &QueryExecutor) -> Result<QueryResponse> {
         req.kind.validate()?;
         let dim = self.base.dim();
         if req.queries.len() % dim != 0 {
@@ -86,26 +87,33 @@ impl Index for IndexRefineFlat {
             filter: req.filter.clone(),
             params: req.params.clone(),
         };
-        let coarse = self.base.query(&base_req)?;
-        let mut hits = Vec::with_capacity(coarse.nq());
-        for (qi, row) in coarse.hits.iter().enumerate() {
-            let q = &req.queries[qi * dim..(qi + 1) * dim];
+        // the base shortlist rides the same executor; the exact re-rank
+        // pass then fans out over the batch with per-thread heap storage
+        let coarse = self.base.query_exec(&base_req, exec)?;
+        let kind = req.kind;
+        let queries = req.queries;
+        let hits: Vec<Vec<Hit>> = exec.run_batch(coarse.nq(), |qi, scratch| {
+            let row = &coarse.hits[qi];
+            let q = &queries[qi * dim..(qi + 1) * dim];
             let exact = |label: i64| {
                 let v = &self.vectors[label as usize * dim..(label as usize + 1) * dim];
                 crate::util::l2_sq(q, v)
             };
-            let refined: Vec<Hit> = match req.kind {
+            match kind {
                 QueryKind::TopK { k } => {
-                    let mut heap = TopK::new(k);
+                    let mut heap = TopK::from_storage(k, scratch.take_heap());
                     for h in row {
                         if h.label >= 0 {
                             heap.push(exact(h.label), h.label);
                         }
                     }
-                    heap.into_hits()
-                        .into_iter()
-                        .map(|(distance, label)| Hit { distance, label })
-                        .collect()
+                    let refined: Vec<Hit> = heap
+                        .as_sorted_hits()
+                        .iter()
+                        .map(|&(distance, label)| Hit { distance, label })
+                        .collect();
+                    scratch.put_heap(heap.into_storage());
+                    refined
                 }
                 QueryKind::Range { radius } => {
                     let mut out: Vec<(f32, i64)> = row
@@ -117,10 +125,11 @@ impl Index for IndexRefineFlat {
                     out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
                     out.into_iter().map(|(distance, label)| Hit { distance, label }).collect()
                 }
-            };
-            hits.push(refined);
-        }
-        Ok(QueryResponse { hits, stats: coarse.stats })
+            }
+        });
+        let mut stats = coarse.stats;
+        exec.stamp_stats(&mut stats, hits.len());
+        Ok(QueryResponse { hits, stats })
     }
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {

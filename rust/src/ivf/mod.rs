@@ -11,16 +11,31 @@
 //! `by_residual = false`, i.e. the PQ codes encode raw vectors and one LUT
 //! set (built once per query from the full query vector) is shared across
 //! all probed cells.
+//!
+//! # Per-list scanning and thread-count determinism
+//!
+//! A query's candidate set is defined **per probed list**: every list is
+//! scanned with its own reservoir (or range collector), the per-list
+//! candidates are concatenated in probe order, and one final deterministic
+//! selection + re-rank produces the answer. Because no admission threshold
+//! crosses a list boundary, the candidate set does not depend on how lists
+//! are interleaved — so the executor may scan lists serially on one
+//! thread, fan the batch out across queries, or fan a single
+//! large-`nprobe` query out across its probed lists
+//! (`QueryExecutor::run_tasks`), and the results are **bit-identical** in
+//! every case. Candidates carry `(list, position)` instead of external
+//! ids, so re-ranking reads codes directly from the packed lists — the old
+//! per-query label→position `HashMap` is gone.
 
+use crate::exec::{MaskPlan, QueryExecutor, ScanScratch};
 use crate::hnsw::{Hnsw, HnswParams};
 use crate::index::query::{Filter, Hit, QueryKind, QueryStats};
 use crate::kmeans::{KMeans, KMeansParams};
-use crate::pq::bitwidth::build_width_luts;
+use crate::pq::bitwidth::build_width_luts_with;
 use crate::pq::fastscan::{scan_filtered, FastScanParams, FilterMask, ScanSink};
 use crate::pq::{CodeWidth, PackedCodes, PqParams, ProductQuantizer};
 use crate::util::topk::{TopK, U16Reservoir};
 use crate::{Error, Result};
-use std::collections::HashMap;
 
 /// Strategy for the coarse (cell-assignment) search.
 pub enum CoarseQuantizer {
@@ -31,9 +46,13 @@ pub enum CoarseQuantizer {
 }
 
 impl CoarseQuantizer {
-    /// `nprobe` nearest centroids, ascending by distance. `ef_override`
-    /// (per-request) replaces the stored HNSW candidate-list width.
-    fn assign(
+    /// `nprobe` nearest centroids, ascending by distance, written into the
+    /// reusable `out` buffer (`heap_buf` is recycled heap storage — the
+    /// flat arm runs allocation-free after warmup; the HNSW graph walk
+    /// allocates internally). `ef_override` (per-request) replaces the
+    /// stored HNSW candidate-list width.
+    #[allow(clippy::too_many_arguments)]
+    fn assign_into(
         &self,
         centroids: &[f32],
         nlist: usize,
@@ -41,15 +60,20 @@ impl CoarseQuantizer {
         q: &[f32],
         nprobe: usize,
         ef_override: Option<usize>,
-    ) -> Vec<usize> {
+        out: &mut Vec<usize>,
+        heap_buf: &mut Vec<(f32, i64)>,
+    ) {
+        out.clear();
         match self {
             CoarseQuantizer::Flat => {
-                let mut heap = TopK::new(nprobe.min(nlist));
+                let mut heap =
+                    TopK::from_storage(nprobe.min(nlist), std::mem::take(heap_buf));
                 for c in 0..nlist {
                     let d = crate::util::l2_sq(q, &centroids[c * dim..(c + 1) * dim]);
                     heap.push(d, c as i64);
                 }
-                heap.into_sorted().1.into_iter().filter(|&l| l >= 0).map(|l| l as usize).collect()
+                out.extend(heap.as_sorted_hits().iter().map(|&(_, l)| l as usize));
+                *heap_buf = heap.into_storage();
             }
             CoarseQuantizer::Hnsw { graph, ef_search } => {
                 // same resolution for both surfaces (stored default and
@@ -57,7 +81,7 @@ impl CoarseQuantizer {
                 // either way, so shim-set and per-request ef_search agree
                 let ef = ef_override.unwrap_or(*ef_search).max(4 * nprobe);
                 let (_d, ids) = graph.search(q, nprobe, ef);
-                ids.into_iter().filter(|&l| l >= 0).map(|l| l as usize).collect()
+                out.extend(ids.into_iter().filter(|&l| l >= 0).map(|l| l as usize));
             }
         }
     }
@@ -277,7 +301,7 @@ impl IvfPq4 {
 
     /// [`IvfPq4::search`] with explicit per-request parameters: probe
     /// width, optional HNSW candidate-list width, and kernel parameters.
-    /// A flattened-and-padded wrapper over the [`IvfPq4::query_with`]
+    /// A flattened-and-padded wrapper over the [`IvfPq4::query_exec_with`]
     /// machinery (top-k, unfiltered).
     pub fn search_with(
         &self,
@@ -287,7 +311,7 @@ impl IvfPq4 {
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        let (rows, _stats) = self.query_impl(
+        let (rows, _stats) = self.query_exec_with(
             queries,
             None,
             &QueryKind::TopK { k },
@@ -295,6 +319,7 @@ impl IvfPq4 {
             nprobe,
             ef_search,
             fastscan,
+            QueryExecutor::global(),
         )?;
         Ok(Self::flatten_padded(rows, k, queries.len() / self.dim.max(1)))
     }
@@ -312,7 +337,7 @@ impl IvfPq4 {
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        let (rows, _stats) = self.query_impl(
+        let (rows, _stats) = self.query_exec_with(
             queries,
             Some(luts),
             &QueryKind::TopK { k },
@@ -320,13 +345,13 @@ impl IvfPq4 {
             nprobe,
             ef_search,
             fastscan,
+            QueryExecutor::global(),
         )?;
         Ok(Self::flatten_padded(rows, k, queries.len() / self.dim.max(1)))
     }
 
     /// The typed query entry: top-k or range, optionally filtered, with
-    /// explicit runtime parameters. Returns per-query variable-length hits
-    /// plus per-query stats.
+    /// explicit runtime parameters, on the process-global executor.
     #[allow(clippy::too_many_arguments)]
     pub fn query_with(
         &self,
@@ -337,7 +362,16 @@ impl IvfPq4 {
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
     ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>)> {
-        self.query_impl(queries, None, kind, filter, nprobe, ef_search, fastscan)
+        self.query_exec_with(
+            queries,
+            None,
+            kind,
+            filter,
+            nprobe,
+            ef_search,
+            fastscan,
+            QueryExecutor::global(),
+        )
     }
 
     /// [`IvfPq4::query_with`] with precomputed per-query f32 LUTs.
@@ -352,7 +386,16 @@ impl IvfPq4 {
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
     ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>)> {
-        self.query_impl(queries, Some(luts), kind, filter, nprobe, ef_search, fastscan)
+        self.query_exec_with(
+            queries,
+            Some(luts),
+            kind,
+            filter,
+            nprobe,
+            ef_search,
+            fastscan,
+            QueryExecutor::global(),
+        )
     }
 
     /// Per-query f32 scan LUTs (`nq × m_codes × sub_ksub`), shareable with
@@ -396,8 +439,18 @@ impl IvfPq4 {
         scaled.min(nprobe.saturating_mul(16)).min(self.params.nlist).max(nprobe)
     }
 
+    /// The plan/execute query core: top-k or range, optionally filtered,
+    /// with explicit runtime parameters, on an explicit executor.
+    ///
+    /// Builds the request's plan once (validation, escalated probe width,
+    /// lazily-compiled per-list filter masks shared across the batch),
+    /// then fans out: across queries when the batch is at least as wide as
+    /// the executor, otherwise across each query's probed lists — a single
+    /// large-`nprobe` query uses the whole socket. Per-list candidate
+    /// semantics make both schedules return bit-identical results (see the
+    /// module docs).
     #[allow(clippy::too_many_arguments)]
-    fn query_impl(
+    pub fn query_exec_with(
         &self,
         queries: &[f32],
         luts: Option<&[f32]>,
@@ -406,6 +459,7 @@ impl IvfPq4 {
         nprobe: usize,
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
+        exec: &QueryExecutor,
     ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>)> {
         kind.validate()?;
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
@@ -433,105 +487,225 @@ impl IvfPq4 {
         }
         // a provably-empty filter answers without probing anything
         if filter.is_some_and(|f| f.is_provably_empty()) {
-            let stats = QueryStats { codes_scanned: 0, lists_probed: 0, filter_selectivity: 0.0 };
+            let stats = QueryStats {
+                codes_scanned: 0,
+                lists_probed: 0,
+                filter_selectivity: 0.0,
+                ..Default::default()
+            };
             return Ok((vec![Vec::new(); nq], vec![stats; nq]));
         }
+        // ---- plan: everything below is resolved once per request ----
         let nprobe = self.escalated_nprobe(nprobe.max(1), filter);
-        // per-list filter mask slices, built lazily once per *call* (they
-        // depend on the filter, not the query) and shared across the batch
-        let mut list_masks: HashMap<usize, FilterMask> = HashMap::new();
-        let mut hits = Vec::with_capacity(nq);
-        let mut stats = Vec::with_capacity(nq);
-        let mut luts_buf = Vec::new();
-        for qi in 0..nq {
+        // per-list filter masks, compiled lazily (only probed lists pay)
+        // and shared read-only across the whole batch and all workers
+        let masks = match filter {
+            Some(_) => MaskPlan::lists(self.params.nlist),
+            None => MaskPlan::None,
+        };
+        let run_one = |qi: usize, scratch: &mut ScanScratch, list_exec: Option<&QueryExecutor>| {
             let q = &queries[qi * self.dim..(qi + 1) * self.dim];
-            let luts_f32 = match luts {
+            let mut lbuf = scratch.take_luts();
+            let luts_f32: &[f32] = match luts {
                 Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
                 None => {
-                    luts_buf = pq.compute_luts(q);
-                    &luts_buf[..]
+                    pq.compute_luts_into(q, &mut lbuf);
+                    &lbuf
                 }
             };
-            let (row, st) = self.query_one(
-                pq,
-                q,
-                luts_f32,
-                kind,
-                filter,
-                &mut list_masks,
-                nprobe,
-                ef_search,
-                fastscan,
+            let out = self.query_one_exec(
+                pq, q, luts_f32, kind, filter, &masks, nprobe, ef_search, fastscan, scratch,
+                list_exec,
             );
+            scratch.put_luts(lbuf);
+            out
+        };
+        // ---- execute: batch fan-out, or intra-query multi-list fan-out
+        // for batches too small to fill the thread budget. Both schedules
+        // compute the identical per-list candidate sets.
+        let batch_mode = nq >= exec.threads() || exec.threads() <= 1;
+        let results: Vec<(Vec<Hit>, QueryStats)> = if batch_mode {
+            exec.run_batch(nq, |qi, scratch| run_one(qi, scratch, None))
+        } else {
+            let mut guard = exec.checkout_scratch();
+            (0..nq).map(|qi| run_one(qi, &mut *guard, Some(exec))).collect()
+        };
+        let mut hits = Vec::with_capacity(nq);
+        let mut stats = Vec::with_capacity(nq);
+        for (row, mut st) in results {
+            // batch mode: the fan-out width is the batch's; intra-query
+            // mode: query_one_exec already recorded the width its actual
+            // probe count fanned out over (may be below nprobe when the
+            // coarse quantizer returns fewer lists)
+            if batch_mode {
+                st.threads_used = exec.threads_for(nq);
+            }
+            st.scratch_bytes = exec.scratch_high_water_bytes();
             hits.push(row);
             stats.push(st);
         }
         Ok((hits, stats))
     }
 
+    /// Scan one probed list into per-list candidates: `(d16, position)`
+    /// pairs from the list's own reservoir (top-k) or range collector.
+    /// `storage` is recycled between lists; the returned counts are
+    /// `(candidates, codes_considered, codes_admitted)`.
     #[allow(clippy::too_many_arguments)]
-    fn query_one(
+    fn scan_one_list(
+        &self,
+        c: usize,
+        kind: &QueryKind,
+        kluts: &crate::pq::fastscan::KernelLuts,
+        range_bound: u16,
+        filter: Option<&Filter>,
+        masks: &MaskPlan,
+        fastscan: &FastScanParams,
+        storage: Vec<(u16, i64)>,
+    ) -> (Vec<(u16, i64)>, usize, usize) {
+        let list = &self.lists[c];
+        let Some(packed) = &list.packed else {
+            // empty (never-packed) list: the recycled storage still holds
+            // the PREVIOUS list's candidates — hand back an empty set, or
+            // the caller would merge stale candidates under this list's id
+            let mut storage = storage;
+            storage.clear();
+            return (storage, 0, 0);
+        };
+        let n = list.ids.len();
+        let mask: Option<&FilterMask> = match filter {
+            Some(f) => masks.list_mask(c, || f.build_mask(Some(&list.ids), n)),
+            None => None,
+        };
+        let admitted = mask.map(|m| m.pass_count()).unwrap_or(n);
+        // scan with identity labels: candidates are *positions within the
+        // list* — re-ranking reads codes straight from (list, position),
+        // external ids are applied at output time
+        match kind {
+            QueryKind::TopK { k } => {
+                let mut reservoir =
+                    U16Reservoir::from_storage(*k, fastscan.reservoir_factor, storage);
+                {
+                    let mut sink = ScanSink::TopK(&mut reservoir);
+                    scan_filtered(packed, kluts, fastscan.backend, None, mask, &mut sink);
+                }
+                (reservoir.into_candidates(), n, admitted)
+            }
+            QueryKind::Range { .. } => {
+                let mut raw = storage;
+                raw.clear(); // recycled between lists: drop the previous list's hits
+                {
+                    let mut sink = ScanSink::Range { bound: range_bound, hits: &mut raw };
+                    scan_filtered(packed, kluts, fastscan.backend, None, mask, &mut sink);
+                }
+                (raw, n, admitted)
+            }
+        }
+    }
+
+    /// One query against the plan: coarse-assign, scan each probed list
+    /// into its own candidate set (serially, or fanned out over
+    /// `list_exec` when given — same results either way), merge in probe
+    /// order through one deterministic final selection, re-rank.
+    #[allow(clippy::too_many_arguments)]
+    fn query_one_exec(
         &self,
         pq: &ProductQuantizer,
         q: &[f32],
         luts_f32: &[f32],
         kind: &QueryKind,
         filter: Option<&Filter>,
-        list_masks: &mut HashMap<usize, FilterMask>,
+        masks: &MaskPlan,
         nprobe: usize,
         ef_search: Option<usize>,
         fastscan: &FastScanParams,
+        scratch: &mut ScanScratch,
+        list_exec: Option<&QueryExecutor>,
     ) -> (Vec<Hit>, QueryStats) {
         // 1. coarse quantization (paper §4 step 1-2)
-        let probes =
-            self.coarse.assign(&self.centroids, self.params.nlist, self.dim, q, nprobe, ef_search);
+        let mut probes = scratch.take_probes();
+        {
+            let mut hbuf = scratch.take_heap();
+            self.coarse.assign_into(
+                &self.centroids,
+                self.params.nlist,
+                self.dim,
+                q,
+                nprobe,
+                ef_search,
+                &mut probes,
+                &mut hbuf,
+            );
+            scratch.put_heap(hbuf);
+        }
 
         // 2. one LUT set shared across probed lists (by_residual = false),
-        //    quantized/fused per the index's code width
-        let wl = build_width_luts(luts_f32, self.pq_m, self.width);
-        let (qluts, kluts) = (wl.qluts, wl.kernel);
+        //    quantized/fused per the index's code width, built on scratch
+        let wl = build_width_luts_with(luts_f32, self.pq_m, self.width, scratch.wl_buf_mut());
+        let range_bound = match kind {
+            QueryKind::Range { radius } => wl.qluts.collection_bound(*radius, fastscan.rerank),
+            QueryKind::TopK { .. } => 0,
+        };
 
-        // 3. fastscan distance estimation over each probed list, with the
-        //    filter sliced into a per-list position mask
+        // 3. per-list fastscan into candidates, merged in probe order.
+        //    Candidates encode (list, position) in the label: position in
+        //    the low 32 bits, probe-list id above.
+        let mut merged = scratch.take_merged();
         let mut considered = 0usize;
         let mut passed = 0usize;
-        let mut scan_list = |sink: &mut ScanSink<'_>| {
-            for &c in &probes {
-                let list = &self.lists[c];
-                let Some(packed) = &list.packed else { continue };
-                considered += list.ids.len();
-                let mask: Option<&FilterMask> = match filter {
-                    Some(f) => {
-                        let m = list_masks
-                            .entry(c)
-                            .or_insert_with(|| f.build_mask(Some(&list.ids), list.ids.len()));
-                        Some(m)
-                    }
-                    None => None,
-                };
-                passed += mask.map(|m| m.pass_count()).unwrap_or(list.ids.len());
-                scan_filtered(packed, &kluts, fastscan.backend, Some(&list.ids), mask, sink);
-            }
-        };
-        let cands: Vec<(u16, i64)> = match kind {
-            QueryKind::TopK { k } => {
-                let mut reservoir = U16Reservoir::new(*k, fastscan.reservoir_factor);
-                {
-                    let mut sink = ScanSink::TopK(&mut reservoir);
-                    scan_list(&mut sink);
+        match list_exec {
+            Some(lexec) if probes.len() > 1 && lexec.threads() > 1 => {
+                // intra-query fan-out: each probed list is an independent
+                // task; results are collected (and merged) in probe order.
+                // The scan runs on the task worker's pooled storage (no
+                // working-set growth after warmup); only the exact-size
+                // candidate copy crosses back — the one allocation this
+                // schedule needs for the cross-thread hand-off.
+                let per_list = lexec.run_tasks(probes.len(), |i, task_scratch| {
+                    let (cands, n, admitted) = self.scan_one_list(
+                        probes[i],
+                        kind,
+                        &wl.kernel,
+                        range_bound,
+                        filter,
+                        masks,
+                        fastscan,
+                        task_scratch.take_items(),
+                    );
+                    let result = cands.as_slice().to_vec();
+                    task_scratch.put_items(cands);
+                    (result, n, admitted)
+                });
+                for (i, (cands, n, admitted)) in per_list.into_iter().enumerate() {
+                    considered += n;
+                    passed += admitted;
+                    let c = probes[i] as i64;
+                    merged.extend(cands.iter().map(|&(d, pos)| (d, (c << 32) | pos)));
                 }
-                reservoir.into_candidates()
             }
-            QueryKind::Range { radius } => {
-                let bound = qluts.collection_bound(*radius, fastscan.rerank);
-                let mut raw = Vec::new();
-                {
-                    let mut sink = ScanSink::Range { bound, hits: &mut raw };
-                    scan_list(&mut sink);
+            _ => {
+                // serial per-list scans on this worker's scratch —
+                // identical candidate sets, zero allocations after warmup
+                let mut storage = scratch.take_items();
+                for &c in probes.iter() {
+                    let (cands, n, admitted) = self.scan_one_list(
+                        c,
+                        kind,
+                        &wl.kernel,
+                        range_bound,
+                        filter,
+                        masks,
+                        fastscan,
+                        storage,
+                    );
+                    considered += n;
+                    passed += admitted;
+                    merged.extend(cands.iter().map(|&(d, pos)| (d, ((c as i64) << 32) | pos)));
+                    storage = cands;
                 }
-                raw
+                scratch.put_items(storage);
             }
-        };
+        }
         let st = QueryStats {
             codes_scanned: considered,
             lists_probed: probes.len(),
@@ -540,76 +714,87 @@ impl IvfPq4 {
             } else {
                 1.0
             },
+            // intra-query fan-out width over the lists actually probed
+            // (the caller overwrites this with the batch width in batch
+            // mode); serial scans report 1
+            threads_used: list_exec.map(|le| le.threads_for(probes.len())).unwrap_or(1),
+            ..Default::default()
         };
 
-        // 4. re-rank with exact f32 tables; candidates are addressed by
-        //    external id, located through a per-search map over probed lists
-        let exact = |pos_map: &HashMap<i64, (usize, usize)>,
-                     codes_buf: &mut [u8],
-                     d16: u16,
-                     id: i64| {
-            // Every candidate id comes from a probed list, so the map
-            // covers it; duplicate external ids collapse to one position,
-            // which re-ranks one representative of the duplicate set —
-            // defensible, and never a panic. Fall back to the decoded
-            // coarse distance if an id is missing.
-            match pos_map.get(&id) {
-                Some(&(c, j)) => {
-                    let packed = self.lists[c].packed.as_ref().unwrap();
-                    for (mi, slot) in codes_buf.iter_mut().enumerate() {
-                        *slot = packed.code_at(j, mi);
-                    }
-                    pq.adc_distance(luts_f32, codes_buf)
-                }
-                None => qluts.decode(d16),
-            }
-        };
-        let pos_map: Option<HashMap<i64, (usize, usize)>> = fastscan.rerank.then(|| {
-            let mut map = HashMap::new();
-            for &c in &probes {
-                for (j, &id) in self.lists[c].ids.iter().enumerate() {
-                    map.insert(id, (c, j));
-                }
-            }
-            map
-        });
+        // 4. deterministic final selection + exact re-rank. Candidates are
+        //    addressed as (list, position): codes come straight from the
+        //    packed list, the external id from the list's id array —
+        //    duplicate external ids re-rank independently, never a panic.
+        let unpack = |pref: i64| ((pref >> 32) as usize, (pref & 0xFFFF_FFFF) as usize);
         let row: Vec<Hit> = match kind {
             QueryKind::TopK { k } => {
-                let mut heap = TopK::new(*k);
-                match &pos_map {
-                    Some(map) => {
-                        let mut codes_buf = vec![0u8; pq.m];
-                        for (d16, id) in cands {
-                            heap.push(exact(map, &mut codes_buf, d16, id), id);
-                        }
-                    }
-                    None => {
-                        for (d16, id) in cands {
-                            heap.push(qluts.decode(d16), id);
-                        }
-                    }
+                let mut selection =
+                    U16Reservoir::from_storage(*k, fastscan.reservoir_factor, scratch.take_items());
+                for &(d, pref) in merged.iter() {
+                    selection.push(d, pref);
                 }
-                heap.into_hits()
-                    .into_iter()
-                    .map(|(distance, label)| Hit { distance, label })
-                    .collect()
+                let cands = selection.into_candidates();
+                let mut heap = TopK::from_storage(*k, scratch.take_heap());
+                let mut codes_buf = scratch.take_codes();
+                codes_buf.resize(pq.m, 0);
+                for &(d16, pref) in cands.iter() {
+                    let (c, j) = unpack(pref);
+                    let list = &self.lists[c];
+                    let d = if fastscan.rerank {
+                        let packed = list.packed.as_ref().unwrap();
+                        for (mi, slot) in codes_buf.iter_mut().enumerate() {
+                            *slot = packed.code_at(j, mi);
+                        }
+                        pq.adc_distance(luts_f32, &codes_buf)
+                    } else {
+                        wl.qluts.decode(d16)
+                    };
+                    heap.push(d, list.ids[j]);
+                }
+                let row = heap
+                    .as_sorted_hits()
+                    .iter()
+                    .map(|&(distance, label)| Hit { distance, label })
+                    .collect();
+                scratch.put_codes(codes_buf);
+                scratch.put_heap(heap.into_storage());
+                scratch.put_items(cands);
+                row
             }
             QueryKind::Range { radius } => {
-                let mut out: Vec<(f32, i64)> = match &pos_map {
-                    Some(map) => {
-                        let mut codes_buf = vec![0u8; pq.m];
-                        cands
-                            .into_iter()
-                            .map(|(d16, id)| (exact(map, &mut codes_buf, d16, id), id))
-                            .filter(|&(d, _)| d <= *radius)
-                            .collect()
+                let mut codes_buf = scratch.take_codes();
+                codes_buf.resize(pq.m, 0);
+                let mut out: Vec<Hit> = Vec::with_capacity(merged.len());
+                for &(d16, pref) in merged.iter() {
+                    let (c, j) = unpack(pref);
+                    let list = &self.lists[c];
+                    if fastscan.rerank {
+                        let packed = list.packed.as_ref().unwrap();
+                        for (mi, slot) in codes_buf.iter_mut().enumerate() {
+                            *slot = packed.code_at(j, mi);
+                        }
+                        let d = pq.adc_distance(luts_f32, &codes_buf);
+                        if d <= *radius {
+                            out.push(Hit { distance: d, label: list.ids[j] });
+                        }
+                    } else {
+                        out.push(Hit { distance: wl.qluts.decode(d16), label: list.ids[j] });
                     }
-                    None => cands.into_iter().map(|(d16, id)| (qluts.decode(d16), id)).collect(),
-                };
-                out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-                out.into_iter().map(|(distance, label)| Hit { distance, label }).collect()
+                }
+                out.sort_by(|a, b| {
+                    a.distance
+                        .partial_cmp(&b.distance)
+                        .unwrap()
+                        .then(a.label.cmp(&b.label))
+                });
+                scratch.put_codes(codes_buf);
+                out
             }
         };
+        merged.clear();
+        scratch.put_merged(merged);
+        wl.recycle(scratch.wl_buf_mut());
+        scratch.put_probes(probes);
         (row, st)
     }
 
@@ -1033,6 +1218,53 @@ mod tests {
             assert!((h.distance - all[h.label as usize]).abs() < 1e-6);
         }
         assert_eq!(stats[0].codes_scanned, 1000);
+    }
+
+    /// Regression: probing an EMPTY inverted list must hand back an empty
+    /// candidate set — the recycled per-list scan storage previously
+    /// leaked the preceding list's candidates under the empty list's id
+    /// (panicking re-rank or mislabeling hits), and only on the serial
+    /// schedule, which also broke thread-count determinism.
+    #[test]
+    fn empty_probed_lists_yield_no_candidates() {
+        use crate::exec::QueryExecutor;
+        let data = clustered_data(600, 16, 4, 80);
+        let mut idx = IvfPq4::new(16, IvfParams::new(12), PqParams::new_4bit(4));
+        idx.train(&data).unwrap();
+        // add only cluster 0's members: most of the 12 lists stay empty
+        let subset: Vec<f32> = (0..600)
+            .filter(|i| i % 4 == 0)
+            .flat_map(|i| data[i * 16..(i + 1) * 16].to_vec())
+            .collect();
+        idx.add(&subset).unwrap();
+        idx.seal().unwrap();
+        let q = &data[..16];
+        let fs = idx.fastscan.clone();
+        let kind = QueryKind::TopK { k: 10 };
+        // serial schedule (1 thread → per-list loop on recycled storage)
+        let exec1 = QueryExecutor::new(1);
+        let (hits1, stats) = idx
+            .query_exec_with(q, None, &kind, None, 12, None, &fs, &exec1)
+            .unwrap();
+        assert_eq!(stats[0].lists_probed, 12);
+        assert!(!hits1[0].is_empty() && hits1[0].len() <= 10);
+        // every label comes from the 150 vectors actually added
+        assert!(hits1[0].iter().all(|h| (0..150).contains(&h.label)), "{:?}", hits1[0]);
+        // intra-query parallel schedule agrees bit for bit
+        let exec4 = QueryExecutor::new(4);
+        let (hits4, _) = idx
+            .query_exec_with(q, None, &kind, None, 12, None, &fs, &exec4)
+            .unwrap();
+        assert_eq!(hits1, hits4, "empty-list handling differs between schedules");
+        // range kind exercises the same storage recycling
+        let (rhits1, _) = idx
+            .query_exec_with(q, None, &QueryKind::Range { radius: 1e9 }, None, 12, None, &fs, &exec1)
+            .unwrap();
+        let (rhits4, _) = idx
+            .query_exec_with(q, None, &QueryKind::Range { radius: 1e9 }, None, 12, None, &fs, &exec4)
+            .unwrap();
+        assert_eq!(rhits1[0].len(), 150, "range over all added vectors");
+        assert_eq!(rhits1, rhits4);
     }
 
     #[test]

@@ -64,6 +64,31 @@
 //! passing [`index::SearchParams`] per call. Likewise `search` survives
 //! as a padded-top-k shim over `query`.
 //!
+//! ## Execution model: plan once, execute on pooled scratch
+//!
+//! Under `query` sits the plan/execute layer ([`exec`]). Each request is
+//! resolved **once** into a plan — effective parameters, the filter
+//! compiled into block-aligned kernel masks, the precomputed-LUT recipe —
+//! and then executed by a [`exec::QueryExecutor`]: a stateless engine
+//! holding only a thread budget and a pool of per-worker
+//! [`exec::ScanScratch`] arenas (LUT buffers, reservoirs, re-rank
+//! staging — grown, never shrunk, **zero heap allocations** in the
+//! steady-state scan path). Query batches fan out across workers; a
+//! single large-`nprobe` IVF query fans its probed lists out instead, so
+//! one query can use the whole socket.
+//!
+//! The division of state is what keeps this safe and reproducible:
+//! sealed indexes are immutable `Arc<dyn Index>` values (the PR-2
+//! invariant), plans are read-only, and all mutation lives in scratch
+//! arenas owned by exactly one worker at a time — no locks on the query
+//! path. Because the IVF candidate set is defined per probed list and
+//! merged deterministically, results are **bit-identical for every
+//! thread count** (`ARMPQ_THREADS=1` vs `=4` differ only in wall-clock).
+//! [`index::Index::query`] runs on the process-global executor;
+//! the coordinator threads one shared executor through every backend and
+//! shard, and reports `threads_used` / scratch high-water through
+//! [`index::QueryStats`] and the `stats` verb.
+//!
 //! ## Code widths
 //!
 //! The fastscan kernel is generalized over code width
@@ -78,6 +103,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod error;
 pub mod eval;
+pub mod exec;
 pub mod experiments;
 pub mod hnsw;
 pub mod index;

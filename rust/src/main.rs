@@ -8,7 +8,7 @@
 //! armpq client    --addr 127.0.0.1:7878 --nq 100 --k 10
 //! armpq bench-fig2   [--dataset sift|deep] [--n …] [--m 8,16,32,64]
 //! armpq bench-table1 [--n …] [--nlist …] [--nprobe 1,2,4]
-//! armpq bench-micro  [--m 16] [--width 2,4,8]
+//! armpq bench-micro  [--m 16] [--width 2,4,8] [--threads 1,2,4]
 //! armpq bench-layout [--n …] [--m 16] [--width 2,4,8]
 //! armpq bench-pjrt   [--artifacts artifacts]
 //! ```
@@ -80,6 +80,9 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
             // sweep (masked scan vs scan-then-post-filter) per width
             let sels = args.get_usize_list("filter-selectivity", &[]);
             let filter_n = args.get_usize("filter-n", 320_000);
+            // `--threads 1,2,4` appends the executor thread-scaling curve
+            // per width (empty = skip; `--threads 0` = default 1,2,4,ncpu)
+            let threads = args.get_usize_list("threads", &[]);
             // `--width 2,4,8` (CLI or config file) sweeps the
             // Quicker-ADC trade-off axis in one run
             for &width in &cfg.widths {
@@ -88,6 +91,24 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
                 t.save()?;
                 if !sels.is_empty() {
                     let t = experiments::run_filter_micro(filter_n, m, width, &sels, cfg.seed);
+                    t.print();
+                    t.save()?;
+                }
+                if !threads.is_empty() {
+                    let axis = experiments::default_thread_axis(
+                        &threads.iter().copied().filter(|&t| t > 0).collect::<Vec<_>>(),
+                    );
+                    let t = experiments::run_thread_scaling(
+                        &cfg.dataset,
+                        cfg.n,
+                        cfg.nq,
+                        (cfg.n as f64).sqrt() as usize,
+                        m,
+                        width,
+                        &axis,
+                        cfg.trials,
+                        cfg.seed,
+                    )?;
                     t.print();
                     t.save()?;
                 }

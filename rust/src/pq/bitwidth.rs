@@ -173,6 +173,39 @@ pub struct WidthLuts {
     pub kernel: KernelLuts,
 }
 
+impl WidthLuts {
+    /// Hand the table buffers back to a [`WidthLutsBuf`] so the next
+    /// [`build_width_luts_with`] call reuses them instead of allocating.
+    pub fn recycle(self, buf: &mut WidthLutsBuf) {
+        buf.qlut_data = self.qluts.data;
+        buf.kernel_bytes = self.kernel.bytes;
+    }
+}
+
+/// Reusable backing storage for [`build_width_luts_with`] — one per
+/// scratch arena. Buffers are taken for the lifetime of a [`WidthLuts`]
+/// and returned by [`WidthLuts::recycle`]; grown, never shrunk, so a
+/// warmed-up arena builds per-query tables with zero heap allocations.
+#[derive(Debug, Default)]
+pub struct WidthLutsBuf {
+    /// 2-bit fused-row staging (`m.div_ceil(2) × 16` f32).
+    fused: Vec<f32>,
+    /// [`QuantizedLuts::data`] backing.
+    qlut_data: Vec<u8>,
+    /// [`KernelLuts`] `bytes` backing.
+    kernel_bytes: Vec<u8>,
+}
+
+impl WidthLutsBuf {
+    /// Bytes currently reserved across the buffers (capacity accounting
+    /// for the executor's scratch high-water metric).
+    pub fn reserved_bytes(&self) -> usize {
+        self.fused.capacity() * std::mem::size_of::<f32>()
+            + self.qlut_data.capacity()
+            + self.kernel_bytes.capacity()
+    }
+}
+
 /// Quantize + arrange per-query f32 tables for a width's kernel.
 ///
 /// `luts_f32` is the internal quantizer's table, `code_columns(m) ×
@@ -184,17 +217,37 @@ pub struct WidthLuts {
 /// * 4-bit: rows pass through (the existing path).
 /// * 8-bit: the `2m` half-space rows map one-to-one onto lo/hi table rows.
 pub fn build_width_luts(luts_f32: &[f32], m: usize, width: CodeWidth) -> WidthLuts {
+    build_width_luts_with(luts_f32, m, width, &mut WidthLutsBuf::default())
+}
+
+/// [`build_width_luts`] on recycled [`WidthLutsBuf`] storage — the
+/// executor's per-thread scratch path. Bit-identical output; zero heap
+/// allocations once the buffers have grown to the index's table shape.
+pub fn build_width_luts_with(
+    luts_f32: &[f32],
+    m: usize,
+    width: CodeWidth,
+    buf: &mut WidthLutsBuf,
+) -> WidthLuts {
     let cols = width.code_columns(m);
     let sub_ksub = width.sub_ksub();
     debug_assert_eq!(luts_f32.len(), cols * sub_ksub, "luts shape vs width");
+    let qlut_data = std::mem::take(&mut buf.qlut_data);
     let qluts = match width {
         CodeWidth::W2 => {
-            let fused = fuse_2bit_rows(luts_f32, m);
-            QuantizedLuts::from_f32(&fused, m.div_ceil(2), 16)
+            fuse_2bit_rows_into(luts_f32, m, &mut buf.fused);
+            QuantizedLuts::from_f32_reuse(&buf.fused, m.div_ceil(2), 16, qlut_data)
         }
-        CodeWidth::W4 | CodeWidth::W8 => QuantizedLuts::from_f32(luts_f32, cols, 16),
+        CodeWidth::W4 | CodeWidth::W8 => {
+            QuantizedLuts::from_f32_reuse(luts_f32, cols, 16, qlut_data)
+        }
     };
-    let kernel = KernelLuts::build_wired(&qluts, width.lut_rows(m), width.wiring());
+    let kernel = KernelLuts::build_wired_reuse(
+        &qluts,
+        width.lut_rows(m),
+        width.wiring(),
+        std::mem::take(&mut buf.kernel_bytes),
+    );
     WidthLuts { qluts, kernel }
 }
 
@@ -203,8 +256,16 @@ pub fn build_width_luts(luts_f32: &[f32], m: usize, width: CodeWidth) -> WidthLu
 /// sub-quantizer fuses with a phantom all-zero partner (its `c₁` index is
 /// always 0 at scan time, so the duplicated entries are never addressed).
 fn fuse_2bit_rows(luts_f32: &[f32], m: usize) -> Vec<f32> {
+    let mut fused = Vec::new();
+    fuse_2bit_rows_into(luts_f32, m, &mut fused);
+    fused
+}
+
+/// [`fuse_2bit_rows`] into a reusable buffer (cleared and resized).
+fn fuse_2bit_rows_into(luts_f32: &[f32], m: usize, fused: &mut Vec<f32>) {
     let nfused = m.div_ceil(2);
-    let mut fused = vec![0.0f32; nfused * 16];
+    fused.clear();
+    fused.resize(nfused * 16, 0.0);
     for p in 0..nfused {
         let a = &luts_f32[(2 * p) * 4..(2 * p) * 4 + 4];
         for i in 0..16 {
@@ -212,7 +273,6 @@ fn fuse_2bit_rows(luts_f32: &[f32], m: usize) -> Vec<f32> {
             fused[p * 16 + i] = a[i & 3] + hi;
         }
     }
-    fused
 }
 
 #[cfg(test)]

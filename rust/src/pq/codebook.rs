@@ -146,8 +146,18 @@ impl ProductQuantizer {
     /// Build the f32 ADC lookup table for `query`: `m × ksub`, entry
     /// `[mi][k] = ‖q_mi − c_mi,k‖²` (paper Eq. 2, extended from VQ to PQ).
     pub fn compute_luts(&self, query: &[f32]) -> Vec<f32> {
+        let mut luts = Vec::new();
+        self.compute_luts_into(query, &mut luts);
+        luts
+    }
+
+    /// [`ProductQuantizer::compute_luts`] into a reusable buffer (cleared
+    /// and resized; capacity kept across calls) — the executor's per-thread
+    /// scratch path, allocation-free once the buffer has grown.
+    pub fn compute_luts_into(&self, query: &[f32], luts: &mut Vec<f32>) {
         debug_assert_eq!(query.len(), self.dim);
-        let mut luts = vec![0.0f32; self.m * self.ksub];
+        luts.clear();
+        luts.resize(self.m * self.ksub, 0.0);
         for mi in 0..self.m {
             let qsub = &query[mi * self.dsub..(mi + 1) * self.dsub];
             let cents = self.sub_centroids(mi);
@@ -156,7 +166,6 @@ impl ProductQuantizer {
                     crate::util::l2_sq(qsub, &cents[k * self.dsub..(k + 1) * self.dsub]);
             }
         }
-        luts
     }
 
     /// [`ProductQuantizer::compute_luts`] for a whole query batch

@@ -91,9 +91,21 @@ impl KernelLuts {
 
     /// Arrange quantized rows for the kernel with an explicit wiring.
     pub fn build_wired(qluts: &QuantizedLuts, lut_rows: usize, wiring: LaneWiring) -> Self {
+        Self::build_wired_reuse(qluts, lut_rows, wiring, Vec::new())
+    }
+
+    /// [`KernelLuts::build_wired`] on recycled `bytes` storage (cleared and
+    /// resized; capacity kept) — the executor's scratch path.
+    pub fn build_wired_reuse(
+        qluts: &QuantizedLuts,
+        lut_rows: usize,
+        wiring: LaneWiring,
+        mut bytes: Vec<u8>,
+    ) -> Self {
         assert_eq!(qluts.ksub, 16, "kernel tables are 16-entry shuffle rows");
         assert!(lut_rows >= qluts.m, "lut_rows must cover every quantized row");
-        let mut bytes = vec![0u8; lut_rows * 16];
+        bytes.clear();
+        bytes.resize(lut_rows * 16, 0);
         for mi in 0..qluts.m {
             bytes[mi * 16..(mi + 1) * 16].copy_from_slice(qluts.row(mi));
         }

@@ -32,29 +32,40 @@ impl QuantizedLuts {
     /// Quantize f32 LUTs (`m × ksub`, from
     /// [`crate::pq::ProductQuantizer::compute_luts`]).
     pub fn from_f32(luts: &[f32], m: usize, ksub: usize) -> Self {
+        Self::from_f32_reuse(luts, m, ksub, Vec::new())
+    }
+
+    /// [`QuantizedLuts::from_f32`] on recycled `data` storage (cleared and
+    /// resized; capacity kept) — the executor's scratch path. Per-row
+    /// biases are recomputed in the fill pass instead of staged in a
+    /// temporary, so a warmed-up buffer quantizes with zero allocations;
+    /// the arithmetic (and thus every quantized byte) is identical to the
+    /// allocating form.
+    pub fn from_f32_reuse(luts: &[f32], m: usize, ksub: usize, mut data: Vec<u8>) -> Self {
         debug_assert_eq!(luts.len(), m * ksub);
-        let mut biases = vec![0.0f32; m];
         let mut max_range = 0.0f32;
         for mi in 0..m {
             let row = &luts[mi * ksub..(mi + 1) * ksub];
             let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
             let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            biases[mi] = lo;
             max_range = max_range.max(hi - lo);
         }
         // Δ such that the widest row maps onto 0..=255. Degenerate case
         // (all-constant tables): Δ=1 keeps decode exact.
         let delta = if max_range > 0.0 { max_range / 255.0 } else { 1.0 };
         let inv = 1.0 / delta;
-        let mut data = vec![0u8; m * ksub];
+        data.clear();
+        data.resize(m * ksub, 0);
+        let mut total_bias = 0.0f32;
         for mi in 0..m {
             let row = &luts[mi * ksub..(mi + 1) * ksub];
+            let bias = row.iter().cloned().fold(f32::INFINITY, f32::min);
             for k in 0..ksub {
-                let q = ((row[k] - biases[mi]) * inv).round();
+                let q = ((row[k] - bias) * inv).round();
                 data[mi * ksub + k] = q.clamp(0.0, 255.0) as u8;
             }
+            total_bias += bias;
         }
-        let total_bias = biases.iter().sum();
         Self { m, ksub, data, delta, total_bias }
     }
 

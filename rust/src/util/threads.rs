@@ -1,9 +1,33 @@
 //! Scoped data-parallel helpers built on `std::thread` (rayon is not in the
-//! vendored crate set).
+//! vendored crate set) — the thread substrate of the plan/execute query
+//! layer ([`crate::exec`]).
 //!
-//! `parallel_chunks` splits an index range into contiguous chunks and runs a
-//! worker per chunk with `std::thread::scope`; on a single-core box it
-//! degrades gracefully to a serial loop.
+//! # Role in the plan/execute model
+//!
+//! Query execution splits state three ways:
+//!
+//! * **Per-request** state (a [`crate::exec::QueryPlan`]): resolved
+//!   parameters, the compiled filter masks, the precomputed-LUT recipe.
+//!   Built once per `query` call, shared *read-only* by every worker.
+//! * **Per-thread scratch** (a [`crate::exec::ScanScratch`] checked out of
+//!   the executor's pool): LUT buffers, reservoirs, re-rank staging —
+//!   mutable, owned by exactly one worker at a time, grown but never
+//!   shrunk, so the steady-state scan path allocates nothing.
+//! * **Per-slot output**: each parallel iteration writes its result into
+//!   its own disjoint slot ([`parallel_map_init`] hands every chunk a raw
+//!   pointer range that no other chunk touches), so no locks and no
+//!   `T: Default` dummy values are needed.
+//!
+//! Workers are `std::thread::scope` threads spawned per call: borrows of
+//! the sealed index and the plan flow into the workers without `'static`
+//! bounds or reference counting, and on a single-core box (or with
+//! `ARMPQ_THREADS=1`) everything degrades to a plain serial loop.
+//!
+//! Determinism contract: these helpers never change *what* is computed,
+//! only *where*. Callers must keep per-iteration work a pure function of
+//! the iteration index (plus scratch used strictly as workspace); the
+//! executor layer builds its bit-identical-across-thread-counts guarantee
+//! on top of that.
 
 /// Number of worker threads to use by default (`ARMPQ_THREADS` overrides).
 pub fn default_threads() -> usize {
@@ -45,26 +69,62 @@ where
 }
 
 /// Map `f` over `[0, n)` in parallel, collecting results in index order.
+///
+/// Results are written through per-chunk disjoint `MaybeUninit` slots, so
+/// `T` needs no `Default`/`Clone` — nothing is pre-filled and overwritten.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    parallel_map_init(n, threads, || (), |i, _: &mut ()| f(i))
+}
+
+/// [`parallel_map`] with per-chunk worker state: each chunk calls `init()`
+/// once and threads the state through its iterations — the hook the query
+/// executor uses to check one scratch arena out of the pool per worker
+/// instead of per iteration.
+///
+/// Results land in index order. If `f` panics, the panic propagates after
+/// all workers join; initialized results of other slots are leaked (never
+/// double-dropped or read uninitialized).
+pub fn parallel_map_init<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        let mut state = init();
+        return (0..n).map(|i| f(i, &mut state)).collect();
+    }
+    let mut out: Vec<std::mem::MaybeUninit<T>> = Vec::with_capacity(n);
+    out.resize_with(n, std::mem::MaybeUninit::uninit);
     {
         let out_ptr = SendPtr(out.as_mut_ptr());
         parallel_chunks(n, threads, |start, end| {
-            // SAFETY: chunks are disjoint index ranges; each element is
-            // written exactly once by exactly one thread.
             let p = out_ptr;
+            let mut state = init();
             for i in start..end {
+                let value = f(i, &mut state);
+                // SAFETY: chunks are disjoint index ranges; each slot is
+                // written exactly once by exactly one thread.
                 unsafe {
-                    *p.0.add(i) = f(i);
+                    (*p.0.add(i)).write(value);
                 }
             }
         });
     }
-    out
+    // SAFETY: parallel_chunks covers [0, n) exactly once, so every slot is
+    // initialized; Vec<MaybeUninit<T>> and Vec<T> share one layout.
+    unsafe {
+        let mut out = std::mem::ManuallyDrop::new(out);
+        Vec::from_raw_parts(out.as_mut_ptr() as *mut T, out.len(), out.capacity())
+    }
 }
 
 /// Pointer wrapper asserting cross-thread sendability for disjoint writes.
@@ -105,10 +165,51 @@ mod tests {
         }
     }
 
+    /// The satellite fix: result types need neither `Default` nor `Clone`.
+    #[test]
+    fn map_without_default_or_clone() {
+        struct Opaque(usize);
+        let v = parallel_map(64, 4, Opaque);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(x.0, i);
+        }
+        // and with heap-owning results (drops must be exact, no leaks of
+        // *initialized* slots on the happy path)
+        let v = parallel_map(17, 4, |i| vec![i; i + 1]);
+        assert_eq!(v[16], vec![16; 17]);
+    }
+
+    #[test]
+    fn map_init_state_per_chunk() {
+        // each chunk gets exactly one init() call
+        let inits = AtomicUsize::new(0);
+        let v = parallel_map_init(
+            100,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                0usize
+            },
+            |i, seen| {
+                *seen += 1;
+                (i, *seen)
+            },
+        );
+        assert!(inits.load(Ordering::SeqCst) <= 4);
+        // within a chunk the state accumulates, and indexes stay ordered
+        for (i, &(idx, seen)) in v.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert!(seen >= 1);
+        }
+    }
+
     #[test]
     fn zero_items() {
         parallel_chunks(0, 4, |_, _| panic!("must not run with n=0 range"));
         let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+        let v: Vec<usize> =
+            parallel_map_init(0, 4, || panic!("no init for n=0"), |i, _: &mut ()| i);
         assert!(v.is_empty());
     }
 

@@ -18,8 +18,21 @@ pub struct TopK {
 
 impl TopK {
     pub fn new(k: usize) -> Self {
+        Self::from_storage(k, Vec::with_capacity(k))
+    }
+
+    /// [`TopK::new`] on recycled backing storage (cleared, capacity kept) —
+    /// the executor's scratch path: a warmed-up arena re-ranks without
+    /// allocating.
+    pub fn from_storage(k: usize, mut heap: Vec<(f32, i64)>) -> Self {
         assert!(k > 0, "k must be positive");
-        Self { k, heap: Vec::with_capacity(k) }
+        heap.clear();
+        Self { k, heap }
+    }
+
+    /// Recover the backing storage (contents unspecified) for reuse.
+    pub fn into_storage(self) -> Vec<(f32, i64)> {
+        self.heap
     }
 
     #[inline]
@@ -104,8 +117,16 @@ impl TopK {
     /// padding — the variable-length form the typed query API returns
     /// (same ordering as [`TopK::into_sorted`]).
     pub fn into_hits(mut self) -> Vec<(f32, i64)> {
-        self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.as_sorted_hits();
         self.heap
+    }
+
+    /// Sort the kept pairs ascending by `(distance, label)` in place and
+    /// borrow them — the storage-reuse form of [`TopK::into_hits`]: copy
+    /// the slice out, then reclaim the buffer via [`TopK::into_storage`].
+    pub fn as_sorted_hits(&mut self) -> &[(f32, i64)] {
+        self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        &self.heap
     }
 }
 
@@ -126,7 +147,19 @@ pub struct U16Reservoir {
 impl U16Reservoir {
     pub fn new(k: usize, factor: usize) -> Self {
         let capacity = (k * factor).max(k);
-        Self { capacity, items: Vec::with_capacity(2 * capacity), threshold: u16::MAX }
+        Self::from_storage(k, factor, Vec::with_capacity(2 * capacity))
+    }
+
+    /// [`U16Reservoir::new`] on recycled backing storage (cleared, capacity
+    /// kept): identical admission behavior, zero allocations once the
+    /// buffer has grown to `2 × capacity`.
+    pub fn from_storage(k: usize, factor: usize, mut items: Vec<(u16, i64)>) -> Self {
+        let capacity = (k * factor).max(k);
+        items.clear();
+        // `push` shrinks at 2 × capacity, so this is the buffer's final
+        // size: reserving it up front makes later pushes allocation-free.
+        items.reserve(2 * capacity);
+        Self { capacity, items, threshold: u16::MAX }
     }
 
     #[inline]

@@ -309,6 +309,164 @@ fn concurrent_serve_stack_params() {
     server.stop();
 }
 
+// ---------------------------------------------------------------- threads
+//
+// The threads_ tests below are the acceptance suite of the plan/execute
+// layer: results must be BIT-IDENTICAL for every executor thread count —
+// the deterministic per-list merge makes the schedule invisible. CI runs
+// them as named steps and additionally re-runs the whole integration
+// suite under ARMPQ_THREADS=1 and ARMPQ_THREADS=4 on both architectures.
+
+/// Stats comparison that ignores the concurrency gauges (threads_used and
+/// scratch_bytes legitimately differ between executors).
+fn core_stats(s: &armpq::index::QueryStats) -> (usize, usize, f64) {
+    (s.codes_scanned, s.lists_probed, s.filter_selectivity)
+}
+
+/// Acceptance: for every backend × width × query kind × filter, results
+/// with a 4-thread executor are bit-identical to a 1-thread executor —
+/// including odd batch sizes (7, 3, 1) and nprobe (8, and full-probe 16)
+/// above the thread count. The nq=1 cases exercise the intra-query
+/// multi-list fan-out; the nq=7 cases the batch fan-out.
+#[test]
+fn threads_differential_fastscan_and_ivf() {
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::gaussian(900, 7, 32, 1300);
+    let exec1 = QueryExecutor::new(1);
+    let exec4 = QueryExecutor::new(4);
+    let sparse_ids: Vec<i64> = (0..900).step_by(7).collect();
+    for bits in [2usize, 4, 8] {
+        for spec in [
+            format!("PQ8x{bits}fs"),
+            format!("IVF16,PQ8x{bits}fs,nprobe=8"),
+        ] {
+            let mut idx = index_factory(ds.dim, &spec).unwrap();
+            idx.train(&ds.train).unwrap();
+            idx.add(&ds.base).unwrap();
+            idx.seal().unwrap();
+            // a radius that certainly admits hits: the serial top-20 tail
+            let probe = idx
+                .query(&QueryRequest::top_k(&ds.queries[..ds.dim], 20))
+                .unwrap();
+            let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+            for backend in armpq::simd::available_backends() {
+                // nprobe=16 (> 4 threads, full probe) through per-request params
+                let params = SearchParams::new().with_backend(backend).with_nprobe(16);
+                let filters = [
+                    None,
+                    Some(Filter::id_range(100, 600)),
+                    Some(Filter::id_set(&sparse_ids)),
+                    Some(Filter::predicate(|id| id % 3 == 0)),
+                ];
+                for filter in filters {
+                    for kind in [QueryKind::TopK { k: 9 }, QueryKind::Range { radius }] {
+                        for nq in [7usize, 3, 1] {
+                            let req = QueryRequest {
+                                queries: &ds.queries[..nq * ds.dim],
+                                kind,
+                                filter: filter.clone(),
+                                params: Some(params.clone()),
+                            };
+                            let r1 = idx.query_exec(&req, &exec1).unwrap();
+                            let r4 = idx.query_exec(&req, &exec4).unwrap();
+                            assert_eq!(
+                                r1.hits, r4.hits,
+                                "{spec} {backend:?} {kind:?} {filter:?} nq={nq}: \
+                                 threaded hits diverge from serial"
+                            );
+                            let s1: Vec<_> = r1.stats.iter().map(core_stats).collect();
+                            let s4: Vec<_> = r4.stats.iter().map(core_stats).collect();
+                            assert_eq!(s1, s4, "{spec} {backend:?} nq={nq}: stats diverge");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The non-fastscan indexes ride the same executor: exact flat, naive PQ
+/// and the refinement wrapper are bit-identical across thread counts too.
+#[test]
+fn threads_differential_flat_pq_refine() {
+    use armpq::exec::QueryExecutor;
+    use armpq::index::IndexRefineFlat;
+    let ds = SyntheticDataset::gaussian(700, 5, 32, 1301);
+    let exec1 = QueryExecutor::new(1);
+    let exec4 = QueryExecutor::new(4);
+    let mut indexes: Vec<Box<dyn Index>> = vec![
+        index_factory(ds.dim, "Flat").unwrap(),
+        index_factory(ds.dim, "PQ8x4").unwrap(),
+        Box::new(IndexRefineFlat::new(index_factory(ds.dim, "PQ8x4fs").unwrap())),
+    ];
+    for idx in &mut indexes {
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+    }
+    for idx in &indexes {
+        let probe = idx.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 15)).unwrap();
+        let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+        for filter in [None, Some(Filter::id_range(50, 500))] {
+            for kind in [QueryKind::TopK { k: 6 }, QueryKind::Range { radius }] {
+                for nq in [5usize, 1] {
+                    let req = QueryRequest {
+                        queries: &ds.queries[..nq * ds.dim],
+                        kind,
+                        filter: filter.clone(),
+                        params: None,
+                    };
+                    let r1 = idx.query_exec(&req, &exec1).unwrap();
+                    let r4 = idx.query_exec(&req, &exec4).unwrap();
+                    assert_eq!(
+                        r1.hits,
+                        r4.hits,
+                        "{} {kind:?} {filter:?} nq={nq}",
+                        idx.describe()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The serving layer on an explicit shared executor: a sharded router
+/// whose shards all ride one 4-thread executor returns exactly what the
+/// 1-thread build returns, and the response stats surface the
+/// concurrency (threads_used ≥ 1, scratch high-water > 0).
+#[test]
+fn threads_sharded_backend_shared_executor() {
+    use armpq::coordinator::{SearchBackend, ShardedBackend};
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::sift_like(2_000, 6, 1302);
+    let dim = ds.dim;
+    let per = 1_000usize;
+    let build_shards = || -> Vec<Arc<dyn Index>> {
+        (0..2)
+            .map(|s| {
+                let mut idx = IvfPq4::new(dim, IvfParams::new(4), PqParams::new_4bit(8));
+                idx.train(&ds.train).unwrap();
+                let slice = &ds.base[s * per * dim..(s + 1) * per * dim];
+                let ids: Vec<i64> = (s * per..(s + 1) * per).map(|i| i as i64).collect();
+                idx.add_with_ids(slice, &ids).unwrap();
+                idx.nprobe = 4;
+                idx.seal().unwrap();
+                Arc::new(armpq::index::IndexIvfPq4::from_inner(idx)) as Arc<dyn Index>
+            })
+            .collect()
+    };
+    let serial =
+        ShardedBackend::from_indexes_with_executor(build_shards(), QueryExecutor::new(1)).unwrap();
+    let wide =
+        ShardedBackend::from_indexes_with_executor(build_shards(), QueryExecutor::new(4)).unwrap();
+    let req = QueryRequest::top_k(&ds.queries, 5);
+    let r1 = serial.query_batch(&req).unwrap();
+    let r4 = wide.query_batch(&req).unwrap();
+    assert_eq!(r1.hits, r4.hits, "sharded results depend on thread count");
+    assert!(r4.stats[0].threads_used >= 1);
+    assert!(r4.stats[0].scratch_bytes > 0, "scratch high-water not surfaced");
+}
+
 // ---------------------------------------------------------------- widths
 
 /// Acceptance: for each width in {2, 4, 8}, every backend this host
