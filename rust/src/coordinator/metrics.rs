@@ -80,6 +80,22 @@ pub struct Metrics {
     /// executor scratch-arena high-water bytes (gauge, max) — the
     /// steady-state working set the allocation-free scan path reuses
     pub scratch_high_water_bytes: AtomicU64,
+    /// rows accepted through the `insert` verb
+    pub inserts_total: AtomicU64,
+    /// live rows removed through the `delete` verb
+    pub deletes_total: AtomicU64,
+    /// widest per-query segment fan-out observed (gauge, max; 0 when the
+    /// backend is a sealed single-segment index)
+    pub segments_scanned: AtomicU64,
+    /// segment-lifecycle gauges (latest observation via
+    /// [`Metrics::record_segment_stats`]) — together they make compaction
+    /// pressure observable: a growing memtable means the flush worker is
+    /// behind, growing tombstones mean dead rows are bloating scans
+    pub segments: AtomicU64,
+    pub memtable_entries: AtomicU64,
+    pub tombstones: AtomicU64,
+    pub flushes_total: AtomicU64,
+    pub compactions_total: AtomicU64,
     /// recent batch sizes (bounded ring, for mean occupancy)
     batch_sizes: Mutex<Vec<usize>>,
 }
@@ -98,6 +114,21 @@ impl Metrics {
         self.exec_threads.fetch_max(stats.threads_used as u64, Ordering::Relaxed);
         self.scratch_high_water_bytes
             .fetch_max(stats.scratch_bytes as u64, Ordering::Relaxed);
+        self.segments_scanned
+            .fetch_max(stats.segments_scanned as u64, Ordering::Relaxed);
+    }
+
+    /// Record the segment-lifecycle gauges from a backend's current
+    /// [`crate::segment::SegmentStats`] (no-op for `None`, i.e. sealed
+    /// single-segment backends). Called after mutations and on the `stats`
+    /// verb, so the gauges track the latest observed state.
+    pub fn record_segment_stats(&self, stats: Option<crate::segment::SegmentStats>) {
+        let Some(s) = stats else { return };
+        self.segments.store(s.segments as u64, Ordering::Relaxed);
+        self.memtable_entries.store(s.memtable_entries as u64, Ordering::Relaxed);
+        self.tombstones.store(s.tombstones as u64, Ordering::Relaxed);
+        self.flushes_total.store(s.flushes, Ordering::Relaxed);
+        self.compactions_total.store(s.compactions, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -153,6 +184,23 @@ impl Metrics {
             .set(
                 "filter_selectivity_p50",
                 Json::Num(self.filter_selectivity_pm.percentile_us(50.0) / 1000.0),
+            )
+            .set("inserts_total", Json::Num(self.inserts_total.load(Ordering::Relaxed) as f64))
+            .set("deletes_total", Json::Num(self.deletes_total.load(Ordering::Relaxed) as f64))
+            .set(
+                "segments_scanned",
+                Json::Num(self.segments_scanned.load(Ordering::Relaxed) as f64),
+            )
+            .set("segments", Json::Num(self.segments.load(Ordering::Relaxed) as f64))
+            .set(
+                "memtable_entries",
+                Json::Num(self.memtable_entries.load(Ordering::Relaxed) as f64),
+            )
+            .set("tombstones", Json::Num(self.tombstones.load(Ordering::Relaxed) as f64))
+            .set("flushes_total", Json::Num(self.flushes_total.load(Ordering::Relaxed) as f64))
+            .set(
+                "compactions_total",
+                Json::Num(self.compactions_total.load(Ordering::Relaxed) as f64),
             );
         o
     }
@@ -210,9 +258,38 @@ mod tests {
             "batch_latency_p95_us",
             "exec_threads",
             "scratch_high_water_bytes",
+            "inserts_total",
+            "deletes_total",
+            "segments_scanned",
+            "memtable_entries",
+            "tombstones",
         ] {
             assert!(j.get(key).is_some(), "{key}");
         }
+    }
+
+    /// Segment-lifecycle gauges track the latest observation; `None` (a
+    /// sealed single-segment backend) leaves them untouched.
+    #[test]
+    fn segment_stats_gauges() {
+        use crate::segment::SegmentStats;
+        let m = Metrics::new();
+        m.record_segment_stats(Some(SegmentStats {
+            segments: 3,
+            sealed_rows: 900,
+            memtable_entries: 42,
+            tombstones: 7,
+            flushes: 5,
+            compactions: 2,
+        }));
+        m.record_segment_stats(None); // no-op
+        assert_eq!(m.segments.load(Ordering::Relaxed), 3);
+        assert_eq!(m.memtable_entries.load(Ordering::Relaxed), 42);
+        assert_eq!(m.tombstones.load(Ordering::Relaxed), 7);
+        let j = m.to_json();
+        assert_eq!(j.get("flushes_total").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("compactions_total").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("tombstones").unwrap().as_usize().unwrap(), 7);
     }
 
     /// The scan-work histograms (satellite: per-request codes_scanned /
@@ -227,6 +304,8 @@ mod tests {
             filter_selectivity: 0.25,
             threads_used: 4,
             scratch_bytes: 1 << 16,
+            segments_scanned: 3,
+            ..Default::default()
         });
         m.record_query_stats(&QueryStats {
             codes_scanned: 4096,
@@ -234,11 +313,13 @@ mod tests {
             filter_selectivity: 0.75,
             threads_used: 2,
             scratch_bytes: 1 << 14,
+            ..Default::default()
         });
         assert_eq!(m.codes_scanned.count(), 2);
         // gauges keep the maxima
         assert_eq!(m.exec_threads.load(Ordering::Relaxed), 4);
         assert_eq!(m.scratch_high_water_bytes.load(Ordering::Relaxed), 1 << 16);
+        assert_eq!(m.segments_scanned.load(Ordering::Relaxed), 3);
         assert!((m.codes_scanned.mean_us() - 4096.0).abs() < 1e-9);
         let j = m.to_json();
         let sel = j.get("filter_selectivity_mean").unwrap().as_f64().unwrap();

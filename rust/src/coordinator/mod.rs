@@ -5,19 +5,22 @@
 //!
 //! ```text
 //!   TCP clients ──► server (thread per conn, line-JSON protocol:
-//!                      kind topk|range, optional id_range/id_set filter)
+//!                      kind topk|range, optional id_range/id_set filter;
+//!                      insert/delete verbs for segmented backends)
 //!                      │ PendingQuery { vector, kind, filter, params, reply }
 //!                      ▼
 //!                dynamic batcher (max_batch / max_wait window)
 //!                      │ grouped by (kind, filter, params) into ONE
 //!                      │ typed QueryRequest per group
 //!                      ▼
-//!                SearchBackend::query_batch (sealed index behind
-//!                Arc<dyn Index>, a shard fan-out, or the PJRT pipeline)
+//!                SearchBackend::query_batch (sealed index or segmented
+//!                index behind Arc<dyn Index>, a shard fan-out, or the
+//!                PJRT pipeline)
 //!                      │ QueryResponse { per-query hits + stats }
 //!                      ▼
 //!                responses routed back; stats folded into metrics
-//!                (codes_scanned / filter_selectivity histograms)
+//!                (codes_scanned / filter_selectivity histograms,
+//!                segment-lifecycle gauges)
 //! ```
 //!
 //! The whole pipe speaks the typed request/response model of
@@ -27,10 +30,26 @@
 //! [`ShardedBackend`] merges across shards, deduplicating labels that
 //! legitimately live on more than one shard.
 //!
-//! Search is read-only end to end: backends take `&self` and forward
+//! # Mutability and the segment lifecycle
+//!
+//! Queries are read-only end to end: backends take `&self` and forward
 //! per-request [`crate::index::SearchParams`], so shards fan out across
 //! threads without a per-index mutex and concurrent requests with
 //! different parameters never interfere.
+//!
+//! Mutations are layered on without giving that up. The `insert` and
+//! `delete` wire verbs route to [`SearchBackend::insert`] /
+//! [`SearchBackend::delete`], which a backend over a
+//! [`crate::segment::SegmentedIndex`] answers by `&self` snapshot swap:
+//! new rows land in a mutable memtable, deletes become tombstones over
+//! the sealed segment stack, and a flush/compaction worker migrates
+//! memtable rows into sealed segments in the background. In-flight
+//! batched queries keep scanning the snapshot they started with — no
+//! reader ever blocks on a writer. Sealed single-segment backends keep
+//! their defaults and answer both verbs with an error, so read-only
+//! deployments are unchanged. The `stats` verb exposes the lifecycle
+//! (`segments`, `memtable_entries`, `tombstones`, `flushes_total`,
+//! `compactions_total`) next to the per-query `segments_scanned` gauge.
 //!
 //! **Batch-level LUT reuse:** batcher groups share one backend call, and
 //! [`ShardedBackend`] computes each group's per-query scan LUTs once

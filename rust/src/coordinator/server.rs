@@ -16,12 +16,22 @@
 //!   → {"search": {"vector": [f32…], "kind": "range", "radius": 1.5,
 //!                 "filter": {"id_set": [3, 17, 99]}}}
 //!   ← {"ok": {"labels": […], "distances": […], …}}     (variable length)
+//!   → {"insert": {"vectors": [[f32…], …], "ids": [i64…]}}   (ids optional)
+//!   ← {"ok": {"ids": [i64…]}}                       (assigned labels)
+//!   → {"delete": {"ids": [i64…]}}
+//!   ← {"ok": {"deleted": n}}
 //!   → {"stats": true}
-//!   ← {"ok": { …metrics, incl. codes_scanned/filter_selectivity… }}
+//!   ← {"ok": { …metrics, incl. codes_scanned/filter_selectivity and the
+//!              segment gauges (segments/memtable_entries/tombstones)… }}
 //!   → {"ping": true}
 //!   ← {"ok": "pong"}
 //!   ← {"err": "message"}           (any failure)
 //! ```
+//!
+//! `insert` and `delete` require a mutable (segmented) backend; sealed
+//! single-segment backends answer them with an error. Mutations bypass
+//! the batcher — they go straight to the backend, whose snapshot-swap
+//! discipline keeps in-flight batched queries lock-free and consistent.
 //!
 //! Predicate filters are in-process closures and cannot cross the wire.
 //! Range responses are truncated to the nearest `MAX_WIRE_RANGE_HITS`
@@ -79,8 +89,9 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             let batcher = batcher.clone();
+                            let backend = backend.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_connection(stream, batcher, dim);
+                                let _ = handle_connection(stream, batcher, backend, dim);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -107,7 +118,12 @@ impl Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, dim: usize) -> std::io::Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    batcher: Arc<Batcher>,
+    backend: Arc<dyn SearchBackend>,
+    dim: usize,
+) -> std::io::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut line = String::new();
@@ -116,14 +132,14 @@ fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, dim: usize) -> st
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client closed
         }
-        let response = handle_request(line.trim(), &batcher, dim);
+        let response = handle_request(line.trim(), &batcher, backend.as_ref(), dim);
         writer.write_all(response.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
     }
 }
 
-fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
+fn handle_request(line: &str, batcher: &Batcher, backend: &dyn SearchBackend, dim: usize) -> Json {
     let err = |msg: String| {
         let mut o = Json::obj();
         o.set("err", Json::Str(msg));
@@ -139,12 +155,27 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
         return o;
     }
     if req.get("stats").is_some() {
+        // refresh the segment-lifecycle gauges so the snapshot reflects
+        // mutations that arrived through other connections
+        batcher.metrics.record_segment_stats(backend.segment_stats());
         let mut o = Json::obj();
         o.set("ok", batcher.metrics.to_json());
         return o;
     }
+    if let Some(insert) = req.get("insert") {
+        return match handle_insert(insert, batcher, backend, dim) {
+            Ok(ok) => ok,
+            Err(e) => err(e.to_string()),
+        };
+    }
+    if let Some(delete) = req.get("delete") {
+        return match handle_delete(delete, batcher, backend) {
+            Ok(ok) => ok,
+            Err(e) => err(e.to_string()),
+        };
+    }
     let Some(search) = req.get("search") else {
-        return err("expected search/stats/ping".into());
+        return err("expected search/insert/delete/stats/ping".into());
     };
     let Some(vector) = search.get("vector").and_then(|v| v.as_arr()) else {
         return err("search.vector missing".into());
@@ -214,7 +245,10 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
                 .set("lists_probed", Json::Num(resp.stats.lists_probed as f64))
                 .set("filter_selectivity", Json::Num(resp.stats.filter_selectivity))
                 .set("threads_used", Json::Num(resp.stats.threads_used as f64))
-                .set("scratch_bytes", Json::Num(resp.stats.scratch_bytes as f64));
+                .set("scratch_bytes", Json::Num(resp.stats.scratch_bytes as f64))
+                .set("segments_scanned", Json::Num(resp.stats.segments_scanned as f64))
+                .set("memtable_entries", Json::Num(resp.stats.memtable_entries as f64))
+                .set("tombstones", Json::Num(resp.stats.tombstones as f64));
             let mut body = Json::obj();
             body.set("labels", Json::Arr(resp.labels.iter().map(|&l| Json::Num(l as f64)).collect()))
                 .set(
@@ -233,9 +267,95 @@ fn handle_request(line: &str, batcher: &Batcher, dim: usize) -> Json {
     }
 }
 
+/// `{"insert": {"vectors": [[…]…], "ids": […]?}}` → `{"ok": {"ids": […]}}`.
+/// Goes straight to the backend (not through the batcher): segmented
+/// backends mutate behind a snapshot swap, so concurrent batched queries
+/// keep reading their consistent snapshots.
+fn handle_insert(insert: &Json, batcher: &Batcher, backend: &dyn SearchBackend, dim: usize) -> Result<Json> {
+    let rows = insert
+        .get("vectors")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Serve("insert.vectors must be an array of vectors".into()))?;
+    if rows.is_empty() {
+        return Err(Error::Serve("insert.vectors is empty".into()));
+    }
+    if rows.len() > MAX_WIRE_INSERT_ROWS {
+        return Err(Error::Serve(format!(
+            "insert batch too large ({} > {MAX_WIRE_INSERT_ROWS})",
+            rows.len()
+        )));
+    }
+    let mut flat = Vec::with_capacity(rows.len() * dim);
+    for (i, row) in rows.iter().enumerate() {
+        let row = row
+            .as_arr()
+            .ok_or_else(|| Error::Serve(format!("insert.vectors[{i}] must be an array")))?;
+        if row.len() != dim {
+            return Err(Error::Serve(format!(
+                "insert.vectors[{i}] dim {} != index dim {dim}",
+                row.len()
+            )));
+        }
+        for x in row {
+            flat.push(
+                x.as_f64()
+                    .ok_or_else(|| Error::Serve(format!("insert.vectors[{i}] entries must be numbers")))?
+                    as f32,
+            );
+        }
+    }
+    let ids = match insert.get("ids") {
+        None => None,
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| Error::Serve("insert.ids must be an array of ids".into()))?;
+            let ids: Option<Vec<i64>> = arr.iter().map(|x| x.as_f64().map(|v| v as i64)).collect();
+            Some(ids.ok_or_else(|| Error::Serve("insert.ids entries must be numbers".into()))?)
+        }
+    };
+    let assigned = backend.insert(&flat, ids.as_deref())?;
+    batcher.metrics.inserts_total.fetch_add(assigned.len() as u64, Ordering::Relaxed);
+    batcher.metrics.record_segment_stats(backend.segment_stats());
+    let mut body = Json::obj();
+    body.set("ids", Json::Arr(assigned.iter().map(|&id| Json::Num(id as f64)).collect()));
+    let mut o = Json::obj();
+    o.set("ok", body);
+    Ok(o)
+}
+
+/// `{"delete": {"ids": […]}}` → `{"ok": {"deleted": n}}` where `n` counts
+/// the ids that were actually live.
+fn handle_delete(delete: &Json, batcher: &Batcher, backend: &dyn SearchBackend) -> Result<Json> {
+    let arr = delete
+        .get("ids")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| Error::Serve("delete.ids must be an array of ids".into()))?;
+    if arr.len() > MAX_WIRE_ID_SET {
+        return Err(Error::Serve(format!(
+            "delete.ids too large ({} > {MAX_WIRE_ID_SET})",
+            arr.len()
+        )));
+    }
+    let ids: Option<Vec<i64>> = arr.iter().map(|x| x.as_f64().map(|v| v as i64)).collect();
+    let ids = ids.ok_or_else(|| Error::Serve("delete.ids entries must be numbers".into()))?;
+    let deleted = backend.delete(&ids)?;
+    batcher.metrics.deletes_total.fetch_add(deleted as u64, Ordering::Relaxed);
+    batcher.metrics.record_segment_stats(backend.segment_stats());
+    let mut body = Json::obj();
+    body.set("deleted", Json::Num(deleted as f64));
+    let mut o = Json::obj();
+    o.set("ok", body);
+    Ok(o)
+}
+
 /// Largest id-set filter accepted over the wire — a remote client does not
 /// get to make the server build multi-million-entry sets per request.
 const MAX_WIRE_ID_SET: usize = 1 << 20;
+
+/// Most vectors accepted in one `insert` line — bounds per-request memory
+/// the same way `MAX_WIRE_ID_SET` bounds filter materialization.
+const MAX_WIRE_INSERT_ROWS: usize = 4096;
 
 /// Most range hits returned per wire response (nearest kept). The top-k
 /// path caps `k` at 1024; this is the counterpart bound for radius
@@ -481,8 +601,53 @@ impl Client {
                 .unwrap_or(1.0),
             threads_used: s.get("threads_used").and_then(|x| x.as_usize()).unwrap_or(1),
             scratch_bytes: s.get("scratch_bytes").and_then(|x| x.as_usize()).unwrap_or(0),
+            segments_scanned: s.get("segments_scanned").and_then(|x| x.as_usize()).unwrap_or(0),
+            memtable_entries: s.get("memtable_entries").and_then(|x| x.as_usize()).unwrap_or(0),
+            tombstones: s.get("tombstones").and_then(|x| x.as_usize()).unwrap_or(0),
         });
         Ok((hits, stats.unwrap_or_default()))
+    }
+
+    /// Insert rows into a mutable (segmented) backend; returns the
+    /// assigned labels. `ids` pins explicit labels (upsert semantics).
+    pub fn insert(&mut self, vectors: &[Vec<f32>], ids: Option<&[i64]>) -> Result<Vec<i64>> {
+        let mut inner = Json::obj();
+        inner.set(
+            "vectors",
+            Json::Arr(
+                vectors
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|&x| Json::Num(x as f64)).collect()))
+                    .collect(),
+            ),
+        );
+        if let Some(ids) = ids {
+            inner.set("ids", Json::Arr(ids.iter().map(|&id| Json::Num(id as f64)).collect()));
+        }
+        let mut req = Json::obj();
+        req.set("insert", inner);
+        let ok = self.roundtrip(&req)?;
+        Ok(ok
+            .get("ids")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Serve("missing ids".into()))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as i64)
+            .collect())
+    }
+
+    /// Delete ids from a mutable (segmented) backend; returns how many
+    /// were live.
+    pub fn delete(&mut self, ids: &[i64]) -> Result<usize> {
+        let mut inner = Json::obj();
+        inner.set("ids", Json::Arr(ids.iter().map(|&id| Json::Num(id as f64)).collect()));
+        let mut req = Json::obj();
+        req.set("delete", inner);
+        let ok = self.roundtrip(&req)?;
+        ok.get("deleted")
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| Error::Serve("missing deleted".into()))
     }
 }
 
@@ -587,6 +752,55 @@ mod tests {
         let stats = client.stats().unwrap();
         assert!(stats.get("codes_scanned_mean").unwrap().as_f64().unwrap() > 0.0);
         assert!(stats.get("filter_selectivity_mean").is_some());
+        server.stop();
+    }
+
+    /// Mutation verbs against a segmented backend: insert → search sees
+    /// the rows, delete → tombstoned rows stop answering, and the stats
+    /// verb surfaces the segment-lifecycle gauges. A sealed backend
+    /// refuses both verbs.
+    #[test]
+    fn mutation_verbs_roundtrip() {
+        use crate::coordinator::service::IndexBackend;
+        use crate::index::index_factory;
+        let dim = 8;
+        let mut rng = Rng::new(77);
+        let train: Vec<f32> = (0..512 * dim).map(|_| rng.next_gaussian()).collect();
+        let mut idx = index_factory(dim, "SEG64,PQ4x4fs").unwrap();
+        idx.train(&train).unwrap();
+        let backend: Arc<dyn SearchBackend> =
+            Arc::new(IndexBackend::new(Arc::from(idx)).unwrap());
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let rows: Vec<Vec<f32>> =
+            (0..100).map(|i| train[i * dim..(i + 1) * dim].to_vec()).collect();
+        let ids: Vec<i64> = (0..100).collect();
+        let assigned = client.insert(&rows, Some(&ids)).unwrap();
+        assert_eq!(assigned, ids);
+        // the batch crossed the flush threshold, so the scan covers at
+        // least one sealed segment; the query itself finds row 0 exactly
+        let (hits, stats) =
+            client.query(&rows[0], &QueryKind::TopK { k: 3 }, None, None).unwrap();
+        assert_eq!(hits[0].label, 0, "{hits:?}");
+        assert!(stats.segments_scanned >= 1);
+        // deleting a live id and a never-seen id deletes exactly one row
+        assert_eq!(client.delete(&[0, 1_000_000]).unwrap(), 1);
+        let (hits, _) = client.query(&rows[0], &QueryKind::TopK { k: 3 }, None, None).unwrap();
+        assert!(hits.iter().all(|h| h.label != 0), "{hits:?}");
+        let j = client.stats().unwrap();
+        assert_eq!(j.get("inserts_total").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(j.get("deletes_total").unwrap().as_usize().unwrap(), 1);
+        assert!(j.get("segments").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(j.get("tombstones").unwrap().as_usize().unwrap(), 1);
+        server.stop();
+        // sealed single-segment backends answer mutations with an error
+        let (sealed, _) = toy_backend();
+        let server = Server::start(sealed, ServerConfig::default()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let err = client.insert(&[vec![0.0; 16]], None).unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{err}");
+        let err = client.delete(&[1]).unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{err}");
         server.stop();
     }
 

@@ -81,6 +81,27 @@ pub trait SearchBackend: Send + Sync {
     ) -> Result<(Vec<f32>, Vec<i64>)> {
         self.search_batch(queries, k, params)
     }
+    /// Append vectors to a **streaming** backend (`ids: None` assigns
+    /// sequential ids; explicit ids upsert). Backends over sealed-only
+    /// indexes reject this — route writes to a segmented backend.
+    fn insert(&self, _vectors: &[f32], _ids: Option<&[i64]>) -> Result<Vec<i64>> {
+        Err(Error::Serve(format!(
+            "backend {} is read-only (insert needs a segmented index)",
+            self.describe()
+        )))
+    }
+    /// Remove rows by id from a streaming backend; returns how many live
+    /// rows were removed.
+    fn delete(&self, _ids: &[i64]) -> Result<usize> {
+        Err(Error::Serve(format!(
+            "backend {} is read-only (delete needs a segmented index)",
+            self.describe()
+        )))
+    }
+    /// Segment-lifecycle counters, if this backend has a segment lifecycle.
+    fn segment_stats(&self) -> Option<crate::segment::SegmentStats> {
+        None
+    }
     fn describe(&self) -> String;
 }
 
@@ -197,6 +218,18 @@ impl SearchBackend for IndexBackend {
         };
         let r = self.index.query_with_luts_exec(&req, luts, &self.exec)?.into_search_result(k);
         Ok((r.distances, r.labels))
+    }
+
+    fn insert(&self, vectors: &[f32], ids: Option<&[i64]>) -> Result<Vec<i64>> {
+        self.index.insert(vectors, ids).map_err(|e| Error::Serve(e.to_string()))
+    }
+
+    fn delete(&self, ids: &[i64]) -> Result<usize> {
+        self.index.delete(ids).map_err(|e| Error::Serve(e.to_string()))
+    }
+
+    fn segment_stats(&self) -> Option<crate::segment::SegmentStats> {
+        self.index.segment_stats()
     }
 
     fn describe(&self) -> String {

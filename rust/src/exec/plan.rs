@@ -17,9 +17,12 @@ use std::sync::OnceLock;
 ///
 /// * Flat indexes compile the filter into one position-space mask over the
 ///   whole packed set, eagerly (it is shared by every query of the batch).
-/// * IVF indexes compile per-list masks lazily — only probed lists pay —
-///   through a `OnceLock` per list, so concurrent workers build each mask
-///   at most once and share it without locks on the read path.
+/// * Unit-structured indexes compile one mask per scan unit — an IVF
+///   inverted list, or a sealed segment / memtable of a
+///   [`crate::segment::SegmentedIndex`] (where the unit mask also folds in
+///   the tombstone set) — lazily through a `OnceLock` per unit, so only
+///   scanned units pay and concurrent workers build each mask at most once
+///   and share it without locks on the read path.
 #[derive(Debug, Default)]
 pub enum MaskPlan {
     /// No filter on this request.
@@ -27,7 +30,8 @@ pub enum MaskPlan {
     None,
     /// One mask over the whole scan domain (flat indexes).
     Flat(FilterMask),
-    /// One lazily-built mask per inverted list (IVF indexes).
+    /// One lazily-built mask per scan unit (IVF list, or segment of a
+    /// segmented index).
     Lists(Vec<OnceLock<FilterMask>>),
 }
 
@@ -38,7 +42,8 @@ impl MaskPlan {
         MaskPlan::Flat(filter.build_mask(None, n))
     }
 
-    /// Lazy per-list slots for an IVF index with `nlist` lists.
+    /// Lazy per-unit slots for an index with `nlist` scan units (IVF
+    /// lists, or segments + memtable of a segmented index).
     pub fn lists(nlist: usize) -> Self {
         MaskPlan::Lists((0..nlist).map(|_| OnceLock::new()).collect())
     }

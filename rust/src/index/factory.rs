@@ -13,6 +13,8 @@
 //!   "IVF1000,PQ16x4fs"          IVF + flat coarse + fastscan
 //!   "IVF100,PQ16x2fs,nprobe=8"  any fastscan width composes with IVF
 //!   "IVF30000_HNSW32,PQ16x4fs"  IVF + HNSW coarse + fastscan (Table 1)
+//!   "SEG,PQ16x4fs"              streaming segmented index (insert/delete)
+//!   "SEG1024,PQ16x2fs"          …with a 1024-row memtable flush threshold
 //! ```
 //!
 //! Trailing `key=value` components set default [`SearchParams`] on the
@@ -26,6 +28,7 @@
 use super::pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
 use super::{flat::IndexFlat, Index, SearchParams};
 use crate::pq::{CodeWidth, PqParams};
+use crate::segment::{SegmentedIndex, SegmentedParams};
 use crate::{Error, Result};
 
 /// Create an index from a factory string.
@@ -48,6 +51,30 @@ pub fn index_factory(dim: usize, spec: &str) -> Result<Box<dyn Index>> {
             let pq = parse_pq(pq_spec)
                 .ok_or_else(|| err(format!("component {pq_spec:?}: expected PQ<m>[x<bits>][fs]")))?;
             build_flat_pq(dim, pq, spec)?
+        }
+        [seg_spec, pq_spec] if parse_seg(seg_spec).is_some() => {
+            let flush_threshold = parse_seg(seg_spec).unwrap();
+            let pq = parse_pq(pq_spec)
+                .ok_or_else(|| err(format!("component {pq_spec:?}: expected PQ<m>x<bits>fs after SEG")))?;
+            if !pq.fastscan {
+                return Err(err(format!(
+                    "component {pq_spec:?}: SEG composition requires a fastscan PQ (PQ<m>x{{2,4,8}}fs)"
+                )));
+            }
+            let width = CodeWidth::from_bits(pq.nbits).ok_or_else(|| {
+                err(format!(
+                    "component {pq_spec:?}: fastscan supports 2-, 4- or 8-bit codes, got {}",
+                    pq.nbits
+                ))
+            })?;
+            let mut seg_params = SegmentedParams::default();
+            if let Some(t) = flush_threshold {
+                seg_params.flush_threshold = t;
+            }
+            Box::new(
+                SegmentedIndex::new(dim, pq.m, width, seg_params)
+                    .map_err(|e| err(format!("component {seg_spec:?}: {e}")))?,
+            )
         }
         [ivf_spec, pq_spec] => {
             let (nlist, hnsw_m) = parse_ivf(ivf_spec)
@@ -153,6 +180,17 @@ fn parse_pq(s: &str) -> Option<PqSpec> {
     Some(PqSpec { m, nbits, fastscan })
 }
 
+/// `"SEG"` → `Some(None)` (default flush threshold), `"SEG1024"` →
+/// `Some(Some(1024))`, anything else → `None`.
+fn parse_seg(s: &str) -> Option<Option<usize>> {
+    let rest = s.strip_prefix("SEG")?;
+    if rest.is_empty() {
+        Some(None)
+    } else {
+        Some(Some(rest.parse().ok()?))
+    }
+}
+
 fn parse_ivf(s: &str) -> Option<(usize, Option<usize>)> {
     let rest = s.strip_prefix("IVF")?;
     match rest.split_once("_HNSW") {
@@ -246,6 +284,43 @@ mod tests {
         for spec in ["", "IVF", "PQ0x4fs", "PQx4", "IVF10,PQ8x8", "IVF10,Flat", "A,B,C", "PQ8x6fs"] {
             assert!(index_factory(16, spec).is_err(), "{spec:?} should fail");
         }
+    }
+
+    #[test]
+    fn parses_segmented_specs() {
+        for (spec, want) in [
+            ("SEG,PQ8x4fs", "SEG(PQ8x4fs"),
+            ("SEG128,PQ8x2fs", "SEG(PQ8x2fs"),
+            ("SEG,PQ8x8fs,rerank=false", "SEG(PQ8x8fs"),
+        ] {
+            let idx = index_factory(64, spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(idx.describe().starts_with(want), "{spec}: {}", idx.describe());
+        }
+        // non-fastscan PQ, zero flush threshold, and junk suffixes all fail
+        for spec in ["SEG,PQ8x4", "SEG0,PQ8x4fs", "SEGx,PQ8x4fs", "SEG,PQ8x3fs"] {
+            assert!(index_factory(64, spec).is_err(), "{spec:?} should fail");
+        }
+    }
+
+    #[test]
+    fn segmented_factory_streams_end_to_end() {
+        let ds = SyntheticDataset::gaussian(400, 4, 16, 212);
+        let mut idx = index_factory(ds.dim, "SEG64,PQ4x4fs").unwrap();
+        idx.train(&ds.base).unwrap();
+        // stream through the trait's &self surface
+        let ids = idx.insert(&ds.base, None).unwrap();
+        assert_eq!(ids.len(), 400);
+        let removed = idx.delete(&ids[..10]).unwrap();
+        assert_eq!(removed, 10);
+        assert_eq!(idx.ntotal(), 390);
+        idx.flush().unwrap();
+        idx.compact().unwrap();
+        let stats = idx.segment_stats().unwrap();
+        assert_eq!(stats.segments, 1);
+        assert_eq!(stats.tombstones, 0);
+        let r = idx.search(&ds.queries, 3, None).unwrap();
+        assert_eq!(r.nq(), 4);
+        assert!(r.labels.iter().all(|&l| !(0..10).contains(&l)));
     }
 
     #[test]

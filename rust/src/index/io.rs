@@ -8,16 +8,25 @@
 use crate::index::pq_index::IndexPq4FastScan;
 use crate::ivf::{IvfParams, IvfPq4};
 use crate::pq::{CodeWidth, PqParams, ProductQuantizer};
+use crate::segment::{Memtable, SealedSegment, SegmentedIndex, SegmentedParams};
 use crate::{Error, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"ARMPQIDX";
 /// v1: 4-bit only. v2 appends the fastscan code width (+ user-facing M for
-/// IVF); v1 files still load as 4-bit.
+/// IVF); v1 files still load as 4-bit. The segmented kinds (manifest +
+/// per-segment files) were introduced at v2 directly.
 const VERSION: u32 = 2;
 const KIND_PQ4FS: u32 = 1;
 const KIND_IVFPQ4: u32 = 2;
+/// Segmented-index manifest: geometry, codebook, tombstones, memtable, and
+/// the segment count — the per-segment code blocks live in sibling
+/// [`KIND_SEGMENT`] files.
+const KIND_SEGMENTED: u32 = 3;
+/// One sealed segment (`{base}.seg{i}`): ids + unpacked code columns;
+/// packing is rebuilt at load (same deterministic layout).
+const KIND_SEGMENT: u32 = 4;
 
 // ------------------------------------------------------------ primitives
 
@@ -234,6 +243,103 @@ pub fn load_ivfpq4(path: &Path) -> Result<IvfPq4> {
     let pq_params = PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed };
     let m = m_stored.unwrap_or(pq.m); // v1: user M == internal columns
     IvfPq4::from_parts(dim, params, pq_params, m, width, pq, centroids, lists)
+}
+
+// ------------------------------------------------------------ segmented
+
+/// The sibling file holding segment `i` of the manifest at `base`.
+fn segment_path(base: &Path, i: usize) -> PathBuf {
+    let mut name = base.as_os_str().to_os_string();
+    name.push(format!(".seg{i}"));
+    PathBuf::from(name)
+}
+
+/// Save a trained [`SegmentedIndex`]: a manifest at `path` plus one
+/// `{path}.seg{i}` file per sealed segment. The snapshot is taken once, so
+/// a save concurrent with inserts captures a consistent point in time.
+pub fn save_segmented(index: &SegmentedIndex, path: &Path) -> Result<()> {
+    let (dim, m, width, params, pq, snap, next_id) = index.parts();
+    let pq = pq.ok_or(Error::NotTrained)?;
+    let f = std::fs::File::create(path)?;
+    let mut w = Writer { w: BufWriter::new(f) };
+    w.w.write_all(MAGIC)?;
+    w.u32(VERSION)?;
+    w.u32(KIND_SEGMENTED)?;
+    w.u32(width.bits() as u32)?;
+    w.u32(m as u32)?;
+    w.u32(dim as u32)?;
+    w.u64(params.flush_threshold as u64)?;
+    w.u64(params.max_segments as u64)?;
+    w.u64(next_id as u64)?;
+    write_pq(&mut w, &pq)?;
+    // sorted for byte-deterministic output (HashSet order is not)
+    let mut tombs: Vec<i64> = snap.tombstones.iter().copied().collect();
+    tombs.sort_unstable();
+    w.i64s(&tombs)?;
+    w.i64s(snap.memtable.ids())?;
+    w.f32s(snap.memtable.vectors())?;
+    w.bytes(snap.memtable.codes())?;
+    w.u32(snap.segments.len() as u32)?;
+    drop(w);
+    for (i, seg) in snap.segments.iter().enumerate() {
+        let f = std::fs::File::create(segment_path(path, i))?;
+        let mut w = Writer { w: BufWriter::new(f) };
+        w.w.write_all(MAGIC)?;
+        w.u32(VERSION)?;
+        w.u32(KIND_SEGMENT)?;
+        w.u32(width.bits() as u32)?;
+        w.i64s(&seg.ids)?;
+        w.bytes(&seg.codes)?;
+    }
+    Ok(())
+}
+
+/// Load a [`SegmentedIndex`] saved by [`save_segmented`]: the manifest at
+/// `path` plus its `{path}.seg{i}` siblings. Packed layouts are rebuilt
+/// deterministically, so queries answer bit-identically to the saved
+/// instance.
+pub fn load_segmented(path: &Path) -> Result<SegmentedIndex> {
+    let f = std::fs::File::open(path)?;
+    let mut r = Reader { r: BufReader::new(f) };
+    let version = check_header(&mut r, KIND_SEGMENTED)?;
+    let width = read_width(&mut r, version)?;
+    let m = r.u32()? as usize;
+    let dim = r.u32()? as usize;
+    let params = SegmentedParams {
+        flush_threshold: r.u64()? as usize,
+        max_segments: r.u64()? as usize,
+    };
+    let next_id = r.u64()? as i64;
+    let pq = read_pq(&mut r)?;
+    let tombstones: std::collections::HashSet<i64> = r.i64s()?.into_iter().collect();
+    let mem_ids = r.i64s()?;
+    let mem_vectors = r.f32s()?;
+    let mem_codes = r.bytes()?;
+    let code_cols = width.code_columns(m);
+    if mem_vectors.len() != mem_ids.len() * dim || mem_codes.len() != mem_ids.len() * code_cols {
+        return Err(Error::Dataset("segmented manifest: memtable size mismatch".into()));
+    }
+    let memtable = Memtable::from_parts(mem_ids, mem_vectors, mem_codes);
+    let nseg = r.u32()? as usize;
+    let mut segments = Vec::with_capacity(nseg);
+    for i in 0..nseg {
+        let f = std::fs::File::open(segment_path(path, i))?;
+        let mut r = Reader { r: BufReader::new(f) };
+        let version = check_header(&mut r, KIND_SEGMENT)?;
+        let seg_width = read_width(&mut r, version)?;
+        if seg_width != width {
+            return Err(Error::Dataset(format!(
+                "segment {i}: width {seg_width} does not match manifest {width}"
+            )));
+        }
+        let ids = r.i64s()?;
+        let codes = r.bytes()?;
+        // build() re-validates shape and re-packs the kernel layout
+        segments.push(SealedSegment::build(ids, codes, m, width)?);
+    }
+    SegmentedIndex::from_parts(
+        dim, m, width, params, pq, segments, tombstones, memtable, next_id,
+    )
 }
 
 fn check_header<R: Read>(r: &mut Reader<R>, expect_kind: u32) -> Result<u32> {

@@ -1,19 +1,36 @@
 //! Unified index API: the `Index` trait, the concrete index types, and the
-//! faiss-style factory strings (`"IVF1000_HNSW32,PQ16x4fs"`).
+//! faiss-style factory strings (`"IVF1000_HNSW32,PQ16x4fs"`,
+//! `"SEG,PQ16x4fs"`).
 //!
-//! # Lifecycle: a mutable build phase, then an immutable query phase
+//! # Lifecycle: the segment contract
 //!
-//! Every index goes through two phases with distinct mutability:
+//! The fastscan kernels require a frozen, packed code layout. That used to
+//! be the *index* lifecycle — build mutably, seal once, query forever —
+//! but it is really a **segment** lifecycle: the unit that must be frozen
+//! is a packed code block, not the whole index. Two families implement the
+//! trait against that contract:
 //!
-//! 1. **Build** (`&mut self`): [`Index::train`] fits codebooks/centroids,
-//!    [`Index::add`] stages vectors, and [`Index::seal`] packs the staged
-//!    codes into the kernel's interleaved SIMD layout. `seal` is
-//!    idempotent — call it once after the last `add`.
-//! 2. **Query** (`&self`): [`Index::query`] is read-only, so a sealed
-//!    index can be shared behind `Arc<dyn Index>` and queried from many
-//!    threads concurrently without a lock. Querying an index with
-//!    unsealed staged codes returns [`crate::Error::NotSealed`] instead of
-//!    silently repacking.
+//! * **Sealed indexes** ([`IndexPq4FastScan`], [`IndexIvfPq4`], …) are a
+//!   single segment with the build phase exposed: [`Index::train`] fits
+//!   codebooks/centroids, [`Index::add`] stages vectors, and
+//!   [`Index::seal`] packs the staged codes into the kernel's interleaved
+//!   SIMD layout (idempotent; querying unsealed staged codes returns
+//!   [`crate::Error::NotSealed`] instead of silently repacking). After
+//!   `seal`, queries (`&self`) run lock-free behind `Arc<dyn Index>`.
+//! * **The segmented index** ([`crate::segment::SegmentedIndex`], factory
+//!   `"SEG,PQ16x4fs"`) runs the same lifecycle *per segment*, continuously:
+//!   [`Index::insert`] lands rows in a small exact-scanned memtable,
+//!   [`Index::delete`] tombstones sealed rows (compiled into the
+//!   [`crate::pq::fastscan::FilterMask`] admission path, composed with any
+//!   user filter), [`Index::flush`] seals the memtable into a new packed
+//!   segment, and [`Index::compact`] merges the stack and drops tombstoned
+//!   rows. All of these take `&self` — mutation happens by swapping an
+//!   immutable snapshot, so readers stay lock-free on the sealed stack and
+//!   `seal` = `flush` + `compact` degenerates to the one-segment case.
+//!
+//! Queries are read-only on both families and bit-identical at every
+//! executor thread count; a flushed-and-compacted segmented index answers
+//! bit-identically to a one-shot sealed index over the surviving rows.
 //!
 //! # One request/response pair for every query mode
 //!
@@ -81,6 +98,8 @@ pub use params::{SearchParams, SearchRequest};
 pub use pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
 pub use query::{Filter, Hit, IdSet, QueryKind, QueryRequest, QueryResponse, QueryStats};
 pub use refine::IndexRefineFlat;
+
+pub use crate::segment::{SegmentStats, SegmentedIndex};
 
 use crate::exec::QueryExecutor;
 use crate::Result;
@@ -216,6 +235,44 @@ pub trait Index: Send + Sync {
             params: params.cloned(),
         };
         Ok(self.query_with_luts(&req, luts)?.into_search_result(k))
+    }
+    /// Append `n × dim` vectors to a **streaming** index (`&self`: callable
+    /// through `Arc<dyn Index>` concurrently with queries). `ids: None`
+    /// assigns sequential ids; explicit ids upsert (an id's previous live
+    /// row is replaced). Returns the assigned ids. Sealed single-segment
+    /// indexes don't support streaming mutation — build a segmented index
+    /// (factory `"SEG,PQ16x4fs"`) instead.
+    fn insert(&self, _data: &[f32], _ids: Option<&[i64]>) -> Result<Vec<i64>> {
+        Err(crate::Error::InvalidParameter(
+            "this index is sealed-only; streaming insert needs a segmented index \
+             (factory \"SEG,PQ16x4fs\")"
+                .into(),
+        ))
+    }
+    /// Remove rows by id from a streaming index (`&self`); returns how many
+    /// live rows were removed. Memtable rows disappear immediately, sealed
+    /// rows are tombstoned out of the kernel admission masks.
+    fn delete(&self, _ids: &[i64]) -> Result<usize> {
+        Err(crate::Error::InvalidParameter(
+            "this index is sealed-only; delete needs a segmented index \
+             (factory \"SEG,PQ16x4fs\")"
+                .into(),
+        ))
+    }
+    /// Streaming maintenance: seal the mutable front into a packed segment.
+    /// No-op on sealed single-segment indexes (nothing is ever unfrozen).
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+    /// Streaming maintenance: merge sealed segments and drop tombstoned
+    /// rows. No-op on sealed single-segment indexes.
+    fn compact(&self) -> Result<()> {
+        Ok(())
+    }
+    /// Segment-lifecycle counters, if this index has a segment lifecycle
+    /// (`None` for sealed single-segment indexes).
+    fn segment_stats(&self) -> Option<SegmentStats> {
+        None
     }
     /// Compatibility shim: set a *default* runtime parameter from strings
     /// (e.g. `"nprobe" = "4"`). Parses through [`SearchParams::assign`];

@@ -312,6 +312,14 @@ pub struct QueryStats {
     /// Executor scratch-arena high-water mark, in bytes, at response time
     /// (the steady-state working set the allocation-free scan path reuses).
     pub scratch_bytes: usize,
+    /// Scan units the query fanned out over on a segmented index (sealed
+    /// segments plus the memtable if non-empty; 0 for sealed indexes).
+    pub segments_scanned: usize,
+    /// Mutable-front rows at snapshot time (0 for sealed indexes).
+    pub memtable_entries: usize,
+    /// Dead sealed rows awaiting compaction at snapshot time (0 for sealed
+    /// indexes) — the compaction-pressure signal.
+    pub tombstones: usize,
 }
 
 impl Default for QueryStats {
@@ -322,6 +330,9 @@ impl Default for QueryStats {
             filter_selectivity: 1.0,
             threads_used: 1,
             scratch_bytes: 0,
+            segments_scanned: 0,
+            memtable_entries: 0,
+            tombstones: 0,
         }
     }
 }

@@ -26,6 +26,16 @@
 //! sealed index can be shared behind `Arc<dyn Index>` and queried from
 //! many threads concurrently.
 //!
+//! Seal is no longer the end of the story, though: it is the *per-segment*
+//! contract. The segmented index ([`segment`], factory `"SEG,PQ16x4fs"`)
+//! keeps taking [`index::Index::insert`] and [`index::Index::delete`]
+//! after — and while — queries run, by layering a small exact-scanned
+//! memtable and tombstone masks over a stack of sealed segments, with a
+//! background worker flushing and compacting the stack back toward one
+//! sealed segment. The frozen-layout kernels, the lock-free `Arc<dyn
+//! Index>` sharing, and the bit-identical determinism below all survive
+//! unchanged; they just apply per segment.
+//!
 //! ```no_run
 //! use armpq::index::{Filter, Index, QueryRequest, SearchParams, factory};
 //! use armpq::datasets::synthetic::SyntheticDataset;
@@ -111,6 +121,7 @@ pub mod ivf;
 pub mod kmeans;
 pub mod pq;
 pub mod runtime;
+pub mod segment;
 pub mod simd;
 pub mod util;
 

@@ -1,0 +1,826 @@
+//! [`SegmentedIndex`]: the streaming mutable index — an LSM-style stack of
+//! sealed fastscan segments behind a copy-on-write snapshot pointer.
+//!
+//! # Concurrency model: snapshot swap, never in-place mutation
+//!
+//! All index state a reader touches lives in one immutable [`Snapshot`]
+//! (sealed segments, tombstone set, memtable) behind
+//! `RwLock<Arc<Snapshot>>`. A query clones the `Arc` under a momentary
+//! read lock and then runs entirely lock-free on frozen data — concurrent
+//! flush/compaction can never block a reader on the sealed stack, and a
+//! reader can never observe a torn segment set. Writers serialize on a
+//! separate `writer` mutex, build the next snapshot off-line, and swap the
+//! pointer; the old snapshot stays alive until its last reader drops it.
+//!
+//! # Id semantics: unique live ids (upsert)
+//!
+//! Every external id has **at most one live row**. Re-inserting an id
+//! replaces the old row: a memtable copy is removed directly, a sealed
+//! copy is tombstoned (flush physically purges the dead copy before
+//! sealing the replacement, so a tombstone always refers to exactly one
+//! dead sealed row). This keeps `ntotal` O(1), keeps merge free of
+//! duplicate labels, and gives `delete` exact row counts.
+//!
+//! # Determinism
+//!
+//! Scan units (sealed segments in stack order, then the memtable) are each
+//! scanned by the same pure kernels as a standalone index, and merged in
+//! unit order by `(distance, label)` — the per-probed-list discipline of
+//! [`crate::ivf`] extended to segments. Results are bit-identical at every
+//! executor thread count, and a flushed-and-compacted index is
+//! bit-identical to a one-shot [`crate::index::IndexPq4FastScan`] built
+//! from the surviving vectors with the same codebook.
+
+use crate::exec::{range_packed, topk_packed, MaskPlan, QueryExecutor, ScanScratch};
+use crate::index::params::effective_fastscan;
+use crate::index::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
+use crate::index::{Index, SearchParams};
+use crate::pq::fastscan::{FastScanParams, FilterMask};
+use crate::pq::{CodeWidth, ProductQuantizer};
+use crate::segment::memtable::Memtable;
+use crate::segment::sealed::SealedSegment;
+use crate::segment::{SegmentStats, SegmentedParams};
+use crate::{Error, Result};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+/// One immutable view of the whole index. Readers hold an `Arc` to it for
+/// the duration of a query; writers replace the pointer wholesale.
+#[derive(Clone, Default)]
+pub(crate) struct Snapshot {
+    /// Sealed segments, oldest first (unit scan/merge order).
+    pub segments: Vec<Arc<SealedSegment>>,
+    /// Ids whose single sealed copy is dead. Compiled into the per-segment
+    /// [`FilterMask`] admission path; never applied to the memtable (a
+    /// tombstoned id's live replacement, if any, lives there).
+    pub tombstones: Arc<HashSet<i64>>,
+    /// The mutable front (immutable value, swapped on every mutation).
+    pub memtable: Arc<Memtable>,
+}
+
+impl Snapshot {
+    fn sealed_rows(&self) -> usize {
+        self.segments.iter().map(|s| s.len()).sum()
+    }
+
+    /// Live rows: every sealed row minus its tombstone (exactly one dead
+    /// row per tombstone — the upsert invariant), plus the memtable.
+    fn live(&self) -> usize {
+        self.sealed_rows().saturating_sub(self.tombstones.len()) + self.memtable.len()
+    }
+}
+
+/// The shared heart of a [`SegmentedIndex`]: all state plus the mutation
+/// and query logic, so the background worker (holding only an
+/// `Arc<SegInner>`) can flush and compact exactly like the front object.
+pub(crate) struct SegInner {
+    dim: usize,
+    /// User-facing sub-quantizer count (the factory `PQ{m}x{bits}fs` m).
+    m: usize,
+    width: CodeWidth,
+    params: SegmentedParams,
+    /// Codebook shared by every segment and the memtable — one LUT per
+    /// query serves the whole fan-out.
+    pq: RwLock<Option<Arc<ProductQuantizer>>>,
+    snap: RwLock<Arc<Snapshot>>,
+    /// Serializes mutators (insert/delete/flush/compact). Readers never
+    /// touch it.
+    writer: Mutex<()>,
+    next_id: AtomicI64,
+    fastscan: RwLock<FastScanParams>,
+    flushes: AtomicU64,
+    compactions: AtomicU64,
+    /// Background worker wiring: liveness flag, stop flag + wake condvar.
+    pub(crate) worker_on: AtomicBool,
+    pub(crate) stop: Mutex<bool>,
+    pub(crate) wake: Condvar,
+}
+
+impl SegInner {
+    /// Internal code columns per row (`width.code_columns(m)` = the
+    /// trained quantizer's `pq.m`).
+    fn code_cols(&self) -> usize {
+        self.width.code_columns(self.m)
+    }
+
+    pub(crate) fn snapshot(&self) -> Arc<Snapshot> {
+        self.snap.read().unwrap().clone()
+    }
+
+    fn install(&self, next: Snapshot) {
+        *self.snap.write().unwrap() = Arc::new(next);
+    }
+
+    fn pq(&self) -> Result<Arc<ProductQuantizer>> {
+        self.pq.read().unwrap().clone().ok_or(Error::NotTrained)
+    }
+
+    fn train(&self, data: &[f32]) -> Result<()> {
+        if self.snapshot().live() > 0 {
+            return Err(Error::InvalidParameter(
+                "segmented index: train before the first insert (the codebook is shared \
+                 by every segment and cannot change under live rows)"
+                    .into(),
+            ));
+        }
+        self.width.validate(self.dim, self.m)?;
+        let pq = ProductQuantizer::train(data, self.dim, &self.width.pq_params(self.m))?;
+        *self.pq.write().unwrap() = Some(Arc::new(pq));
+        Ok(())
+    }
+
+    /// Append rows (upsert: an id's previous live row is replaced). Codes
+    /// are encoded against the shared codebook *here*, so the memtable's
+    /// exact-ADC distances equal the sealed re-rank distances and a flush
+    /// is invisible under the default `rerank = true`.
+    pub(crate) fn insert(&self, data: &[f32], ids: Option<&[i64]>) -> Result<Vec<i64>> {
+        let pq = self.pq()?;
+        if data.len() % self.dim != 0 {
+            return Err(Error::DimMismatch { expected: self.dim, got: data.len() % self.dim });
+        }
+        let n = data.len() / self.dim;
+        if let Some(ids) = ids {
+            if ids.len() != n {
+                return Err(Error::InvalidParameter(format!(
+                    "insert: {} ids for {n} vectors",
+                    ids.len()
+                )));
+            }
+            let mut seen = HashSet::with_capacity(ids.len());
+            if let Some(dup) = ids.iter().find(|id| !seen.insert(**id)) {
+                return Err(Error::InvalidParameter(format!(
+                    "insert: duplicate id {dup} within one batch"
+                )));
+            }
+        }
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let assigned: Vec<i64> = match ids {
+            Some(ids) => {
+                let max = ids.iter().copied().max().unwrap();
+                self.next_id.fetch_max(max.saturating_add(1), Ordering::SeqCst);
+                ids.to_vec()
+            }
+            None => {
+                let base = self.next_id.fetch_add(n as i64, Ordering::SeqCst);
+                (base..base + n as i64).collect()
+            }
+        };
+        let codes = pq.encode(data)?;
+
+        let guard = self.writer.lock().unwrap();
+        let snap = self.snapshot();
+        let inserted: HashSet<i64> = assigned.iter().copied().collect();
+        // replace any previous live memtable copy of a re-inserted id
+        let (memtable, _replaced) = snap.memtable.with_removed(
+            |id| inserted.contains(&id),
+            self.dim,
+            self.code_cols(),
+        );
+        // tombstone any previous live sealed copy (flush purges the dead
+        // row before sealing the replacement)
+        let mut tombstones = (*snap.tombstones).clone();
+        for seg in &snap.segments {
+            for &id in &inserted {
+                if seg.id_set.contains(&id) {
+                    tombstones.insert(id);
+                }
+            }
+        }
+        let memtable = memtable.with_appended(&assigned, data, &codes);
+        let full = memtable.len() >= self.params.flush_threshold;
+        self.install(Snapshot {
+            segments: snap.segments.clone(),
+            tombstones: Arc::new(tombstones),
+            memtable: Arc::new(memtable),
+        });
+        drop(guard);
+        if full {
+            if self.worker_on.load(Ordering::SeqCst) {
+                self.wake.notify_all();
+            } else {
+                // no background worker: maintenance runs inline, so test
+                // workloads stay deterministic
+                self.flush()?;
+                if self.snapshot().segments.len() > self.params.max_segments {
+                    self.compact()?;
+                }
+            }
+        }
+        Ok(assigned)
+    }
+
+    /// Remove rows by id. Memtable rows disappear immediately; sealed rows
+    /// are tombstoned (they vanish from the kernels via the mask admission
+    /// path and are physically dropped at the next compaction). Returns
+    /// the number of live rows removed.
+    pub(crate) fn delete(&self, ids: &[i64]) -> Result<usize> {
+        let del: HashSet<i64> = ids.iter().copied().collect();
+        if del.is_empty() {
+            return Ok(0);
+        }
+        let _guard = self.writer.lock().unwrap();
+        let snap = self.snapshot();
+        let (memtable, removed_mem) =
+            snap.memtable.with_removed(|id| del.contains(&id), self.dim, self.code_cols());
+        let mut tombstones = (*snap.tombstones).clone();
+        let mut removed_sealed = 0usize;
+        for &id in &del {
+            let sealed = snap.segments.iter().any(|s| s.id_set.contains(&id));
+            if sealed && tombstones.insert(id) {
+                removed_sealed += 1;
+            }
+        }
+        self.install(Snapshot {
+            segments: snap.segments.clone(),
+            tombstones: Arc::new(tombstones),
+            memtable: Arc::new(memtable),
+        });
+        Ok(removed_mem + removed_sealed)
+    }
+
+    /// Seal the memtable into a new segment. Before sealing, ids being
+    /// flushed that carry a tombstone (re-inserted ids) have their dead
+    /// sealed copy physically purged and the tombstone dropped, so the
+    /// freshly sealed replacement is never masked by its own id.
+    pub(crate) fn flush(&self) -> Result<()> {
+        let _guard = self.writer.lock().unwrap();
+        let snap = self.snapshot();
+        if snap.memtable.is_empty() {
+            return Ok(());
+        }
+        let resurrected: HashSet<i64> = snap
+            .memtable
+            .ids()
+            .iter()
+            .copied()
+            .filter(|id| snap.tombstones.contains(id))
+            .collect();
+        let (mut segments, tombstones) = if resurrected.is_empty() {
+            (snap.segments.clone(), snap.tombstones.clone())
+        } else {
+            let purged = purge_segments(&snap.segments, &resurrected, self.m, self.width)?;
+            let mut tomb = (*snap.tombstones).clone();
+            for id in &resurrected {
+                tomb.remove(id);
+            }
+            (purged, Arc::new(tomb))
+        };
+        let seg = SealedSegment::build(
+            snap.memtable.ids().to_vec(),
+            snap.memtable.codes().to_vec(),
+            self.m,
+            self.width,
+        )?;
+        segments.push(Arc::new(seg));
+        self.install(Snapshot { segments, tombstones, memtable: Arc::new(Memtable::empty()) });
+        self.flushes.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Merge all sealed segments into one, dropping tombstoned rows.
+    /// Surviving rows keep segment-stack then within-segment order, so a
+    /// compacted stack scans in the same order an equivalently-built
+    /// one-shot index would — the bit-identity anchor.
+    pub(crate) fn compact(&self) -> Result<()> {
+        let _guard = self.writer.lock().unwrap();
+        let snap = self.snapshot();
+        if snap.segments.len() <= 1 && snap.tombstones.is_empty() {
+            return Ok(());
+        }
+        let cols = self.code_cols();
+        let mut ids: Vec<i64> = Vec::with_capacity(snap.sealed_rows());
+        let mut codes: Vec<u8> = Vec::with_capacity(snap.sealed_rows() * cols);
+        for seg in &snap.segments {
+            for (row, &id) in seg.ids.iter().enumerate() {
+                if snap.tombstones.contains(&id) {
+                    continue;
+                }
+                ids.push(id);
+                codes.extend_from_slice(&seg.codes[row * cols..(row + 1) * cols]);
+            }
+        }
+        let segments = if ids.is_empty() {
+            Vec::new()
+        } else {
+            vec![Arc::new(SealedSegment::build(ids, codes, self.m, self.width)?)]
+        };
+        self.install(Snapshot {
+            segments,
+            tombstones: Arc::new(HashSet::new()),
+            memtable: snap.memtable.clone(),
+        });
+        self.compactions.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// One background maintenance pass: flush when the memtable is past
+    /// the threshold, compact when the stack is past `max_segments`.
+    pub(crate) fn maintain(&self) -> Result<()> {
+        if self.snapshot().memtable.len() >= self.params.flush_threshold {
+            self.flush()?;
+        }
+        if self.snapshot().segments.len() > self.params.max_segments {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn stats(&self) -> SegmentStats {
+        let snap = self.snapshot();
+        SegmentStats {
+            segments: snap.segments.len(),
+            sealed_rows: snap.sealed_rows(),
+            memtable_entries: snap.memtable.len(),
+            tombstones: snap.tombstones.len(),
+            flushes: self.flushes.load(Ordering::SeqCst),
+            compactions: self.compactions.load(Ordering::SeqCst),
+        }
+    }
+
+    /// The plan/execute core: snapshot once, build lazy per-unit masks
+    /// (tombstones composed with the user filter), fan out on the
+    /// executor, merge in unit order.
+    fn query_luts_exec(
+        &self,
+        req: &QueryRequest<'_>,
+        luts: Option<&[f32]>,
+        exec: &QueryExecutor,
+    ) -> Result<QueryResponse> {
+        req.kind.validate()?;
+        let pq = self.pq()?;
+        if req.queries.len() % self.dim != 0 {
+            return Err(Error::DimMismatch {
+                expected: self.dim,
+                got: req.queries.len() % self.dim,
+            });
+        }
+        let nq = req.queries.len() / self.dim;
+        let lut_len = pq.m * pq.ksub;
+        if let Some(ls) = luts {
+            if ls.len() != nq * lut_len {
+                return Err(Error::InvalidParameter(format!(
+                    "precomputed luts length {} != nq {nq} × {lut_len}",
+                    ls.len()
+                )));
+            }
+        }
+        let snap = self.snapshot();
+        if nq == 0 || snap.live() == 0 || matches!(req.kind, QueryKind::TopK { k: 0 }) {
+            return Ok(QueryResponse::empty(nq));
+        }
+        let memtable_entries = snap.memtable.len();
+        let ntomb = snap.tombstones.len();
+        if req.filter.as_ref().is_some_and(|f| f.is_provably_empty()) {
+            let stats = QueryStats {
+                codes_scanned: 0,
+                lists_probed: 0,
+                filter_selectivity: 0.0,
+                segments_scanned: 0,
+                memtable_entries,
+                tombstones: ntomb,
+                ..Default::default()
+            };
+            return Ok(QueryResponse { hits: vec![Vec::new(); nq], stats: vec![stats; nq] });
+        }
+
+        // scan units: sealed segments in stack order, then the memtable
+        let mut units: Vec<Unit<'_>> =
+            snap.segments.iter().map(|s| Unit::Sealed(s.as_ref())).collect();
+        if !snap.memtable.is_empty() {
+            units.push(Unit::Mem(snap.memtable.as_ref()));
+        }
+        let nunits = units.len();
+        let fs = effective_fastscan(&self.fastscan.read().unwrap(), req.params.as_ref());
+        let masks = if req.filter.is_some() || ntomb > 0 {
+            MaskPlan::lists(nunits)
+        } else {
+            MaskPlan::None
+        };
+        let filter = req.filter.as_ref();
+        let tomb = snap.tombstones.as_ref();
+        let scan_unit = |u: usize, luts_f32: &[f32], scratch: &mut ScanScratch| -> Vec<Hit> {
+            // per-unit mask: query-independent, built at most once per unit
+            // for the whole batch (shared through the plan's OnceLock slots)
+            let mask = masks.list_mask(u, || match units[u] {
+                Unit::Sealed(seg) => FilterMask::from_fn(seg.len(), |pos| {
+                    let id = seg.ids[pos];
+                    !tomb.contains(&id) && filter.map_or(true, |f| f.matches(id))
+                }),
+                // tombstones never apply to the memtable: a tombstoned
+                // id's live replacement is exactly what lives here
+                Unit::Mem(mt) => FilterMask::from_fn(mt.len(), |pos| {
+                    filter.map_or(true, |f| f.matches(mt.ids()[pos]))
+                }),
+            });
+            match units[u] {
+                Unit::Sealed(seg) => match req.kind {
+                    QueryKind::TopK { k } => topk_packed(
+                        &pq,
+                        &seg.packed,
+                        luts_f32,
+                        k,
+                        &fs,
+                        Some(seg.ids.as_slice()),
+                        mask,
+                        scratch,
+                    ),
+                    QueryKind::Range { radius } => range_packed(
+                        &pq,
+                        &seg.packed,
+                        luts_f32,
+                        radius,
+                        &fs,
+                        Some(seg.ids.as_slice()),
+                        mask,
+                        scratch,
+                    ),
+                },
+                Unit::Mem(mt) => match req.kind {
+                    QueryKind::TopK { k } => {
+                        let (hits, store) =
+                            mt.scan_topk(&pq, luts_f32, k, mask, scratch.take_heap());
+                        scratch.put_heap(store);
+                        hits
+                    }
+                    QueryKind::Range { radius } => mt.scan_range(&pq, luts_f32, radius, mask),
+                },
+            }
+        };
+
+        let hits: Vec<Vec<Hit>> = if nq == 1 && exec.threads() > 1 && nunits > 1 {
+            // single wide query: fan the units out instead of the batch —
+            // one LUT build serves every segment (shared codebook)
+            let owned;
+            let luts_f32: &[f32] = match luts {
+                Some(ls) => ls,
+                None => {
+                    owned = pq.compute_luts(&req.queries[..self.dim]);
+                    &owned
+                }
+            };
+            let rows = exec.run_tasks(nunits, |u, scratch| scan_unit(u, luts_f32, scratch));
+            vec![merge_unit_rows(rows, req.kind)]
+        } else {
+            exec.run_batch(nq, |qi, scratch| {
+                let mut lbuf = scratch.take_luts();
+                let luts_f32: &[f32] = match luts {
+                    Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
+                    None => {
+                        pq.compute_luts_into(
+                            &req.queries[qi * self.dim..(qi + 1) * self.dim],
+                            &mut lbuf,
+                        );
+                        &lbuf
+                    }
+                };
+                let rows: Vec<Vec<Hit>> =
+                    (0..nunits).map(|u| scan_unit(u, luts_f32, scratch)).collect();
+                scratch.put_luts(lbuf);
+                merge_unit_rows(rows, req.kind)
+            })
+        };
+
+        // stats: every query of the batch scanned every unit, and every
+        // unit mask was built during the scan
+        let codes_scanned: usize = units.iter().map(|u| u.len()).sum();
+        let selectivity = if let MaskPlan::Lists(slots) = &masks {
+            let (mut pass, mut total) = (0usize, 0usize);
+            for (u, unit) in units.iter().enumerate() {
+                total += unit.len();
+                pass += slots[u].get().map_or(unit.len(), |m| m.pass_count());
+            }
+            if total == 0 { 1.0 } else { pass as f64 / total as f64 }
+        } else {
+            1.0
+        };
+        let mut stats = vec![
+            QueryStats {
+                codes_scanned,
+                lists_probed: nunits,
+                filter_selectivity: selectivity,
+                segments_scanned: nunits,
+                memtable_entries,
+                tombstones: ntomb,
+                ..Default::default()
+            };
+            nq
+        ];
+        exec.stamp_stats(&mut stats, if nq == 1 { nunits } else { nq });
+        Ok(QueryResponse { hits, stats })
+    }
+}
+
+/// One scan unit of the fan-out.
+#[derive(Clone, Copy)]
+enum Unit<'s> {
+    Sealed(&'s SealedSegment),
+    Mem(&'s Memtable),
+}
+
+impl Unit<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Unit::Sealed(seg) => seg.len(),
+            Unit::Mem(mt) => mt.len(),
+        }
+    }
+}
+
+/// Deterministic per-segment merge: flatten the per-unit rows (already
+/// unit-ordered), sort by `(distance, label)` — the same total order every
+/// kernel emits — and truncate to `k` for top-k. Ids are unique across
+/// units (the upsert invariant), so no dedup pass is needed and the
+/// comparator's tie-break is total.
+fn merge_unit_rows(rows: Vec<Vec<Hit>>, kind: QueryKind) -> Vec<Hit> {
+    let mut all: Vec<Hit> = rows.into_iter().flatten().collect();
+    all.sort_by(|a, b| {
+        a.distance
+            .partial_cmp(&b.distance)
+            .unwrap()
+            .then(a.label.cmp(&b.label))
+    });
+    if let QueryKind::TopK { k } = kind {
+        all.truncate(k);
+    }
+    all
+}
+
+/// Rebuild `segments` without the rows whose ids are in `drop`. Segments
+/// untouched by `drop` are shared, not copied; a segment losing all rows
+/// disappears.
+fn purge_segments(
+    segments: &[Arc<SealedSegment>],
+    drop: &HashSet<i64>,
+    user_m: usize,
+    width: CodeWidth,
+) -> Result<Vec<Arc<SealedSegment>>> {
+    let mut out = Vec::with_capacity(segments.len());
+    for seg in segments {
+        if !drop.iter().any(|id| seg.id_set.contains(id)) {
+            out.push(seg.clone());
+            continue;
+        }
+        let cols = seg.code_cols();
+        let mut ids = Vec::new();
+        let mut codes = Vec::new();
+        for (row, &id) in seg.ids.iter().enumerate() {
+            if drop.contains(&id) {
+                continue;
+            }
+            ids.push(id);
+            codes.extend_from_slice(&seg.codes[row * cols..(row + 1) * cols]);
+        }
+        if !ids.is_empty() {
+            out.push(Arc::new(SealedSegment::build(ids, codes, user_m, width)?));
+        }
+    }
+    Ok(out)
+}
+
+/// The streaming mutable index (see the module doc for the architecture).
+///
+/// Implements the full [`Index`] surface: the build-phase methods map onto
+/// the streaming ones (`add` = `insert`, `seal` = `flush` + `compact`),
+/// and the streaming methods (`insert`/`delete`/`flush`/`compact`) take
+/// `&self` — a `SegmentedIndex` behind `Arc<dyn Index>` mutates safely
+/// from many threads.
+pub struct SegmentedIndex {
+    pub(crate) inner: Arc<SegInner>,
+    /// Background flush/compaction worker, if spawned.
+    pub(crate) worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SegmentedIndex {
+    /// A new untrained segmented index.
+    pub fn new(dim: usize, m: usize, width: CodeWidth, params: SegmentedParams) -> Result<Self> {
+        width.validate(dim, m)?;
+        if params.flush_threshold == 0 || params.max_segments == 0 {
+            return Err(Error::InvalidParameter(
+                "segmented index: flush_threshold and max_segments must be >= 1".into(),
+            ));
+        }
+        Ok(Self {
+            inner: Arc::new(SegInner {
+                dim,
+                m,
+                width,
+                params,
+                pq: RwLock::new(None),
+                snap: RwLock::new(Arc::new(Snapshot::default())),
+                writer: Mutex::new(()),
+                next_id: AtomicI64::new(0),
+                fastscan: RwLock::new(FastScanParams::default()),
+                flushes: AtomicU64::new(0),
+                compactions: AtomicU64::new(0),
+                worker_on: AtomicBool::new(false),
+                stop: Mutex::new(false),
+                wake: Condvar::new(),
+            }),
+            worker: Mutex::new(None),
+        })
+    }
+
+    /// The paper's 4-bit configuration with default segment parameters.
+    pub fn new_4bit(dim: usize, m: usize) -> Result<Self> {
+        Self::new(dim, m, CodeWidth::W4, SegmentedParams::default())
+    }
+
+    /// Append rows; `ids: None` assigns sequential ids. Re-inserting an id
+    /// replaces its previous row (upsert). `&self`: callable through
+    /// `Arc<dyn Index>` concurrently with queries.
+    pub fn insert(&self, data: &[f32], ids: Option<&[i64]>) -> Result<Vec<i64>> {
+        self.inner.insert(data, ids)
+    }
+
+    /// Remove rows by id; returns the number of live rows removed.
+    pub fn delete(&self, ids: &[i64]) -> Result<usize> {
+        self.inner.delete(ids)
+    }
+
+    /// Seal the memtable into a new segment (no-op when empty).
+    pub fn flush(&self) -> Result<()> {
+        self.inner.flush()
+    }
+
+    /// Merge the sealed stack into one segment, dropping tombstoned rows.
+    pub fn compact(&self) -> Result<()> {
+        self.inner.compact()
+    }
+
+    /// Segment-lifecycle observability counters.
+    pub fn segment_stats(&self) -> SegmentStats {
+        self.inner.stats()
+    }
+
+    /// Start the background flush/compaction worker (idempotent). Without
+    /// it, maintenance runs inline at the insert that crosses a threshold
+    /// — deterministic, which is what the differential tests want.
+    pub fn spawn_background(&self) {
+        crate::segment::worker::spawn(self);
+    }
+
+    /// Rebuild from persisted parts (`index/io.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        dim: usize,
+        m: usize,
+        width: CodeWidth,
+        params: SegmentedParams,
+        pq: ProductQuantizer,
+        segments: Vec<SealedSegment>,
+        tombstones: HashSet<i64>,
+        memtable: Memtable,
+        next_id: i64,
+    ) -> Result<Self> {
+        if pq.m != width.code_columns(m) || pq.ksub != width.sub_ksub() {
+            return Err(Error::InvalidParameter(format!(
+                "segmented index: quantizer shape {}x{} does not match m={m} ({})",
+                pq.m, pq.ksub, width
+            )));
+        }
+        let idx = Self::new(dim, m, width, params)?;
+        *idx.inner.pq.write().unwrap() = Some(Arc::new(pq));
+        idx.inner.next_id.store(next_id, Ordering::SeqCst);
+        idx.inner.install(Snapshot {
+            segments: segments.into_iter().map(Arc::new).collect(),
+            tombstones: Arc::new(tombstones),
+            memtable: Arc::new(memtable),
+        });
+        Ok(idx)
+    }
+
+    /// Persistence view (crate-internal, used by `index/io.rs`): geometry,
+    /// segment parameters, codebook, current snapshot, id counter.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn parts(
+        &self,
+    ) -> (usize, usize, CodeWidth, SegmentedParams, Option<Arc<ProductQuantizer>>, Arc<Snapshot>, i64)
+    {
+        let inner = &self.inner;
+        (
+            inner.dim,
+            inner.m,
+            inner.width,
+            inner.params,
+            inner.pq.read().unwrap().clone(),
+            inner.snapshot(),
+            inner.next_id.load(Ordering::SeqCst),
+        )
+    }
+}
+
+impl Drop for SegmentedIndex {
+    fn drop(&mut self) {
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            *self.inner.stop.lock().unwrap() = true;
+            self.inner.wake.notify_all();
+            let _ = handle.join();
+            self.inner.worker_on.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Index for SegmentedIndex {
+    fn dim(&self) -> usize {
+        self.inner.dim
+    }
+
+    fn ntotal(&self) -> usize {
+        self.inner.snapshot().live()
+    }
+
+    fn is_trained(&self) -> bool {
+        self.inner.pq.read().unwrap().is_some()
+    }
+
+    fn train(&mut self, data: &[f32]) -> Result<()> {
+        self.inner.train(data)
+    }
+
+    fn add(&mut self, data: &[f32]) -> Result<()> {
+        self.inner.insert(data, None).map(|_| ())
+    }
+
+    /// `seal` maps onto the streaming lifecycle: flush the memtable and
+    /// compact to a single segment — after which queries are bit-identical
+    /// to a one-shot sealed index over the surviving rows.
+    fn seal(&mut self) -> Result<()> {
+        self.inner.flush()?;
+        self.inner.compact()
+    }
+
+    fn query_exec(&self, req: &QueryRequest<'_>, exec: &QueryExecutor) -> Result<QueryResponse> {
+        self.inner.query_luts_exec(req, None, exec)
+    }
+
+    fn query_with_luts_exec(
+        &self,
+        req: &QueryRequest<'_>,
+        luts: &[f32],
+        exec: &QueryExecutor,
+    ) -> Result<QueryResponse> {
+        self.inner.query_luts_exec(req, Some(luts), exec)
+    }
+
+    fn lut_signature(&self) -> Option<u64> {
+        self.inner.pq.read().unwrap().as_ref().map(|pq| pq.signature())
+    }
+
+    fn compute_scan_luts(&self, queries: &[f32]) -> Option<Vec<f32>> {
+        let pq = self.inner.pq.read().unwrap().clone()?;
+        if queries.len() % self.inner.dim != 0 {
+            return None;
+        }
+        Some(pq.compute_luts_batch(queries))
+    }
+
+    fn insert(&self, data: &[f32], ids: Option<&[i64]>) -> Result<Vec<i64>> {
+        self.inner.insert(data, ids)
+    }
+
+    fn delete(&self, ids: &[i64]) -> Result<usize> {
+        self.inner.delete(ids)
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.inner.flush()
+    }
+
+    fn compact(&self) -> Result<()> {
+        self.inner.compact()
+    }
+
+    fn segment_stats(&self) -> Option<SegmentStats> {
+        Some(self.inner.stats())
+    }
+
+    fn set_param(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "rerank" | "reservoir_factor" | "backend" => {
+                let mut p = SearchParams::default();
+                p.assign(key, value)?;
+                let current = self.inner.fastscan.read().unwrap().clone();
+                *self.inner.fastscan.write().unwrap() = p.fastscan(&current);
+                Ok(())
+            }
+            _ => Err(Error::InvalidParameter(format!("unknown parameter {key}"))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        let s = self.inner.stats();
+        format!(
+            "SEG(PQ{}x{}fs, d={}, n={}, segs={}, mem={}, tomb={})",
+            self.inner.m,
+            self.inner.width.bits(),
+            self.inner.dim,
+            self.ntotal(),
+            s.segments,
+            s.memtable_entries,
+            s.tombstones,
+        )
+    }
+}

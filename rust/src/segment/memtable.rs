@@ -1,0 +1,248 @@
+//! The mutable front of a [`crate::segment::SegmentedIndex`]: a small
+//! append-only batch of vectors that has not been sealed into a packed
+//! segment yet.
+//!
+//! # Value semantics (copy-on-write)
+//!
+//! A `Memtable` is an immutable value. Mutations ([`Memtable::with_appended`],
+//! [`Memtable::with_removed`]) build a *new* memtable and leave the old one
+//! untouched, so a snapshot holding `Arc<Memtable>` stays valid forever —
+//! readers scanning an old snapshot never observe a half-applied insert.
+//! The copy cost is bounded by the flush threshold (the background worker
+//! seals the memtable into a packed segment long before it grows large).
+//!
+//! # Scan semantics
+//!
+//! Vectors are PQ-encoded **at insert time** against the shared codebook,
+//! and the memtable scan computes exact ADC distances over those codes
+//! ([`crate::pq::codebook::ProductQuantizer::adc_distance`]) — the *same*
+//! distance the sealed re-rank path computes from
+//! [`crate::pq::layout::PackedCodes::code_at`]. Under the default
+//! `rerank = true` configuration a flush is therefore invisible: the row
+//! moves from the memtable to a sealed segment and its reported distance
+//! does not change by a single bit.
+
+use crate::index::query::Hit;
+use crate::pq::codebook::ProductQuantizer;
+use crate::pq::fastscan::FilterMask;
+use crate::util::topk::TopK;
+
+/// An immutable batch of unsealed rows: ids, raw vectors (kept for future
+/// re-encoding on codebook evolution and for debugging), and insert-time
+/// PQ codes (`len × pq.m` internal columns).
+#[derive(Debug, Default, Clone)]
+pub struct Memtable {
+    ids: Vec<i64>,
+    vectors: Vec<f32>,
+    codes: Vec<u8>,
+}
+
+impl Memtable {
+    /// The empty memtable.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// External ids, insertion order.
+    pub fn ids(&self) -> &[i64] {
+        &self.ids
+    }
+
+    /// Raw vectors (`len × dim`, insertion order).
+    pub fn vectors(&self) -> &[f32] {
+        &self.vectors
+    }
+
+    /// Insert-time PQ codes (`len × code_cols`, insertion order).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Rebuild from persisted parts (the manifest loader).
+    pub(crate) fn from_parts(ids: Vec<i64>, vectors: Vec<f32>, codes: Vec<u8>) -> Self {
+        Self { ids, vectors, codes }
+    }
+
+    /// A new memtable with `ids`/`vectors`/`codes` appended (the old value
+    /// is untouched — snapshot readers keep scanning it).
+    pub fn with_appended(&self, ids: &[i64], vectors: &[f32], codes: &[u8]) -> Self {
+        let mut next = self.clone();
+        next.ids.extend_from_slice(ids);
+        next.vectors.extend_from_slice(vectors);
+        next.codes.extend_from_slice(codes);
+        next
+    }
+
+    /// A new memtable with every row whose id satisfies `remove` dropped;
+    /// returns the new value and how many rows were removed. Relative row
+    /// order of the survivors is preserved (the deterministic-merge
+    /// discipline orders equal distances by label, but compaction order
+    /// must stay insertion order).
+    pub fn with_removed(&self, remove: impl Fn(i64) -> bool, dim: usize, code_cols: usize) -> (Self, usize) {
+        let mut next = Memtable::empty();
+        let mut removed = 0usize;
+        for (row, &id) in self.ids.iter().enumerate() {
+            if remove(id) {
+                removed += 1;
+                continue;
+            }
+            next.ids.push(id);
+            next.vectors.extend_from_slice(&self.vectors[row * dim..(row + 1) * dim]);
+            next.codes.extend_from_slice(&self.codes[row * code_cols..(row + 1) * code_cols]);
+        }
+        (next, removed)
+    }
+
+    /// Exhaustive exact-ADC top-k over the memtable rows admitted by
+    /// `mask` (position space, like the sealed kernels). Returns ascending
+    /// `(distance, label)` hits, at most `k`.
+    pub fn scan_topk(
+        &self,
+        pq: &ProductQuantizer,
+        luts_f32: &[f32],
+        k: usize,
+        mask: Option<&FilterMask>,
+        heap_storage: Vec<(f32, i64)>,
+    ) -> (Vec<Hit>, Vec<(f32, i64)>) {
+        if k == 0 {
+            return (Vec::new(), heap_storage);
+        }
+        let cols = pq.m;
+        let mut heap = TopK::from_storage(k, heap_storage);
+        for (row, &id) in self.ids.iter().enumerate() {
+            if mask.is_some_and(|m| !m.passes(row)) {
+                continue;
+            }
+            let d = pq.adc_distance(luts_f32, &self.codes[row * cols..(row + 1) * cols]);
+            heap.push(d, id);
+        }
+        let hits = heap
+            .as_sorted_hits()
+            .iter()
+            .map(|&(distance, label)| Hit { distance, label })
+            .collect();
+        (hits, heap.into_storage())
+    }
+
+    /// Exhaustive exact-ADC range scan over admitted memtable rows:
+    /// every `(distance, label)` with distance `<= radius`, ascending by
+    /// `(distance, label)`.
+    pub fn scan_range(
+        &self,
+        pq: &ProductQuantizer,
+        luts_f32: &[f32],
+        radius: f32,
+        mask: Option<&FilterMask>,
+    ) -> Vec<Hit> {
+        let cols = pq.m;
+        let mut hits: Vec<Hit> = Vec::new();
+        for (row, &id) in self.ids.iter().enumerate() {
+            if mask.is_some_and(|m| !m.passes(row)) {
+                continue;
+            }
+            let d = pq.adc_distance(luts_f32, &self.codes[row * cols..(row + 1) * cols]);
+            if d <= radius {
+                hits.push(Hit { distance: d, label: id });
+            }
+        }
+        hits.sort_by(|a, b| {
+            a.distance
+                .partial_cmp(&b.distance)
+                .unwrap()
+                .then(a.label.cmp(&b.label))
+        });
+        hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::PqParams;
+    use crate::util::rng::Rng;
+
+    fn toy_pq(dim: usize, m: usize, seed: u64) -> (ProductQuantizer, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..400 * dim).map(|_| rng.next_gaussian()).collect();
+        let pq = ProductQuantizer::train(&data, dim, &PqParams::new_4bit(m)).unwrap();
+        (pq, data)
+    }
+
+    #[test]
+    fn append_is_copy_on_write() {
+        let (pq, data) = toy_pq(16, 4, 301);
+        let dim = 16;
+        let codes = pq.encode(&data[..4 * dim]).unwrap();
+        let base = Memtable::empty();
+        let a = base.with_appended(&[10, 11], &data[..2 * dim], &codes[..2 * pq.m]);
+        let b = a.with_appended(&[12, 13], &data[2 * dim..4 * dim], &codes[2 * pq.m..4 * pq.m]);
+        // the older values are untouched
+        assert_eq!(base.len(), 0);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.ids(), &[10, 11, 12, 13]);
+        assert_eq!(b.codes().len(), 4 * pq.m);
+        assert_eq!(b.vectors().len(), 4 * dim);
+    }
+
+    #[test]
+    fn removal_preserves_survivor_order() {
+        let (pq, data) = toy_pq(16, 4, 302);
+        let dim = 16;
+        let codes = pq.encode(&data[..5 * dim]).unwrap();
+        let mt = Memtable::empty().with_appended(&[1, 2, 3, 4, 5], &data[..5 * dim], &codes[..5 * pq.m]);
+        let (next, removed) = mt.with_removed(|id| id % 2 == 0, dim, pq.m);
+        assert_eq!(removed, 2);
+        assert_eq!(next.ids(), &[1, 3, 5]);
+        // survivor rows carry their own codes, not shifted neighbors'
+        assert_eq!(&next.codes()[pq.m..2 * pq.m], &codes[2 * pq.m..3 * pq.m]);
+        // removing nothing is a cheap identity
+        let (same, zero) = next.with_removed(|_| false, dim, pq.m);
+        assert_eq!(zero, 0);
+        assert_eq!(same.ids(), next.ids());
+    }
+
+    #[test]
+    fn scan_matches_adc_oracle() {
+        let (pq, data) = toy_pq(16, 4, 303);
+        let dim = 16;
+        let n = 50;
+        let codes = pq.encode(&data[..n * dim]).unwrap();
+        let ids: Vec<i64> = (100..100 + n as i64).collect();
+        let mt = Memtable::empty().with_appended(&ids, &data[..n * dim], &codes);
+        let luts = pq.compute_luts(&data[..dim]);
+        // oracle: exact ADC over all rows
+        let mut oracle: Vec<(f32, i64)> = (0..n)
+            .map(|row| (pq.adc_distance(&luts, &codes[row * pq.m..(row + 1) * pq.m]), ids[row]))
+            .collect();
+        oracle.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let (hits, _store) = mt.scan_topk(&pq, &luts, 7, None, Vec::new());
+        let got: Vec<(f32, i64)> = hits.iter().map(|h| (h.distance, h.label)).collect();
+        assert_eq!(got, oracle[..7].to_vec());
+        // masked scan drops exactly the masked positions
+        let mask = FilterMask::from_fn(n, |p| p % 2 == 0);
+        let (hits_m, _store) = mt.scan_topk(&pq, &luts, 7, Some(&mask), Vec::new());
+        let want: Vec<(f32, i64)> = oracle
+            .iter()
+            .filter(|&&(_, id)| (id - 100) % 2 == 0)
+            .take(7)
+            .copied()
+            .collect();
+        let got_m: Vec<(f32, i64)> = hits_m.iter().map(|h| (h.distance, h.label)).collect();
+        assert_eq!(got_m, want);
+        // range agrees with the top-k prefix at the same boundary
+        let radius = oracle[9].0;
+        let range = mt.scan_range(&pq, &luts, radius, None);
+        assert!(range.len() >= 10);
+        assert!(range.iter().all(|h| h.distance <= radius));
+        assert!(range.windows(2).all(|w| w[0].distance <= w[1].distance));
+    }
+}

@@ -1,0 +1,84 @@
+//! Streaming mutable index: an LSM-style segment stack over the sealed
+//! fastscan kernel contract.
+//!
+//! # Why segments
+//!
+//! The paper's 4-bit fastscan kernels require a frozen, SIMD-interleaved
+//! code layout — PRs 1–5 hardened that into the `train`/`add`/`seal` →
+//! lock-free `Arc<dyn Index>` contract. A production ANN service, however,
+//! takes inserts and deletes continuously. The classic resolution (used by
+//! every production ARM vector stack this repo tracks) is to keep the
+//! kernel contract *per segment* instead of per index:
+//!
+//! * a small mutable **memtable** ([`Memtable`]) absorbs inserts and is
+//!   scanned exactly (ADC over insert-time codes against the shared
+//!   codebook) — never packed, never large;
+//! * a stack of **sealed segments** ([`SealedSegment`]) — each one exactly
+//!   the immutable packed block of a standalone index — serves the bulk of
+//!   the data through the unchanged fastscan kernels;
+//! * **tombstones** record deleted ids; they compile into the existing
+//!   [`crate::pq::fastscan::FilterMask`] admission path (composed with any
+//!   user filter), so deleted rows vanish from kernels without touching
+//!   packed codes;
+//! * a background **flush/compaction worker** seals the memtable into a
+//!   new segment and merges the stack back toward one segment, physically
+//!   dropping tombstoned rows.
+//!
+//! # Contracts carried over from the sealed world
+//!
+//! * **Lock-free reads.** All reader-visible state lives in one immutable
+//!   snapshot behind a copy-on-write pointer; a query dereferences it once
+//!   and never takes a lock a writer holds during flush or compaction.
+//! * **Determinism.** Scan units (segments, then the memtable) are scanned
+//!   by pure kernels and merged in unit order by `(distance, label)` — the
+//!   per-probed-list merge discipline of [`crate::ivf`] extended to
+//!   segments. Results are bit-identical at every executor thread count,
+//!   and after `flush` + `compact` they are bit-identical to a one-shot
+//!   sealed index built from the surviving vectors with the same codebook.
+//! * **One live row per id.** Insert is upsert; each tombstone names
+//!   exactly one dead sealed row. `ntotal` stays O(1) and merges never see
+//!   duplicate labels.
+
+pub mod index;
+pub mod memtable;
+pub mod sealed;
+pub(crate) mod worker;
+
+pub use index::SegmentedIndex;
+pub use memtable::Memtable;
+pub use sealed::SealedSegment;
+
+/// Tuning knobs for the segment lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentedParams {
+    /// Memtable rows that trigger a flush into a sealed segment.
+    pub flush_threshold: usize,
+    /// Sealed-segment count above which a compaction merges the stack.
+    pub max_segments: usize,
+}
+
+impl Default for SegmentedParams {
+    fn default() -> Self {
+        Self { flush_threshold: 4096, max_segments: 8 }
+    }
+}
+
+/// Segment-lifecycle observability: surfaced through
+/// [`crate::index::Index::segment_stats`], the coordinator's `stats` verb,
+/// and [`crate::coordinator::metrics`] gauges, so compaction pressure is
+/// visible before it becomes tail latency.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SegmentStats {
+    /// Sealed segments currently in the stack.
+    pub segments: usize,
+    /// Rows across all sealed segments (live + tombstoned).
+    pub sealed_rows: usize,
+    /// Rows in the mutable memtable.
+    pub memtable_entries: usize,
+    /// Dead sealed rows awaiting compaction.
+    pub tombstones: usize,
+    /// Lifetime flush count.
+    pub flushes: u64,
+    /// Lifetime compaction count.
+    pub compactions: u64,
+}

@@ -1,0 +1,100 @@
+//! An immutable sealed segment: a packed fastscan code block plus the
+//! external ids of its rows.
+//!
+//! A sealed segment is exactly the frozen layout the paper's kernels
+//! assume — the same [`PackedCodes`] block an [`crate::index::IndexPq4FastScan`]
+//! builds at `seal()`. The segmented index keeps the *unpacked* internal
+//! code columns alongside the packed block: compaction concatenates
+//! surviving rows' code columns across segments and re-packs once, and
+//! persistence writes the columns verbatim (re-packing on load), so no
+//! path ever has to reverse the SIMD interleave.
+
+use crate::error::{Error, Result};
+use crate::pq::{CodeWidth, PackedCodes};
+use std::collections::HashSet;
+
+/// One immutable segment of the stack: `n` rows, each with an external id
+/// and `code_cols` internal code columns, packed for the fastscan kernels.
+#[derive(Debug)]
+pub struct SealedSegment {
+    /// External ids, row order (kernel `labels` slice).
+    pub ids: Vec<i64>,
+    /// Unpacked internal code columns (`n × code_cols`), kept for
+    /// compaction and persistence.
+    pub codes: Vec<u8>,
+    /// The kernel-ready packed block.
+    pub packed: PackedCodes,
+    /// Membership view of `ids` for O(1) tombstone admission checks.
+    pub id_set: HashSet<i64>,
+}
+
+impl SealedSegment {
+    /// Seal `ids` + unpacked `codes` (internal columns) into a packed
+    /// segment. `user_m` is the *user-facing* sub-quantizer count the
+    /// packer expects (for 8-bit codes each user sub-quantizer spans two
+    /// internal columns). Empty segments are never built — the caller
+    /// skips the flush instead.
+    pub fn build(ids: Vec<i64>, codes: Vec<u8>, user_m: usize, width: CodeWidth) -> Result<Self> {
+        if ids.is_empty() {
+            return Err(Error::InvalidParameter("segment: refusing to seal 0 rows".into()));
+        }
+        let code_cols = width.code_columns(user_m);
+        if codes.len() != ids.len() * code_cols {
+            return Err(Error::InvalidParameter(format!(
+                "segment: {} ids but {} code bytes (expected {} per row)",
+                ids.len(),
+                codes.len(),
+                code_cols
+            )));
+        }
+        let packed = PackedCodes::pack(&codes, user_m, width)?;
+        let id_set: HashSet<i64> = ids.iter().copied().collect();
+        Ok(Self { ids, codes, packed, id_set })
+    }
+
+    /// Rows in this segment.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Number of internal code columns per row.
+    pub fn code_cols(&self) -> usize {
+        self.codes.len() / self.ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_validates_shape() {
+        // 4-bit, m=4: one internal column per user sub-quantizer
+        let ids = vec![7, 8, 9];
+        let codes = vec![1u8; 3 * 4];
+        let seg = SealedSegment::build(ids, codes, 4, CodeWidth::W4).unwrap();
+        assert_eq!(seg.len(), 3);
+        assert_eq!(seg.code_cols(), 4);
+        assert!(seg.id_set.contains(&8));
+        assert_eq!(seg.packed.n, 3);
+
+        assert!(SealedSegment::build(vec![], vec![], 4, CodeWidth::W4).is_err());
+        assert!(SealedSegment::build(vec![1], vec![0u8; 3], 4, CodeWidth::W4).is_err());
+    }
+
+    #[test]
+    fn packed_roundtrips_codes() {
+        let ids: Vec<i64> = (0..10).collect();
+        let codes: Vec<u8> = (0..10 * 4).map(|i| (i % 16) as u8).collect();
+        let seg = SealedSegment::build(ids, codes.clone(), 4, CodeWidth::W4).unwrap();
+        for i in 0..10 {
+            for c in 0..4 {
+                assert_eq!(seg.packed.code_at(i, c), codes[i * 4 + c]);
+            }
+        }
+    }
+}

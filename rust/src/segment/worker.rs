@@ -1,0 +1,55 @@
+//! The background flush/compaction worker.
+//!
+//! One detached maintenance thread per [`SegmentedIndex`] (spawned on
+//! demand, idempotent). The loop is deliberately boring: wake up — either
+//! on the insert-path `wake` notification when the memtable crosses the
+//! flush threshold, or on a coarse timeout — and run one
+//! `SegInner::maintain` pass (flush if due, compact if the stack is deep).
+//! All the concurrency subtlety lives in the snapshot-swap scheme of
+//! [`crate::segment::index`]: the worker takes the same `writer` mutex as
+//! every other mutator and readers never notice it exists.
+//!
+//! Shutdown is owned by `SegmentedIndex::drop`: set the `stop` flag, ring
+//! `wake`, join. The worker holds only an `Arc<SegInner>`, so dropping the
+//! front object while the thread is mid-flush is safe — the inner state
+//! outlives the loop.
+
+use crate::segment::index::SegmentedIndex;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// How long the worker sleeps between unsolicited maintenance passes.
+/// Short enough that compaction pressure drains promptly, long enough to
+/// stay invisible in profiles.
+const IDLE_TICK: Duration = Duration::from_millis(20);
+
+/// Start the background worker for `idx` (no-op if already running).
+pub(crate) fn spawn(idx: &SegmentedIndex) {
+    let mut slot = idx.worker.lock().unwrap();
+    if slot.is_some() {
+        return;
+    }
+    *idx.inner.stop.lock().unwrap() = false;
+    idx.inner.worker_on.store(true, Ordering::SeqCst);
+    let inner = idx.inner.clone();
+    *slot = Some(std::thread::spawn(move || {
+        loop {
+            {
+                let guard = inner.stop.lock().unwrap();
+                if *guard {
+                    return;
+                }
+                // wait for an insert-path nudge or the idle tick; spurious
+                // wakeups just cost one cheap maintain() no-op
+                let (guard, _timeout) = inner.wake.wait_timeout(guard, IDLE_TICK).unwrap();
+                if *guard {
+                    return;
+                }
+            }
+            // maintenance failures (e.g. a poisoned invariant) must not
+            // kill the thread silently mid-loop; the next explicit
+            // flush()/compact() call surfaces the same error to a caller
+            let _ = inner.maintain();
+        }
+    }));
+}

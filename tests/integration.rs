@@ -885,3 +885,435 @@ fn width_serving_stack_with_lut_reuse() {
     assert_eq!(resp.distances, d_direct);
     batcher.shutdown();
 }
+
+// --------------------------------------------------------------- segments
+//
+// The segment_ tests below are the acceptance suite of the streaming
+// segmented index: interleaved insert/delete/flush/compact histories must
+// be bit-identical to equivalently-built one-shot indexes, at every
+// executor thread count, with deletes composing into the same kernel
+// admission masks as user filters. CI runs them as named steps under
+// ARMPQ_THREADS=1 and ARMPQ_THREADS=4 on both architectures.
+
+/// Acceptance: a segmented index flushed and compacted down to one
+/// segment is bit-identical to a one-shot sealed fastscan index built
+/// from the same vectors in the same order (training is deterministic,
+/// so both sides share a codebook) — for every code width, both query
+/// kinds, batch and single-query paths.
+#[test]
+fn segment_matches_one_shot_sealed_index() {
+    use armpq::exec::QueryExecutor;
+    use armpq::index::IndexPq4FastScan;
+    use armpq::pq::CodeWidth;
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    let ds = SyntheticDataset::gaussian(600, 5, 32, 1400);
+    let exec = QueryExecutor::new(2);
+    for width in CodeWidth::ALL {
+        let mut seg = SegmentedIndex::new(
+            ds.dim,
+            8,
+            width,
+            SegmentedParams { flush_threshold: 128, max_segments: 4 },
+        )
+        .unwrap();
+        seg.train(&ds.train).unwrap();
+        // stream in uneven batches so flushes land mid-stream
+        let mut off = 0usize;
+        for chunk in [200usize, 57, 343] {
+            seg.insert(&ds.base[off * ds.dim..(off + chunk) * ds.dim], None).unwrap();
+            off += chunk;
+        }
+        seg.flush().unwrap();
+        seg.compact().unwrap();
+        assert_eq!(seg.segment_stats().unwrap().segments, 1, "{width}");
+
+        let mut one = IndexPq4FastScan::new_width(ds.dim, 8, width);
+        one.train(&ds.train).unwrap();
+        one.add(&ds.base).unwrap();
+        one.seal().unwrap();
+
+        let probe = one.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 20)).unwrap();
+        let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+        for kind in [QueryKind::TopK { k: 10 }, QueryKind::Range { radius }] {
+            for nq in [5usize, 1] {
+                let req = QueryRequest {
+                    queries: &ds.queries[..nq * ds.dim],
+                    kind,
+                    filter: None,
+                    params: None,
+                };
+                let rs = seg.query_exec(&req, &exec).unwrap();
+                let ro = one.query_exec(&req, &exec).unwrap();
+                assert_eq!(rs.hits, ro.hits, "{width} {kind:?} nq={nq}");
+            }
+        }
+    }
+}
+
+/// Acceptance: delete-then-query is bit-identical to querying an
+/// undeleted twin with the deletion set composed into the filter —
+/// across widths × kinds × filter shapes, with deletes spanning both
+/// sealed segments (tombstones) and the memtable (direct removal).
+#[test]
+fn segment_delete_matches_composed_filter() {
+    use armpq::exec::QueryExecutor;
+    use armpq::pq::CodeWidth;
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    use std::collections::HashSet;
+    let ds = SyntheticDataset::gaussian(500, 4, 32, 1401);
+    let exec = QueryExecutor::new(4);
+    // ids 0..399 end up sealed (two flushed batches), 400..499 memtable
+    let deleted: Vec<i64> = (0..500).step_by(9).collect();
+    let dset: HashSet<i64> = deleted.iter().copied().collect();
+    let sparse: Vec<i64> = (0..500).step_by(3).collect();
+    for width in CodeWidth::ALL {
+        let build = || {
+            let mut idx = SegmentedIndex::new(
+                ds.dim,
+                8,
+                width,
+                SegmentedParams { flush_threshold: 150, max_segments: 8 },
+            )
+            .unwrap();
+            idx.train(&ds.train).unwrap();
+            for (start, len) in [(0usize, 200usize), (200, 200), (400, 100)] {
+                idx.insert(&ds.base[start * ds.dim..(start + len) * ds.dim], None).unwrap();
+            }
+            idx
+        };
+        let del = build();
+        assert_eq!(del.delete(&deleted).unwrap(), deleted.len(), "{width}");
+        let twin = build();
+
+        let probe = twin.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 25)).unwrap();
+        let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+        let users = [None, Some(Filter::id_range(40, 460)), Some(Filter::id_set(&sparse))];
+        for kind in [QueryKind::TopK { k: 12 }, QueryKind::Range { radius }] {
+            for user in &users {
+                let rd = del
+                    .query_exec(
+                        &QueryRequest {
+                            queries: &ds.queries,
+                            kind,
+                            filter: user.clone(),
+                            params: None,
+                        },
+                        &exec,
+                    )
+                    .unwrap();
+                let composed = {
+                    let dset = dset.clone();
+                    let user = user.clone();
+                    Filter::predicate(move |id| {
+                        !dset.contains(&id) && user.as_ref().map_or(true, |f| f.matches(id))
+                    })
+                };
+                let rt = twin
+                    .query_exec(
+                        &QueryRequest {
+                            queries: &ds.queries,
+                            kind,
+                            filter: Some(composed),
+                            params: None,
+                        },
+                        &exec,
+                    )
+                    .unwrap();
+                assert_eq!(rd.hits, rt.hits, "{width} {kind:?} user={user:?}");
+            }
+        }
+    }
+}
+
+/// Acceptance: an interleaved insert/delete/flush/compact history ends
+/// bit-identical to a fresh segmented index built in one shot from the
+/// surviving rows with their surviving ids — at 1 and 4 executor threads,
+/// batch and single-query paths.
+#[test]
+fn segment_compaction_equivalence() {
+    use armpq::exec::QueryExecutor;
+    use armpq::pq::CodeWidth;
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    use std::collections::BTreeSet;
+    let ds = SyntheticDataset::gaussian(700, 5, 32, 1402);
+    let dim = ds.dim;
+    let mut idx = SegmentedIndex::new(
+        dim,
+        8,
+        CodeWidth::W4,
+        SegmentedParams { flush_threshold: 200, max_segments: 3 },
+    )
+    .unwrap();
+    idx.train(&ds.train).unwrap();
+    let mut live: BTreeSet<i64> = BTreeSet::new();
+    live.extend(idx.insert(&ds.base[..300 * dim], None).unwrap());
+    let d1: Vec<i64> = (0..300).step_by(11).collect();
+    idx.delete(&d1).unwrap();
+    for id in &d1 {
+        live.remove(id);
+    }
+    live.extend(idx.insert(&ds.base[300 * dim..550 * dim], None).unwrap());
+    // overlaps d1 on multiples of 11·17 — delete counts live rows only
+    let d2: Vec<i64> = (100..500).step_by(17).collect();
+    idx.delete(&d2).unwrap();
+    for id in &d2 {
+        live.remove(id);
+    }
+    idx.flush().unwrap();
+    idx.compact().unwrap();
+    live.extend(idx.insert(&ds.base[550 * dim..700 * dim], None).unwrap());
+    let d3 = [560i64, 570, 5, 205]; // memtable and sealed rows alike
+    idx.delete(&d3).unwrap();
+    for id in &d3 {
+        live.remove(id);
+    }
+    // end the history sealed: compaction folds tombstones away physically
+    idx.flush().unwrap();
+    idx.compact().unwrap();
+    let st = idx.segment_stats().unwrap();
+    assert_eq!((st.segments, st.tombstones, st.memtable_entries), (1, 0, 0));
+
+    // one-shot twin: surviving rows, surviving ids, one insert
+    let order: Vec<i64> = live.iter().copied().collect();
+    let mut flat = Vec::with_capacity(order.len() * dim);
+    for &id in &order {
+        let r = id as usize;
+        flat.extend_from_slice(&ds.base[r * dim..(r + 1) * dim]);
+    }
+    let mut one = SegmentedIndex::new(
+        dim,
+        8,
+        CodeWidth::W4,
+        SegmentedParams { flush_threshold: 100_000, max_segments: 8 },
+    )
+    .unwrap();
+    one.train(&ds.train).unwrap();
+    one.insert(&flat, Some(&order)).unwrap();
+    one.flush().unwrap();
+    one.compact().unwrap();
+    assert_eq!(idx.ntotal(), one.ntotal());
+
+    let probe = one.query(&QueryRequest::top_k(&ds.queries[..dim], 15)).unwrap();
+    let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+    for threads in [1usize, 4] {
+        let exec = QueryExecutor::new(threads);
+        for kind in [QueryKind::TopK { k: 10 }, QueryKind::Range { radius }] {
+            for nq in [5usize, 1] {
+                let req = QueryRequest {
+                    queries: &ds.queries[..nq * dim],
+                    kind,
+                    filter: None,
+                    params: None,
+                };
+                let ri = idx.query_exec(&req, &exec).unwrap();
+                let ro = one.query_exec(&req, &exec).unwrap();
+                assert_eq!(ri.hits, ro.hits, "threads={threads} {kind:?} nq={nq}");
+            }
+        }
+    }
+}
+
+/// Acceptance: on a live mixed structure (two sealed segments + populated
+/// memtable + tombstones), results are bit-identical between 1- and
+/// 4-thread executors for both kinds, filtered and not, including the
+/// nq=1 intra-query fan-out across segments.
+#[test]
+fn segment_threads_differential() {
+    use armpq::exec::QueryExecutor;
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    let ds = SyntheticDataset::gaussian(600, 5, 32, 1403);
+    let mut seg = SegmentedIndex::new(
+        ds.dim,
+        8,
+        armpq::pq::CodeWidth::W4,
+        SegmentedParams { flush_threshold: 100, max_segments: 8 },
+    )
+    .unwrap();
+    seg.train(&ds.train).unwrap();
+    for (start, len) in [(0usize, 250usize), (250, 250), (500, 80)] {
+        seg.insert(&ds.base[start * ds.dim..(start + len) * ds.dim], None).unwrap();
+    }
+    let dead: Vec<i64> = (0..580).step_by(13).collect();
+    seg.delete(&dead).unwrap();
+    let st = seg.segment_stats().unwrap();
+    assert_eq!(st.segments, 2);
+    assert!(st.memtable_entries > 0 && st.tombstones > 0);
+
+    let exec1 = QueryExecutor::new(1);
+    let exec4 = QueryExecutor::new(4);
+    let probe = seg.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 20)).unwrap();
+    let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+    for kind in [QueryKind::TopK { k: 9 }, QueryKind::Range { radius }] {
+        for filter in [
+            None,
+            Some(Filter::id_range(30, 520)),
+            Some(Filter::predicate(|id| id % 3 == 0)),
+        ] {
+            for nq in [5usize, 1] {
+                let req = QueryRequest {
+                    queries: &ds.queries[..nq * ds.dim],
+                    kind,
+                    filter: filter.clone(),
+                    params: None,
+                };
+                let r1 = seg.query_exec(&req, &exec1).unwrap();
+                let r4 = seg.query_exec(&req, &exec4).unwrap();
+                assert_eq!(
+                    r1.hits, r4.hits,
+                    "{kind:?} {filter:?} nq={nq}: threaded hits diverge from serial"
+                );
+                let s1: Vec<_> = r1.stats.iter().map(core_stats).collect();
+                let s4: Vec<_> = r4.stats.iter().map(core_stats).collect();
+                assert_eq!(s1, s4, "{kind:?} nq={nq}: stats diverge");
+                // 2 sealed segments + memtable = 3 scan units, both ways
+                assert_eq!(r1.stats[0].segments_scanned, 3);
+                assert_eq!(r4.stats[0].segments_scanned, 3);
+            }
+        }
+    }
+}
+
+/// Smoke: concurrent inserts/deletes (with the background worker
+/// flushing and compacting underneath) never produce a malformed or
+/// failed query — readers ride immutable snapshots.
+#[test]
+fn segment_concurrent_insert_query_smoke() {
+    use armpq::exec::QueryExecutor;
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    let ds = SyntheticDataset::gaussian(700, 4, 32, 1404);
+    let dim = ds.dim;
+    let mut seg = SegmentedIndex::new(
+        dim,
+        8,
+        armpq::pq::CodeWidth::W4,
+        SegmentedParams { flush_threshold: 64, max_segments: 4 },
+    )
+    .unwrap();
+    seg.train(&ds.train).unwrap();
+    seg.insert(&ds.base[..100 * dim], None).unwrap();
+    seg.spawn_background();
+    let seg = Arc::new(seg);
+
+    let writer = {
+        let seg = seg.clone();
+        let base = ds.base.clone();
+        std::thread::spawn(move || {
+            for i in 100..600usize {
+                seg.insert(&base[i * dim..(i + 1) * dim], None).unwrap();
+                if i % 7 == 0 {
+                    seg.delete(&[i as i64 - 50]).unwrap();
+                }
+            }
+        })
+    };
+    let mut readers = Vec::new();
+    for _ in 0..3 {
+        let seg = seg.clone();
+        let queries = ds.queries.clone();
+        readers.push(std::thread::spawn(move || {
+            let exec = QueryExecutor::new(2);
+            for round in 0..50usize {
+                let q = &queries[(round % 4) * dim..(round % 4 + 1) * dim];
+                let r = seg.query_exec(&QueryRequest::top_k(q, 5), &exec).unwrap();
+                let hits = &r.hits[0];
+                assert!(hits.windows(2).all(|w| w[0].distance <= w[1].distance));
+                assert!(hits.iter().all(|h| h.label >= 0));
+            }
+        }));
+    }
+    writer.join().unwrap();
+    for r in readers {
+        r.join().unwrap();
+    }
+    seg.flush().unwrap();
+    seg.compact().unwrap();
+    // 600 inserted, 71 deleted (i in 100..600 with i % 7 == 0)
+    assert_eq!(seg.ntotal(), 600 - 71);
+    let st = seg.segment_stats().unwrap();
+    assert_eq!((st.segments, st.tombstones, st.memtable_entries), (1, 0, 0));
+}
+
+/// Persistence: a manifest + per-segment files round-trip reproduces the
+/// exact structure (segments, memtable, tombstones) and bit-identical
+/// answers, and the loaded index keeps streaming without id collisions.
+#[test]
+fn segment_persistence_roundtrip() {
+    use armpq::exec::QueryExecutor;
+    use armpq::index::io::{load_segmented, save_segmented};
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    let ds = SyntheticDataset::gaussian(400, 3, 32, 1405);
+    let mut seg = SegmentedIndex::new(
+        ds.dim,
+        8,
+        armpq::pq::CodeWidth::W4,
+        SegmentedParams { flush_threshold: 120, max_segments: 8 },
+    )
+    .unwrap();
+    seg.train(&ds.train).unwrap();
+    for (start, len) in [(0usize, 150usize), (150, 150), (300, 60)] {
+        seg.insert(&ds.base[start * ds.dim..(start + len) * ds.dim], None).unwrap();
+    }
+    let dead: Vec<i64> = (0..350).step_by(10).collect();
+    seg.delete(&dead).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("armpq_seg_io_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("seg.idx");
+    save_segmented(&seg, &path).unwrap();
+    let loaded = load_segmented(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let (a, b) = (seg.segment_stats().unwrap(), loaded.segment_stats().unwrap());
+    assert_eq!(
+        (a.segments, a.memtable_entries, a.tombstones),
+        (b.segments, b.memtable_entries, b.tombstones)
+    );
+    assert_eq!(seg.ntotal(), loaded.ntotal());
+    let exec = QueryExecutor::new(2);
+    let probe = seg.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 15)).unwrap();
+    let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+    for kind in [QueryKind::TopK { k: 8 }, QueryKind::Range { radius }] {
+        let req = QueryRequest { queries: &ds.queries, kind, filter: None, params: None };
+        assert_eq!(
+            seg.query_exec(&req, &exec).unwrap().hits,
+            loaded.query_exec(&req, &exec).unwrap().hits,
+            "{kind:?}"
+        );
+    }
+    // streaming resumes past the persisted id counter
+    let more = loaded.insert(&ds.base[..2 * ds.dim], None).unwrap();
+    assert!(more.iter().all(|&id| id >= 360), "{more:?}");
+}
+
+/// The factory + trait-object + serving-adapter flow: "SEG…" specs build
+/// a streaming index behind `Box<dyn Index>`, sealed-only indexes refuse
+/// the streaming verbs, and the generic backend adapter serves it with
+/// segment stats attached.
+#[test]
+fn segment_factory_trait_object_flow() {
+    use armpq::coordinator::{IndexBackend, SearchBackend};
+    let ds = SyntheticDataset::gaussian(500, 4, 32, 1406);
+    let mut idx = index_factory(ds.dim, "SEG128,PQ8x4fs").unwrap();
+    idx.train(&ds.train).unwrap();
+    let ids = idx.insert(&ds.base, None).unwrap();
+    assert_eq!(ids.len(), 500);
+    assert_eq!(idx.delete(&[0, 1, 2]).unwrap(), 3);
+    assert_eq!(idx.ntotal(), 497);
+    assert!(idx.segment_stats().unwrap().segments >= 1);
+    assert!(idx.describe().starts_with("SEG(PQ8x4fs"), "{}", idx.describe());
+
+    // sealed single-segment indexes refuse the streaming verbs
+    let sealed = index_factory(ds.dim, "PQ8x4fs").unwrap();
+    assert!(sealed.insert(&ds.base[..ds.dim], None).is_err());
+    assert!(sealed.delete(&[1]).is_err());
+    assert!(sealed.segment_stats().is_none());
+
+    let backend = IndexBackend::new(Arc::from(idx)).unwrap();
+    let resp = backend.query_batch(&QueryRequest::top_k(&ds.queries, 5)).unwrap();
+    assert_eq!(resp.hits.len(), ds.nq());
+    assert!(resp.stats[0].segments_scanned >= 1);
+    for hits in &resp.hits {
+        assert!(!hits.is_empty());
+        assert!(hits.iter().all(|h| h.label > 2), "{hits:?}");
+    }
+}
