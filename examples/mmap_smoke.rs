@@ -1,0 +1,134 @@
+//! Zero-copy smoke test: prove a v3 mmap open touches O(metadata) bytes,
+//! not the whole file, by opening a code region much larger than the
+//! process is allowed to allocate.
+//!
+//! ```bash
+//! cargo run --release --example mmap_smoke -- --n 4000000 --budget-mb 4
+//! ```
+//!
+//! The harness builds a flat fastscan index whose packed code region is
+//! tens of MiB, saves it in format v3, frees every build buffer, then
+//! clamps `RLIMIT_DATA` far below the file size (Linux ≥ 4.7 counts
+//! private anonymous memory against it — file-backed `MAP_SHARED` pages
+//! are exempt). A regression that sneaks a heap read back into the
+//! mapped open path would abort on the allocation; the honest zero-copy
+//! open sails through, and the `VmRSS` delta across the open stays a
+//! small fraction of the file. Prints `PASS` on success; exits non-zero
+//! otherwise.
+
+use armpq::index::io::{load_pq4fs_with, save_pq4fs};
+use armpq::index::{Index, IndexPq4FastScan, QueryRequest};
+use armpq::pq::{CodeWidth, PqParams, ProductQuantizer};
+use armpq::storage::OpenOptions;
+use armpq::util::args::Args;
+use armpq::util::rng::Rng;
+use armpq::util::timer::Timer;
+
+#[cfg(target_os = "linux")]
+mod rlim {
+    #[repr(C)]
+    pub struct Rlimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+    extern "C" {
+        pub fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    pub const RLIMIT_DATA: i32 = 2;
+}
+
+/// Resident set size from /proc (None off Linux — the check degrades).
+fn vm_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn main() -> armpq::Result<()> {
+    // stay serial unless told otherwise: worker-thread stacks are private
+    // anonymous mappings and would count against the RLIMIT_DATA cap below
+    if std::env::var("ARMPQ_THREADS").is_err() {
+        std::env::set_var("ARMPQ_THREADS", "1");
+    }
+    let args = Args::from_env();
+    let n = args.get_usize("n", 4_000_000);
+    let m = args.get_usize("m", 16);
+    let budget_mb = args.get_u64("budget-mb", 4);
+    let dim = 2 * m; // dsub = 2: tiny codebook, the codes dominate
+    let width = CodeWidth::W4;
+
+    // 1. train a small codebook, then synthesize codes directly — the
+    //    point is a big packed region, not a realistic dataset
+    let mut rng = Rng::new(42);
+    let train: Vec<f32> = (0..2_000 * dim).map(|_| rng.next_gaussian()).collect();
+    let pq = ProductQuantizer::train(&train, dim, &PqParams::new_4bit(m))?;
+    let mut codes = vec![0u8; n * m];
+    for c in codes.iter_mut() {
+        *c = (rng.next_u32() % 16) as u8;
+    }
+    let index = IndexPq4FastScan::from_parts_width(pq, codes, width)?;
+
+    let dir = std::env::temp_dir().join(format!("armpq_mmap_smoke_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("smoke.idx");
+    save_pq4fs(&index, &path)?;
+    drop(index); // free every build buffer before the limit drops
+    let file_mb = std::fs::metadata(&path)?.len() / (1 << 20);
+    println!("saved {} ({} MiB packed-region file)", path.display(), file_mb);
+
+    // 2. clamp anonymous memory far below the file size — from here on a
+    //    whole-file heap read aborts, a zero-copy map does not
+    #[cfg(target_os = "linux")]
+    {
+        let limit_mb = (file_mb / 2).clamp(16, 256);
+        let r = rlim::Rlimit { cur: limit_mb << 20, max: limit_mb << 20 };
+        let rc = unsafe { rlim::setrlimit(rlim::RLIMIT_DATA, &r) };
+        println!("RLIMIT_DATA := {limit_mb} MiB (rc={rc})");
+    }
+    #[cfg(not(target_os = "linux"))]
+    println!("(no RLIMIT_DATA on this target; relying on the VmRSS check)");
+
+    // 3. the mapped open itself: O(metadata) work, O(budget) residency
+    let rss_before = vm_rss_kb();
+    let t = Timer::start();
+    let opened = load_pq4fs_with(
+        &path,
+        &OpenOptions { mmap: true, budget_mb: Some(budget_mb) },
+    )?;
+    let open_ms = t.elapsed_ms();
+    let rss_after = vm_rss_kb();
+    let packed = opened.packed().expect("mapped open must adopt the packed block");
+    assert!(packed.data.is_mapped(), "open did not map the code region");
+    assert_eq!(packed.data[..].as_ptr() as usize % 64, 0, "code region lost its alignment");
+    println!(
+        "mapped open: {open_ms:.1} ms, {} MiB mapped, budget {budget_mb} MiB",
+        packed.mapped_bytes() >> 20
+    );
+    if let (Some(b), Some(a)) = (rss_before, rss_after) {
+        let delta_mb = a.saturating_sub(b) / 1024;
+        println!("VmRSS across open: {b} KiB -> {a} KiB (+{delta_mb} MiB)");
+        assert!(
+            delta_mb <= (file_mb / 4).max(budget_mb + 8),
+            "open resident growth {delta_mb} MiB looks like a full-file read of {file_mb} MiB"
+        );
+    }
+
+    // 4. queries stream pages in on demand and stay well-formed
+    let queries: Vec<f32> = (0..4 * dim).map(|_| rng.next_gaussian()).collect();
+    let t = Timer::start();
+    let resp = opened.query(&QueryRequest::top_k(&queries, 10))?;
+    println!(
+        "4 queries in {:.1} ms; stats: bytes_mapped={} codes_scanned={}",
+        t.elapsed_ms(),
+        resp.stats[0].bytes_mapped,
+        resp.stats[0].codes_scanned
+    );
+    assert_eq!(resp.nq(), 4);
+    assert!(resp.hits.iter().all(|row| row.len() == 10));
+    assert!(resp.stats.iter().all(|s| s.bytes_mapped > 0));
+
+    drop(opened);
+    std::fs::remove_dir_all(&dir).ok();
+    println!("PASS");
+    Ok(())
+}

@@ -1,12 +1,18 @@
 //! Paper Table 1: IVF + HNSW + PQ16x4fs on Deep1B (scaled to ARMPQ_BENCH_N,
 //! default 200k; nlist = sqrt(N) per the paper's heuristic).
-use armpq::experiments::run_table1;
+//!
+//! `ARMPQ_BENCH_MMAP=1` measures the zero-copy mapped reopen of the built
+//! index instead of the in-heap copy (`ARMPQ_BENCH_BUDGET_MB` caps the
+//! advised residency) — the configuration for data larger than RAM.
+use armpq::experiments::{bench_open_from_env, run_table1_with};
 
 fn main() {
     let n: usize = std::env::var("ARMPQ_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(200_000);
     let nq: usize = std::env::var("ARMPQ_BENCH_NQ").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
     let nlist = (n as f64).sqrt() as usize;
-    let t = run_table1(n, nq, nlist, 16, &[1, 2, 4], 5, 20220503).expect("table1");
+    let open = bench_open_from_env();
+    let t = run_table1_with(n, nq, nlist, 16, &[1, 2, 4], 5, 20220503, open.as_ref())
+        .expect("table1");
     t.print();
     t.save().expect("save");
     println!("\npaper reference (Deep1B, Graviton2): nprobe 1/2/4 -> recall 0.072/0.082/0.086, 0.51/0.83/1.3 ms/query");

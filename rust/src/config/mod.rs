@@ -8,6 +8,7 @@
 use crate::index::SearchParams;
 use crate::pq::CodeWidth;
 use crate::simd::Backend;
+use crate::storage::OpenOptions;
 use crate::util::args::Args;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -133,6 +134,13 @@ pub struct ExperimentConfig {
     /// what the bench commands iterate. Single-element when a scalar (or
     /// nothing) was given.
     pub widths: Vec<CodeWidth>,
+    /// Open saved index files memory-mapped (`--mmap` / `mmap = true`);
+    /// `None` means "not given" so a factory string's own `mmap=true`
+    /// trailing key is not overridden by the built-in default.
+    pub mmap: Option<bool>,
+    /// Residency budget in MiB for mapped opens (`--budget-mb` /
+    /// `budget_mb = 512`).
+    pub budget_mb: Option<u64>,
 }
 
 impl Default for ExperimentConfig {
@@ -150,6 +158,8 @@ impl Default for ExperimentConfig {
             backend: None,
             width: CodeWidth::W4,
             widths: vec![CodeWidth::W4],
+            mmap: None,
+            budget_mb: None,
         }
     }
 }
@@ -169,6 +179,21 @@ impl ExperimentConfig {
         }
         p.backend = self.backend;
         p
+    }
+
+    /// The storage [`OpenOptions`] this config implies for loading a saved
+    /// index: the factory string's trailing `mmap=`/`budget_mb=` keys as
+    /// the base, explicitly-given config/CLI values on top (same
+    /// precedence story as `nprobe`).
+    pub fn open_options(&self) -> Result<OpenOptions> {
+        let mut o = crate::index::factory::spec_open_options(&self.factory)?;
+        if let Some(mmap) = self.mmap {
+            o.mmap = mmap;
+        }
+        if let Some(mb) = self.budget_mb {
+            o.budget_mb = Some(mb);
+        }
+        Ok(o)
     }
 
     /// defaults < optional `--config <file>` < CLI flags.
@@ -202,6 +227,26 @@ impl ExperimentConfig {
                 .collect::<Result<Vec<_>>>()?,
         };
         let width = widths[0];
+        // `--mmap` is a bare flag or `--mmap true/false`; the config-file
+        // key is `mmap = true`. `None` = not given (factory keys rule).
+        let mmap = match args.get_opt("mmap").or_else(|| cfg.get("mmap").map(String::from)) {
+            Some(v) => match v.as_str() {
+                "true" | "1" | "yes" => Some(true),
+                "false" | "0" | "no" => Some(false),
+                _ => return Err(Error::Config(format!("mmap expects bool, got {v:?}"))),
+            },
+            None if args.get_flag("mmap") => Some(true),
+            None => None,
+        };
+        let budget_mb = match args
+            .get_opt("budget-mb")
+            .or_else(|| cfg.get("budget_mb").map(String::from))
+        {
+            None => None,
+            Some(v) => Some(v.replace('_', "").parse::<u64>().map_err(|_| {
+                Error::Config(format!("budget_mb expects integer MiB, got {v:?}"))
+            })?),
+        };
         Ok(Self {
             dataset: args.get_str("dataset", &cfg.get_str("dataset", &d.dataset)),
             n: args.get_usize("n", cfg.get_usize("n", d.n)?),
@@ -215,6 +260,8 @@ impl ExperimentConfig {
             backend,
             width,
             widths,
+            mmap,
+            budget_mb,
         })
     }
 }
@@ -311,6 +358,42 @@ mod tests {
         let mut cfg = Config::new();
         cfg.set("width", "8");
         assert_eq!(cfg.get_usize("width", 4).unwrap(), 8);
+    }
+
+    #[test]
+    fn storage_open_options_from_cli_and_factory() {
+        // not given: heap open, no budget
+        let none = ExperimentConfig::from_args(&Args::parse(Vec::<String>::new())).unwrap();
+        assert_eq!(none.open_options().unwrap(), OpenOptions::heap());
+        // bare `--mmap` flag turns mapping on
+        let args = Args::parse(["--mmap", "--budget-mb", "128"].iter().map(|s| s.to_string()));
+        let e = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(e.mmap, Some(true));
+        assert_eq!(e.budget_mb, Some(128));
+        assert_eq!(
+            e.open_options().unwrap(),
+            OpenOptions { mmap: true, budget_mb: Some(128) }
+        );
+        // the factory string's trailing keys apply when the CLI is silent…
+        let args = Args::parse(
+            ["--factory", "PQ8x4fs,mmap=true,budget_mb=64"].iter().map(|s| s.to_string()),
+        );
+        let e = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(
+            e.open_options().unwrap(),
+            OpenOptions { mmap: true, budget_mb: Some(64) }
+        );
+        // …and an explicit CLI value wins over them
+        let args = Args::parse(
+            ["--factory", "PQ8x4fs,mmap=true", "--mmap", "false"].iter().map(|s| s.to_string()),
+        );
+        let e = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(e.open_options().unwrap(), OpenOptions::heap());
+        // bad values are config errors
+        let bad = Args::parse(["--mmap", "maybe"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::from_args(&bad).is_err());
+        let bad = Args::parse(["--budget-mb", "lots"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::from_args(&bad).is_err());
     }
 
     #[test]

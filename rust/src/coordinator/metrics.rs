@@ -96,6 +96,14 @@ pub struct Metrics {
     pub tombstones: AtomicU64,
     pub flushes_total: AtomicU64,
     pub compactions_total: AtomicU64,
+    /// storage-layer residency gauges (latest observation via
+    /// [`Metrics::record_storage_stats`], sourced from
+    /// [`crate::storage::counters`]): how many packed-code bytes are
+    /// mmap-backed, how many of those are advised resident, and how many
+    /// mmap opens the process has performed
+    pub mapped_code_bytes: AtomicU64,
+    pub resident_code_bytes: AtomicU64,
+    pub mmap_open_total: AtomicU64,
     /// recent batch sizes (bounded ring, for mean occupancy)
     batch_sizes: Mutex<Vec<usize>>,
 }
@@ -129,6 +137,16 @@ impl Metrics {
         self.tombstones.store(s.tombstones as u64, Ordering::Relaxed);
         self.flushes_total.store(s.flushes, Ordering::Relaxed);
         self.compactions_total.store(s.compactions, Ordering::Relaxed);
+    }
+
+    /// Refresh the storage residency gauges from the process-wide
+    /// [`crate::storage::counters`]. Called on the `stats` verb so the
+    /// export reflects the current mapped/resident state.
+    pub fn record_storage_stats(&self) {
+        let c = crate::storage::counters();
+        self.mapped_code_bytes.store(c.mapped_code_bytes(), Ordering::Relaxed);
+        self.resident_code_bytes.store(c.resident_code_bytes(), Ordering::Relaxed);
+        self.mmap_open_total.store(c.mmap_open_total(), Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -201,6 +219,18 @@ impl Metrics {
             .set(
                 "compactions_total",
                 Json::Num(self.compactions_total.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "mapped_code_bytes",
+                Json::Num(self.mapped_code_bytes.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "resident_code_bytes",
+                Json::Num(self.resident_code_bytes.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "mmap_open_total",
+                Json::Num(self.mmap_open_total.load(Ordering::Relaxed) as f64),
             );
         o
     }
@@ -263,9 +293,26 @@ mod tests {
             "segments_scanned",
             "memtable_entries",
             "tombstones",
+            "mapped_code_bytes",
+            "resident_code_bytes",
+            "mmap_open_total",
         ] {
             assert!(j.get(key).is_some(), "{key}");
         }
+    }
+
+    /// Storage residency gauges mirror the process-wide counters.
+    #[test]
+    fn storage_gauges_refresh_from_counters() {
+        let m = Metrics::new();
+        m.record_storage_stats();
+        // counters are process-global (other tests may map files), so the
+        // invariant checked here is consistency, not a specific value
+        let c = crate::storage::counters();
+        assert_eq!(m.mapped_code_bytes.load(Ordering::Relaxed), c.mapped_code_bytes());
+        assert_eq!(m.mmap_open_total.load(Ordering::Relaxed), c.mmap_open_total());
+        let j = m.to_json();
+        assert!(j.get("resident_code_bytes").is_some());
     }
 
     /// Segment-lifecycle gauges track the latest observation; `None` (a

@@ -147,6 +147,7 @@ fn merge_stats(per_shard: Vec<&QueryStats>) -> QueryStats {
         filter_selectivity: 1.0,
         threads_used: 1,
         scratch_bytes: 0,
+        ..Default::default()
     };
     let mut weighted = 0.0f64;
     for s in &per_shard {
@@ -154,6 +155,12 @@ fn merge_stats(per_shard: Vec<&QueryStats>) -> QueryStats {
         out.lists_probed += s.lists_probed;
         out.threads_used = out.threads_used.max(s.threads_used);
         out.scratch_bytes = out.scratch_bytes.max(s.scratch_bytes);
+        // segment + storage facts add up across shards like scan work
+        out.segments_scanned += s.segments_scanned;
+        out.memtable_entries += s.memtable_entries;
+        out.tombstones += s.tombstones;
+        out.bytes_mapped += s.bytes_mapped;
+        out.prefetch_lists += s.prefetch_lists;
         weighted += s.filter_selectivity * s.codes_scanned as f64;
     }
     if out.codes_scanned > 0 {

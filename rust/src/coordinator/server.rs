@@ -158,6 +158,8 @@ fn handle_request(line: &str, batcher: &Batcher, backend: &dyn SearchBackend, di
         // refresh the segment-lifecycle gauges so the snapshot reflects
         // mutations that arrived through other connections
         batcher.metrics.record_segment_stats(backend.segment_stats());
+        // and the storage residency gauges (mapped/resident code bytes)
+        batcher.metrics.record_storage_stats();
         let mut o = Json::obj();
         o.set("ok", batcher.metrics.to_json());
         return o;
@@ -248,7 +250,9 @@ fn handle_request(line: &str, batcher: &Batcher, backend: &dyn SearchBackend, di
                 .set("scratch_bytes", Json::Num(resp.stats.scratch_bytes as f64))
                 .set("segments_scanned", Json::Num(resp.stats.segments_scanned as f64))
                 .set("memtable_entries", Json::Num(resp.stats.memtable_entries as f64))
-                .set("tombstones", Json::Num(resp.stats.tombstones as f64));
+                .set("tombstones", Json::Num(resp.stats.tombstones as f64))
+                .set("bytes_mapped", Json::Num(resp.stats.bytes_mapped as f64))
+                .set("prefetch_lists", Json::Num(resp.stats.prefetch_lists as f64));
             let mut body = Json::obj();
             body.set("labels", Json::Arr(resp.labels.iter().map(|&l| Json::Num(l as f64)).collect()))
                 .set(
@@ -604,6 +608,8 @@ impl Client {
             segments_scanned: s.get("segments_scanned").and_then(|x| x.as_usize()).unwrap_or(0),
             memtable_entries: s.get("memtable_entries").and_then(|x| x.as_usize()).unwrap_or(0),
             tombstones: s.get("tombstones").and_then(|x| x.as_usize()).unwrap_or(0),
+            bytes_mapped: s.get("bytes_mapped").and_then(|x| x.as_usize()).unwrap_or(0),
+            prefetch_lists: s.get("prefetch_lists").and_then(|x| x.as_usize()).unwrap_or(0),
         });
         Ok((hits, stats.unwrap_or_default()))
     }

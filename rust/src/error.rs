@@ -31,6 +31,12 @@ pub enum Error {
     /// Dataset file IO and format errors.
     Dataset(String),
 
+    /// A persisted index file is truncated or structurally invalid
+    /// (bad magic, impossible section length, payload shorter than its
+    /// header promises). Loaders return this instead of panicking
+    /// mid-`read_exact` so a corrupt file can never take a server down.
+    CorruptIndex(String),
+
     /// PJRT runtime errors (artifact loading, compilation, execution).
     Runtime(String),
 
@@ -57,6 +63,7 @@ impl fmt::Display for Error {
             }
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Dataset(msg) => write!(f, "dataset error: {msg}"),
+            Error::CorruptIndex(msg) => write!(f, "corrupt index file: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Serve(msg) => write!(f, "serve error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -91,6 +98,8 @@ mod tests {
         let e = Error::DimMismatch { expected: 128, got: 96 };
         assert_eq!(e.to_string(), "dimension mismatch: expected 128, got 96");
         assert!(Error::NotTrained.to_string().contains("train"));
+        let e = Error::CorruptIndex("payload 12 bytes short".into());
+        assert!(e.to_string().contains("corrupt index file"), "{e}");
     }
 
     #[test]

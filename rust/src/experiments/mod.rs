@@ -17,6 +17,7 @@ use crate::eval::{ground_truth, measure_search, recall_at_r};
 use crate::index::{IndexIvfPq4, IndexPq, IndexPq4FastScan, Index};
 use crate::pq::{CodeWidth, PqParams};
 use crate::simd::{available_backends, Backend};
+use crate::storage::OpenOptions;
 use crate::util::bench::{black_box, BenchRunner, Table};
 use crate::util::timer::Timer;
 use crate::Result;
@@ -104,6 +105,25 @@ pub fn run_table1(
     trials: usize,
     seed: u64,
 ) -> Result<Table> {
+    run_table1_with(n, nq, nlist, m, nprobes, trials, seed, None)
+}
+
+/// [`run_table1`] with an explicit storage mode: `Some(mmap)` persists the
+/// built index to a v3 file, drops the heap copy, and measures the
+/// zero-copy mapped reopen instead — the scan path a larger-than-RAM
+/// deployment uses. Zero-copy loads are bit-identical to heap loads, so
+/// the recall column is invariant to this knob; only latency moves.
+#[allow(clippy::too_many_arguments)]
+pub fn run_table1_with(
+    n: usize,
+    nq: usize,
+    nlist: usize,
+    m: usize,
+    nprobes: &[usize],
+    trials: usize,
+    seed: u64,
+    open: Option<&OpenOptions>,
+) -> Result<Table> {
     let ds = SyntheticDataset::deep_like(n, nq, seed);
     let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
     let mut idx = IndexIvfPq4::new(ds.dim, nlist, m, true, 32);
@@ -116,8 +136,27 @@ pub fn run_table1(
     let add_s = t_add.elapsed_s();
     eprintln!("table1: train {train_s:.1}s, add+seal {add_s:.1}s, bits/vec {:.1}", idx.inner().code_bits_per_vector());
 
+    let mapped_file = match open.filter(|o| o.mmap) {
+        Some(o) => {
+            let path = std::env::temp_dir()
+                .join(format!("armpq_table1_{}_{seed}.idx", std::process::id()));
+            crate::index::io::save_ivfpq4(idx.inner(), &path)?;
+            let reopened = IndexIvfPq4::from_inner(crate::index::io::load_ivfpq4_with(&path, o)?);
+            idx = reopened; // the heap-built copy drops here
+            eprintln!(
+                "table1: mapped reopen of {} ({} B on disk, budget {:?} MiB)",
+                path.display(),
+                std::fs::metadata(&path)?.len(),
+                o.budget_mb
+            );
+            Some(path)
+        }
+        None => None,
+    };
+
+    let mode = if mapped_file.is_some() { " mmap" } else { "" };
     let mut table = Table::new(
-        &format!("Table1 deep-like n={n}"),
+        &format!("Table1 deep-like n={n}{mode}"),
         &["nlist", "nprobe", "M", "K", "recall@1", "ms/query"],
     );
     for &nprobe in nprobes {
@@ -135,6 +174,10 @@ pub fn run_table1(
             format!("{:.3}", meas.recall_at_1),
             format!("{:.2}", meas.ms_per_query),
         ]);
+    }
+    if let Some(path) = mapped_file {
+        drop(idx); // unmap before unlinking
+        std::fs::remove_file(path).ok();
     }
     Ok(table)
 }
@@ -218,6 +261,23 @@ pub fn run_thread_scaling(
 /// harness parses the environment the same way.
 pub fn bench_env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The bench harnesses' storage mode from `ARMPQ_BENCH_MMAP` (truthy:
+/// `1`/`true`/`yes`) and `ARMPQ_BENCH_BUDGET_MB`: `Some` when a zero-copy
+/// mapped reopen was requested (see [`run_table1_with`]), `None` for the
+/// default in-heap measurement — so a bench can run against an index
+/// larger than RAM without new CLI plumbing.
+pub fn bench_open_from_env() -> Option<OpenOptions> {
+    let mapped = std::env::var("ARMPQ_BENCH_MMAP")
+        .map(|v| matches!(v.trim(), "1" | "true" | "yes"))
+        .unwrap_or(false);
+    if !mapped {
+        return None;
+    }
+    let budget_mb =
+        std::env::var("ARMPQ_BENCH_BUDGET_MB").ok().and_then(|v| v.trim().parse().ok());
+    Some(OpenOptions { mmap: true, budget_mb })
 }
 
 /// The bench harnesses' thread axis from `ARMPQ_BENCH_THREADS`
@@ -689,6 +749,28 @@ mod tests {
         let r1: f64 = t.rows[0][4].parse().unwrap();
         let r2: f64 = t.rows[1][4].parse().unwrap();
         assert!(r2 + 0.1 >= r1, "r1={r1} r2={r2}");
+    }
+
+    #[test]
+    fn table1_mapped_matches_heap_recall() {
+        // same build seed, heap vs zero-copy mapped reopen: the recall
+        // column must be bit-identical (only latency may move)
+        let heap = run_table1(2500, 8, 9, 16, &[1, 2], 1, 51).unwrap();
+        let mapped = run_table1_with(
+            2500,
+            8,
+            9,
+            16,
+            &[1, 2],
+            1,
+            51,
+            Some(&OpenOptions { mmap: true, budget_mb: Some(1) }),
+        )
+        .unwrap();
+        assert_eq!(heap.rows.len(), mapped.rows.len());
+        for (h, m) in heap.rows.iter().zip(&mapped.rows) {
+            assert_eq!(h[4], m[4], "recall must not depend on the storage mode");
+        }
     }
 
     #[test]

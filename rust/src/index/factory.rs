@@ -29,6 +29,7 @@ use super::pq_index::{IndexIvfPq4, IndexPq, IndexPq4FastScan};
 use super::{flat::IndexFlat, Index, SearchParams};
 use crate::pq::{CodeWidth, PqParams};
 use crate::segment::{SegmentedIndex, SegmentedParams};
+use crate::storage::OpenOptions;
 use crate::{Error, Result};
 
 /// Create an index from a factory string.
@@ -43,7 +44,10 @@ pub fn index_factory(dim: usize, spec: &str) -> Result<Box<dyn Index>> {
     let mut parts: Vec<&str> = spec.split(',').map(|s| s.trim()).collect();
 
     // Peel trailing `key=value` components into default search parameters.
-    let params = peel_trailing_params(&mut parts).map_err(&err)?;
+    // Storage keys (`mmap` / `budget_mb`) are accepted and ignored here:
+    // they configure how a *saved* index is opened, not how a fresh one is
+    // built — `spec_open_options` extracts them for the open path.
+    let (params, _open) = peel_trailing_params(&mut parts).map_err(&err)?;
 
     let mut index: Box<dyn Index> = match parts.as_slice() {
         [] => return Err(err("missing index component".into())),
@@ -136,26 +140,51 @@ pub fn index_factory_with(
 pub fn spec_search_params(spec: &str) -> Result<SearchParams> {
     let spec = spec.trim();
     let mut parts: Vec<&str> = spec.split(',').map(|s| s.trim()).collect();
-    peel_trailing_params(&mut parts).map_err(|msg| Error::Factory(spec.to_string(), msg))
+    peel_trailing_params(&mut parts)
+        .map(|(params, _)| params)
+        .map_err(|msg| Error::Factory(spec.to_string(), msg))
+}
+
+/// The storage [`OpenOptions`] a factory spec's trailing components set
+/// (`"IVF100,PQ16x4fs,mmap=true,budget_mb=512"`), without building the
+/// index — the open path (CLI `serve --index-file`, coordinator config)
+/// uses this to decide heap vs mapped loading.
+pub fn spec_open_options(spec: &str) -> Result<OpenOptions> {
+    let spec = spec.trim();
+    let mut parts: Vec<&str> = spec.split(',').map(|s| s.trim()).collect();
+    peel_trailing_params(&mut parts)
+        .map(|(_, open)| open)
+        .map_err(|msg| Error::Factory(spec.to_string(), msg))
 }
 
 /// Pop trailing `key=value` components off `parts` and parse them into a
-/// [`SearchParams`], assigning left-to-right so duplicate keys resolve
-/// last-wins like every other config surface.
-fn peel_trailing_params(parts: &mut Vec<&str>) -> std::result::Result<SearchParams, String> {
+/// [`SearchParams`] plus storage [`OpenOptions`], assigning left-to-right
+/// so duplicate keys resolve last-wins like every other config surface.
+/// Storage keys (`mmap` / `budget_mb`) are consumed before the search
+/// parser sees them, so one spec string can carry both kinds.
+fn peel_trailing_params(
+    parts: &mut Vec<&str>,
+) -> std::result::Result<(SearchParams, OpenOptions), String> {
     let mut trailing = Vec::new();
     while parts.last().is_some_and(|s| s.contains('=')) {
         trailing.push(parts.pop().unwrap());
     }
     trailing.reverse();
     let mut params = SearchParams::default();
+    let mut open = OpenOptions::default();
     for comp in trailing {
         let (key, value) = comp.split_once('=').unwrap();
+        let consumed = open
+            .assign(key.trim(), value.trim())
+            .map_err(|e| format!("params component {comp:?}: {e}"))?;
+        if consumed {
+            continue;
+        }
         params
             .assign(key.trim(), value.trim())
             .map_err(|e| format!("params component {comp:?}: {e}"))?;
     }
-    Ok(params)
+    Ok((params, open))
 }
 
 struct PqSpec {
@@ -339,6 +368,25 @@ mod tests {
         assert!(e.contains("nprobe=abc"), "{e}");
         let e = index_factory(32, "PQ8x4fs,nprobe=4").unwrap_err().to_string();
         assert!(e.contains("nprobe"), "{e}"); // flat fastscan has no nprobe
+    }
+
+    #[test]
+    fn storage_keys_peel_into_open_options() {
+        // storage keys configure the open path and never reach the
+        // SearchParams parser — a build with them still succeeds
+        let idx = index_factory(32, "IVF10,PQ8x4fs,mmap=true,budget_mb=64,nprobe=5").unwrap();
+        assert!(idx.describe().contains("nprobe=5"), "{}", idx.describe());
+        let open = spec_open_options("IVF10,PQ8x4fs,mmap=true,budget_mb=64,nprobe=5").unwrap();
+        assert_eq!(open, OpenOptions { mmap: true, budget_mb: Some(64) });
+        // defaults: heap open, no budget
+        assert_eq!(spec_open_options("PQ8x4fs").unwrap(), OpenOptions::heap());
+        // and the search-params view of the same spec omits storage keys
+        let sp = spec_search_params("PQ8x4fs,mmap=true,nprobe=3").unwrap();
+        assert_eq!(sp, SearchParams::new().with_nprobe(3));
+        // bad storage values are named spec errors
+        let e = index_factory(32, "PQ8x4fs,mmap=maybe").unwrap_err().to_string();
+        assert!(e.contains("mmap"), "{e}");
+        assert!(spec_open_options("PQ8x4fs,budget_mb=lots").is_err());
     }
 
     #[test]

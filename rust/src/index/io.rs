@@ -4,86 +4,181 @@
 //!
 //! Layout: `ARMPQIDX` magic, u32 version, u32 kind tag, then kind-specific
 //! sections. Only fixed-width LE integers/floats — no serde dependency.
+//!
+//! # Format v3: page-aligned packed code regions
+//!
+//! v3 stores every packed code block (the kernel's interleaved layout) as
+//! a *code region*: a u64 byte length, zero padding up to the next
+//! 64-byte absolute file offset, then the packed bytes verbatim. Because
+//! an `mmap` base address is page-aligned, every region is 64-byte
+//! aligned in memory too — so [`open_index`]/`load_*_with` can hand the
+//! kernels zero-copy [`CodeStore::Mapped`] windows straight into the
+//! file. Heap loads read the same regions into owned buffers; both paths
+//! answer bit-identically. v1/v2 files (flat code columns, repacked at
+//! load) continue to load.
+//!
+//! All saves are crash-safe: content is written to a `{path}.tmp`
+//! sibling, fsynced, and atomically renamed over the target. Loaders
+//! report truncated or corrupt files as [`Error::CorruptIndex`] instead
+//! of surfacing a bare I/O error mid-read.
 
-use crate::index::pq_index::IndexPq4FastScan;
+use crate::index::pq_index::{IndexIvfPq4, IndexPq4FastScan};
+use crate::index::Index;
 use crate::ivf::{IvfParams, IvfPq4};
-use crate::pq::{CodeWidth, PqParams, ProductQuantizer};
+use crate::pq::{CodeWidth, PackedCodes, PqParams, ProductQuantizer};
 use crate::segment::{Memtable, SealedSegment, SegmentedIndex, SegmentedParams};
+use crate::storage::{CodeStore, MemoryBudget, Mmap, OpenOptions};
 use crate::{Error, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"ARMPQIDX";
 /// v1: 4-bit only. v2 appends the fastscan code width (+ user-facing M for
 /// IVF); v1 files still load as 4-bit. The segmented kinds (manifest +
-/// per-segment files) were introduced at v2 directly.
-const VERSION: u32 = 2;
+/// per-segment files) were introduced at v2 directly. v3 stores packed
+/// code blocks as 64-byte-aligned regions (mmap-able zero-copy) and
+/// stamps segment files with a content hash; v1/v2 files still load.
+const VERSION: u32 = 3;
 const KIND_PQ4FS: u32 = 1;
 const KIND_IVFPQ4: u32 = 2;
 /// Segmented-index manifest: geometry, codebook, tombstones, memtable, and
 /// the segment count — the per-segment code blocks live in sibling
 /// [`KIND_SEGMENT`] files.
 const KIND_SEGMENTED: u32 = 3;
-/// One sealed segment (`{base}.seg{i}`): ids + unpacked code columns;
-/// packing is rebuilt at load (same deterministic layout).
+/// One sealed segment (`{base}.seg{i}`): ids + packed code region (v3) or
+/// unpacked code columns (v2, repacked at load).
 const KIND_SEGMENT: u32 = 4;
+
+/// Code regions begin at multiples of this absolute file offset, matching
+/// the cache-line granularity the dual-lane kernels stream at.
+const CODE_ALIGN: usize = 64;
+
+/// Sanity cap applied to every length header (simultaneously a corrupt-
+/// file guard and an OOM guard: no section is ever this large).
+const MAX_SECTION: usize = 16 << 30;
 
 // ------------------------------------------------------------ primitives
 
+fn pad_to_align(pos: u64) -> usize {
+    ((CODE_ALIGN as u64 - pos % CODE_ALIGN as u64) % CODE_ALIGN as u64) as usize
+}
+
+/// FNV-1a over `bytes`, chained from `h` (seed [`FNV_SEED`]).
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 struct Writer<W: Write> {
     w: W,
+    /// Absolute file offset of the next byte — code-region padding is
+    /// computed from this, so writer and loader can never disagree.
+    pos: u64,
 }
 
 impl<W: Write> Writer<W> {
-    fn u32(&mut self, x: u32) -> Result<()> {
-        self.w.write_all(&x.to_le_bytes())?;
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes)?;
+        self.pos += bytes.len() as u64;
         Ok(())
     }
+    fn u32(&mut self, x: u32) -> Result<()> {
+        self.put(&x.to_le_bytes())
+    }
     fn u64(&mut self, x: u64) -> Result<()> {
-        self.w.write_all(&x.to_le_bytes())?;
-        Ok(())
+        self.put(&x.to_le_bytes())
     }
     fn f32s(&mut self, xs: &[f32]) -> Result<()> {
         self.u64(xs.len() as u64)?;
         for &x in xs {
-            self.w.write_all(&x.to_le_bytes())?;
+            self.put(&x.to_le_bytes())?;
         }
         Ok(())
     }
     fn bytes(&mut self, xs: &[u8]) -> Result<()> {
         self.u64(xs.len() as u64)?;
-        self.w.write_all(xs)?;
-        Ok(())
+        self.put(xs)
     }
     fn i64s(&mut self, xs: &[i64]) -> Result<()> {
         self.u64(xs.len() as u64)?;
         for &x in xs {
-            self.w.write_all(&x.to_le_bytes())?;
+            self.put(&x.to_le_bytes())?;
         }
         Ok(())
     }
+    /// One v3 code region: u64 length, zero padding to the next 64-byte
+    /// file offset, then the packed bytes verbatim.
+    fn code_region(&mut self, data: &[u8]) -> Result<()> {
+        self.u64(data.len() as u64)?;
+        let pad = pad_to_align(self.pos);
+        self.put(&[0u8; CODE_ALIGN][..pad])?;
+        self.put(data)
+    }
+    fn header(&mut self, kind: u32) -> Result<()> {
+        self.put(MAGIC)?;
+        self.u32(VERSION)?;
+        self.u32(kind)
+    }
 }
 
-struct Reader<R: Read> {
-    r: R,
+/// Write `path` crash-safely: the content goes to a `{path}.tmp` sibling,
+/// is flushed + fsynced, and atomically renamed over the target — a crash
+/// mid-save leaves the previous file intact, never a torn one.
+fn atomic_write(
+    path: &Path,
+    write: impl FnOnce(&mut Writer<BufWriter<std::fs::File>>) -> Result<()>,
+) -> Result<()> {
+    let tmp = {
+        let mut name = path.as_os_str().to_os_string();
+        name.push(".tmp");
+        PathBuf::from(name)
+    };
+    let f = std::fs::File::create(&tmp)?;
+    let mut w = Writer { w: BufWriter::new(f), pos: 0 };
+    let res = write(&mut w).and_then(|()| {
+        w.w.flush()?;
+        w.w.get_ref().sync_all()?;
+        Ok(())
+    });
+    if let Err(e) = res {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
 }
 
-impl<R: Read> Reader<R> {
+/// The read side of the format, implemented by a buffered file (heap
+/// loads: code regions are copied into owned buffers) and by a mapped
+/// file (zero-copy loads: code regions become [`CodeStore::Mapped`]
+/// windows). Each kind's loader is written once against this trait.
+trait IndexSource {
+    /// Read exactly `buf.len()` bytes; a short read is a corrupt file.
+    fn fill(&mut self, buf: &mut [u8]) -> Result<()>;
+    fn skip(&mut self, n: usize) -> Result<()>;
+    fn position(&self) -> u64;
+    /// One v3 code region (see [`Writer::code_region`]).
+    fn code_region(&mut self) -> Result<CodeStore>;
+
     fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(u32::from_le_bytes(b))
     }
     fn u64(&mut self) -> Result<u64> {
         let mut b = [0u8; 8];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(u64::from_le_bytes(b))
     }
     fn len_checked(&mut self, elem: usize) -> Result<usize> {
         let n = self.u64()? as usize;
-        // 16 GiB sanity cap against corrupt headers
-        if n.saturating_mul(elem) > 16 << 30 {
-            return Err(Error::Dataset(format!("corrupt length {n}")));
+        if n.saturating_mul(elem) > MAX_SECTION {
+            return Err(Error::CorruptIndex(format!("implausible section length {n}")));
         }
         Ok(n)
     }
@@ -92,7 +187,7 @@ impl<R: Read> Reader<R> {
         let mut out = vec![0f32; n];
         let mut b = [0u8; 4];
         for x in &mut out {
-            self.r.read_exact(&mut b)?;
+            self.fill(&mut b)?;
             *x = f32::from_le_bytes(b);
         }
         Ok(out)
@@ -100,7 +195,7 @@ impl<R: Read> Reader<R> {
     fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.len_checked(1)?;
         let mut out = vec![0u8; n];
-        self.r.read_exact(&mut out)?;
+        self.fill(&mut out)?;
         Ok(out)
     }
     fn i64s(&mut self) -> Result<Vec<i64>> {
@@ -108,10 +203,108 @@ impl<R: Read> Reader<R> {
         let mut out = vec![0i64; n];
         let mut b = [0u8; 8];
         for x in &mut out {
-            self.r.read_exact(&mut b)?;
+            self.fill(&mut b)?;
             *x = i64::from_le_bytes(b);
         }
         Ok(out)
+    }
+}
+
+struct FileSource {
+    r: BufReader<std::fs::File>,
+    pos: u64,
+}
+
+impl FileSource {
+    fn open(path: &Path) -> Result<Self> {
+        Ok(Self { r: BufReader::new(std::fs::File::open(path)?), pos: 0 })
+    }
+}
+
+impl IndexSource for FileSource {
+    fn fill(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Error::CorruptIndex(format!("unexpected end of file at offset {}", self.pos))
+            } else {
+                Error::from(e)
+            }
+        })?;
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+    fn skip(&mut self, n: usize) -> Result<()> {
+        let mut buf = [0u8; CODE_ALIGN];
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(CODE_ALIGN);
+            self.fill(&mut buf[..take])?;
+            left -= take;
+        }
+        Ok(())
+    }
+    fn position(&self) -> u64 {
+        self.pos
+    }
+    fn code_region(&mut self) -> Result<CodeStore> {
+        let len = self.len_checked(1)?;
+        self.skip(pad_to_align(self.pos))?;
+        let mut out = vec![0u8; len];
+        self.fill(&mut out)?;
+        Ok(CodeStore::from(out))
+    }
+}
+
+/// A mapped index file: scalar sections are decoded by copying (they are
+/// tiny), code regions become zero-copy windows into the shared map, each
+/// admitted against the open's [`MemoryBudget`].
+struct MapSource {
+    map: Arc<Mmap>,
+    pos: usize,
+    budget: MemoryBudget,
+}
+
+impl MapSource {
+    fn open(path: &Path, budget: MemoryBudget) -> Result<Self> {
+        Ok(Self { map: Arc::new(Mmap::open(path)?), pos: 0, budget })
+    }
+}
+
+impl IndexSource for MapSource {
+    fn fill(&mut self, buf: &mut [u8]) -> Result<()> {
+        let end = self.pos.checked_add(buf.len()).filter(|&e| e <= self.map.len());
+        let Some(end) = end else {
+            return Err(Error::CorruptIndex(format!(
+                "unexpected end of file at offset {}",
+                self.pos
+            )));
+        };
+        buf.copy_from_slice(&self.map[self.pos..end]);
+        self.pos = end;
+        Ok(())
+    }
+    fn skip(&mut self, n: usize) -> Result<()> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.map.len());
+        let Some(end) = end else {
+            return Err(Error::CorruptIndex(format!(
+                "unexpected end of file at offset {}",
+                self.pos
+            )));
+        };
+        self.pos = end;
+        Ok(())
+    }
+    fn position(&self) -> u64 {
+        self.pos as u64
+    }
+    fn code_region(&mut self) -> Result<CodeStore> {
+        let len = self.len_checked(1)?;
+        self.skip(pad_to_align(self.pos as u64))?;
+        let offset = self.pos;
+        let store = CodeStore::from_mapped(self.map.clone(), offset, len)?;
+        self.skip(len)?;
+        self.budget.admit_region(&self.map, offset, len);
+        Ok(store)
     }
 }
 
@@ -122,93 +315,164 @@ fn write_pq<W: Write>(w: &mut Writer<W>, pq: &ProductQuantizer) -> Result<()> {
     w.f32s(&pq.centroids)
 }
 
-fn read_pq<R: Read>(r: &mut Reader<R>) -> Result<ProductQuantizer> {
+fn read_pq<S: IndexSource>(r: &mut S) -> Result<ProductQuantizer> {
     let dim = r.u32()? as usize;
     let m = r.u32()? as usize;
     let ksub = r.u32()? as usize;
     if m == 0 || dim % m != 0 {
-        return Err(Error::Dataset("corrupt PQ header".into()));
+        return Err(Error::CorruptIndex("corrupt PQ header".into()));
     }
     let centroids = r.f32s()?;
     if centroids.len() != m * ksub * (dim / m) {
-        return Err(Error::Dataset("PQ centroid size mismatch".into()));
+        return Err(Error::CorruptIndex("PQ centroid size mismatch".into()));
     }
     Ok(ProductQuantizer { dim, m, ksub, dsub: dim / m, centroids })
 }
 
+/// User-facing sub-quantizer count of an internal quantizer at `width`
+/// (8-bit fastscan splits each user sub-quantizer over two columns).
+fn user_m(width: CodeWidth, pq_m: usize) -> usize {
+    match width {
+        CodeWidth::W8 => pq_m / 2,
+        _ => pq_m,
+    }
+}
+
 // ------------------------------------------------------------ flat PQ4fs
 
-/// Save a trained+filled [`IndexPq4FastScan`] (any code width).
+/// Save a trained+filled [`IndexPq4FastScan`] (any code width) in format
+/// v3: the packed block is written as an aligned code region, so the file
+/// can be reopened zero-copy. Unsealed staging codes are packed on the
+/// fly (the file always holds the kernel layout).
 pub fn save_pq4fs(index: &IndexPq4FastScan, path: &Path) -> Result<()> {
     let pq = index.pq().ok_or(Error::NotTrained)?;
-    let f = std::fs::File::create(path)?;
-    let mut w = Writer { w: BufWriter::new(f) };
-    w.w.write_all(MAGIC)?;
-    w.u32(VERSION)?;
-    w.u32(KIND_PQ4FS)?;
-    w.u32(index.width().bits() as u32)?;
-    write_pq(&mut w, pq)?;
-    w.bytes(index.staging_codes())?;
-    Ok(())
+    let width = index.width();
+    let mut on_the_fly = None;
+    let packed: Option<&PackedCodes> = match index.packed() {
+        Some(p) => Some(p),
+        None if !index.staging_codes().is_empty() => {
+            on_the_fly =
+                Some(PackedCodes::pack(index.staging_codes(), user_m(width, pq.m), width)?);
+            on_the_fly.as_ref()
+        }
+        None => None,
+    };
+    atomic_write(path, |w| {
+        w.header(KIND_PQ4FS)?;
+        w.u32(width.bits() as u32)?;
+        write_pq(w, pq)?;
+        match packed {
+            Some(p) => {
+                w.u64(p.n as u64)?;
+                w.u32(p.m as u32)?;
+                w.code_region(&p.data)
+            }
+            None => {
+                w.u64(0)?;
+                w.u32(user_m(width, pq.m) as u32)?;
+                w.code_region(&[])
+            }
+        }
+    })
 }
 
-/// Load an [`IndexPq4FastScan`] (v1 files are 4-bit by definition).
+/// Load an [`IndexPq4FastScan`] into heap memory (v1 files are 4-bit by
+/// definition).
 pub fn load_pq4fs(path: &Path) -> Result<IndexPq4FastScan> {
-    let f = std::fs::File::open(path)?;
-    let mut r = Reader { r: BufReader::new(f) };
-    let version = check_header(&mut r, KIND_PQ4FS)?;
-    let width = read_width(&mut r, version)?;
-    let pq = read_pq(&mut r)?;
-    let codes = r.bytes()?;
-    IndexPq4FastScan::from_parts_width(pq, codes, width)
+    load_pq4fs_with(path, &OpenOptions::default())
 }
 
-fn read_width<R: Read>(r: &mut Reader<R>, version: u32) -> Result<CodeWidth> {
+/// [`load_pq4fs`] with explicit open options: `opts.mmap` maps the file
+/// and adopts the packed block zero-copy (v3 files; older versions fall
+/// back to a copying load through the same map).
+pub fn load_pq4fs_with(path: &Path, opts: &OpenOptions) -> Result<IndexPq4FastScan> {
+    if opts.mmap {
+        load_pq4fs_src(&mut MapSource::open(path, opts.budget())?)
+    } else {
+        load_pq4fs_src(&mut FileSource::open(path)?)
+    }
+}
+
+fn load_pq4fs_src<S: IndexSource>(r: &mut S) -> Result<IndexPq4FastScan> {
+    let version = check_header(r, KIND_PQ4FS)?;
+    let width = read_width(r, version)?;
+    let pq = read_pq(r)?;
+    if version < 3 {
+        let codes = r.bytes()?;
+        return IndexPq4FastScan::from_parts_width(pq, codes, width);
+    }
+    let n = r.len_checked(1)?;
+    let m = r.u32()? as usize;
+    let store = r.code_region()?;
+    let packed = PackedCodes::from_store(store, n, m, width)?;
+    IndexPq4FastScan::from_packed_width(pq, packed, width)
+}
+
+fn read_width<S: IndexSource>(r: &mut S, version: u32) -> Result<CodeWidth> {
     if version < 2 {
         return Ok(CodeWidth::W4);
     }
     let bits = r.u32()? as usize;
     CodeWidth::from_bits(bits)
-        .ok_or_else(|| Error::Dataset(format!("corrupt code width {bits}")))
+        .ok_or_else(|| Error::CorruptIndex(format!("corrupt code width {bits}")))
 }
 
 // ------------------------------------------------------------ IVF-PQ4
 
-/// Save a trained+filled [`IvfPq4`] (lists are stored unpacked; packing is
-/// rebuilt at load time — `from_parts` returns a sealed index).
+/// Save a trained+filled [`IvfPq4`] in format v3: each list's packed
+/// block is an aligned code region (empty lists write a zero-length
+/// region), so probed lists can be scanned straight off the map.
 pub fn save_ivfpq4(index: &IvfPq4, path: &Path) -> Result<()> {
     let pq = index.pq.as_ref().ok_or(Error::NotTrained)?;
-    let f = std::fs::File::create(path)?;
-    let mut w = Writer { w: BufWriter::new(f) };
-    w.w.write_all(MAGIC)?;
-    w.u32(VERSION)?;
-    w.u32(KIND_IVFPQ4)?;
-    w.u32(index.width.bits() as u32)?;
-    w.u32(index.pq_m as u32)?;
-    w.u32(index.dim as u32)?;
-    w.u32(index.params.nlist as u32)?;
-    w.u32(if index.params.coarse_hnsw { 1 } else { 0 })?;
-    w.u32(index.params.hnsw_m as u32)?;
-    w.u64(index.params.seed)?;
-    write_pq(&mut w, pq)?;
-    w.f32s(index.centroids())?;
-    w.u32(index.params.nlist as u32)?;
-    for c in 0..index.params.nlist {
-        let (ids, codes) = index.list_contents(c);
-        w.i64s(ids)?;
-        w.bytes(codes)?;
-    }
-    Ok(())
+    atomic_write(path, |w| {
+        w.header(KIND_IVFPQ4)?;
+        w.u32(index.width.bits() as u32)?;
+        w.u32(index.pq_m as u32)?;
+        w.u32(index.dim as u32)?;
+        w.u32(index.params.nlist as u32)?;
+        w.u32(if index.params.coarse_hnsw { 1 } else { 0 })?;
+        w.u32(index.params.hnsw_m as u32)?;
+        w.u64(index.params.seed)?;
+        write_pq(w, pq)?;
+        w.f32s(index.centroids())?;
+        w.u32(index.params.nlist as u32)?;
+        for c in 0..index.params.nlist {
+            let (ids, staging) = index.list_contents(c);
+            w.i64s(ids)?;
+            match index.list_packed(c) {
+                Some(p) => w.code_region(&p.data)?,
+                None if !ids.is_empty() => {
+                    // unsealed list: pack on the fly so the file always
+                    // holds the kernel layout
+                    let p = PackedCodes::pack(staging, index.pq_m, index.width)?;
+                    w.code_region(&p.data)?;
+                }
+                None => w.code_region(&[])?,
+            }
+        }
+        Ok(())
+    })
 }
 
-/// Load an [`IvfPq4`]. The HNSW coarse graph (if any) is rebuilt from the
-/// centroids deterministically (same seed ⇒ same graph).
+/// Load an [`IvfPq4`] into heap memory. The HNSW coarse graph (if any) is
+/// rebuilt from the centroids deterministically (same seed ⇒ same graph).
 pub fn load_ivfpq4(path: &Path) -> Result<IvfPq4> {
-    let f = std::fs::File::open(path)?;
-    let mut r = Reader { r: BufReader::new(f) };
-    let version = check_header(&mut r, KIND_IVFPQ4)?;
+    load_ivfpq4_with(path, &OpenOptions::default())
+}
+
+/// [`load_ivfpq4`] with explicit open options (see [`load_pq4fs_with`]).
+pub fn load_ivfpq4_with(path: &Path, opts: &OpenOptions) -> Result<IvfPq4> {
+    if opts.mmap {
+        load_ivfpq4_src(&mut MapSource::open(path, opts.budget())?)
+    } else {
+        load_ivfpq4_src(&mut FileSource::open(path)?)
+    }
+}
+
+fn load_ivfpq4_src<S: IndexSource>(r: &mut S) -> Result<IvfPq4> {
+    let version = check_header(r, KIND_IVFPQ4)?;
     let (width, m_stored) = if version >= 2 {
-        let w = read_width(&mut r, version)?;
+        let w = read_width(r, version)?;
         (w, Some(r.u32()? as usize))
     } else {
         (CodeWidth::W4, None)
@@ -218,23 +482,14 @@ pub fn load_ivfpq4(path: &Path) -> Result<IvfPq4> {
     let coarse_hnsw = r.u32()? == 1;
     let hnsw_m = r.u32()? as usize;
     let seed = r.u64()?;
-    let pq = read_pq(&mut r)?;
+    let pq = read_pq(r)?;
     let centroids = r.f32s()?;
     if centroids.len() != nlist * dim {
-        return Err(Error::Dataset("centroid size mismatch".into()));
+        return Err(Error::CorruptIndex("centroid size mismatch".into()));
     }
     let nlist2 = r.u32()? as usize;
     if nlist2 != nlist {
-        return Err(Error::Dataset("list count mismatch".into()));
-    }
-    let mut lists = Vec::with_capacity(nlist);
-    for _ in 0..nlist {
-        let ids = r.i64s()?;
-        let codes = r.bytes()?;
-        if codes.len() != ids.len() * pq.m {
-            return Err(Error::Dataset("list codes mismatch".into()));
-        }
-        lists.push((ids, codes));
+        return Err(Error::CorruptIndex("list count mismatch".into()));
     }
     let mut params = IvfParams::new(nlist);
     params.coarse_hnsw = coarse_hnsw;
@@ -242,7 +497,36 @@ pub fn load_ivfpq4(path: &Path) -> Result<IvfPq4> {
     params.seed = seed;
     let pq_params = PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed };
     let m = m_stored.unwrap_or(pq.m); // v1: user M == internal columns
-    IvfPq4::from_parts(dim, params, pq_params, m, width, pq, centroids, lists)
+    if version < 3 {
+        let mut lists = Vec::with_capacity(nlist);
+        for _ in 0..nlist {
+            let ids = r.i64s()?;
+            let codes = r.bytes()?;
+            if codes.len() != ids.len() * pq.m {
+                return Err(Error::CorruptIndex("list codes mismatch".into()));
+            }
+            lists.push((ids, codes));
+        }
+        return IvfPq4::from_parts(dim, params, pq_params, m, width, pq, centroids, lists);
+    }
+    let mut lists = Vec::with_capacity(nlist);
+    for c in 0..nlist {
+        let ids = r.i64s()?;
+        let store = r.code_region()?;
+        let packed = if ids.is_empty() {
+            if !store.is_empty() {
+                return Err(Error::CorruptIndex(format!(
+                    "list {c}: empty list with a {}-byte code region",
+                    store.len()
+                )));
+            }
+            None
+        } else {
+            Some(PackedCodes::from_store(store, ids.len(), m, width)?)
+        };
+        lists.push((ids, packed));
+    }
+    IvfPq4::from_packed_parts(dim, params, pq_params, m, width, pq, centroids, lists)
 }
 
 // ------------------------------------------------------------ segmented
@@ -254,55 +538,111 @@ fn segment_path(base: &Path, i: usize) -> PathBuf {
     PathBuf::from(name)
 }
 
+/// Content stamp of one segment file: FNV-1a over the geometry, ids, and
+/// packed bytes. Stored in the v3 segment header so an unchanged sealed
+/// segment can be recognized (and its rewrite skipped) without reading
+/// the whole file back.
+fn segment_stamp(width: CodeWidth, ids: &[i64], data: &[u8]) -> u64 {
+    let mut h = fnv1a(FNV_SEED, &(width.bits() as u64).to_le_bytes());
+    h = fnv1a(h, &(ids.len() as u64).to_le_bytes());
+    for &id in ids {
+        h = fnv1a(h, &id.to_le_bytes());
+    }
+    h = fnv1a(h, &(data.len() as u64).to_le_bytes());
+    fnv1a(h, data)
+}
+
+/// Exact byte length [`save_segmented`] produces for a v3 segment file
+/// with `n` ids and `data_len` packed bytes — mirrors the writer.
+fn segment_file_len(n: usize, data_len: usize) -> u64 {
+    // magic(8) + version(4) + kind(4) + width(4) + stamp(8) = 28,
+    // i64s = 8 + 8n, region length field = 8
+    let before_pad = 28 + 8 + 8 * n as u64 + 8;
+    before_pad + pad_to_align(before_pad) as u64 + data_len as u64
+}
+
+/// The stamp of an existing v3 segment file, or `None` when the file is
+/// missing, an older version, or not a segment file at all.
+fn read_segment_stamp(path: &Path) -> Option<u64> {
+    let mut f = std::fs::File::open(path).ok()?;
+    let mut head = [0u8; 28];
+    f.read_exact(&mut head).ok()?;
+    if &head[..8] != MAGIC {
+        return None;
+    }
+    let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    let kind = u32::from_le_bytes(head[12..16].try_into().unwrap());
+    if version != VERSION || kind != KIND_SEGMENT {
+        return None;
+    }
+    Some(u64::from_le_bytes(head[20..28].try_into().unwrap()))
+}
+
 /// Save a trained [`SegmentedIndex`]: a manifest at `path` plus one
 /// `{path}.seg{i}` file per sealed segment. The snapshot is taken once, so
 /// a save concurrent with inserts captures a consistent point in time.
+///
+/// Sealed segments are immutable, so a segment file whose length and
+/// content stamp already match is left untouched — repeated flush+save
+/// cycles cost O(memtable), not O(index).
 pub fn save_segmented(index: &SegmentedIndex, path: &Path) -> Result<()> {
     let (dim, m, width, params, pq, snap, next_id) = index.parts();
     let pq = pq.ok_or(Error::NotTrained)?;
-    let f = std::fs::File::create(path)?;
-    let mut w = Writer { w: BufWriter::new(f) };
-    w.w.write_all(MAGIC)?;
-    w.u32(VERSION)?;
-    w.u32(KIND_SEGMENTED)?;
-    w.u32(width.bits() as u32)?;
-    w.u32(m as u32)?;
-    w.u32(dim as u32)?;
-    w.u64(params.flush_threshold as u64)?;
-    w.u64(params.max_segments as u64)?;
-    w.u64(next_id as u64)?;
-    write_pq(&mut w, &pq)?;
-    // sorted for byte-deterministic output (HashSet order is not)
-    let mut tombs: Vec<i64> = snap.tombstones.iter().copied().collect();
-    tombs.sort_unstable();
-    w.i64s(&tombs)?;
-    w.i64s(snap.memtable.ids())?;
-    w.f32s(snap.memtable.vectors())?;
-    w.bytes(snap.memtable.codes())?;
-    w.u32(snap.segments.len() as u32)?;
-    drop(w);
-    for (i, seg) in snap.segments.iter().enumerate() {
-        let f = std::fs::File::create(segment_path(path, i))?;
-        let mut w = Writer { w: BufWriter::new(f) };
-        w.w.write_all(MAGIC)?;
-        w.u32(VERSION)?;
-        w.u32(KIND_SEGMENT)?;
+    atomic_write(path, |w| {
+        w.header(KIND_SEGMENTED)?;
         w.u32(width.bits() as u32)?;
-        w.i64s(&seg.ids)?;
-        w.bytes(&seg.codes)?;
+        w.u32(m as u32)?;
+        w.u32(dim as u32)?;
+        w.u64(params.flush_threshold as u64)?;
+        w.u64(params.max_segments as u64)?;
+        w.u64(next_id as u64)?;
+        write_pq(w, &pq)?;
+        // sorted for byte-deterministic output (HashSet order is not)
+        let mut tombs: Vec<i64> = snap.tombstones.iter().copied().collect();
+        tombs.sort_unstable();
+        w.i64s(&tombs)?;
+        w.i64s(snap.memtable.ids())?;
+        w.f32s(snap.memtable.vectors())?;
+        w.bytes(snap.memtable.codes())?;
+        w.u32(snap.segments.len() as u32)
+    })?;
+    for (i, seg) in snap.segments.iter().enumerate() {
+        let sp = segment_path(path, i);
+        let data: &[u8] = &seg.packed.data;
+        let stamp = segment_stamp(width, &seg.ids, data);
+        if let Ok(meta) = std::fs::metadata(&sp) {
+            if meta.len() == segment_file_len(seg.ids.len(), data.len())
+                && read_segment_stamp(&sp) == Some(stamp)
+            {
+                continue; // unchanged sealed segment: skip the rewrite
+            }
+        }
+        atomic_write(&sp, |w| {
+            w.header(KIND_SEGMENT)?;
+            w.u32(width.bits() as u32)?;
+            w.u64(stamp)?;
+            w.i64s(&seg.ids)?;
+            w.code_region(data)
+        })?;
     }
     Ok(())
 }
 
-/// Load a [`SegmentedIndex`] saved by [`save_segmented`]: the manifest at
-/// `path` plus its `{path}.seg{i}` siblings. Packed layouts are rebuilt
-/// deterministically, so queries answer bit-identically to the saved
-/// instance.
+/// Load a [`SegmentedIndex`] saved by [`save_segmented`] into heap
+/// memory: the manifest at `path` plus its `{path}.seg{i}` siblings.
 pub fn load_segmented(path: &Path) -> Result<SegmentedIndex> {
-    let f = std::fs::File::open(path)?;
-    let mut r = Reader { r: BufReader::new(f) };
-    let version = check_header(&mut r, KIND_SEGMENTED)?;
-    let width = read_width(&mut r, version)?;
+    load_segmented_with(path, &OpenOptions::default())
+}
+
+/// [`load_segmented`] with explicit open options: `opts.mmap` maps each
+/// v3 segment file and adopts its packed block zero-copy; one
+/// [`MemoryBudget`] spans all segments. Queries answer bit-identically to
+/// the heap load either way.
+pub fn load_segmented_with(path: &Path, opts: &OpenOptions) -> Result<SegmentedIndex> {
+    // the manifest holds only scalars + the memtable — always heap-read
+    let r = &mut FileSource::open(path)?;
+    let version = check_header(r, KIND_SEGMENTED)?;
+    let width = read_width(r, version)?;
     let m = r.u32()? as usize;
     let dim = r.u32()? as usize;
     let params = SegmentedParams {
@@ -310,53 +650,103 @@ pub fn load_segmented(path: &Path) -> Result<SegmentedIndex> {
         max_segments: r.u64()? as usize,
     };
     let next_id = r.u64()? as i64;
-    let pq = read_pq(&mut r)?;
+    let pq = read_pq(r)?;
     let tombstones: std::collections::HashSet<i64> = r.i64s()?.into_iter().collect();
     let mem_ids = r.i64s()?;
     let mem_vectors = r.f32s()?;
     let mem_codes = r.bytes()?;
     let code_cols = width.code_columns(m);
     if mem_vectors.len() != mem_ids.len() * dim || mem_codes.len() != mem_ids.len() * code_cols {
-        return Err(Error::Dataset("segmented manifest: memtable size mismatch".into()));
+        return Err(Error::CorruptIndex("segmented manifest: memtable size mismatch".into()));
     }
     let memtable = Memtable::from_parts(mem_ids, mem_vectors, mem_codes);
     let nseg = r.u32()? as usize;
     let mut segments = Vec::with_capacity(nseg);
+    let mut budget = opts.budget();
     for i in 0..nseg {
-        let f = std::fs::File::open(segment_path(path, i))?;
-        let mut r = Reader { r: BufReader::new(f) };
-        let version = check_header(&mut r, KIND_SEGMENT)?;
-        let seg_width = read_width(&mut r, version)?;
-        if seg_width != width {
-            return Err(Error::Dataset(format!(
-                "segment {i}: width {seg_width} does not match manifest {width}"
-            )));
-        }
-        let ids = r.i64s()?;
-        let codes = r.bytes()?;
-        // build() re-validates shape and re-packs the kernel layout
-        segments.push(SealedSegment::build(ids, codes, m, width)?);
+        let sp = segment_path(path, i);
+        let seg = if opts.mmap {
+            let mut src = MapSource::open(&sp, budget)?;
+            let seg = load_segment_src(&mut src, i, m, width)?;
+            budget = src.budget;
+            seg
+        } else {
+            load_segment_src(&mut FileSource::open(&sp)?, i, m, width)?
+        };
+        segments.push(seg);
     }
     SegmentedIndex::from_parts(
         dim, m, width, params, pq, segments, tombstones, memtable, next_id,
     )
 }
 
-fn check_header<R: Read>(r: &mut Reader<R>, expect_kind: u32) -> Result<u32> {
+fn load_segment_src<S: IndexSource>(
+    r: &mut S,
+    i: usize,
+    m: usize,
+    width: CodeWidth,
+) -> Result<SealedSegment> {
+    let version = check_header(r, KIND_SEGMENT)?;
+    let seg_width = read_width(r, version)?;
+    if seg_width != width {
+        return Err(Error::CorruptIndex(format!(
+            "segment {i}: width {seg_width} does not match manifest {width}"
+        )));
+    }
+    if version < 3 {
+        let ids = r.i64s()?;
+        let codes = r.bytes()?;
+        // build() re-validates shape and re-packs the kernel layout
+        return SealedSegment::build(ids, codes, m, width);
+    }
+    let _stamp = r.u64()?; // writer-side change detection, not verified here
+    let ids = r.i64s()?;
+    let store = r.code_region()?;
+    let packed = PackedCodes::from_store(store, ids.len(), m, width)?;
+    SealedSegment::from_packed(ids, packed)
+}
+
+// ------------------------------------------------------------ open
+
+fn check_header<S: IndexSource>(r: &mut S, expect_kind: u32) -> Result<u32> {
+    let (version, kind) = read_magic_version_kind(r)?;
+    if kind != expect_kind {
+        return Err(Error::CorruptIndex(format!(
+            "wrong index kind {kind} (expected {expect_kind})"
+        )));
+    }
+    Ok(version)
+}
+
+fn read_magic_version_kind<S: IndexSource>(r: &mut S) -> Result<(u32, u32)> {
     let mut magic = [0u8; 8];
-    r.r.read_exact(&mut magic)?;
+    r.fill(&mut magic)?;
     if &magic != MAGIC {
-        return Err(Error::Dataset("not an armpq index file".into()));
+        return Err(Error::CorruptIndex("not an armpq index file".into()));
     }
     let version = r.u32()?;
     if !(1..=VERSION).contains(&version) {
-        return Err(Error::Dataset(format!("unsupported index version {version}")));
+        return Err(Error::CorruptIndex(format!("unsupported index version {version}")));
     }
     let kind = r.u32()?;
-    if kind != expect_kind {
-        return Err(Error::Dataset(format!("wrong index kind {kind} (expected {expect_kind})")));
+    Ok((version, kind))
+}
+
+/// Open any saved index behind the [`Index`] trait, dispatching on the
+/// file's kind tag. `opts.mmap` makes sealed code blocks zero-copy
+/// ([`CodeStore::Mapped`]); `opts.budget_mb` caps how much of them is
+/// advised resident at open.
+pub fn open_index(path: &Path, opts: &OpenOptions) -> Result<Box<dyn Index>> {
+    let (_version, kind) = read_magic_version_kind(&mut FileSource::open(path)?)?;
+    match kind {
+        KIND_PQ4FS => Ok(Box::new(load_pq4fs_with(path, opts)?)),
+        KIND_IVFPQ4 => Ok(Box::new(IndexIvfPq4::from_inner(load_ivfpq4_with(path, opts)?))),
+        KIND_SEGMENTED => Ok(Box::new(load_segmented_with(path, opts)?)),
+        KIND_SEGMENT => Err(Error::CorruptIndex(
+            "this is a bare segment file; open its manifest instead".into(),
+        )),
+        k => Err(Error::CorruptIndex(format!("unknown index kind {k}"))),
     }
-    Ok(version)
 }
 
 #[cfg(test)]
@@ -388,6 +778,15 @@ mod tests {
         let after = loaded.search(&ds.queries, 5, None).unwrap();
         assert_eq!(before.labels, after.labels);
         assert_eq!(before.distances, after.distances);
+
+        // the mapped open answers bit-identically and is actually mapped
+        let mapped = load_pq4fs_with(&path, &OpenOptions::mapped()).unwrap();
+        let p = mapped.packed().unwrap();
+        assert!(p.data.is_mapped());
+        assert_eq!(p.data.as_ptr() as usize % CODE_ALIGN, 0, "region must be 64-byte aligned");
+        let after = mapped.search(&ds.queries, 5, None).unwrap();
+        assert_eq!(before.labels, after.labels);
+        assert_eq!(before.distances, after.distances);
     }
 
     #[test]
@@ -412,10 +811,16 @@ mod tests {
         let (d1, l1) = loaded.search(&ds.queries, 5).unwrap();
         assert_eq!(l0, l1);
         assert_eq!(d0, d1);
+
+        let mut mapped = load_ivfpq4_with(&path, &OpenOptions::mapped()).unwrap();
+        mapped.nprobe = 8;
+        let (d2, l2) = mapped.search(&ds.queries, 5).unwrap();
+        assert_eq!(l0, l2);
+        assert_eq!(d0, d2);
     }
 
     /// Every fastscan width survives the save/load cycle with identical
-    /// results (the v2 format carries the width).
+    /// results (the format carries the width).
     #[test]
     fn width_roundtrips_identically() {
         let ds = SyntheticDataset::gaussian(800, 8, 32, 205);
@@ -451,11 +856,42 @@ mod tests {
         assert_eq!(d0, d1);
     }
 
+    /// A hand-written v2 file (flat code columns, no alignment) still
+    /// loads — the compatibility contract for pre-v3 deployments.
+    #[test]
+    fn v2_flat_file_still_loads() {
+        let ds = SyntheticDataset::gaussian(400, 6, 16, 209);
+        let mut idx = IndexPq4FastScan::new(ds.dim, 4);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        let before = idx.search(&ds.queries, 5, None).unwrap();
+
+        let path = tmp("v2_flat.armpq");
+        let f = std::fs::File::create(&path).unwrap();
+        let mut w = Writer { w: BufWriter::new(f), pos: 0 };
+        w.put(MAGIC).unwrap();
+        w.u32(2).unwrap(); // the v2 layout, byte for byte
+        w.u32(KIND_PQ4FS).unwrap();
+        w.u32(idx.width().bits() as u32).unwrap();
+        write_pq(&mut w, idx.pq().unwrap()).unwrap();
+        w.bytes(&idx.flat_codes()).unwrap();
+        w.w.flush().unwrap();
+
+        for opts in [OpenOptions::heap(), OpenOptions::mapped()] {
+            let loaded = load_pq4fs_with(&path, &opts).unwrap();
+            assert_eq!(loaded.ntotal(), 400);
+            let after = loaded.search(&ds.queries, 5, None).unwrap();
+            assert_eq!(before.labels, after.labels);
+            assert_eq!(before.distances, after.distances);
+        }
+    }
+
     #[test]
     fn rejects_wrong_magic_and_kind() {
         let path = tmp("bad.armpq");
         std::fs::write(&path, b"NOTANIDX0000000000000000").unwrap();
-        assert!(load_pq4fs(&path).is_err());
+        assert!(matches!(load_pq4fs(&path).unwrap_err(), Error::CorruptIndex(_)));
 
         // valid flat index loaded as IVF must fail on the kind tag
         let ds = SyntheticDataset::gaussian(500, 2, 16, 203);
@@ -469,6 +905,9 @@ mod tests {
             Ok(_) => panic!("loading flat index as IVF must fail"),
         };
         assert!(err.to_string().contains("kind"), "{err}");
+        // but the kind-dispatching open succeeds on the same file
+        let opened = open_index(&path2, &OpenOptions::heap()).unwrap();
+        assert_eq!(opened.ntotal(), 500);
     }
 
     #[test]
@@ -487,6 +926,65 @@ mod tests {
         save_pq4fs(&idx, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load_pq4fs(&path).is_err());
+        for opts in [OpenOptions::heap(), OpenOptions::mapped()] {
+            assert!(matches!(
+                load_pq4fs_with(&path, &opts).unwrap_err(),
+                Error::CorruptIndex(_)
+            ));
+        }
+    }
+
+    /// Saves are atomic: no `.tmp` sibling survives a successful save,
+    /// and a failed save never replaces the existing file.
+    #[test]
+    fn atomic_save_leaves_no_tmp() {
+        let ds = SyntheticDataset::gaussian(300, 2, 16, 207);
+        let mut idx = IndexPq4FastScan::new(ds.dim, 4);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        let path = tmp("atomic.armpq");
+        save_pq4fs(&idx, &path).unwrap();
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists(), "temp sibling must be renamed away");
+        assert!(load_pq4fs(&path).is_ok());
+    }
+
+    /// Re-saving a segmented index leaves unchanged sealed segment files
+    /// untouched on disk (same inode — never rewritten), while the
+    /// manifest is rewritten every time.
+    #[cfg(unix)]
+    #[test]
+    fn unchanged_segments_skip_rewrite() {
+        use crate::segment::SegmentedParams;
+        use std::os::unix::fs::MetadataExt;
+
+        let ds = SyntheticDataset::gaussian(600, 4, 8, 208);
+        // thresholds high enough that nothing flushes or compacts behind
+        // the test's back — segment 0's content must stay stable
+        let params = SegmentedParams { flush_threshold: 100_000, max_segments: 1_000 };
+        let mut idx = SegmentedIndex::new(ds.dim, 4, CodeWidth::W4, params).unwrap();
+        idx.train(&ds.train).unwrap();
+        let base_ids: Vec<i64> = (0..600).collect();
+        idx.insert(&ds.base, Some(&base_ids)).unwrap();
+        idx.flush().unwrap();
+        let path = tmp("skip.armpq");
+        save_segmented(&idx, &path).unwrap();
+        let seg0 = segment_path(&path, 0);
+        let ino_before = std::fs::metadata(&seg0).unwrap().ino();
+
+        // nothing changed: the segment file must not be rewritten
+        save_segmented(&idx, &path).unwrap();
+        assert_eq!(std::fs::metadata(&seg0).unwrap().ino(), ino_before);
+
+        // mutate + flush: a new segment appears, segment 0 still skips
+        idx.insert(&ds.queries, Some(&[9000, 9001, 9002, 9003])).unwrap();
+        idx.flush().unwrap();
+        save_segmented(&idx, &path).unwrap();
+        assert_eq!(std::fs::metadata(&seg0).unwrap().ino(), ino_before);
+        assert!(segment_path(&path, 1).exists());
+
+        let loaded = load_segmented(&path).unwrap();
+        assert_eq!(loaded.ntotal(), 604);
     }
 }

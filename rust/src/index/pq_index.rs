@@ -190,8 +190,30 @@ impl IndexPq4FastScan {
 
     /// Flat staging codes (`ntotal × width.code_columns(m)`, one byte per
     /// internal sub-quantizer) — the persistence layer serializes these.
+    /// Empty for zero-copy (mapped) loads; use
+    /// [`IndexPq4FastScan::flat_codes`] where columns are always needed.
     pub fn staging_codes(&self) -> &[u8] {
         &self.staging
+    }
+
+    /// The kernel-ready packed block (`None` while unsealed or empty) —
+    /// the v3 persistence accessor: format v3 stores the packed layout
+    /// verbatim so a mapped reopen needs no repack.
+    pub fn packed(&self) -> Option<&PackedCodes> {
+        self.packed.as_ref()
+    }
+
+    /// Flat code columns, rematerialized from the packed block when the
+    /// staging was never kept (zero-copy loads).
+    pub fn flat_codes(&self) -> std::borrow::Cow<'_, [u8]> {
+        if self.staging.is_empty() && self.ntotal > 0 {
+            match &self.packed {
+                Some(p) => std::borrow::Cow::Owned(p.unpack()),
+                None => std::borrow::Cow::Borrowed(&self.staging[..]),
+            }
+        } else {
+            std::borrow::Cow::Borrowed(&self.staging[..])
+        }
     }
 
     /// Rebuild from persisted parts (trained internal PQ + flat codes) at
@@ -244,6 +266,41 @@ impl IndexPq4FastScan {
         };
         index.seal()?;
         Ok(index)
+    }
+
+    /// Rebuild from an already-packed block (format v3): adopts the block
+    /// — heap-owned or a mapped window — without materializing flat
+    /// staging columns. The result is sealed and ready to serve.
+    pub fn from_packed_width(
+        pq: ProductQuantizer,
+        packed: PackedCodes,
+        width: CodeWidth,
+    ) -> Result<Self> {
+        if pq.ksub != width.sub_ksub() {
+            return Err(Error::InvalidParameter(format!(
+                "{width} fastscan needs a K={} quantizer, file has K={}",
+                width.sub_ksub(),
+                pq.ksub
+            )));
+        }
+        if packed.width != width || packed.m_codes != pq.m {
+            return Err(Error::CorruptIndex(format!(
+                "packed block is {} × {} columns, quantizer is {width} × {}",
+                packed.width, packed.m_codes, pq.m
+            )));
+        }
+        let ntotal = packed.n;
+        Ok(Self {
+            dim: pq.dim,
+            params: PqParams { m: pq.m, ksub: pq.ksub, train_iters: 0, seed: 0 },
+            m: packed.m,
+            width,
+            fastscan: FastScanParams::default(),
+            pq: Some(pq),
+            staging: Vec::new(),
+            packed: Some(packed),
+            ntotal,
+        })
     }
 
     /// Pack the staged codes into the kernel's interleaved layout.
@@ -353,6 +410,7 @@ impl IndexPq4FastScan {
                 codes_scanned: self.ntotal,
                 lists_probed: 1,
                 filter_selectivity: selectivity,
+                bytes_mapped: packed.mapped_bytes(),
                 ..Default::default()
             };
             nq
@@ -384,6 +442,14 @@ impl Index for IndexPq4FastScan {
     fn add(&mut self, data: &[f32]) -> Result<()> {
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         let codes = pq.encode(data)?;
+        // a zero-copy-loaded index has rows only in its packed block;
+        // rematerialize the flat columns before appending, or the repack
+        // at seal() would silently drop the mapped rows
+        if self.staging.is_empty() && self.ntotal > 0 {
+            if let Some(p) = &self.packed {
+                self.staging = p.unpack();
+            }
+        }
         self.staging.extend(codes);
         self.ntotal += data.len() / self.dim;
         self.packed = None;

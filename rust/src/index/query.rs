@@ -320,6 +320,12 @@ pub struct QueryStats {
     /// Dead sealed rows awaiting compaction at snapshot time (0 for sealed
     /// indexes) — the compaction-pressure signal.
     pub tombstones: usize,
+    /// Packed code bytes this query scanned out of memory-mapped regions
+    /// (0 for heap-loaded indexes) — the zero-copy coverage signal.
+    pub bytes_mapped: usize,
+    /// Probed lists / scan units whose codes were software-prefetched one
+    /// step ahead of the scan.
+    pub prefetch_lists: usize,
 }
 
 impl Default for QueryStats {
@@ -333,6 +339,8 @@ impl Default for QueryStats {
             segments_scanned: 0,
             memtable_entries: 0,
             tombstones: 0,
+            bytes_mapped: 0,
+            prefetch_lists: 0,
         }
     }
 }

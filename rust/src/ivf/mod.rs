@@ -254,6 +254,14 @@ impl IvfPq4 {
         let m = pq.m;
         for i in 0..n {
             let list = &mut self.lists[assign[i] as usize];
+            // a zero-copy-loaded list has rows only in its packed block;
+            // rematerialize the flat columns before appending, or the
+            // repack at seal() would silently drop the mapped rows
+            if list.staging.is_empty() && !list.ids.is_empty() {
+                if let Some(p) = &list.packed {
+                    list.staging = p.unpack();
+                }
+            }
             list.ids.push(ids[i]);
             list.staging.extend_from_slice(&codes[i * m..(i + 1) * m]);
             list.packed = None; // invalidate packing
@@ -653,6 +661,7 @@ impl IvfPq4 {
         let mut merged = scratch.take_merged();
         let mut considered = 0usize;
         let mut passed = 0usize;
+        let mut prefetched = 0usize;
         match list_exec {
             Some(lexec) if probes.len() > 1 && lexec.threads() > 1 => {
                 // intra-query fan-out: each probed list is an independent
@@ -687,7 +696,16 @@ impl IvfPq4 {
                 // serial per-list scans on this worker's scratch —
                 // identical candidate sets, zero allocations after warmup
                 let mut storage = scratch.take_items();
-                for &c in probes.iter() {
+                for (pi, &c) in probes.iter().enumerate() {
+                    // touch the next probed list's packed block while this
+                    // one is being scanned: on mapped (mmap) indexes that
+                    // turns a cold page fault into an overlap with work
+                    if let Some(&next) = probes.get(pi + 1) {
+                        if let Some(p) = &self.lists[next].packed {
+                            crate::storage::prefetch_span(&p.data);
+                            prefetched += 1;
+                        }
+                    }
                     let (cands, n, admitted) = self.scan_one_list(
                         c,
                         kind,
@@ -718,6 +736,12 @@ impl IvfPq4 {
             // (the caller overwrites this with the batch width in batch
             // mode); serial scans report 1
             threads_used: list_exec.map(|le| le.threads_for(probes.len())).unwrap_or(1),
+            bytes_mapped: probes
+                .iter()
+                .filter_map(|&c| self.lists[c].packed.as_ref())
+                .map(|p| p.mapped_bytes())
+                .sum(),
+            prefetch_lists: prefetched,
             ..Default::default()
         };
 
@@ -809,6 +833,27 @@ impl IvfPq4 {
         (&self.lists[c].ids, &self.lists[c].staging)
     }
 
+    /// The kernel-ready packed block of one list (`None` while empty or
+    /// unsealed) — the v3 persistence accessor: format v3 stores the
+    /// packed layout verbatim so a mapped reopen needs no repack.
+    pub fn list_packed(&self, c: usize) -> Option<&PackedCodes> {
+        self.lists[c].packed.as_ref()
+    }
+
+    /// Flat code columns of one list, rematerialized from the packed
+    /// block when the staging was never kept (zero-copy loads).
+    pub fn list_flat_codes(&self, c: usize) -> std::borrow::Cow<'_, [u8]> {
+        let list = &self.lists[c];
+        if list.staging.is_empty() && !list.ids.is_empty() {
+            match &list.packed {
+                Some(p) => std::borrow::Cow::Owned(p.unpack()),
+                None => std::borrow::Cow::Borrowed(&list.staging[..]),
+            }
+        } else {
+            std::borrow::Cow::Borrowed(&list.staging[..])
+        }
+    }
+
     /// Rebuild from persisted parts; the result is sealed and ready to
     /// serve. The HNSW coarse graph is rebuilt from the centroids
     /// (deterministic for a fixed seed). `width`/`m` describe the fastscan
@@ -879,6 +924,90 @@ impl IvfPq4 {
         };
         index.seal()?;
         Ok(index)
+    }
+
+    /// Rebuild from already-packed lists (format v3): each list adopts its
+    /// packed block — heap-owned or a mapped window — without keeping (or
+    /// ever materializing) flat staging columns. The result is sealed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_packed_parts(
+        dim: usize,
+        params: IvfParams,
+        pq_params: PqParams,
+        m: usize,
+        width: CodeWidth,
+        pq: ProductQuantizer,
+        centroids: Vec<f32>,
+        lists: Vec<(Vec<i64>, Option<PackedCodes>)>,
+    ) -> Result<Self> {
+        if width.code_columns(m) != pq.m {
+            return Err(Error::InvalidParameter(format!(
+                "{width} layout needs {} quantizer columns, PQ has {}",
+                width.code_columns(m),
+                pq.m
+            )));
+        }
+        if pq.ksub != width.sub_ksub() {
+            return Err(Error::InvalidParameter(format!(
+                "{width} fastscan needs a K={} quantizer, file has K={}",
+                width.sub_ksub(),
+                pq.ksub
+            )));
+        }
+        if lists.len() != params.nlist || centroids.len() != params.nlist * dim {
+            return Err(Error::InvalidParameter("IVF parts shape mismatch".into()));
+        }
+        let mut checked = Vec::with_capacity(lists.len());
+        let mut ntotal = 0usize;
+        for (c, (ids, packed)) in lists.into_iter().enumerate() {
+            match &packed {
+                Some(p) if p.n != ids.len() => {
+                    return Err(Error::CorruptIndex(format!(
+                        "list {c}: {} ids but packed block holds {} rows",
+                        ids.len(),
+                        p.n
+                    )));
+                }
+                None if !ids.is_empty() => {
+                    return Err(Error::CorruptIndex(format!(
+                        "list {c}: {} ids but no packed block",
+                        ids.len()
+                    )));
+                }
+                _ => {}
+            }
+            ntotal += ids.len();
+            checked.push(IvfList { ids, staging: Vec::new(), packed });
+        }
+        let coarse = if params.coarse_hnsw {
+            let mut graph = Hnsw::new(
+                dim,
+                HnswParams {
+                    m: params.hnsw_m,
+                    ef_construction: 2 * params.hnsw_m,
+                    seed: params.seed,
+                },
+            );
+            graph.add_batch(&centroids)?;
+            CoarseQuantizer::Hnsw { graph, ef_search: 0 }
+        } else {
+            CoarseQuantizer::Flat
+        };
+        Ok(Self {
+            dim,
+            params,
+            pq_params,
+            pq_m: m,
+            width,
+            pq: Some(pq),
+            centroids,
+            coarse,
+            lists: checked,
+            ntotal,
+            nprobe: 1,
+            ef_default: 0,
+            fastscan: FastScanParams::default(),
+        })
     }
 
     /// Occupancy histogram stats: (min, mean, max) list length.

@@ -99,6 +99,22 @@
 //! shard, and reports `threads_used` / scratch high-water through
 //! [`index::QueryStats`] and the `stats` verb.
 //!
+//! ## Storage: zero-copy mapped indexes
+//!
+//! Index files use the page-aligned **format v3** ([`index::io`]): packed
+//! code regions are 64-byte-aligned inside the file, so a loader can
+//! memory-map the file once and hand every region to the kernels in
+//! place. The ownership split lives in [`storage`]: a
+//! [`storage::CodeStore`] is either `Owned` heap bytes (the default, and
+//! what v1/v2 files still load into) or a `Mapped` window into a shared
+//! [`storage::Mmap`] — cloning a mapped store bumps an `Arc`, the page
+//! cache shares the bytes across processes, and a
+//! [`storage::MemoryBudget`] (`mmap=true,budget_mb=…` in the factory
+//! string) decides how much of the file to advise resident up front.
+//! The scan loop prefetches the next probed list one list ahead
+//! ([`storage::prefetch_span`]) to hide page-in latency behind the
+//! current list's arithmetic.
+//!
 //! ## Code widths
 //!
 //! The fastscan kernel is generalized over code width
@@ -123,6 +139,7 @@ pub mod pq;
 pub mod runtime;
 pub mod segment;
 pub mod simd;
+pub mod storage;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -68,7 +68,13 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
             let nlist = args.get_usize("nlist", (cfg.n as f64).sqrt() as usize);
             let nprobes = args.get_usize_list("nprobe", &[1, 2, 4]);
             let m = args.get_usize("pq-m", 16);
-            let t = experiments::run_table1(cfg.n, cfg.nq, nlist, m, &nprobes, cfg.trials, cfg.seed)?;
+            // --mmap / --budget-mb (or factory storage keys) measure the
+            // zero-copy mapped reopen instead of the in-heap build
+            let open = cfg.open_options()?;
+            let open = open.mmap.then_some(open);
+            let t = experiments::run_table1_with(
+                cfg.n, cfg.nq, nlist, m, &nprobes, cfg.trials, cfg.seed, open.as_ref(),
+            )?;
             t.print();
             t.save()?;
             Ok(())
@@ -155,10 +161,13 @@ commands:
   info          host/backend/artifact report
   gen-data      write synthetic datasets as fvecs
   search        build an index from a factory string and run queries
-  serve         start the TCP batching coordinator
+  serve         start the TCP batching coordinator (--index-file <path>
+                serves a saved index; --mmap opens it zero-copy and
+                --budget-mb <MiB> caps advised residency)
   client        drive a running server
   bench-fig2    paper Fig. 2 (PQ vs 4-bit PQ recall/QPS sweep)
-  bench-table1  paper Table 1 (IVF+HNSW+PQ16x4fs at scale)
+  bench-table1  paper Table 1 (IVF+HNSW+PQ16x4fs at scale; --mmap
+                measures the zero-copy mapped reopen, --budget-mb caps it)
   bench-micro   paper Fig. 1 lookup-op micro-benchmark (--width 2,4,8;
                 --filter-selectivity 1,10,50,100 adds the filter-pushdown
                 sweep, --filter-n sets its database size)
@@ -254,6 +263,33 @@ fn search(args: &Args) -> armpq::Result<()> {
 fn serve(args: &Args) -> armpq::Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
     let addr = args.get_str("addr", "127.0.0.1:7878");
+
+    // `--index-file` serves a saved index instead of building a synthetic
+    // one; `--mmap` / `--budget-mb` (or factory-string `mmap=true,…`)
+    // select a zero-copy open with a residency budget.
+    if let Some(path) = args.get_opt("index-file") {
+        let opts = cfg.open_options()?;
+        let index: Arc<dyn Index> =
+            Arc::from(armpq::index::io::open_index(std::path::Path::new(&path), &opts)?);
+        let dim = index.dim();
+        println!(
+            "opened {path} ({}, dim {dim}, {} rows, {})",
+            index.describe(),
+            index.ntotal(),
+            if opts.mmap { "mapped" } else { "heap" }
+        );
+        let backend = Arc::new(armpq::coordinator::IndexBackend::new(index)?);
+        let server = Server::start(
+            backend,
+            ServerConfig { addr: addr.clone(), ..Default::default() },
+        )?;
+        println!("serving on {} (dim {dim}) — Ctrl-C to stop", server.addr);
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            println!("stats: {}", server.metrics_json().to_string());
+        }
+    }
+
     let nlist = args.get_usize("nlist", (cfg.n as f64).sqrt() as usize);
     let m = args.get_usize("pq-m", 16);
     let ds = experiments::make_dataset(&cfg.dataset, cfg.n, cfg.nq, cfg.seed);

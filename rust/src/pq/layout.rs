@@ -36,6 +36,7 @@
 
 use crate::pq::bitwidth::CodeWidth;
 use crate::pq::BLOCK_SIZE;
+use crate::storage::CodeStore;
 use crate::{Error, Result};
 
 /// Packed codes in the width-parametric interleaved block layout.
@@ -54,8 +55,10 @@ pub struct PackedCodes {
     /// 16-entry LUT rows the matching kernel consumes
     /// (`width.lut_rows(m)`; for 4-bit this is `m` rounded up to even).
     pub lut_rows: usize,
-    /// Packed bytes: `nblocks × chunks × 32`.
-    pub data: Vec<u8>,
+    /// Packed bytes: `nblocks × chunks × 32` — heap-owned or a zero-copy
+    /// window into a mapped index file ([`CodeStore`] derefs to `&[u8]`
+    /// either way).
+    pub data: CodeStore,
 }
 
 /// Byte offset within a block and bit shift of internal code column `col`
@@ -153,7 +156,35 @@ impl PackedCodes {
                 data[base + off] |= code << shift;
             }
         }
+        Ok(Self { width, n, m, m_codes, lut_rows, data: data.into() })
+    }
+
+    /// Rebuild a `PackedCodes` over an existing store of already-packed
+    /// bytes (heap-loaded or a mapped window of a v3 index file). The
+    /// byte count must match the layout exactly — a corrupt header that
+    /// lies about `n` or `m` is rejected here instead of panicking in the
+    /// scan kernels.
+    pub fn from_store(data: CodeStore, n: usize, m: usize, width: CodeWidth) -> Result<Self> {
+        if m == 0 {
+            return Err(Error::InvalidParameter("packed codes need m >= 1".into()));
+        }
+        let m_codes = width.code_columns(m);
+        let lut_rows = width.lut_rows(m);
+        let want = n.div_ceil(BLOCK_SIZE) * lut_rows * 16;
+        if data.len() != want {
+            return Err(Error::CorruptIndex(format!(
+                "packed region is {} bytes, layout n={n} m={m} {width} needs {want}",
+                data.len()
+            )));
+        }
         Ok(Self { width, n, m, m_codes, lut_rows, data })
+    }
+
+    /// Bytes of this layout served zero-copy from a mapped index file
+    /// (0 when heap-owned) — feeds the `bytes_mapped` query stat.
+    #[inline]
+    pub fn mapped_bytes(&self) -> usize {
+        self.data.mapped_bytes()
     }
 
     /// Unpack back to flat `n × m_codes` internal codes (inverse of
@@ -361,6 +392,24 @@ mod tests {
         // the error names the width and its bound
         let e = PackedCodes::pack(&[0, 4], 2, CodeWidth::W2).unwrap_err().to_string();
         assert!(e.contains("2-bit") && e.contains("< 4"), "{e}");
+    }
+
+    #[test]
+    fn from_store_roundtrip_and_validation() {
+        for width in CodeWidth::ALL {
+            let cols = width.code_columns(8);
+            let codes = random_codes(50, cols, width.sub_ksub(), 62);
+            let packed = PackedCodes::pack(&codes, 8, width).unwrap();
+            let bytes: Vec<u8> = packed.data.to_vec();
+            let rebuilt =
+                PackedCodes::from_store(bytes.clone().into(), 50, 8, width).unwrap();
+            assert_eq!(rebuilt.unpack(), codes, "{width}");
+            assert_eq!(rebuilt.mapped_bytes(), 0);
+            // a store that disagrees with the layout is corrupt, not UB
+            let short = PackedCodes::from_store(bytes[1..].to_vec().into(), 50, 8, width);
+            assert!(matches!(short.unwrap_err(), Error::CorruptIndex(_)), "{width}");
+        }
+        assert!(PackedCodes::from_store(Vec::new().into(), 0, 0, CodeWidth::W4).is_err());
     }
 
     #[test]

@@ -294,12 +294,14 @@ impl SegInner {
         let mut ids: Vec<i64> = Vec::with_capacity(snap.sealed_rows());
         let mut codes: Vec<u8> = Vec::with_capacity(snap.sealed_rows() * cols);
         for seg in &snap.segments {
+            // mapped segments have no flat columns; this unpacks on demand
+            let flat = seg.flat_codes();
             for (row, &id) in seg.ids.iter().enumerate() {
                 if snap.tombstones.contains(&id) {
                     continue;
                 }
                 ids.push(id);
-                codes.extend_from_slice(&seg.codes[row * cols..(row + 1) * cols]);
+                codes.extend_from_slice(&flat[row * cols..(row + 1) * cols]);
             }
         }
         let segments = if ids.is_empty() {
@@ -450,7 +452,8 @@ impl SegInner {
             }
         };
 
-        let hits: Vec<Vec<Hit>> = if nq == 1 && exec.threads() > 1 && nunits > 1 {
+        let fan_units = nq == 1 && exec.threads() > 1 && nunits > 1;
+        let hits: Vec<Vec<Hit>> = if fan_units {
             // single wide query: fan the units out instead of the batch —
             // one LUT build serves every segment (shared codebook)
             let owned;
@@ -476,8 +479,18 @@ impl SegInner {
                         &lbuf
                     }
                 };
-                let rows: Vec<Vec<Hit>> =
-                    (0..nunits).map(|u| scan_unit(u, luts_f32, scratch)).collect();
+                let rows: Vec<Vec<Hit>> = (0..nunits)
+                    .map(|u| {
+                        // hide the next unit's cold-page latency behind
+                        // this unit's scan (pays off on mapped segments)
+                        if u + 1 < nunits {
+                            if let Unit::Sealed(next) = units[u + 1] {
+                                crate::storage::prefetch_span(&next.packed.data);
+                            }
+                        }
+                        scan_unit(u, luts_f32, scratch)
+                    })
+                    .collect();
                 scratch.put_luts(lbuf);
                 merge_unit_rows(rows, req.kind)
             })
@@ -496,6 +509,20 @@ impl SegInner {
         } else {
             1.0
         };
+        let bytes_mapped: usize = units
+            .iter()
+            .map(|u| match u {
+                Unit::Sealed(seg) => seg.packed.mapped_bytes(),
+                Unit::Mem(_) => 0,
+            })
+            .sum();
+        // the unit fan-out scans segments concurrently, so "one ahead"
+        // prefetch only exists on the serial per-query walk
+        let prefetch_lists = if fan_units {
+            0
+        } else {
+            units.iter().skip(1).filter(|u| matches!(u, Unit::Sealed(_))).count()
+        };
         let mut stats = vec![
             QueryStats {
                 codes_scanned,
@@ -504,6 +531,8 @@ impl SegInner {
                 segments_scanned: nunits,
                 memtable_entries,
                 tombstones: ntomb,
+                bytes_mapped,
+                prefetch_lists,
                 ..Default::default()
             };
             nq
@@ -564,6 +593,7 @@ fn purge_segments(
             continue;
         }
         let cols = seg.code_cols();
+        let flat = seg.flat_codes();
         let mut ids = Vec::new();
         let mut codes = Vec::new();
         for (row, &id) in seg.ids.iter().enumerate() {
@@ -571,7 +601,7 @@ fn purge_segments(
                 continue;
             }
             ids.push(id);
-            codes.extend_from_slice(&seg.codes[row * cols..(row + 1) * cols]);
+            codes.extend_from_slice(&flat[row * cols..(row + 1) * cols]);
         }
         if !ids.is_empty() {
             out.push(Arc::new(SealedSegment::build(ids, codes, user_m, width)?));

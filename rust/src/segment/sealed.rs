@@ -11,6 +11,7 @@
 
 use crate::error::{Error, Result};
 use crate::pq::{CodeWidth, PackedCodes};
+use std::borrow::Cow;
 use std::collections::HashSet;
 
 /// One immutable segment of the stack: `n` rows, each with an external id
@@ -19,10 +20,12 @@ use std::collections::HashSet;
 pub struct SealedSegment {
     /// External ids, row order (kernel `labels` slice).
     pub ids: Vec<i64>,
-    /// Unpacked internal code columns (`n × code_cols`), kept for
-    /// compaction and persistence.
+    /// Unpacked internal code columns (`n × code_cols`). Empty for
+    /// segments loaded zero-copy from a mapped v3 file — use
+    /// [`SealedSegment::flat_codes`], which reverses the interleave on
+    /// demand, wherever row-major columns are needed.
     pub codes: Vec<u8>,
-    /// The kernel-ready packed block.
+    /// The kernel-ready packed block (heap-owned or a mapped window).
     pub packed: PackedCodes,
     /// Membership view of `ids` for O(1) tombstone admission checks.
     pub id_set: HashSet<i64>,
@@ -52,6 +55,24 @@ impl SealedSegment {
         Ok(Self { ids, codes, packed, id_set })
     }
 
+    /// Adopt an already-packed block (a mapped region of a v3 index file,
+    /// or a heap-loaded one) without materializing the row-major columns.
+    /// The packed geometry must agree with the id count.
+    pub fn from_packed(ids: Vec<i64>, packed: PackedCodes) -> Result<Self> {
+        if ids.is_empty() {
+            return Err(Error::InvalidParameter("segment: refusing to adopt 0 rows".into()));
+        }
+        if packed.n != ids.len() {
+            return Err(Error::CorruptIndex(format!(
+                "segment: {} ids but packed block holds {} rows",
+                ids.len(),
+                packed.n
+            )));
+        }
+        let id_set: HashSet<i64> = ids.iter().copied().collect();
+        Ok(Self { ids, codes: Vec::new(), packed, id_set })
+    }
+
     /// Rows in this segment.
     pub fn len(&self) -> usize {
         self.ids.len()
@@ -61,9 +82,22 @@ impl SealedSegment {
         self.ids.is_empty()
     }
 
-    /// Number of internal code columns per row.
+    /// Number of internal code columns per row (from the packed geometry,
+    /// which is present whether or not the flat columns are).
     pub fn code_cols(&self) -> usize {
-        self.codes.len() / self.ids.len()
+        self.packed.m_codes
+    }
+
+    /// Row-major internal code columns (`n × code_cols`): borrowed when
+    /// the segment kept them (built in-process), reconstructed from the
+    /// packed block when it did not (mapped zero-copy load). Compaction
+    /// and v2-era persistence go through this so they never care which.
+    pub fn flat_codes(&self) -> Cow<'_, [u8]> {
+        if self.codes.is_empty() && !self.ids.is_empty() {
+            Cow::Owned(self.packed.unpack())
+        } else {
+            Cow::Borrowed(&self.codes[..])
+        }
     }
 }
 
@@ -84,6 +118,26 @@ mod tests {
 
         assert!(SealedSegment::build(vec![], vec![], 4, CodeWidth::W4).is_err());
         assert!(SealedSegment::build(vec![1], vec![0u8; 3], 4, CodeWidth::W4).is_err());
+    }
+
+    #[test]
+    fn from_packed_derives_flat_codes() {
+        let ids: Vec<i64> = (0..10).collect();
+        let codes: Vec<u8> = (0..10 * 4).map(|i| (i % 16) as u8).collect();
+        let packed = PackedCodes::pack(&codes, 4, CodeWidth::W4).unwrap();
+        let seg = SealedSegment::from_packed(ids, packed).unwrap();
+        assert!(seg.codes.is_empty(), "adoption must not materialize columns");
+        assert_eq!(seg.code_cols(), 4);
+        assert_eq!(seg.flat_codes().as_ref(), &codes[..]);
+        assert!(seg.id_set.contains(&9));
+        // geometry disagreement is corrupt, not UB
+        let packed2 = PackedCodes::pack(&codes, 4, CodeWidth::W4).unwrap();
+        assert!(matches!(
+            SealedSegment::from_packed(vec![1, 2], packed2).unwrap_err(),
+            Error::CorruptIndex(_)
+        ));
+        let packed3 = PackedCodes::pack(&codes, 4, CodeWidth::W4).unwrap();
+        assert!(SealedSegment::from_packed(vec![], packed3).is_err());
     }
 
     #[test]

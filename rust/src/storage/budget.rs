@@ -1,0 +1,162 @@
+//! Residency policy and process-wide storage gauges.
+
+use super::mmap::Mmap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide storage gauges, surfaced by the coordinator's `stats`
+/// verb (see `coordinator/metrics.rs`). Maps update them on open/close;
+/// [`MemoryBudget`] updates the resident gauge through its advice calls.
+#[derive(Debug)]
+pub struct StorageCounters {
+    mapped_code_bytes: AtomicU64,
+    resident_code_bytes: AtomicU64,
+    mmap_open_total: AtomicU64,
+}
+
+impl StorageCounters {
+    /// Bytes currently memory-mapped (current gauge, not cumulative).
+    pub fn mapped_code_bytes(&self) -> u64 {
+        self.mapped_code_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently advised resident (WILLNEED) across live maps —
+    /// the budget-admitted working set, an upper-bound estimate of the
+    /// code pages this process asked the kernel to keep warm.
+    pub fn resident_code_bytes(&self) -> u64 {
+        self.resident_code_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Maps opened over the process lifetime (monotonic counter).
+    pub fn mmap_open_total(&self) -> u64 {
+        self.mmap_open_total.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn note_map_open(&self, len: usize) {
+        self.mmap_open_total.fetch_add(1, Ordering::Relaxed);
+        self.mapped_code_bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_map_close(&self, len: usize, resident: usize) {
+        self.mapped_code_bytes.fetch_sub(len as u64, Ordering::Relaxed);
+        self.resident_code_bytes.fetch_sub(resident as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_resident(&self, delta: i64) {
+        if delta >= 0 {
+            self.resident_code_bytes.fetch_add(delta as u64, Ordering::Relaxed);
+        } else {
+            self.resident_code_bytes.fetch_sub((-delta) as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The process-wide gauge registry.
+pub fn counters() -> &'static StorageCounters {
+    static COUNTERS: StorageCounters = StorageCounters {
+        mapped_code_bytes: AtomicU64::new(0),
+        resident_code_bytes: AtomicU64::new(0),
+        mmap_open_total: AtomicU64::new(0),
+    };
+    &COUNTERS
+}
+
+/// Residency policy for one mapped open: admit code regions (WILLNEED)
+/// in file order until the byte budget is spent, explicitly release
+/// (DONTNEED) everything past it. Without a cap every region is
+/// admitted.
+///
+/// The policy is advice, not enforcement — a query that touches
+/// non-admitted codes still works, it just pages them in on first scan.
+/// That is exactly the behaviour the budget-capped differential test
+/// pins down: capped opens answer bit-identically, only colder.
+#[derive(Debug)]
+pub struct MemoryBudget {
+    limit: Option<u64>,
+    admitted: u64,
+}
+
+impl MemoryBudget {
+    /// No cap: every code region is advised resident.
+    pub fn unlimited() -> Self {
+        Self { limit: None, admitted: 0 }
+    }
+
+    /// A cap in MiB (`None` = unlimited) — the `budget_mb=…` open option.
+    pub fn from_mb(mb: Option<u64>) -> Self {
+        Self { limit: mb.map(|m| m.saturating_mul(1024 * 1024)), admitted: 0 }
+    }
+
+    /// Bytes admitted (advised resident) so far.
+    pub fn admitted_bytes(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Apply the policy to one code region of `map`; returns how many of
+    /// its bytes were admitted.
+    pub fn admit_region(&mut self, map: &Mmap, offset: usize, len: usize) -> usize {
+        let take = match self.limit {
+            None => len,
+            Some(limit) => (limit.saturating_sub(self.admitted) as usize).min(len),
+        };
+        if take > 0 {
+            map.advise_resident(offset, take, true);
+            self.admitted += take as u64;
+        }
+        if take < len {
+            map.advise_resident(offset + take, len - take, false);
+        }
+        take
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_map(len: usize) -> (std::path::PathBuf, Mmap) {
+        let dir = std::env::temp_dir().join(format!("armpq_budget_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("b{len}.bin"));
+        std::fs::write(&path, vec![0xABu8; len]).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        (path, map)
+    }
+
+    #[test]
+    fn unlimited_admits_everything() {
+        let (path, map) = tmp_map(200_000);
+        let mut b = MemoryBudget::unlimited();
+        assert_eq!(b.admit_region(&map, 0, 150_000), 150_000);
+        assert_eq!(b.admit_region(&map, 150_000, 50_000), 50_000);
+        assert_eq!(b.admitted_bytes(), 200_000);
+        drop(map);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn capped_budget_stops_admitting() {
+        let (path, map) = tmp_map(4 * 1024 * 1024);
+        let mut b = MemoryBudget::from_mb(Some(1)); // 1 MiB
+        let first = b.admit_region(&map, 0, 3 * 1024 * 1024);
+        assert_eq!(first, 1024 * 1024, "cap ignored");
+        // budget exhausted: later regions are fully released
+        let second = b.admit_region(&map, 3 * 1024 * 1024, 1024 * 1024);
+        assert_eq!(second, 0);
+        assert_eq!(b.admitted_bytes(), 1024 * 1024);
+        drop(map);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn gauges_move_with_map_lifecycle() {
+        let before_mapped = counters().mapped_code_bytes();
+        let (path, map) = tmp_map(64 * 1024);
+        assert!(counters().mapped_code_bytes() >= before_mapped + 64 * 1024);
+        let mut b = MemoryBudget::unlimited();
+        b.admit_region(&map, 0, 64 * 1024);
+        drop(map);
+        // close subtracts both the mapped and the resident share
+        assert!(counters().mapped_code_bytes() >= before_mapped);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

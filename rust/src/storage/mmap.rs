@@ -1,0 +1,243 @@
+//! Read-only whole-file memory map with RAII unmap and best-effort
+//! residency advice.
+//!
+//! The crate is dependency-free, so on 64-bit unix targets the
+//! `mmap`/`munmap`/`madvise` bindings are declared by hand — std already
+//! links libc there, so they resolve without adding a crate. Every other
+//! target gets a transparent fallback that reads the file into the heap
+//! behind the same API (no zero-copy, but identical semantics).
+
+use super::budget::counters;
+use crate::{Error, Result};
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Advice alignment: `madvise` wants page-aligned addresses, and the
+/// largest page size in common use (aarch64 64K-page kernels) divides
+/// this, so rounding region starts down to a 64 KiB boundary is aligned
+/// on every supported host without querying the page size.
+const ADVISE_ALIGN: usize = 64 * 1024;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    // Hand-declared libc bindings (see the module doc for why).
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+        pub fn madvise(addr: *mut u8, len: usize, advice: i32) -> i32;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_SHARED: i32 = 1;
+    // identical numeric values on linux and the BSD family (incl. macOS)
+    pub const MADV_WILLNEED: i32 = 3;
+    pub const MADV_DONTNEED: i32 = 4;
+}
+
+/// An immutable, shareable memory map of one whole file.
+///
+/// On 64-bit unix this is a real `mmap(PROT_READ, MAP_SHARED)` — pages
+/// live in the page cache and are shared with every other process
+/// mapping the same file. Elsewhere it degrades to an owned heap copy
+/// with the same interface.
+#[derive(Debug)]
+pub struct Mmap {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    ptr: *const u8,
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    len: usize,
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    data: Vec<u8>,
+    /// Bytes this map has advised resident (WILLNEED) — subtracted from
+    /// the global gauge when the map drops.
+    advised_resident: AtomicUsize,
+}
+
+// The mapping is immutable (PROT_READ) for its whole lifetime, so
+// sharing the raw pointer across threads is sound.
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for Mmap {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only in its entirety.
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let map = Self::open_inner(path)?;
+        let c = counters();
+        c.note_map_open(map.len());
+        Ok(map)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn open_inner(path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(Error::CorruptIndex(format!("file length {len} overflows usize")));
+        }
+        let len = len as usize;
+        if len == 0 {
+            // mmap(len = 0) is EINVAL; an empty map needs no pages
+            return Ok(Mmap {
+                ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(),
+                len: 0,
+                advised_resident: AtomicUsize::new(0),
+            });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1
+        if ptr as usize == usize::MAX {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        Ok(Mmap { ptr, len, advised_resident: AtomicUsize::new(0) })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn open_inner(path: &Path) -> Result<Mmap> {
+        // fallback target: no zero-copy, but the same lifecycle and
+        // accounting so callers never need to special-case the host
+        let data = std::fs::read(path)?;
+        Ok(Mmap { data, advised_resident: AtomicUsize::new(0) })
+    }
+
+    pub fn len(&self) -> usize {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            self.len
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            self.data.len()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Advise the kernel about the residency of `[offset, offset+len)`:
+    /// `resident = true` → WILLNEED (fault ahead), `false` → DONTNEED
+    /// (drop clean pages now). Best-effort — a refusing kernel (e.g.
+    /// QEMU user mode) only costs the hint. Returns whether a hint was
+    /// actually issued, and keeps the global resident-bytes gauge in
+    /// sync either way.
+    pub fn advise_resident(&self, offset: usize, len: usize, resident: bool) -> bool {
+        let end = offset.saturating_add(len).min(self.len());
+        let offset = offset.min(self.len());
+        if end <= offset {
+            return false;
+        }
+        let span = end - offset;
+        if resident {
+            self.advised_resident.fetch_add(span, Ordering::Relaxed);
+            counters().note_resident(span as i64);
+        }
+        self.advise_sys(offset, end, resident)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn advise_sys(&self, offset: usize, end: usize, resident: bool) -> bool {
+        let start = offset & !(ADVISE_ALIGN - 1);
+        let advice = if resident { sys::MADV_WILLNEED } else { sys::MADV_DONTNEED };
+        let rc = unsafe { sys::madvise(self.ptr.add(start) as *mut u8, end - start, advice) };
+        rc == 0
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn advise_sys(&self, _offset: usize, _end: usize, _resident: bool) -> bool {
+        let _ = ADVISE_ALIGN;
+        false
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        unsafe {
+            std::slice::from_raw_parts(self.ptr, self.len)
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            &self.data
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        let c = counters();
+        c.note_map_close(self.len(), self.advised_resident.load(Ordering::Relaxed));
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len > 0 {
+            unsafe {
+                sys::munmap(self.ptr as *mut u8, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_file(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("armpq_mmap_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.bin");
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_contents_exactly() {
+        let bytes: Vec<u8> = (0..100_000u32).map(|i| (i * 7 % 251) as u8).collect();
+        let path = tmp_file("exact", &bytes);
+        let opens_before = counters().mmap_open_total();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.len(), bytes.len());
+        assert_eq!(&map[..], &bytes[..]);
+        assert!(counters().mmap_open_total() > opens_before);
+        // advice is best-effort but must never corrupt the mapping
+        map.advise_resident(0, 4096, true);
+        map.advise_resident(4096, map.len(), false);
+        assert_eq!(&map[..], &bytes[..]);
+        drop(map);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp_file("empty", &[]);
+        let map = Mmap::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(&map[..], &[] as &[u8]);
+        assert!(!map.advise_resident(0, 10, true));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let path = std::env::temp_dir().join("armpq_mmap_definitely_missing.bin");
+        assert!(Mmap::open(&path).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Zero-copy storage layer: memory-mapped code regions, residency
+//! budgeting, and software prefetch for the scan loop.
+//!
+//! # Why this layer exists
+//!
+//! The fastscan kernels assume their packed code blocks are resident; at
+//! billion-vector scale nothing above this layer can afford to *make*
+//! them resident by copying every segment into the heap at load time.
+//! Format v3 (see [`crate::index::io`]) therefore lays packed code
+//! regions out 64-byte-aligned inside the index file so a loader can
+//! [`Mmap`] the file once and hand each region to the kernels in place —
+//! page-cache pages are shared across processes, opens are O(metadata),
+//! and the OS pages codes in on first scan instead of up front.
+//!
+//! # The Owned/Mapped ownership model
+//!
+//! [`CodeStore`] is the single ownership abstraction under
+//! [`crate::pq::PackedCodes`]:
+//!
+//! * `Owned(Vec<u8>)` — built in memory (`pack`) or heap-loaded; the
+//!   historical behaviour, still the default.
+//! * `Mapped { map, offset, len }` — a window into a shared [`Mmap`] of
+//!   the index file. Cloning clones an `Arc`, not the bytes, so one
+//!   mapped file backs every segment of a loaded index.
+//!
+//! Both deref to `&[u8]`, so the kernels (and every existing test that
+//! indexes `packed.data[..]`) are oblivious to where the bytes live.
+//!
+//! # Why alignment is load-bearing
+//!
+//! The dual-lane kernels consume codes in 32-vector blocks of
+//! `lut_rows × 16` bytes through 128-bit table-lookup instructions
+//! (`pshufb` / `vqtbl1q_u8`). A block that straddles a cache line costs
+//! an extra fill per shuffle on in-order ARM cores, and unaligned SIMD
+//! loads forfeit the single-µop fast path on several Neoverse
+//! generations. v3 pads every code region to a 64-byte boundary —
+//! combined with the page-aligned base address `mmap` guarantees, every
+//! block starts on a cache-line boundary, mapped or heap-loaded alike.
+//!
+//! # Residency: [`MemoryBudget`] and prefetch
+//!
+//! A mapped index larger than RAM needs residency *policy*, not hope:
+//! [`MemoryBudget`] walks the code regions at open time and advises the
+//! kernel (`madvise(WILLNEED)`) up to the configured budget, explicitly
+//! releasing the remainder (`DONTNEED`) so a capped open never evicts
+//! the hot set to warm the cold one. At query time the scan loop issues
+//! software prefetch ([`prefetch_span`]) for the *next* probed list one
+//! list ahead, hiding page-in and cache-fill latency behind the current
+//! list's arithmetic. Global gauges ([`counters`]) expose
+//! `mapped_code_bytes` / `resident_code_bytes` / `mmap_open_total` to
+//! the coordinator's `stats` verb.
+
+mod budget;
+mod mmap;
+mod prefetch;
+mod store;
+
+pub use budget::{counters, MemoryBudget, StorageCounters};
+pub use mmap::Mmap;
+pub use prefetch::{prefetch_read, prefetch_span, PREFETCH_SPAN_BYTES};
+pub use store::CodeStore;
+
+use crate::{Error, Result};
+
+/// How an index file should be opened: heap-copied (the default, always
+/// available) or memory-mapped with an optional residency budget.
+///
+/// Parsed from trailing `key=value` factory-string parts
+/// (`"IVF100,PQ16x4fs,mmap=true,budget_mb=512"`) and from coordinator
+/// config keys of the same names. `budget_mb` only applies to mapped
+/// opens; a heap open always materializes everything.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpenOptions {
+    /// Map code regions zero-copy instead of reading them into the heap.
+    pub mmap: bool,
+    /// Residency budget in MiB for mapped code regions (`None` =
+    /// unlimited: advise everything resident).
+    pub budget_mb: Option<u64>,
+}
+
+impl OpenOptions {
+    /// Heap-loading options (the v1/v2-compatible default).
+    pub fn heap() -> Self {
+        Self::default()
+    }
+
+    /// Zero-copy mapped open with no residency cap.
+    pub fn mapped() -> Self {
+        Self { mmap: true, budget_mb: None }
+    }
+
+    /// Try to consume one `key=value` pair. Returns `Ok(true)` when the
+    /// key is a storage option (`mmap` / `budget_mb`), `Ok(false)` when
+    /// it belongs to someone else, and an error for a storage key with
+    /// an unparseable value.
+    pub fn assign(&mut self, key: &str, value: &str) -> Result<bool> {
+        match key {
+            "mmap" => {
+                self.mmap = value.parse::<bool>().map_err(|_| {
+                    Error::InvalidParameter(format!("mmap={value} (expected true|false)"))
+                })?;
+                Ok(true)
+            }
+            "budget_mb" => {
+                let mb = value.parse::<u64>().map_err(|_| {
+                    Error::InvalidParameter(format!("budget_mb={value} (expected an integer)"))
+                })?;
+                self.budget_mb = Some(mb);
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// The residency budget these options imply for one open.
+    pub fn budget(&self) -> MemoryBudget {
+        MemoryBudget::from_mb(self.budget_mb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_options_assign() {
+        let mut o = OpenOptions::default();
+        assert!(!o.mmap);
+        assert!(o.assign("mmap", "true").unwrap());
+        assert!(o.assign("budget_mb", "64").unwrap());
+        assert_eq!(o, OpenOptions { mmap: true, budget_mb: Some(64) });
+        // non-storage keys are left for the caller
+        assert!(!o.assign("nprobe", "8").unwrap());
+        // bad values on storage keys are hard errors
+        assert!(o.assign("mmap", "maybe").is_err());
+        assert!(o.assign("budget_mb", "lots").is_err());
+    }
+}

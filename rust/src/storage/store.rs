@@ -1,0 +1,176 @@
+//! [`CodeStore`]: where packed code bytes live — heap or mapped file.
+
+use super::mmap::Mmap;
+use crate::{Error, Result};
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Ownership of one packed-code region.
+///
+/// `Owned` is the historical behaviour: codes packed in memory or copied
+/// out of an index file. `Mapped` is a window into a shared read-only
+/// [`Mmap`] of a v3 index file — cloning bumps an `Arc`, the bytes stay
+/// in the page cache, and every process mapping the same file shares
+/// them. Both deref to `&[u8]`, so kernel code never branches on the
+/// variant.
+#[derive(Clone)]
+pub enum CodeStore {
+    Owned(Vec<u8>),
+    Mapped { map: Arc<Mmap>, offset: usize, len: usize },
+}
+
+impl CodeStore {
+    /// A bounds-checked window into `map`. v3 regions are 64-byte
+    /// aligned in the file; the offset check turns a corrupt header into
+    /// a clean error instead of an out-of-bounds slice later.
+    pub fn from_mapped(map: Arc<Mmap>, offset: usize, len: usize) -> Result<CodeStore> {
+        let end = offset.checked_add(len).ok_or_else(|| {
+            Error::CorruptIndex(format!("code region {offset}+{len} overflows"))
+        })?;
+        if end > map.len() {
+            return Err(Error::CorruptIndex(format!(
+                "code region [{offset}, {end}) exceeds mapped file of {} bytes",
+                map.len()
+            )));
+        }
+        Ok(CodeStore::Mapped { map, offset, len })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            CodeStore::Owned(v) => v.len(),
+            CodeStore::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether these bytes are served zero-copy from a mapped file.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, CodeStore::Mapped { .. })
+    }
+
+    /// Bytes backed by a mapped file (0 for `Owned`) — feeds the
+    /// `bytes_mapped` query stat.
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            CodeStore::Owned(_) => 0,
+            CodeStore::Mapped { len, .. } => *len,
+        }
+    }
+
+    /// The backing map, if any — used by the residency policy at open
+    /// time to advise this region's pages.
+    pub fn mapped_region(&self) -> Option<(&Arc<Mmap>, usize, usize)> {
+        match self {
+            CodeStore::Owned(_) => None,
+            CodeStore::Mapped { map, offset, len } => Some((map, *offset, *len)),
+        }
+    }
+}
+
+impl Deref for CodeStore {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            CodeStore::Owned(v) => v,
+            CodeStore::Mapped { map, offset, len } => &map[*offset..*offset + *len],
+        }
+    }
+}
+
+impl Default for CodeStore {
+    fn default() -> Self {
+        CodeStore::Owned(Vec::new())
+    }
+}
+
+impl From<Vec<u8>> for CodeStore {
+    fn from(v: Vec<u8>) -> Self {
+        CodeStore::Owned(v)
+    }
+}
+
+impl std::fmt::Debug for CodeStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodeStore::Owned(v) => write!(f, "CodeStore::Owned({} bytes)", v.len()),
+            CodeStore::Mapped { offset, len, .. } => {
+                write!(f, "CodeStore::Mapped({len} bytes @ {offset})")
+            }
+        }
+    }
+}
+
+// Equality is by content: a mapped region equals the owned copy of the
+// same bytes, which is exactly what the differential tests assert.
+impl PartialEq for CodeStore {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+impl Eq for CodeStore {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_map(bytes: &[u8]) -> (std::path::PathBuf, Arc<Mmap>) {
+        let dir = std::env::temp_dir().join(format!("armpq_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("s{}.bin", bytes.len()));
+        std::fs::write(&path, bytes).unwrap();
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        (path, map)
+    }
+
+    #[test]
+    fn owned_and_mapped_deref_identically() {
+        let bytes: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let owned = CodeStore::from(bytes.clone());
+        let (path, map) = tmp_map(&bytes);
+        let mapped = CodeStore::from_mapped(map, 0, bytes.len()).unwrap();
+        assert_eq!(&owned[..], &bytes[..]);
+        assert_eq!(&mapped[..], &bytes[..]);
+        assert_eq!(owned, mapped);
+        assert!(!owned.is_mapped());
+        assert!(mapped.is_mapped());
+        assert_eq!(owned.mapped_bytes(), 0);
+        assert_eq!(mapped.mapped_bytes(), bytes.len());
+        // windowed view
+        let window = CodeStore::from_mapped(
+            mapped.mapped_region().unwrap().0.clone(),
+            100,
+            200,
+        )
+        .unwrap();
+        assert_eq!(&window[..], &bytes[100..300]);
+        drop(mapped);
+        drop(window);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mapped_window_is_bounds_checked() {
+        let (path, map) = tmp_map(&[0u8; 128]);
+        assert!(CodeStore::from_mapped(map.clone(), 0, 129).is_err());
+        assert!(CodeStore::from_mapped(map.clone(), 64, 65).is_err());
+        assert!(CodeStore::from_mapped(map.clone(), usize::MAX, 2).is_err());
+        assert!(CodeStore::from_mapped(map, 128, 0).is_ok()); // empty tail is fine
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn clone_shares_the_map() {
+        let (path, map) = tmp_map(&[7u8; 256]);
+        let a = CodeStore::from_mapped(map.clone(), 0, 256).unwrap();
+        let b = a.clone();
+        drop(map);
+        assert_eq!(&a[..], &b[..]);
+        assert_eq!(format!("{a:?}"), "CodeStore::Mapped(256 bytes @ 0)");
+        drop((a, b));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1317,3 +1317,338 @@ fn segment_factory_trait_object_flow() {
         assert!(hits.iter().all(|h| h.label > 2), "{hits:?}");
     }
 }
+
+// ---------------------------------------------------------------------------
+// storage_: zero-copy mmap loading vs heap loading, differentially.
+//
+// Format v3 lays packed code regions out 64-byte-aligned so a mapped open
+// can hand them to the kernels in place. These tests hold the storage
+// layer to the only spec that matters: a mapped index is *bit-identical*
+// to a heap-loaded one under every backend, width, query kind and filter,
+// and a damaged file fails cleanly instead of answering wrong.
+// ---------------------------------------------------------------------------
+
+fn storage_tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("armpq_storage_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run every (backend × kind × filter) combination against two indexes
+/// and demand bit-identical responses plus the expected mapped-bytes
+/// accounting on the mapped side.
+fn storage_assert_differential(
+    heap: &dyn Index,
+    mapped: &dyn Index,
+    queries: &[f32],
+    radius: f32,
+    tag: &str,
+) {
+    for backend in armpq::simd::available_backends() {
+        let params = SearchParams::new().with_backend(backend);
+        for kind in [QueryKind::TopK { k: 10 }, QueryKind::Range { radius }] {
+            for filter in [None, Some(Filter::id_range(3, 700))] {
+                let req = QueryRequest {
+                    queries,
+                    kind,
+                    filter: filter.clone(),
+                    params: Some(params.clone()),
+                };
+                let h = heap.query(&req).unwrap();
+                let m = mapped.query(&req).unwrap();
+                assert_eq!(h.hits, m.hits, "{tag} {backend:?} {kind:?} filter={:?}", filter.is_some());
+                assert!(
+                    h.stats.iter().all(|s| s.bytes_mapped == 0),
+                    "{tag}: heap load reported mapped bytes"
+                );
+                assert!(
+                    m.stats.iter().all(|s| s.bytes_mapped > 0),
+                    "{tag}: mapped load reported no mapped bytes"
+                );
+            }
+        }
+    }
+}
+
+/// Flat fastscan: save v3, reopen heap + mapped across all three widths;
+/// the mapped code block must be a zero-copy 64-byte-aligned window and
+/// every query surface must agree bit-for-bit.
+#[test]
+fn storage_mmap_heap_differential_flat() {
+    use armpq::index::io::{load_pq4fs_with, save_pq4fs};
+    use armpq::index::IndexPq4FastScan;
+    use armpq::pq::CodeWidth;
+    use armpq::storage::OpenOptions;
+    let ds = SyntheticDataset::gaussian(900, 4, 32, 1501);
+    let dir = storage_tmpdir("flat");
+    let opens_before = armpq::storage::counters().mmap_open_total();
+    for width in CodeWidth::ALL {
+        let mut idx = IndexPq4FastScan::new_width(ds.dim, 8, width);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        let path = dir.join(format!("flat_{width}.idx"));
+        save_pq4fs(&idx, &path).unwrap();
+
+        let heap = load_pq4fs_with(&path, &OpenOptions::heap()).unwrap();
+        let mapped = load_pq4fs_with(&path, &OpenOptions::mapped()).unwrap();
+        let packed = mapped.packed().unwrap();
+        assert!(packed.data.is_mapped(), "{width}");
+        assert_eq!(packed.data[..].as_ptr() as usize % 64, 0, "{width}: unaligned code region");
+        assert!(packed.mapped_bytes() > 0, "{width}");
+        assert!(heap.packed().unwrap().mapped_bytes() == 0, "{width}");
+
+        let probe = heap.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 90)).unwrap();
+        let radius = probe.hits[0].last().unwrap().distance;
+        storage_assert_differential(&heap, &mapped, &ds.queries, radius, &format!("flat {width}"));
+    }
+    assert!(
+        armpq::storage::counters().mmap_open_total() >= opens_before + 3,
+        "mapped opens not counted"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// IVF fastscan: per-list packed regions load zero-copy and answer
+/// identically to the heap load across widths, backends, kinds, filters.
+#[test]
+fn storage_mmap_heap_differential_ivf() {
+    use armpq::index::io::{load_ivfpq4_with, save_ivfpq4};
+    use armpq::index::IndexIvfPq4;
+    use armpq::pq::CodeWidth;
+    use armpq::storage::OpenOptions;
+    let ds = SyntheticDataset::gaussian(1_200, 4, 32, 1502);
+    let dir = storage_tmpdir("ivf");
+    for width in CodeWidth::ALL {
+        let mut idx = IndexIvfPq4::new_width(ds.dim, 12, 8, width, false, 32);
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        idx.set_param("nprobe", "12").unwrap();
+        let path = dir.join(format!("ivf_{width}.idx"));
+        save_ivfpq4(idx.inner(), &path).unwrap();
+
+        let mut heap =
+            IndexIvfPq4::from_inner(load_ivfpq4_with(&path, &OpenOptions::heap()).unwrap());
+        let mut mapped =
+            IndexIvfPq4::from_inner(load_ivfpq4_with(&path, &OpenOptions::mapped()).unwrap());
+        // probe everything so the differential exercises every list
+        heap.set_param("nprobe", "12").unwrap();
+        mapped.set_param("nprobe", "12").unwrap();
+        // every non-empty list is a mapped, cache-line-aligned window
+        for c in 0..12 {
+            if let Some(p) = mapped.inner().list_packed(c) {
+                assert!(p.data.is_mapped(), "{width} list {c}");
+                assert_eq!(p.data[..].as_ptr() as usize % 64, 0, "{width} list {c}");
+            }
+        }
+        let probe = heap.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 90)).unwrap();
+        let radius = probe.hits[0].last().unwrap().distance;
+        storage_assert_differential(&heap, &mapped, &ds.queries, radius, &format!("ivf {width}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Segmented: a multi-segment index with tombstones round-trips through
+/// v3, answers identically mapped vs heap, and stays *writable* after a
+/// zero-copy open (mapped rows must survive the next flush).
+#[test]
+fn storage_mmap_heap_differential_segmented() {
+    use armpq::index::io::{load_segmented_with, save_segmented};
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    use armpq::storage::OpenOptions;
+    let ds = SyntheticDataset::gaussian(600, 4, 32, 1503);
+    let dir = storage_tmpdir("seg");
+    let mut seg = SegmentedIndex::new(
+        ds.dim,
+        8,
+        armpq::pq::CodeWidth::W4,
+        SegmentedParams { flush_threshold: 150, max_segments: 8 },
+    )
+    .unwrap();
+    seg.train(&ds.train).unwrap();
+    seg.insert(&ds.base, None).unwrap();
+    seg.delete(&(0..60).step_by(3).collect::<Vec<i64>>()).unwrap();
+    seg.flush().unwrap();
+    let path = dir.join("seg.idx");
+    save_segmented(&seg, &path).unwrap();
+
+    let heap = load_segmented_with(&path, &OpenOptions::heap()).unwrap();
+    let mapped = load_segmented_with(&path, &OpenOptions::mapped()).unwrap();
+    assert_eq!(heap.ntotal(), mapped.ntotal());
+    let probe = heap.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 60)).unwrap();
+    let radius = probe.hits[0].last().unwrap().distance;
+    storage_assert_differential(&heap, &mapped, &ds.queries, radius, "segmented");
+
+    // a mapped index keeps streaming: new rows land next to mapped
+    // segments and compaction rematerializes mapped codes losslessly
+    let before = mapped.ntotal();
+    mapped.insert(&ds.base[..4 * ds.dim], Some(&[9001, 9002, 9003, 9004])).unwrap();
+    mapped.flush().unwrap();
+    mapped.compact().unwrap();
+    assert_eq!(mapped.ntotal(), before + 4);
+    let r = mapped.query(&QueryRequest::top_k(&ds.base[..ds.dim], 5)).unwrap();
+    assert!(r.hits[0].iter().any(|h| h.label == 9001), "{:?}", r.hits[0]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Truncations at every section boundary (and a few unaligned offsets)
+/// plus corrupted magic must all fail with `Error::CorruptIndex` — never
+/// panic, never return a half-loaded index — under heap and mapped opens.
+#[test]
+fn storage_truncated_and_corrupt_files_fail_cleanly() {
+    use armpq::index::io::{load_pq4fs_with, open_index, save_pq4fs};
+    use armpq::index::IndexPq4FastScan;
+    use armpq::storage::OpenOptions;
+    let ds = SyntheticDataset::gaussian(400, 2, 16, 1504);
+    let dir = storage_tmpdir("corrupt");
+    let mut idx = IndexPq4FastScan::new(ds.dim, 8);
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let path = dir.join("flat.idx");
+    save_pq4fs(&idx, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    let cut = dir.join("cut.idx");
+    for len in [0usize, 4, 7, 8, 12, 16, 40, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&cut, &bytes[..len]).unwrap();
+        for opts in [OpenOptions::heap(), OpenOptions::mapped()] {
+            match load_pq4fs_with(&cut, &opts) {
+                Err(armpq::Error::CorruptIndex(_)) => {}
+                other => panic!("truncate@{len} opts={opts:?}: {:?}", other.map(|_| ())),
+            }
+        }
+    }
+    // flipped magic: rejected by the typed loader and by open_index
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    std::fs::write(&cut, &bad).unwrap();
+    assert!(matches!(
+        load_pq4fs_with(&cut, &OpenOptions::heap()),
+        Err(armpq::Error::CorruptIndex(_))
+    ));
+    assert!(matches!(
+        open_index(&cut, &OpenOptions::mapped()),
+        Err(armpq::Error::CorruptIndex(_))
+    ));
+    // and no half-written temp files ever survive a save
+    assert!(std::fs::read_dir(&dir)
+        .unwrap()
+        .all(|e| !e.unwrap().file_name().to_string_lossy().ends_with(".tmp")));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A budget-capped mapped open (1 MiB — far below the code region) must
+/// still answer bit-identically: the budget controls *residency advice*,
+/// never correctness.
+#[test]
+fn storage_budget_capped_open_is_correct() {
+    use armpq::index::io::{load_pq4fs_with, save_pq4fs};
+    use armpq::index::IndexPq4FastScan;
+    use armpq::storage::OpenOptions;
+    let ds = SyntheticDataset::gaussian(2_000, 4, 32, 1505);
+    let dir = storage_tmpdir("budget");
+    let mut idx = IndexPq4FastScan::new(ds.dim, 16);
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let path = dir.join("flat.idx");
+    save_pq4fs(&idx, &path).unwrap();
+
+    let heap = load_pq4fs_with(&path, &OpenOptions::heap()).unwrap();
+    for budget_mb in [0u64, 1] {
+        let capped = load_pq4fs_with(
+            &path,
+            &OpenOptions { mmap: true, budget_mb: Some(budget_mb) },
+        )
+        .unwrap();
+        assert!(capped.packed().unwrap().data.is_mapped());
+        let a = heap.query(&QueryRequest::top_k(&ds.queries, 10)).unwrap();
+        let b = capped.query(&QueryRequest::top_k(&ds.queries, 10)).unwrap();
+        assert_eq!(a.hits, b.hits, "budget_mb={budget_mb}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// v3 saves are stable fixed points: save → load (heap and mapped) →
+/// save again produces byte-identical files, so re-saving a loaded index
+/// never silently rewrites or migrates content.
+#[test]
+fn storage_v3_roundtrip_is_idempotent() {
+    use armpq::index::io::{load_pq4fs_with, save_pq4fs};
+    use armpq::index::IndexPq4FastScan;
+    use armpq::storage::OpenOptions;
+    let ds = SyntheticDataset::gaussian(500, 2, 32, 1506);
+    let dir = storage_tmpdir("fixpoint");
+    let mut idx = IndexPq4FastScan::new(ds.dim, 8);
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let p1 = dir.join("a.idx");
+    save_pq4fs(&idx, &p1).unwrap();
+    for opts in [OpenOptions::heap(), OpenOptions::mapped()] {
+        let loaded = load_pq4fs_with(&p1, &opts).unwrap();
+        let p2 = dir.join("b.idx");
+        save_pq4fs(&loaded, &p2).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "re-save after {opts:?} load changed bytes"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The generic `open_index` entry point dispatches every v3 kind and
+/// respects open options — the path `serve --index-file` takes.
+#[test]
+fn storage_open_index_dispatches_kinds() {
+    use armpq::index::io::{open_index, save_ivfpq4, save_pq4fs, save_segmented};
+    use armpq::index::{IndexIvfPq4, IndexPq4FastScan};
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    use armpq::storage::OpenOptions;
+    let ds = SyntheticDataset::gaussian(500, 4, 32, 1507);
+    let dir = storage_tmpdir("open");
+
+    let mut flat = IndexPq4FastScan::new(ds.dim, 8);
+    flat.train(&ds.train).unwrap();
+    flat.add(&ds.base).unwrap();
+    flat.seal().unwrap();
+    save_pq4fs(&flat, &dir.join("flat.idx")).unwrap();
+
+    let mut ivf = IndexIvfPq4::new_width(ds.dim, 8, 8, armpq::pq::CodeWidth::W4, false, 32);
+    ivf.train(&ds.train).unwrap();
+    ivf.add(&ds.base).unwrap();
+    ivf.seal().unwrap();
+    save_ivfpq4(ivf.inner(), &dir.join("ivf.idx")).unwrap();
+
+    let mut seg = SegmentedIndex::new(
+        ds.dim,
+        8,
+        armpq::pq::CodeWidth::W4,
+        SegmentedParams { flush_threshold: 200, max_segments: 8 },
+    )
+    .unwrap();
+    seg.train(&ds.train).unwrap();
+    seg.insert(&ds.base, None).unwrap();
+    seg.flush().unwrap();
+    save_segmented(&seg, &dir.join("seg.idx")).unwrap();
+
+    for (name, describe_frag) in [("flat.idx", "PQ8x4fs"), ("ivf.idx", "IVF8"), ("seg.idx", "SEG")]
+    {
+        for opts in [OpenOptions::heap(), OpenOptions::mapped()] {
+            let opened = open_index(&dir.join(name), &opts).unwrap();
+            assert_eq!(opened.ntotal(), 500, "{name} {opts:?}");
+            assert!(
+                opened.describe().contains(describe_frag),
+                "{name}: {}",
+                opened.describe()
+            );
+            let r = opened.query(&QueryRequest::top_k(&ds.queries, 5)).unwrap();
+            assert_eq!(r.nq(), ds.nq(), "{name} {opts:?}");
+            assert!(r.hits.iter().all(|row| !row.is_empty()), "{name} {opts:?}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
