@@ -22,6 +22,7 @@ use super::metrics::Metrics;
 use super::service::SearchBackend;
 use crate::index::query::{pad_hits, Filter, QueryKind, QueryRequest, QueryStats};
 use crate::index::SearchParams;
+use crate::obs::TraceSpan;
 use crate::Result;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -34,6 +35,11 @@ pub struct PendingQuery {
     /// Part of the batching key (exact equality), like `kind` and `params`.
     pub filter: Option<Filter>,
     pub params: Option<SearchParams>,
+    /// Collect per-phase trace spans for this query. NOT part of the
+    /// batching key: tracing never changes results (bit-identity
+    /// invariant), so traced and untraced requests share a group and the
+    /// group runs traced if ANY member asked.
+    pub trace: bool,
     pub enqueued: Instant,
     pub reply: SyncSender<Result<ServeResponse>>,
 }
@@ -54,6 +60,9 @@ pub struct ServeResponse {
     pub service_us: u64,
     /// How many queries shared the batch.
     pub batch_size: usize,
+    /// Per-phase spans for this query (empty unless the request asked
+    /// for tracing).
+    pub trace: Vec<TraceSpan>,
 }
 
 /// Batching policy knobs.
@@ -112,6 +121,19 @@ impl Batcher {
         filter: Option<Filter>,
         params: Option<SearchParams>,
     ) -> Receiver<Result<ServeResponse>> {
+        self.submit_query_traced(vector, kind, filter, params, false)
+    }
+
+    /// Enqueue a typed query, optionally requesting per-phase trace spans
+    /// in the response; returns the reply receiver.
+    pub fn submit_query_traced(
+        &self,
+        vector: Vec<f32>,
+        kind: QueryKind,
+        filter: Option<Filter>,
+        params: Option<SearchParams>,
+        trace: bool,
+    ) -> Receiver<Result<ServeResponse>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.metrics.requests_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         // normalize Some(no overrides) to None so it batches with bare
@@ -122,6 +144,7 @@ impl Batcher {
             kind,
             filter,
             params,
+            trace,
             enqueued: Instant::now(),
             reply: reply_tx,
         };
@@ -159,6 +182,20 @@ impl Batcher {
         params: Option<SearchParams>,
     ) -> Result<ServeResponse> {
         self.submit_query(vector, kind, filter, params)
+            .recv()
+            .map_err(|_| crate::Error::Serve("batcher shut down".into()))?
+    }
+
+    /// Convenience: submit a traced typed query and wait. The response's
+    /// `trace` holds the per-phase spans for this query.
+    pub fn query_traced(
+        &self,
+        vector: Vec<f32>,
+        kind: QueryKind,
+        filter: Option<Filter>,
+        params: Option<SearchParams>,
+    ) -> Result<ServeResponse> {
+        self.submit_query_traced(vector, kind, filter, params, true)
             .recv()
             .map_err(|_| crate::Error::Serve("batcher shut down".into()))?
     }
@@ -240,7 +277,10 @@ fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<Pend
         for r in &group {
             queries.extend_from_slice(&r.vector);
         }
-        let req = QueryRequest { queries: &queries, kind, filter, params };
+        // Tracing is bit-identical, so the group runs traced if ANY member
+        // asked; spans are handed back only to the members that did.
+        let group_trace = group.iter().any(|r| r.trace);
+        let req = QueryRequest { queries: &queries, kind, filter, params, trace: group_trace };
         let t0 = Instant::now();
         let result = backend.query_batch(&req);
         let service_us = t0.elapsed().as_micros() as u64;
@@ -259,6 +299,26 @@ fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<Pend
                     if stats.codes_scanned > 0 {
                         metrics.record_query_stats(&stats);
                     }
+                    let trace = if group_trace {
+                        resp.traces.get(i).cloned().unwrap_or_default()
+                    } else {
+                        Vec::new()
+                    };
+                    if !trace.is_empty() {
+                        metrics.record_trace(&trace);
+                    }
+                    // every query is a slowlog candidate; the trace rides
+                    // along when present so the worst entries come with a
+                    // phase breakdown for free
+                    metrics.record_slow(
+                        queue_us + service_us,
+                        match kind {
+                            QueryKind::TopK { .. } => "topk",
+                            QueryKind::Range { .. } => "range",
+                        },
+                        1,
+                        &trace,
+                    );
                     // top-k keeps the legacy padded wire shape; range hits
                     // are inherently variable-length
                     let (distances, labels) = match kind {
@@ -275,6 +335,7 @@ fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<Pend
                         queue_us,
                         service_us,
                         batch_size,
+                        trace: if r.trace { trace } else { Vec::new() },
                     };
                     let _ = r.reply.send(Ok(out));
                 }
@@ -479,6 +540,7 @@ mod tests {
             Ok(QueryResponse {
                 hits: vec![vec![Hit { distance: 0.0, label: tag }]; nq],
                 stats: vec![QueryStats::default(); nq],
+                traces: Vec::new(),
             })
         }
         fn describe(&self) -> String {

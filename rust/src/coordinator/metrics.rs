@@ -1,22 +1,35 @@
-//! Serving metrics: lock-free counters + latency histograms, JSON export.
+//! Serving metrics: lock-free counters + latency histograms, JSON and
+//! Prometheus text exposition, per-phase profiling fed by completed
+//! [`crate::obs::TraceSpan`]s, and a bounded slow-query log.
 
+use crate::obs::{Phase, TraceSpan, NUM_PHASES};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Fixed-bucket microsecond histogram (powers of two from 1 µs to ~8 s).
+/// Number of power-of-two buckets: values from 1 up to `2^24` (~16.7M —
+/// ~16.7 s when the unit is µs, or 16M codes when it's a count).
+const BUCKETS: usize = 24;
+
+/// Fixed-bucket power-of-two histogram. The unit is whatever the caller
+/// records — microseconds for the latency families, plain counts for
+/// `codes_scanned` and batch occupancy. Bucket `i` holds values in
+/// `[2^i, 2^(i+1))` (bucket 0 also absorbs 0).
 #[derive(Debug, Default)]
-pub struct UsHistogram {
-    buckets: [AtomicU64; 24],
-    sum_us: AtomicU64,
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
     count: AtomicU64,
 }
 
-impl UsHistogram {
-    pub fn record(&self, us: u64) {
-        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(23);
+/// Historical name: every original family recorded microseconds.
+pub type UsHistogram = Histogram;
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        let b = (64 - v.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.buckets[b].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -24,31 +37,94 @@ impl UsHistogram {
         self.count.load(Ordering::Relaxed)
     }
 
-    pub fn mean_us(&self) -> f64 {
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
         let c = self.count();
         if c == 0 {
             0.0
         } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+            self.sum() as f64 / c as f64
         }
     }
 
-    /// Approximate percentile from bucket upper bounds.
-    pub fn percentile_us(&self, p: f64) -> f64 {
+    /// Approximate percentile, linearly interpolated **within** the
+    /// winning bucket (rank position between the bucket's bounds) rather
+    /// than snapped to its upper bound — the upper-bound snap
+    /// overestimated every percentile by up to 2×.
+    pub fn percentile(&self, p: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let target = (p / 100.0 * total as f64).ceil().max(1.0);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return (1u64 << (i + 1)) as f64; // bucket upper bound
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
             }
+            if (seen + c) as f64 >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = (target - seen as f64) / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            seen += c;
         }
-        (1u64 << 24) as f64
+        (1u64 << BUCKETS) as f64
     }
+
+    /// [`Histogram::mean`] under the historical microsecond-family name.
+    pub fn mean_us(&self) -> f64 {
+        self.mean()
+    }
+
+    /// [`Histogram::percentile`] under the historical name.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        self.percentile(p)
+    }
+
+    /// Append this histogram in Prometheus text exposition (cumulative
+    /// `_bucket{le=…}` lines + `_sum`/`_count`). `labels` is either empty
+    /// or a `key="value"` pair to merge into every bucket's label set.
+    fn write_prometheus(&self, out: &mut String, name: &str, labels: &str) {
+        use std::fmt::Write;
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{{labels}{sep}le=\"{}\"}} {cum}",
+                1u64 << (i + 1)
+            );
+        }
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", self.count());
+        if labels.is_empty() {
+            let _ = writeln!(out, "{name}_sum {}", self.sum());
+            let _ = writeln!(out, "{name}_count {}", self.count());
+        } else {
+            let _ = writeln!(out, "{name}_sum{{{labels}}} {}", self.sum());
+            let _ = writeln!(out, "{name}_count{{{labels}}} {}", self.count());
+        }
+    }
+}
+
+/// How many worst-by-latency queries the slow-query log retains.
+pub const SLOWLOG_CAPACITY: usize = 8;
+
+/// One retained slow query: its end-to-end latency, the request shape,
+/// and the full phase trace (when the query ran traced; empty otherwise).
+#[derive(Clone, Debug)]
+pub struct SlowQuery {
+    pub e2e_us: u64,
+    /// `"topk"` / `"range"` (matches the wire verbs).
+    pub kind: String,
+    pub nq: usize,
+    pub trace: Vec<TraceSpan>,
 }
 
 /// Coordinator-wide metrics registry.
@@ -71,10 +147,17 @@ pub struct Metrics {
     pub e2e_us: UsHistogram,
     /// per-request codes scanned (log2 buckets; sourced from
     /// `QueryResponse` stats)
-    pub codes_scanned: UsHistogram,
+    pub codes_scanned: Histogram,
     /// per-request filter selectivity in permille (0–1000; 1000 =
     /// unfiltered)
-    pub filter_selectivity_pm: UsHistogram,
+    pub filter_selectivity_pm: Histogram,
+    /// queries per executed batch (log2 occupancy distribution — the
+    /// mean alone hides bimodal windows)
+    pub batch_occupancy: Histogram,
+    /// per-phase wall time across traced queries, indexed by
+    /// [`Phase::idx`] — the serving-side aggregate of the paper's Fig. 2
+    /// cost split
+    pub phase_us: [UsHistogram; NUM_PHASES],
     /// widest executor fan-out observed on any request (gauge, max)
     pub exec_threads: AtomicU64,
     /// executor scratch-arena high-water bytes (gauge, max) — the
@@ -99,13 +182,18 @@ pub struct Metrics {
     /// storage-layer residency gauges (latest observation via
     /// [`Metrics::record_storage_stats`], sourced from
     /// [`crate::storage::counters`]): how many packed-code bytes are
-    /// mmap-backed, how many of those are advised resident, and how many
+    /// mmap-backed, how many of those are advised resident, how many the
+    /// kernel actually holds in RAM (`mincore`-sampled), and how many
     /// mmap opens the process has performed
     pub mapped_code_bytes: AtomicU64,
     pub resident_code_bytes: AtomicU64,
+    pub resident_sampled_bytes: AtomicU64,
     pub mmap_open_total: AtomicU64,
-    /// recent batch sizes (bounded ring, for mean occupancy)
-    batch_sizes: Mutex<Vec<usize>>,
+    /// bounded worst-by-latency query ring (see [`Metrics::record_slow`])
+    slowlog: Mutex<Vec<SlowQuery>>,
+    /// admission floor: the smallest e2e in a **full** slowlog — reads
+    /// below it skip the lock entirely on the hot path
+    slow_floor_us: AtomicU64,
 }
 
 impl Metrics {
@@ -126,6 +214,68 @@ impl Metrics {
             .fetch_max(stats.segments_scanned as u64, Ordering::Relaxed);
     }
 
+    /// Fold one traced query's completed spans into the per-phase
+    /// latency histograms.
+    pub fn record_trace(&self, spans: &[TraceSpan]) {
+        for s in spans {
+            self.phase_us[s.phase.idx()].record(s.us);
+        }
+    }
+
+    /// Offer one finished query to the slow-query log: a bounded ring of
+    /// the [`SLOWLOG_CAPACITY`] worst queries by end-to-end latency,
+    /// each with its full trace when one was collected. Lock-free reject
+    /// for queries faster than everything already retained.
+    pub fn record_slow(&self, e2e_us: u64, kind: &str, nq: usize, trace: &[TraceSpan]) {
+        if e2e_us <= self.slow_floor_us.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut log = self.slowlog.lock().unwrap();
+        log.push(SlowQuery { e2e_us, kind: kind.to_string(), nq, trace: trace.to_vec() });
+        log.sort_by(|a, b| b.e2e_us.cmp(&a.e2e_us));
+        log.truncate(SLOWLOG_CAPACITY);
+        if log.len() == SLOWLOG_CAPACITY {
+            self.slow_floor_us.store(log.last().unwrap().e2e_us, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of the slow-query log, worst first.
+    pub fn slowlog(&self) -> Vec<SlowQuery> {
+        self.slowlog.lock().unwrap().clone()
+    }
+
+    /// The slow-query log as a JSON array (the `slowlog` verb's payload).
+    pub fn slowlog_json(&self) -> Json {
+        let rows = self
+            .slowlog()
+            .into_iter()
+            .map(|q| {
+                let mut o = Json::obj();
+                o.set("e2e_us", Json::Num(q.e2e_us as f64))
+                    .set("kind", Json::Str(q.kind))
+                    .set("nq", Json::Num(q.nq as f64))
+                    .set(
+                        "trace",
+                        Json::Arr(
+                            q.trace
+                                .iter()
+                                .map(|s| {
+                                    let mut t = Json::obj();
+                                    t.set("phase", Json::Str(s.phase.name().to_string()))
+                                        .set("us", Json::Num(s.us as f64))
+                                        .set("count", Json::Num(s.count as f64))
+                                        .set("bytes", Json::Num(s.bytes as f64));
+                                    t
+                                })
+                                .collect(),
+                        ),
+                    );
+                o
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
     /// Record the segment-lifecycle gauges from a backend's current
     /// [`crate::segment::SegmentStats`] (no-op for `None`, i.e. sealed
     /// single-segment backends). Called after mutations and on the `stats`
@@ -140,23 +290,20 @@ impl Metrics {
     }
 
     /// Refresh the storage residency gauges from the process-wide
-    /// [`crate::storage::counters`]. Called on the `stats` verb so the
-    /// export reflects the current mapped/resident state.
+    /// [`crate::storage::counters`]. Called on the `stats`/`metrics`
+    /// verbs so the export reflects the current mapped/resident state.
     pub fn record_storage_stats(&self) {
         let c = crate::storage::counters();
         self.mapped_code_bytes.store(c.mapped_code_bytes(), Ordering::Relaxed);
         self.resident_code_bytes.store(c.resident_code_bytes(), Ordering::Relaxed);
+        self.resident_sampled_bytes.store(c.resident_sampled_bytes(), Ordering::Relaxed);
         self.mmap_open_total.store(c.mmap_open_total(), Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
         self.batches_total.fetch_add(1, Ordering::Relaxed);
         self.batched_queries_total.fetch_add(size as u64, Ordering::Relaxed);
-        let mut v = self.batch_sizes.lock().unwrap();
-        if v.len() >= 4096 {
-            v.drain(..2048);
-        }
-        v.push(size);
+        self.batch_occupancy.record(size as u64);
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -175,11 +322,14 @@ impl Metrics {
             .set("batches_total", Json::Num(self.batches_total.load(Ordering::Relaxed) as f64))
             .set("errors_total", Json::Num(self.errors_total.load(Ordering::Relaxed) as f64))
             .set("mean_batch_size", Json::Num(self.mean_batch_size()))
+            .set("batch_occupancy_p95", Json::Num(self.batch_occupancy.percentile(95.0)))
             .set("queue_mean_us", Json::Num(self.queue_us.mean_us()))
+            .set("queue_p99_us", Json::Num(self.queue_us.percentile_us(99.0)))
             .set("service_mean_us", Json::Num(self.service_us.mean_us()))
             .set("batch_latency_mean_us", Json::Num(self.batch_latency_us.mean_us()))
             .set("batch_latency_p50_us", Json::Num(self.batch_latency_us.percentile_us(50.0)))
             .set("batch_latency_p95_us", Json::Num(self.batch_latency_us.percentile_us(95.0)))
+            .set("batch_latency_p99_us", Json::Num(self.batch_latency_us.percentile_us(99.0)))
             .set(
                 "exec_threads",
                 Json::Num(self.exec_threads.load(Ordering::Relaxed) as f64),
@@ -193,15 +343,15 @@ impl Metrics {
             .set("e2e_p95_us", Json::Num(self.e2e_us.percentile_us(95.0)))
             .set("e2e_p99_us", Json::Num(self.e2e_us.percentile_us(99.0)))
             .set("codes_scanned_count", Json::Num(self.codes_scanned.count() as f64))
-            .set("codes_scanned_mean", Json::Num(self.codes_scanned.mean_us()))
-            .set("codes_scanned_p95", Json::Num(self.codes_scanned.percentile_us(95.0)))
+            .set("codes_scanned_mean", Json::Num(self.codes_scanned.mean()))
+            .set("codes_scanned_p95", Json::Num(self.codes_scanned.percentile(95.0)))
             .set(
                 "filter_selectivity_mean",
-                Json::Num(self.filter_selectivity_pm.mean_us() / 1000.0),
+                Json::Num(self.filter_selectivity_pm.mean() / 1000.0),
             )
             .set(
                 "filter_selectivity_p50",
-                Json::Num(self.filter_selectivity_pm.percentile_us(50.0) / 1000.0),
+                Json::Num(self.filter_selectivity_pm.percentile(50.0) / 1000.0),
             )
             .set("inserts_total", Json::Num(self.inserts_total.load(Ordering::Relaxed) as f64))
             .set("deletes_total", Json::Num(self.deletes_total.load(Ordering::Relaxed) as f64))
@@ -229,10 +379,75 @@ impl Metrics {
                 Json::Num(self.resident_code_bytes.load(Ordering::Relaxed) as f64),
             )
             .set(
+                "resident_sampled_bytes",
+                Json::Num(self.resident_sampled_bytes.load(Ordering::Relaxed) as f64),
+            )
+            .set(
                 "mmap_open_total",
                 Json::Num(self.mmap_open_total.load(Ordering::Relaxed) as f64),
             );
         o
+    }
+
+    /// Export everything in Prometheus text exposition format (the
+    /// `metrics` verb and the `--metrics-addr` HTTP endpoint): one
+    /// `# TYPE` per family; counters monotone, gauges latest-value,
+    /// histograms cumulative. Covers every scalar of
+    /// [`Metrics::to_json`] plus the per-phase histograms.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::with_capacity(8192);
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        let gauge = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        let histogram = |out: &mut String, name: &str, help: &str, h: &Histogram| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            h.write_prometheus(out, name, "");
+        };
+        let ld = Ordering::Relaxed;
+        counter(&mut out, "armpq_requests_total", "Requests accepted on the wire.", self.requests_total.load(ld));
+        counter(&mut out, "armpq_batches_total", "Batches executed by the batcher.", self.batches_total.load(ld));
+        counter(&mut out, "armpq_batched_queries_total", "Queries executed through batches.", self.batched_queries_total.load(ld));
+        counter(&mut out, "armpq_errors_total", "Requests that returned an error.", self.errors_total.load(ld));
+        counter(&mut out, "armpq_inserts_total", "Rows accepted through the insert verb.", self.inserts_total.load(ld));
+        counter(&mut out, "armpq_deletes_total", "Live rows removed through the delete verb.", self.deletes_total.load(ld));
+        counter(&mut out, "armpq_flushes_total", "Memtable flushes performed by the backend.", self.flushes_total.load(ld));
+        counter(&mut out, "armpq_compactions_total", "Segment compactions performed by the backend.", self.compactions_total.load(ld));
+        counter(&mut out, "armpq_mmap_open_total", "mmap opens performed by the storage layer.", self.mmap_open_total.load(ld));
+        gauge(&mut out, "armpq_exec_threads", "Widest executor fan-out observed.", self.exec_threads.load(ld));
+        gauge(&mut out, "armpq_scratch_high_water_bytes", "Executor scratch-arena high water.", self.scratch_high_water_bytes.load(ld));
+        gauge(&mut out, "armpq_segments_scanned", "Widest per-query segment fan-out observed.", self.segments_scanned.load(ld));
+        gauge(&mut out, "armpq_segments", "Sealed segments in the backend.", self.segments.load(ld));
+        gauge(&mut out, "armpq_memtable_entries", "Live rows in the memtable.", self.memtable_entries.load(ld));
+        gauge(&mut out, "armpq_tombstones", "Tombstoned rows awaiting compaction.", self.tombstones.load(ld));
+        gauge(&mut out, "armpq_mapped_code_bytes", "Packed-code bytes backed by mmap.", self.mapped_code_bytes.load(ld));
+        gauge(&mut out, "armpq_resident_code_bytes", "Mapped code bytes advised resident.", self.resident_code_bytes.load(ld));
+        gauge(&mut out, "armpq_resident_sampled_bytes", "Mapped code bytes actually in RAM (mincore-sampled).", self.resident_sampled_bytes.load(ld));
+        histogram(&mut out, "armpq_queue_us", "Enqueue-to-batch-formation wait, microseconds.", &self.queue_us);
+        histogram(&mut out, "armpq_service_us", "Backend search time per batch, microseconds.", &self.service_us);
+        histogram(&mut out, "armpq_batch_latency_us", "Whole-batch execution latency, microseconds.", &self.batch_latency_us);
+        histogram(&mut out, "armpq_e2e_us", "End-to-end request latency, microseconds.", &self.e2e_us);
+        histogram(&mut out, "armpq_codes_scanned", "Codes scanned per request.", &self.codes_scanned);
+        histogram(&mut out, "armpq_filter_selectivity_permille", "Filter selectivity per request, permille.", &self.filter_selectivity_pm);
+        histogram(&mut out, "armpq_batch_occupancy", "Queries per executed batch.", &self.batch_occupancy);
+        let _ = writeln!(out, "# HELP armpq_phase_us Per-phase wall time of traced queries, microseconds.");
+        let _ = writeln!(out, "# TYPE armpq_phase_us histogram");
+        for phase in Phase::ALL {
+            let h = &self.phase_us[phase.idx()];
+            if h.count() == 0 {
+                continue;
+            }
+            h.write_prometheus(&mut out, "armpq_phase_us", &format!("phase=\"{}\"", phase.name()));
+        }
+        out
     }
 }
 
@@ -255,6 +470,24 @@ mod tests {
         assert!(p99 >= 1000.0, "p99 {p99}");
     }
 
+    /// The interpolation fix: a percentile must land **inside** its
+    /// bucket, not snap to the upper bound, and a single-value histogram
+    /// must not report more than 2× the value.
+    #[test]
+    fn percentile_interpolates_within_bucket() {
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.record(100); // bucket [64, 128)
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 >= 64.0 && p50 < 128.0, "p50 {p50}");
+        assert!(p99 >= 64.0 && p99 <= 128.0, "p99 {p99}");
+        assert!(p50 < p99, "interpolation should spread ranks: {p50} vs {p99}");
+        // old behavior returned exactly 128 for every percentile
+        assert!(p50 < 128.0);
+    }
+
     #[test]
     fn empty_histogram() {
         let h = UsHistogram::default();
@@ -268,8 +501,11 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert_eq!(m.mean_batch_size(), 6.0);
+        assert_eq!(m.batch_occupancy.count(), 2);
+        assert_eq!(m.batch_occupancy.sum(), 12);
         let j = m.to_json();
         assert_eq!(j.get("batches_total").unwrap().as_usize().unwrap(), 2);
+        assert!(j.get("batch_occupancy_p95").is_some());
     }
 
     #[test]
@@ -281,11 +517,15 @@ mod tests {
         for key in [
             "requests_total",
             "e2e_p95_us",
+            "e2e_p99_us",
             "service_mean_us",
+            "queue_p99_us",
             "codes_scanned_mean",
             "filter_selectivity_mean",
             "batch_latency_p50_us",
             "batch_latency_p95_us",
+            "batch_latency_p99_us",
+            "batch_occupancy_p95",
             "exec_threads",
             "scratch_high_water_bytes",
             "inserts_total",
@@ -295,6 +535,7 @@ mod tests {
             "tombstones",
             "mapped_code_bytes",
             "resident_code_bytes",
+            "resident_sampled_bytes",
             "mmap_open_total",
         ] {
             assert!(j.get(key).is_some(), "{key}");
@@ -367,10 +608,116 @@ mod tests {
         assert_eq!(m.exec_threads.load(Ordering::Relaxed), 4);
         assert_eq!(m.scratch_high_water_bytes.load(Ordering::Relaxed), 1 << 16);
         assert_eq!(m.segments_scanned.load(Ordering::Relaxed), 3);
-        assert!((m.codes_scanned.mean_us() - 4096.0).abs() < 1e-9);
+        assert!((m.codes_scanned.mean() - 4096.0).abs() < 1e-9);
         let j = m.to_json();
         let sel = j.get("filter_selectivity_mean").unwrap().as_f64().unwrap();
         assert!((sel - 0.5).abs() < 1e-9, "{sel}");
         assert_eq!(j.get("codes_scanned_count").unwrap().as_usize().unwrap(), 2);
+    }
+
+    /// Traced spans land in the matching per-phase histograms.
+    #[test]
+    fn trace_spans_feed_phase_histograms() {
+        let m = Metrics::new();
+        m.record_trace(&[
+            TraceSpan { phase: Phase::LutBuild, us: 10, count: 0, bytes: 0 },
+            TraceSpan { phase: Phase::ListScan, us: 50, count: 1024, bytes: 0 },
+            TraceSpan { phase: Phase::Total, us: 70, count: 0, bytes: 0 },
+        ]);
+        m.record_trace(&[TraceSpan { phase: Phase::ListScan, us: 30, count: 512, bytes: 0 }]);
+        assert_eq!(m.phase_us[Phase::ListScan.idx()].count(), 2);
+        assert_eq!(m.phase_us[Phase::ListScan.idx()].sum(), 80);
+        assert_eq!(m.phase_us[Phase::Total.idx()].count(), 1);
+        assert_eq!(m.phase_us[Phase::CoarseQuant.idx()].count(), 0);
+    }
+
+    /// The slow-query log keeps the worst `SLOWLOG_CAPACITY` by e2e,
+    /// sorted worst-first, and rejects sub-floor queries without growing.
+    #[test]
+    fn slowlog_bounded_and_sorted() {
+        let m = Metrics::new();
+        for us in [500u64, 100, 900, 300, 700, 200, 800, 400, 600, 1000] {
+            m.record_slow(us, "topk", 1, &[]);
+        }
+        let log = m.slowlog();
+        assert_eq!(log.len(), SLOWLOG_CAPACITY);
+        assert_eq!(log[0].e2e_us, 1000);
+        assert!(log.windows(2).all(|w| w[0].e2e_us >= w[1].e2e_us));
+        let floor = log.last().unwrap().e2e_us;
+        // below-floor offers are rejected (lock-free fast path)
+        m.record_slow(floor - 1, "topk", 1, &[]);
+        assert_eq!(m.slowlog().len(), SLOWLOG_CAPACITY);
+        assert_eq!(m.slowlog().last().unwrap().e2e_us, floor);
+        // traces ride along
+        m.record_slow(
+            5000,
+            "range",
+            2,
+            &[TraceSpan { phase: Phase::Total, us: 5000, count: 0, bytes: 0 }],
+        );
+        let log = m.slowlog();
+        assert_eq!(log[0].e2e_us, 5000);
+        assert_eq!(log[0].kind, "range");
+        assert_eq!(log[0].trace.len(), 1);
+        let j = m.slowlog_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), SLOWLOG_CAPACITY);
+        assert_eq!(rows[0].get("e2e_us").unwrap().as_usize().unwrap(), 5000);
+    }
+
+    /// Prometheus exposition is well-formed: one `# TYPE` per family,
+    /// cumulative (monotone) histogram buckets ending at `+Inf`, and
+    /// every JSON scalar family represented.
+    #[test]
+    fn prometheus_exposition_well_formed() {
+        let m = Metrics::new();
+        m.requests_total.fetch_add(7, Ordering::Relaxed);
+        m.e2e_us.record(100);
+        m.e2e_us.record(10_000);
+        m.record_batch(4);
+        m.record_trace(&[
+            TraceSpan { phase: Phase::ListScan, us: 80, count: 0, bytes: 0 },
+            TraceSpan { phase: Phase::Total, us: 100, count: 0, bytes: 0 },
+        ]);
+        let text = m.to_prometheus();
+        // one # TYPE per family name
+        let mut seen = std::collections::HashSet::new();
+        for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+            let name = line.split_whitespace().nth(2).unwrap();
+            assert!(seen.insert(name.to_string()), "duplicate # TYPE for {name}");
+        }
+        for family in [
+            "armpq_requests_total",
+            "armpq_errors_total",
+            "armpq_inserts_total",
+            "armpq_deletes_total",
+            "armpq_exec_threads",
+            "armpq_mapped_code_bytes",
+            "armpq_resident_sampled_bytes",
+            "armpq_queue_us",
+            "armpq_e2e_us",
+            "armpq_codes_scanned",
+            "armpq_batch_occupancy",
+            "armpq_phase_us",
+        ] {
+            assert!(seen.contains(family), "missing family {family}");
+        }
+        assert!(text.contains("armpq_requests_total 7"));
+        // cumulative buckets: counts monotone nondecreasing in le order,
+        // closed by +Inf == _count
+        let e2e_buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("armpq_e2e_us_bucket"))
+            .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+            .collect();
+        assert!(!e2e_buckets.is_empty());
+        assert!(e2e_buckets.windows(2).all(|w| w[0] <= w[1]), "{e2e_buckets:?}");
+        assert_eq!(*e2e_buckets.last().unwrap(), 2);
+        assert!(text.contains("armpq_e2e_us_count 2"));
+        assert!(text.contains("armpq_e2e_us_sum 10100"));
+        // phase histogram carries its label and only hit phases appear
+        assert!(text.contains("armpq_phase_us_bucket{phase=\"list_scan\",le=\"128\"}"));
+        assert!(text.contains("armpq_phase_us_sum{phase=\"total\"} 100"));
+        assert!(!text.contains("phase=\"coarse_quant\""));
     }
 }

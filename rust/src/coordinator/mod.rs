@@ -20,7 +20,8 @@
 //!                      ▼
 //!                responses routed back; stats folded into metrics
 //!                (codes_scanned / filter_selectivity histograms,
-//!                segment-lifecycle gauges)
+//!                segment-lifecycle gauges, per-phase trace histograms,
+//!                slow-query log)
 //! ```
 //!
 //! The whole pipe speaks the typed request/response model of
@@ -66,6 +67,25 @@
 //! `stats` verb exposes the resulting concurrency (`exec_threads`,
 //! `scratch_high_water_bytes`) plus a whole-window `batch_latency_us`
 //! histogram so the thread win is measurable from the wire.
+//!
+//! # Observability: traces, phase histograms, exposition
+//!
+//! A `search` request carrying `"trace": true` returns a per-phase span
+//! breakdown (plan compile, coarse quantization, LUT build, list/segment/
+//! memtable scan, merge, rerank — see [`crate::obs`]) alongside its hits.
+//! Tracing is bit-identical to not tracing and free when off; the batcher
+//! runs a group traced if *any* member asked and hands spans back only to
+//! the members that did. Completed spans also feed [`Metrics`]'
+//! per-phase latency histograms, and every query is offered to a bounded
+//! slow-query log (the worst end-to-end queries, each with its trace when
+//! one was captured).
+//!
+//! Two wire verbs expose this without JSON spelunking: `metrics` returns
+//! the full Prometheus text exposition (every `stats` gauge and histogram,
+//! the per-phase histograms, and a `mincore`-sampled residency gauge,
+//! refreshed at scrape time), and `slowlog` dumps the slow-query ring.
+//! [`ServerConfig::metrics_addr`] additionally binds a one-endpoint HTTP
+//! listener serving the same exposition to stock Prometheus scrapers.
 //!
 //! Everything is std-thread + mpsc (no tokio in the vendored crate set);
 //! on the paper's workload (sub-ms searches) OS threads are not the

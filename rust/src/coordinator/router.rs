@@ -191,6 +191,7 @@ impl SearchBackend for ShardedBackend {
             kind: QueryKind::TopK { k },
             filter: None,
             params: params.cloned(),
+            trace: false,
         };
         let resp = self.query_batch(&req)?;
         let mut distances = Vec::with_capacity(nq * k);
@@ -215,14 +216,26 @@ impl SearchBackend for ShardedBackend {
         };
         let mut hits = Vec::with_capacity(nq);
         let mut stats = Vec::with_capacity(nq);
+        let mut traces = Vec::with_capacity(if req.trace { nq } else { 0 });
         for qi in 0..nq {
             hits.push(merge_rows(
                 shard_resps.iter().map(|r| r.hits[qi].as_slice()).collect(),
                 limit,
             ));
             stats.push(merge_stats(shard_resps.iter().map(|r| &r.stats[qi]).collect()));
+            if req.trace {
+                // shard spans sum per phase: the fan-out runs shards
+                // concurrently, so the merged `total` reads as aggregate
+                // shard work, not wall clock — same convention as
+                // `codes_scanned` adding up across shards
+                let rows: Vec<&[crate::obs::TraceSpan]> = shard_resps
+                    .iter()
+                    .map(|r| r.traces.get(qi).map(|t| t.as_slice()).unwrap_or(&[]))
+                    .collect();
+                traces.push(crate::obs::merge_spans(&rows));
+            }
         }
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces })
     }
 
     fn describe(&self) -> String {

@@ -23,10 +23,20 @@
 //!   → {"stats": true}
 //!   ← {"ok": { …metrics, incl. codes_scanned/filter_selectivity and the
 //!              segment gauges (segments/memtable_entries/tombstones)… }}
+//!   → {"metrics": true}
+//!   ← {"ok": "<Prometheus text exposition>"}   (gauges refreshed, incl.
+//!                                               mincore-sampled residency)
+//!   → {"slowlog": true}
+//!   ← {"ok": [{"e2e_us": …, "kind": "topk", "nq": 1, "trace": […]}, …]}
 //!   → {"ping": true}
 //!   ← {"ok": "pong"}
 //!   ← {"err": "message"}           (any failure)
 //! ```
+//!
+//! A `search` request may additionally carry `"trace": true`; the response
+//! body then includes a `"trace"` array of per-phase spans
+//! (`{"phase": "list_scan", "us": …, "count": …, "bytes": …}`) for that
+//! query. Tracing never changes results — only the span array is added.
 //!
 //! `insert` and `delete` require a mutable (segmented) backend; sealed
 //! single-segment backends answer them with an error. Mutations bypass
@@ -36,11 +46,17 @@
 //! Predicate filters are in-process closures and cannot cross the wire.
 //! Range responses are truncated to the nearest `MAX_WIRE_RANGE_HITS`
 //! hits — the radius analog of the top-k path's `k <= 1024` cap.
+//!
+//! For scrapers that speak HTTP rather than the line protocol,
+//! [`ServerConfig::metrics_addr`] binds a one-endpoint HTTP listener that
+//! answers every GET with the same Prometheus exposition the `metrics`
+//! verb returns.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::service::SearchBackend;
 use crate::index::query::{Filter, Hit, QueryKind, QueryStats};
 use crate::index::SearchParams;
+use crate::obs::{Phase, TraceSpan};
 use crate::util::json::Json;
 use crate::{Error, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -53,21 +69,27 @@ use std::sync::Arc;
 pub struct ServerConfig {
     /// e.g. "127.0.0.1:0" (0 = ephemeral port).
     pub addr: String,
+    /// When set, also bind a plain-HTTP listener here whose every GET
+    /// answers with the Prometheus text exposition (`--metrics-addr`).
+    pub metrics_addr: Option<String>,
     pub batcher: BatcherConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() }
+        Self { addr: "127.0.0.1:0".into(), metrics_addr: None, batcher: BatcherConfig::default() }
     }
 }
 
 /// A running server (drop or call [`Server::stop`] to shut down).
 pub struct Server {
     pub addr: std::net::SocketAddr,
+    /// Bound address of the HTTP metrics endpoint, when configured.
+    pub metrics_addr: Option<std::net::SocketAddr>,
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    metrics_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -83,6 +105,7 @@ impl Server {
         let accept_thread = {
             let batcher = batcher.clone();
             let stop = stop.clone();
+            let backend = backend.clone();
             let dim = backend.dim();
             std::thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
@@ -102,20 +125,109 @@ impl Server {
                 }
             })
         };
-        Ok(Server { addr, batcher, stop, accept_thread: Some(accept_thread) })
+        let (metrics_addr, metrics_thread) = match &cfg.metrics_addr {
+            None => (None, None),
+            Some(addr) => {
+                let (bound, thread) =
+                    spawn_metrics_http(addr, batcher.clone(), backend, stop.clone())?;
+                (Some(bound), Some(thread))
+            }
+        };
+        Ok(Server {
+            addr,
+            metrics_addr,
+            batcher,
+            stop,
+            accept_thread: Some(accept_thread),
+            metrics_thread,
+        })
     }
 
     pub fn metrics_json(&self) -> Json {
         self.batcher.metrics.to_json()
     }
 
-    /// Signal shutdown and join the acceptor.
+    /// Signal shutdown and join the acceptor (and the HTTP exporter, if
+    /// one was configured).
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        if let Some(t) = self.metrics_thread.take() {
+            let _ = t.join();
+        }
     }
+}
+
+/// Refresh the lifecycle/residency gauges and render the Prometheus text
+/// exposition — shared by the `metrics` verb and the HTTP endpoint so a
+/// scrape is always a fresh snapshot, whichever door it came through.
+fn render_prometheus(batcher: &Batcher, backend: &dyn SearchBackend) -> String {
+    batcher.metrics.record_segment_stats(backend.segment_stats());
+    // ask the kernel which mapped code pages are actually resident
+    // (mincore ground truth) before snapshotting the storage gauges
+    crate::storage::sample_residency();
+    batcher.metrics.record_storage_stats();
+    batcher.metrics.to_prometheus()
+}
+
+/// One-endpoint HTTP exporter: every GET answers 200 with the Prometheus
+/// exposition. Deliberately minimal (no routing, no keep-alive) — it
+/// exists so a stock Prometheus scraper can read the gauges without
+/// speaking the line-JSON protocol.
+fn spawn_metrics_http(
+    addr: &str,
+    batcher: Arc<Batcher>,
+    backend: Arc<dyn SearchBackend>,
+    stop: Arc<AtomicBool>,
+) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::Serve(format!("bind metrics {addr}: {e}")))?;
+    let bound = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let thread = std::thread::spawn(move || {
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = serve_metrics_scrape(stream, &batcher, backend.as_ref());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok((bound, thread))
+}
+
+fn serve_metrics_scrape(
+    stream: TcpStream,
+    batcher: &Batcher,
+    backend: &dyn SearchBackend,
+) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    // consume the request head (request line + headers) so well-behaved
+    // clients don't see a reset; the response is the same for any path
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 || line.trim().is_empty() {
+            break;
+        }
+    }
+    let body = render_prometheus(batcher, backend);
+    let mut writer = BufWriter::new(stream);
+    write!(
+        writer,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    writer.flush()
 }
 
 fn handle_connection(
@@ -164,6 +276,16 @@ fn handle_request(line: &str, batcher: &Batcher, backend: &dyn SearchBackend, di
         o.set("ok", batcher.metrics.to_json());
         return o;
     }
+    if req.get("metrics").is_some() {
+        let mut o = Json::obj();
+        o.set("ok", Json::Str(render_prometheus(batcher, backend)));
+        return o;
+    }
+    if req.get("slowlog").is_some() {
+        let mut o = Json::obj();
+        o.set("ok", batcher.metrics.slowlog_json());
+        return o;
+    }
     if let Some(insert) = req.get("insert") {
         return match handle_insert(insert, batcher, backend, dim) {
             Ok(ok) => ok,
@@ -177,7 +299,7 @@ fn handle_request(line: &str, batcher: &Batcher, backend: &dyn SearchBackend, di
         };
     }
     let Some(search) = req.get("search") else {
-        return err("expected search/insert/delete/stats/ping".into());
+        return err("expected search/insert/delete/stats/metrics/slowlog/ping".into());
     };
     let Some(vector) = search.get("vector").and_then(|v| v.as_arr()) else {
         return err("search.vector missing".into());
@@ -230,7 +352,13 @@ fn handle_request(line: &str, batcher: &Batcher, backend: &dyn SearchBackend, di
             }
         }
     };
-    match batcher.query(vector, kind, filter, params) {
+    let trace = matches!(search.get("trace"), Some(Json::Bool(true)));
+    let result = if trace {
+        batcher.query_traced(vector, kind, filter, params)
+    } else {
+        batcher.query(vector, kind, filter, params)
+    };
+    match result {
         Ok(mut resp) => {
             // serving boundary: a huge radius must not let one request
             // serialize the whole corpus in a single JSON line. Hits are
@@ -263,6 +391,9 @@ fn handle_request(line: &str, batcher: &Batcher, backend: &dyn SearchBackend, di
                 .set("queue_us", Json::Num(resp.queue_us as f64))
                 .set("service_us", Json::Num(resp.service_us as f64))
                 .set("stats", stats);
+            if trace {
+                body.set("trace", trace_to_json(&resp.trace));
+            }
             let mut o = Json::obj();
             o.set("ok", body);
             o
@@ -431,6 +562,61 @@ fn filter_to_json(filter: &Filter) -> Result<Json> {
     Ok(o)
 }
 
+/// Serialize trace spans for the wire: an array of
+/// `{"phase": "list_scan", "us": …, "count": …, "bytes": …}` objects.
+fn trace_to_json(spans: &[TraceSpan]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("phase", Json::Str(s.phase.name().into()))
+                    .set("us", Json::Num(s.us as f64))
+                    .set("count", Json::Num(s.count as f64))
+                    .set("bytes", Json::Num(s.bytes as f64));
+                o
+            })
+            .collect(),
+    )
+}
+
+/// Parse a wire trace array back into spans; rows with an unknown phase
+/// name are dropped (a newer server may emit phases this client predates).
+pub(crate) fn trace_from_json(v: &Json) -> Vec<TraceSpan> {
+    let Some(rows) = v.as_arr() else { return Vec::new() };
+    rows.iter()
+        .filter_map(|row| {
+            let phase = Phase::from_name(row.get("phase")?.as_str()?)?;
+            Some(TraceSpan {
+                phase,
+                us: row.get("us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+                count: row.get("count").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+                bytes: row.get("bytes").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            })
+        })
+        .collect()
+}
+
+/// Parse the wire `stats` object into [`QueryStats`] — every field the
+/// server serializes, with the type's defaults for anything absent.
+pub(crate) fn query_stats_from_json(s: &Json) -> QueryStats {
+    QueryStats {
+        codes_scanned: s.get("codes_scanned").and_then(|x| x.as_usize()).unwrap_or(0),
+        lists_probed: s.get("lists_probed").and_then(|x| x.as_usize()).unwrap_or(0),
+        filter_selectivity: s
+            .get("filter_selectivity")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(1.0),
+        threads_used: s.get("threads_used").and_then(|x| x.as_usize()).unwrap_or(1),
+        scratch_bytes: s.get("scratch_bytes").and_then(|x| x.as_usize()).unwrap_or(0),
+        segments_scanned: s.get("segments_scanned").and_then(|x| x.as_usize()).unwrap_or(0),
+        memtable_entries: s.get("memtable_entries").and_then(|x| x.as_usize()).unwrap_or(0),
+        tombstones: s.get("tombstones").and_then(|x| x.as_usize()).unwrap_or(0),
+        bytes_mapped: s.get("bytes_mapped").and_then(|x| x.as_usize()).unwrap_or(0),
+        prefetch_lists: s.get("prefetch_lists").and_then(|x| x.as_usize()).unwrap_or(0),
+    }
+}
+
 /// Parse a JSON object of per-request overrides through the shared
 /// [`SearchParams::assign`] parser (numbers, bools and strings accepted).
 fn search_params_from_json(obj: &Json) -> Result<SearchParams> {
@@ -555,6 +741,32 @@ impl Client {
         filter: Option<&Filter>,
         params: Option<&SearchParams>,
     ) -> Result<(Vec<Hit>, QueryStats)> {
+        let (hits, stats, _trace) = self.query_inner(vector, kind, filter, params, false)?;
+        Ok((hits, stats))
+    }
+
+    /// [`Client::query`] with per-phase tracing: the extra return value is
+    /// the server-side span breakdown for this query (plan compile, LUT
+    /// build, scan, merge, rerank, …). Results are bit-identical to the
+    /// untraced call.
+    pub fn query_traced(
+        &mut self,
+        vector: &[f32],
+        kind: &QueryKind,
+        filter: Option<&Filter>,
+        params: Option<&SearchParams>,
+    ) -> Result<(Vec<Hit>, QueryStats, Vec<TraceSpan>)> {
+        self.query_inner(vector, kind, filter, params, true)
+    }
+
+    fn query_inner(
+        &mut self,
+        vector: &[f32],
+        kind: &QueryKind,
+        filter: Option<&Filter>,
+        params: Option<&SearchParams>,
+        trace: bool,
+    ) -> Result<(Vec<Hit>, QueryStats, Vec<TraceSpan>)> {
         let mut inner = Json::obj();
         inner.set("vector", Json::Arr(vector.iter().map(|&x| Json::Num(x as f64)).collect()));
         match kind {
@@ -577,6 +789,9 @@ impl Client {
             }
             inner.set("params", pobj);
         }
+        if trace {
+            inner.set("trace", Json::Bool(true));
+        }
         let mut req = Json::obj();
         req.set("search", inner);
         let ok = self.roundtrip(&req)?;
@@ -596,22 +811,27 @@ impl Client {
             }
             hits.push(Hit { distance: distance as f32, label: label as i64 });
         }
-        let stats = ok.get("stats").map(|s| QueryStats {
-            codes_scanned: s.get("codes_scanned").and_then(|x| x.as_usize()).unwrap_or(0),
-            lists_probed: s.get("lists_probed").and_then(|x| x.as_usize()).unwrap_or(0),
-            filter_selectivity: s
-                .get("filter_selectivity")
-                .and_then(|x| x.as_f64())
-                .unwrap_or(1.0),
-            threads_used: s.get("threads_used").and_then(|x| x.as_usize()).unwrap_or(1),
-            scratch_bytes: s.get("scratch_bytes").and_then(|x| x.as_usize()).unwrap_or(0),
-            segments_scanned: s.get("segments_scanned").and_then(|x| x.as_usize()).unwrap_or(0),
-            memtable_entries: s.get("memtable_entries").and_then(|x| x.as_usize()).unwrap_or(0),
-            tombstones: s.get("tombstones").and_then(|x| x.as_usize()).unwrap_or(0),
-            bytes_mapped: s.get("bytes_mapped").and_then(|x| x.as_usize()).unwrap_or(0),
-            prefetch_lists: s.get("prefetch_lists").and_then(|x| x.as_usize()).unwrap_or(0),
-        });
-        Ok((hits, stats.unwrap_or_default()))
+        let stats = ok.get("stats").map(query_stats_from_json).unwrap_or_default();
+        let spans = ok.get("trace").map(trace_from_json).unwrap_or_default();
+        Ok((hits, stats, spans))
+    }
+
+    /// Fetch the Prometheus text exposition over the line protocol.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let mut req = Json::obj();
+        req.set("metrics", Json::Bool(true));
+        let ok = self.roundtrip(&req)?;
+        ok.as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Serve("metrics body must be a string".into()))
+    }
+
+    /// Fetch the slow-query log: the worst end-to-end queries the server
+    /// has seen, each with its phase trace when one was captured.
+    pub fn slowlog(&mut self) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("slowlog", Json::Bool(true));
+        self.roundtrip(&req)
     }
 
     /// Insert rows into a mutable (segmented) backend; returns the
@@ -847,6 +1067,112 @@ mod tests {
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
         assert!(line.contains("err"), "{line}");
+        server.stop();
+    }
+
+    /// Every wire stats field survives the parse — a field the client
+    /// silently dropped would read as its default forever.
+    #[test]
+    fn query_stats_from_json_parses_every_field() {
+        let wire = r#"{"codes_scanned": 11, "lists_probed": 12,
+                       "filter_selectivity": 0.25, "threads_used": 3,
+                       "scratch_bytes": 14, "segments_scanned": 15,
+                       "memtable_entries": 16, "tombstones": 17,
+                       "bytes_mapped": 18, "prefetch_lists": 19}"#;
+        let s = query_stats_from_json(&Json::parse(wire).unwrap());
+        assert_eq!(s.codes_scanned, 11);
+        assert_eq!(s.lists_probed, 12);
+        assert!((s.filter_selectivity - 0.25).abs() < 1e-9);
+        assert_eq!(s.threads_used, 3);
+        assert_eq!(s.scratch_bytes, 14);
+        assert_eq!(s.segments_scanned, 15);
+        assert_eq!(s.memtable_entries, 16);
+        assert_eq!(s.tombstones, 17);
+        assert_eq!(s.bytes_mapped, 18);
+        assert_eq!(s.prefetch_lists, 19);
+        // absent fields fall back to the type's defaults
+        let empty = query_stats_from_json(&Json::parse("{}").unwrap());
+        assert_eq!(empty.codes_scanned, 0);
+        assert!((empty.filter_selectivity - 1.0).abs() < 1e-9);
+    }
+
+    /// Spans round-trip through the wire encoding; rows with unknown
+    /// phase names (a newer server) are dropped, not mangled.
+    #[test]
+    fn trace_spans_roundtrip_the_wire() {
+        let spans = vec![
+            TraceSpan { phase: Phase::LutBuild, us: 42, count: 0, bytes: 0 },
+            TraceSpan { phase: Phase::ListScan, us: 1000, count: 512, bytes: 8192 },
+            TraceSpan { phase: Phase::Total, us: 1100, count: 0, bytes: 0 },
+        ];
+        let wire = trace_to_json(&spans);
+        assert_eq!(trace_from_json(&wire), spans);
+        let with_unknown =
+            Json::parse(r#"[{"phase": "warp_drive", "us": 9}, {"phase": "rerank", "us": 7}]"#)
+                .unwrap();
+        let parsed = trace_from_json(&with_unknown);
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].phase, Phase::Rerank);
+        assert_eq!(parsed[0].us, 7);
+    }
+
+    /// The traced wire path end-to-end: identical hits, a span breakdown
+    /// whose phases feed the histograms, a valid `metrics` exposition,
+    /// and a populated slowlog.
+    #[test]
+    fn traced_search_and_metrics_verbs() {
+        let (backend, data) = toy_backend();
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let q = &data[..16];
+        let (plain_hits, _) = client.query(q, &QueryKind::TopK { k: 5 }, None, None).unwrap();
+        let (hits, stats, spans) =
+            client.query_traced(q, &QueryKind::TopK { k: 5 }, None, None).unwrap();
+        // tracing must not change results
+        assert_eq!(hits, plain_hits);
+        assert!(stats.codes_scanned > 0);
+        assert!(!spans.is_empty(), "traced query returned no spans");
+        assert!(
+            spans.iter().any(|s| s.phase == Phase::Total && s.us > 0),
+            "no total span: {spans:?}"
+        );
+        // untraced responses must not carry a trace array
+        let (_, _, no_spans) = client.query_inner(q, &QueryKind::TopK { k: 5 }, None, None, false).unwrap();
+        assert!(no_spans.is_empty());
+        // the exposition covers the phase histograms the trace just fed
+        let text = client.metrics_text().unwrap();
+        assert!(text.contains("# TYPE armpq_phase_us histogram"), "{text}");
+        assert!(text.contains("armpq_requests_total"), "{text}");
+        assert!(text.contains("armpq_resident_sampled_bytes"), "{text}");
+        // every query is a slowlog candidate, so the log is non-empty and
+        // its traced entries carry spans
+        let log = client.slowlog().unwrap();
+        let rows = log.as_arr().unwrap();
+        assert!(!rows.is_empty());
+        assert!(rows[0].get("e2e_us").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        server.stop();
+    }
+
+    /// The HTTP exporter answers a plain GET with the same exposition.
+    #[test]
+    fn http_metrics_endpoint_scrapes() {
+        let (backend, _) = toy_backend();
+        let cfg = ServerConfig {
+            metrics_addr: Some("127.0.0.1:0".into()),
+            ..ServerConfig::default()
+        };
+        let server = Server::start(backend, cfg).unwrap();
+        let addr = server.metrics_addr.expect("metrics endpoint not bound");
+        use std::io::Read;
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        w.write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+        w.flush().unwrap();
+        let mut body = String::new();
+        BufReader::new(stream).read_to_string(&mut body).unwrap();
+        assert!(body.starts_with("HTTP/1.1 200 OK"), "{body}");
+        assert!(body.contains("text/plain; version=0.0.4"), "{body}");
+        assert!(body.contains("# TYPE armpq_e2e_us histogram"), "{body}");
         server.stop();
     }
 }

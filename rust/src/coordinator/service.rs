@@ -122,7 +122,7 @@ pub(crate) fn padded_to_response(d: &[f32], l: &[i64], k: usize) -> QueryRespons
             .collect();
         hits.push(row);
     }
-    QueryResponse { stats: vec![QueryStats::default(); nq], hits }
+    QueryResponse { stats: vec![QueryStats::default(); nq], hits, traces: Vec::new() }
 }
 
 /// Backend over any sealed index shared as `Arc<dyn Index>` — the generic
@@ -182,6 +182,7 @@ impl SearchBackend for IndexBackend {
             kind: QueryKind::TopK { k },
             filter: None,
             params: params.cloned(),
+            trace: false,
         };
         let r = self.index.query_exec(&req, &self.exec)?.into_search_result(k);
         Ok((r.distances, r.labels))
@@ -215,6 +216,7 @@ impl SearchBackend for IndexBackend {
             kind: QueryKind::TopK { k },
             filter: None,
             params: params.cloned(),
+            trace: false,
         };
         let r = self.index.query_with_luts_exec(&req, luts, &self.exec)?.into_search_result(k);
         Ok((r.distances, r.labels))
@@ -277,6 +279,7 @@ impl SearchBackend for IvfBackend {
             kind: QueryKind::TopK { k },
             filter: None,
             params: params.cloned(),
+            trace: false,
         })?;
         let r = resp.into_search_result(k);
         Ok((r.distances, r.labels))
@@ -285,7 +288,7 @@ impl SearchBackend for IvfBackend {
     fn query_batch(&self, req: &QueryRequest<'_>) -> Result<QueryResponse> {
         let (nprobe, ef_search, fs) =
             params::effective_ivf(req.params.as_ref(), self.index.nprobe, &self.index.fastscan);
-        let (hits, stats) = self.index.query_exec_with(
+        let (hits, stats, traces) = self.index.query_exec_traced_with(
             req.queries,
             None,
             &req.kind,
@@ -294,14 +297,15 @@ impl SearchBackend for IvfBackend {
             ef_search,
             &fs,
             &self.exec,
+            req.trace,
         )?;
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces })
     }
 
     fn query_batch_with_luts(&self, req: &QueryRequest<'_>, luts: &[f32]) -> Result<QueryResponse> {
         let (nprobe, ef_search, fs) =
             params::effective_ivf(req.params.as_ref(), self.index.nprobe, &self.index.fastscan);
-        let (hits, stats) = self.index.query_exec_with(
+        let (hits, stats, traces) = self.index.query_exec_traced_with(
             req.queries,
             Some(luts),
             &req.kind,
@@ -310,8 +314,9 @@ impl SearchBackend for IvfBackend {
             ef_search,
             &fs,
             &self.exec,
+            req.trace,
         )?;
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces })
     }
 
     fn lut_signature(&self) -> Option<u64> {
@@ -335,6 +340,7 @@ impl SearchBackend for IvfBackend {
                 kind: QueryKind::TopK { k },
                 filter: None,
                 params: params.cloned(),
+                trace: false,
             },
             luts,
         )?;

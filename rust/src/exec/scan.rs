@@ -10,9 +10,10 @@
 
 use super::scratch::ScanScratch;
 use crate::index::query::Hit;
+use crate::obs::Phase;
 use crate::pq::bitwidth::build_width_luts_with;
 use crate::pq::codebook::ProductQuantizer;
-use crate::pq::fastscan::{scan_filtered, FastScanParams, FilterMask, ScanSink};
+use crate::pq::fastscan::{scan_filtered_counted, FastScanParams, FilterMask, ScanSink};
 use crate::pq::layout::PackedCodes;
 use crate::util::topk::{TopK, U16Reservoir};
 
@@ -34,18 +35,30 @@ pub fn topk_packed(
     if k == 0 {
         return Vec::new();
     }
+    let t_lut = scratch.trace().start();
     let wl = build_width_luts_with(luts_f32, packed.m, packed.width, scratch.wl_buf_mut());
+    scratch.trace_mut().finish(Phase::LutBuild, t_lut);
     // Scan with identity labels so the reservoir carries *scan positions*;
     // external labels are applied after re-ranking (positions are
     // unambiguous — duplicate external labels never collide).
+    let t_scan = scratch.trace().start();
     let mut reservoir = U16Reservoir::from_storage(k, fs.reservoir_factor, scratch.take_items());
-    {
+    let counts = {
         let mut sink = ScanSink::TopK(&mut reservoir);
-        scan_filtered(packed, &wl.kernel, fs.backend, None, filter, &mut sink);
-    }
+        scan_filtered_counted(packed, &wl.kernel, fs.backend, None, filter, &mut sink)
+    };
     let cands = reservoir.into_candidates();
+    let scan_phase = scratch.trace().scan_phase();
+    scratch.trace_mut().finish_with(
+        scan_phase,
+        t_scan,
+        counts.codes as u64,
+        counts.mapped_bytes as u64,
+    );
 
     let label_of = |pos: i64| labels.map(|l| l[pos as usize]).unwrap_or(pos);
+    let t_rerank = scratch.trace().start();
+    let n_cands = cands.len() as u64;
     let mut heap = TopK::from_storage(k, scratch.take_heap());
     if fs.rerank {
         let mut codes_buf = scratch.take_codes();
@@ -71,6 +84,7 @@ pub fn topk_packed(
     scratch.put_items(cands);
     scratch.put_heap(heap.into_storage());
     wl.recycle(scratch.wl_buf_mut());
+    scratch.trace_mut().finish_with(Phase::Rerank, t_rerank, n_cands, 0);
     row
 }
 
@@ -89,14 +103,26 @@ pub fn range_packed(
     filter: Option<&FilterMask>,
     scratch: &mut ScanScratch,
 ) -> Vec<Hit> {
+    let t_lut = scratch.trace().start();
     let wl = build_width_luts_with(luts_f32, packed.m, packed.width, scratch.wl_buf_mut());
     let bound = wl.qluts.collection_bound(radius, fs.rerank);
+    scratch.trace_mut().finish(Phase::LutBuild, t_lut);
+    let t_scan = scratch.trace().start();
     let mut raw = scratch.take_items();
-    {
+    let counts = {
         let mut sink = ScanSink::Range { bound, hits: &mut raw };
-        scan_filtered(packed, &wl.kernel, fs.backend, None, filter, &mut sink);
-    }
+        scan_filtered_counted(packed, &wl.kernel, fs.backend, None, filter, &mut sink)
+    };
+    let scan_phase = scratch.trace().scan_phase();
+    scratch.trace_mut().finish_with(
+        scan_phase,
+        t_scan,
+        counts.codes as u64,
+        counts.mapped_bytes as u64,
+    );
     let label_of = |pos: i64| labels.map(|l| l[pos as usize]).unwrap_or(pos);
+    let t_rerank = scratch.trace().start();
+    let n_raw = raw.len() as u64;
     let mut hits: Vec<Hit> = if fs.rerank {
         let mut codes_buf = scratch.take_codes();
         codes_buf.resize(pq.m, 0);
@@ -126,6 +152,7 @@ pub fn range_packed(
     });
     scratch.put_items(raw);
     wl.recycle(scratch.wl_buf_mut());
+    scratch.trace_mut().finish_with(Phase::Rerank, t_rerank, n_raw, 0);
     hits
 }
 

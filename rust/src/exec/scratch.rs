@@ -14,6 +14,7 @@
 //! the hot path: a worker can hold the LUT buffer *and* hand the rest of
 //! the scratch to a helper at the same time.
 
+use crate::obs::TraceBuf;
 use crate::pq::bitwidth::WidthLutsBuf;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -38,6 +39,9 @@ pub struct ScanScratch {
     codes: Vec<u8>,
     /// Coarse-quantizer probe list.
     probes: Vec<usize>,
+    /// Per-query trace span accumulator (inline slots — adds nothing to
+    /// the heap footprint; disabled unless the query asked for a trace).
+    trace: TraceBuf,
 }
 
 macro_rules! take_put {
@@ -67,6 +71,20 @@ impl ScanScratch {
     /// [`crate::pq::bitwidth::WidthLuts`] owns them until recycled).
     pub fn wl_buf_mut(&mut self) -> &mut WidthLutsBuf {
         &mut self.wl_buf
+    }
+
+    /// The per-query trace accumulator (read side: ambient scan phase,
+    /// enabled check, span timer construction).
+    pub fn trace(&self) -> &TraceBuf {
+        &self.trace
+    }
+
+    /// The per-query trace accumulator (record side: enable, span
+    /// recording, drain-at-end). Pooled arenas always come back with the
+    /// buffer drained and disabled, so an untraced query never pays for a
+    /// traced predecessor.
+    pub fn trace_mut(&mut self) -> &mut TraceBuf {
+        &mut self.trace
     }
 
     /// Bytes currently reserved by this arena (capacity accounting; the
@@ -109,7 +127,10 @@ impl ScratchPool {
         ScratchGuard { pool: self, scratch: Some(scratch) }
     }
 
-    fn restore(&self, scratch: ScanScratch) {
+    fn restore(&self, mut scratch: ScanScratch) {
+        // An error path may bail between enable and drain; never park an
+        // armed trace where the next (untraced) checkout would feed it.
+        scratch.trace.disarm();
         self.high_water.fetch_max(scratch.reserved_bytes(), Ordering::Relaxed);
         self.arenas.lock().unwrap().push(scratch);
     }

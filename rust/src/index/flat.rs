@@ -123,7 +123,7 @@ impl Index for IndexFlat {
             stats.push(s);
         }
         exec.stamp_stats(&mut stats, nq);
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces: Vec::new() })
     }
 
     fn describe(&self) -> String {

@@ -196,6 +196,7 @@ pub trait Index: Send + Sync {
             kind: QueryKind::TopK { k },
             filter: None,
             params: params.cloned(),
+            trace: false,
         };
         Ok(self.query(&req)?.into_search_result(k))
     }
@@ -233,6 +234,7 @@ pub trait Index: Send + Sync {
             kind: QueryKind::TopK { k },
             filter: None,
             params: params.cloned(),
+            trace: false,
         };
         Ok(self.query_with_luts(&req, luts)?.into_search_result(k))
     }

@@ -11,6 +11,7 @@ use super::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use super::{Index, SearchParams};
 use crate::exec::{range_packed, topk_packed, MaskPlan, QueryExecutor, QueryPlan};
 use crate::ivf::{IvfParams, IvfPq4};
+use crate::obs::{Phase, TraceSpan};
 use crate::pq::adc::{range_adc, topk_adc};
 use crate::pq::fastscan::FastScanParams;
 use crate::pq::{CodeWidth, PackedCodes, PqParams, ProductQuantizer};
@@ -122,7 +123,7 @@ impl Index for IndexPq {
             nq
         ];
         exec.stamp_stats(&mut stats, nq);
-        Ok(QueryResponse { hits: out, stats })
+        Ok(QueryResponse { hits: out, stats, traces: Vec::new() })
     }
 
     fn describe(&self) -> String {
@@ -357,6 +358,7 @@ impl IndexPq4FastScan {
             None => return Err(Error::NotSealed),
         };
         // plan: resolved kernel params + the compiled filter, once per call
+        let plan_t0 = req.trace.then(std::time::Instant::now);
         let plan = QueryPlan {
             queries: req.queries,
             dim: self.dim,
@@ -373,6 +375,8 @@ impl IndexPq4FastScan {
         let mask = plan.masks.flat_mask();
         let selectivity = mask.map(|m| m.selectivity()).unwrap_or(1.0);
         let all_filtered = mask.is_some_and(|m| m.pass_count() == 0);
+        // request-level plan cost, attributed to each query it served
+        let plan_us = plan_t0.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
         if all_filtered {
             let stats = QueryStats {
                 codes_scanned: 0,
@@ -383,14 +387,22 @@ impl IndexPq4FastScan {
             return Ok(QueryResponse {
                 hits: vec![Vec::new(); nq],
                 stats: vec![stats; nq],
+                traces: if req.trace { vec![Vec::new(); nq] } else { Vec::new() },
             });
         }
-        let hits: Vec<Vec<Hit>> = exec.run_batch(nq, |qi, scratch| {
+        let results: Vec<(Vec<Hit>, Vec<TraceSpan>)> = exec.run_batch(nq, |qi, scratch| {
+            if req.trace {
+                scratch.trace_mut().enable();
+                scratch.trace_mut().add(Phase::PlanCompile, plan_us, 0, 0);
+            }
+            let t_total = scratch.trace().start();
             let mut lbuf = scratch.take_luts();
             let luts_f32: &[f32] = match plan.luts_for(qi) {
                 Some(ls) => ls,
                 None => {
+                    let t_lut = scratch.trace().start();
                     pq.compute_luts_into(plan.query(qi), &mut lbuf);
+                    scratch.trace_mut().finish(Phase::LutBuild, t_lut);
                     &lbuf
                 }
             };
@@ -403,8 +415,23 @@ impl IndexPq4FastScan {
                 }
             };
             scratch.put_luts(lbuf);
-            row
+            let spans = if req.trace {
+                scratch.trace_mut().finish(Phase::Total, t_total);
+                scratch.trace_mut().add(Phase::Total, plan_us, 0, 0);
+                scratch.trace_mut().drain()
+            } else {
+                Vec::new()
+            };
+            (row, spans)
         });
+        let mut hits = Vec::with_capacity(results.len());
+        let mut traces = if req.trace { Vec::with_capacity(results.len()) } else { Vec::new() };
+        for (row, spans) in results {
+            hits.push(row);
+            if req.trace {
+                traces.push(spans);
+            }
+        }
         let mut stats = vec![
             QueryStats {
                 codes_scanned: self.ntotal,
@@ -416,7 +443,7 @@ impl IndexPq4FastScan {
             nq
         ];
         exec.stamp_stats(&mut stats, nq);
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces })
     }
 }
 
@@ -581,7 +608,7 @@ impl Index for IndexIvfPq4 {
         // semantics as the other indexes
         let (nprobe, ef_search, fs) =
             effective_ivf(req.params.as_ref(), self.inner.nprobe, &self.inner.fastscan);
-        let (hits, stats) = self.inner.query_exec_with(
+        let (hits, stats, traces) = self.inner.query_exec_traced_with(
             req.queries,
             None,
             &req.kind,
@@ -590,8 +617,9 @@ impl Index for IndexIvfPq4 {
             ef_search,
             &fs,
             exec,
+            req.trace,
         )?;
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces })
     }
 
     fn query_with_luts_exec(
@@ -602,7 +630,7 @@ impl Index for IndexIvfPq4 {
     ) -> Result<QueryResponse> {
         let (nprobe, ef_search, fs) =
             effective_ivf(req.params.as_ref(), self.inner.nprobe, &self.inner.fastscan);
-        let (hits, stats) = self.inner.query_exec_with(
+        let (hits, stats, traces) = self.inner.query_exec_traced_with(
             req.queries,
             Some(luts),
             &req.kind,
@@ -611,8 +639,9 @@ impl Index for IndexIvfPq4 {
             ef_search,
             &fs,
             exec,
+            req.trace,
         )?;
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces })
     }
 
     fn lut_signature(&self) -> Option<u64> {

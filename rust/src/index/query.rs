@@ -264,15 +264,26 @@ pub struct QueryRequest<'a> {
     pub kind: QueryKind,
     pub filter: Option<Filter>,
     pub params: Option<SearchParams>,
+    /// Collect a per-phase [`crate::obs::TraceSpan`] breakdown for every
+    /// query in the batch (returned in [`QueryResponse::traces`]).
+    /// Tracing never changes results — hits and stats are bit-identical
+    /// with it on or off — and costs nothing when `false`.
+    pub trace: bool,
 }
 
 impl<'a> QueryRequest<'a> {
     pub fn top_k(queries: &'a [f32], k: usize) -> Self {
-        Self { queries, kind: QueryKind::TopK { k }, filter: None, params: None }
+        Self { queries, kind: QueryKind::TopK { k }, filter: None, params: None, trace: false }
     }
 
     pub fn range(queries: &'a [f32], radius: f32) -> Self {
-        Self { queries, kind: QueryKind::Range { radius }, filter: None, params: None }
+        Self {
+            queries,
+            kind: QueryKind::Range { radius },
+            filter: None,
+            params: None,
+            trace: false,
+        }
     }
 
     pub fn with_filter(mut self, filter: Filter) -> Self {
@@ -282,6 +293,12 @@ impl<'a> QueryRequest<'a> {
 
     pub fn with_params(mut self, params: SearchParams) -> Self {
         self.params = Some(params);
+        self
+    }
+
+    /// Ask for the per-phase trace breakdown.
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
         self
     }
 }
@@ -352,12 +369,20 @@ impl Default for QueryStats {
 pub struct QueryResponse {
     pub hits: Vec<Vec<Hit>>,
     pub stats: Vec<QueryStats>,
+    /// Per-query phase breakdowns, parallel to `hits`, when the request
+    /// set [`QueryRequest::trace`]; empty otherwise (never allocated on
+    /// the untraced path).
+    pub traces: Vec<Vec<crate::obs::TraceSpan>>,
 }
 
 impl QueryResponse {
     /// A well-formed response with `nq` empty hit lists.
     pub fn empty(nq: usize) -> Self {
-        Self { hits: vec![Vec::new(); nq], stats: vec![QueryStats::default(); nq] }
+        Self {
+            hits: vec![Vec::new(); nq],
+            stats: vec![QueryStats::default(); nq],
+            traces: Vec::new(),
+        }
     }
 
     pub fn nq(&self) -> usize {
@@ -504,6 +529,7 @@ mod tests {
                 ],
             ],
             stats: vec![QueryStats::default(); 3],
+            traces: Vec::new(),
         };
         assert_eq!(resp.nq(), 3);
         let r = resp.into_search_result(2);

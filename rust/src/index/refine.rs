@@ -86,6 +86,7 @@ impl Index for IndexRefineFlat {
             kind: base_kind,
             filter: req.filter.clone(),
             params: req.params.clone(),
+            trace: req.trace,
         };
         // the base shortlist rides the same executor; the exact re-rank
         // pass then fans out over the batch with per-thread heap storage
@@ -129,7 +130,8 @@ impl Index for IndexRefineFlat {
         });
         let mut stats = coarse.stats;
         exec.stamp_stats(&mut stats, hits.len());
-        Ok(QueryResponse { hits, stats })
+        // the exact pass is untraced; the base's phase spans carry through
+        Ok(QueryResponse { hits, stats, traces: coarse.traces })
     }
 
     fn set_param(&mut self, key: &str, value: &str) -> Result<()> {

@@ -30,6 +30,7 @@
 use crate::exec::{MaskPlan, QueryExecutor, ScanScratch};
 use crate::hnsw::{Hnsw, HnswParams};
 use crate::index::query::{Filter, Hit, QueryKind, QueryStats};
+use crate::obs::{Phase, TraceSpan};
 use crate::kmeans::{KMeans, KMeansParams};
 use crate::pq::bitwidth::build_width_luts_with;
 use crate::pq::fastscan::{scan_filtered, FastScanParams, FilterMask, ScanSink};
@@ -469,6 +470,31 @@ impl IvfPq4 {
         fastscan: &FastScanParams,
         exec: &QueryExecutor,
     ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>)> {
+        let (hits, stats, _traces) = self.query_exec_traced_with(
+            queries, luts, kind, filter, nprobe, ef_search, fastscan, exec, false,
+        )?;
+        Ok((hits, stats))
+    }
+
+    /// [`IvfPq4::query_exec_with`] plus per-query trace collection: when
+    /// `trace` is set each query also returns its per-phase
+    /// [`TraceSpan`] breakdown (coarse quantization, LUT build, list
+    /// scan, rerank, total — see [`crate::obs`]). Results are
+    /// bit-identical with tracing on or off; with it off this *is*
+    /// `query_exec_with` (no timestamps, no allocations).
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_exec_traced_with(
+        &self,
+        queries: &[f32],
+        luts: Option<&[f32]>,
+        kind: &QueryKind,
+        filter: Option<&Filter>,
+        nprobe: usize,
+        ef_search: Option<usize>,
+        fastscan: &FastScanParams,
+        exec: &QueryExecutor,
+        trace: bool,
+    ) -> Result<(Vec<Vec<Hit>>, Vec<QueryStats>, Vec<Vec<TraceSpan>>)> {
         kind.validate()?;
         let pq = self.pq.as_ref().ok_or(Error::NotTrained)?;
         if queries.len() % self.dim != 0 {
@@ -485,10 +511,17 @@ impl IvfPq4 {
             }
         }
         if nq == 0 {
-            return Ok((Vec::new(), Vec::new()));
+            return Ok((Vec::new(), Vec::new(), Vec::new()));
         }
+        // degenerate answers still honor the trace contract: one (empty)
+        // span row per query when tracing was requested
+        let empty_traces = |nq: usize| if trace { vec![Vec::new(); nq] } else { Vec::new() };
         if self.ntotal == 0 || matches!(kind, QueryKind::TopK { k: 0 }) {
-            return Ok((vec![Vec::new(); nq], vec![QueryStats::default(); nq]));
+            return Ok((
+                vec![Vec::new(); nq],
+                vec![QueryStats::default(); nq],
+                empty_traces(nq),
+            ));
         }
         if !self.is_sealed() {
             return Err(Error::NotSealed);
@@ -501,9 +534,10 @@ impl IvfPq4 {
                 filter_selectivity: 0.0,
                 ..Default::default()
             };
-            return Ok((vec![Vec::new(); nq], vec![stats; nq]));
+            return Ok((vec![Vec::new(); nq], vec![stats; nq], empty_traces(nq)));
         }
         // ---- plan: everything below is resolved once per request ----
+        let plan_t0 = trace.then(std::time::Instant::now);
         let nprobe = self.escalated_nprobe(nprobe.max(1), filter);
         // per-list filter masks, compiled lazily (only probed lists pay)
         // and shared read-only across the whole batch and all workers
@@ -511,28 +545,46 @@ impl IvfPq4 {
             Some(_) => MaskPlan::lists(self.params.nlist),
             None => MaskPlan::None,
         };
+        // request-level plan cost, attributed to each query it served
+        let plan_us = plan_t0.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
         let run_one = |qi: usize, scratch: &mut ScanScratch, list_exec: Option<&QueryExecutor>| {
+            if trace {
+                scratch.trace_mut().enable();
+                scratch.trace_mut().add(Phase::PlanCompile, plan_us, 0, 0);
+            }
+            let t_total = scratch.trace().start();
             let q = &queries[qi * self.dim..(qi + 1) * self.dim];
             let mut lbuf = scratch.take_luts();
             let luts_f32: &[f32] = match luts {
                 Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
                 None => {
+                    let t_lut = scratch.trace().start();
                     pq.compute_luts_into(q, &mut lbuf);
+                    scratch.trace_mut().finish(Phase::LutBuild, t_lut);
                     &lbuf
                 }
             };
-            let out = self.query_one_exec(
+            let (row, st) = self.query_one_exec(
                 pq, q, luts_f32, kind, filter, &masks, nprobe, ef_search, fastscan, scratch,
                 list_exec,
             );
             scratch.put_luts(lbuf);
-            out
+            let spans = if trace {
+                scratch.trace_mut().finish(Phase::Total, t_total);
+                // fold the shared plan time into Total so the per-phase
+                // sum and the total keep describing the same window
+                scratch.trace_mut().add(Phase::Total, plan_us, 0, 0);
+                scratch.trace_mut().drain()
+            } else {
+                Vec::new()
+            };
+            (row, st, spans)
         };
         // ---- execute: batch fan-out, or intra-query multi-list fan-out
         // for batches too small to fill the thread budget. Both schedules
         // compute the identical per-list candidate sets.
         let batch_mode = nq >= exec.threads() || exec.threads() <= 1;
-        let results: Vec<(Vec<Hit>, QueryStats)> = if batch_mode {
+        let results: Vec<(Vec<Hit>, QueryStats, Vec<TraceSpan>)> = if batch_mode {
             exec.run_batch(nq, |qi, scratch| run_one(qi, scratch, None))
         } else {
             let mut guard = exec.checkout_scratch();
@@ -540,7 +592,8 @@ impl IvfPq4 {
         };
         let mut hits = Vec::with_capacity(nq);
         let mut stats = Vec::with_capacity(nq);
-        for (row, mut st) in results {
+        let mut traces = if trace { Vec::with_capacity(nq) } else { Vec::new() };
+        for (row, mut st, spans) in results {
             // batch mode: the fan-out width is the batch's; intra-query
             // mode: query_one_exec already recorded the width its actual
             // probe count fanned out over (may be below nprobe when the
@@ -551,8 +604,11 @@ impl IvfPq4 {
             st.scratch_bytes = exec.scratch_high_water_bytes();
             hits.push(row);
             stats.push(st);
+            if trace {
+                traces.push(spans);
+            }
         }
-        Ok((hits, stats))
+        Ok((hits, stats, traces))
     }
 
     /// Scan one probed list into per-list candidates: `(d16, position)`
@@ -631,6 +687,7 @@ impl IvfPq4 {
         list_exec: Option<&QueryExecutor>,
     ) -> (Vec<Hit>, QueryStats) {
         // 1. coarse quantization (paper §4 step 1-2)
+        let t_coarse = scratch.trace().start();
         let mut probes = scratch.take_probes();
         {
             let mut hbuf = scratch.take_heap();
@@ -646,18 +703,24 @@ impl IvfPq4 {
             );
             scratch.put_heap(hbuf);
         }
+        let n_probes = probes.len() as u64;
+        scratch.trace_mut().finish_with(Phase::CoarseQuant, t_coarse, n_probes, 0);
 
         // 2. one LUT set shared across probed lists (by_residual = false),
         //    quantized/fused per the index's code width, built on scratch
+        let t_lut = scratch.trace().start();
         let wl = build_width_luts_with(luts_f32, self.pq_m, self.width, scratch.wl_buf_mut());
         let range_bound = match kind {
             QueryKind::Range { radius } => wl.qluts.collection_bound(*radius, fastscan.rerank),
             QueryKind::TopK { .. } => 0,
         };
+        scratch.trace_mut().finish(Phase::LutBuild, t_lut);
 
         // 3. per-list fastscan into candidates, merged in probe order.
         //    Candidates encode (list, position) in the label: position in
-        //    the low 32 bits, probe-list id above.
+        //    the low 32 bits, probe-list id above. Traced, the whole
+        //    fork/join (or serial walk) is one wall-clock ListScan span.
+        let t_scan = scratch.trace().start();
         let mut merged = scratch.take_merged();
         let mut considered = 0usize;
         let mut passed = 0usize;
@@ -724,6 +787,17 @@ impl IvfPq4 {
                 scratch.put_items(storage);
             }
         }
+        let bytes_mapped: usize = probes
+            .iter()
+            .filter_map(|&c| self.lists[c].packed.as_ref())
+            .map(|p| p.mapped_bytes())
+            .sum();
+        scratch.trace_mut().finish_with(
+            Phase::ListScan,
+            t_scan,
+            considered as u64,
+            bytes_mapped as u64,
+        );
         let st = QueryStats {
             codes_scanned: considered,
             lists_probed: probes.len(),
@@ -736,11 +810,7 @@ impl IvfPq4 {
             // (the caller overwrites this with the batch width in batch
             // mode); serial scans report 1
             threads_used: list_exec.map(|le| le.threads_for(probes.len())).unwrap_or(1),
-            bytes_mapped: probes
-                .iter()
-                .filter_map(|&c| self.lists[c].packed.as_ref())
-                .map(|p| p.mapped_bytes())
-                .sum(),
+            bytes_mapped,
             prefetch_lists: prefetched,
             ..Default::default()
         };
@@ -750,6 +820,8 @@ impl IvfPq4 {
         //    packed list, the external id from the list's id array —
         //    duplicate external ids re-rank independently, never a panic.
         let unpack = |pref: i64| ((pref >> 32) as usize, (pref & 0xFFFF_FFFF) as usize);
+        let t_rerank = scratch.trace().start();
+        let n_cands = merged.len() as u64;
         let row: Vec<Hit> = match kind {
             QueryKind::TopK { k } => {
                 let mut selection =
@@ -819,6 +891,7 @@ impl IvfPq4 {
         scratch.put_merged(merged);
         wl.recycle(scratch.wl_buf_mut());
         scratch.put_probes(probes);
+        scratch.trace_mut().finish_with(Phase::Rerank, t_rerank, n_cands, 0);
         (row, st)
     }
 

@@ -163,8 +163,11 @@ commands:
   search        build an index from a factory string and run queries
   serve         start the TCP batching coordinator (--index-file <path>
                 serves a saved index; --mmap opens it zero-copy and
-                --budget-mb <MiB> caps advised residency)
-  client        drive a running server
+                --budget-mb <MiB> caps advised residency; --metrics-addr
+                HOST:PORT serves Prometheus exposition over HTTP)
+  client        drive a running server (--trace prints a per-phase span
+                breakdown; --metrics fetches the Prometheus exposition;
+                --slowlog dumps the server's worst-query log)
   bench-fig2    paper Fig. 2 (PQ vs 4-bit PQ recall/QPS sweep)
   bench-table1  paper Table 1 (IVF+HNSW+PQ16x4fs at scale; --mmap
                 measures the zero-copy mapped reopen, --budget-mb caps it)
@@ -263,6 +266,9 @@ fn search(args: &Args) -> armpq::Result<()> {
 fn serve(args: &Args) -> armpq::Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
     let addr = args.get_str("addr", "127.0.0.1:7878");
+    // `--metrics-addr HOST:PORT` binds a one-endpoint HTTP listener whose
+    // every GET answers with the Prometheus text exposition
+    let metrics_addr = args.get_opt("metrics-addr");
 
     // `--index-file` serves a saved index instead of building a synthetic
     // one; `--mmap` / `--budget-mb` (or factory-string `mmap=true,…`)
@@ -281,8 +287,15 @@ fn serve(args: &Args) -> armpq::Result<()> {
         let backend = Arc::new(armpq::coordinator::IndexBackend::new(index)?);
         let server = Server::start(
             backend,
-            ServerConfig { addr: addr.clone(), ..Default::default() },
+            ServerConfig {
+                addr: addr.clone(),
+                metrics_addr: metrics_addr.clone(),
+                ..Default::default()
+            },
         )?;
+        if let Some(m) = server.metrics_addr {
+            println!("metrics exposition on http://{m}/metrics");
+        }
         println!("serving on {} (dim {dim}) — Ctrl-C to stop", server.addr);
         loop {
             std::thread::sleep(std::time::Duration::from_secs(5));
@@ -310,8 +323,11 @@ fn serve(args: &Args) -> armpq::Result<()> {
     let backend = Arc::new(IvfBackend::new(idx)?);
     let server = Server::start(
         backend,
-        ServerConfig { addr: addr.clone(), ..Default::default() },
+        ServerConfig { addr: addr.clone(), metrics_addr, ..Default::default() },
     )?;
+    if let Some(m) = server.metrics_addr {
+        println!("metrics exposition on http://{m}/metrics");
+    }
     println!("serving on {} (dim {}) — Ctrl-C to stop", server.addr, ds.dim);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
@@ -327,15 +343,44 @@ fn client(args: &Args) -> armpq::Result<()> {
         .map_err(|e| armpq::Error::Serve(format!("bad addr: {e}")))?;
     let mut client = armpq::coordinator::Client::connect(&addr)?;
     client.ping()?;
+    // `--metrics` / `--slowlog`: fetch the observability surfaces and exit
+    if args.get_flag("metrics") {
+        println!("{}", client.metrics_text()?);
+        return Ok(());
+    }
+    if args.get_flag("slowlog") {
+        println!("{}", client.slowlog()?.to_string());
+        return Ok(());
+    }
+    let trace = args.get_flag("trace");
     // queries drawn from the same distribution as the served dataset
     let ds = experiments::make_dataset(&cfg.dataset, 1, cfg.nq, cfg.seed);
     let mut stats = armpq::util::timer::LatencyStats::new();
     for qi in 0..cfg.nq {
         let t = Timer::start();
-        let (_d, _l, batch) = client.search(ds.query(qi), cfg.k)?;
-        stats.record_ms(t.elapsed_ms());
-        if qi == 0 {
-            println!("first response: batch_size={batch}");
+        if trace {
+            let kind = armpq::index::query::QueryKind::TopK { k: cfg.k };
+            let (_hits, _qstats, spans) =
+                client.query_traced(ds.query(qi), &kind, None, None)?;
+            stats.record_ms(t.elapsed_ms());
+            if qi == 0 {
+                println!("phase breakdown (query 0):");
+                for s in &spans {
+                    println!(
+                        "  {:14} {:8} us  count={:<8} bytes={}",
+                        s.phase.name(),
+                        s.us,
+                        s.count,
+                        s.bytes
+                    );
+                }
+            }
+        } else {
+            let (_d, _l, batch) = client.search(ds.query(qi), cfg.k)?;
+            stats.record_ms(t.elapsed_ms());
+            if qi == 0 {
+                println!("first response: batch_size={batch}");
+            }
         }
     }
     println!(

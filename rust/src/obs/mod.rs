@@ -1,0 +1,421 @@
+//! Observability: per-query trace spans for the query pipeline.
+//!
+//! The paper's speedup claim is a claim about *where microseconds go* —
+//! LUT build vs. shuffle scan vs. rerank — so the serving stack needs a
+//! way to attribute a query's latency to its phases without perturbing
+//! the thing it measures. This module is that facility; the coordinator
+//! layers histograms, a slow-query log and Prometheus exposition on top
+//! (see `coordinator/metrics.rs`).
+//!
+//! # Span lifecycle
+//!
+//! Every pooled [`ScanScratch`](crate::exec::ScanScratch) carries one
+//! [`TraceBuf`]: a fixed inline array of per-[`Phase`] accumulator slots
+//! (wall µs, a unit count, bytes touched). The query path drives it:
+//!
+//! 1. A traced request (`QueryRequest { trace: true, .. }`) calls
+//!    [`TraceBuf::enable`] at the top of its per-query closure. Pooled
+//!    scratches start (and are always returned) disabled, so a previous
+//!    query's flag can never leak into the next checkout.
+//! 2. Instrumented phases bracket themselves with [`TraceBuf::start`] /
+//!    [`TraceBuf::finish_with`], or fold externally measured costs in
+//!    via [`TraceBuf::add`]. Phases are *non-overlapping leaves*: the
+//!    scan kernels record under the ambient [`TraceBuf::scan_phase`]
+//!    label (`ListScan` for IVF/flat regions, `SegmentScan` for sealed
+//!    segment units) so the same kernel code attributes correctly from
+//!    every caller and nothing is double-counted.
+//! 3. At the end of the query, [`TraceBuf::drain`] snapshots the
+//!    non-empty slots into `Vec<TraceSpan>` (in [`Phase::ALL`] order),
+//!    zeroes the buffer and **disables it** — re-arming the scratch for
+//!    pool reuse.
+//!
+//! The [`Phase::Total`] span brackets the whole per-query execution, so
+//! `phase_sum_us(spans) ≈ total` holds whenever the phases run serially.
+//! Parallel fan-out (IVF multi-list) records its scan as one wall-clock
+//! span around the fork/join, keeping the identity; the segmented index
+//! takes its serial unit walk when traced for the same reason.
+//!
+//! # Overhead contract
+//!
+//! Tracing must be free when off and cheap when on:
+//!
+//! * **Off (steady state):** no timestamps — [`SpanTimer`] holds
+//!   `Option<Instant>` and `start` returns `None` without touching the
+//!   clock — and no allocation: the slots live inline in the scratch,
+//!   so the PR 5 no-allocation guarantee is untouched (asserted by
+//!   `obs_trace_off_steady_state_no_alloc`).
+//! * **On:** two `Instant::now` calls per phase plus one `Vec` of at
+//!   most [`NUM_PHASES`] spans per query at drain time.
+//! * **Always:** results are bit-identical with tracing on or off — the
+//!   trace observes admission decisions, it never feeds back into them
+//!   (differential-tested across backend × width × kind).
+
+use std::time::Instant;
+
+/// Pipeline phases a query's wall time is attributed to. The set mirrors
+/// the paper's cost decomposition (Fig. 2): table construction, coarse
+/// quantization, the SIMD scan itself, and the float rerank tail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Request-level plan work: param resolution, filter mask planning,
+    /// nprobe escalation. Amortized per query when a batch shares it.
+    PlanCompile,
+    /// Coarse quantizer assignment (query → probed IVF lists).
+    CoarseQuant,
+    /// Float LUT computation plus u8 quantization/packing for the
+    /// kernel (the paper's "table construction" cost).
+    LutBuild,
+    /// SIMD scan over flat or per-probed-list packed code regions.
+    ListScan,
+    /// SIMD scan over sealed segment code regions.
+    SegmentScan,
+    /// Memtable (unsealed rows) scan in the segmented index.
+    MemtableScan,
+    /// Candidate merging across probed lists / scan units / shards.
+    Merge,
+    /// Exact-distance rerank of surviving candidates.
+    Rerank,
+    /// The whole per-query execution; phases above are its leaves.
+    Total,
+}
+
+/// Number of distinct phases (the size of a [`TraceBuf`]'s slot array).
+pub const NUM_PHASES: usize = 9;
+
+impl Phase {
+    /// Every phase, in canonical (pipeline) order.
+    pub const ALL: [Phase; NUM_PHASES] = [
+        Phase::PlanCompile,
+        Phase::CoarseQuant,
+        Phase::LutBuild,
+        Phase::ListScan,
+        Phase::SegmentScan,
+        Phase::MemtableScan,
+        Phase::Merge,
+        Phase::Rerank,
+        Phase::Total,
+    ];
+
+    /// Stable snake_case name used on the wire and as the Prometheus
+    /// `phase` label value.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::PlanCompile => "plan_compile",
+            Phase::CoarseQuant => "coarse_quant",
+            Phase::LutBuild => "lut_build",
+            Phase::ListScan => "list_scan",
+            Phase::SegmentScan => "segment_scan",
+            Phase::MemtableScan => "memtable_scan",
+            Phase::Merge => "merge",
+            Phase::Rerank => "rerank",
+            Phase::Total => "total",
+        }
+    }
+
+    /// Inverse of [`Phase::name`] (wire parsing).
+    pub fn from_name(s: &str) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    /// Dense index into per-phase arrays ([`NUM_PHASES`] slots, canonical
+    /// order) — the metrics registry keys its phase histograms with this.
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Phase::PlanCompile => 0,
+            Phase::CoarseQuant => 1,
+            Phase::LutBuild => 2,
+            Phase::ListScan => 3,
+            Phase::SegmentScan => 4,
+            Phase::MemtableScan => 5,
+            Phase::Merge => 6,
+            Phase::Rerank => 7,
+            Phase::Total => 8,
+        }
+    }
+}
+
+/// One completed phase of one query: wall time plus the phase's natural
+/// cost counters (codes scanned, candidates merged, …) and the mapped
+/// bytes the phase touched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceSpan {
+    pub phase: Phase,
+    /// Wall-clock microseconds attributed to the phase.
+    pub us: u64,
+    /// Phase-specific unit count (codes scanned, lists probed,
+    /// candidates reranked…); 0 when the phase has no natural unit.
+    pub count: u64,
+    /// Mapped code bytes the phase walked (0 for heap-backed regions).
+    pub bytes: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Slot {
+    us: u64,
+    count: u64,
+    bytes: u64,
+    hit: bool,
+}
+
+/// Per-scratch span accumulator. Inline, fixed-size, allocation-free;
+/// see the module docs for the lifecycle and overhead contract.
+#[derive(Clone, Debug)]
+pub struct TraceBuf {
+    on: bool,
+    scan_phase: Phase,
+    slots: [Slot; NUM_PHASES],
+}
+
+impl Default for TraceBuf {
+    fn default() -> Self {
+        TraceBuf { on: false, scan_phase: Phase::ListScan, slots: [Slot::default(); NUM_PHASES] }
+    }
+}
+
+impl TraceBuf {
+    /// Is tracing armed for the current query?
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Arm tracing for the current query, clearing any stale slots.
+    pub fn enable(&mut self) {
+        self.slots = [Slot::default(); NUM_PHASES];
+        self.scan_phase = Phase::ListScan;
+        self.on = true;
+    }
+
+    /// Label the next kernel-level scan spans record under (`ListScan`
+    /// by default; the segmented index sets `SegmentScan` for sealed
+    /// units so shared scan code attributes correctly).
+    #[inline]
+    pub fn set_scan_phase(&mut self, phase: Phase) {
+        self.scan_phase = phase;
+    }
+
+    /// The ambient label for kernel-level scan spans.
+    #[inline]
+    pub fn scan_phase(&self) -> Phase {
+        self.scan_phase
+    }
+
+    /// Disarm without snapshotting — the pool's check-in safety net for
+    /// error paths that bailed before draining (stale slots are cleared
+    /// by the next [`TraceBuf::enable`]).
+    #[inline]
+    pub fn disarm(&mut self) {
+        self.on = false;
+        self.scan_phase = Phase::ListScan;
+    }
+
+    /// Begin timing a span. When tracing is off this is a no-op that
+    /// never reads the clock.
+    #[inline]
+    pub fn start(&self) -> SpanTimer {
+        SpanTimer { t0: if self.on { Some(Instant::now()) } else { None } }
+    }
+
+    /// Close a timed span with no counters.
+    #[inline]
+    pub fn finish(&mut self, phase: Phase, t: SpanTimer) {
+        self.finish_with(phase, t, 0, 0);
+    }
+
+    /// Close a timed span, folding its elapsed time and counters into
+    /// the phase's slot (repeat spans of one phase accumulate).
+    #[inline]
+    pub fn finish_with(&mut self, phase: Phase, t: SpanTimer, count: u64, bytes: u64) {
+        if let Some(t0) = t.t0 {
+            self.add(phase, t0.elapsed().as_micros() as u64, count, bytes);
+        }
+    }
+
+    /// Fold an externally measured cost into a phase (used to amortize
+    /// request-level plan work across a batch's queries).
+    #[inline]
+    pub fn add(&mut self, phase: Phase, us: u64, count: u64, bytes: u64) {
+        if !self.on {
+            return;
+        }
+        let s = &mut self.slots[phase.idx()];
+        s.us += us;
+        s.count += count;
+        s.bytes += bytes;
+        s.hit = true;
+    }
+
+    /// Snapshot the recorded spans (in [`Phase::ALL`] order), reset the
+    /// buffer and disable tracing — the scratch goes back to its pool
+    /// re-armed for untraced reuse. Returns an empty `Vec` (no
+    /// allocation) when tracing was off.
+    pub fn drain(&mut self) -> Vec<TraceSpan> {
+        if !self.on {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(NUM_PHASES);
+        for p in Phase::ALL {
+            let s = self.slots[p.idx()];
+            if s.hit {
+                out.push(TraceSpan { phase: p, us: s.us, count: s.count, bytes: s.bytes });
+            }
+        }
+        self.slots = [Slot::default(); NUM_PHASES];
+        self.scan_phase = Phase::ListScan;
+        self.on = false;
+        out
+    }
+}
+
+/// In-flight timing handle; `None` when tracing is off so the disabled
+/// path never touches the clock.
+pub struct SpanTimer {
+    t0: Option<Instant>,
+}
+
+/// Fold per-shard (or per-unit) span rows into one row by summing each
+/// phase's time and counters. Used by the sharded router so a fanned-out
+/// query still reports one breakdown.
+pub fn merge_spans(rows: &[&[TraceSpan]]) -> Vec<TraceSpan> {
+    let mut acc = [Slot::default(); NUM_PHASES];
+    for row in rows {
+        for sp in *row {
+            let s = &mut acc[sp.phase.idx()];
+            s.us += sp.us;
+            s.count += sp.count;
+            s.bytes += sp.bytes;
+            s.hit = true;
+        }
+    }
+    Phase::ALL
+        .into_iter()
+        .filter(|p| acc[p.idx()].hit)
+        .map(|p| {
+            let s = acc[p.idx()];
+            TraceSpan { phase: p, us: s.us, count: s.count, bytes: s.bytes }
+        })
+        .collect()
+}
+
+/// Sum of leaf-phase wall time (everything except [`Phase::Total`]) —
+/// the quantity the acceptance criterion compares against the `Total`
+/// span.
+pub fn phase_sum_us(spans: &[TraceSpan]) -> u64 {
+    spans.iter().filter(|s| s.phase != Phase::Total).map(|s| s.us).sum()
+}
+
+/// Wall time of the [`Phase::Total`] span, if present.
+pub fn total_us(spans: &[TraceSpan]) -> Option<u64> {
+    spans.iter().find(|s| s.phase == Phase::Total).map(|s| s.us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_buf_records_nothing_and_drains_empty() {
+        let mut tb = TraceBuf::default();
+        assert!(!tb.enabled());
+        let t = tb.start();
+        assert!(t.t0.is_none(), "disabled start must not read the clock");
+        tb.finish_with(Phase::ListScan, t, 100, 100);
+        tb.add(Phase::Rerank, 5, 5, 0);
+        let spans = tb.drain();
+        assert!(spans.is_empty());
+        assert_eq!(spans.capacity(), 0, "disabled drain must not allocate");
+    }
+
+    #[test]
+    fn enabled_buf_accumulates_and_drain_disarms() {
+        let mut tb = TraceBuf::default();
+        tb.enable();
+        tb.add(Phase::LutBuild, 10, 0, 0);
+        tb.add(Phase::ListScan, 30, 1000, 4096);
+        tb.add(Phase::ListScan, 20, 500, 0); // repeat spans accumulate
+        tb.add(Phase::Total, 70, 0, 0);
+        let spans = tb.drain();
+        assert_eq!(
+            spans,
+            vec![
+                TraceSpan { phase: Phase::LutBuild, us: 10, count: 0, bytes: 0 },
+                TraceSpan { phase: Phase::ListScan, us: 50, count: 1500, bytes: 4096 },
+                TraceSpan { phase: Phase::Total, us: 70, count: 0, bytes: 0 },
+            ]
+        );
+        assert_eq!(phase_sum_us(&spans), 60);
+        assert_eq!(total_us(&spans), Some(70));
+        // drained ⇒ disarmed and empty
+        assert!(!tb.enabled());
+        assert!(tb.drain().is_empty());
+    }
+
+    #[test]
+    fn zero_us_span_still_surfaces() {
+        // A phase that ran but took <1µs must still appear (count carries
+        // the information even when the clock rounds to zero).
+        let mut tb = TraceBuf::default();
+        tb.enable();
+        tb.add(Phase::CoarseQuant, 0, 8, 0);
+        let spans = tb.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].phase, Phase::CoarseQuant);
+        assert_eq!(spans[0].count, 8);
+    }
+
+    #[test]
+    fn scan_phase_defaults_and_resets() {
+        let mut tb = TraceBuf::default();
+        assert_eq!(tb.scan_phase(), Phase::ListScan);
+        tb.enable();
+        tb.set_scan_phase(Phase::SegmentScan);
+        assert_eq!(tb.scan_phase(), Phase::SegmentScan);
+        tb.add(Phase::SegmentScan, 1, 0, 0);
+        tb.drain();
+        assert_eq!(tb.scan_phase(), Phase::ListScan, "drain must reset the ambient label");
+    }
+
+    #[test]
+    fn timer_measures_elapsed_when_enabled() {
+        let mut tb = TraceBuf::default();
+        tb.enable();
+        let t = tb.start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        tb.finish_with(Phase::Rerank, t, 3, 0);
+        let spans = tb.drain();
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].us >= 1_000, "slept 2ms but recorded {}µs", spans[0].us);
+        assert_eq!(spans[0].count, 3);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Phase::from_name("nope"), None);
+    }
+
+    #[test]
+    fn merge_spans_sums_per_phase() {
+        let a = vec![
+            TraceSpan { phase: Phase::LutBuild, us: 5, count: 0, bytes: 0 },
+            TraceSpan { phase: Phase::SegmentScan, us: 40, count: 100, bytes: 64 },
+        ];
+        let b = vec![
+            TraceSpan { phase: Phase::SegmentScan, us: 60, count: 300, bytes: 128 },
+            TraceSpan { phase: Phase::Total, us: 110, count: 0, bytes: 0 },
+        ];
+        let m = merge_spans(&[&a, &b]);
+        assert_eq!(
+            m,
+            vec![
+                TraceSpan { phase: Phase::LutBuild, us: 5, count: 0, bytes: 0 },
+                TraceSpan { phase: Phase::SegmentScan, us: 100, count: 400, bytes: 192 },
+                TraceSpan { phase: Phase::Total, us: 110, count: 0, bytes: 0 },
+            ]
+        );
+        assert!(merge_spans(&[]).is_empty());
+    }
+}

@@ -190,6 +190,51 @@ impl FilterMask {
     }
 }
 
+/// Scan-side cost counters for one packed code region, as the tracing
+/// layer attributes them (codes considered, blocks and bytes walked, and
+/// how many of those bytes were windows into a mapped file). Derived
+/// from the region's frozen layout — the kernels themselves stay
+/// untouched, so counting costs nothing on the scan path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScanCounts {
+    /// Code positions the region holds (every one is a candidate the
+    /// admission mask decides on).
+    pub codes: usize,
+    /// 32-vector blocks the scan walks.
+    pub blocks: usize,
+    /// Packed code bytes behind those blocks.
+    pub code_bytes: usize,
+    /// Of `code_bytes`, how many live in a mapped (zero-copy) region.
+    pub mapped_bytes: usize,
+}
+
+impl ScanCounts {
+    /// The counters a full scan of `packed` incurs.
+    pub fn of(packed: &PackedCodes) -> ScanCounts {
+        ScanCounts {
+            codes: packed.n,
+            blocks: packed.nblocks(),
+            code_bytes: packed.nblocks() * packed.block_bytes(),
+            mapped_bytes: packed.mapped_bytes(),
+        }
+    }
+}
+
+/// [`scan_filtered`] plus the region's [`ScanCounts`] — the entry the
+/// traced query paths use so span counters and kernel admission can never
+/// disagree about what was scanned.
+pub fn scan_filtered_counted(
+    packed: &PackedCodes,
+    luts: &KernelLuts,
+    backend: Backend,
+    labels: Option<&[i64]>,
+    filter: Option<&FilterMask>,
+    sink: &mut ScanSink<'_>,
+) -> ScanCounts {
+    scan_filtered(packed, luts, backend, labels, filter, sink);
+    ScanCounts::of(packed)
+}
+
 /// Where scanned candidates go: the top-k reservoir (threshold tightens as
 /// it fills) or a range collector (fixed quantized threshold, unbounded
 /// hits). One enum instead of a trait so the fused `#[target_feature]`

@@ -35,6 +35,7 @@ use crate::exec::{range_packed, topk_packed, MaskPlan, QueryExecutor, ScanScratc
 use crate::index::params::effective_fastscan;
 use crate::index::query::{Hit, QueryKind, QueryRequest, QueryResponse, QueryStats};
 use crate::index::{Index, SearchParams};
+use crate::obs::{Phase, TraceSpan};
 use crate::pq::fastscan::{FastScanParams, FilterMask};
 use crate::pq::{CodeWidth, ProductQuantizer};
 use crate::segment::memtable::Memtable;
@@ -385,10 +386,15 @@ impl SegInner {
                 tombstones: ntomb,
                 ..Default::default()
             };
-            return Ok(QueryResponse { hits: vec![Vec::new(); nq], stats: vec![stats; nq] });
+            return Ok(QueryResponse {
+                hits: vec![Vec::new(); nq],
+                stats: vec![stats; nq],
+                traces: Vec::new(),
+            });
         }
 
         // scan units: sealed segments in stack order, then the memtable
+        let plan_t0 = req.trace.then(std::time::Instant::now);
         let mut units: Vec<Unit<'_>> =
             snap.segments.iter().map(|s| Unit::Sealed(s.as_ref())).collect();
         if !snap.memtable.is_empty() {
@@ -401,6 +407,8 @@ impl SegInner {
         } else {
             MaskPlan::None
         };
+        // request-level plan cost, attributed to each query it served
+        let plan_us = plan_t0.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
         let filter = req.filter.as_ref();
         let tomb = snap.tombstones.as_ref();
         let scan_unit = |u: usize, luts_f32: &[f32], scratch: &mut ScanScratch| -> Vec<Hit> {
@@ -440,20 +448,34 @@ impl SegInner {
                         scratch,
                     ),
                 },
-                Unit::Mem(mt) => match req.kind {
-                    QueryKind::TopK { k } => {
-                        let (hits, store) =
-                            mt.scan_topk(&pq, luts_f32, k, mask, scratch.take_heap());
-                        scratch.put_heap(store);
-                        hits
-                    }
-                    QueryKind::Range { radius } => mt.scan_range(&pq, luts_f32, radius, mask),
-                },
+                Unit::Mem(mt) => {
+                    let t_mem = scratch.trace().start();
+                    let hits = match req.kind {
+                        QueryKind::TopK { k } => {
+                            let (hits, store) =
+                                mt.scan_topk(&pq, luts_f32, k, mask, scratch.take_heap());
+                            scratch.put_heap(store);
+                            hits
+                        }
+                        QueryKind::Range { radius } => mt.scan_range(&pq, luts_f32, radius, mask),
+                    };
+                    scratch.trace_mut().finish_with(
+                        Phase::MemtableScan,
+                        t_mem,
+                        mt.len() as u64,
+                        0,
+                    );
+                    hits
+                }
             }
         };
 
-        let fan_units = nq == 1 && exec.threads() > 1 && nunits > 1;
-        let hits: Vec<Vec<Hit>> = if fan_units {
+        // Traced queries take the serial unit walk even when the fan-out
+        // would apply: both paths are bit-identical (the thread-count
+        // invariant), and the serial walk keeps every phase a wall-clock
+        // leaf so the trace's phase sum tracks end-to-end latency.
+        let fan_units = nq == 1 && exec.threads() > 1 && nunits > 1 && !req.trace;
+        let results: Vec<(Vec<Hit>, Vec<TraceSpan>)> = if fan_units {
             // single wide query: fan the units out instead of the batch —
             // one LUT build serves every segment (shared codebook)
             let owned;
@@ -465,17 +487,25 @@ impl SegInner {
                 }
             };
             let rows = exec.run_tasks(nunits, |u, scratch| scan_unit(u, luts_f32, scratch));
-            vec![merge_unit_rows(rows, req.kind)]
+            vec![(merge_unit_rows(rows, req.kind), Vec::new())]
         } else {
             exec.run_batch(nq, |qi, scratch| {
+                if req.trace {
+                    scratch.trace_mut().enable();
+                    scratch.trace_mut().add(Phase::PlanCompile, plan_us, 0, 0);
+                    scratch.trace_mut().set_scan_phase(Phase::SegmentScan);
+                }
+                let t_total = scratch.trace().start();
                 let mut lbuf = scratch.take_luts();
                 let luts_f32: &[f32] = match luts {
                     Some(ls) => &ls[qi * lut_len..(qi + 1) * lut_len],
                     None => {
+                        let t_lut = scratch.trace().start();
                         pq.compute_luts_into(
                             &req.queries[qi * self.dim..(qi + 1) * self.dim],
                             &mut lbuf,
                         );
+                        scratch.trace_mut().finish(Phase::LutBuild, t_lut);
                         &lbuf
                     }
                 };
@@ -492,9 +522,28 @@ impl SegInner {
                     })
                     .collect();
                 scratch.put_luts(lbuf);
-                merge_unit_rows(rows, req.kind)
+                let t_merge = scratch.trace().start();
+                let n_in: u64 = rows.iter().map(|r| r.len() as u64).sum();
+                let row = merge_unit_rows(rows, req.kind);
+                scratch.trace_mut().finish_with(Phase::Merge, t_merge, n_in, 0);
+                let spans = if req.trace {
+                    scratch.trace_mut().finish(Phase::Total, t_total);
+                    scratch.trace_mut().add(Phase::Total, plan_us, 0, 0);
+                    scratch.trace_mut().drain()
+                } else {
+                    Vec::new()
+                };
+                (row, spans)
             })
         };
+        let mut hits = Vec::with_capacity(results.len());
+        let mut traces = if req.trace { Vec::with_capacity(results.len()) } else { Vec::new() };
+        for (row, spans) in results {
+            hits.push(row);
+            if req.trace {
+                traces.push(spans);
+            }
+        }
 
         // stats: every query of the batch scanned every unit, and every
         // unit mask was built during the scan
@@ -538,7 +587,7 @@ impl SegInner {
             nq
         ];
         exec.stamp_stats(&mut stats, if nq == 1 { nunits } else { nq });
-        Ok(QueryResponse { hits, stats })
+        Ok(QueryResponse { hits, stats, traces })
     }
 }
 

@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct StorageCounters {
     mapped_code_bytes: AtomicU64,
     resident_code_bytes: AtomicU64,
+    resident_sampled_bytes: AtomicU64,
     mmap_open_total: AtomicU64,
 }
 
@@ -24,6 +25,15 @@ impl StorageCounters {
     /// code pages this process asked the kernel to keep warm.
     pub fn resident_code_bytes(&self) -> u64 {
         self.resident_code_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes of live mapped regions the kernel actually held in RAM at
+    /// the last [`super::mmap::sample_residency`] call (`mincore`
+    /// ground truth, stride-sampled for very large maps) — versus
+    /// [`StorageCounters::resident_code_bytes`], which only tracks what
+    /// this process *advised*.
+    pub fn resident_sampled_bytes(&self) -> u64 {
+        self.resident_sampled_bytes.load(Ordering::Relaxed)
     }
 
     /// Maps opened over the process lifetime (monotonic counter).
@@ -48,6 +58,10 @@ impl StorageCounters {
             self.resident_code_bytes.fetch_sub((-delta) as u64, Ordering::Relaxed);
         }
     }
+
+    pub(crate) fn note_resident_sampled(&self, bytes: u64) {
+        self.resident_sampled_bytes.store(bytes, Ordering::Relaxed);
+    }
 }
 
 /// The process-wide gauge registry.
@@ -55,6 +69,7 @@ pub fn counters() -> &'static StorageCounters {
     static COUNTERS: StorageCounters = StorageCounters {
         mapped_code_bytes: AtomicU64::new(0),
         resident_code_bytes: AtomicU64::new(0),
+        resident_sampled_bytes: AtomicU64::new(0),
         mmap_open_total: AtomicU64::new(0),
     };
     &COUNTERS

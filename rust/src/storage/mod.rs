@@ -56,7 +56,7 @@ mod prefetch;
 mod store;
 
 pub use budget::{counters, MemoryBudget, StorageCounters};
-pub use mmap::Mmap;
+pub use mmap::{sample_residency, Mmap};
 pub use prefetch::{prefetch_read, prefetch_span, PREFETCH_SPAN_BYTES};
 pub use store::CodeStore;
 

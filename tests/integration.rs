@@ -366,6 +366,7 @@ fn threads_differential_fastscan_and_ivf() {
                                 kind,
                                 filter: filter.clone(),
                                 params: Some(params.clone()),
+                                trace: false,
                             };
                             let r1 = idx.query_exec(&req, &exec1).unwrap();
                             let r4 = idx.query_exec(&req, &exec4).unwrap();
@@ -415,6 +416,7 @@ fn threads_differential_flat_pq_refine() {
                         kind,
                         filter: filter.clone(),
                         params: None,
+                        trace: false,
                     };
                     let r1 = idx.query_exec(&req, &exec1).unwrap();
                     let r4 = idx.query_exec(&req, &exec4).unwrap();
@@ -941,6 +943,7 @@ fn segment_matches_one_shot_sealed_index() {
                     kind,
                     filter: None,
                     params: None,
+                    trace: false,
                 };
                 let rs = seg.query_exec(&req, &exec).unwrap();
                 let ro = one.query_exec(&req, &exec).unwrap();
@@ -997,6 +1000,7 @@ fn segment_delete_matches_composed_filter() {
                             kind,
                             filter: user.clone(),
                             params: None,
+                            trace: false,
                         },
                         &exec,
                     )
@@ -1015,6 +1019,7 @@ fn segment_delete_matches_composed_filter() {
                             kind,
                             filter: Some(composed),
                             params: None,
+                            trace: false,
                         },
                         &exec,
                     )
@@ -1104,6 +1109,7 @@ fn segment_compaction_equivalence() {
                     kind,
                     filter: None,
                     params: None,
+                    trace: false,
                 };
                 let ri = idx.query_exec(&req, &exec).unwrap();
                 let ro = one.query_exec(&req, &exec).unwrap();
@@ -1155,6 +1161,7 @@ fn segment_threads_differential() {
                     kind,
                     filter: filter.clone(),
                     params: None,
+                    trace: false,
                 };
                 let r1 = seg.query_exec(&req, &exec1).unwrap();
                 let r4 = seg.query_exec(&req, &exec4).unwrap();
@@ -1273,7 +1280,7 @@ fn segment_persistence_roundtrip() {
     let probe = seg.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 15)).unwrap();
     let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
     for kind in [QueryKind::TopK { k: 8 }, QueryKind::Range { radius }] {
-        let req = QueryRequest { queries: &ds.queries, kind, filter: None, params: None };
+        let req = QueryRequest { queries: &ds.queries, kind, filter: None, params: None, trace: false };
         assert_eq!(
             seg.query_exec(&req, &exec).unwrap().hits,
             loaded.query_exec(&req, &exec).unwrap().hits,
@@ -1353,6 +1360,7 @@ fn storage_assert_differential(
                     kind,
                     filter: filter.clone(),
                     params: Some(params.clone()),
+                    trace: false,
                 };
                 let h = heap.query(&req).unwrap();
                 let m = mapped.query(&req).unwrap();
@@ -1651,4 +1659,258 @@ fn storage_open_index_dispatches_kinds() {
         }
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ───────────────────────── observability (obs_) ─────────────────────────
+
+/// The differential guarantee of the tracing layer: `trace: true` returns
+/// bit-identical hits and stats to `trace: false`, on every index family,
+/// at 1 and 4 executor threads, for top-k and range — plus exactly one
+/// span row per query when tracing and none otherwise.
+#[test]
+fn obs_trace_identical_results() {
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::sift_like(2_000, 6, 4101);
+    let builders: Vec<(&str, Box<dyn Index>)> = vec![
+        ("flat", index_factory(ds.dim, "PQ8x4fs").unwrap()),
+        ("ivf", index_factory(ds.dim, "IVF8,PQ8x4fs,nprobe=8").unwrap()),
+        ("seg", index_factory(ds.dim, "SEG256,PQ8x4fs").unwrap()),
+    ];
+    for (name, mut idx) in builders {
+        idx.train(&ds.train).unwrap();
+        idx.add(&ds.base).unwrap();
+        idx.seal().unwrap();
+        let probe = idx.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 20)).unwrap();
+        let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+        for threads in [1usize, 4] {
+            let exec = QueryExecutor::new(threads);
+            for kind in [QueryKind::TopK { k: 7 }, QueryKind::Range { radius }] {
+                let plain = QueryRequest {
+                    queries: &ds.queries,
+                    kind,
+                    filter: None,
+                    params: None,
+                    trace: false,
+                };
+                let traced = plain.clone().with_trace();
+                let r0 = idx.query_exec(&plain, &exec).unwrap();
+                let r1 = idx.query_exec(&traced, &exec).unwrap();
+                assert_eq!(r0.hits, r1.hits, "{name} t={threads} {kind:?}: hits diverge");
+                assert_eq!(r0.stats, r1.stats, "{name} t={threads} {kind:?}: stats diverge");
+                assert!(r0.traces.is_empty(), "{name}: untraced response carries spans");
+                assert_eq!(
+                    r1.traces.len(),
+                    ds.nq(),
+                    "{name} t={threads} {kind:?}: one span row per query"
+                );
+                for (qi, spans) in r1.traces.iter().enumerate() {
+                    assert!(
+                        spans.iter().any(|s| s.phase == armpq::obs::Phase::Total),
+                        "{name} q{qi}: no total span in {spans:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Phase accounting: on a serial executor every phase is a wall-clock
+/// leaf, so the per-phase sum must land close to the query's own total
+/// span — the breakdown explains the latency instead of inventing one.
+#[test]
+fn obs_phase_sum_tracks_total() {
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::sift_like(30_000, 4, 4102);
+    let mut idx = index_factory(ds.dim, "IVF32,PQ16x4fs,nprobe=32").unwrap();
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let exec = QueryExecutor::new(1);
+    let req = QueryRequest::top_k(&ds.queries, 10).with_trace();
+    // warm once so page-in/lazy-init noise lands outside the measured run
+    idx.query_exec(&req, &exec).unwrap();
+    let resp = idx.query_exec(&req, &exec).unwrap();
+    for (qi, spans) in resp.traces.iter().enumerate() {
+        let total = armpq::obs::total_us(spans).expect("total span");
+        let sum = armpq::obs::phase_sum_us(spans);
+        // the phases must explain the total: at least 70% covered (glue
+        // between spans is untimed) and never exceeding it by >10% + 50µs
+        // of timer quantization slack
+        assert!(
+            sum * 10 >= total * 7,
+            "q{qi}: phases {sum}µs explain too little of total {total}µs: {spans:?}"
+        );
+        assert!(
+            sum <= total + total / 10 + 50,
+            "q{qi}: phases {sum}µs exceed total {total}µs: {spans:?}"
+        );
+    }
+}
+
+/// The <2%-overhead-when-off budget, enforced structurally: after warmup,
+/// untraced steady-state queries allocate no new scratch arenas and the
+/// scratch high-water mark stays put — the TraceBuf lives inline in
+/// pooled scratch and never touches the heap while disabled.
+#[test]
+fn obs_steady_state_no_alloc_when_off() {
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::sift_like(4_000, 8, 4103);
+    let mut idx = index_factory(ds.dim, "IVF16,PQ8x4fs,nprobe=8").unwrap();
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let exec = QueryExecutor::new(2);
+    let req = QueryRequest::top_k(&ds.queries, 10);
+    for _ in 0..3 {
+        idx.query_exec(&req, &exec).unwrap();
+    }
+    let arenas = exec.scratch_arenas_created();
+    let high_water = exec.scratch_high_water_bytes();
+    for _ in 0..20 {
+        idx.query_exec(&req, &exec).unwrap();
+    }
+    assert_eq!(exec.scratch_arenas_created(), arenas, "steady state allocated arenas");
+    assert_eq!(exec.scratch_high_water_bytes(), high_water, "scratch grew in steady state");
+    // a traced query re-uses the same pooled scratch too
+    idx.query_exec(&req.clone().with_trace(), &exec).unwrap();
+    assert_eq!(exec.scratch_arenas_created(), arenas, "tracing allocated arenas");
+}
+
+/// The traced wire path against a segmented (mutable) backend: the client
+/// parses every stats field and the span array, segment phases show up,
+/// and tracing changes nothing about the hits.
+#[test]
+fn obs_client_parses_stats_and_trace() {
+    use armpq::coordinator::{service::IndexBackend, SearchBackend};
+    use armpq::obs::Phase;
+    let ds = SyntheticDataset::sift_like(1_500, 8, 4104);
+    let mut idx = index_factory(ds.dim, "SEG256,PQ8x4fs").unwrap();
+    idx.train(&ds.train).unwrap();
+    let backend: Arc<dyn SearchBackend> = Arc::new(IndexBackend::new(Arc::from(idx)).unwrap());
+    let server = Server::start(backend, ServerConfig::default()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let rows: Vec<Vec<f32>> =
+        (0..600).map(|i| ds.base[i * ds.dim..(i + 1) * ds.dim].to_vec()).collect();
+    client.insert(&rows, None).unwrap();
+    let q = &ds.queries[..ds.dim];
+    let (plain_hits, _) = client.query(q, &QueryKind::TopK { k: 5 }, None, None).unwrap();
+    let (hits, stats, spans) =
+        client.query_traced(q, &QueryKind::TopK { k: 5 }, None, None).unwrap();
+    assert_eq!(hits, plain_hits, "tracing changed wire results");
+    assert!(stats.codes_scanned > 0);
+    assert!(stats.segments_scanned >= 1, "{stats:?}");
+    assert!(spans.iter().any(|s| s.phase == Phase::Total && s.us > 0), "{spans:?}");
+    assert!(
+        spans.iter().any(|s| s.phase == Phase::SegmentScan || s.phase == Phase::MemtableScan),
+        "no segment/memtable scan phase in {spans:?}"
+    );
+    let scan_counts: u64 = spans
+        .iter()
+        .filter(|s| {
+            matches!(s.phase, Phase::ListScan | Phase::SegmentScan | Phase::MemtableScan)
+        })
+        .map(|s| s.count)
+        .sum();
+    assert!(scan_counts > 0, "scan spans carry no code counts: {spans:?}");
+    server.stop();
+}
+
+/// The `metrics` verb emits well-formed Prometheus text exposition:
+/// exactly one `# TYPE` per family, monotone cumulative buckets, and all
+/// the families the JSON stats verb exposes — phases and residency
+/// included.
+#[test]
+fn obs_prometheus_exposition_valid() {
+    let ds = SyntheticDataset::sift_like(2_000, 10, 4105);
+    let mut params = IvfParams::new(8);
+    params.coarse_hnsw = false;
+    let mut idx = IvfPq4::new(ds.dim, params, PqParams::new_4bit(8));
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.nprobe = 8;
+    let backend = Arc::new(IvfBackend::new(idx).unwrap());
+    let server = Server::start(backend, ServerConfig::default()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    for qi in 0..ds.nq() {
+        if qi % 2 == 0 {
+            client.query_traced(ds.query(qi), &QueryKind::TopK { k: 5 }, None, None).unwrap();
+        } else {
+            client.search(ds.query(qi), 5).unwrap();
+        }
+    }
+    let text = client.metrics_text().unwrap();
+    // one # TYPE line per family
+    let mut seen = std::collections::HashSet::new();
+    for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let fam = line.split_whitespace().nth(2).unwrap();
+        assert!(seen.insert(fam.to_string()), "duplicate # TYPE for {fam}\n{text}");
+    }
+    for fam in [
+        "armpq_requests_total",
+        "armpq_errors_total",
+        "armpq_exec_threads",
+        "armpq_e2e_us",
+        "armpq_queue_us",
+        "armpq_service_us",
+        "armpq_batch_latency_us",
+        "armpq_codes_scanned",
+        "armpq_batch_occupancy",
+        "armpq_phase_us",
+        "armpq_resident_sampled_bytes",
+    ] {
+        assert!(seen.contains(fam), "family {fam} missing from exposition\n{text}");
+    }
+    // cumulative histogram buckets are monotone and end at the count
+    let buckets: Vec<u64> = text
+        .lines()
+        .filter(|l| l.starts_with("armpq_e2e_us_bucket"))
+        .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+        .collect();
+    assert!(!buckets.is_empty());
+    assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "non-monotone: {buckets:?}");
+    let count: u64 = text
+        .lines()
+        .find(|l| l.starts_with("armpq_e2e_us_count"))
+        .and_then(|l| l.split_whitespace().last())
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert_eq!(*buckets.last().unwrap(), count);
+    assert_eq!(count, ds.nq() as u64);
+    // traced queries fed the per-phase histograms
+    assert!(
+        text.contains("armpq_phase_us_count{phase=\"total\"}"),
+        "phase histograms empty\n{text}"
+    );
+    server.stop();
+}
+
+/// The slow-query log is bounded, sorted worst-first, and keeps the trace
+/// of queries that asked for one.
+#[test]
+fn obs_slowlog_bounded() {
+    let ds = SyntheticDataset::sift_like(2_000, 30, 4106);
+    let mut idx = IvfPq4::new(ds.dim, IvfParams::new(8), PqParams::new_4bit(8));
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.nprobe = 8;
+    let backend = Arc::new(IvfBackend::new(idx).unwrap());
+    let server = Server::start(backend, ServerConfig::default()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    for qi in 0..ds.nq() {
+        client.query_traced(ds.query(qi), &QueryKind::TopK { k: 5 }, None, None).unwrap();
+    }
+    let log = client.slowlog().unwrap();
+    let rows = log.as_arr().unwrap();
+    assert!(!rows.is_empty() && rows.len() <= 8, "slowlog has {} entries", rows.len());
+    let e2e: Vec<f64> =
+        rows.iter().map(|r| r.get("e2e_us").and_then(|x| x.as_f64()).unwrap()).collect();
+    assert!(e2e.windows(2).all(|w| w[0] >= w[1]), "slowlog not worst-first: {e2e:?}");
+    // every entry was a traced query, so its span breakdown rode along
+    assert!(
+        rows[0].get("trace").and_then(|t| t.as_arr()).is_some_and(|t| !t.is_empty()),
+        "worst entry lost its trace: {}",
+        log.to_string()
+    );
+    server.stop();
 }
