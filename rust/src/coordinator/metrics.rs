@@ -189,6 +189,14 @@ pub struct Metrics {
     pub resident_code_bytes: AtomicU64,
     pub resident_sampled_bytes: AtomicU64,
     pub mmap_open_total: AtomicU64,
+    /// experiment-lab gauges (latest observation via
+    /// [`Metrics::record_lab_stats`], sourced from
+    /// [`crate::lab::counters`]): trials executed/failed this process and
+    /// the last regression-gate verdict (0 none, 1 pass, 2 fail) — long
+    /// sweeps are observable from the same scrape as served traffic
+    pub lab_trials_total: AtomicU64,
+    pub lab_trials_failed: AtomicU64,
+    pub lab_gate_verdict: AtomicU64,
     /// bounded worst-by-latency query ring (see [`Metrics::record_slow`])
     slowlog: Mutex<Vec<SlowQuery>>,
     /// admission floor: the smallest e2e in a **full** slowlog — reads
@@ -300,6 +308,16 @@ impl Metrics {
         self.mmap_open_total.store(c.mmap_open_total(), Ordering::Relaxed);
     }
 
+    /// Refresh the experiment-lab gauges from the process-wide
+    /// [`crate::lab::counters`]. Self-called by the exports, so a lab
+    /// sweep inside a serving process shows up without extra plumbing.
+    pub fn record_lab_stats(&self) {
+        let s = crate::lab::counters().snapshot();
+        self.lab_trials_total.store(s.trials_total, Ordering::Relaxed);
+        self.lab_trials_failed.store(s.trials_failed, Ordering::Relaxed);
+        self.lab_gate_verdict.store(s.last_gate, Ordering::Relaxed);
+    }
+
     pub fn record_batch(&self, size: usize) {
         self.batches_total.fetch_add(1, Ordering::Relaxed);
         self.batched_queries_total.fetch_add(size as u64, Ordering::Relaxed);
@@ -317,6 +335,7 @@ impl Metrics {
 
     /// Export as JSON (served by the `stats` command of the TCP protocol).
     pub fn to_json(&self) -> Json {
+        self.record_lab_stats();
         let mut o = Json::obj();
         o.set("requests_total", Json::Num(self.requests_total.load(Ordering::Relaxed) as f64))
             .set("batches_total", Json::Num(self.batches_total.load(Ordering::Relaxed) as f64))
@@ -385,6 +404,18 @@ impl Metrics {
             .set(
                 "mmap_open_total",
                 Json::Num(self.mmap_open_total.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "lab_trials_total",
+                Json::Num(self.lab_trials_total.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "lab_trials_failed",
+                Json::Num(self.lab_trials_failed.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "lab_gate_verdict",
+                Json::Num(self.lab_gate_verdict.load(Ordering::Relaxed) as f64),
             );
         o
     }
@@ -396,6 +427,7 @@ impl Metrics {
     /// [`Metrics::to_json`] plus the per-phase histograms.
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write;
+        self.record_lab_stats();
         let mut out = String::with_capacity(8192);
         let counter = |out: &mut String, name: &str, help: &str, v: u64| {
             let _ = writeln!(out, "# HELP {name} {help}");
@@ -422,6 +454,8 @@ impl Metrics {
         counter(&mut out, "armpq_flushes_total", "Memtable flushes performed by the backend.", self.flushes_total.load(ld));
         counter(&mut out, "armpq_compactions_total", "Segment compactions performed by the backend.", self.compactions_total.load(ld));
         counter(&mut out, "armpq_mmap_open_total", "mmap opens performed by the storage layer.", self.mmap_open_total.load(ld));
+        counter(&mut out, "armpq_lab_trials_total", "Experiment-lab trials executed by this process.", self.lab_trials_total.load(ld));
+        counter(&mut out, "armpq_lab_trials_failed", "Experiment-lab trials that failed.", self.lab_trials_failed.load(ld));
         gauge(&mut out, "armpq_exec_threads", "Widest executor fan-out observed.", self.exec_threads.load(ld));
         gauge(&mut out, "armpq_scratch_high_water_bytes", "Executor scratch-arena high water.", self.scratch_high_water_bytes.load(ld));
         gauge(&mut out, "armpq_segments_scanned", "Widest per-query segment fan-out observed.", self.segments_scanned.load(ld));
@@ -431,6 +465,7 @@ impl Metrics {
         gauge(&mut out, "armpq_mapped_code_bytes", "Packed-code bytes backed by mmap.", self.mapped_code_bytes.load(ld));
         gauge(&mut out, "armpq_resident_code_bytes", "Mapped code bytes advised resident.", self.resident_code_bytes.load(ld));
         gauge(&mut out, "armpq_resident_sampled_bytes", "Mapped code bytes actually in RAM (mincore-sampled).", self.resident_sampled_bytes.load(ld));
+        gauge(&mut out, "armpq_lab_gate_verdict", "Last regression-gate verdict: 0 none, 1 pass, 2 fail.", self.lab_gate_verdict.load(ld));
         histogram(&mut out, "armpq_queue_us", "Enqueue-to-batch-formation wait, microseconds.", &self.queue_us);
         histogram(&mut out, "armpq_service_us", "Backend search time per batch, microseconds.", &self.service_us);
         histogram(&mut out, "armpq_batch_latency_us", "Whole-batch execution latency, microseconds.", &self.batch_latency_us);
@@ -486,6 +521,28 @@ mod tests {
         assert!(p50 < p99, "interpolation should spread ranks: {p50} vs {p99}");
         // old behavior returned exactly 128 for every percentile
         assert!(p50 < 128.0);
+    }
+
+    /// Lab counters surface through both exports without explicit
+    /// plumbing (the exports refresh the gauges themselves).
+    #[test]
+    fn lab_gauges_in_exports() {
+        crate::lab::counters().record_trial(false);
+        crate::lab::counters().record_gate(true);
+        let m = Metrics::new();
+        let j = m.to_json();
+        assert!(j.get("lab_trials_total").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(j.get("lab_trials_failed").is_some());
+        // the gate tests in lab::gate run in this binary too, so only
+        // assert a verdict was recorded (1 pass / 2 fail), not which one
+        let verdict = j.get("lab_gate_verdict").unwrap().as_f64().unwrap();
+        assert!(verdict == 1.0 || verdict == 2.0, "verdict {verdict}");
+        let text = m.to_prometheus();
+        for family in
+            ["armpq_lab_trials_total", "armpq_lab_trials_failed", "armpq_lab_gate_verdict"]
+        {
+            assert!(text.contains(&format!("# TYPE {family}")), "missing {family}");
+        }
     }
 
     #[test]

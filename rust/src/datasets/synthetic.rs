@@ -52,6 +52,20 @@ impl SyntheticDataset {
         })
     }
 
+    /// Look up a generator by its stable name — the form the experiment
+    /// lab's sweep specs use. The caller's `seed` is threaded through the
+    /// generator verbatim, so identical `(name, n, nq, seed)` tuples
+    /// produce bit-identical datasets on every host, and each recorded
+    /// trial documents its `dataset_seed` for exact reproduction.
+    pub fn by_name(name: &str, n: usize, nq: usize, seed: u64) -> Option<Dataset> {
+        match name {
+            "sift" => Some(Self::sift_like(n, nq, seed)),
+            "deep" => Some(Self::deep_like(n, nq, seed)),
+            "gaussian" => Some(Self::gaussian(n, nq, 32, seed)),
+            _ => None,
+        }
+    }
+
     /// Small uniform-gaussian dataset (unit tests).
     pub fn gaussian(n: usize, nq: usize, dim: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);
@@ -261,6 +275,20 @@ mod tests {
             "kmeans objective {} vs variance {var} — no structure?",
             km.objective
         );
+    }
+
+    #[test]
+    fn by_name_deterministic_and_seeded() {
+        for name in ["sift", "deep", "gaussian"] {
+            let a = SyntheticDataset::by_name(name, 400, 8, 9).unwrap();
+            let b = SyntheticDataset::by_name(name, 400, 8, 9).unwrap();
+            assert_eq!(a.base, b.base, "{name}: same seed must be bit-identical");
+            assert_eq!(a.queries, b.queries);
+            assert_eq!(a.train, b.train);
+            let c = SyntheticDataset::by_name(name, 400, 8, 10).unwrap();
+            assert_ne!(a.base, c.base, "{name}: seed must matter");
+        }
+        assert!(SyntheticDataset::by_name("laion", 10, 1, 0).is_none());
     }
 
     #[test]

@@ -22,13 +22,11 @@ use crate::util::bench::{black_box, BenchRunner, Table};
 use crate::util::timer::Timer;
 use crate::Result;
 
-/// Dataset selector for the figure runners.
+/// Dataset selector for the figure runners (same registry the lab's
+/// sweep specs resolve through).
 pub fn make_dataset(name: &str, n: usize, nq: usize, seed: u64) -> Dataset {
-    match name {
-        "sift" => SyntheticDataset::sift_like(n, nq, seed),
-        "deep" => SyntheticDataset::deep_like(n, nq, seed),
-        other => panic!("unknown dataset {other:?} (use sift|deep)"),
-    }
+    SyntheticDataset::by_name(name, n, nq, seed)
+        .unwrap_or_else(|| panic!("unknown dataset {name:?} (use sift|deep|gaussian)"))
 }
 
 /// Fig. 2: recall@1 vs QPS for original PQ vs 4-bit fastscan PQ, sweeping M.

@@ -1,0 +1,373 @@
+//! The regression gate: compare a fresh run against the last recorded
+//! baseline for the same host class and fail on configurable regressions.
+//!
+//! The unit of comparison is the trial *case* (everything but the repeat
+//! axis): repeats of a case are aggregated into mean QPS / mean recall
+//! plus a recall standard deviation, and the baseline's spread across
+//! repeats is what defines "noise" — a recall drop only fails the gate
+//! when it exceeds what the baseline's own repeats scatter over. QPS uses
+//! a plain relative threshold (default 10%, the acceptance bound), since
+//! wall-clock noise is environment- not spec-driven.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Gate thresholds; defaults match the repo's acceptance criteria.
+#[derive(Clone, Debug)]
+pub struct GateConfig {
+    /// Fail when fresh mean QPS < (1 - max_qps_drop) × baseline mean QPS.
+    pub max_qps_drop: f64,
+    /// Noise floor for recall: drops within `max(noise_mult × baseline
+    /// std, min_recall_epsilon)` pass. A single-repeat baseline has zero
+    /// measured spread, so the epsilon keeps the gate usable there.
+    pub min_recall_epsilon: f64,
+    pub noise_mult: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        Self { max_qps_drop: 0.10, min_recall_epsilon: 0.02, noise_mult: 2.0 }
+    }
+}
+
+/// Per-case verdict status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaseStatus {
+    Pass,
+    Regression,
+    Improved,
+    /// In the fresh run but not the baseline (new grid point) — informational.
+    New,
+    /// In the baseline but not the fresh run (grid point removed) —
+    /// informational; spec evolution must not fail old history.
+    Missing,
+}
+
+impl CaseStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            CaseStatus::Pass => "pass",
+            CaseStatus::Regression => "regression",
+            CaseStatus::Improved => "improved",
+            CaseStatus::New => "new",
+            CaseStatus::Missing => "missing",
+        }
+    }
+}
+
+/// One case's comparison outcome.
+#[derive(Clone, Debug)]
+pub struct CaseVerdict {
+    pub case: String,
+    pub status: CaseStatus,
+    pub baseline_qps: f64,
+    pub fresh_qps: f64,
+    /// fresh/baseline; 1.0 when either side is absent.
+    pub qps_ratio: f64,
+    pub baseline_recall: f64,
+    pub fresh_recall: f64,
+    pub detail: String,
+}
+
+impl CaseVerdict {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("case", Json::Str(self.case.clone()))
+            .set("status", Json::Str(self.status.name().to_string()))
+            .set("baseline_qps", Json::Num(self.baseline_qps))
+            .set("fresh_qps", Json::Num(self.fresh_qps))
+            .set("qps_ratio", Json::Num(self.qps_ratio))
+            .set("baseline_recall", Json::Num(self.baseline_recall))
+            .set("fresh_recall", Json::Num(self.fresh_recall))
+            .set("detail", Json::Str(self.detail.clone()));
+        o
+    }
+}
+
+/// The whole gate outcome: pass iff no case regressed.
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    pub verdicts: Vec<CaseVerdict>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        !self.verdicts.iter().any(|v| v.status == CaseStatus::Regression)
+    }
+
+    pub fn regressions(&self) -> usize {
+        self.verdicts.iter().filter(|v| v.status == CaseStatus::Regression).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("passed", Json::Bool(self.passed()))
+            .set("regressions", Json::Num(self.regressions() as f64))
+            .set(
+                "verdicts",
+                Json::Arr(self.verdicts.iter().map(CaseVerdict::to_json).collect()),
+            );
+        o
+    }
+
+    /// Human one-liner per case, regressions first.
+    pub fn render(&self) -> String {
+        let mut lines = Vec::new();
+        let mut sorted: Vec<&CaseVerdict> = self.verdicts.iter().collect();
+        sorted.sort_by_key(|v| match v.status {
+            CaseStatus::Regression => 0,
+            CaseStatus::Improved => 1,
+            CaseStatus::Pass => 2,
+            CaseStatus::New => 3,
+            CaseStatus::Missing => 4,
+        });
+        for v in sorted {
+            lines.push(format!(
+                "{:<10} {}  qps {:.1} -> {:.1} ({:+.1}%)  recall {:.4} -> {:.4}  {}",
+                v.status.name(),
+                v.case,
+                v.baseline_qps,
+                v.fresh_qps,
+                (v.qps_ratio - 1.0) * 100.0,
+                v.baseline_recall,
+                v.fresh_recall,
+                v.detail,
+            ));
+        }
+        lines.join("\n")
+    }
+}
+
+/// Aggregates of one case over its repeats.
+#[derive(Clone, Copy, Debug, Default)]
+struct CaseAgg {
+    qps_mean: f64,
+    recall_mean: f64,
+    recall_std: f64,
+    repeats: usize,
+}
+
+/// Group `ok` trials by case and aggregate over repeats. Skipped/failed
+/// trials never enter the comparison (a backend absent on this host must
+/// not read as a throughput regression).
+fn aggregate(trials: &[Json]) -> BTreeMap<String, CaseAgg> {
+    let mut groups: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for t in trials {
+        if t.get("status").and_then(Json::as_str) != Some("ok") {
+            continue;
+        }
+        let (Some(case), Some(qps), Some(recall)) = (
+            t.get("case").and_then(Json::as_str),
+            t.get("qps").and_then(Json::as_f64),
+            t.get("recall_at_k").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        let e = groups.entry(case.to_string()).or_default();
+        e.0.push(qps);
+        e.1.push(recall);
+    }
+    groups
+        .into_iter()
+        .map(|(case, (qps, recall))| {
+            let n = qps.len() as f64;
+            let qps_mean = qps.iter().sum::<f64>() / n;
+            let recall_mean = recall.iter().sum::<f64>() / n;
+            let var = recall.iter().map(|r| (r - recall_mean).powi(2)).sum::<f64>() / n;
+            (case, CaseAgg {
+                qps_mean,
+                recall_mean,
+                recall_std: var.sqrt(),
+                repeats: qps.len(),
+            })
+        })
+        .collect()
+}
+
+/// Compare fresh trials against baseline trials (both in the flat record
+/// schema) under `cfg`.
+pub fn compare(baseline: &[Json], fresh: &[Json], cfg: &GateConfig) -> GateReport {
+    let base = aggregate(baseline);
+    let new = aggregate(fresh);
+    let mut verdicts = Vec::new();
+
+    for (case, f) in &new {
+        let Some(b) = base.get(case) else {
+            verdicts.push(CaseVerdict {
+                case: case.clone(),
+                status: CaseStatus::New,
+                baseline_qps: 0.0,
+                fresh_qps: f.qps_mean,
+                qps_ratio: 1.0,
+                baseline_recall: 0.0,
+                fresh_recall: f.recall_mean,
+                detail: "no baseline for case".into(),
+            });
+            continue;
+        };
+        let qps_ratio = if b.qps_mean > 0.0 { f.qps_mean / b.qps_mean } else { 1.0 };
+        let recall_delta = f.recall_mean - b.recall_mean;
+        let noise = (cfg.noise_mult * b.recall_std).max(cfg.min_recall_epsilon);
+
+        let qps_regressed = qps_ratio < 1.0 - cfg.max_qps_drop;
+        let recall_regressed = recall_delta < -noise;
+        let (status, detail) = if qps_regressed && recall_regressed {
+            (CaseStatus::Regression, format!(
+                "qps {:.1}% below threshold and recall {:.4} below noise bound {:.4}",
+                (1.0 - qps_ratio) * 100.0, -recall_delta, noise
+            ))
+        } else if qps_regressed {
+            (CaseStatus::Regression, format!(
+                "qps dropped {:.1}% (> {:.0}% allowed)",
+                (1.0 - qps_ratio) * 100.0,
+                cfg.max_qps_drop * 100.0
+            ))
+        } else if recall_regressed {
+            (CaseStatus::Regression, format!(
+                "recall dropped {:.4} (> noise bound {:.4} from {} baseline repeats)",
+                -recall_delta, noise, b.repeats
+            ))
+        } else if qps_ratio > 1.0 + cfg.max_qps_drop || recall_delta > noise {
+            (CaseStatus::Improved, String::new())
+        } else {
+            (CaseStatus::Pass, String::new())
+        };
+        verdicts.push(CaseVerdict {
+            case: case.clone(),
+            status,
+            baseline_qps: b.qps_mean,
+            fresh_qps: f.qps_mean,
+            qps_ratio,
+            baseline_recall: b.recall_mean,
+            fresh_recall: f.recall_mean,
+            detail,
+        });
+    }
+    for (case, b) in &base {
+        if !new.contains_key(case) {
+            verdicts.push(CaseVerdict {
+                case: case.clone(),
+                status: CaseStatus::Missing,
+                baseline_qps: b.qps_mean,
+                fresh_qps: 0.0,
+                qps_ratio: 1.0,
+                baseline_recall: b.recall_mean,
+                fresh_recall: 0.0,
+                detail: "case absent from fresh run".into(),
+            });
+        }
+    }
+    GateReport { verdicts }
+}
+
+/// Run the gate and turn failure into an `Err` (the CLI's non-zero exit).
+/// Also records the verdict in [`super::counters`] for the metrics export.
+pub fn enforce(baseline: &[Json], fresh: &[Json], cfg: &GateConfig) -> Result<GateReport> {
+    let report = compare(baseline, fresh, cfg);
+    super::counters().record_gate(report.passed());
+    if report.passed() {
+        Ok(report)
+    } else {
+        let msg = format!(
+            "{} case(s) regressed:\n{}",
+            report.regressions(),
+            report.render()
+        );
+        Err(Error::Config(msg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial(case: &str, repeat: usize, qps: f64, recall: f64) -> Json {
+        let mut o = Json::obj();
+        o.set("case", Json::Str(case.into()))
+            .set("id", Json::Str(format!("{case}/r{repeat}")))
+            .set("status", Json::Str("ok".into()))
+            .set("repeat", Json::Num(repeat as f64))
+            .set("qps", Json::Num(qps))
+            .set("recall_at_k", Json::Num(recall));
+        o
+    }
+
+    fn skipped(case: &str) -> Json {
+        let mut o = Json::obj();
+        o.set("case", Json::Str(case.into()))
+            .set("status", Json::Str("skipped".into()))
+            .set("error", Json::Str("backend unavailable".into()));
+        o
+    }
+
+    /// >10% QPS drop fails; 5% passes; big gain reports improved.
+    #[test]
+    fn lab_gate_qps_verdicts() {
+        let cfg = GateConfig::default();
+        let base = vec![trial("a", 0, 100.0, 0.9), trial("a", 1, 102.0, 0.9)];
+
+        let drop = vec![trial("a", 0, 80.0, 0.9)];
+        let r = compare(&base, &drop, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Regression);
+        assert!(!r.passed());
+        assert!(enforce(&base, &drop, &cfg).is_err());
+
+        let ok = vec![trial("a", 0, 96.0, 0.9)];
+        let r = compare(&base, &ok, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Pass);
+        assert!(enforce(&base, &ok, &cfg).is_ok());
+
+        let gain = vec![trial("a", 0, 150.0, 0.9)];
+        assert_eq!(compare(&base, &gain, &cfg).verdicts[0].status, CaseStatus::Improved);
+    }
+
+    /// Recall noise bounds come from the baseline's repeat spread: a drop
+    /// inside the spread passes, one beyond it (and beyond the epsilon
+    /// floor) regresses.
+    #[test]
+    fn lab_gate_recall_noise_bounds() {
+        let cfg = GateConfig::default();
+        // baseline recall scatters ±0.03 → std 0.03, noise bound 0.06
+        let base = vec![trial("a", 0, 100.0, 0.90), trial("a", 1, 100.0, 0.96)];
+        let within = vec![trial("a", 0, 100.0, 0.88)]; // -0.05 < 0.06 bound
+        assert_eq!(compare(&base, &within, &cfg).verdicts[0].status, CaseStatus::Pass);
+        let beyond = vec![trial("a", 0, 100.0, 0.80)]; // -0.13 > 0.06 bound
+        let r = compare(&base, &beyond, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Regression);
+        assert!(r.verdicts[0].detail.contains("recall"));
+
+        // single-repeat baseline: epsilon floor (0.02) is the bound
+        let base1 = vec![trial("a", 0, 100.0, 0.90)];
+        let small = vec![trial("a", 0, 100.0, 0.89)];
+        assert_eq!(compare(&base1, &small, &cfg).verdicts[0].status, CaseStatus::Pass);
+        let big = vec![trial("a", 0, 100.0, 0.85)];
+        assert_eq!(compare(&base1, &big, &cfg).verdicts[0].status, CaseStatus::Regression);
+    }
+
+    /// New/missing cases and skipped trials are informational, never fatal.
+    #[test]
+    fn lab_gate_new_missing_skipped() {
+        let cfg = GateConfig::default();
+        let base = vec![trial("a", 0, 100.0, 0.9), skipped("neon_case")];
+        let fresh = vec![trial("b", 0, 50.0, 0.8), skipped("neon_case")];
+        let r = compare(&base, &fresh, &cfg);
+        assert!(r.passed(), "{}", r.render());
+        let statuses: Vec<_> = r.verdicts.iter().map(|v| (v.case.clone(), v.status)).collect();
+        assert!(statuses.contains(&("b".to_string(), CaseStatus::New)));
+        assert!(statuses.contains(&("a".to_string(), CaseStatus::Missing)));
+        // the skipped pseudo-case never shows up at all
+        assert!(!r.verdicts.iter().any(|v| v.case == "neon_case"));
+    }
+
+    /// Repeats aggregate to means before comparison.
+    #[test]
+    fn lab_gate_aggregates_repeats() {
+        let cfg = GateConfig::default();
+        let base = vec![trial("a", 0, 90.0, 0.9), trial("a", 1, 110.0, 0.9)]; // mean 100
+        let fresh = vec![trial("a", 0, 85.0, 0.9), trial("a", 1, 105.0, 0.9)]; // mean 95
+        let r = compare(&base, &fresh, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Pass);
+        assert!((r.verdicts[0].qps_ratio - 0.95).abs() < 1e-9);
+    }
+}

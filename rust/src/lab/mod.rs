@@ -1,0 +1,99 @@
+//! The experiment lab: declarative sweeps, a trial runner, a recorded
+//! perf/recall trajectory, and a CI regression gate.
+//!
+//! The paper's claim is a *measured* one ("a 10x improvement over the
+//! naive PQ with the same accuracy"), so the repo keeps its numbers the
+//! same way it keeps its code — declared, versioned and gated:
+//!
+//! * [`spec`] — a sweep spec (inline JSON / JSONL) over the axes the
+//!   Quicker-ADC line of work shows must be first-class — dataset × n ×
+//!   factory × code width × backend × threads × query kind × filter
+//!   selectivity × nprobe — expanding **deterministically** into a trial
+//!   list (same spec text → same trials, byte for byte, on any host).
+//! * [`runner`] — executes each trial end-to-end through the existing
+//!   factory / [`crate::exec::QueryExecutor`] paths and harvests QPS,
+//!   recall@k vs exact-flat ground truth (the [`crate::eval`]
+//!   definitions), p50/p95/p99 latency and the per-phase
+//!   [`crate::obs::TraceSpan`] split — one flat JSON object per trial.
+//! * [`record`] — appends runs into a versioned `BENCH_<host>.json`
+//!   trajectory keyed by host fingerprint and git revision; the perf
+//!   history that survives across PRs.
+//! * [`gate`] — compares a fresh run against the last recorded baseline
+//!   for the same host class and fails on a >10% throughput drop or a
+//!   recall drop beyond the noise bounds estimated from repeats.
+//!
+//! Surfaced as `armpq lab run|compare|report`; the committed smoke spec
+//! (`experiments/lab_smoke.json`) runs on synthetic data in under a
+//! minute and is what CI executes on every push.
+
+pub mod gate;
+pub mod record;
+pub mod runner;
+pub mod spec;
+
+pub use gate::{compare, enforce, CaseStatus, GateConfig, GateReport};
+pub use record::{
+    git_revision, table_to_json, validate_trial_json, HostFingerprint, RunRecord,
+    Trajectory, TRAJECTORY_VERSION,
+};
+pub use runner::{LabRunner, TrialMetrics, TrialOutcome, TrialStatus};
+pub use spec::{SweepSpec, TrialKind, TrialSpec};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Last-gate verdict encoding for the `lab_gate_verdict` gauge.
+pub const GATE_NONE: u64 = 0;
+pub const GATE_PASS: u64 = 1;
+pub const GATE_FAIL: u64 = 2;
+
+/// Process-wide lab counters, exported through
+/// [`crate::coordinator::metrics::Metrics`] like the storage gauges — so
+/// a long sweep is observable from the same `/metrics` scrape as served
+/// traffic.
+#[derive(Debug)]
+pub struct LabCounters {
+    trials_total: AtomicU64,
+    trials_failed: AtomicU64,
+    /// 0 = no gate run yet, 1 = last gate passed, 2 = last gate failed.
+    last_gate: AtomicU64,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LabCountersSnapshot {
+    pub trials_total: u64,
+    pub trials_failed: u64,
+    pub last_gate: u64,
+}
+
+impl LabCounters {
+    pub fn record_trial(&self, failed: bool) {
+        self.trials_total.fetch_add(1, Ordering::Relaxed);
+        if failed {
+            self.trials_failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_gate(&self, passed: bool) {
+        self.last_gate
+            .store(if passed { GATE_PASS } else { GATE_FAIL }, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LabCountersSnapshot {
+        LabCountersSnapshot {
+            trials_total: self.trials_total.load(Ordering::Relaxed),
+            trials_failed: self.trials_failed.load(Ordering::Relaxed),
+            last_gate: self.last_gate.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The process-wide counter registry.
+pub fn counters() -> &'static LabCounters {
+    static COUNTERS: LabCounters = LabCounters {
+        trials_total: AtomicU64::new(0),
+        trials_failed: AtomicU64::new(0),
+        last_gate: AtomicU64::new(GATE_NONE),
+    };
+    &COUNTERS
+}

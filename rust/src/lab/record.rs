@@ -1,0 +1,446 @@
+//! The recorded trajectory: trials accumulate into a versioned
+//! `BENCH_<host>.json` file keyed by a host fingerprint and git revision.
+//!
+//! Perf numbers are only meaningful on the hardware that produced them,
+//! so the trajectory file is *per host class*: the fingerprint (arch, cpu
+//! model, core count, best SIMD backend) names the file and gates which
+//! baselines [`super::gate`] may compare against. Runs are append-only —
+//! the file is the repo's perf history across PRs, and rewriting it would
+//! erase exactly the signal the gate needs.
+
+use crate::simd::best_backend;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Trajectory file format version (bump on breaking schema change).
+pub const TRAJECTORY_VERSION: usize = 1;
+
+/// What kind of host produced a set of numbers. Two hosts with equal
+/// fingerprints are close enough to compare throughput within the gate's
+/// noise bounds; anything else is apples to oranges.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostFingerprint {
+    /// `std::env::consts::ARCH` — `x86_64`, `aarch64`, …
+    pub arch: String,
+    /// `/proc/cpuinfo` model name (or `unknown` off Linux).
+    pub cpu_model: String,
+    pub cores: usize,
+    /// `best_backend().name()` — the kernel the host would pick.
+    pub best_backend: String,
+}
+
+impl HostFingerprint {
+    pub fn detect() -> Self {
+        let cpu_model = std::fs::read_to_string("/proc/cpuinfo")
+            .ok()
+            .and_then(|text| {
+                text.lines()
+                    .find(|l| l.starts_with("model name") || l.starts_with("Processor"))
+                    .and_then(|l| l.split(':').nth(1))
+                    .map(|s| s.trim().to_string())
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Self {
+            arch: std::env::consts::ARCH.to_string(),
+            cpu_model,
+            cores,
+            best_backend: best_backend().name().to_string(),
+        }
+    }
+
+    /// Filesystem-safe short name: `x86_64-8c-ssse3`. Deliberately omits
+    /// the cpu model (too volatile across cloud instance types to key a
+    /// committed filename on); the full model still lives *inside* the
+    /// file for human judgment.
+    pub fn slug(&self) -> String {
+        format!("{}-{}c-{}", self.arch, self.cores, self.best_backend)
+    }
+
+    /// Same host class: everything but the free-text cpu model matches.
+    pub fn compatible(&self, other: &HostFingerprint) -> bool {
+        self.arch == other.arch
+            && self.cores == other.cores
+            && self.best_backend == other.best_backend
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("arch", Json::Str(self.arch.clone()))
+            .set("cpu_model", Json::Str(self.cpu_model.clone()))
+            .set("cores", Json::Num(self.cores as f64))
+            .set("best_backend", Json::Str(self.best_backend.clone()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::Config(format!("host fingerprint missing {k:?}")))
+        };
+        Ok(Self {
+            arch: s("arch")?,
+            cpu_model: s("cpu_model")?,
+            cores: j
+                .get("cores")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config("host fingerprint missing cores".into()))?,
+            best_backend: s("best_backend")?,
+        })
+    }
+}
+
+/// The current git revision (short hash), read straight from `.git` so
+/// the lab needs no `git` binary: `HEAD` → deref one level of `ref:`.
+pub fn git_revision(repo_root: &Path) -> String {
+    let head = match std::fs::read_to_string(repo_root.join(".git/HEAD")) {
+        Ok(h) => h,
+        Err(_) => return "unknown".to_string(),
+    };
+    let head = head.trim();
+    let full = if let Some(r) = head.strip_prefix("ref: ") {
+        match std::fs::read_to_string(repo_root.join(".git").join(r)) {
+            Ok(h) => h.trim().to_string(),
+            // packed refs: scan .git/packed-refs for the ref name
+            Err(_) => std::fs::read_to_string(repo_root.join(".git/packed-refs"))
+                .ok()
+                .and_then(|text| {
+                    text.lines()
+                        .find(|l| l.ends_with(r))
+                        .and_then(|l| l.split_whitespace().next())
+                        .map(str::to_string)
+                })
+                .unwrap_or_else(|| "unknown".to_string()),
+        }
+    } else {
+        head.to_string()
+    };
+    full.chars().take(12).collect()
+}
+
+/// One recorded `lab run`: the trials it produced, stamped with revision
+/// and wall-clock time.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub git_rev: String,
+    pub spec_name: String,
+    pub unix_time: u64,
+    /// Trial objects in the flat record schema
+    /// ([`super::runner::TrialOutcome::to_json`]).
+    pub trials: Vec<Json>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("git_rev", Json::Str(self.git_rev.clone()))
+            .set("spec_name", Json::Str(self.spec_name.clone()))
+            .set("unix_time", Json::Num(self.unix_time as f64))
+            .set("trials", Json::Arr(self.trials.clone()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            git_rev: j
+                .get("git_rev")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            spec_name: j
+                .get("spec_name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Config("run record missing spec_name".into()))?
+                .to_string(),
+            unix_time: j.get("unix_time").and_then(Json::as_usize).unwrap_or(0) as u64,
+            trials: j
+                .get("trials")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Config("run record missing trials".into()))?
+                .to_vec(),
+        })
+    }
+}
+
+/// The per-host perf history: an append-only list of [`RunRecord`]s.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub version: usize,
+    pub host: HostFingerprint,
+    pub runs: Vec<RunRecord>,
+}
+
+impl Trajectory {
+    /// A fresh, empty trajectory for this host.
+    pub fn new(host: HostFingerprint) -> Self {
+        Self { version: TRAJECTORY_VERSION, host, runs: Vec::new() }
+    }
+
+    /// The canonical file path for a host under `dir`:
+    /// `dir/BENCH_<slug>.json`.
+    pub fn path_for(dir: &Path, host: &HostFingerprint) -> PathBuf {
+        dir.join(format!("BENCH_{}.json", host.slug()))
+    }
+
+    /// Load from `path`, or start fresh for `host` if the file does not
+    /// exist. A present-but-unparsable file is an error — never silently
+    /// overwrite history.
+    pub fn load_or_new(path: &Path, host: HostFingerprint) -> Result<Self> {
+        if !path.exists() {
+            return Ok(Self::new(host));
+        }
+        let text = std::fs::read_to_string(path)?;
+        let t = Self::from_json_text(&text)?;
+        if !t.host.compatible(&host) {
+            return Err(Error::Config(format!(
+                "trajectory {} was recorded on {} but this host is {}",
+                path.display(),
+                t.host.slug(),
+                host.slug()
+            )));
+        }
+        Ok(t)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text)
+            .map_err(|e| Error::Config(format!("bad trajectory json: {e}")))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Config("trajectory missing version".into()))?;
+        if version != TRAJECTORY_VERSION {
+            return Err(Error::Config(format!(
+                "trajectory version {version} unsupported (expected {TRAJECTORY_VERSION})"
+            )));
+        }
+        let host = HostFingerprint::from_json(
+            j.get("host").ok_or_else(|| Error::Config("trajectory missing host".into()))?,
+        )?;
+        let runs = j
+            .get("runs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("trajectory missing runs".into()))?
+            .iter()
+            .map(RunRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { version, host, runs })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("version", Json::Num(self.version as f64))
+            .set("host", self.host.to_json())
+            .set("runs", Json::Arr(self.runs.iter().map(RunRecord::to_json).collect()));
+        o
+    }
+
+    /// Append a run and persist: write to a sibling temp file, then rename
+    /// over the target so a crash never truncates the history.
+    pub fn append_and_save(&mut self, path: &Path, run: RunRecord) -> Result<()> {
+        self.runs.push(run);
+        self.save(path)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// The most recent run for `spec_name`, the gate's baseline.
+    pub fn last_run_for_spec(&self, spec_name: &str) -> Option<&RunRecord> {
+        self.runs.iter().rev().find(|r| r.spec_name == spec_name)
+    }
+}
+
+/// Validate one trial object against the record schema (the check CI runs
+/// over every emitted trial). Returns the list of violations, empty when
+/// the object conforms.
+pub fn validate_trial_json(j: &Json) -> Vec<String> {
+    let mut errs = Vec::new();
+    for key in ["id", "case", "spec_name", "dataset", "factory", "backend", "kind", "status"] {
+        if j.get(key).and_then(Json::as_str).is_none() {
+            errs.push(format!("missing or non-string field {key:?}"));
+        }
+    }
+    for key in [
+        "n", "nq", "k", "width_bits", "threads", "filter_pct", "nprobe", "repeat",
+        "dataset_seed", "trial_seed",
+    ] {
+        if j.get(key).and_then(Json::as_f64).is_none() {
+            errs.push(format!("missing or non-numeric field {key:?}"));
+        }
+    }
+    match j.get("status").and_then(Json::as_str) {
+        Some("ok") => {
+            for key in [
+                "build_s", "qps", "p50_ms", "p95_ms", "p99_ms", "recall_at_1",
+                "recall_at_k", "codes_scanned",
+            ] {
+                match j.get(key).and_then(Json::as_f64) {
+                    Some(v) if v >= 0.0 => {}
+                    Some(_) => errs.push(format!("negative field {key:?}")),
+                    None => errs.push(format!("ok trial missing numeric field {key:?}")),
+                }
+            }
+            for key in ["recall_at_1", "recall_at_k"] {
+                if let Some(v) = j.get(key).and_then(Json::as_f64) {
+                    if v > 1.0 {
+                        errs.push(format!("{key:?} above 1.0"));
+                    }
+                }
+            }
+            if !matches!(j.get("phase_us"), Some(Json::Obj(_))) {
+                errs.push("ok trial missing phase_us object".into());
+            }
+        }
+        Some("skipped") | Some("failed") => {
+            if j.get("error").and_then(Json::as_str).is_none() {
+                errs.push("non-ok trial missing error string".into());
+            }
+        }
+        Some(other) => errs.push(format!("unknown status {other:?}")),
+        None => {} // already reported above
+    }
+    errs
+}
+
+/// Convert a [`Table`] (the `bench-*` CLI output shape) into the record
+/// format: one object per row, keyed by the table headers — the `--json`
+/// bridge that lets the existing bench commands emit through the same
+/// pipeline the lab uses.
+pub fn table_to_json(table: &Table) -> Json {
+    let rows: Vec<Json> = table
+        .rows
+        .iter()
+        .map(|row| {
+            let mut o = Json::obj();
+            for (h, cell) in table.headers.iter().zip(row) {
+                // numeric cells stay numbers so downstream tooling can plot
+                match cell.parse::<f64>() {
+                    Ok(x) if x.is_finite() => o.set(h, Json::Num(x)),
+                    _ => o.set(h, Json::Str(cell.clone())),
+                };
+            }
+            o
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("title", Json::Str(table.title.clone()))
+        .set("headers", Json::Arr(table.headers.iter().map(|h| Json::Str(h.clone())).collect()))
+        .set("rows", Json::Arr(rows));
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_host() -> HostFingerprint {
+        HostFingerprint {
+            arch: "x86_64".into(),
+            cpu_model: "Test CPU".into(),
+            cores: 8,
+            best_backend: "ssse3".into(),
+        }
+    }
+
+    fn ok_trial(id: &str, qps: f64) -> Json {
+        let mut o = Json::obj();
+        for (k, v) in [("id", id), ("case", "c"), ("spec_name", "s"), ("dataset", "gaussian"),
+                       ("factory", "Flat"), ("backend", "portable"), ("kind", "topk"),
+                       ("status", "ok")] {
+            o.set(k, Json::Str(v.into()));
+        }
+        for k in ["n", "nq", "k", "width_bits", "threads", "filter_pct", "nprobe",
+                  "repeat", "dataset_seed", "trial_seed", "build_s", "p50_ms",
+                  "p95_ms", "p99_ms", "codes_scanned"] {
+            o.set(k, Json::Num(1.0));
+        }
+        o.set("qps", Json::Num(qps))
+            .set("recall_at_1", Json::Num(0.9))
+            .set("recall_at_k", Json::Num(0.95))
+            .set("phase_us", Json::obj());
+        o
+    }
+
+    /// Append + save + reload must round-trip exactly (idempotent history).
+    #[test]
+    fn lab_trajectory_append_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("armpq_lab_rec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let host = test_host();
+        let path = Trajectory::path_for(&dir, &host);
+        assert!(path.to_str().unwrap().ends_with("BENCH_x86_64-8c-ssse3.json"));
+
+        let mut t = Trajectory::load_or_new(&path, host.clone()).unwrap();
+        assert!(t.runs.is_empty());
+        t.append_and_save(&path, RunRecord {
+            git_rev: "abc123".into(),
+            spec_name: "smoke".into(),
+            unix_time: 1000,
+            trials: vec![ok_trial("t1", 50.0)],
+        })
+        .unwrap();
+        t.append_and_save(&path, RunRecord {
+            git_rev: "def456".into(),
+            spec_name: "smoke".into(),
+            unix_time: 2000,
+            trials: vec![ok_trial("t1", 60.0)],
+        })
+        .unwrap();
+
+        let back = Trajectory::load_or_new(&path, host.clone()).unwrap();
+        assert_eq!(back.runs.len(), 2);
+        assert_eq!(back.runs[1].git_rev, "def456");
+        assert_eq!(back.last_run_for_spec("smoke").unwrap().unix_time, 2000);
+        assert!(back.last_run_for_spec("other").is_none());
+        // byte-level idempotency: re-saving an unmodified load changes nothing
+        let before = std::fs::read_to_string(&path).unwrap();
+        back.save(&path).unwrap();
+        assert_eq!(before, std::fs::read_to_string(&path).unwrap());
+
+        // wrong host class must refuse to adopt the file
+        let mut other = host.clone();
+        other.best_backend = "neon".into();
+        assert!(Trajectory::load_or_new(&path, other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lab_trial_schema_validation() {
+        assert!(validate_trial_json(&ok_trial("t", 10.0)).is_empty());
+        let mut bad = ok_trial("t", 10.0);
+        bad.set("recall_at_1", Json::Num(1.5));
+        assert!(validate_trial_json(&bad).iter().any(|e| e.contains("recall_at_1")));
+        let mut skipped = ok_trial("t", 10.0);
+        skipped.set("status", Json::Str("skipped".into()));
+        assert!(validate_trial_json(&skipped)
+            .iter()
+            .any(|e| e.contains("missing error")));
+        skipped.set("error", Json::Str("backend unavailable".into()));
+        assert!(validate_trial_json(&skipped).is_empty());
+    }
+
+    #[test]
+    fn lab_table_to_json_bridge() {
+        let mut t = Table::new("micro", &["width", "backend", "ns_per_code"]);
+        t.row(vec!["4".into(), "ssse3".into(), "0.31".into()]);
+        let j = table_to_json(&t);
+        assert_eq!(j.get("title").unwrap().as_str().unwrap(), "micro");
+        let row = &j.get("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("width").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(row.get("backend").unwrap().as_str().unwrap(), "ssse3");
+    }
+}

@@ -1,0 +1,507 @@
+//! The trial runner: executes one [`TrialSpec`] end-to-end — build (or
+//! reuse) the index through the existing factory path, run the workload
+//! through a [`QueryExecutor`] sized to the trial's thread count, and
+//! harvest QPS, recall vs the exact-flat ground truth (the same
+//! [`crate::eval`] definitions the figure runners use), p50/p95/p99
+//! latency, and per-phase time from the trace spans — one structured JSON
+//! object per trial.
+//!
+//! Datasets, ground truths and built indexes are cached across the trial
+//! list (keyed by their full deterministic inputs), so a sweep over
+//! backends × threads × kinds pays for each index build once.
+
+use super::spec::{TrialKind, TrialSpec};
+use crate::datasets::{Dataset, SyntheticDataset};
+use crate::eval::{ground_truth, recall_at_r};
+use crate::exec::QueryExecutor;
+use crate::index::{index_factory, Filter, Index, QueryRequest, SearchParams};
+use crate::obs::merge_spans;
+use crate::util::json::Json;
+use crate::util::l2_sq;
+use crate::util::timer::{LatencyStats, Timer};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Timed full-batch passes per trial; run-to-run noise is estimated from
+/// the spec's `repeats` axis (separate trials), not from these.
+const BATCH_PASSES: usize = 2;
+
+/// What happened to one trial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialStatus {
+    Ok,
+    /// The trial's backend is not available on this host (e.g. `neon` on
+    /// x86_64) — expansion is host-independent, so this is expected.
+    Skipped,
+    Failed,
+}
+
+impl TrialStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            TrialStatus::Ok => "ok",
+            TrialStatus::Skipped => "skipped",
+            TrialStatus::Failed => "failed",
+        }
+    }
+}
+
+/// The measurement half of a recorded trial.
+#[derive(Clone, Debug, Default)]
+pub struct TrialMetrics {
+    pub build_s: f64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub recall_at_1: f64,
+    pub recall_at_k: f64,
+    /// Codes scanned across one full query batch (from `QueryStats`).
+    pub codes_scanned: u64,
+    /// Range trials: the derived radius and total hits returned.
+    pub radius: f64,
+    pub hits_total: u64,
+    /// Per-phase µs summed over one traced batch, by stable phase name.
+    pub phase_us: Vec<(String, u64)>,
+}
+
+/// One completed trial: spec + status + measurements (when `Ok`).
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    pub spec: TrialSpec,
+    pub status: TrialStatus,
+    pub metrics: Option<TrialMetrics>,
+    pub error: Option<String>,
+}
+
+impl TrialOutcome {
+    /// The recorded trial object: the spec fields plus the measurement
+    /// fields, one flat JSON object (the record schema CI validates).
+    pub fn to_json(&self) -> Json {
+        let mut o = self.spec.to_json();
+        o.set("status", Json::Str(self.status.name().to_string()));
+        if let Some(e) = &self.error {
+            o.set("error", Json::Str(e.clone()));
+        }
+        if let Some(m) = &self.metrics {
+            let mut phases = Json::obj();
+            for (name, us) in &m.phase_us {
+                phases.set(name, Json::Num(*us as f64));
+            }
+            o.set("build_s", Json::Num(m.build_s))
+                .set("qps", Json::Num(m.qps))
+                .set("p50_ms", Json::Num(m.p50_ms))
+                .set("p95_ms", Json::Num(m.p95_ms))
+                .set("p99_ms", Json::Num(m.p99_ms))
+                .set("recall_at_1", Json::Num(m.recall_at_1))
+                .set("recall_at_k", Json::Num(m.recall_at_k))
+                .set("codes_scanned", Json::Num(m.codes_scanned as f64))
+                .set("radius", Json::Num(m.radius))
+                .set("hits_total", Json::Num(m.hits_total as f64))
+                .set("phase_us", phases);
+        }
+        o
+    }
+}
+
+struct GroundTruthEntry {
+    /// `nq × k` labels over the (possibly filtered) id space.
+    labels: Vec<i64>,
+    /// Median exact distance to the k-th NN — the derived range radius.
+    kth_dist_median: f64,
+}
+
+struct IndexEntry {
+    index: Box<dyn Index>,
+    build_s: f64,
+}
+
+/// Executes trial lists with dataset/ground-truth/index caching.
+#[derive(Default)]
+pub struct LabRunner {
+    datasets: HashMap<(String, usize, usize, u64), Dataset>,
+    ground_truths: HashMap<(String, usize, usize, u64, usize, usize), GroundTruthEntry>,
+    indexes: HashMap<(String, usize, usize, u64, String), IndexEntry>,
+}
+
+impl LabRunner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run every trial in order, invoking `emit` with each outcome as it
+    /// completes (the CLI streams one JSON line per trial). Counters in
+    /// [`super::counters`] track totals/failures for the metrics export.
+    pub fn run_all(
+        &mut self,
+        trials: &[TrialSpec],
+        mut emit: impl FnMut(&TrialOutcome),
+    ) -> Vec<TrialOutcome> {
+        let mut out = Vec::with_capacity(trials.len());
+        for spec in trials {
+            let outcome = self.run_trial(spec);
+            super::counters().record_trial(outcome.status == TrialStatus::Failed);
+            emit(&outcome);
+            out.push(outcome);
+        }
+        out
+    }
+
+    /// Run one trial. Infrastructure errors become `Failed` outcomes, not
+    /// process errors — a sweep must survive a single bad grid point.
+    pub fn run_trial(&mut self, spec: &TrialSpec) -> TrialOutcome {
+        if !spec.backend.is_available() {
+            return TrialOutcome {
+                spec: spec.clone(),
+                status: TrialStatus::Skipped,
+                metrics: None,
+                error: Some(format!(
+                    "backend {} unavailable on this host",
+                    spec.backend.name()
+                )),
+            };
+        }
+        match self.measure(spec) {
+            Ok(metrics) => TrialOutcome {
+                spec: spec.clone(),
+                status: TrialStatus::Ok,
+                metrics: Some(metrics),
+                error: None,
+            },
+            Err(e) => TrialOutcome {
+                spec: spec.clone(),
+                status: TrialStatus::Failed,
+                metrics: None,
+                error: Some(e.to_string()),
+            },
+        }
+    }
+
+    fn dataset(&mut self, spec: &TrialSpec) -> Result<&Dataset> {
+        let key =
+            (spec.dataset.clone(), spec.n, spec.nq, spec.dataset_seed);
+        if !self.datasets.contains_key(&key) {
+            let ds = SyntheticDataset::by_name(
+                &spec.dataset,
+                spec.n,
+                spec.nq,
+                spec.dataset_seed,
+            )
+            .ok_or_else(|| {
+                Error::Config(format!("unknown dataset {:?}", spec.dataset))
+            })?;
+            self.datasets.insert(key.clone(), ds);
+        }
+        Ok(&self.datasets[&key])
+    }
+
+    /// Exact ground truth over the first `filter_pct`% of ids (the lab's
+    /// filters are id ranges, so the filtered universe is a prefix).
+    fn ground_truth_for(&mut self, spec: &TrialSpec) -> Result<&GroundTruthEntry> {
+        let key = (
+            spec.dataset.clone(),
+            spec.n,
+            spec.nq,
+            spec.dataset_seed,
+            spec.filter_pct,
+            spec.k,
+        );
+        if !self.ground_truths.contains_key(&key) {
+            let (dim, base, queries, m) = {
+                let ds = self.dataset(spec)?;
+                let m = filtered_count(ds.n(), spec.filter_pct);
+                if m < spec.k {
+                    return Err(Error::Config(format!(
+                        "trial {}: filtered universe ({m} ids) smaller than k={}",
+                        spec.id, spec.k
+                    )));
+                }
+                (ds.dim, ds.base.clone(), ds.queries.clone(), m)
+            };
+            let labels = ground_truth(&base[..m * dim], &queries, dim, spec.k);
+            let mut kth: Vec<f64> = (0..queries.len() / dim)
+                .map(|qi| {
+                    let truth = labels[qi * spec.k + spec.k - 1] as usize;
+                    l2_sq(
+                        &queries[qi * dim..(qi + 1) * dim],
+                        &base[truth * dim..(truth + 1) * dim],
+                    ) as f64
+                })
+                .collect();
+            kth.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let kth_dist_median = kth[kth.len() / 2];
+            self.ground_truths
+                .insert(key.clone(), GroundTruthEntry { labels, kth_dist_median });
+        }
+        Ok(&self.ground_truths[&key])
+    }
+
+    fn index(&mut self, spec: &TrialSpec) -> Result<(&dyn Index, f64)> {
+        let key = (
+            spec.dataset.clone(),
+            spec.n,
+            spec.nq,
+            spec.dataset_seed,
+            spec.factory.clone(),
+        );
+        if !self.indexes.contains_key(&key) {
+            let (dim, train, base) = {
+                let ds = self.dataset(spec)?;
+                (ds.dim, ds.train.clone(), ds.base.clone())
+            };
+            let t = Timer::start();
+            let mut index = index_factory(dim, &spec.factory)?;
+            index.train(&train)?;
+            index.add(&base)?;
+            index.seal()?;
+            let build_s = t.elapsed_s();
+            self.indexes.insert(key.clone(), IndexEntry { index, build_s });
+        }
+        let e = &self.indexes[&key];
+        Ok((e.index.as_ref(), e.build_s))
+    }
+
+    fn measure(&mut self, spec: &TrialSpec) -> Result<TrialMetrics> {
+        let radius = match spec.kind {
+            TrialKind::Range => self.ground_truth_for(spec)?.kth_dist_median as f32,
+            TrialKind::TopK => {
+                self.ground_truth_for(spec)?; // ensure cached before borrows below
+                0.0
+            }
+        };
+        let (dim, nq) = {
+            let ds = self.dataset(spec)?;
+            (ds.dim, ds.nq())
+        };
+        let (_, build_s) = self.index(spec)?;
+
+        let mut params = SearchParams::new();
+        params.backend = Some(spec.backend);
+        if spec.nprobe > 0 {
+            params.nprobe = Some(spec.nprobe);
+        }
+        let filter = (spec.filter_pct < 100).then(|| {
+            let m = filtered_count(spec.n, spec.filter_pct);
+            Filter::id_range(0, m as i64)
+        });
+
+        let exec = QueryExecutor::new(spec.threads);
+        // Borrow-order note: the caches are populated above, so these
+        // lookups are reads; the dataset and index borrows can coexist.
+        let ds_key = (spec.dataset.clone(), spec.n, spec.nq, spec.dataset_seed);
+        let gt_key = (
+            spec.dataset.clone(),
+            spec.n,
+            spec.nq,
+            spec.dataset_seed,
+            spec.filter_pct,
+            spec.k,
+        );
+        let idx_key = (
+            spec.dataset.clone(),
+            spec.n,
+            spec.nq,
+            spec.dataset_seed,
+            spec.factory.clone(),
+        );
+        let ds = &self.datasets[&ds_key];
+        let gt = &self.ground_truths[&gt_key];
+        let index = self.indexes[&idx_key].index.as_ref();
+
+        // 1. One traced batch pass: recall, phase split, scan counters.
+        //    (Tracing is bit-identical to not tracing — obs_ tests pin it —
+        //    so the results double as the recall measurement.)
+        let traced = build_request(spec, radius, &params, &filter, &ds.queries).with_trace();
+        let resp = index.query_exec(&traced, &exec)?;
+        let codes_scanned: u64 = resp.stats.iter().map(|s| s.codes_scanned as u64).sum();
+        let rows: Vec<&[crate::obs::TraceSpan]> =
+            resp.traces.iter().map(|v| v.as_slice()).collect();
+        let phase_us: Vec<(String, u64)> = merge_spans(&rows)
+            .iter()
+            .map(|s| (s.phase.name().to_string(), s.us))
+            .collect();
+        let hits_total: u64 = resp.hits.iter().map(|h| h.len() as u64).sum();
+        let (recall_at_1, recall_at_k) = match spec.kind {
+            TrialKind::TopK => {
+                let flat = resp.into_search_result(spec.k);
+                (
+                    recall_at_r(&gt.labels, spec.k, &flat.labels, spec.k, 1),
+                    recall_at_r(&gt.labels, spec.k, &flat.labels, spec.k, spec.k),
+                )
+            }
+            TrialKind::Range => {
+                // Range recall: fraction of queries whose true NN is among
+                // the returned hits (the NN's exact distance is ≤ the
+                // derived radius for at least half the queries by
+                // construction; queries whose NN lies beyond the radius
+                // count as recalled when they return no closer miss).
+                let mut hit = 0usize;
+                for (qi, hits) in resp.hits.iter().enumerate() {
+                    let truth = gt.labels[qi * spec.k];
+                    let truth_d = l2_sq(
+                        &ds.queries[qi * dim..(qi + 1) * dim],
+                        &ds.base[truth as usize * dim..(truth as usize + 1) * dim],
+                    );
+                    if truth_d > radius || hits.iter().any(|h| h.label == truth) {
+                        hit += 1;
+                    }
+                }
+                let r = hit as f64 / nq as f64;
+                (r, r)
+            }
+        };
+
+        // 2. Per-query latency distribution (single stream, untraced).
+        let mut lat = LatencyStats::new();
+        for qi in 0..nq {
+            let q = &ds.queries[qi * dim..(qi + 1) * dim];
+            let req = build_request(spec, radius, &params, &filter, q);
+            let t = Timer::start();
+            let _ = index.query_exec(&req, &exec)?;
+            lat.record_ms(t.elapsed_ms());
+        }
+
+        // 3. Throughput: best of `BATCH_PASSES` timed full-batch passes.
+        let mut best_s = f64::INFINITY;
+        for _ in 0..BATCH_PASSES {
+            let req = build_request(spec, radius, &params, &filter, &ds.queries);
+            let t = Timer::start();
+            let _ = index.query_exec(&req, &exec)?;
+            best_s = best_s.min(t.elapsed_s());
+        }
+        let qps = nq as f64 / best_s.max(1e-12);
+
+        Ok(TrialMetrics {
+            build_s,
+            qps,
+            p50_ms: lat.percentile_ms(50.0),
+            p95_ms: lat.percentile_ms(95.0),
+            p99_ms: lat.percentile_ms(99.0),
+            recall_at_1,
+            recall_at_k,
+            codes_scanned,
+            radius: radius as f64,
+            hits_total,
+            phase_us,
+        })
+    }
+}
+
+fn filtered_count(n: usize, pct: usize) -> usize {
+    (n * pct / 100).max(1)
+}
+
+/// Assemble the trial's [`QueryRequest`] over `queries` (free function so
+/// the borrowed request lifetime tracks `queries`, not the runner).
+fn build_request<'q>(
+    spec: &TrialSpec,
+    radius: f32,
+    params: &SearchParams,
+    filter: &Option<Filter>,
+    queries: &'q [f32],
+) -> QueryRequest<'q> {
+    let req = match spec.kind {
+        TrialKind::TopK => QueryRequest::top_k(queries, spec.k),
+        TrialKind::Range => QueryRequest::range(queries, radius),
+    };
+    let req = req.with_params(params.clone());
+    match filter {
+        Some(f) => req.with_filter(f.clone()),
+        None => req,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lab::spec::SweepSpec;
+
+    fn tiny_spec(kinds: &str, factory: &str) -> Vec<TrialSpec> {
+        let text = format!(
+            r#"{{"name": "unit", "dataset": "gaussian", "n": 1200, "nq": 16,
+                "k": 5, "seed": 42, "repeats": 1, "factories": ["{factory}"],
+                "backends": ["portable"], "threads": [1], "kinds": [{kinds}]}}"#
+        );
+        SweepSpec::parse_text(&text).unwrap()[0].expand()
+    }
+
+    /// The lab's recall path must agree with a direct `eval/` computation
+    /// on an exact index (Flat): both must report perfect recall, and the
+    /// trial object must carry the full record schema.
+    #[test]
+    fn lab_recall_agrees_with_eval_on_exact_index() {
+        let trials = tiny_spec("\"topk\"", "Flat");
+        assert_eq!(trials.len(), 1);
+        let mut runner = LabRunner::new();
+        let out = runner.run_trial(&trials[0]);
+        assert_eq!(out.status, TrialStatus::Ok, "{:?}", out.error);
+        let m = out.metrics.unwrap();
+        // Flat is exact: the lab must measure exactly what eval/ defines.
+        let ds = SyntheticDataset::by_name("gaussian", 1200, 16, 42).unwrap();
+        let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 1);
+        let idx = {
+            let mut i = index_factory(ds.dim, "Flat").unwrap();
+            i.train(&ds.train).unwrap();
+            i.add(&ds.base).unwrap();
+            i.seal().unwrap();
+            i
+        };
+        let r = idx.search(&ds.queries, 5, None).unwrap();
+        let eval_recall = recall_at_r(&gt, 1, &r.labels, 5, 1);
+        assert_eq!(m.recall_at_1, eval_recall);
+        assert_eq!(m.recall_at_1, 1.0);
+        assert!(m.qps > 0.0 && m.p50_ms > 0.0 && m.p99_ms >= m.p50_ms);
+        let j = out.to_json();
+        for key in [
+            "id", "case", "factory", "backend", "threads", "kind", "status",
+            "qps", "recall_at_1", "p50_ms", "p95_ms", "p99_ms", "phase_us",
+            "dataset_seed", "trial_seed",
+        ] {
+            assert!(j.get(key).is_some(), "trial json missing {key}");
+        }
+    }
+
+    /// Range trials derive a radius from the exact k-th NN distance and
+    /// count the true NN among the hits.
+    #[test]
+    fn lab_range_trial_runs() {
+        let trials = tiny_spec("\"range\"", "PQ8x4fs");
+        let mut runner = LabRunner::new();
+        let out = runner.run_trial(&trials[0]);
+        assert_eq!(out.status, TrialStatus::Ok, "{:?}", out.error);
+        let m = out.metrics.unwrap();
+        assert!(m.radius > 0.0);
+        assert!(m.hits_total > 0);
+        assert!(m.recall_at_1 > 0.0);
+    }
+
+    /// Unavailable backends are recorded as skipped, never failed — and
+    /// a bad factory string fails its trial without aborting the sweep.
+    #[test]
+    fn lab_skip_and_fail_statuses() {
+        let unavailable = ["portable", "ssse3", "neon"].iter().find_map(|n| {
+            let b = crate::simd::Backend::parse(n).unwrap();
+            (!b.is_available()).then_some(*n)
+        });
+        if let Some(name) = unavailable {
+            let text = format!(
+                r#"{{"name": "s", "dataset": "gaussian", "n": 600, "nq": 4,
+                    "k": 3, "repeats": 1, "factories": ["Flat"],
+                    "backends": ["{name}"]}}"#
+            );
+            let trials = SweepSpec::parse_text(&text).unwrap()[0].expand();
+            let out = LabRunner::new().run_trial(&trials[0]);
+            assert_eq!(out.status, TrialStatus::Skipped);
+        }
+        let bad = tiny_spec("\"topk\"", "PQ16x3fs");
+        let before = crate::lab::counters().snapshot();
+        let outs = LabRunner::new().run_all(&bad, |_| {});
+        assert_eq!(outs[0].status, TrialStatus::Failed);
+        assert!(outs[0].error.is_some());
+        let after = crate::lab::counters().snapshot();
+        // >= not ==: other tests in this binary feed the same process-
+        // global counters concurrently
+        assert!(after.trials_total >= before.trials_total + 1);
+        assert!(after.trials_failed >= before.trials_failed + 1);
+    }
+}

@@ -1,0 +1,454 @@
+//! Declarative sweep specs: a JSON document describing an experiment
+//! grid (dataset × n × factory × width × backend × threads × query kind ×
+//! filter selectivity × nprobe × repeats) that expands **deterministically**
+//! into a flat trial list.
+//!
+//! The same spec text always produces the same trials in the same order —
+//! the expansion is a pure function with a fixed nesting order (factory,
+//! width, backend, threads, kind, filter, nprobe, repeat), so a recorded
+//! trajectory can be compared case-by-case across runs and git revisions.
+//!
+//! Spec files are either one JSON object, a JSON array of objects, or
+//! JSONL (one object per line, `#`-comments allowed) — `lab.jsonl` style.
+
+use crate::simd::Backend;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// What a trial asks the index: the two [`crate::index::QueryKind`] modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialKind {
+    TopK,
+    Range,
+}
+
+impl TrialKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TrialKind::TopK => "topk",
+            TrialKind::Range => "range",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TrialKind> {
+        match s {
+            "topk" | "top_k" => Some(TrialKind::TopK),
+            "range" => Some(TrialKind::Range),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed sweep spec (one JSON object). Axes are lists; scalars are
+/// shared by every trial the spec expands to.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    /// `sift` | `deep` | `gaussian` (see [`crate::datasets::SyntheticDataset::by_name`]).
+    pub dataset: String,
+    pub n: usize,
+    pub nq: usize,
+    pub k: usize,
+    /// Dataset RNG seed: identical specs produce bit-identical datasets.
+    pub seed: u64,
+    /// Repeated runs per grid point — the gate estimates noise from these.
+    pub repeats: usize,
+    /// Factory strings; a `{w}` placeholder expands over `widths`
+    /// (`"PQ16x{w}fs"` → `PQ16x2fs`, `PQ16x4fs`, …). Strings without the
+    /// placeholder ignore the width axis.
+    pub factories: Vec<String>,
+    pub widths: Vec<usize>,
+    pub backends: Vec<Backend>,
+    pub threads: Vec<usize>,
+    pub kinds: Vec<TrialKind>,
+    /// Filter selectivity as percent of ids admitted; 100 = unfiltered.
+    pub filter_pct: Vec<usize>,
+    /// Per-request nprobe values; 0 = index default (also what non-IVF
+    /// factories use).
+    pub nprobes: Vec<usize>,
+}
+
+/// One fully-resolved trial: everything the runner needs, nothing implicit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrialSpec {
+    /// Unique within a run: `case` plus the repeat ordinal.
+    pub id: String,
+    /// The grid point shared by all repeats — the gate's comparison key.
+    pub case: String,
+    pub spec_name: String,
+    pub dataset: String,
+    pub n: usize,
+    pub nq: usize,
+    pub k: usize,
+    pub factory: String,
+    /// Code width substituted into the factory string; 0 when the factory
+    /// string fixed its own width (no `{w}` placeholder).
+    pub width_bits: usize,
+    pub backend: Backend,
+    pub threads: usize,
+    pub kind: TrialKind,
+    pub filter_pct: usize,
+    pub nprobe: usize,
+    pub repeat: usize,
+    /// Seed the dataset generator receives — the spec's `seed`, verbatim.
+    pub dataset_seed: u64,
+    /// Per-trial seed (FNV over the case key and spec seed), recorded so
+    /// any future randomized workload stays reproducible per trial.
+    pub trial_seed: u64,
+}
+
+/// FNV-1a over bytes, seeded — the repo's standard cheap stable hash.
+fn fnv1a(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn get_usize(o: &Json, key: &str, default: usize) -> Result<usize> {
+    match o.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .map(|x| x as usize)
+            .ok_or_else(|| Error::Config(format!("lab spec: {key} expects a number"))),
+    }
+}
+
+fn get_usize_list(o: &Json, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+    match o.get(key) {
+        None => Ok(default.to_vec()),
+        Some(Json::Arr(v)) => v
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|f| f as usize)
+                    .ok_or_else(|| Error::Config(format!("lab spec: {key} expects numbers")))
+            })
+            .collect(),
+        Some(Json::Num(x)) => Ok(vec![*x as usize]),
+        Some(_) => Err(Error::Config(format!("lab spec: {key} expects a number array"))),
+    }
+}
+
+fn get_str_list(o: &Json, key: &str, default: &[&str]) -> Result<Vec<String>> {
+    match o.get(key) {
+        None => Ok(default.iter().map(|s| s.to_string()).collect()),
+        Some(Json::Arr(v)) => v
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| Error::Config(format!("lab spec: {key} expects strings")))
+            })
+            .collect(),
+        Some(Json::Str(s)) => Ok(vec![s.clone()]),
+        Some(_) => Err(Error::Config(format!("lab spec: {key} expects a string array"))),
+    }
+}
+
+impl SweepSpec {
+    /// Parse one spec from a JSON object.
+    pub fn from_json(o: &Json) -> Result<SweepSpec> {
+        let name = o
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Config("lab spec: missing \"name\"".into()))?
+            .to_string();
+        let factories = get_str_list(o, "factories", &[])?;
+        if factories.is_empty() {
+            return Err(Error::Config(format!(
+                "lab spec {name:?}: \"factories\" must list at least one factory string"
+            )));
+        }
+        let backends = get_str_list(o, "backends", &["portable"])?
+            .iter()
+            .map(|s| {
+                Backend::parse(s).ok_or_else(|| {
+                    Error::Config(format!(
+                        "lab spec {name:?}: unknown backend {s:?} (portable|ssse3|neon)"
+                    ))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let kinds = get_str_list(o, "kinds", &["topk"])?
+            .iter()
+            .map(|s| {
+                TrialKind::parse(s).ok_or_else(|| {
+                    Error::Config(format!("lab spec {name:?}: unknown kind {s:?} (topk|range)"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let widths = get_usize_list(o, "widths", &[4])?;
+        for &w in &widths {
+            if crate::pq::CodeWidth::from_bits(w).is_none() {
+                return Err(Error::Config(format!(
+                    "lab spec {name:?}: width {w} is not one of 2|4|8"
+                )));
+            }
+        }
+        let filter_pct = get_usize_list(o, "filter_pct", &[100])?;
+        for &p in &filter_pct {
+            if p == 0 || p > 100 {
+                return Err(Error::Config(format!(
+                    "lab spec {name:?}: filter_pct {p} must be in 1..=100"
+                )));
+            }
+        }
+        let spec = SweepSpec {
+            dataset: o
+                .get("dataset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("sift")
+                .to_string(),
+            n: get_usize(o, "n", 20_000)?,
+            nq: get_usize(o, "nq", 50)?,
+            k: get_usize(o, "k", 10)?,
+            seed: get_usize(o, "seed", 20_220_501)? as u64,
+            repeats: get_usize(o, "repeats", 2)?.max(1),
+            factories,
+            widths,
+            backends,
+            threads: get_usize_list(o, "threads", &[1])?,
+            kinds,
+            filter_pct,
+            nprobes: get_usize_list(o, "nprobes", &[0])?,
+            name,
+        };
+        if crate::datasets::SyntheticDataset::by_name(&spec.dataset, 1, 1, 0).is_none() {
+            return Err(Error::Config(format!(
+                "lab spec {:?}: unknown dataset {:?} (sift|deep|gaussian)",
+                spec.name, spec.dataset
+            )));
+        }
+        Ok(spec)
+    }
+
+    /// Parse a spec document: a single JSON object, a JSON array of
+    /// objects, or JSONL (one object per line; blank lines and `#`
+    /// comments skipped).
+    pub fn parse_text(text: &str) -> Result<Vec<SweepSpec>> {
+        if let Ok(v) = Json::parse(text) {
+            return match &v {
+                Json::Obj(_) => Ok(vec![SweepSpec::from_json(&v)?]),
+                Json::Arr(items) => items.iter().map(SweepSpec::from_json).collect(),
+                _ => Err(Error::Config("lab spec: expected object or array".into())),
+            };
+        }
+        // JSONL fallback
+        let mut out = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let v = Json::parse(line).map_err(|e| {
+                Error::Config(format!("lab spec line {}: {e}", lineno + 1))
+            })?;
+            out.push(SweepSpec::from_json(&v)?);
+        }
+        if out.is_empty() {
+            return Err(Error::Config("lab spec: no spec objects found".into()));
+        }
+        Ok(out)
+    }
+
+    /// Expand into the flat trial list. Pure and deterministic: fixed
+    /// nesting order (factory, width, backend, threads, kind, filter,
+    /// nprobe, repeat), no host inspection — unavailable backends are the
+    /// *runner's* concern (it records them as skipped) so the trial list
+    /// is identical on every machine.
+    pub fn expand(&self) -> Vec<TrialSpec> {
+        let mut out = Vec::new();
+        for factory_tpl in &self.factories {
+            let widths: Vec<usize> = if factory_tpl.contains("{w}") {
+                self.widths.clone()
+            } else {
+                vec![0] // width fixed by the factory string itself
+            };
+            for &w in &widths {
+                let factory = if w == 0 {
+                    factory_tpl.clone()
+                } else {
+                    factory_tpl.replace("{w}", &w.to_string())
+                };
+                for &backend in &self.backends {
+                    for &threads in &self.threads {
+                        for &kind in &self.kinds {
+                            for &pct in &self.filter_pct {
+                                for &nprobe in &self.nprobes {
+                                    let case = format!(
+                                        "{}/{}{}q{}k{}/{}/{}/t{}/{}/f{}/p{}",
+                                        self.name,
+                                        self.dataset,
+                                        self.n,
+                                        self.nq,
+                                        self.k,
+                                        factory,
+                                        backend.name(),
+                                        threads,
+                                        kind.name(),
+                                        pct,
+                                        nprobe
+                                    );
+                                    let trial_seed =
+                                        fnv1a(self.seed, case.as_bytes());
+                                    for repeat in 0..self.repeats {
+                                        out.push(TrialSpec {
+                                            id: format!("{case}/r{repeat}"),
+                                            case: case.clone(),
+                                            spec_name: self.name.clone(),
+                                            dataset: self.dataset.clone(),
+                                            n: self.n,
+                                            nq: self.nq,
+                                            k: self.k,
+                                            factory: factory.clone(),
+                                            width_bits: w,
+                                            backend,
+                                            threads,
+                                            kind,
+                                            filter_pct: pct,
+                                            nprobe,
+                                            repeat,
+                                            dataset_seed: self.seed,
+                                            trial_seed,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl TrialSpec {
+    /// The spec half of a recorded trial object (the runner merges in the
+    /// measurement half).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", Json::Str(self.id.clone()))
+            .set("case", Json::Str(self.case.clone()))
+            .set("spec_name", Json::Str(self.spec_name.clone()))
+            .set("dataset", Json::Str(self.dataset.clone()))
+            .set("n", Json::Num(self.n as f64))
+            .set("nq", Json::Num(self.nq as f64))
+            .set("k", Json::Num(self.k as f64))
+            .set("factory", Json::Str(self.factory.clone()))
+            .set("width_bits", Json::Num(self.width_bits as f64))
+            .set("backend", Json::Str(self.backend.name().to_string()))
+            .set("threads", Json::Num(self.threads as f64))
+            .set("kind", Json::Str(self.kind.name().to_string()))
+            .set("filter_pct", Json::Num(self.filter_pct as f64))
+            .set("nprobe", Json::Num(self.nprobe as f64))
+            .set("repeat", Json::Num(self.repeat as f64))
+            .set("dataset_seed", Json::Num(self.dataset_seed as f64))
+            .set("trial_seed", Json::Num(self.trial_seed as f64));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMOKE: &str = r#"{
+        "name": "t",
+        "dataset": "gaussian",
+        "n": 2000, "nq": 20, "k": 5, "seed": 7, "repeats": 2,
+        "factories": ["PQ8x{w}fs"],
+        "widths": [2, 4],
+        "backends": ["portable", "ssse3"],
+        "threads": [1],
+        "kinds": ["topk", "range"],
+        "filter_pct": [100],
+        "nprobes": [0]
+    }"#;
+
+    #[test]
+    fn lab_expansion_deterministic_and_ordered() {
+        let a = SweepSpec::parse_text(SMOKE).unwrap();
+        let b = SweepSpec::parse_text(SMOKE).unwrap();
+        assert_eq!(a.len(), 1);
+        let ta = a[0].expand();
+        let tb = b[0].expand();
+        assert_eq!(ta, tb, "same spec text must expand to the same trials");
+        // 1 factory × 2 widths × 2 backends × 1 thread × 2 kinds × 2 repeats
+        assert_eq!(ta.len(), 16);
+        // fixed nesting order: width is the outermost varying axis here
+        assert_eq!(ta[0].factory, "PQ8x2fs");
+        assert_eq!(ta[0].repeat, 0);
+        assert_eq!(ta[1].repeat, 1);
+        assert_eq!(ta[1].case, ta[0].case, "repeats share the case key");
+        assert_ne!(ta[1].id, ta[0].id);
+        assert_eq!(ta[15].factory, "PQ8x4fs");
+        // every id unique
+        let mut ids: Vec<&str> = ta.iter().map(|t| t.id.as_str()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 16);
+        // trial seed is a function of the case, not the repeat
+        assert_eq!(ta[0].trial_seed, ta[1].trial_seed);
+        assert_ne!(ta[0].trial_seed, ta[2].trial_seed);
+    }
+
+    #[test]
+    fn lab_spec_defaults_and_errors() {
+        let minimal = r#"{"name": "m", "factories": ["Flat"]}"#;
+        let s = &SweepSpec::parse_text(minimal).unwrap()[0];
+        assert_eq!(s.dataset, "sift");
+        assert_eq!(s.repeats, 2);
+        assert_eq!(s.backends, vec![Backend::Portable]);
+        // factory without {w}: width axis collapses
+        assert_eq!(s.expand().len(), 2);
+        assert_eq!(s.expand()[0].width_bits, 0);
+
+        assert!(SweepSpec::parse_text(r#"{"factories": ["Flat"]}"#).is_err());
+        assert!(SweepSpec::parse_text(r#"{"name": "x", "factories": []}"#).is_err());
+        assert!(SweepSpec::parse_text(
+            r#"{"name": "x", "factories": ["Flat"], "backends": ["avx512"]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse_text(
+            r#"{"name": "x", "factories": ["Flat"], "widths": [3]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse_text(
+            r#"{"name": "x", "factories": ["Flat"], "filter_pct": [0]}"#
+        )
+        .is_err());
+        assert!(SweepSpec::parse_text(
+            r#"{"name": "x", "factories": ["Flat"], "dataset": "laion"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn lab_spec_jsonl_and_array_forms() {
+        let jsonl = "# comment\n{\"name\": \"a\", \"factories\": [\"Flat\"]}\n\n{\"name\": \"b\", \"factories\": [\"Flat\"]}\n";
+        let specs = SweepSpec::parse_text(jsonl).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "a");
+        assert_eq!(specs[1].name, "b");
+
+        let arr = r#"[{"name": "a", "factories": ["Flat"]}, {"name": "b", "factories": ["Flat"]}]"#;
+        assert_eq!(SweepSpec::parse_text(arr).unwrap().len(), 2);
+        assert!(SweepSpec::parse_text("").is_err());
+    }
+
+    #[test]
+    fn lab_trial_spec_json_has_seed_documented() {
+        let s = &SweepSpec::parse_text(SMOKE).unwrap()[0];
+        let t = &s.expand()[0];
+        let j = t.to_json();
+        assert_eq!(j.get("dataset_seed").unwrap().as_usize().unwrap(), 7);
+        assert!(j.get("trial_seed").is_some());
+        assert_eq!(j.get("backend").unwrap().as_str().unwrap(), "portable");
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "topk");
+    }
+}

@@ -135,6 +135,7 @@ pub mod hnsw;
 pub mod index;
 pub mod ivf;
 pub mod kmeans;
+pub mod lab;
 pub mod obs;
 pub mod pq;
 pub mod runtime;

@@ -11,6 +11,9 @@
 //! armpq bench-micro  [--m 16] [--width 2,4,8] [--threads 1,2,4]
 //! armpq bench-layout [--n …] [--m 16] [--width 2,4,8]
 //! armpq bench-pjrt   [--artifacts artifacts]
+//! armpq lab run     --spec experiments/lab_smoke.json [--out BENCH.json]
+//! armpq lab compare --spec experiments/lab_smoke.json [--baseline BENCH.json]
+//! armpq lab report  [--file BENCH.json]
 //! ```
 //!
 //! Fastscan code width is part of the factory grammar (`PQ16x2fs`,
@@ -24,9 +27,13 @@ use armpq::eval::{ground_truth, recall_at_r};
 use armpq::experiments;
 use armpq::index::{index_factory, Index};
 use armpq::ivf::{IvfParams, IvfPq4};
+use armpq::lab;
 use armpq::pq::PqParams;
 use armpq::util::args::Args;
+use armpq::util::bench::Table;
+use armpq::util::json::Json;
 use armpq::util::timer::Timer;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 fn main() {
@@ -55,12 +62,12 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
         "search" => search(args),
         "serve" => serve(args),
         "client" => client(args),
+        "lab" => lab_cmd(args),
         "bench-fig2" => {
             let cfg = ExperimentConfig::from_args(args)?;
             let ms = args.get_usize_list("m", &[8, 16, 32, 64]);
             let t = experiments::run_fig2(&cfg.dataset, cfg.n, cfg.nq, &ms, cfg.trials, cfg.seed)?;
-            t.print();
-            t.save()?;
+            emit_table(&t, args)?;
             Ok(())
         }
         "bench-table1" => {
@@ -75,8 +82,7 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
             let t = experiments::run_table1_with(
                 cfg.n, cfg.nq, nlist, m, &nprobes, cfg.trials, cfg.seed, open.as_ref(),
             )?;
-            t.print();
-            t.save()?;
+            emit_table(&t, args)?;
             Ok(())
         }
         "bench-micro" => {
@@ -93,12 +99,10 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
             // Quicker-ADC trade-off axis in one run
             for &width in &cfg.widths {
                 let t = experiments::run_kernel_micro(m, width);
-                t.print();
-                t.save()?;
+                emit_table(&t, args)?;
                 if !sels.is_empty() {
                     let t = experiments::run_filter_micro(filter_n, m, width, &sels, cfg.seed);
-                    t.print();
-                    t.save()?;
+                    emit_table(&t, args)?;
                 }
                 if !threads.is_empty() {
                     let axis = experiments::default_thread_axis(
@@ -115,8 +119,7 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
                         cfg.trials,
                         cfg.seed,
                     )?;
-                    t.print();
-                    t.save()?;
+                    emit_table(&t, args)?;
                 }
             }
             Ok(())
@@ -133,16 +136,14 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
                 } else {
                     experiments::run_ablation_layout(n, m, width, cfg.seed)
                 };
-                t.print();
-                t.save()?;
+                emit_table(&t, args)?;
             }
             Ok(())
         }
         "bench-pjrt" => {
             let dir = args.get_str("artifacts", "artifacts");
             let t = experiments::run_pjrt_e2e(std::path::Path::new(&dir), 3)?;
-            t.print();
-            t.save()?;
+            emit_table(&t, args)?;
             Ok(())
         }
         "help" | "--help" => {
@@ -154,6 +155,234 @@ fn run(cmd: &str, args: &Args) -> armpq::Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// Print a bench table (or, with `--json`, emit it through the lab's
+/// record format) and persist the JSONL copy either way.
+fn emit_table(t: &Table, args: &Args) -> armpq::Result<()> {
+    if args.get_flag("json") {
+        println!("{}", lab::table_to_json(t).to_string());
+    } else {
+        t.print();
+    }
+    t.save()?;
+    Ok(())
+}
+
+/// `armpq lab run|compare|report` — the experiment lab's CLI surface.
+fn lab_cmd(args: &Args) -> armpq::Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("help");
+    match sub {
+        "run" => lab_run(args),
+        "compare" => lab_compare(args),
+        "report" => lab_report(args),
+        _ => {
+            println!("{LAB_HELP}");
+            Ok(())
+        }
+    }
+}
+
+const LAB_HELP: &str = "armpq lab — declarative sweeps with a recorded trajectory
+  lab run     --spec <file> | --spec-json <inline>
+              [--out <BENCH file>] [--dry-run] [--no-record]
+              expand the spec, run every trial (one JSON line each on
+              stdout), append a run record to the trajectory file
+  lab compare --spec <file> | --spec-json <inline>
+              [--baseline <BENCH file>] [--max-qps-drop 0.10]
+              [--recall-epsilon 0.02] [--inject-qps-drop <frac>]
+              re-run the spec and gate it against the last recorded run
+              for the same spec name; non-zero exit on regression
+  lab report  [--file <BENCH file>]
+              validate every recorded trial against the record schema and
+              summarize the trajectory; non-zero exit on schema violations
+The trajectory file defaults to BENCH_<host-slug>.json in the current
+directory; its host fingerprint must match this machine.";
+
+/// Load the spec text from `--spec <path>` or `--spec-json <inline>`.
+fn lab_load_specs(args: &Args) -> armpq::Result<Vec<lab::SweepSpec>> {
+    let text = if let Some(inline) = args.get_opt("spec-json") {
+        inline
+    } else if let Some(path) = args.get_opt("spec") {
+        std::fs::read_to_string(&path)
+            .map_err(|e| armpq::Error::Config(format!("cannot read spec {path:?}: {e}")))?
+    } else {
+        return Err(armpq::Error::Config(
+            "lab: pass --spec <file> or --spec-json <inline json>".into(),
+        ));
+    };
+    lab::SweepSpec::parse_text(&text)
+}
+
+fn lab_trajectory_path(args: &Args, key: &str, host: &lab::HostFingerprint) -> PathBuf {
+    match args.get_opt(key) {
+        Some(p) => PathBuf::from(p),
+        None => lab::Trajectory::path_for(Path::new("."), host),
+    }
+}
+
+/// Execute one spec's trials, streaming a JSON line per trial.
+fn lab_run_spec(
+    runner: &mut lab::LabRunner,
+    spec: &lab::SweepSpec,
+    quiet: bool,
+) -> Vec<Json> {
+    let trials = spec.expand();
+    eprintln!("lab: spec {:?} expands to {} trials", spec.name, trials.len());
+    let outcomes = runner.run_all(&trials, |o| {
+        if !quiet {
+            println!("{}", o.to_json().to_string());
+        }
+    });
+    let (ok, skipped, failed) = outcomes.iter().fold((0, 0, 0), |acc, o| match o.status {
+        lab::TrialStatus::Ok => (acc.0 + 1, acc.1, acc.2),
+        lab::TrialStatus::Skipped => (acc.0, acc.1 + 1, acc.2),
+        lab::TrialStatus::Failed => (acc.0, acc.1, acc.2 + 1),
+    });
+    eprintln!("lab: spec {:?} done — {ok} ok, {skipped} skipped, {failed} failed", spec.name);
+    outcomes.iter().map(|o| o.to_json()).collect()
+}
+
+fn lab_run(args: &Args) -> armpq::Result<()> {
+    let specs = lab_load_specs(args)?;
+    if args.get_flag("dry-run") {
+        for spec in &specs {
+            for t in spec.expand() {
+                println!("{}", t.id);
+            }
+        }
+        return Ok(());
+    }
+    let host = lab::HostFingerprint::detect();
+    let out = lab_trajectory_path(args, "out", &host);
+    let record = !args.get_flag("no-record");
+    let mut trajectory = if record {
+        Some(lab::Trajectory::load_or_new(&out, host.clone())?)
+    } else {
+        None
+    };
+    let git_rev = lab::git_revision(Path::new("."));
+    let mut runner = lab::LabRunner::new();
+    for spec in &specs {
+        let trials = lab_run_spec(&mut runner, spec, false);
+        if let Some(t) = trajectory.as_mut() {
+            let unix_time = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map_or(0, |d| d.as_secs());
+            t.append_and_save(&out, lab::RunRecord {
+                git_rev: git_rev.clone(),
+                spec_name: spec.name.clone(),
+                unix_time,
+                trials,
+            })?;
+            eprintln!(
+                "lab: appended run for {:?} at {git_rev} to {} ({} runs total)",
+                spec.name,
+                out.display(),
+                t.runs.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn lab_compare(args: &Args) -> armpq::Result<()> {
+    let specs = lab_load_specs(args)?;
+    let host = lab::HostFingerprint::detect();
+    let baseline_path = lab_trajectory_path(args, "baseline", &host);
+    let trajectory = lab::Trajectory::load_or_new(&baseline_path, host)?;
+    let cfg = lab::GateConfig {
+        max_qps_drop: args.get_f64("max-qps-drop", 0.10),
+        min_recall_epsilon: args.get_f64("recall-epsilon", 0.02),
+        noise_mult: args.get_f64("noise-mult", 2.0),
+    };
+    // testing hook (CI forced-fail mode): scale fresh throughput down to
+    // prove the gate trips on a real regression signal
+    let inject = args.get_f64("inject-qps-drop", 0.0);
+
+    let mut runner = lab::LabRunner::new();
+    let mut failure: Option<armpq::Error> = None;
+    for spec in &specs {
+        let Some(baseline) = trajectory.last_run_for_spec(&spec.name) else {
+            eprintln!(
+                "lab: no recorded baseline for spec {:?} in {} — nothing to compare",
+                spec.name,
+                baseline_path.display()
+            );
+            continue;
+        };
+        let mut fresh = lab_run_spec(&mut runner, spec, true);
+        if inject > 0.0 {
+            for t in &mut fresh {
+                if let Some(qps) = t.get("qps").and_then(Json::as_f64) {
+                    t.set("qps", Json::Num(qps * (1.0 - inject)));
+                }
+            }
+        }
+        match lab::enforce(&baseline.trials, &fresh, &cfg) {
+            Ok(report) => {
+                println!(
+                    "lab: gate PASS for {:?} vs {} ({} cases)\n{}",
+                    spec.name,
+                    baseline.git_rev,
+                    report.verdicts.len(),
+                    report.render()
+                );
+            }
+            Err(e) => {
+                eprintln!("lab: gate FAIL for {:?} vs {}", spec.name, baseline.git_rev);
+                failure.get_or_insert(e);
+            }
+        }
+    }
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+fn lab_report(args: &Args) -> armpq::Result<()> {
+    let host = lab::HostFingerprint::detect();
+    let path = lab_trajectory_path(args, "file", &host);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| armpq::Error::Config(format!("cannot read {}: {e}", path.display())))?;
+    let trajectory = lab::Trajectory::from_json_text(&text)?;
+    println!(
+        "trajectory {} — host {} ({}), {} run(s)",
+        path.display(),
+        trajectory.host.slug(),
+        trajectory.host.cpu_model,
+        trajectory.runs.len()
+    );
+    let mut violations = 0usize;
+    for (ri, run) in trajectory.runs.iter().enumerate() {
+        let mut ok = 0;
+        let mut other = 0;
+        for t in &run.trials {
+            for err in lab::validate_trial_json(t) {
+                let id = t.get("id").and_then(Json::as_str).unwrap_or("?");
+                eprintln!("run {ri} trial {id}: {err}");
+                violations += 1;
+            }
+            match t.get("status").and_then(Json::as_str) {
+                Some("ok") => ok += 1,
+                _ => other += 1,
+            }
+        }
+        println!(
+            "  run {ri}: spec {:?} rev {} — {} trials ({ok} ok, {other} skipped/failed)",
+            run.spec_name,
+            run.git_rev,
+            run.trials.len()
+        );
+    }
+    if violations > 0 {
+        return Err(armpq::Error::Config(format!(
+            "{violations} trial(s) violate the record schema"
+        )));
+    }
+    println!("all recorded trials conform to the record schema");
+    Ok(())
 }
 
 const HELP: &str = "armpq — ARM 4-bit PQ reproduction (SIMD ANN search)
@@ -177,7 +406,11 @@ commands:
   bench-layout  interleaved-vs-flat layout ablation (--width 2,4,8;
                 --range benches the range-query scan instead of top-k)
   bench-pjrt    3-layer PJRT end-to-end comparison
-common flags: --dataset sift|deep --n <int> --nq <int> --k <int>
+  lab           experiment lab: `lab run|compare|report` (see `armpq lab`)
+                — declarative sweep specs, recorded BENCH_<host>.json
+                trajectory, and the CI regression gate; every bench-*
+                command also accepts --json to emit the lab record format
+common flags: --dataset sift|deep|gaussian --n <int> --nq <int> --k <int>
               --factory <spec> --nprobe <list> --seed <int> --config <file>
               --backend portable|ssse3|neon (default: best for this host)
               --width 2|4|8 (fastscan code width for kernel benches;

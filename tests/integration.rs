@@ -1914,3 +1914,146 @@ fn obs_slowlog_bounded() {
     );
     server.stop();
 }
+
+// ---------------------------------------------------------------------------
+// Experiment lab: spec expansion, runner measurements, trajectory record,
+// and the regression gate (lab_*).
+
+/// The committed smoke spec is the one CI runs: it must parse, expand
+/// deterministically, and cover the acceptance grid (≥ 12 trials over
+/// ≥ 2 widths × 2 backends × both query kinds).
+#[test]
+fn lab_smoke_spec_covers_acceptance_grid() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/experiments/lab_smoke.json");
+    let text = std::fs::read_to_string(path).unwrap();
+    let specs = armpq::lab::SweepSpec::parse_text(&text).unwrap();
+    assert_eq!(specs.len(), 1);
+    let trials = specs[0].expand();
+    assert_eq!(trials, specs[0].expand(), "expansion must be deterministic");
+    assert!(trials.len() >= 12, "smoke spec expands to only {}", trials.len());
+
+    let widths: std::collections::BTreeSet<usize> =
+        trials.iter().map(|t| t.width_bits).collect();
+    let backends: std::collections::BTreeSet<&str> =
+        trials.iter().map(|t| t.backend.name()).collect();
+    let kinds: std::collections::BTreeSet<&str> =
+        trials.iter().map(|t| t.kind.name()).collect();
+    assert!(widths.len() >= 2, "widths covered: {widths:?}");
+    assert!(backends.len() >= 2, "backends covered: {backends:?}");
+    assert_eq!(kinds.len(), 2, "kinds covered: {kinds:?}");
+    // ids unique; repeats share their case key
+    let ids: std::collections::BTreeSet<&str> =
+        trials.iter().map(|t| t.id.as_str()).collect();
+    assert_eq!(ids.len(), trials.len());
+}
+
+/// The lab's recall measurement must agree with a direct `eval/`
+/// computation over the same index, params and executor — on a quantized
+/// index, not just an exact one.
+#[test]
+fn lab_recall_agrees_with_eval_on_quantized_index() {
+    use armpq::exec::QueryExecutor;
+    let spec_text = r#"{"name": "agree", "dataset": "gaussian", "n": 1500,
+        "nq": 16, "k": 5, "seed": 11, "repeats": 1,
+        "factories": ["PQ8x4fs"], "backends": ["portable"],
+        "threads": [1], "kinds": ["topk"]}"#;
+    let spec = &armpq::lab::SweepSpec::parse_text(spec_text).unwrap()[0];
+    let trials = spec.expand();
+    assert_eq!(trials.len(), 1);
+    let out = armpq::lab::LabRunner::new().run_trial(&trials[0]);
+    assert_eq!(out.status, armpq::lab::TrialStatus::Ok, "{:?}", out.error);
+    let m = out.metrics.unwrap();
+
+    // the same measurement by hand, through the same public paths
+    let ds = SyntheticDataset::by_name("gaussian", 1500, 16, 11).unwrap();
+    let gt = ground_truth(&ds.base, &ds.queries, ds.dim, 5);
+    let mut idx = index_factory(ds.dim, "PQ8x4fs").unwrap();
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let exec = QueryExecutor::new(1);
+    let params = SearchParams::new().with_backend(armpq::simd::Backend::Portable);
+    let req = QueryRequest::top_k(&ds.queries, 5).with_params(params);
+    let resp = idx.query_exec(&req, &exec).unwrap();
+    let flat = resp.into_search_result(5);
+    let want_r1 = recall_at_r(&gt, 5, &flat.labels, 5, 1);
+    let want_rk = recall_at_r(&gt, 5, &flat.labels, 5, 5);
+    assert_eq!(m.recall_at_1, want_r1, "lab recall@1 disagrees with eval/");
+    assert_eq!(m.recall_at_k, want_rk, "lab recall@k disagrees with eval/");
+}
+
+/// End-to-end through the record and gate layers: run a tiny sweep,
+/// append it to a trajectory in a temp dir, validate every emitted trial
+/// against the record schema, then gate a clean re-run (pass) and an
+/// injected throughput regression (fail) — the CI contract.
+#[test]
+fn lab_record_and_gate_end_to_end() {
+    use armpq::lab::{self, GateConfig};
+    use armpq::util::json::Json;
+
+    let spec_text = r#"{"name": "e2e", "dataset": "gaussian", "n": 1200,
+        "nq": 10, "k": 4, "seed": 3, "repeats": 2,
+        "factories": ["Flat", "PQ8x4fs"], "backends": ["portable"],
+        "threads": [1], "kinds": ["topk", "range"]}"#;
+    let spec = &lab::SweepSpec::parse_text(spec_text).unwrap()[0];
+    let trials = spec.expand();
+    assert_eq!(trials.len(), 8); // 2 factories × 2 kinds × 2 repeats
+
+    let mut runner = lab::LabRunner::new();
+    let outcomes = runner.run_all(&trials, |_| {});
+    let trial_json: Vec<Json> = outcomes.iter().map(|o| o.to_json()).collect();
+    for t in &trial_json {
+        let errs = lab::validate_trial_json(t);
+        assert!(errs.is_empty(), "schema violations: {errs:?}\n{}", t.to_string());
+    }
+    assert!(outcomes.iter().all(|o| o.status == lab::TrialStatus::Ok));
+
+    // record: append twice, reload, baseline = last run for the spec name
+    let dir = std::env::temp_dir().join(format!("armpq_lab_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let host = lab::HostFingerprint::detect();
+    let path = lab::Trajectory::path_for(&dir, &host);
+    let mut traj = lab::Trajectory::load_or_new(&path, host.clone()).unwrap();
+    traj.append_and_save(&path, lab::RunRecord {
+        git_rev: "rev0".into(),
+        spec_name: spec.name.clone(),
+        unix_time: 1,
+        trials: trial_json.clone(),
+    })
+    .unwrap();
+    let reloaded = lab::Trajectory::load_or_new(&path, host).unwrap();
+    let baseline = reloaded.last_run_for_spec("e2e").unwrap();
+    assert_eq!(baseline.trials.len(), trials.len());
+
+    // clean re-run through the real measurement path → gate passes. The
+    // loose QPS margin keeps shared-runner timing noise out of the test;
+    // recall is deterministic and still gated at the default epsilon.
+    let fresh: Vec<Json> =
+        runner.run_all(&trials, |_| {}).iter().map(|o| o.to_json()).collect();
+    let loose = GateConfig { max_qps_drop: 0.75, ..GateConfig::default() };
+    let report = lab::enforce(&baseline.trials, &fresh, &loose).unwrap();
+    assert!(report.passed(), "{}", report.render());
+
+    // exact self-comparison passes at the default 10% threshold
+    let cfg = GateConfig::default();
+    assert!(lab::enforce(&baseline.trials, &baseline.trials, &cfg).unwrap().passed());
+
+    // the pass is visible on the metrics surface without plumbing
+    let prom = armpq::coordinator::metrics::Metrics::new().to_prometheus();
+    assert!(prom.contains("armpq_lab_gate_verdict 1"), "{prom}");
+    assert!(prom.contains("armpq_lab_trials_total"));
+
+    // injected 50% throughput drop on every trial: gate must fail
+    let mut slow = baseline.trials.clone();
+    for t in &mut slow {
+        if let Some(q) = t.get("qps").and_then(Json::as_f64) {
+            t.set("qps", Json::Num(q * 0.5));
+        }
+    }
+    let err = lab::enforce(&baseline.trials, &slow, &cfg);
+    assert!(err.is_err(), "gate passed a 50% throughput drop");
+    let prom = armpq::coordinator::metrics::Metrics::new().to_prometheus();
+    assert!(prom.contains("armpq_lab_gate_verdict 2"), "{prom}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
