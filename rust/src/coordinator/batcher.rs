@@ -17,6 +17,26 @@
 //! query kinds never share (or pollute) a backend call. Filters compare
 //! structurally (`IdSet`/`IdRange`) or by closure identity (`Predicate`);
 //! the [`crate::index::query::Filter::signature`] is for metrics only.
+//!
+//! # Admission control and deadlines
+//!
+//! The submit path **never blocks and never queues unboundedly**: the
+//! admission queue is the bounded `sync_channel(queue_depth)`, and when it
+//! is full the request is rejected at the door with
+//! [`crate::Error::Overloaded`] (counted in
+//! `admission_rejections_total`). An overloaded server therefore keeps
+//! answering admitted work at full speed instead of building a latency
+//! cliff — clients back off and retry.
+//!
+//! With a [`BatcherConfig::deadline`] configured, each window additionally
+//! applies **deadline-aware degradation**: requests that have burned most
+//! of their budget in the queue, or windows formed while the queue is
+//! deep, get their *per-request* `nprobe` override halved (level 1) or
+//! quartered (level 2), floored at 1. Only effort is degraded — never
+//! correctness: results are still exact for the probes scanned, requests
+//! without an explicit `nprobe` are never touched (index defaults are the
+//! backend's business), and degradation is OFF unless a deadline is set
+//! (the default), so batching stays bit-identical to the direct path.
 
 use super::metrics::Metrics;
 use super::service::SearchBackend;
@@ -24,7 +44,8 @@ use crate::index::query::{pad_hits, Filter, QueryKind, QueryRequest, QueryStats}
 use crate::index::SearchParams;
 use crate::obs::TraceSpan;
 use crate::Result;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -72,8 +93,16 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// Worker threads draining the shared queue.
     pub workers: usize,
-    /// Bounded queue depth (backpressure: submit blocks when full).
+    /// Bounded admission queue depth; a full queue rejects with
+    /// [`crate::Error::Overloaded`] instead of blocking the submitter.
     pub queue_depth: usize,
+    /// Per-request latency budget. `None` (the default) disables
+    /// deadline-aware degradation entirely. `Some(d)`: requests that spent
+    /// more than `d/2` queued — or windows formed with the queue more than
+    /// half full — have their explicit `nprobe` override halved; past `d`
+    /// (or a ¾-full queue) it is quartered, floored at 1. Requests without
+    /// an explicit `nprobe` are never modified.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
@@ -83,6 +112,7 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_micros(200),
             workers: 1,
             queue_depth: 1024,
+            deadline: None,
         }
     }
 }
@@ -92,25 +122,35 @@ pub struct Batcher {
     tx: SyncSender<PendingQuery>,
     pub metrics: Arc<Metrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Requests admitted but not yet pulled into a window — the pressure
+    /// signal for admission metrics and deadline degradation.
+    depth: Arc<AtomicUsize>,
 }
 
 impl Batcher {
     /// Spawn the worker threads.
     pub fn start(backend: Arc<dyn SearchBackend>, cfg: BatcherConfig) -> Batcher {
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<PendingQuery>(cfg.queue_depth);
+        let (tx, rx) = sync_channel::<PendingQuery>(cfg.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
+        let depth = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
             let rx = rx.clone();
             let backend = backend.clone();
             let metrics = metrics.clone();
             let cfg = cfg.clone();
+            let depth = depth.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(rx, backend, metrics, cfg);
+                worker_loop(rx, backend, metrics, cfg, depth);
             }));
         }
-        Batcher { tx, metrics, workers }
+        Batcher { tx, metrics, workers, depth }
+    }
+
+    /// Admitted-but-unscheduled requests right now.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
     }
 
     /// Enqueue a typed query; returns the reply receiver.
@@ -148,8 +188,23 @@ impl Batcher {
             enqueued: Instant::now(),
             reply: reply_tx,
         };
-        // A send error means shutdown; the caller sees a disconnected reply.
-        let _ = self.tx.send(req);
+        // Bounded admission: a full queue rejects at the door instead of
+        // blocking the connection thread behind an unbounded backlog.
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                let d = self.depth.fetch_add(1, Ordering::AcqRel) + 1;
+                self.metrics.admission_queue_depth.store(d as u64, Ordering::Relaxed);
+            }
+            Err(TrySendError::Full(req)) => {
+                self.metrics
+                    .admission_rejections_total
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = req.reply.send(Err(crate::Error::Overloaded));
+            }
+            // Disconnected means shutdown; the caller sees a disconnected
+            // reply channel, same as the pre-admission behavior.
+            Err(TrySendError::Disconnected(_)) => {}
+        }
         reply_rx
     }
 
@@ -214,6 +269,7 @@ fn worker_loop(
     backend: Arc<dyn SearchBackend>,
     metrics: Arc<Metrics>,
     cfg: BatcherConfig,
+    depth: Arc<AtomicUsize>,
 ) {
     loop {
         // Block for the first request of a window.
@@ -224,6 +280,7 @@ fn worker_loop(
                 Err(_) => return, // channel closed
             }
         };
+        depth.fetch_sub(1, Ordering::AcqRel);
         let window_start = Instant::now();
         let mut batch = vec![first];
         // Drain until the window closes.
@@ -245,17 +302,76 @@ fn worker_loop(
                 }
             };
             match next {
-                Some(r) => batch.push(r),
+                Some(r) => {
+                    depth.fetch_sub(1, Ordering::AcqRel);
+                    batch.push(r);
+                }
                 None => break,
             }
         }
-        execute_batch(&*backend, &metrics, batch);
+        let backlog = depth.load(Ordering::Acquire);
+        metrics.admission_queue_depth.store(backlog as u64, Ordering::Relaxed);
+        execute_batch(&*backend, &metrics, &cfg, backlog, batch);
     }
 }
 
 type GroupKey = (QueryKind, Option<Filter>, Option<SearchParams>);
 
-fn execute_batch(backend: &dyn SearchBackend, metrics: &Metrics, batch: Vec<PendingQuery>) {
+/// Degradation level for one request under the configured deadline: 0 =
+/// untouched, 1 = halve the explicit `nprobe`, 2 = quarter it.
+fn degrade_level(cfg: &BatcherConfig, backlog: usize, queued_for: Duration) -> u32 {
+    let Some(deadline) = cfg.deadline else { return 0 };
+    let cap = cfg.queue_depth.max(1);
+    let mut level = 0;
+    if backlog > cap / 2 || queued_for > deadline / 2 {
+        level = 1;
+    }
+    if backlog > cap * 3 / 4 || queued_for >= deadline {
+        level = 2;
+    }
+    level
+}
+
+/// Apply a degradation level to a request's params. Only an explicit
+/// per-request `nprobe > 1` is ever reduced (floored at 1); everything
+/// else — including requests with no override — passes through untouched.
+/// Returns whether a reduction actually happened.
+fn degrade_params(params: &mut Option<SearchParams>, level: u32) -> bool {
+    if level == 0 {
+        return false;
+    }
+    if let Some(p) = params {
+        if let Some(np) = p.nprobe {
+            let reduced = (np >> level).max(1);
+            if reduced < np {
+                p.nprobe = Some(reduced);
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn execute_batch(
+    backend: &dyn SearchBackend,
+    metrics: &Metrics,
+    cfg: &BatcherConfig,
+    backlog: usize,
+    mut batch: Vec<PendingQuery>,
+) {
+    // Deadline-aware degradation BEFORE grouping, so degraded and
+    // untouched requests form separate groups and overrides never leak.
+    if cfg.deadline.is_some() {
+        let now = Instant::now();
+        for r in &mut batch {
+            let level = degrade_level(cfg, backlog, now.saturating_duration_since(r.enqueued));
+            if degrade_params(&mut r.params, level) {
+                metrics
+                    .deadline_degraded_total
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+    }
     metrics.record_batch(batch.len());
     let batch_size = batch.len();
     let batch_t0 = Instant::now();
@@ -582,6 +698,76 @@ mod tests {
         let err = b.search(vec![0.0], 1, None).unwrap_err();
         assert!(err.to_string().contains("injected"));
         assert_eq!(b.metrics.errors_total.load(std::sync::atomic::Ordering::Relaxed), 1);
+        b.shutdown();
+    }
+
+    /// Bounded admission: with a tiny queue and a slow backend, a burst is
+    /// partially rejected with `Error::Overloaded` — and once the backlog
+    /// drains, the batcher serves new work again (responsive, not wedged).
+    #[test]
+    fn overload_rejects_with_bounded_queue_then_recovers() {
+        let be = Arc::new(EchoBackend { dim: 1, delay: Duration::from_millis(20) });
+        let b = Batcher::start(
+            be,
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                queue_depth: 2,
+                ..Default::default()
+            },
+        );
+        // the burst arrives faster than 20ms-per-window service can drain
+        let rxs: Vec<_> = (0..16).map(|i| b.submit(vec![i as f32], 1, None)).collect();
+        let mut ok = 0usize;
+        let mut overloaded = 0usize;
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert!(e.to_string().contains("overloaded"), "unexpected error: {e}");
+                    overloaded += 1;
+                }
+            }
+        }
+        assert!(ok >= 1, "admitted work must still complete");
+        assert!(overloaded >= 1, "a 16-deep burst into a 2-deep queue must reject");
+        assert_eq!(
+            b.metrics.admission_rejections_total.load(std::sync::atomic::Ordering::Relaxed),
+            overloaded as u64
+        );
+        // recovered: the queue drained, so a fresh request is admitted
+        let resp = b.search(vec![7.0], 1, None).unwrap();
+        assert_eq!(resp.labels, vec![7]);
+        assert_eq!(b.queue_depth(), 0);
+        b.shutdown();
+    }
+
+    /// Deadline degradation reduces only the explicit per-request `nprobe`
+    /// (floored at 1); requests without an override are never touched, and
+    /// with no deadline configured nothing changes at all.
+    #[test]
+    fn overload_deadline_degrades_nprobe_only() {
+        // deadline ZERO ⇒ every request is past its budget ⇒ level 2
+        let b = Batcher::start(
+            Arc::new(ParamEchoBackend),
+            BatcherConfig { deadline: Some(Duration::ZERO), ..Default::default() },
+        );
+        let resp = b.search(vec![1.0], 2, Some(SearchParams::new().with_nprobe(8))).unwrap();
+        assert_eq!(resp.labels, vec![2; 2], "nprobe 8 must quarter to 2 at level 2");
+        let resp = b.search(vec![1.0], 2, Some(SearchParams::new().with_nprobe(1))).unwrap();
+        assert_eq!(resp.labels, vec![1; 2], "nprobe floor is 1");
+        let resp = b.search(vec![1.0], 2, None).unwrap();
+        assert_eq!(resp.labels, vec![0; 2], "no override ⇒ untouched");
+        assert!(
+            b.metrics.deadline_degraded_total.load(std::sync::atomic::Ordering::Relaxed) >= 1
+        );
+        b.shutdown();
+
+        // no deadline ⇒ bit-identical to the pre-deadline batcher
+        let b = Batcher::start(Arc::new(ParamEchoBackend), BatcherConfig::default());
+        let resp = b.search(vec![1.0], 2, Some(SearchParams::new().with_nprobe(8))).unwrap();
+        assert_eq!(resp.labels, vec![8; 2], "no deadline ⇒ nprobe untouched");
+        assert_eq!(b.metrics.deadline_degraded_total.load(std::sync::atomic::Ordering::Relaxed), 0);
         b.shutdown();
     }
 }

@@ -197,6 +197,26 @@ pub struct Metrics {
     pub lab_trials_total: AtomicU64,
     pub lab_trials_failed: AtomicU64,
     pub lab_gate_verdict: AtomicU64,
+    /// admission-control instruments (fed by the batcher): current
+    /// depth of the bounded admission queue (gauge), requests rejected
+    /// at the door with [`crate::Error::Overloaded`] (counter), and
+    /// requests whose `nprobe` was degraded by the deadline policy
+    /// (counter) — together they show whether the server is shedding
+    /// load and how it is paying for it
+    pub admission_queue_depth: AtomicU64,
+    pub admission_rejections_total: AtomicU64,
+    pub deadline_degraded_total: AtomicU64,
+    /// worker-pool instruments (latest observation via
+    /// [`Metrics::record_pool_stats`], sourced from the process-global
+    /// [`crate::exec::pool::counters`] and the global executor's pool
+    /// snapshot): persistent workers, jobs currently queued, lifetime
+    /// tasks executed on workers, lifetime cross-queue steals, and a
+    /// per-worker busy fraction in permille of wall time since spawn
+    pub pool_workers: AtomicU64,
+    pub pool_queue_depth: AtomicU64,
+    pub pool_tasks_total: AtomicU64,
+    pub pool_steals_total: AtomicU64,
+    pool_busy_permille: Mutex<Vec<u64>>,
     /// bounded worst-by-latency query ring (see [`Metrics::record_slow`])
     slowlog: Mutex<Vec<SlowQuery>>,
     /// admission floor: the smallest e2e in a **full** slowlog — reads
@@ -318,6 +338,30 @@ impl Metrics {
         self.lab_gate_verdict.store(s.last_gate, Ordering::Relaxed);
     }
 
+    /// Refresh the worker-pool gauges from the process-global pool
+    /// counters and — when the global executor has been created — its
+    /// pool's live snapshot. Self-called by the exports; uses
+    /// [`crate::exec::QueryExecutor::global_get`] so a metrics scrape
+    /// never *spawns* a pool in a process that hasn't needed one yet.
+    pub fn record_pool_stats(&self) {
+        let c = crate::exec::pool::counters();
+        self.pool_steals_total.store(c.steals.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.pool_tasks_total
+            .store(c.tasks_executed.load(Ordering::Relaxed), Ordering::Relaxed);
+        let snap = crate::exec::QueryExecutor::global_get()
+            .and_then(|e| e.worker_pool().map(|p| p.snapshot()));
+        let Some(s) = snap else { return };
+        self.pool_workers.store(s.workers as u64, Ordering::Relaxed);
+        self.pool_queue_depth.store(s.queue_depth as u64, Ordering::Relaxed);
+        *self.pool_busy_permille.lock().unwrap() = s.busy_permille;
+    }
+
+    /// Latest per-worker busy fractions (permille of wall time since the
+    /// pool was spawned), as captured by [`Metrics::record_pool_stats`].
+    pub fn pool_busy_permille(&self) -> Vec<u64> {
+        self.pool_busy_permille.lock().unwrap().clone()
+    }
+
     pub fn record_batch(&self, size: usize) {
         self.batches_total.fetch_add(1, Ordering::Relaxed);
         self.batched_queries_total.fetch_add(size as u64, Ordering::Relaxed);
@@ -336,6 +380,7 @@ impl Metrics {
     /// Export as JSON (served by the `stats` command of the TCP protocol).
     pub fn to_json(&self) -> Json {
         self.record_lab_stats();
+        self.record_pool_stats();
         let mut o = Json::obj();
         o.set("requests_total", Json::Num(self.requests_total.load(Ordering::Relaxed) as f64))
             .set("batches_total", Json::Num(self.batches_total.load(Ordering::Relaxed) as f64))
@@ -416,6 +461,42 @@ impl Metrics {
             .set(
                 "lab_gate_verdict",
                 Json::Num(self.lab_gate_verdict.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "admission_queue_depth",
+                Json::Num(self.admission_queue_depth.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "admission_rejections_total",
+                Json::Num(self.admission_rejections_total.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "deadline_degraded_total",
+                Json::Num(self.deadline_degraded_total.load(Ordering::Relaxed) as f64),
+            )
+            .set("pool_workers", Json::Num(self.pool_workers.load(Ordering::Relaxed) as f64))
+            .set(
+                "pool_queue_depth",
+                Json::Num(self.pool_queue_depth.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "pool_tasks_total",
+                Json::Num(self.pool_tasks_total.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "pool_steals_total",
+                Json::Num(self.pool_steals_total.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "pool_busy_permille",
+                Json::Arr(
+                    self.pool_busy_permille
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(|&p| Json::Num(p as f64))
+                        .collect(),
+                ),
             );
         o
     }
@@ -428,6 +509,7 @@ impl Metrics {
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write;
         self.record_lab_stats();
+        self.record_pool_stats();
         let mut out = String::with_capacity(8192);
         let counter = |out: &mut String, name: &str, help: &str, v: u64| {
             let _ = writeln!(out, "# HELP {name} {help}");
@@ -456,6 +538,10 @@ impl Metrics {
         counter(&mut out, "armpq_mmap_open_total", "mmap opens performed by the storage layer.", self.mmap_open_total.load(ld));
         counter(&mut out, "armpq_lab_trials_total", "Experiment-lab trials executed by this process.", self.lab_trials_total.load(ld));
         counter(&mut out, "armpq_lab_trials_failed", "Experiment-lab trials that failed.", self.lab_trials_failed.load(ld));
+        counter(&mut out, "armpq_admission_rejections_total", "Requests rejected at the admission queue.", self.admission_rejections_total.load(ld));
+        counter(&mut out, "armpq_deadline_degraded_total", "Requests whose nprobe was degraded by the deadline policy.", self.deadline_degraded_total.load(ld));
+        counter(&mut out, "armpq_pool_tasks_total", "Helper jobs executed on worker-pool threads.", self.pool_tasks_total.load(ld));
+        counter(&mut out, "armpq_pool_steals_total", "Helper jobs stolen across worker queues.", self.pool_steals_total.load(ld));
         gauge(&mut out, "armpq_exec_threads", "Widest executor fan-out observed.", self.exec_threads.load(ld));
         gauge(&mut out, "armpq_scratch_high_water_bytes", "Executor scratch-arena high water.", self.scratch_high_water_bytes.load(ld));
         gauge(&mut out, "armpq_segments_scanned", "Widest per-query segment fan-out observed.", self.segments_scanned.load(ld));
@@ -466,6 +552,17 @@ impl Metrics {
         gauge(&mut out, "armpq_resident_code_bytes", "Mapped code bytes advised resident.", self.resident_code_bytes.load(ld));
         gauge(&mut out, "armpq_resident_sampled_bytes", "Mapped code bytes actually in RAM (mincore-sampled).", self.resident_sampled_bytes.load(ld));
         gauge(&mut out, "armpq_lab_gate_verdict", "Last regression-gate verdict: 0 none, 1 pass, 2 fail.", self.lab_gate_verdict.load(ld));
+        gauge(&mut out, "armpq_admission_queue_depth", "Requests currently held in the bounded admission queue.", self.admission_queue_depth.load(ld));
+        gauge(&mut out, "armpq_pool_workers", "Persistent worker threads in the global executor's pool.", self.pool_workers.load(ld));
+        gauge(&mut out, "armpq_pool_queue_depth", "Helper jobs currently queued on pool workers.", self.pool_queue_depth.load(ld));
+        {
+            let busy = self.pool_busy_permille.lock().unwrap();
+            let _ = writeln!(out, "# HELP armpq_pool_worker_busy_permille Per-worker busy time, permille of pool lifetime.");
+            let _ = writeln!(out, "# TYPE armpq_pool_worker_busy_permille gauge");
+            for (w, p) in busy.iter().enumerate() {
+                let _ = writeln!(out, "armpq_pool_worker_busy_permille{{worker=\"{w}\"}} {p}");
+            }
+        }
         histogram(&mut out, "armpq_queue_us", "Enqueue-to-batch-formation wait, microseconds.", &self.queue_us);
         histogram(&mut out, "armpq_service_us", "Backend search time per batch, microseconds.", &self.service_us);
         histogram(&mut out, "armpq_batch_latency_us", "Whole-batch execution latency, microseconds.", &self.batch_latency_us);
@@ -594,9 +691,53 @@ mod tests {
             "resident_code_bytes",
             "resident_sampled_bytes",
             "mmap_open_total",
+            "admission_queue_depth",
+            "admission_rejections_total",
+            "deadline_degraded_total",
+            "pool_workers",
+            "pool_queue_depth",
+            "pool_tasks_total",
+            "pool_steals_total",
+            "pool_busy_permille",
         ] {
             assert!(j.get(key).is_some(), "{key}");
         }
+    }
+
+    /// Pool gauges track the process-global pool counters and the global
+    /// executor's snapshot; admission instruments export in both formats.
+    #[test]
+    fn pool_and_admission_gauges_in_exports() {
+        // drive at least one fan-out through the global (pool-backed)
+        // executor so the task counter has something to show when the
+        // machine grants more than one thread
+        let exec = crate::exec::QueryExecutor::global();
+        exec.run_batch(8, |i, _scratch| i * 2);
+        let m = Metrics::new();
+        m.admission_rejections_total.fetch_add(3, Ordering::Relaxed);
+        m.deadline_degraded_total.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("admission_rejections_total").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("deadline_degraded_total").unwrap().as_usize().unwrap(), 1);
+        // the export refreshed the pool gauges itself
+        let tasks = j.get("pool_tasks_total").unwrap().as_f64().unwrap();
+        assert_eq!(tasks as u64, crate::exec::pool::counters().tasks_executed.load(Ordering::Relaxed));
+        let busy = j.get("pool_busy_permille").unwrap().as_arr().unwrap();
+        assert_eq!(busy.len(), m.pool_busy_permille().len());
+        let text = m.to_prometheus();
+        for family in [
+            "armpq_admission_queue_depth",
+            "armpq_admission_rejections_total",
+            "armpq_deadline_degraded_total",
+            "armpq_pool_workers",
+            "armpq_pool_queue_depth",
+            "armpq_pool_tasks_total",
+            "armpq_pool_steals_total",
+            "armpq_pool_worker_busy_permille",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family}")), "missing {family}");
+        }
+        assert!(text.contains("armpq_admission_rejections_total 3"));
     }
 
     /// Storage residency gauges mirror the process-wide counters.

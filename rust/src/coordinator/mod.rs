@@ -87,10 +87,43 @@
 //! [`ServerConfig::metrics_addr`] additionally binds a one-endpoint HTTP
 //! listener serving the same exposition to stock Prometheus scrapers.
 //!
+//! # The serving runtime: persistent pool, admission control, deadlines
+//!
+//! The coordinator sits on the persistent worker pool of
+//! [`crate::exec::pool`] rather than per-call thread spawning: the global
+//! [`crate::exec::QueryExecutor`] owns its workers for the process
+//! lifetime (optionally pinned via `ARMPQ_PIN`, NUMA-placed from
+//! `/sys/devices/system/node`), and every fan-out in this module — batch
+//! windows across queries, probed lists within a query, shards across the
+//! router — submits units to the same pool. [`ShardedBackend`] interleaves
+//! its shards across NUMA nodes at construction and tags each shard's
+//! fan-out unit with its home node, so pool workers prefer same-node
+//! shards and steal cross-node only when idle.
+//!
+//! In front of that sits admission control. The batcher's submission
+//! queue is **bounded** ([`BatcherConfig::queue_depth`]): a full queue
+//! rejects new work at the door with [`crate::Error::Overloaded`] (the
+//! wire renders it as an `err` whose message contains `overloaded`, the
+//! token clients back off on) instead of queueing unboundedly and letting
+//! tail latency grow without limit. Admitted work is never cancelled.
+//! With a configured [`BatcherConfig::deadline`], requests that have
+//! already burned half their budget in the queue — or that arrive in a
+//! window formed while the queue is more than half full — degrade
+//! *effort, never correctness*: an explicit per-request `nprobe` override
+//! is halved (quartered past the full budget, floored at 1), which trades
+//! recall for latency along the paper's own nprobe/recall curve; results
+//! stay exact for the parameters actually used, and requests without an
+//! explicit `nprobe` are left untouched. The `stats`/`metrics` verbs
+//! expose the whole loop: `admission_queue_depth`,
+//! `admission_rejections_total`, `deadline_degraded_total`, plus the
+//! pool's `pool_workers` / `pool_queue_depth` / `pool_tasks_total` /
+//! `pool_steals_total` and per-worker busy-fraction gauges.
+//!
 //! Everything is std-thread + mpsc (no tokio in the vendored crate set);
 //! on the paper's workload (sub-ms searches) OS threads are not the
 //! bottleneck — the batcher exists to amortize LUT construction across
-//! queries.
+//! queries, and the pool to stop paying thread spawn/teardown on every
+//! one of them.
 
 pub mod batcher;
 pub mod metrics;

@@ -13,9 +13,19 @@ use std::sync::Arc;
 /// A backend that routes to `shards` and merges results.
 ///
 /// Shards own disjoint id spaces (each shard must already return *global*
-/// ids, e.g. via `add_with_ids`). Shard searches run on scoped threads —
-/// one per shard, lock-free (`search_batch` is `&self`) — and merge via a
-/// bounded heap. Per-request [`SearchParams`] are forwarded to every shard.
+/// ids, e.g. via `add_with_ids`). Shard searches fan out on the executor's
+/// persistent worker pool ([`QueryExecutor::run_shards`]) — lock-free
+/// (`search_batch` is `&self`), at most one participant per shard — and
+/// merge via a bounded heap. Per-request [`SearchParams`] are forwarded to
+/// every shard.
+///
+/// **NUMA-aware placement:** shards are interleaved across the machine's
+/// NUMA nodes at construction ([`crate::exec::pool::NumaTopology`]), and
+/// the pool's placed fan-out has workers drain their own node's shards
+/// before stealing cross-node — so each shard's scan usually runs on a
+/// core local to the memory it touches, without ever idling a worker while
+/// shard work remains. On single-node machines this degrades to plain
+/// work-stealing.
 ///
 /// **Batch-level LUT reuse:** when every shard reports the same
 /// [`SearchBackend::lut_signature`] (same trained quantizer — the normal
@@ -32,10 +42,23 @@ pub struct ShardedBackend {
     /// Common LUT signature of all shards, if they agree (checked once at
     /// construction — shards are immutable after sealing).
     shared_luts: Option<u64>,
+    /// The executor whose worker pool carries the shard fan-out.
+    exec: QueryExecutor,
+    /// NUMA node index each shard is placed on (interleaved round-robin
+    /// across the detected topology).
+    shard_nodes: Vec<usize>,
 }
 
 impl ShardedBackend {
     pub fn new(shards: Vec<Arc<dyn SearchBackend>>) -> Result<Self> {
+        Self::with_executor(shards, QueryExecutor::global().clone())
+    }
+
+    /// [`ShardedBackend::new`] fanning out on an explicit executor's pool.
+    pub fn with_executor(
+        shards: Vec<Arc<dyn SearchBackend>>,
+        exec: QueryExecutor,
+    ) -> Result<Self> {
         if shards.is_empty() {
             return Err(crate::Error::Serve("no shards".into()));
         }
@@ -46,7 +69,8 @@ impl ShardedBackend {
         let shared_luts = shards[0]
             .lut_signature()
             .filter(|sig| shards.iter().all(|s| s.lut_signature() == Some(*sig)));
-        Ok(Self { shards, dim, shared_luts })
+        let shard_nodes = crate::exec::pool::topology().interleave(shards.len());
+        Ok(Self { shards, dim, shared_luts, exec, shard_nodes })
     }
 
     /// Convenience: shard over sealed indexes held as `Arc<dyn Index>`,
@@ -69,11 +93,17 @@ impl ShardedBackend {
                 Ok(Arc::new(backend) as Arc<dyn SearchBackend>)
             })
             .collect::<Result<Vec<_>>>()?;
-        Self::new(shards)
+        Self::with_executor(shards, exec)
     }
 
     pub fn nshards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// NUMA node index each shard was placed on (introspection for tests
+    /// and the metrics exporter).
+    pub fn shard_nodes(&self) -> &[usize] {
+        &self.shard_nodes
     }
 
     /// Whether the shards share one quantizer and the router reuses one
@@ -93,22 +123,18 @@ impl ShardedBackend {
         } else {
             None
         };
-        // fan out: one thread per shard (scoped — no 'static bounds needed)
-        let results: Vec<Result<QueryResponse>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
-                .iter()
-                .map(|shard| {
-                    let shard = shard.clone();
-                    let luts = shared_luts.as_deref();
-                    scope.spawn(move || match luts {
-                        Some(l) => shard.query_batch_with_luts(req, l),
-                        None => shard.query_batch(req),
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
-        });
+        // fan out on the persistent pool: at most one participant per
+        // shard, shards placed on their NUMA node, idle participants
+        // steal cross-node — nobody waits behind a slow shard chunk
+        let luts = shared_luts.as_deref();
+        let results: Vec<Result<QueryResponse>> = self.exec.run_shards(
+            self.shards.len(),
+            |i| self.shard_nodes[i],
+            |i| match luts {
+                Some(l) => self.shards[i].query_batch_with_luts(req, l),
+                None => self.shards[i].query_batch(req),
+            },
+        );
         results.into_iter().collect()
     }
 }
@@ -435,6 +461,28 @@ mod tests {
         assert!(!mixed.reuses_luts(), "distinct codebooks must not share LUTs");
         let (dm, lm) = mixed.search_batch(&ds.queries, 5, None).unwrap();
         assert_eq!((dm.len(), lm.len()), (50, 50));
+    }
+
+    /// NUMA placement: shards are interleaved across the detected nodes
+    /// round-robin, and the fan-out still answers correctly.
+    #[test]
+    fn shard_placement_interleaves_nodes() {
+        let ds = SyntheticDataset::gaussian(300, 2, 16, 240);
+        let mk = || -> Arc<dyn SearchBackend> {
+            let mut idx = IvfPq4::new(16, IvfParams::new(2), PqParams::new_4bit(4));
+            idx.train(&ds.base).unwrap();
+            idx.add(&ds.base).unwrap();
+            Arc::new(IvfBackend::new(idx).unwrap())
+        };
+        let router =
+            ShardedBackend::with_executor(vec![mk(), mk(), mk()], QueryExecutor::new(4)).unwrap();
+        let nnodes = crate::exec::pool::topology().node_count();
+        assert_eq!(router.shard_nodes().len(), 3);
+        for (i, &nd) in router.shard_nodes().iter().enumerate() {
+            assert_eq!(nd, i % nnodes, "shard {i} not interleaved");
+        }
+        let (d, l) = router.search_batch(&ds.queries, 3, None).unwrap();
+        assert_eq!((d.len(), l.len()), (6, 6));
     }
 
     #[test]

@@ -911,6 +911,83 @@ mod tests {
         server.stop();
     }
 
+    /// A deliberately slow backend: overload tests need service time to
+    /// dominate so the bounded admission queue actually fills.
+    struct SlowBackend {
+        dim: usize,
+        delay: std::time::Duration,
+    }
+
+    impl SearchBackend for SlowBackend {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn search_batch(
+            &self,
+            queries: &[f32],
+            k: usize,
+            _params: Option<&SearchParams>,
+        ) -> Result<(Vec<f32>, Vec<i64>)> {
+            std::thread::sleep(self.delay);
+            let nq = queries.len() / self.dim;
+            Ok((vec![0.0; nq * k], vec![0; nq * k]))
+        }
+        fn describe(&self) -> String {
+            "slow-test-backend".into()
+        }
+    }
+
+    /// Overload at the wire: with a bounded admission queue and a slow
+    /// backend, a burst gets a mix of served responses and `overloaded`
+    /// rejections, the control plane (ping) stays responsive throughout,
+    /// and the server recovers once the burst drains.
+    #[test]
+    fn overload_wire_rejection_keeps_server_responsive() {
+        let backend: Arc<dyn SearchBackend> =
+            Arc::new(SlowBackend { dim: 8, delay: std::time::Duration::from_millis(25) });
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.max_batch = 1;
+        cfg.batcher.max_wait = std::time::Duration::ZERO;
+        cfg.batcher.queue_depth = 2;
+        let server = Server::start(backend, cfg).unwrap();
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                c.search(&[0.0; 8], 3)
+            }));
+        }
+        // the data plane is saturated; the control plane must still answer
+        let mut control = Client::connect(&addr).unwrap();
+        control.ping().unwrap();
+        let mut ok = 0usize;
+        let mut overloaded = 0usize;
+        for h in handles {
+            match h.join().unwrap() {
+                Ok((d, _, _)) => {
+                    assert_eq!(d.len(), 3);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(e.to_string().contains("overloaded"), "{e}");
+                    overloaded += 1;
+                }
+            }
+        }
+        assert!(ok >= 1, "no request was served");
+        assert!(overloaded >= 1, "bounded queue never rejected: ok={ok}");
+        // rejections are visible on the scrape and the server recovered
+        let j = server.metrics_json();
+        assert!(
+            j.get("admission_rejections_total").unwrap().as_usize().unwrap() >= overloaded,
+            "{j:?}"
+        );
+        let (d, _, _) = control.search(&[0.0; 8], 3).unwrap();
+        assert_eq!(d.len(), 3);
+        server.stop();
+    }
+
     #[test]
     fn concurrent_clients() {
         let (backend, data) = toy_backend();

@@ -43,6 +43,11 @@ pub enum Error {
     /// Coordinator / serving errors.
     Serve(String),
 
+    /// The serving admission queue is full: the request was rejected at
+    /// the door instead of queueing unboundedly. Clients should back off
+    /// and retry; the server stays responsive for admitted work.
+    Overloaded,
+
     /// Underlying IO error.
     Io(std::io::Error),
 }
@@ -66,6 +71,9 @@ impl fmt::Display for Error {
             Error::CorruptIndex(msg) => write!(f, "corrupt index file: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Serve(msg) => write!(f, "serve error: {msg}"),
+            Error::Overloaded => {
+                write!(f, "server overloaded: admission queue full, retry with backoff")
+            }
             Error::Io(e) => write!(f, "{e}"),
         }
     }
@@ -100,6 +108,8 @@ mod tests {
         assert!(Error::NotTrained.to_string().contains("train"));
         let e = Error::CorruptIndex("payload 12 bytes short".into());
         assert!(e.to_string().contains("corrupt index file"), "{e}");
+        // the wire protocol greps for this word to classify rejections
+        assert!(Error::Overloaded.to_string().contains("overloaded"));
     }
 
     #[test]

@@ -1,56 +1,106 @@
 //! [`QueryExecutor`]: the stateless engine that runs a
-//! [`crate::exec::QueryPlan`] across worker threads with pooled scratch.
+//! [`crate::exec::QueryPlan`] across a **persistent worker pool** with
+//! pooled scratch.
 //!
-//! The executor owns exactly two things: a thread budget and a
-//! [`ScratchPool`]. It holds **no query state** — plans are read-only,
-//! scratch is per-worker — so one executor is safely shared by every
-//! index, shard and server connection in the process (`Arc` inside,
-//! `Clone` is cheap). [`QueryExecutor::global`] is the process-wide
-//! default, sized by `ARMPQ_THREADS` / available parallelism.
+//! The executor owns exactly three things: a thread budget, a
+//! [`ScratchPool`], and (in the default mode) a [`WorkerPool`] whose
+//! threads are spawned once and live as long as the executor. It holds
+//! **no query state** — plans are read-only, scratch is per-participant —
+//! so one executor is safely shared by every index, shard and server
+//! connection in the process (`Arc` inside, `Clone` is cheap).
+//! [`QueryExecutor::global`] is the process-wide default, sized by
+//! `ARMPQ_THREADS` / available parallelism and pinned when `ARMPQ_PIN` is
+//! set.
+//!
+//! [`QueryExecutor::new_scoped`] builds the pre-pool executor — per-call
+//! `std::thread::scope` threads with static chunking. It exists as the
+//! differential baseline (bit-identity tests) and the bench comparison
+//! arm (`run_thread_scaling`'s `scoped` rows); serving paths use the
+//! pooled mode.
 //!
 //! # Determinism
 //!
 //! `run_batch`/`run_tasks` only distribute work; the per-item closures are
 //! pure functions of the item index (scratch is workspace, never carried
-//! state), and results land in item order. Together with the per-list IVF
-//! scan semantics (see [`crate::ivf`]) this makes query results
-//! **bit-identical for every thread count** — `ARMPQ_THREADS=1` and `=4`
-//! must (and do, see the `threads_` integration tests) return the same
-//! bytes.
+//! state), and results land in item order through disjoint per-index
+//! slots. Together with the per-list IVF scan semantics (see
+//! [`crate::ivf`]) this makes query results **bit-identical for every
+//! thread count, and for pooled vs scoped execution** — `ARMPQ_THREADS=1`
+//! and `=4` must (and do, see the `threads_` integration tests) return
+//! the same bytes, no matter which worker stole which unit.
 
+use super::pool::{pin_from_env, WorkerPool};
 use super::scratch::{ScratchGuard, ScratchPool};
 use crate::index::query::QueryStats;
-use crate::util::threads::parallel_map_init;
+use crate::util::threads::{pool_map_placed, scoped_map_init};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 #[derive(Debug)]
 struct ExecInner {
     threads: usize,
     pool: ScratchPool,
+    /// `Some` = persistent-pool mode (the default); `None` = scoped
+    /// per-call spawning (the differential/bench baseline).
+    workers: Option<WorkerPool>,
+    /// Participants of the most recent fan-out — actual pool accounting
+    /// (submitter + helpers that executed units), feeding
+    /// `QueryStats.threads_used`. Racy across concurrent batches by
+    /// design: it is a stats gauge, never a correctness input.
+    last_fanout: AtomicUsize,
 }
 
-/// Shared, stateless query engine: thread budget + scratch pool.
+/// Shared, stateless query engine: thread budget + worker pool + scratch.
 #[derive(Clone, Debug)]
 pub struct QueryExecutor {
     inner: Arc<ExecInner>,
 }
 
+static GLOBAL: OnceLock<QueryExecutor> = OnceLock::new();
+
 impl QueryExecutor {
-    /// An executor with an explicit thread budget (clamped to ≥ 1).
+    /// An executor with an explicit thread budget (clamped to ≥ 1),
+    /// backed by a persistent pool of `threads - 1` workers (the
+    /// submitter is always the remaining participant). Workers pin to
+    /// cores when `ARMPQ_PIN` is truthy.
     pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        Self {
+            inner: Arc::new(ExecInner {
+                threads,
+                pool: ScratchPool::default(),
+                workers: Some(WorkerPool::new(threads - 1, pin_from_env())),
+                last_fanout: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// The pre-pool executor: same thread budget, but fan-outs spawn
+    /// scoped threads per call with static chunking. Baseline for the
+    /// `threads_` bit-identity tests and the scoped-vs-pool bench rows.
+    pub fn new_scoped(threads: usize) -> Self {
         Self {
             inner: Arc::new(ExecInner {
                 threads: threads.max(1),
                 pool: ScratchPool::default(),
+                workers: None,
+                last_fanout: AtomicUsize::new(0),
             }),
         }
     }
 
     /// The process-wide default executor (`ARMPQ_THREADS` overrides the
-    /// host's available parallelism; resolved once at first use).
+    /// host's available parallelism; resolved once at first use). Always
+    /// pool-backed.
     pub fn global() -> &'static QueryExecutor {
-        static GLOBAL: OnceLock<QueryExecutor> = OnceLock::new();
         GLOBAL.get_or_init(|| QueryExecutor::new(crate::util::threads::default_threads()))
+    }
+
+    /// The global executor if something already forced its creation —
+    /// lets the metrics exporter scrape pool gauges without spawning a
+    /// pool as a side effect.
+    pub fn global_get() -> Option<&'static QueryExecutor> {
+        GLOBAL.get()
     }
 
     /// Configured thread budget.
@@ -58,9 +108,14 @@ impl QueryExecutor {
         self.inner.threads
     }
 
-    /// Worker threads a fan-out of `n` items actually uses.
+    /// Worker threads a fan-out of `n` items actually budgets for.
     pub fn threads_for(&self, n: usize) -> usize {
         self.inner.threads.min(n.max(1))
+    }
+
+    /// The persistent pool backing this executor (`None` in scoped mode).
+    pub fn worker_pool(&self) -> Option<&WorkerPool> {
+        self.inner.workers.as_ref()
     }
 
     /// Scratch-arena high-water mark in bytes (see
@@ -76,24 +131,46 @@ impl QueryExecutor {
     }
 
     /// Run `f(i, scratch)` for `i ∈ [0, n)` across the thread budget,
-    /// collecting results in item order. Each worker checks exactly one
-    /// scratch arena out of the pool for its whole chunk.
+    /// collecting results in item order. Each participant checks exactly
+    /// one scratch arena out of the pool, lazily, for all the units it
+    /// claims — so arenas stay bounded by the budget even though units are
+    /// claimed one at a time (work-stealing granularity).
     pub fn run_batch<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize, &mut super::ScanScratch) -> T + Sync,
     {
-        parallel_map_init(
-            n,
-            self.threads_for(n),
-            || self.inner.pool.checkout(),
-            |i, guard| f(i, &mut **guard),
-        )
+        let threads = self.threads_for(n);
+        match &self.inner.workers {
+            Some(pool) if threads > 1 && n > 1 && pool.workers() > 0 => {
+                let (out, participants) = pool_map_placed(
+                    pool,
+                    n,
+                    threads,
+                    |_| 0,
+                    || self.inner.pool.checkout(),
+                    |i, guard| f(i, &mut **guard),
+                );
+                self.inner.last_fanout.store(participants.max(1), Ordering::Relaxed);
+                out
+            }
+            _ => {
+                self.inner.last_fanout.store(threads, Ordering::Relaxed);
+                scoped_map_init(
+                    n,
+                    threads,
+                    || self.inner.pool.checkout(),
+                    |i, guard| f(i, &mut **guard),
+                )
+            }
+        }
     }
 
     /// [`QueryExecutor::run_batch`] under its intra-query name: fan one
-    /// query's independent scan tasks (e.g. probed IVF lists) out over the
-    /// budget, results in task order.
+    /// query's independent scan tasks (e.g. probed IVF lists, segment scan
+    /// units) out over the budget, results in task order. On the pool,
+    /// tasks are claimed one at a time, so a skewed task-length
+    /// distribution no longer serializes behind the slowest static chunk.
     pub fn run_tasks<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -102,11 +179,41 @@ impl QueryExecutor {
         self.run_batch(n, f)
     }
 
+    /// Fan `n` independent shard tasks out, one participant per shard at
+    /// most, with NUMA placement: task `i` prefers a worker assigned to
+    /// node `node_of(i)` and is stolen cross-node only when that node's
+    /// work is drained. No scan scratch involved (shards own their own
+    /// executors' scratch); results in task order. Scoped mode spawns one
+    /// scoped thread per shard — the pre-pool router behavior.
+    pub fn run_shards<T, P, F>(&self, n: usize, node_of: P, f: F) -> Vec<T>
+    where
+        T: Send,
+        P: Fn(usize) -> usize,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        match &self.inner.workers {
+            Some(pool) if n > 1 && pool.workers() > 0 => {
+                let (out, participants) =
+                    pool_map_placed(pool, n, n, node_of, || (), |i, _| f(i));
+                self.inner.last_fanout.store(participants.max(1), Ordering::Relaxed);
+                out
+            }
+            _ => scoped_map_init(n, n, || (), |i, _: &mut ()| f(i)),
+        }
+    }
+
     /// Stamp the concurrency facts into a response's stats: `width` is the
     /// fan-out width the call used (nq for batch fan-out, probe count for
-    /// intra-query fan-out).
+    /// intra-query fan-out). `threads_used` reports the *measured*
+    /// participant count of the fan-out when the pool recorded one — real
+    /// accounting, not the configured budget — clamped to the budget.
     pub fn stamp_stats(&self, stats: &mut [QueryStats], width: usize) {
-        let threads_used = self.threads_for(width);
+        let budget = self.threads_for(width);
+        let measured = self.inner.last_fanout.load(Ordering::Relaxed);
+        let threads_used = if measured == 0 { budget } else { measured.min(budget) };
         let scratch_bytes = self.scratch_high_water_bytes();
         for s in stats {
             s.threads_used = threads_used;
@@ -132,6 +239,7 @@ mod tests {
         assert_eq!(exec.threads(), 4);
         assert_eq!(exec.threads_for(2), 2);
         assert_eq!(exec.threads_for(0), 1);
+        assert_eq!(exec.worker_pool().map(|p| p.workers()), Some(3));
     }
 
     #[test]
@@ -145,7 +253,7 @@ mod tests {
                 i
             });
         }
-        // at most one arena per worker slot, ever — reuse across calls
+        // at most one arena per participant slot, ever — reuse across calls
         assert!(
             exec.scratch_arenas_created() <= 4,
             "arenas {} > thread budget",
@@ -170,6 +278,8 @@ mod tests {
         let b = QueryExecutor::global();
         assert!(std::ptr::eq(a, b));
         assert!(a.threads() >= 1);
+        assert!(a.worker_pool().is_some(), "global executor must be pool-backed");
+        assert!(QueryExecutor::global_get().is_some());
     }
 
     #[test]
@@ -177,6 +287,36 @@ mod tests {
         let exec = QueryExecutor::new(8);
         let mut stats = vec![QueryStats::default(); 3];
         exec.stamp_stats(&mut stats, 2);
+        // no fan-out ran yet: the budget is reported, clamped by width
         assert!(stats.iter().all(|s| s.threads_used == 2));
+        let _ = exec.run_batch(64, |i, _s| i);
+        exec.stamp_stats(&mut stats, 64);
+        // after a real fan-out: measured participants, within the budget
+        assert!(stats.iter().all(|s| s.threads_used >= 1 && s.threads_used <= 8));
+    }
+
+    /// Tentpole differential: pooled and scoped executors return identical
+    /// bytes for the same batch at every thread count.
+    #[test]
+    fn exec_pool_matches_scoped_executor_bit_identical() {
+        let work = |i: usize| ((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15), i as u32);
+        for &t in &[1usize, 2, 4] {
+            let pooled = QueryExecutor::new(t);
+            let scoped = QueryExecutor::new_scoped(t);
+            let a = pooled.run_batch(73, |i, _s| work(i));
+            let b = scoped.run_batch(73, |i, _s| work(i));
+            assert_eq!(a, b, "divergence at threads={t}");
+        }
+    }
+
+    #[test]
+    fn exec_run_shards_ordered_with_placement() {
+        let exec = QueryExecutor::new(3);
+        let v = exec.run_shards(5, |i| i % 2, |i| i * 10);
+        assert_eq!(v, vec![0, 10, 20, 30, 40]);
+        // scoped mode takes the per-shard spawn path
+        let scoped = QueryExecutor::new_scoped(3);
+        let v = scoped.run_shards(5, |i| i % 2, |i| i * 10);
+        assert_eq!(v, vec![0, 10, 20, 30, 40]);
     }
 }

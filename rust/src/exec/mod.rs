@@ -1,55 +1,75 @@
-//! The plan/execute query layer: one execution engine for every index.
+//! The plan/execute query layer: one execution engine for every index,
+//! now running on a **persistent worker pool**.
 //!
 //! Before this layer, each index (and the IVF layer and the coordinator
 //! above them) improvised its own per-query buffers and its own loop over
-//! the batch — allocation-heavy and single-threaded. This module splits
-//! query execution into three pieces with sharp ownership rules:
+//! the batch — allocation-heavy and single-threaded. And until the
+//! persistent-runtime PR, even the parallel era spawned fresh
+//! `std::thread::scope` threads per call. This module splits query
+//! execution into four pieces with sharp ownership rules:
 //!
 //! * **[`QueryPlan`] / [`MaskPlan`]** — everything resolved *once per
 //!   request*: effective parameters (per-request overrides folded over
 //!   index defaults), the filter compiled into block-aligned kernel masks
 //!   ([`MaskPlan`]: eager for flat indexes, lazy per inverted list for
 //!   IVF), and the precomputed-LUT recipe. Read-only; shared by all
-//!   workers. The flat fastscan index builds a [`QueryPlan`] wholesale;
-//!   the IVF layer resolves the same ingredients (escalated probe width +
-//!   [`MaskPlan`] + LUT slices) against its list-structured state.
-//! * **[`ScanScratch`] / [`ScratchPool`]** — everything *per worker*: f32
-//!   LUT staging, quantized kernel-table bytes, reservoir/range candidate
-//!   storage, re-rank heap + code buffers, the coarse probe list. Arenas
-//!   are pooled, grown, never shrunk: after warmup the scan path performs
-//!   **zero heap allocations** for its working set (the response rows are
-//!   the only steady-state allocation).
-//! * **[`QueryExecutor`]** — the stateless engine: a thread budget plus
-//!   the scratch pool. Query batches fan out across workers
-//!   ([`QueryExecutor::run_batch`]); a single large-`nprobe` IVF query
-//!   fans its probed lists out instead ([`QueryExecutor::run_tasks`]).
-//!   Executors are `Arc`-backed and shared — the coordinator threads one
-//!   executor through every backend, shard and connection.
+//!   participants. The flat fastscan index builds a [`QueryPlan`]
+//!   wholesale; the IVF layer resolves the same ingredients (escalated
+//!   probe width + [`MaskPlan`] + LUT slices) against its list-structured
+//!   state.
+//! * **[`ScanScratch`] / [`ScratchPool`]** — everything *per participant*:
+//!   f32 LUT staging, quantized kernel-table bytes, reservoir/range
+//!   candidate storage, re-rank heap + code buffers, the coarse probe
+//!   list. Arenas are pooled, grown, never shrunk: after warmup the scan
+//!   path performs **zero heap allocations** for its working set (the
+//!   response rows are the only steady-state allocation).
+//! * **[`pool::WorkerPool`]** — the threads themselves, spawned **once**
+//!   per executor and kept for its lifetime: per-worker injector queues,
+//!   work-stealing at single-unit granularity (a skewed IVF probe list no
+//!   longer serializes behind the slowest static chunk), NUMA-aware
+//!   placement from `/sys/devices/system/node`, optional core pinning via
+//!   `sched_setaffinity` (`ARMPQ_PIN`). Scoped borrows ride the
+//!   persistent threads through a claim/revoke job protocol — see the
+//!   module docs of [`pool`] for the safety argument.
+//! * **[`QueryExecutor`]** — the stateless engine: a thread budget + the
+//!   worker pool + the scratch pool. Query batches fan out across
+//!   participants ([`QueryExecutor::run_batch`]); a single large-`nprobe`
+//!   IVF query fans its probed lists out instead
+//!   ([`QueryExecutor::run_tasks`]); the sharded router fans shards out
+//!   with node placement ([`QueryExecutor::run_shards`]). Executors are
+//!   `Arc`-backed and shared — the coordinator threads one executor
+//!   through every backend, shard and connection.
+//!   [`QueryExecutor::new_scoped`] keeps the pre-pool per-call spawning
+//!   alive as the differential baseline and bench comparison arm.
 //!
-//! # Why results cannot depend on the thread count
+//! # Why results cannot depend on the thread count (or the pool)
 //!
 //! Parallel helpers only distribute work. The per-item closures are pure
-//! functions of the item index, results land in item order, and the IVF
-//! layer defines its candidate set *per probed list* (each list scanned
-//! with its own reservoir, merged in probe order through one final
-//! deterministic selection) rather than through a cross-list threshold
-//! that would depend on scan interleaving. `ARMPQ_THREADS=1` and
-//! `ARMPQ_THREADS=4` therefore return bit-identical results — enforced by
-//! the `threads_` integration tests across every backend × width × query
-//! kind × filter.
+//! functions of the item index, results land in item order through
+//! disjoint per-index output slots, and the IVF layer defines its
+//! candidate set *per probed list* (each list scanned with its own
+//! reservoir, merged in probe order through one final deterministic
+//! selection) rather than through a cross-list threshold that would
+//! depend on scan interleaving. Work-stealing moves *where* a unit runs,
+//! never *what* it computes or *which slot* it fills. `ARMPQ_THREADS=1`
+//! and `ARMPQ_THREADS=4`, pooled and scoped, therefore return
+//! bit-identical results — enforced by the `threads_` integration tests
+//! across every backend × width × query kind × filter.
 //!
 //! This preserves the PR-2 invariant from the other side: indexes stay
 //! sealed `Arc<dyn Index>` values searched through `&self`, and the
 //! executor holds no per-query state, so the pair is lock-free end to end
-//! (the scratch pool's mutex is touched twice per worker-chunk, never per
-//! code).
+//! (the scratch pool's mutex is touched once per participant per fan-out,
+//! never per code).
 
 pub mod executor;
 pub mod plan;
+pub mod pool;
 pub mod scan;
 pub mod scratch;
 
 pub use executor::QueryExecutor;
 pub use plan::{MaskPlan, QueryPlan};
+pub use pool::{NumaTopology, WorkerPool};
 pub use scan::{range_packed, topk_packed};
 pub use scratch::{ScanScratch, ScratchGuard, ScratchPool};

@@ -185,9 +185,16 @@ pub fn run_table1_with(
 /// large-`nprobe` latency (probed lists fan out across workers) at each
 /// thread count, on one sealed IVF index.
 ///
-/// The executor guarantees bit-identical results at every thread count,
-/// so the row-to-row comparison is pure wall-clock: `speedup` is relative
-/// to the first thread count in `threads` (conventionally 1).
+/// Each (thread count, mode) cell runs twice — once on the persistent
+/// worker pool (`QueryExecutor::new`, the serving default) and once on
+/// the legacy per-call scoped-thread path (`new_scoped`) — so the
+/// spawn/teardown tax the pool removes is a row-to-row read
+/// (`batch/pool` vs `batch/scoped`). The executor guarantees
+/// bit-identical results at every thread count on both paths (the
+/// `exec_pool_matches_scoped_full_stack` integration test is the
+/// differential proof), so the comparison is pure wall-clock: `speedup`
+/// is relative to the first thread count in `threads` (conventionally 1)
+/// for the same mode+path.
 #[allow(clippy::too_many_arguments)]
 pub fn run_thread_scaling(
     dataset: &str,
@@ -221,34 +228,40 @@ pub fn run_thread_scaling(
         &["threads", "mode", "ms", "QPS", "speedup"],
     );
     let trials = trials.max(1);
-    let mut base_ms = [f64::NAN; 2];
+    // baseline ms per (mode, executor path): batch/pool, batch/scoped,
+    // multi-list/pool, multi-list/scoped
+    let mut base_ms = [f64::NAN; 4];
     for (ti, &t) in threads.iter().enumerate() {
-        let exec = QueryExecutor::new(t);
+        let execs: [(&str, QueryExecutor); 2] =
+            [("pool", QueryExecutor::new(t)), ("scoped", QueryExecutor::new_scoped(t))];
         let modes: [(&str, &[f32], &SearchParams, f64); 2] = [
             ("batch", &ds.queries, &batch_params, nq as f64),
             ("multi-list", &ds.queries[..ds.dim], &single_params, 1.0),
         ];
         for (mi, (mode, queries, params, queries_per_call)) in modes.into_iter().enumerate() {
             let req = QueryRequest::top_k(queries, 10).with_params(params.clone());
-            idx.query_exec(&req, &exec)?; // warm the scratch pool
-            let mut best = f64::INFINITY;
-            for _ in 0..trials {
-                let timer = Timer::start();
-                let resp = idx.query_exec(&req, &exec)?;
-                let ms = timer.elapsed_ms();
-                black_box(resp.hits.len());
-                best = best.min(ms);
+            for (ei, (path, exec)) in execs.iter().enumerate() {
+                idx.query_exec(&req, exec)?; // warm the scratch pool
+                let mut best = f64::INFINITY;
+                for _ in 0..trials {
+                    let timer = Timer::start();
+                    let resp = idx.query_exec(&req, exec)?;
+                    let ms = timer.elapsed_ms();
+                    black_box(resp.hits.len());
+                    best = best.min(ms);
+                }
+                let bi = mi * 2 + ei;
+                if ti == 0 {
+                    base_ms[bi] = best;
+                }
+                table.row(vec![
+                    t.to_string(),
+                    format!("{mode}/{path}"),
+                    format!("{best:.3}"),
+                    format!("{:.0}", queries_per_call / (best / 1e3)),
+                    format!("{:.2}x", base_ms[bi] / best),
+                ]);
             }
-            if ti == 0 {
-                base_ms[mi] = best;
-            }
-            table.row(vec![
-                t.to_string(),
-                mode.into(),
-                format!("{best:.3}"),
-                format!("{:.0}", queries_per_call / (best / 1e3)),
-                format!("{:.2}x", base_ms[mi] / best),
-            ]);
         }
     }
     Ok(table)
@@ -787,11 +800,17 @@ mod tests {
     fn thread_scaling_smoke() {
         let t = run_thread_scaling("sift", 2_000, 8, 8, 8, CodeWidth::W4, &[1, 2], 1, 48)
             .unwrap();
-        // two modes per thread count
-        assert_eq!(t.rows.len(), 4);
-        assert!(t.rows.iter().all(|r| r[1] == "batch" || r[1] == "multi-list"));
+        // two modes × two executor paths per thread count
+        assert_eq!(t.rows.len(), 8);
+        let labels = ["batch/pool", "batch/scoped", "multi-list/pool", "multi-list/scoped"];
+        assert!(t.rows.iter().all(|r| labels.contains(&r[1].as_str())), "{:?}", t.rows);
+        // every (mode, path) pair appears at each thread count
+        for l in labels {
+            assert_eq!(t.rows.iter().filter(|r| r[1] == l).count(), 2, "{l}");
+        }
         // the threads=1 rows are their own baseline
         assert_eq!(t.rows[0][4], "1.00x");
+        assert_eq!(t.rows[1][4], "1.00x");
         let axis = default_thread_axis(&[]);
         assert!(axis.windows(2).all(|w| w[0] < w[1]));
         assert_eq!(default_thread_axis(&[4, 1, 4]), vec![1, 4]);

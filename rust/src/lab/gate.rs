@@ -8,6 +8,16 @@
 //! when it exceeds what the baseline's own repeats scatter over. QPS uses
 //! a plain relative threshold (default 10%, the acceptance bound), since
 //! wall-clock noise is environment- not spec-driven.
+//!
+//! Beyond mean throughput the gate also watches the *shape* of a case:
+//! tail latency (mean p99 across repeats, relative threshold — a pool or
+//! queueing change can leave QPS flat while the p99 collapses under a
+//! convoy) and phase shares (each trace phase's fraction of total phase
+//! time, absolute drift threshold — a kernel regression that moves time
+//! from `lut_build` into `list_scan` shows up here long before it moves
+//! the mean). Trials recorded before these fields existed simply lack
+//! them, and either side missing data skips that check rather than
+//! failing it — spec evolution must not fail old history.
 
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -23,11 +33,23 @@ pub struct GateConfig {
     /// measured spread, so the epsilon keeps the gate usable there.
     pub min_recall_epsilon: f64,
     pub noise_mult: f64,
+    /// Fail when fresh mean p99 > (1 + max_p99_increase) × baseline mean
+    /// p99. Looser than the QPS bound: tails are noisier than means.
+    pub max_p99_increase: f64,
+    /// Fail when any phase's share of total phase time moves by more than
+    /// this (absolute, 0..1) between baseline and fresh.
+    pub max_phase_share_drift: f64,
 }
 
 impl Default for GateConfig {
     fn default() -> Self {
-        Self { max_qps_drop: 0.10, min_recall_epsilon: 0.02, noise_mult: 2.0 }
+        Self {
+            max_qps_drop: 0.10,
+            min_recall_epsilon: 0.02,
+            noise_mult: 2.0,
+            max_p99_increase: 0.25,
+            max_phase_share_drift: 0.15,
+        }
     }
 }
 
@@ -67,6 +89,9 @@ pub struct CaseVerdict {
     pub qps_ratio: f64,
     pub baseline_recall: f64,
     pub fresh_recall: f64,
+    /// Mean p99 latency per side; 0.0 when the side recorded no p99.
+    pub baseline_p99_ms: f64,
+    pub fresh_p99_ms: f64,
     pub detail: String,
 }
 
@@ -80,6 +105,8 @@ impl CaseVerdict {
             .set("qps_ratio", Json::Num(self.qps_ratio))
             .set("baseline_recall", Json::Num(self.baseline_recall))
             .set("fresh_recall", Json::Num(self.fresh_recall))
+            .set("baseline_p99_ms", Json::Num(self.baseline_p99_ms))
+            .set("fresh_p99_ms", Json::Num(self.fresh_p99_ms))
             .set("detail", Json::Str(self.detail.clone()));
         o
     }
@@ -140,19 +167,35 @@ impl GateReport {
 }
 
 /// Aggregates of one case over its repeats.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 struct CaseAgg {
     qps_mean: f64,
     recall_mean: f64,
     recall_std: f64,
     repeats: usize,
+    /// Mean p99 over the repeats that recorded one; `None` when none did
+    /// (pre-p99 history) — the p99 check skips rather than fails then.
+    p99_mean: Option<f64>,
+    /// Each phase's mean share of total per-trial phase time, 0..1.
+    /// Empty when no repeat carried a non-empty `phase_us` object.
+    phase_share: BTreeMap<String, f64>,
 }
 
 /// Group `ok` trials by case and aggregate over repeats. Skipped/failed
 /// trials never enter the comparison (a backend absent on this host must
 /// not read as a throughput regression).
 fn aggregate(trials: &[Json]) -> BTreeMap<String, CaseAgg> {
-    let mut groups: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    #[derive(Default)]
+    struct Acc {
+        qps: Vec<f64>,
+        recall: Vec<f64>,
+        p99: Vec<f64>,
+        /// per-phase sum of shares — trials are weighted equally
+        /// regardless of their absolute phase totals
+        shares: BTreeMap<String, f64>,
+        phase_trials: usize,
+    }
+    let mut groups: BTreeMap<String, Acc> = BTreeMap::new();
     for t in trials {
         if t.get("status").and_then(Json::as_str) != Some("ok") {
             continue;
@@ -165,24 +208,74 @@ fn aggregate(trials: &[Json]) -> BTreeMap<String, CaseAgg> {
             continue;
         };
         let e = groups.entry(case.to_string()).or_default();
-        e.0.push(qps);
-        e.1.push(recall);
+        e.qps.push(qps);
+        e.recall.push(recall);
+        if let Some(p99) = t.get("p99_ms").and_then(Json::as_f64) {
+            e.p99.push(p99);
+        }
+        if let Some(Json::Obj(phases)) = t.get("phase_us") {
+            let total: f64 = phases.values().filter_map(Json::as_f64).sum();
+            if total > 0.0 {
+                e.phase_trials += 1;
+                for (name, v) in phases {
+                    let Some(us) = v.as_f64() else { continue };
+                    *e.shares.entry(name.clone()).or_default() += us / total;
+                }
+            }
+        }
     }
     groups
         .into_iter()
-        .map(|(case, (qps, recall))| {
-            let n = qps.len() as f64;
-            let qps_mean = qps.iter().sum::<f64>() / n;
-            let recall_mean = recall.iter().sum::<f64>() / n;
-            let var = recall.iter().map(|r| (r - recall_mean).powi(2)).sum::<f64>() / n;
+        .map(|(case, acc)| {
+            let n = acc.qps.len() as f64;
+            let qps_mean = acc.qps.iter().sum::<f64>() / n;
+            let recall_mean = acc.recall.iter().sum::<f64>() / n;
+            let var =
+                acc.recall.iter().map(|r| (r - recall_mean).powi(2)).sum::<f64>() / n;
+            let p99_mean = if acc.p99.is_empty() {
+                None
+            } else {
+                Some(acc.p99.iter().sum::<f64>() / acc.p99.len() as f64)
+            };
+            // a phase absent from some repeats averages over ALL
+            // phase-bearing repeats (its share there was zero)
+            let phase_share = acc
+                .shares
+                .into_iter()
+                .map(|(name, sum)| (name, sum / acc.phase_trials.max(1) as f64))
+                .collect();
             (case, CaseAgg {
                 qps_mean,
                 recall_mean,
                 recall_std: var.sqrt(),
-                repeats: qps.len(),
+                repeats: acc.qps.len(),
+                p99_mean,
+                phase_share,
             })
         })
         .collect()
+}
+
+/// The largest absolute per-phase share move between two aggregated phase
+/// maps, with the phase that moved it. Phases absent from one side count
+/// as share 0.0 there. `None` when either side has no phase data at all.
+fn max_phase_drift(
+    base: &BTreeMap<String, f64>,
+    fresh: &BTreeMap<String, f64>,
+) -> Option<(String, f64)> {
+    if base.is_empty() || fresh.is_empty() {
+        return None;
+    }
+    let mut worst: Option<(String, f64)> = None;
+    for name in base.keys().chain(fresh.keys()) {
+        let b = base.get(name).copied().unwrap_or(0.0);
+        let f = fresh.get(name).copied().unwrap_or(0.0);
+        let d = (f - b).abs();
+        if worst.as_ref().map_or(true, |(_, w)| d > *w) {
+            worst = Some((name.clone(), d));
+        }
+    }
+    worst
 }
 
 /// Compare fresh trials against baseline trials (both in the flat record
@@ -202,6 +295,8 @@ pub fn compare(baseline: &[Json], fresh: &[Json], cfg: &GateConfig) -> GateRepor
                 qps_ratio: 1.0,
                 baseline_recall: 0.0,
                 fresh_recall: f.recall_mean,
+                baseline_p99_ms: 0.0,
+                fresh_p99_ms: f.p99_mean.unwrap_or(0.0),
                 detail: "no baseline for case".into(),
             });
             continue;
@@ -212,22 +307,54 @@ pub fn compare(baseline: &[Json], fresh: &[Json], cfg: &GateConfig) -> GateRepor
 
         let qps_regressed = qps_ratio < 1.0 - cfg.max_qps_drop;
         let recall_regressed = recall_delta < -noise;
-        let (status, detail) = if qps_regressed && recall_regressed {
-            (CaseStatus::Regression, format!(
+        // Tail latency: gate only when both sides measured a p99 (and the
+        // baseline's is nonzero — a sub-clock-resolution baseline can't
+        // support a relative bound).
+        let p99_regressed = match (b.p99_mean, f.p99_mean) {
+            (Some(bp), Some(fp)) if bp > 0.0 => {
+                fp > bp * (1.0 + cfg.max_p99_increase)
+            }
+            _ => false,
+        };
+        // Phase shape: gate only when both sides carried phase data.
+        let phase_drift = max_phase_drift(&b.phase_share, &f.phase_share)
+            .filter(|(_, d)| *d > cfg.max_phase_share_drift);
+
+        let mut problems = Vec::new();
+        if qps_regressed && recall_regressed {
+            problems.push(format!(
                 "qps {:.1}% below threshold and recall {:.4} below noise bound {:.4}",
                 (1.0 - qps_ratio) * 100.0, -recall_delta, noise
-            ))
+            ));
         } else if qps_regressed {
-            (CaseStatus::Regression, format!(
+            problems.push(format!(
                 "qps dropped {:.1}% (> {:.0}% allowed)",
                 (1.0 - qps_ratio) * 100.0,
                 cfg.max_qps_drop * 100.0
-            ))
+            ));
         } else if recall_regressed {
-            (CaseStatus::Regression, format!(
+            problems.push(format!(
                 "recall dropped {:.4} (> noise bound {:.4} from {} baseline repeats)",
                 -recall_delta, noise, b.repeats
-            ))
+            ));
+        }
+        if p99_regressed {
+            problems.push(format!(
+                "p99 rose {:.2}ms -> {:.2}ms (> {:.0}% allowed)",
+                b.p99_mean.unwrap_or(0.0),
+                f.p99_mean.unwrap_or(0.0),
+                cfg.max_p99_increase * 100.0
+            ));
+        }
+        if let Some((phase, d)) = &phase_drift {
+            problems.push(format!(
+                "phase '{phase}' share drifted {:.0}pp (> {:.0}pp allowed)",
+                d * 100.0,
+                cfg.max_phase_share_drift * 100.0
+            ));
+        }
+        let (status, detail) = if !problems.is_empty() {
+            (CaseStatus::Regression, problems.join("; "))
         } else if qps_ratio > 1.0 + cfg.max_qps_drop || recall_delta > noise {
             (CaseStatus::Improved, String::new())
         } else {
@@ -241,6 +368,8 @@ pub fn compare(baseline: &[Json], fresh: &[Json], cfg: &GateConfig) -> GateRepor
             qps_ratio,
             baseline_recall: b.recall_mean,
             fresh_recall: f.recall_mean,
+            baseline_p99_ms: b.p99_mean.unwrap_or(0.0),
+            fresh_p99_ms: f.p99_mean.unwrap_or(0.0),
             detail,
         });
     }
@@ -254,6 +383,8 @@ pub fn compare(baseline: &[Json], fresh: &[Json], cfg: &GateConfig) -> GateRepor
                 qps_ratio: 1.0,
                 baseline_recall: b.recall_mean,
                 fresh_recall: 0.0,
+                baseline_p99_ms: b.p99_mean.unwrap_or(0.0),
+                fresh_p99_ms: 0.0,
                 detail: "case absent from fresh run".into(),
             });
         }
@@ -291,6 +422,25 @@ mod tests {
             .set("qps", Json::Num(qps))
             .set("recall_at_k", Json::Num(recall));
         o
+    }
+
+    /// A trial that also carries the tail/shape fields the gate watches.
+    fn trial_full(
+        case: &str,
+        repeat: usize,
+        qps: f64,
+        recall: f64,
+        p99_ms: f64,
+        phases: &[(&str, f64)],
+    ) -> Json {
+        let mut t = trial(case, repeat, qps, recall);
+        t.set("p99_ms", Json::Num(p99_ms));
+        let mut p = Json::obj();
+        for (name, us) in phases {
+            p.set(name, Json::Num(*us));
+        }
+        t.set("phase_us", p);
+        t
     }
 
     fn skipped(case: &str) -> Json {
@@ -358,6 +508,75 @@ mod tests {
         assert!(statuses.contains(&("a".to_string(), CaseStatus::Missing)));
         // the skipped pseudo-case never shows up at all
         assert!(!r.verdicts.iter().any(|v| v.case == "neon_case"));
+    }
+
+    /// Tail latency gates relatively: a >25% p99 rise fails even when QPS
+    /// and recall are flat; history without p99 skips the check.
+    #[test]
+    fn lab_gate_p99_tail_regression() {
+        let cfg = GateConfig::default();
+        let ph: &[(&str, f64)] = &[("lut_build", 300.0), ("list_scan", 700.0)];
+        let base = vec![
+            trial_full("a", 0, 100.0, 0.9, 10.0, ph),
+            trial_full("a", 1, 100.0, 0.9, 10.0, ph),
+        ];
+
+        let convoy = vec![trial_full("a", 0, 100.0, 0.9, 14.0, ph)]; // +40%
+        let r = compare(&base, &convoy, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Regression);
+        assert!(r.verdicts[0].detail.contains("p99"), "{}", r.verdicts[0].detail);
+        assert!((r.verdicts[0].baseline_p99_ms - 10.0).abs() < 1e-9);
+        assert!((r.verdicts[0].fresh_p99_ms - 14.0).abs() < 1e-9);
+
+        let ok = vec![trial_full("a", 0, 100.0, 0.9, 11.0, ph)]; // +10%
+        assert_eq!(compare(&base, &ok, &cfg).verdicts[0].status, CaseStatus::Pass);
+
+        // pre-p99 baseline: the check skips, it does not fail
+        let old = vec![trial("a", 0, 100.0, 0.9)];
+        let r = compare(&old, &convoy, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Pass);
+        assert_eq!(r.verdicts[0].baseline_p99_ms, 0.0);
+    }
+
+    /// Phase shares gate on absolute drift: time migrating between phases
+    /// fails even at equal totals, and a brand-new phase counts as
+    /// drifting from share zero. Either side without phase data skips.
+    #[test]
+    fn lab_gate_phase_share_drift() {
+        let cfg = GateConfig::default();
+        let base = vec![trial_full(
+            "a", 0, 100.0, 0.9, 10.0,
+            &[("lut_build", 300.0), ("list_scan", 700.0)],
+        )];
+
+        // same total phase time, but 20pp moved lut_build -> list_scan
+        let shifted = vec![trial_full(
+            "a", 0, 100.0, 0.9, 10.0,
+            &[("lut_build", 100.0), ("list_scan", 900.0)],
+        )];
+        let r = compare(&base, &shifted, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Regression);
+        assert!(r.verdicts[0].detail.contains("phase"), "{}", r.verdicts[0].detail);
+
+        // 5pp drift stays under the 15pp default
+        let small = vec![trial_full(
+            "a", 0, 100.0, 0.9, 10.0,
+            &[("lut_build", 250.0), ("list_scan", 750.0)],
+        )];
+        assert_eq!(compare(&base, &small, &cfg).verdicts[0].status, CaseStatus::Pass);
+
+        // a new phase eating 20% of the budget drifts from zero
+        let grew = vec![trial_full(
+            "a", 0, 100.0, 0.9, 10.0,
+            &[("lut_build", 240.0), ("list_scan", 560.0), ("rerank", 200.0)],
+        )];
+        let r = compare(&base, &grew, &cfg);
+        assert_eq!(r.verdicts[0].status, CaseStatus::Regression);
+        assert!(r.verdicts[0].detail.contains("rerank"), "{}", r.verdicts[0].detail);
+
+        // fresh side without phase data: check skips
+        let bare = vec![trial("a", 0, 100.0, 0.9)];
+        assert_eq!(compare(&base, &bare, &cfg).verdicts[0].status, CaseStatus::Pass);
     }
 
     /// Repeats aggregate to means before comparison.

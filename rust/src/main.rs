@@ -190,9 +190,13 @@ const LAB_HELP: &str = "armpq lab — declarative sweeps with a recorded traject
               stdout), append a run record to the trajectory file
   lab compare --spec <file> | --spec-json <inline>
               [--baseline <BENCH file>] [--max-qps-drop 0.10]
-              [--recall-epsilon 0.02] [--inject-qps-drop <frac>]
+              [--recall-epsilon 0.02] [--noise-mult 2.0]
+              [--max-p99-increase 0.25] [--max-phase-drift 0.15]
+              [--inject-qps-drop <frac>]
               re-run the spec and gate it against the last recorded run
-              for the same spec name; non-zero exit on regression
+              for the same spec name; non-zero exit on regression (mean
+              QPS drop, recall drop beyond baseline noise, mean-p99 rise,
+              or any trace phase's share of time drifting)
   lab report  [--file <BENCH file>]
               validate every recorded trial against the record schema and
               summarize the trajectory; non-zero exit on schema violations
@@ -295,6 +299,8 @@ fn lab_compare(args: &Args) -> armpq::Result<()> {
         max_qps_drop: args.get_f64("max-qps-drop", 0.10),
         min_recall_epsilon: args.get_f64("recall-epsilon", 0.02),
         noise_mult: args.get_f64("noise-mult", 2.0),
+        max_p99_increase: args.get_f64("max-p99-increase", 0.25),
+        max_phase_share_drift: args.get_f64("max-phase-drift", 0.15),
     };
     // testing hook (CI forced-fail mode): scale fresh throughput down to
     // prove the gate trips on a real regression signal
@@ -393,7 +399,10 @@ commands:
   serve         start the TCP batching coordinator (--index-file <path>
                 serves a saved index; --mmap opens it zero-copy and
                 --budget-mb <MiB> caps advised residency; --metrics-addr
-                HOST:PORT serves Prometheus exposition over HTTP)
+                HOST:PORT serves Prometheus exposition over HTTP;
+                --pin pins pool workers to cores; --queue-depth <n>
+                bounds the admission queue, full = reject 'overloaded';
+                --deadline-ms <ms> degrades explicit nprobe under backlog)
   client        drive a running server (--trace prints a per-phase span
                 breakdown; --metrics fetches the Prometheus exposition;
                 --slowlog dumps the server's worst-query log)
@@ -502,6 +511,20 @@ fn serve(args: &Args) -> armpq::Result<()> {
     // `--metrics-addr HOST:PORT` binds a one-endpoint HTTP listener whose
     // every GET answers with the Prometheus text exposition
     let metrics_addr = args.get_opt("metrics-addr");
+    // `--pin` pins the worker pool's threads to cores; must be set before
+    // anything touches the process-global executor (lazily constructed)
+    if args.get_flag("pin") {
+        std::env::set_var("ARMPQ_PIN", "1");
+    }
+    // serving-runtime knobs: bounded admission queue (full → the wire
+    // rejects with an "overloaded" error) and an optional per-request
+    // deadline budget that degrades explicit nprobe under backlog
+    let mut batcher = armpq::coordinator::BatcherConfig::default();
+    batcher.queue_depth = args.get_usize("queue-depth", batcher.queue_depth);
+    let deadline_ms = args.get_usize("deadline-ms", 0);
+    if deadline_ms > 0 {
+        batcher.deadline = Some(std::time::Duration::from_millis(deadline_ms as u64));
+    }
 
     // `--index-file` serves a saved index instead of building a synthetic
     // one; `--mmap` / `--budget-mb` (or factory-string `mmap=true,…`)
@@ -523,7 +546,7 @@ fn serve(args: &Args) -> armpq::Result<()> {
             ServerConfig {
                 addr: addr.clone(),
                 metrics_addr: metrics_addr.clone(),
-                ..Default::default()
+                batcher: batcher.clone(),
             },
         )?;
         if let Some(m) = server.metrics_addr {
@@ -556,7 +579,7 @@ fn serve(args: &Args) -> armpq::Result<()> {
     let backend = Arc::new(IvfBackend::new(idx)?);
     let server = Server::start(
         backend,
-        ServerConfig { addr: addr.clone(), metrics_addr, ..Default::default() },
+        ServerConfig { addr: addr.clone(), metrics_addr, batcher },
     )?;
     if let Some(m) = server.metrics_addr {
         println!("metrics exposition on http://{m}/metrics");

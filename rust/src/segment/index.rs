@@ -729,9 +729,13 @@ impl SegmentedIndex {
         self.inner.compact()
     }
 
-    /// Segment-lifecycle observability counters.
-    pub fn segment_stats(&self) -> SegmentStats {
-        self.inner.stats()
+    /// Segment-lifecycle observability counters. Always `Some` here;
+    /// `Option` keeps the signature identical to the `Index` trait method
+    /// this otherwise shadows — an inherent `SegmentStats` return would
+    /// out-resolve the trait for concrete receivers and break every
+    /// caller written against the trait shape.
+    pub fn segment_stats(&self) -> Option<SegmentStats> {
+        Some(self.inner.stats())
     }
 
     /// Start the background flush/compaction worker (idempotent). Without
@@ -739,6 +743,21 @@ impl SegmentedIndex {
     /// — deterministic, which is what the differential tests want.
     pub fn spawn_background(&self) {
         crate::segment::worker::spawn(self);
+    }
+
+    /// Stop and join the background worker (idempotent; no-op when none
+    /// is running). The index stays fully usable afterwards — maintenance
+    /// reverts to running inline on the mutating path, and
+    /// [`SegmentedIndex::spawn_background`] may restart the worker. `Drop`
+    /// delegates here, so an explicit call simply moves the join earlier
+    /// (e.g. a server draining its backend before teardown).
+    pub fn stop_background(&self) {
+        let handle = self.worker.lock().unwrap().take();
+        let Some(handle) = handle else { return };
+        *self.inner.stop.lock().unwrap() = true;
+        self.inner.wake.notify_all();
+        let _ = handle.join();
+        self.inner.worker_on.store(false, Ordering::SeqCst);
     }
 
     /// Rebuild from persisted parts (`index/io.rs`).
@@ -793,12 +812,7 @@ impl SegmentedIndex {
 
 impl Drop for SegmentedIndex {
     fn drop(&mut self) {
-        if let Some(handle) = self.worker.lock().unwrap().take() {
-            *self.inner.stop.lock().unwrap() = true;
-            self.inner.wake.notify_all();
-            let _ = handle.join();
-            self.inner.worker_on.store(false, Ordering::SeqCst);
-        }
+        self.stop_background();
     }
 }
 

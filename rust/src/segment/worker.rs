@@ -9,9 +9,11 @@
 //! [`crate::segment::index`]: the worker takes the same `writer` mutex as
 //! every other mutator and readers never notice it exists.
 //!
-//! Shutdown is owned by `SegmentedIndex::drop`: set the `stop` flag, ring
-//! `wake`, join. The worker holds only an `Arc<SegInner>`, so dropping the
-//! front object while the thread is mid-flush is safe — the inner state
+//! Shutdown lives in `SegmentedIndex::stop_background` (which `drop`
+//! delegates to): set the `stop` flag, ring `wake`, join. Both directions
+//! are idempotent — spawn after stop restarts the loop, stop without a
+//! worker is a no-op. The worker holds only an `Arc<SegInner>`, so
+//! stopping while the thread is mid-flush is safe — the inner state
 //! outlives the loop.
 
 use crate::segment::index::SegmentedIndex;

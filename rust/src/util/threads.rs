@@ -1,33 +1,42 @@
-//! Scoped data-parallel helpers built on `std::thread` (rayon is not in the
-//! vendored crate set) — the thread substrate of the plan/execute query
-//! layer ([`crate::exec`]).
+//! Data-parallel helpers over the persistent worker pool (rayon is not in
+//! the vendored crate set) — the thread substrate of the plan/execute
+//! query layer ([`crate::exec`]).
 //!
-//! # Role in the plan/execute model
+//! # Ownership: pool vs scratch vs plan
 //!
-//! Query execution splits state three ways:
+//! Since the persistent-runtime PR, nothing here spawns threads on the
+//! query path. The split is:
 //!
-//! * **Per-request** state (a [`crate::exec::QueryPlan`]): resolved
-//!   parameters, the compiled filter masks, the precomputed-LUT recipe.
-//!   Built once per `query` call, shared *read-only* by every worker.
+//! * **The worker pool** ([`crate::exec::pool::WorkerPool`]) owns the
+//!   threads. Workers are spawned once per [`crate::exec::QueryExecutor`]
+//!   (the process-global executor backs the free functions below),
+//!   optionally pinned to cores, and fed by per-worker injector queues
+//!   with work-stealing. Submitting a parallel call posts revocable helper
+//!   jobs and always participates inline, so a busy pool degrades to
+//!   serial execution instead of queueing behind itself.
 //! * **Per-thread scratch** (a [`crate::exec::ScanScratch`] checked out of
-//!   the executor's pool): LUT buffers, reservoirs, re-rank staging —
-//!   mutable, owned by exactly one worker at a time, grown but never
-//!   shrunk, so the steady-state scan path allocates nothing.
-//! * **Per-slot output**: each parallel iteration writes its result into
-//!   its own disjoint slot ([`parallel_map_init`] hands every chunk a raw
-//!   pointer range that no other chunk touches), so no locks and no
-//!   `T: Default` dummy values are needed.
+//!   the executor's [`crate::exec::ScratchPool`]): LUT buffers,
+//!   reservoirs, re-rank staging — mutable, owned by exactly one
+//!   participant at a time, grown but never shrunk. The `init` hook of
+//!   [`parallel_map_init`] still runs once per participant, so arenas stay
+//!   bounded by the thread budget.
+//! * **Per-request** state (a [`crate::exec::QueryPlan`]): read-only,
+//!   shared by every participant by borrow — the pool's claim/revoke
+//!   protocol (see [`crate::exec::pool`]) is what lets persistent threads
+//!   borrow from the submitting stack frame safely.
 //!
-//! Workers are `std::thread::scope` threads spawned per call: borrows of
-//! the sealed index and the plan flow into the workers without `'static`
-//! bounds or reference counting, and on a single-core box (or with
-//! `ARMPQ_THREADS=1`) everything degrades to a plain serial loop.
+//! The scoped per-call implementations survive as [`scoped_chunks`] /
+//! [`scoped_map_init`]: they are the differential baseline the pool is
+//! bench-compared and bit-identity-tested against, and the fallback used
+//! by executors built with `QueryExecutor::new_scoped`.
 //!
-//! Determinism contract: these helpers never change *what* is computed,
-//! only *where*. Callers must keep per-iteration work a pure function of
-//! the iteration index (plus scratch used strictly as workspace); the
-//! executor layer builds its bit-identical-across-thread-counts guarantee
-//! on top of that.
+//! Determinism contract (unchanged): these helpers never change *what* is
+//! computed, only *where*. Per-iteration work must be a pure function of
+//! the iteration index (plus scratch used strictly as workspace), writing
+//! to disjoint per-index output slots — so chunk assignment, claim order
+//! and steals cannot alter a single byte of the result.
+
+use crate::exec::pool::WorkerPool;
 
 /// Number of worker threads to use by default (`ARMPQ_THREADS` overrides).
 pub fn default_threads() -> usize {
@@ -40,9 +49,136 @@ pub fn default_threads() -> usize {
 }
 
 /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`
-/// contiguous chunks. `f` must be `Sync` (shared immutable state); use
-/// interior outputs via disjoint slices or per-chunk results.
+/// contiguous chunks, submitted to the global executor's worker pool.
+/// `f` must be `Sync` (shared immutable state); use interior outputs via
+/// disjoint slices or per-chunk results.
+///
+/// The chunk decomposition is identical to the scoped-spawn era
+/// (`chunk = ceil(n / threads)`), only the execution substrate changed —
+/// the same `(start, end)` invocations occur either way.
 pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let nchunks = n.div_ceil(chunk);
+    match crate::exec::QueryExecutor::global().worker_pool() {
+        Some(pool) => {
+            pool.run_units(nchunks, threads, || (), |c, _| {
+                let start = c * chunk;
+                let end = ((c + 1) * chunk).min(n);
+                f(start, end);
+            });
+        }
+        // the global executor is always pool-backed; this arm keeps the
+        // match total if that ever changes
+        None => scoped_chunks(n, threads, f),
+    }
+}
+
+/// Map `f` over `[0, n)` in parallel on the global worker pool, collecting
+/// results in index order.
+///
+/// Results are written through disjoint per-index `MaybeUninit` slots, so
+/// `T` needs neither `Default` nor `Clone` — nothing is pre-filled and
+/// overwritten.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map_init(n, threads, || (), |i, _: &mut ()| f(i))
+}
+
+/// [`parallel_map`] with per-participant worker state: each participant
+/// that claims at least one unit calls `init()` once and threads the state
+/// through every unit it claims — the hook the query executor uses to
+/// check one scratch arena out of the pool per worker instead of per
+/// iteration.
+///
+/// Results land in index order. If `f` panics, the panic propagates after
+/// the pool settles; initialized results of other slots are leaked (never
+/// double-dropped or read uninitialized).
+pub fn parallel_map_init<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        let mut state = init();
+        return (0..n).map(|i| f(i, &mut state)).collect();
+    }
+    match crate::exec::QueryExecutor::global().worker_pool() {
+        Some(pool) => pool_map_placed(pool, n, threads, |_| 0, init, f).0,
+        None => scoped_map_init(n, threads, init, f),
+    }
+}
+
+/// The shared pooled-map core: run `f` over `[0, n)` on `pool` with unit
+/// claiming (work-stealing granularity = one index), `node_of` placement
+/// hints, and ordered `MaybeUninit` output slots. Returns the results plus
+/// how many participants actually executed units (the executor feeds this
+/// into `QueryStats.threads_used`).
+pub(crate) fn pool_map_placed<T, S, P, I, F>(
+    pool: &WorkerPool,
+    n: usize,
+    parallelism: usize,
+    node_of: P,
+    init: I,
+    f: F,
+) -> (Vec<T>, usize)
+where
+    T: Send,
+    P: Fn(usize) -> usize,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let mut out: Vec<std::mem::MaybeUninit<T>> = Vec::with_capacity(n);
+    out.resize_with(n, std::mem::MaybeUninit::uninit);
+    let participants;
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        participants = pool.run_units_placed(n, parallelism, node_of, init, |i, state| {
+            let p = out_ptr;
+            let value = f(i, state);
+            // SAFETY: the pool claims each unit index exactly once; each
+            // slot is written exactly once by exactly one participant.
+            unsafe {
+                (*p.0.add(i)).write(value);
+            }
+        });
+    }
+    // SAFETY: run_units_placed covers [0, n) exactly once, so every slot
+    // is initialized; Vec<MaybeUninit<T>> and Vec<T> share one layout.
+    let out = unsafe {
+        let mut out = std::mem::ManuallyDrop::new(out);
+        Vec::from_raw_parts(out.as_mut_ptr() as *mut T, out.len(), out.capacity())
+    };
+    (out, participants)
+}
+
+/// The pre-pool scoped implementation of [`parallel_chunks`]: spawns
+/// `std::thread::scope` threads per call with a static chunk assignment.
+/// Kept as the differential baseline (`threads_` bit-identity tests, the
+/// scoped-vs-pool bench arm) and as the substrate for
+/// `QueryExecutor::new_scoped`.
+pub fn scoped_chunks<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
@@ -68,27 +204,11 @@ where
     });
 }
 
-/// Map `f` over `[0, n)` in parallel, collecting results in index order.
-///
-/// Results are written through per-chunk disjoint `MaybeUninit` slots, so
-/// `T` needs no `Default`/`Clone` — nothing is pre-filled and overwritten.
-pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    parallel_map_init(n, threads, || (), |i, _: &mut ()| f(i))
-}
-
-/// [`parallel_map`] with per-chunk worker state: each chunk calls `init()`
-/// once and threads the state through its iterations — the hook the query
-/// executor uses to check one scratch arena out of the pool per worker
-/// instead of per iteration.
-///
-/// Results land in index order. If `f` panics, the panic propagates after
-/// all workers join; initialized results of other slots are leaked (never
-/// double-dropped or read uninitialized).
-pub fn parallel_map_init<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+/// The pre-pool scoped implementation of [`parallel_map_init`]: per-call
+/// spawned threads, one `init()` per static chunk. Same determinism
+/// contract and output semantics as the pooled path — the `threads_`
+/// tests assert the two produce identical bytes.
+pub fn scoped_map_init<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
 where
     T: Send,
     I: Fn() -> S + Sync,
@@ -106,7 +226,7 @@ where
     out.resize_with(n, std::mem::MaybeUninit::uninit);
     {
         let out_ptr = SendPtr(out.as_mut_ptr());
-        parallel_chunks(n, threads, |start, end| {
+        scoped_chunks(n, threads, |start, end| {
             let p = out_ptr;
             let mut state = init();
             for i in start..end {
@@ -119,7 +239,7 @@ where
             }
         });
     }
-    // SAFETY: parallel_chunks covers [0, n) exactly once, so every slot is
+    // SAFETY: scoped_chunks covers [0, n) exactly once, so every slot is
     // initialized; Vec<MaybeUninit<T>> and Vec<T> share one layout.
     unsafe {
         let mut out = std::mem::ManuallyDrop::new(out);
@@ -128,7 +248,7 @@ where
 }
 
 /// Pointer wrapper asserting cross-thread sendability for disjoint writes.
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
         *self
@@ -165,7 +285,7 @@ mod tests {
         }
     }
 
-    /// The satellite fix: result types need neither `Default` nor `Clone`.
+    /// Result types need neither `Default` nor `Clone`.
     #[test]
     fn map_without_default_or_clone() {
         struct Opaque(usize);
@@ -181,7 +301,7 @@ mod tests {
 
     #[test]
     fn map_init_state_per_chunk() {
-        // each chunk gets exactly one init() call
+        // each participant gets exactly one init() call
         let inits = AtomicUsize::new(0);
         let v = parallel_map_init(
             100,
@@ -196,7 +316,7 @@ mod tests {
             },
         );
         assert!(inits.load(Ordering::SeqCst) <= 4);
-        // within a chunk the state accumulates, and indexes stay ordered
+        // within a participant the state accumulates, and indexes stay ordered
         for (i, &(idx, seen)) in v.iter().enumerate() {
             assert_eq!(idx, i);
             assert!(seen >= 1);
@@ -206,6 +326,7 @@ mod tests {
     #[test]
     fn zero_items() {
         parallel_chunks(0, 4, |_, _| panic!("must not run with n=0 range"));
+        scoped_chunks(0, 4, |_, _| panic!("must not run with n=0 range"));
         let v: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(v.is_empty());
         let v: Vec<usize> =
@@ -223,5 +344,44 @@ mod tests {
     fn more_threads_than_items() {
         let v = parallel_map(3, 16, |i| i);
         assert_eq!(v, vec![0, 1, 2]);
+    }
+
+    /// The tentpole's core differential: the pooled helpers and the scoped
+    /// baselines return identical bytes at every thread count.
+    #[test]
+    fn threads_pool_matches_scoped_bit_identical() {
+        let work = |i: usize| (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (i as u64) << 7;
+        for &t in &[1usize, 2, 3, 4, 8] {
+            let pooled = parallel_map(257, t, work);
+            let scoped = scoped_map_init(257, t, || (), |i, _: &mut ()| work(i));
+            assert_eq!(pooled, scoped, "divergence at threads={t}");
+        }
+    }
+
+    /// Same check for the chunked form: identical (start, end) coverage.
+    #[test]
+    fn threads_pool_chunks_match_scoped_coverage() {
+        for &t in &[2usize, 4, 7] {
+            let n = 101;
+            let pooled: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            parallel_chunks(n, t, |s, e| {
+                for i in s..e {
+                    pooled[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            let scoped: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            scoped_chunks(n, t, |s, e| {
+                for i in s..e {
+                    scoped[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            for i in 0..n {
+                assert_eq!(
+                    pooled[i].load(Ordering::SeqCst),
+                    scoped[i].load(Ordering::SeqCst)
+                );
+                assert_eq!(pooled[i].load(Ordering::SeqCst), 1);
+            }
+        }
     }
 }

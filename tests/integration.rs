@@ -1180,6 +1180,54 @@ fn segment_threads_differential() {
     }
 }
 
+/// Lifecycle: the background worker is stoppable and restartable through
+/// `stop_background` (idempotent both ways), keeps maintaining while
+/// running, and the index stays fully usable — inline maintenance —
+/// after an explicit stop. `Drop` reuses the same path, so the final
+/// implicit drop of a stopped index is a no-op join.
+#[test]
+fn segment_background_worker_stop_and_restart() {
+    use armpq::segment::{SegmentedIndex, SegmentedParams};
+    let ds = SyntheticDataset::gaussian(500, 4, 32, 1407);
+    let dim = ds.dim;
+    let seg = {
+        let mut s = SegmentedIndex::new(
+            dim,
+            8,
+            armpq::pq::CodeWidth::W4,
+            SegmentedParams { flush_threshold: 64, max_segments: 4 },
+        )
+        .unwrap();
+        s.train(&ds.train).unwrap();
+        s
+    };
+    // stop without a worker: no-op
+    seg.stop_background();
+    seg.spawn_background();
+    seg.spawn_background(); // idempotent spawn
+    seg.insert(&ds.base[..300 * dim], None).unwrap();
+    // the worker must flush the over-threshold memtable on its own
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while seg.segment_stats().unwrap().flushes == 0 {
+        assert!(std::time::Instant::now() < deadline, "background worker never flushed");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    seg.stop_background();
+    seg.stop_background(); // idempotent stop
+    // still fully usable: maintenance reverts to inline on the write path
+    seg.insert(&ds.base[300 * dim..500 * dim], None).unwrap();
+    seg.flush().unwrap();
+    seg.compact().unwrap();
+    assert_eq!(seg.ntotal(), 500);
+    let r = seg.query(&QueryRequest::top_k(&ds.queries[..dim], 5)).unwrap();
+    assert_eq!(r.hits[0].len(), 5);
+    // and restartable: a second worker generation picks up new inserts
+    seg.spawn_background();
+    seg.delete(&[1, 2]).unwrap();
+    assert_eq!(seg.ntotal(), 498);
+    // drop with the worker running exercises the Drop → stop_background path
+}
+
 /// Smoke: concurrent inserts/deletes (with the background worker
 /// flushing and compacting underneath) never produce a malformed or
 /// failed query — readers ride immutable snapshots.
@@ -1915,6 +1963,142 @@ fn obs_slowlog_bounded() {
     server.stop();
 }
 
+// ------------------------------------------------------------------- exec
+//
+// The exec_ tests below are the acceptance suite of the persistent worker
+// pool: pool-backed executors must be bit-identical to the scoped-thread
+// baseline (`QueryExecutor::new_scoped`) at every thread count, across
+// kinds, filters, batch and intra-query fan-out, and through the sharded
+// router with NUMA placement. CI runs them as named steps under
+// ARMPQ_THREADS=1 and ARMPQ_THREADS=4 on both architectures.
+
+/// Acceptance: the pool-backed executor returns exactly what the
+/// per-call scoped-thread executor returns, for every thread count ×
+/// kind × filter × batch size, on an IVF index (batch fan-out at nq > 1,
+/// multi-list fan-out at nq = 1) — work-stealing moves where a unit
+/// runs, never what it computes.
+#[test]
+fn exec_pool_matches_scoped_full_stack() {
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::gaussian(800, 6, 32, 1600);
+    let mut idx = index_factory(ds.dim, "IVF16,PQ8x4fs,nprobe=8").unwrap();
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let probe = idx.query(&QueryRequest::top_k(&ds.queries[..ds.dim], 20)).unwrap();
+    let radius = probe.hits[0].last().map(|h| h.distance * 1.01).unwrap_or(1.0);
+    let serial_ref = idx
+        .query_exec(&QueryRequest::top_k(&ds.queries, 9), &QueryExecutor::new_scoped(1))
+        .unwrap();
+    for threads in [1usize, 2, 4] {
+        let pooled = QueryExecutor::new(threads);
+        let scoped = QueryExecutor::new_scoped(threads);
+        for kind in [QueryKind::TopK { k: 9 }, QueryKind::Range { radius }] {
+            for filter in [None, Some(Filter::id_range(100, 600))] {
+                for nq in [6usize, 1] {
+                    let req = QueryRequest {
+                        queries: &ds.queries[..nq * ds.dim],
+                        kind,
+                        filter: filter.clone(),
+                        params: None,
+                        trace: false,
+                    };
+                    let rp = idx.query_exec(&req, &pooled).unwrap();
+                    let rs = idx.query_exec(&req, &scoped).unwrap();
+                    assert_eq!(
+                        rp.hits, rs.hits,
+                        "threads={threads} {kind:?} {filter:?} nq={nq}: pool ≠ scoped"
+                    );
+                    let sp: Vec<_> = rp.stats.iter().map(core_stats).collect();
+                    let ss: Vec<_> = rs.stats.iter().map(core_stats).collect();
+                    assert_eq!(sp, ss, "threads={threads} {kind:?} nq={nq}: stats diverge");
+                }
+            }
+        }
+        // and both agree with the 1-thread scoped reference
+        let rp = idx.query_exec(&QueryRequest::top_k(&ds.queries, 9), &pooled).unwrap();
+        assert_eq!(rp.hits, serial_ref.hits, "threads={threads}: pool ≠ serial reference");
+    }
+}
+
+/// The sharded router on the pool: shards are interleaved across NUMA
+/// nodes at construction, fan out through `run_shards` with node-tagged
+/// units, and a 4-thread pooled router answers bit-identically to a
+/// 1-thread scoped one. The process-global steal/task counters only ever
+/// grow.
+#[test]
+fn exec_router_numa_placement_and_pool_counters() {
+    use armpq::coordinator::{SearchBackend, ShardedBackend};
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::sift_like(1_800, 6, 1601);
+    let dim = ds.dim;
+    let per = 600usize;
+    let build_shards = || -> Vec<Arc<dyn Index>> {
+        (0..3)
+            .map(|s| {
+                let mut idx = IvfPq4::new(dim, IvfParams::new(4), PqParams::new_4bit(8));
+                idx.train(&ds.train).unwrap();
+                let slice = &ds.base[s * per * dim..(s + 1) * per * dim];
+                let ids: Vec<i64> = (s * per..(s + 1) * per).map(|i| i as i64).collect();
+                idx.add_with_ids(slice, &ids).unwrap();
+                idx.nprobe = 4;
+                idx.seal().unwrap();
+                Arc::new(armpq::index::IndexIvfPq4::from_inner(idx)) as Arc<dyn Index>
+            })
+            .collect()
+    };
+    let tasks_before = armpq::exec::pool::counters()
+        .tasks_executed
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let pooled =
+        ShardedBackend::from_indexes_with_executor(build_shards(), QueryExecutor::new(4)).unwrap();
+    let scoped = ShardedBackend::from_indexes_with_executor(build_shards(), QueryExecutor::new_scoped(1))
+        .unwrap();
+    // placement: one node entry per shard, round-robin over real nodes
+    let nodes = pooled.shard_nodes();
+    let nnodes = armpq::exec::pool::topology().node_count().max(1);
+    assert_eq!(nodes.len(), 3);
+    for (i, &nd) in nodes.iter().enumerate() {
+        assert_eq!(nd, i % nnodes, "shard {i} not interleaved: {nodes:?}");
+    }
+    let req = QueryRequest::top_k(&ds.queries, 5).with_filter(Filter::id_range(0, 1_500));
+    let rp = pooled.query_batch(&req).unwrap();
+    let rs = scoped.query_batch(&req).unwrap();
+    assert_eq!(rp.hits, rs.hits, "pooled router ≠ scoped router");
+    let tasks_after = armpq::exec::pool::counters()
+        .tasks_executed
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(tasks_after >= tasks_before, "pool task counter went backwards");
+}
+
+/// `QueryStats.threads_used` reports measured pool participation — never
+/// more than the executor budget or the batch width — and the pool
+/// snapshot surfaces worker count and per-worker busy fractions.
+#[test]
+fn exec_stats_report_measured_fanout() {
+    use armpq::exec::QueryExecutor;
+    let ds = SyntheticDataset::gaussian(600, 8, 32, 1602);
+    let mut idx = index_factory(ds.dim, "PQ8x4fs").unwrap();
+    idx.train(&ds.train).unwrap();
+    idx.add(&ds.base).unwrap();
+    idx.seal().unwrap();
+    let exec = QueryExecutor::new(4);
+    let r = idx.query_exec(&QueryRequest::top_k(&ds.queries, 5), &exec).unwrap();
+    for s in &r.stats {
+        assert!(s.threads_used >= 1 && s.threads_used <= 4, "threads_used {}", s.threads_used);
+    }
+    // single-query batch: the fan-out cannot exceed the batch width
+    let r1 = idx
+        .query_exec(&QueryRequest::top_k(&ds.queries[..ds.dim], 5), &exec)
+        .unwrap();
+    assert_eq!(r1.stats[0].threads_used, 1, "nq=1 flat query must report one participant");
+    let pool = exec.worker_pool().expect("pool-backed executor");
+    let snap = pool.snapshot();
+    assert_eq!(snap.workers, 3);
+    assert_eq!(snap.busy_permille.len(), 3);
+    assert!(snap.busy_permille.iter().all(|&p| p <= 1000));
+}
+
 // ---------------------------------------------------------------------------
 // Experiment lab: spec expansion, runner measurements, trajectory record,
 // and the regression gate (lab_*).
@@ -2026,11 +2210,17 @@ fn lab_record_and_gate_end_to_end() {
     assert_eq!(baseline.trials.len(), trials.len());
 
     // clean re-run through the real measurement path → gate passes. The
-    // loose QPS margin keeps shared-runner timing noise out of the test;
-    // recall is deterministic and still gated at the default epsilon.
+    // loose QPS/p99/phase margins keep shared-runner timing noise out of
+    // the test; recall is deterministic and still gated at the default
+    // epsilon.
     let fresh: Vec<Json> =
         runner.run_all(&trials, |_| {}).iter().map(|o| o.to_json()).collect();
-    let loose = GateConfig { max_qps_drop: 0.75, ..GateConfig::default() };
+    let loose = GateConfig {
+        max_qps_drop: 0.75,
+        max_p99_increase: 10.0,
+        max_phase_share_drift: 0.9,
+        ..GateConfig::default()
+    };
     let report = lab::enforce(&baseline.trials, &fresh, &loose).unwrap();
     assert!(report.passed(), "{}", report.render());
 
